@@ -1,0 +1,94 @@
+//! Fig 6 — simulation elapsed time under the three I/O modes × write
+//! intervals, plus the workflow end-to-end time with ElasticBroker.
+//!
+//! Paper setup: simpleFoam WindAroundBuildings, 16 processes, 2000
+//! steps, intervals {5, 10, 20}, Lustre vs ElasticBroker vs no-write.
+//! Ours: the LBM WindAroundBuildings substitute on one host (see
+//! DESIGN.md §2); file mode writes collated per-step files with fsync.
+//!
+//! Expected shape: file-based degrades sharply as the interval shrinks;
+//! ElasticBroker stays near simulation-only; end-to-end ≈ broker run +
+//! ~one trigger interval.
+//!
+//! `cargo bench --bench fig6_endtoend [-- --steps 400 --ranks 16]`
+
+use elasticbroker::cli::Args;
+use elasticbroker::config::{IoMode, WorkflowConfig};
+use elasticbroker::runtime::ArtifactSet;
+use elasticbroker::workflow::run_cfd_workflow;
+
+fn main() -> anyhow::Result<()> {
+    elasticbroker::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::parse(&argv)?;
+    // Scaled-down default: 400 steps (the paper's 2000 at ~1/5 cost).
+    let steps = args.get_parsed::<u64>("steps")?.unwrap_or(400);
+    let ranks = args.get_parsed::<usize>("ranks")?.unwrap_or(16);
+    let trigger_ms = args.get_parsed::<u64>("trigger-ms")?.unwrap_or(500);
+    // Elapsed-time cells are min-of-N to shed external load noise on a
+    // shared single-core host (min is the right statistic for wall time
+    // under interference).
+    let repeats = args.get_parsed::<usize>("repeats")?.unwrap_or(2).max(1);
+    let artifacts = ArtifactSet::try_load_default();
+    let backend = if artifacts.is_some() && !args.has_flag("no-pjrt") {
+        "pjrt"
+    } else {
+        "rust"
+    };
+
+    println!("# Fig 6: simulation elapsed time (s) — {ranks} ranks × {steps} steps [{backend}]");
+    println!(
+        "{:>9} {:>12} {:>14} {:>16} {:>22}",
+        "interval", "file-based", "elasticbroker", "simulation-only", "workflow end-to-end"
+    );
+
+    for interval in [5u64, 10, 20] {
+        let mut row = Vec::new();
+        let mut e2e = 0.0;
+        for mode in [IoMode::File, IoMode::Broker, IoMode::None] {
+            let out_dir = std::env::temp_dir()
+                .join(format!("eb-fig6-{}-{interval}", std::process::id()))
+                .to_string_lossy()
+                .into_owned();
+            let cfg = WorkflowConfig {
+                ranks,
+                height: 256,
+                width: 128,
+                steps,
+                write_interval: interval,
+                io_mode: mode,
+                out_dir: out_dir.clone(),
+                use_pjrt: backend == "pjrt",
+                group_size: 16,
+                executors: ranks,
+                trigger_ms,
+                dmd_window: 8,
+                dmd_rank: 6,
+                dmd_per_batch: true, // the paper's per-trigger cadence
+                ..Default::default()
+            };
+            let mut best = f64::INFINITY;
+            for _ in 0..repeats {
+                let rep = run_cfd_workflow(&cfg, artifacts.clone())?;
+                let s = rep.sim_elapsed.as_secs_f64();
+                if s < best {
+                    best = s;
+                    if mode == IoMode::Broker {
+                        e2e = rep.workflow_elapsed.as_secs_f64();
+                    }
+                }
+            }
+            row.push(best);
+            std::fs::remove_dir_all(&out_dir).ok();
+        }
+        println!(
+            "{:>9} {:>12.2} {:>14.2} {:>16.2} {:>22.2}",
+            interval, row[0], row[1], row[2], e2e
+        );
+    }
+    println!(
+        "\n# Shape check vs paper: file >> broker ≈ none at interval 5; gap closes by 20;"
+    );
+    println!("# end-to-end ≈ broker + O(trigger interval = {trigger_ms} ms).");
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Microbenchmark: the broker hot path.
+//!
+//! * `broker_write` call latency (the simulation-visible cost — the
+//!   quantity Fig 6 says must stay tiny),
+//! * sustained ship throughput per writer and aggregated across ranks,
+//! * queue policy comparison under a slow link.
+//!
+//! `cargo bench --bench micro_broker`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use elasticbroker::broker::{Broker, BrokerConfig, QueuePolicy};
+use elasticbroker::endpoint::{EndpointServer, StoreConfig};
+use elasticbroker::metrics::WorkflowMetrics;
+use elasticbroker::transport::ConnConfig;
+use elasticbroker::util;
+
+fn main() -> anyhow::Result<()> {
+    elasticbroker::util::logger::init();
+
+    // --- write-call latency across payload sizes -------------------------
+    println!("# broker_write call latency (enqueue path) + ship throughput");
+    println!(
+        "{:>12} {:>10} {:>10} {:>10} {:>14}",
+        "payload", "p50 µs", "p95 µs", "p99 µs", "ship MB/s"
+    );
+    for dim in [1024usize, 4096, 16384, 65536] {
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default())?;
+        let metrics = WorkflowMetrics::new();
+        let broker = Broker::new(
+            BrokerConfig {
+                group_size: 1,
+                queue_cap: 64,
+                ..BrokerConfig::new(vec![srv.addr()])
+            },
+            1,
+            metrics.clone(),
+        )?;
+        let ctx = broker.init("u", 0)?;
+        let data = vec![0.5f32; dim];
+        let n = 400u64;
+        let t0 = Instant::now();
+        for step in 0..n {
+            ctx.write(step, &[dim as u32], &data)?;
+        }
+        ctx.finalize()?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        let shipped = metrics.shipped.bytes() as f64;
+        println!(
+            "{:>12} {:>10} {:>10} {:>10} {:>14.1}",
+            util::fmt_bytes((dim * 4) as u64),
+            metrics.write_call_us.quantile(0.50),
+            metrics.write_call_us.quantile(0.95),
+            metrics.write_call_us.quantile(0.99),
+            shipped / elapsed / 1e6,
+        );
+    }
+
+    // --- aggregated multi-rank throughput ---------------------------------
+    println!("\n# aggregated ship throughput, 16 ranks → 1 endpoint (the paper's group shape)");
+    let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default())?;
+    let metrics = WorkflowMetrics::new();
+    let broker = Arc::new(Broker::new(
+        BrokerConfig {
+            group_size: 16,
+            queue_cap: 64,
+            ..BrokerConfig::new(vec![srv.addr()])
+        },
+        16,
+        metrics.clone(),
+    )?);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..16u32)
+        .map(|r| {
+            let broker = broker.clone();
+            std::thread::spawn(move || -> anyhow::Result<()> {
+                let ctx = broker.init("u", r)?;
+                let data = vec![0.5f32; 4096];
+                for step in 0..200 {
+                    ctx.write(step, &[4096], &data)?;
+                }
+                ctx.finalize()
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "  16 ranks × 200 × 16 KiB: {} in {:.2}s → {:.1} MB/s aggregate",
+        util::fmt_bytes(metrics.shipped.bytes()),
+        secs,
+        metrics.shipped.bytes() as f64 / secs / 1e6
+    );
+
+    // --- queue policies under a throttled (WAN-like) link ----------------
+    println!("\n# queue policy under a 2 MB/s throttled link, 64 KiB records, queue_cap 8");
+    for policy in [QueuePolicy::Block, QueuePolicy::DropOldest] {
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default())?;
+        let metrics = WorkflowMetrics::new();
+        let broker = Broker::new(
+            BrokerConfig {
+                group_size: 1,
+                queue_cap: 8,
+                policy,
+                conn: ConnConfig {
+                    throttle_bytes_per_sec: Some(2e6),
+                    ..Default::default()
+                },
+                ..BrokerConfig::new(vec![srv.addr()])
+            },
+            1,
+            metrics.clone(),
+        )?;
+        let ctx = broker.init("u", 0)?;
+        let data = vec![0.5f32; 16384];
+        let n = 64u64;
+        let t0 = Instant::now();
+        for step in 0..n {
+            ctx.write(step, &[16384], &data)?;
+        }
+        let write_done = t0.elapsed().as_secs_f64();
+        ctx.finalize()?;
+        let total = t0.elapsed().as_secs_f64();
+        println!(
+            "  {:?}: {} writes in {:.2}s (finalize at {:.2}s), dropped {}, write p99 {} µs",
+            policy,
+            n,
+            write_done,
+            total,
+            metrics.dropped.get(),
+            metrics.write_call_us.quantile(0.99)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Microbenchmark: the endpoint (stream store + RESP server).
+//!
+//! * in-process store XADD/XREAD rates (no network),
+//! * over-TCP XADD throughput, single and multi connection,
+//! * XREAD polling cost at different backlog sizes.
+//!
+//! `cargo bench --bench micro_endpoint`
+
+use std::time::Instant;
+
+use elasticbroker::endpoint::{EndpointServer, EntryId, Store, StoreConfig};
+use elasticbroker::transport::{ConnConfig, RespConn};
+use elasticbroker::util;
+
+fn main() -> anyhow::Result<()> {
+    elasticbroker::util::logger::init();
+
+    // --- raw store ---------------------------------------------------------
+    println!("# in-process store (no network)");
+    for payload in [256usize, 4096, 65536] {
+        let store = Store::new(StoreConfig {
+            stream_maxlen: 0,
+            max_memory: 0,
+        });
+        let value = vec![0u8; payload];
+        let n = 50_000usize.min(200_000_000 / payload.max(1));
+        let t0 = Instant::now();
+        for _ in 0..n {
+            store.xadd("s", None, vec![(b"r".to_vec(), value.clone())])?;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let mut cursor = EntryId::ZERO;
+        let mut read = 0usize;
+        while read < n {
+            let entries = store.read_after("s", cursor, 4096);
+            if entries.is_empty() {
+                break;
+            }
+            cursor = entries.last().unwrap().id;
+            read += entries.len();
+        }
+        let rsecs = t1.elapsed().as_secs_f64();
+        println!(
+            "  {:>9} payload: XADD {:>9.0}/s ({:>8.1} MB/s)   XREAD {:>9.0}/s",
+            util::fmt_bytes(payload as u64),
+            n as f64 / secs,
+            (n * payload) as f64 / secs / 1e6,
+            read as f64 / rsecs,
+        );
+    }
+
+    // --- over TCP ----------------------------------------------------------
+    println!("\n# over TCP (loopback RESP)");
+    for conns in [1usize, 4, 16] {
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default())?;
+        let addr = srv.addr();
+        let payload = vec![0u8; 16384];
+        let per_conn = 2000usize / conns;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..conns)
+            .map(|c| {
+                let payload = payload.clone();
+                std::thread::spawn(move || -> anyhow::Result<()> {
+                    let mut conn = RespConn::connect(addr, ConnConfig::default())?;
+                    let key = format!("s/{c}");
+                    for _ in 0..per_conn {
+                        let reply =
+                            conn.request(&[b"XADD", key.as_bytes(), b"*", b"r", &payload])?;
+                        anyhow::ensure!(!reply.is_error(), "XADD failed");
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap()?;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let total_bytes = (conns * per_conn * payload.len()) as f64;
+        println!(
+            "  {conns:>2} conn × {per_conn} × 16 KiB: {:>8.0} XADD/s, {:>8.1} MB/s",
+            (conns * per_conn) as f64 / secs,
+            total_bytes / secs / 1e6,
+        );
+    }
+    Ok(())
+}

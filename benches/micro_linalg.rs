@@ -1,0 +1,106 @@
+//! Microbenchmark: the analysis math on the request path.
+//!
+//! * Francis-QR eigenvalues for the Ã sizes DMD produces (r ≤ 16),
+//! * the full Rust-fallback DMD reduction at realistic snapshot dims,
+//! * the PJRT dmd artifact at the same dims (when built) — the
+//!   artifact-vs-fallback comparison that motivates running the
+//!   reduction in compiled HLO.
+//!
+//! `cargo bench --bench micro_linalg`
+
+use std::time::Instant;
+
+use elasticbroker::linalg::{dmd, eig, Mat};
+use elasticbroker::runtime::ArtifactSet;
+use elasticbroker::util::rng::Rng;
+
+fn time<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    elasticbroker::util::logger::init();
+    let mut rng = Rng::new(7);
+
+    println!("# Francis QR eigenvalues (the per-window Ã solve)");
+    for n in [4usize, 6, 8, 12, 16] {
+        let mut a = Mat::zeros(n, n);
+        for v in a.data.iter_mut() {
+            *v = rng.next_normal();
+        }
+        let per = time(2000, || {
+            let _ = eig::eigenvalues(&a).unwrap();
+        });
+        println!("  n={n:>2}: {:>8.2} µs/solve", per * 1e6);
+    }
+
+    println!("\n# DMD reduction, window m=8 rank=6 (per analysis window)");
+    let artifacts = ArtifactSet::try_load_default();
+    for d in [512usize, 1024, 4096, 65536] {
+        let m1 = 9;
+        let mut xf = vec![0.0f32; d * m1];
+        rng.fill_uniform_f32(&mut xf, -1.0, 1.0);
+        // rust fallback
+        let xd: Vec<f64> = xf.iter().map(|&v| v as f64).collect();
+        let xm = Mat::from_slice(d, m1, &xd)?;
+        let iters = if d > 10_000 { 20 } else { 200 };
+        let rust_per = time(iters, || {
+            let _ = dmd::dmd_reduce(&xm, 6).unwrap();
+        });
+        // pjrt artifact
+        let pjrt_per = match &artifacts {
+            Some(arts) => {
+                let key = format!("d{d}_m{m1}_r6");
+                match arts.executable("dmd", &key) {
+                    Ok(exe) => {
+                        let per = time(iters, || {
+                            let _ = exe.run_f32(&[&xf]).unwrap();
+                        });
+                        format!("{:>9.1} µs", per * 1e6)
+                    }
+                    Err(_) => "   (no artifact)".into(),
+                }
+            }
+            None => "   (no artifacts)".into(),
+        };
+        println!(
+            "  d={d:>6}: rust {:>9.1} µs   pjrt {pjrt_per}",
+            rust_per * 1e6
+        );
+    }
+
+    println!("\n# LBM step, rust fallback vs PJRT artifact (per rank-step)");
+    for (h, w) in [(16usize, 128usize), (256, 128)] {
+        let hp = h + 2;
+        let mask = vec![0.0f32; hp * w];
+        let params = elasticbroker::sim::lbm::LbmParams::default();
+        let mut f = elasticbroker::sim::lbm::init(&mask, hp, w, params);
+        let mut scratch = Vec::new();
+        let iters = if h > 100 { 50 } else { 400 };
+        let rust_per = time(iters, || {
+            let _ = elasticbroker::sim::lbm::step(&mut f, &mask, hp, w, params, true, &mut scratch);
+        });
+        let pjrt = match &artifacts {
+            Some(arts) => match arts.executable("lbm_step", &format!("h{h}_w{w}")) {
+                Ok(exe) => {
+                    let f0 = elasticbroker::sim::lbm::init(&mask, hp, w, params);
+                    let per = time(iters, || {
+                        let _ = exe.run_f32(&[&f0, &mask]).unwrap();
+                    });
+                    format!("{:>9.1} µs", per * 1e6)
+                }
+                Err(_) => "   (no artifact)".into(),
+            },
+            None => "   (no artifacts)".into(),
+        };
+        println!(
+            "  {h:>3}x{w}: rust {:>9.1} µs   pjrt {pjrt}",
+            rust_per * 1e6
+        );
+    }
+    Ok(())
+}

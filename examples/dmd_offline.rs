@@ -1,0 +1,85 @@
+//! Offline DMD study: run the whole-domain simulation single-rank,
+//! collect velocity snapshots in memory, and sweep the DMD window/rank
+//! parameters over the same data — the kind of post-hoc exploration the
+//! paper's online pipeline replaces.  Also demonstrates using the
+//! public `analysis`/`linalg` APIs directly, without endpoints or
+//! streaming.
+//!
+//! ```sh
+//! cargo run --release --example dmd_offline -- --steps 600
+//! ```
+
+use elasticbroker::cli::Args;
+use elasticbroker::config::IoMode;
+use elasticbroker::linalg::{dmd, Mat};
+use elasticbroker::runtime::ArtifactSet;
+use elasticbroker::sim::{lbm::LbmParams, SimConfig, SimRunner};
+
+fn main() -> anyhow::Result<()> {
+    elasticbroker::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let steps = args.get_parsed::<u64>("steps")?.unwrap_or(600);
+    let stride = args.get_parsed::<u64>("stride")?.unwrap_or(10);
+    let (h, w) = (64usize, 128usize);
+
+    // Collect snapshots by running the sim in slices (None mode) and
+    // sampling the final field of each slice — a deliberately simple
+    // offline harness using only public API.
+    println!("collecting snapshots: {h}x{w}, {steps} steps, every {stride}");
+    let artifacts = ArtifactSet::try_load_default();
+    let mut snapshots: Vec<Vec<f32>> = Vec::new();
+    let slices = steps / stride;
+    for k in 1..=slices {
+        let cfg = SimConfig {
+            ranks: 1,
+            height: h,
+            width: w,
+            steps: k * stride,
+            write_interval: u64::MAX, // never write
+            io_mode: IoMode::None,
+            out_dir: String::new(),
+            field: "u".into(),
+            params: LbmParams::default(),
+            use_pjrt: false, // deterministic rust path, no h64 artifact needed
+            pfs_commit_ms: 0,
+        };
+        let rep = SimRunner::run(&cfg, None, artifacts.clone())?;
+        snapshots.push(rep.final_u[0].clone());
+        if k % 10 == 0 {
+            println!("  {k}/{slices} slices");
+        }
+    }
+
+    // Sweep DMD parameters over the collected snapshot matrix.
+    let d = snapshots[0].len();
+    println!("\nDMD sweep over {} snapshots of dim {d}:", snapshots.len());
+    println!(
+        "{:>7} {:>5} {:>12} {:>14} {:>12}",
+        "window", "rank", "lead |λ|", "stability", "σ₁/σ_r"
+    );
+    for window in [4usize, 8, 16] {
+        for rank in [2usize, 4, 6] {
+            if rank > window || window + 1 > snapshots.len() {
+                continue;
+            }
+            let m1 = window + 1;
+            let tail = &snapshots[snapshots.len() - m1..];
+            let mut x = Mat::zeros(d, m1);
+            for (j, snap) in tail.iter().enumerate() {
+                for i in 0..d {
+                    x[(i, j)] = snap[i] as f64;
+                }
+            }
+            let (eigs, sigma, metric) = dmd::analyze_window(&x, rank)?;
+            let lead = eigs.iter().map(|e| e.abs()).fold(0.0, f64::max);
+            println!(
+                "{window:>7} {rank:>5} {lead:>12.6} {metric:>14.3e} {:>12.1}",
+                sigma[0] / sigma[rank - 1].max(1e-12)
+            );
+        }
+    }
+    println!("\nlead |λ| ≈ 1 confirms the wake settles into a statistically steady state;");
+    println!("growing σ₁/σ_r means extra ranks only capture noise (pick r before the knee).");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! The paper's §4.3 scaling experiment, interactively sized: synthetic
+//! generator ranks stream through ElasticBroker to the DMD service at
+//! the 16 : 1 : 16 ranks : endpoints : executors ratio, reporting the
+//! Fig 7 metrics (analysis latency + aggregated throughput).
+//!
+//! ```sh
+//! cargo run --release --example synthetic_scaling -- --scales 16,32,64 --records 100
+//! ```
+
+use elasticbroker::cli::Args;
+use elasticbroker::runtime::ArtifactSet;
+use elasticbroker::util;
+use elasticbroker::workflow::run_synth_workflow;
+
+fn main() -> anyhow::Result<()> {
+    elasticbroker::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let scales: Vec<usize> = args
+        .get("scales")
+        .unwrap_or("16,32,64")
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<Result<_, _>>()?;
+    let records = args.get_parsed::<u64>("records")?.unwrap_or(100);
+    let dim = args.get_parsed::<usize>("dim")?.unwrap_or(512);
+    let trigger_ms = args.get_parsed::<u64>("trigger-ms")?.unwrap_or(250);
+    let rate = args.get_parsed::<f64>("rate")?.unwrap_or(50.0);
+    let artifacts = ArtifactSet::try_load_default();
+
+    println!("synthetic scaling: dim={dim}, {records} records/rank, {rate} Hz/rank, trigger {trigger_ms} ms");
+    println!(
+        "{:>6} {:>5} {:>5} {:>9} {:>9} {:>12} {:>11} {:>11} {:>11}",
+        "ranks", "eps", "exec", "records", "analyses", "agg MB/s", "p50 ms", "p95 ms", "max ms"
+    );
+    for ranks in scales {
+        let rep = run_synth_workflow(ranks, records, dim, trigger_ms, rate, artifacts.clone())?;
+        println!(
+            "{:>6} {:>5} {:>5} {:>9} {:>9} {:>12.2} {:>11.1} {:>11.1} {:>11.1}",
+            rep.ranks,
+            rep.endpoints,
+            rep.executors,
+            rep.records,
+            rep.analyses,
+            rep.gen_bytes_per_sec / 1e6,
+            rep.metrics.e2e_latency_us.quantile(0.50) as f64 / 1e3,
+            rep.metrics.e2e_latency_us.quantile(0.95) as f64 / 1e3,
+            rep.metrics.e2e_latency_us.max() as f64 / 1e3,
+        );
+    }
+    println!(
+        "\nexpected shape (paper Fig 7): latency roughly flat in ranks; throughput ~linear."
+    );
+    let _ = util::fmt_bytes(0);
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path for ElasticBroker (never imported at runtime).
+
+``python -m compile.aot`` lowers the L2 JAX models (which call the L1
+Pallas kernels) to HLO text artifacts the Rust coordinator loads via
+PJRT.  See DESIGN.md §1.
+"""

@@ -1,0 +1,137 @@
+"""AOT lowering: JAX/Pallas models → HLO text artifacts + manifest.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the only place
+Python executes in this project; the Rust coordinator is self-contained
+afterwards).
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+The manifest (``artifacts/manifest.txt``) is a plain-text registry the
+Rust ``runtime::ArtifactSet`` parses: one artifact per line,
+whitespace-separated ``key=value`` pairs, shapes as
+``name:dtype:AxBxC`` comma-lists.
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Variant registry: every shape the experiments need.
+# (h_loc, w): per-rank interior rows × width.  The paper's default
+# WindAroundBuildings run uses 16 ranks on a 256×128 lattice → h_loc=16.
+LBM_VARIANTS = [
+    # (h_loc, w)      used by
+    (16, 128),        # Fig 5/6: 16-rank default experiment
+    (32, 128),        # 8-rank ablation
+    (8, 128),         # 32-rank ablation
+    (256, 128),       # single-rank whole-domain (examples/dmd_offline)
+    (8, 64),          # small: quickstart + integration tests
+]
+
+# (d, m1, rank): snapshot dim × window+1 × truncation rank.
+DMD_VARIANTS = [
+    (16 * 128 * 2, 9, 6),    # per-rank region of the 16-rank run
+    (32 * 128 * 2, 9, 6),    # 8-rank ablation regions
+    (8 * 128 * 2, 9, 6),     # 32-rank ablation regions
+    (256 * 128 * 2, 9, 6),   # whole-domain offline DMD
+    (8 * 64 * 2, 9, 6),      # small regions (quickstart / tests)
+    (512, 9, 6),             # synthetic generator payloads (Fig 7)
+    (512, 17, 10),           # wider window ablation
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_str(args):
+    return ",".join(
+        f"{n}:f32:{'x'.join(str(d) for d in a.shape)}" for n, a in args
+    )
+
+
+def _lower(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    return len(text), digest
+
+
+def build(out_dir):
+    lines = []
+
+    for h, w in LBM_VARIANTS:
+        hp = h + 2  # one halo row each side
+        bh = model.pick_block_h(hp)
+
+        key = f"h{h}_w{w}"
+        fn, args = model.make_lbm_step_fn(hp, w, block_h=bh)
+        path = f"lbm_step_{key}.hlo.txt"
+        n, dig = _lower(fn, args, os.path.join(out_dir, path))
+        print(f"  lbm_step {key}: {n} chars sha={dig}")
+        lines.append(
+            f"artifact name=lbm_step key={key} path={path} "
+            f"inputs={_shape_str([('f', args[0]), ('mask', args[1])])} "
+            f"outputs=f:f32:9x{hp}x{w},u:f32:2x{h}x{w} "
+            f"meta=tau:{model.DEFAULT_TAU},u0:{model.DEFAULT_U0},block_h:{bh}"
+        )
+
+        fn, args = model.make_lbm_init_fn(hp, w)
+        path = f"lbm_init_{key}.hlo.txt"
+        n, dig = _lower(fn, args, os.path.join(out_dir, path))
+        print(f"  lbm_init {key}: {n} chars sha={dig}")
+        lines.append(
+            f"artifact name=lbm_init key={key} path={path} "
+            f"inputs={_shape_str([('mask', args[0])])} "
+            f"outputs=f:f32:9x{hp}x{w} "
+            f"meta=u0:{model.DEFAULT_U0}"
+        )
+
+    for d, m1, r in DMD_VARIANTS:
+        key = f"d{d}_m{m1}_r{r}"
+        fn, args = model.make_dmd_fn(d, m1, r)
+        path = f"dmd_{key}.hlo.txt"
+        n, dig = _lower(fn, args, os.path.join(out_dir, path))
+        print(f"  dmd {key}: {n} chars sha={dig}")
+        lines.append(
+            f"artifact name=dmd key={key} path={path} "
+            f"inputs={_shape_str([('x', args[0])])} "
+            f"outputs=atilde:f32:{r}x{r},sigma:f32:{r} "
+            f"meta=rank:{r},window:{m1 - 1},sweeps:12"
+        )
+
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("# ElasticBroker AOT artifact manifest (generated)\n")
+        f.write(f"# jax={jax.__version__}\n")
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {manifest} ({len(lines)} artifacts)")
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for ElasticBroker.
+
+Two hot-spots are implemented as Pallas kernels (interpret=True, so they
+lower to plain HLO runnable on the CPU PJRT client — see DESIGN.md
+§Hardware-Adaptation for the TPU mapping):
+
+* :mod:`lbm`  — D2Q9 BGK collision (the CFD simulation substrate's
+  per-cell FLOP hot-spot),
+* :mod:`gram` — tiled ``X^T X`` accumulation (the DMD analysis
+  reduction over the long snapshot axis ``d``).
+
+:mod:`ref` holds pure-``jnp`` oracles used by pytest.
+"""
+
+from . import gram, lbm, ref  # noqa: F401

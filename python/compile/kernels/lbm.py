@@ -1,0 +1,88 @@
+"""D2Q9 BGK collision as a Pallas kernel.
+
+The collision step is the FLOP hot-spot of the lattice-Boltzmann
+simulation substrate (~150 flops/cell/step, purely elementwise across
+the 9 distribution channels).  The kernel is tiled over rows:
+
+* block shape ``(9, BH, W)`` — one VMEM-resident row band per grid step;
+  the 9 channels stay together so the moment reductions (rho, u) happen
+  in-register within the block,
+* no cross-block communication: streaming (the neighbour shuffle) is
+  done in Layer 2 with ``jnp.roll`` so the kernel stays embarrassingly
+  tile-parallel,
+* the solid mask rides along as a second ``(BH, W)`` block; solid cells
+  pass through unchanged (full-way bounce-back happens post-streaming).
+
+TPU mapping (DESIGN.md §3): with W=128 lanes and BH rows per block the
+VMEM footprint is ``(2*9+2) * BH * W * 4`` bytes; BH=8..32 keeps blocks
+well under 1 MiB while saturating the VPU.  ``interpret=True`` is
+mandatory here — the CPU PJRT client cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EX, EY, W9
+
+
+def _collide_kernel(f_ref, mask_ref, out_ref, *, omega):
+    """One (9, BH, W) block of BGK collision."""
+    f = f_ref[...]          # (9, BH, W)
+    solid = mask_ref[...]   # (BH, W)
+
+    # Moments, computed in-block (in-register on TPU).
+    rho = jnp.sum(f, axis=0)
+    ux = jnp.zeros_like(rho)
+    uy = jnp.zeros_like(rho)
+    for c in range(9):
+        if EX[c]:
+            ux = ux + float(EX[c]) * f[c]
+        if EY[c]:
+            uy = uy + float(EY[c]) * f[c]
+    inv_rho = 1.0 / rho
+    ux = ux * inv_rho
+    uy = uy * inv_rho
+    usq = ux * ux + uy * uy
+
+    # BGK relaxation towards equilibrium, channel-unrolled.
+    outs = []
+    for c in range(9):
+        cu = float(EX[c]) * ux + float(EY[c]) * uy
+        feq = float(W9[c]) * rho * (1.0 + 3.0 * cu + 4.5 * cu * cu - 1.5 * usq)
+        outs.append(f[c] + omega * (feq - f[c]))
+    f_post = jnp.stack(outs)
+
+    # Solid cells keep their pre-collision distributions.
+    out_ref[...] = jnp.where(solid[None, :, :] > 0.5, f, f_post)
+
+
+def collide(f, mask, *, omega, block_h):
+    """Pallas-tiled BGK collision.
+
+    Args:
+      f: ``(9, H, W)`` float32 distributions.
+      mask: ``(H, W)`` float32, 1.0 at solid cells.
+      omega: relaxation rate ``1/tau`` (static).
+      block_h: rows per VMEM block; must divide ``H``.
+
+    Returns:
+      Post-collision distributions, same shape as ``f``.
+    """
+    nine, h, w = f.shape
+    assert nine == 9, f"expected 9 channels, got {nine}"
+    assert h % block_h == 0, f"block_h={block_h} must divide H={h}"
+    grid = (h // block_h,)
+    return pl.pallas_call(
+        functools.partial(_collide_kernel, omega=omega),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((9, block_h, w), lambda i: (0, i, 0)),
+            pl.BlockSpec((block_h, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((9, block_h, w), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((9, h, w), f.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(f, mask)

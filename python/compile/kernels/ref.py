@@ -1,0 +1,63 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks the kernels against
+(`assert_allclose`).  They are also what the kernels lower to when the
+maths is right — keep them boring and obviously correct.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# --- D2Q9 lattice constants -------------------------------------------------
+# Velocity set, indexed [c]: rest, +x, +y, -x, -y, then the diagonals.
+EX = np.array([0, 1, 0, -1, 0, 1, -1, -1, 1], dtype=np.int32)
+EY = np.array([0, 0, 1, 0, -1, 1, 1, -1, -1], dtype=np.int32)
+# Opposite direction of each velocity (for bounce-back).
+OPP = np.array([0, 3, 4, 1, 2, 7, 8, 5, 6], dtype=np.int32)
+# Lattice weights.
+W9 = np.array(
+    [4 / 9, 1 / 9, 1 / 9, 1 / 9, 1 / 9, 1 / 36, 1 / 36, 1 / 36, 1 / 36],
+    dtype=np.float32,
+)
+
+CS2 = 1.0 / 3.0  # lattice speed of sound squared
+
+
+def macroscopic(f):
+    """Density and velocity moments of a distribution array ``f[9, H, W]``."""
+    rho = jnp.sum(f, axis=0)
+    ex = jnp.asarray(EX, dtype=f.dtype)
+    ey = jnp.asarray(EY, dtype=f.dtype)
+    ux = jnp.tensordot(ex, f, axes=(0, 0)) / rho
+    uy = jnp.tensordot(ey, f, axes=(0, 0)) / rho
+    return rho, ux, uy
+
+
+def equilibrium(rho, ux, uy):
+    """BGK equilibrium distribution ``feq[9, ...]`` for given moments."""
+    usq = ux * ux + uy * uy
+    feqs = []
+    for c in range(9):
+        cu = float(EX[c]) * ux + float(EY[c]) * uy
+        feqs.append(
+            W9[c] * rho * (1.0 + 3.0 * cu + 4.5 * cu * cu - 1.5 * usq)
+        )
+    return jnp.stack(feqs)
+
+
+def collide(f, mask, omega):
+    """Reference BGK collision.
+
+    ``f``: (9, H, W) distributions; ``mask``: (H, W) with 1.0 at solid
+    cells; ``omega``: relaxation rate 1/tau.  Solid cells pass through
+    unchanged (bounce-back happens post-streaming).
+    """
+    rho, ux, uy = macroscopic(f)
+    feq = equilibrium(rho, ux, uy)
+    f_post = f + omega * (feq - f)
+    return jnp.where(mask[None, :, :] > 0.5, f, f_post)
+
+
+def gram(x):
+    """Reference Gram matrix: ``x`` is (d, M); returns ``x.T @ x`` (M, M)."""
+    return x.T @ x

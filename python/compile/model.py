@@ -1,0 +1,261 @@
+"""Layer-2 JAX models for ElasticBroker (build-time only).
+
+Two compute graphs are AOT-lowered to HLO text and executed by the Rust
+coordinator via PJRT:
+
+* :func:`lbm_step` — one fused lattice-Boltzmann step over a rank's
+  subdomain (collision → streaming → bounce-back → inflow/outflow →
+  moments).  The subdomain carries one halo row on each side; the Rust
+  side exchanges raw ``f`` halo rows between steps, and because BGK
+  collision is a deterministic local function, re-colliding the halo
+  locally reproduces exactly what the neighbour computed — so a single
+  fused collide+stream HLO is correct (see DESIGN.md §6).
+
+* :func:`dmd_reduced` — the windowed exact-DMD reduction: Gram matrix
+  via the Pallas kernel, a fixed-sweep cyclic Jacobi eigensolver for the
+  (tiny, symmetric) ``m×m`` problem, rank-``r`` truncation, and the
+  projected operator ``Ã = Σ⁻¹ Vᵀ (X1ᵀX2) V Σ⁻¹``.  Eigenvalues of the
+  non-symmetric ``r×r`` ``Ã`` are computed on the Rust side
+  (``linalg::eig``) — they need a dynamic-convergence QR iteration that
+  does not belong in a static HLO graph.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import gram as gram_kernel
+from .kernels import lbm as lbm_kernel
+from .kernels.ref import EX, EY, OPP, W9, equilibrium, macroscopic
+
+# Default physics for the WindAroundBuildings-like case (lattice units).
+# tau=0.6 (nu ≈ 0.033, building-scale Re ≈ 75) is the stability-checked
+# default: tau=0.56 develops an f32 BGK instability around step ~800 on
+# the full 256×128 geometry (EXPERIMENTS.md §Perf iteration log).
+DEFAULT_TAU = 0.60   # relaxation time; nu = (tau - 0.5)/3
+DEFAULT_U0 = 0.10    # inflow wind speed
+
+
+# ---------------------------------------------------------------------------
+# LBM simulation step (the CFD substrate)
+# ---------------------------------------------------------------------------
+
+def _inflow_feq(u0, dtype):
+    """Equilibrium distribution column vector for the inflow boundary."""
+    rho = jnp.asarray(1.0, dtype)
+    ux = jnp.asarray(u0, dtype)
+    uy = jnp.asarray(0.0, dtype)
+    return equilibrium(rho, ux, uy)  # (9,)
+
+
+def lbm_step(f, mask, *, omega, u0, block_h, inflow=True):
+    """One full LBM step over an extended (halo-carrying) subdomain.
+
+    Args:
+      f: ``(9, Hp, W)`` distributions, rows 0 and Hp-1 are halo rows
+        holding the neighbour's rows (exchanged by Rust between steps).
+      mask: ``(Hp, W)`` solid mask (1.0 = solid), halo rows included.
+      omega: BGK relaxation rate (static).
+      u0: inflow speed (static).
+      block_h: Pallas collision row-block (must divide Hp).
+      inflow: disable to get a closed periodic box (used by the
+        conservation tests).
+
+    Returns:
+      ``(f_next, u)`` where ``f_next`` is ``(9, Hp, W)`` (halo rows are
+      stale and must be re-exchanged) and ``u`` is ``(2, Hp-2, W)`` the
+      interior (ux, uy) field — the snapshot the broker ships.
+    """
+    nine, hp, w = f.shape
+    assert nine == 9
+
+    # 1. Collision (Pallas kernel) — halo rows included on purpose.
+    f_post = lbm_kernel.collide(f, mask, omega=omega, block_h=block_h)
+
+    # 2. Streaming: pull-free roll per channel.  Rolling wraps at the
+    # subdomain edge; wrapped values land only in halo rows (overwritten
+    # by the next exchange) and in the x-periodic seam handled by the
+    # inflow/outflow columns below.
+    f_s = jnp.stack(
+        [
+            jnp.roll(f_post[c], shift=(int(EY[c]), int(EX[c])), axis=(0, 1))
+            for c in range(9)
+        ]
+    )
+
+    # 3. Full-way bounce-back at solid cells.
+    f_bb = jnp.stack([f_s[int(OPP[c])] for c in range(9)])
+    f_n = jnp.where(mask[None, :, :] > 0.5, f_bb, f_s)
+
+    if inflow:
+        # 4. Inflow (west column): clamp to equilibrium at (rho=1, u0).
+        feq_in = _inflow_feq(u0, f.dtype)  # (9,)
+        col_in = jnp.broadcast_to(feq_in[:, None], (9, hp))
+        # Keep solids solid even on the boundary column.
+        solid_w = mask[:, 0] > 0.5
+        col_in = jnp.where(solid_w[None, :], f_n[:, :, 0], col_in)
+        f_n = f_n.at[:, :, 0].set(col_in)
+
+        # 5. Outflow (east column): zero-gradient copy.
+        f_n = f_n.at[:, :, -1].set(f_n[:, :, -2])
+
+    # 6. Macroscopic velocity on the interior rows — what gets streamed
+    # to the Cloud side by the broker.
+    _, ux, uy = macroscopic(f_n)
+    u = jnp.stack([ux[1:-1], uy[1:-1]])
+    return f_n, u
+
+
+def lbm_init(mask, *, u0):
+    """Initial distributions: equilibrium at rho=1 with the inflow wind.
+
+    Solid cells start at rest-equilibrium.  Returns ``(9, Hp, W)``.
+    """
+    hp, w = mask.shape
+    rho = jnp.ones((hp, w), jnp.float32)
+    ux = jnp.where(mask > 0.5, 0.0, u0).astype(jnp.float32)
+    uy = jnp.zeros((hp, w), jnp.float32)
+    return equilibrium(rho, ux, uy)
+
+
+# ---------------------------------------------------------------------------
+# DMD reduction (the analysis hot path)
+# ---------------------------------------------------------------------------
+
+def jacobi_eig(a, *, sweeps=12):
+    """Fixed-sweep cyclic Jacobi eigendecomposition of a symmetric matrix.
+
+    Pure-HLO (no LAPACK custom-calls, which the 0.5.1 PJRT client cannot
+    execute).  ``sweeps`` full cycles of all off-diagonal pairs; for the
+    well-conditioned m<=16 Gram matrices here, 8-12 sweeps reach f32
+    machine precision.
+
+    Returns ``(eigenvalues, eigenvectors)`` with ``a ≈ V diag(w) V^T``
+    (unsorted).
+    """
+    n = a.shape[0]
+    pairs = [(p, q) for p in range(n - 1) for q in range(p + 1, n)]
+    eye = jnp.eye(n, dtype=a.dtype)
+
+    def one_sweep(_, carry):
+        mat, vecs = carry
+        for p, q in pairs:
+            app = mat[p, p]
+            aqq = mat[q, q]
+            apq = mat[p, q]
+            # Stable rotation angle (Golub & Van Loan §8.5).
+            small = jnp.abs(apq) < 1e-30
+            apq_safe = jnp.where(small, 1.0, apq)
+            tau = (aqq - app) / (2.0 * apq_safe)
+            # sign(0) would give t=0; τ=0 means a 45° rotation (t=1).
+            sgn = jnp.where(tau >= 0.0, 1.0, -1.0)
+            t = sgn / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+            t = jnp.where(small, 0.0, t)
+            c = 1.0 / jnp.sqrt(1.0 + t * t)
+            s = t * c
+            rot = (
+                eye.at[p, p].set(c)
+                .at[q, q].set(c)
+                .at[p, q].set(s)
+                .at[q, p].set(-s)
+            )
+            mat = rot.T @ mat @ rot
+            vecs = vecs @ rot
+        return mat, vecs
+
+    mat, vecs = lax.fori_loop(0, sweeps, one_sweep, (a, eye))
+    return jnp.diagonal(mat), vecs
+
+
+def dmd_reduced(x, *, rank, block_d=512, sweeps=12):
+    """Windowed exact-DMD reduction.
+
+    Args:
+      x: ``(d, M)`` snapshot matrix; column ``j`` is the field at
+        window step ``j``; ``M = m + 1``.
+      rank: truncation rank ``r <= m``.
+      block_d: Pallas gram panel height.
+      sweeps: Jacobi sweeps.
+
+    Returns:
+      ``(atilde, sigma)``: the ``(r, r)`` projected operator whose
+      eigenvalues are the DMD eigenvalues, and the ``(r,)`` singular
+      values of ``X1`` (descending).
+    """
+    d, m1 = x.shape
+    m = m1 - 1
+
+    # C = X^T X holds both G = X1^T X1 and K = X1^T X2 as sub-blocks.
+    c = gram_kernel.gram(x, block_d=block_d)  # (M, M)
+    g = c[:m, :m]
+    k = c[:m, 1:]
+
+    evals, v = jacobi_eig(g, sweeps=sweeps)
+    order = jnp.argsort(-evals)
+    idx = order[:rank]
+    lam = jnp.maximum(evals[idx], 0.0)
+    vr = v[:, idx]                      # (m, r)
+    sigma = jnp.sqrt(lam)               # (r,)
+
+    # Degenerate-mode guard: a mode with σ_i ≪ σ_1 carries no signal;
+    # dividing by it amplifies float noise into huge spurious
+    # eigenvalues (seen on near-constant wall regions).  Zero such
+    # modes instead — they contribute λ≈0, which the stability metric
+    # treats as a decayed (absent) mode.
+    sigma1 = jnp.maximum(sigma[0], 1e-30)
+    alive = sigma > 1e-5 * sigma1
+    inv_sigma = jnp.where(alive, 1.0 / jnp.where(alive, sigma, 1.0), 0.0)
+
+    # Ã = Σ⁻¹ Vᵀ K V Σ⁻¹  (= Uᵀ X2 V Σ⁻¹ with U = X1 V Σ⁻¹).
+    atilde = (inv_sigma[:, None] * (vr.T @ k @ vr)) * inv_sigma[None, :]
+    return atilde, sigma
+
+
+# ---------------------------------------------------------------------------
+# Lowering entrypoints (shape-specialized, see aot.py)
+# ---------------------------------------------------------------------------
+
+def make_lbm_step_fn(hp, w, *, tau=DEFAULT_TAU, u0=DEFAULT_U0, block_h=None):
+    """Shape-specialized ``(f, mask) -> (f_next, u)`` for AOT lowering."""
+    if block_h is None:
+        block_h = pick_block_h(hp)
+    omega = 1.0 / tau
+
+    def fn(f, mask):
+        return lbm_step(f, mask, omega=omega, u0=u0, block_h=block_h)
+
+    args = (
+        jax.ShapeDtypeStruct((9, hp, w), jnp.float32),
+        jax.ShapeDtypeStruct((hp, w), jnp.float32),
+    )
+    return fn, args
+
+
+def make_lbm_init_fn(hp, w, *, u0=DEFAULT_U0):
+    """Shape-specialized ``mask -> f0`` for AOT lowering."""
+
+    def fn(mask):
+        return (lbm_init(mask, u0=u0),)
+
+    args = (jax.ShapeDtypeStruct((hp, w), jnp.float32),)
+    return fn, args
+
+
+def make_dmd_fn(d, m1, rank, *, block_d=512, sweeps=12):
+    """Shape-specialized ``x -> (atilde, sigma)`` for AOT lowering."""
+
+    def fn(x):
+        return dmd_reduced(x, rank=rank, block_d=block_d, sweeps=sweeps)
+
+    args = (jax.ShapeDtypeStruct((d, m1), jnp.float32),)
+    return fn, args
+
+
+def pick_block_h(hp):
+    """Largest divisor of ``hp`` that is <= 16 (VMEM row-block heuristic)."""
+    for bh in range(min(hp, 16), 0, -1):
+        if hp % bh == 0:
+            return bh
+    return 1

@@ -1,0 +1,157 @@
+"""L1/L2 correctness: gram Pallas kernel vs oracle, Jacobi eigensolver vs
+numpy, and end-to-end DMD eigenvalue recovery on a known linear system."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import gram, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# --------------------------- gram kernel vs reference ----------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 2000),
+    m=st.integers(2, 24),
+    block_d=st.sampled_from([64, 128, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(d, m, block_d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((d, m)).astype(np.float32))
+    got = np.asarray(gram.gram(x, block_d=block_d))
+    want = np.asarray(ref.gram(x))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-4 * d**0.5)
+
+
+def test_gram_is_symmetric_psd():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((777, 9)).astype(np.float32))
+    c = np.asarray(gram.gram(x, block_d=128))
+    np.testing.assert_allclose(c, c.T, rtol=1e-5, atol=1e-4)
+    w = np.linalg.eigvalsh(c.astype(np.float64))
+    assert w.min() > -1e-2
+
+
+def test_gram_zero_padding_is_noop():
+    # d deliberately not a multiple of block_d
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal((130, 5)).astype(np.float32))
+    got = np.asarray(gram.gram(x, block_d=128))
+    np.testing.assert_allclose(got, np.asarray(x).T @ np.asarray(x), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------- Jacobi eigensolver ----------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 16), seed=st.integers(0, 2**31 - 1))
+def test_jacobi_eig_matches_numpy(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    a = (a + a.T) / 2
+    evals, v = model.jacobi_eig(jnp.asarray(a), sweeps=12)
+    evals = np.asarray(evals)
+    v = np.asarray(v)
+    want = np.linalg.eigvalsh(a.astype(np.float64))
+    np.testing.assert_allclose(np.sort(evals), want, rtol=5e-4, atol=5e-4)
+    # eigenvector residual ||A v - λ v||
+    res = a @ v - v * evals[None, :]
+    assert np.abs(res).max() < 5e-3
+    # orthonormality of V
+    np.testing.assert_allclose(v.T @ v, np.eye(n), atol=5e-4)
+
+
+def test_jacobi_eig_diagonal_input():
+    a = jnp.diag(jnp.asarray([3.0, 1.0, 2.0], jnp.float32))
+    evals, v = model.jacobi_eig(a, sweeps=4)
+    np.testing.assert_allclose(np.sort(np.asarray(evals)), [1.0, 2.0, 3.0], rtol=1e-6)
+
+
+def test_jacobi_eig_equal_diagonal_pair():
+    # τ=0 branch: requires the 45° rotation fix.
+    a = jnp.asarray([[2.0, 1.0], [1.0, 2.0]], jnp.float32)
+    evals, _ = model.jacobi_eig(a, sweeps=4)
+    np.testing.assert_allclose(np.sort(np.asarray(evals)), [1.0, 3.0], rtol=1e-5)
+
+
+# --------------------------- DMD end-to-end --------------------------------
+
+def _linear_system_snapshots(d, n_snap, eigs, seed=0):
+    """x_{k+1} = A x_k with known spectrum; returns (d, n_snap) f32."""
+    rng = np.random.default_rng(seed)
+    r = len(eigs)
+    # real block-diagonal dynamics with the requested complex spectrum
+    blocks = []
+    i = 0
+    while i < r:
+        lam = eigs[i]
+        if np.iscomplex(lam) and i + 1 < r and np.conj(lam) == eigs[i + 1]:
+            a, b = lam.real, lam.imag
+            blocks.append(np.array([[a, -b], [b, a]]))
+            i += 2
+        else:
+            blocks.append(np.array([[lam.real]]))
+            i += 1
+    dyn = np.zeros((r, r))
+    o = 0
+    for b in blocks:
+        k = b.shape[0]
+        dyn[o : o + k, o : o + k] = b
+        o += k
+    phi, _ = np.linalg.qr(rng.standard_normal((d, r)))
+    z = rng.standard_normal(r)
+    snaps = []
+    for _ in range(n_snap):
+        snaps.append(phi @ z)
+        z = dyn @ z
+    return np.stack(snaps, axis=1).astype(np.float32)
+
+
+@pytest.mark.parametrize(
+    "eigs",
+    [
+        [0.95, 0.8, 0.5],
+        [complex(0.9, 0.3), complex(0.9, -0.3), 0.7],
+        [1.0, 0.99, complex(0.6, 0.6), complex(0.6, -0.6)],
+    ],
+)
+def test_dmd_recovers_known_spectrum(eigs):
+    d, m1 = 512, 9
+    r = len(eigs)
+    x = _linear_system_snapshots(d, m1, np.asarray(eigs, dtype=complex))
+    atilde, sigma = model.dmd_reduced(jnp.asarray(x), rank=r, block_d=128)
+    got = np.sort_complex(np.linalg.eigvals(np.asarray(atilde).astype(np.float64)))
+    want = np.sort_complex(np.asarray(eigs, dtype=complex))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_dmd_sigma_descending_positive():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((300, 9)).astype(np.float32))
+    _, sigma = model.dmd_reduced(x, rank=6, block_d=64)
+    s = np.asarray(sigma)
+    assert (s > 0).all()
+    assert (np.diff(s) <= 1e-4).all(), f"sigma not descending: {s}"
+
+
+def test_dmd_matches_numpy_exact_dmd():
+    """Ã eigenvalues == numpy SVD-based exact DMD eigenvalues."""
+    rng = np.random.default_rng(11)
+    d, m1, r = 400, 9, 6
+    x = rng.standard_normal((d, m1)).astype(np.float32)
+    x1, x2 = x[:, :-1], x[:, 1:]
+    u, s, vt = np.linalg.svd(x1.astype(np.float64), full_matrices=False)
+    u, s, vt = u[:, :r], s[:r], vt[:r]
+    at_np = u.T @ x2 @ vt.T @ np.diag(1.0 / s)
+    want = np.sort_complex(np.linalg.eigvals(at_np))
+
+    atilde, sigma = model.dmd_reduced(jnp.asarray(x), rank=r, block_d=128)
+    got = np.sort_complex(np.linalg.eigvals(np.asarray(atilde).astype(np.float64)))
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(sigma), s, rtol=1e-3)

@@ -1,0 +1,171 @@
+"""L1/L2 correctness: Pallas LBM collision kernel vs pure-jnp oracle,
+and physical invariants of the fused step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import lbm, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_state(rng, hp, w):
+    """A physically plausible random distribution set (positive, near eq)."""
+    rho = 1.0 + 0.1 * rng.standard_normal((hp, w)).astype(np.float32)
+    ux = 0.1 * rng.standard_normal((hp, w)).astype(np.float32)
+    uy = 0.1 * rng.standard_normal((hp, w)).astype(np.float32)
+    f = np.asarray(ref.equilibrium(jnp.asarray(rho), jnp.asarray(ux), jnp.asarray(uy)))
+    # off-equilibrium perturbation, keep positivity
+    f = f * (1.0 + 0.05 * rng.standard_normal(f.shape).astype(np.float32))
+    return jnp.asarray(np.abs(f) + 1e-3)
+
+
+def random_mask(rng, hp, w, p=0.2):
+    return jnp.asarray((rng.random((hp, w)) < p).astype(np.float32))
+
+
+# --------------------------- kernel vs reference ---------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    hp_blocks=st.integers(1, 4),
+    block_h=st.sampled_from([2, 3, 5, 8]),
+    w=st.sampled_from([8, 16, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    omega=st.floats(0.5, 1.9),
+)
+def test_collide_kernel_matches_ref(hp_blocks, block_h, w, seed, omega):
+    hp = hp_blocks * block_h
+    rng = np.random.default_rng(seed)
+    f = random_state(rng, hp, w)
+    mask = random_mask(rng, hp, w)
+    got = lbm.collide(f, mask, omega=float(omega), block_h=block_h)
+    want = ref.collide(f, mask, float(omega))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-6)
+
+
+def test_collide_solid_cells_pass_through():
+    rng = np.random.default_rng(0)
+    f = random_state(rng, 6, 16)
+    mask = jnp.ones((6, 16), jnp.float32)  # all solid
+    got = lbm.collide(f, mask, omega=1.2, block_h=3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(f), rtol=0, atol=0)
+
+
+def test_collide_preserves_mass_per_cell():
+    # BGK collision conserves rho and momentum cell-wise.
+    rng = np.random.default_rng(1)
+    f = random_state(rng, 12, 32)
+    mask = jnp.zeros((12, 32), jnp.float32)
+    got = lbm.collide(f, mask, omega=1.5, block_h=4)
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(got, 0)), np.asarray(jnp.sum(f, 0)), rtol=1e-5
+    )
+    for comp, e in ((0, ref.EX), (1, ref.EY)):
+        mom_in = np.tensordot(e.astype(np.float32), np.asarray(f), axes=(0, 0))
+        mom_out = np.tensordot(e.astype(np.float32), np.asarray(got), axes=(0, 0))
+        np.testing.assert_allclose(mom_out, mom_in, rtol=1e-4, atol=1e-5)
+
+
+def test_collide_fixed_point_at_equilibrium():
+    # Equilibrium is a fixed point of collision for any omega.
+    rho = jnp.full((8, 16), 1.05, jnp.float32)
+    ux = jnp.full((8, 16), 0.08, jnp.float32)
+    uy = jnp.full((8, 16), -0.02, jnp.float32)
+    feq = ref.equilibrium(rho, ux, uy)
+    mask = jnp.zeros((8, 16), jnp.float32)
+    got = lbm.collide(feq, mask, omega=1.7, block_h=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(feq), rtol=1e-5, atol=1e-6)
+
+
+# --------------------------- fused step invariants -------------------------
+
+def test_step_conserves_mass_closed_box():
+    # inflow=False → fully periodic + bounce-back: exact mass conservation.
+    rng = np.random.default_rng(2)
+    hp, w = 10, 32
+    f = random_state(rng, hp, w)
+    mask = random_mask(rng, hp, w, p=0.15)
+    total0 = float(jnp.sum(f))
+    fn = jax.jit(
+        lambda f, m: model.lbm_step(f, m, omega=1.6, u0=0.1, block_h=5, inflow=False)
+    )
+    for _ in range(20):
+        f, _u = fn(f, mask)
+    assert abs(float(jnp.sum(f)) - total0) / total0 < 1e-5
+
+
+def test_init_is_equilibrium_with_wind():
+    mask = jnp.zeros((10, 16), jnp.float32)
+    f0 = model.lbm_init(mask, u0=0.1)
+    rho, ux, uy = ref.macroscopic(f0)
+    np.testing.assert_allclose(np.asarray(rho), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ux), 0.1, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(uy), 0.0, atol=1e-6)
+
+
+def test_init_solid_cells_at_rest():
+    mask = jnp.zeros((10, 16), jnp.float32).at[4:6, 5:8].set(1.0)
+    f0 = model.lbm_init(mask, u0=0.1)
+    _, ux, _ = ref.macroscopic(f0)
+    np.testing.assert_allclose(np.asarray(ux)[4:6, 5:8], 0.0, atol=1e-6)
+
+
+def test_step_remains_finite_with_obstacle():
+    # Run a few hundred steps of the real case geometry at rank scale;
+    # no NaN/Inf and bounded velocity (lattice Mach << 1 stays stable).
+    hp, w = 18, 64
+    mask = np.zeros((hp, w), np.float32)
+    mask[0, :] = 0.0  # halo rows are fluid here (single rank, no walls)
+    mask[6:12, 20:26] = 1.0  # a building
+    mask = jnp.asarray(mask)
+    f = model.lbm_init(mask, u0=0.1)
+    fn = jax.jit(
+        lambda f: model.lbm_step(f, mask, omega=1.0 / 0.56, u0=0.1, block_h=6)
+    )
+    for _ in range(300):
+        f, u = fn(f)
+    u = np.asarray(u)
+    assert np.isfinite(u).all()
+    assert np.abs(u).max() < 0.5, "lattice velocity blew past stability bound"
+
+
+def test_step_develops_wake_behind_building():
+    hp, w = 34, 96
+    mask = np.zeros((hp, w), np.float32)
+    mask[1, :] = 1.0      # bottom wall (global edge rows solid)
+    mask[hp - 2, :] = 1.0  # top wall
+    mask[12:22, 30:36] = 1.0
+    mask = jnp.asarray(mask)
+    f = model.lbm_init(mask, u0=0.1)
+    fn = jax.jit(
+        lambda f: model.lbm_step(
+            f, mask, omega=1.0 / 0.56, u0=0.1, block_h=model.pick_block_h(hp)
+        )
+    )
+    for _ in range(600):
+        f, u = fn(f)
+    ux = np.asarray(u)[0]  # (hp-2, w) interior rows
+    # free stream upstream of the building vs immediately downstream
+    upstream = ux[11:21, 10:20].mean()
+    wake = ux[11:21, 37:45].mean()
+    assert upstream > 0.05
+    assert wake < upstream * 0.8, f"no wake: upstream={upstream} wake={wake}"
+
+
+def test_u_output_is_interior_rows():
+    hp, w = 10, 16
+    mask = jnp.zeros((hp, w), jnp.float32)
+    f = model.lbm_init(mask, u0=0.1)
+    _, u = model.lbm_step(f, mask, omega=1.5, u0=0.1, block_h=5)
+    assert u.shape == (2, hp - 2, w)
+
+
+def test_pick_block_h_divides():
+    for hp in range(2, 300):
+        bh = model.pick_block_h(hp)
+        assert hp % bh == 0 and 1 <= bh <= 16

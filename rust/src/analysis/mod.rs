@@ -1,0 +1,550 @@
+//! Online DMD analysis of incoming data streams — the paper's §3.2
+//! analysis application (PyDMD inside Spark executors).
+//!
+//! Each data stream (one simulation rank's field) keeps a sliding
+//! window of the last `m+1` snapshots.  When the window is full, the
+//! engine computes the windowed exact-DMD reduction `(Ã, σ)` — through
+//! the **AOT-compiled PJRT artifact** when one matches the snapshot
+//! dimension, else through the pure-Rust mirror — then the DMD
+//! eigenvalues (Francis QR, [`crate::linalg::eig`]) and the paper's
+//! Fig 5 stability metric.
+//!
+//! The engine is `Sync` and is shared by all executor threads: state is
+//! per-stream, so partitions (≡ streams) never contend on the same
+//! window.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::linalg::{dmd, Complex, Mat};
+use crate::metrics::WorkflowMetrics;
+use crate::record::StreamRecord;
+use crate::runtime::ArtifactSet;
+use crate::streamproc::MicroBatch;
+use crate::util;
+
+/// One analysis output (a point in a Fig 5 subplot).
+#[derive(Clone, Debug)]
+pub struct AnalysisResult {
+    /// Stream key (`"<field>/<rank>"`).
+    pub key: String,
+    pub rank: u32,
+    /// Simulation step of the newest snapshot in the window.
+    pub step: u64,
+    /// Mean squared distance of the DMD eigenvalues to the unit circle.
+    pub stability: f64,
+    /// DMD eigenvalues of the window.
+    pub eigs: Vec<Complex>,
+    /// Singular values of X1 (descending).
+    pub sigma: Vec<f64>,
+    /// Generation → analysis latency of the newest snapshot (µs) — the
+    /// paper's §4.3 quality-of-service metric.
+    pub latency_us: u64,
+    /// Which path computed the reduction ("pjrt" or "rust").
+    pub backend: &'static str,
+}
+
+/// Which implementation computes the (Ã, σ) reduction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum DmdBackend {
+    /// The AOT-compiled PJRT artifact when one matches the snapshot
+    /// dimension, else the Rust mirror.  This is the three-layer
+    /// architecture's default: on accelerator-class PJRT backends the
+    /// compiled gram kernel wins; on the CPU plugin its per-dispatch
+    /// overhead (~2 ms) can exceed the maths for small `d` — see
+    /// EXPERIMENTS.md §Perf for measurements.
+    #[default]
+    Pjrt,
+    /// Always the pure-Rust mirror (identical semantics).
+    Rust,
+}
+
+/// When a stream's window is (re)analysed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FirePolicy {
+    /// Once per new snapshot (subject to `hop`) — maximal time
+    /// resolution, cost ∝ snapshot rate.
+    #[default]
+    PerSnapshot,
+    /// Once per micro-batch per stream, on the newest window — the
+    /// paper's behaviour ("the DMD analysis [is] triggered every 3
+    /// seconds for all data streams"); cost ∝ trigger rate.
+    PerBatch,
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct DmdConfig {
+    /// Window length m (the reduction uses m+1 snapshots).
+    pub window: usize,
+    /// Truncation rank r ≤ m.
+    pub rank: usize,
+    /// Recompute every `hop` new snapshots once the window is full
+    /// (`PerSnapshot` only).
+    pub hop: usize,
+    /// Reduction backend policy.
+    pub backend: DmdBackend,
+    /// Analysis cadence.
+    pub fire: FirePolicy,
+}
+
+impl Default for DmdConfig {
+    fn default() -> Self {
+        DmdConfig {
+            window: 8,
+            rank: 6,
+            hop: 1,
+            backend: DmdBackend::Pjrt,
+            fire: FirePolicy::PerSnapshot,
+        }
+    }
+}
+
+struct WindowState {
+    /// (step, gen_micros, snapshot) in arrival order.
+    snaps: VecDeque<(u64, u64, Vec<f32>)>,
+    /// New snapshots since the last analysis.
+    since_last: usize,
+    last_step: Option<u64>,
+}
+
+/// The per-stream windowed DMD engine.
+pub struct DmdEngine {
+    cfg: DmdConfig,
+    artifacts: Option<Arc<ArtifactSet>>,
+    windows: Mutex<HashMap<String, WindowState>>,
+    metrics: WorkflowMetrics,
+}
+
+impl DmdEngine {
+    pub fn new(
+        cfg: DmdConfig,
+        artifacts: Option<Arc<ArtifactSet>>,
+        metrics: WorkflowMetrics,
+    ) -> Result<Self> {
+        anyhow::ensure!(cfg.window >= 2, "window must be >= 2");
+        anyhow::ensure!(
+            cfg.rank >= 1 && cfg.rank <= cfg.window,
+            "rank {} out of 1..={}",
+            cfg.rank,
+            cfg.window
+        );
+        anyhow::ensure!(cfg.hop >= 1, "hop must be >= 1");
+        Ok(DmdEngine {
+            cfg,
+            artifacts,
+            windows: Mutex::new(HashMap::new()),
+            metrics,
+        })
+    }
+
+    /// Process one micro-batch (one partition of a trigger): push every
+    /// record into its stream's window, emit an analysis per full
+    /// window (respecting the hop).
+    pub fn process(&self, batch: &MicroBatch) -> Vec<AnalysisResult> {
+        let mut out = Vec::new();
+        let n = batch.records.len();
+        for (i, rec) in batch.records.iter().enumerate() {
+            let may_fire = match self.cfg.fire {
+                FirePolicy::PerSnapshot => true,
+                FirePolicy::PerBatch => i + 1 == n, // newest window only
+            };
+            match self.push_inner(&batch.key, rec, may_fire) {
+                Ok(Some(res)) => out.push(res),
+                Ok(None) => {}
+                Err(e) => {
+                    log::warn!("analysis: {}: {e:#}", batch.key);
+                }
+            }
+        }
+        out
+    }
+
+    /// Push one snapshot; returns an analysis when the window fires.
+    pub fn push(&self, key: &str, rec: &StreamRecord) -> Result<Option<AnalysisResult>> {
+        self.push_inner(key, rec, true)
+    }
+
+    fn push_inner(
+        &self,
+        key: &str,
+        rec: &StreamRecord,
+        may_fire: bool,
+    ) -> Result<Option<AnalysisResult>> {
+        let data = rec.payload_f32()?;
+        let m1 = self.cfg.window + 1;
+        let mut windows = self.windows.lock().unwrap();
+        let st = windows.entry(key.to_string()).or_insert_with(|| WindowState {
+            snaps: VecDeque::with_capacity(m1),
+            since_last: 0,
+            last_step: None,
+        });
+        // Drop duplicate/reordered steps (at-least-once transport).
+        if let Some(last) = st.last_step {
+            if rec.step <= last {
+                log::debug!("analysis: {key}: dropping stale step {} <= {last}", rec.step);
+                return Ok(None);
+            }
+        }
+        st.last_step = Some(rec.step);
+        if let Some(front) = st.snaps.front() {
+            anyhow::ensure!(
+                front.2.len() == data.len(),
+                "snapshot dim changed mid-stream: {} vs {}",
+                front.2.len(),
+                data.len()
+            );
+        }
+        st.snaps.push_back((rec.step, rec.gen_micros, data));
+        while st.snaps.len() > m1 {
+            st.snaps.pop_front();
+        }
+        if st.snaps.len() < m1 {
+            return Ok(None);
+        }
+        st.since_last += 1;
+        if !may_fire {
+            return Ok(None);
+        }
+        if self.cfg.fire == FirePolicy::PerSnapshot && st.since_last < self.cfg.hop {
+            return Ok(None);
+        }
+        st.since_last = 0;
+
+        // Assemble X (d × m+1), column j = snapshot j.
+        let d = st.snaps[0].2.len();
+        let mut x = vec![0.0f32; d * m1];
+        for (j, (_, _, snap)) in st.snaps.iter().enumerate() {
+            for i in 0..d {
+                x[i * m1 + j] = snap[i];
+            }
+        }
+        let (step, gen_us) = {
+            let newest = st.snaps.back().unwrap();
+            (newest.0, newest.1)
+        };
+        drop(windows); // analysis itself runs without the map lock
+
+        let (atilde, sigma, backend) = self.reduce(d, m1, &x)?;
+        let eigs = dmd::dmd_eigenvalues(&atilde)?;
+        let stability = dmd::stability_metric(&eigs);
+        let latency_us = util::epoch_micros().saturating_sub(gen_us);
+        self.metrics.e2e_latency_us.record(latency_us);
+        self.metrics.analyzed.record((d * 4) as u64);
+        let (_, rank) = crate::record::parse_stream_key(key).unwrap_or((key, u32::MAX));
+        Ok(Some(AnalysisResult {
+            key: key.to_string(),
+            rank,
+            step,
+            stability,
+            eigs,
+            sigma,
+            latency_us,
+            backend,
+        }))
+    }
+
+    /// Pre-compile the PJRT reduction for an expected snapshot
+    /// dimension so the first trigger doesn't pay the compile (the
+    /// paper's service is warm by the time the simulation connects).
+    pub fn warm(&self, d: usize) {
+        if let Some(arts) = &self.artifacts {
+            let key = format!("d{}_m{}_r{}", d, self.cfg.window + 1, self.cfg.rank);
+            if arts.find("dmd", &key).is_some() {
+                if let Err(e) = arts.executable("dmd", &key) {
+                    log::warn!("analysis: warm-up compile failed for {key}: {e:#}");
+                }
+            } else {
+                log::info!(
+                    "analysis: no dmd artifact for d={d} (key {key}); Rust fallback will serve"
+                );
+            }
+        }
+    }
+
+    /// The (Ã, σ) reduction: PJRT artifact when the shape matches, else
+    /// the Rust mirror.
+    fn reduce(&self, d: usize, m1: usize, x: &[f32]) -> Result<(Mat, Vec<f64>, &'static str)> {
+        if self.cfg.backend == DmdBackend::Pjrt {
+            if let Some(arts) = &self.artifacts {
+                let key = format!("d{}_m{}_r{}", d, m1, self.cfg.rank);
+                if arts.find("dmd", &key).is_some() {
+                    let exe = arts.executable("dmd", &key)?;
+                    let out = exe.run_f32(&[x])?;
+                    if out[0].iter().all(|v| v.is_finite()) {
+                        let r = self.cfg.rank;
+                        let atilde = Mat::from_f32(r, r, &out[0]).context("atilde shape")?;
+                        let sigma = out[1].iter().map(|&v| v as f64).collect();
+                        return Ok((atilde, sigma, "pjrt"));
+                    }
+                    // Diagnosed in EXPERIMENTS.md §Perf: extremely
+                    // settled windows can drive the f32 Jacobi sweep in
+                    // the artifact to a non-finite rotation.  Keep the
+                    // service available: fall through to the f64 mirror.
+                    if std::env::var("ELASTICBROKER_DUMP_NAN").is_ok() {
+                        let path = format!("/tmp/eb_nan_window_{d}_{m1}.bin");
+                        let bytes: Vec<u8> =
+                            x.iter().flat_map(|v| v.to_le_bytes()).collect();
+                        let _ = std::fs::write(&path, bytes);
+                        log::warn!("analysis: dumped NaN-producing window to {path}");
+                    }
+                    log::warn!(
+                        "analysis: PJRT dmd artifact returned non-finite Ã (d={d}); \
+                         using Rust mirror for this window"
+                    );
+                }
+            }
+        }
+        let xf: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let xm = Mat::from_slice(d, m1, &xf)?;
+        let red = dmd::dmd_reduce(&xm, self.cfg.rank)?;
+        Ok((red.atilde, red.sigma, "rust"))
+    }
+
+    /// Streams currently tracked.
+    pub fn tracked_streams(&self) -> usize {
+        self.windows.lock().unwrap().len()
+    }
+}
+
+/// CSV sink for analysis results (the Fig 5 data file).
+pub struct CsvSink {
+    w: Mutex<std::io::BufWriter<std::fs::File>>,
+}
+
+impl CsvSink {
+    pub fn create(path: &str) -> Result<Self> {
+        let f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(
+            w,
+            "key,rank,step,stability,latency_us,backend,sigma0,eigs_re_im"
+        )?;
+        Ok(CsvSink { w: Mutex::new(w) })
+    }
+
+    pub fn write(&self, r: &AnalysisResult) -> Result<()> {
+        let eigs: Vec<String> = r
+            .eigs
+            .iter()
+            .map(|c| format!("{:.6}:{:.6}", c.re, c.im))
+            .collect();
+        let mut w = self.w.lock().unwrap();
+        writeln!(
+            w,
+            "{},{},{},{:.8},{},{},{:.6},{}",
+            r.key,
+            r.rank,
+            r.step,
+            r.stability,
+            r.latency_us,
+            r.backend,
+            r.sigma.first().copied().unwrap_or(0.0),
+            eigs.join(";")
+        )?;
+        Ok(())
+    }
+
+    pub fn flush(&self) -> Result<()> {
+        self.w.lock().unwrap().flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap_record(rank: u32, step: u64, data: &[f32]) -> StreamRecord {
+        StreamRecord::from_f32("u", rank, step, util::epoch_micros(), &[data.len() as u32], data)
+            .unwrap()
+    }
+
+    fn engine(window: usize, rank: usize) -> DmdEngine {
+        DmdEngine::new(
+            DmdConfig {
+                window,
+                rank,
+                hop: 1,
+                ..Default::default()
+            },
+            None, // rust fallback: deterministic, no artifacts needed
+            WorkflowMetrics::new(),
+        )
+        .unwrap()
+    }
+
+    /// Decaying oscillation snapshots: x_k = cos(θk)·a·rᵏ + sin(θk)·b·rᵏ.
+    fn oscillating_snapshot(d: usize, k: usize, r: f64, theta: f64) -> Vec<f32> {
+        let growth = r.powi(k as i32);
+        (0..d)
+            .map(|i| {
+                let phase = i as f64 * 0.37;
+                (growth * ((theta * k as f64) + phase).cos()) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn window_fills_then_fires() {
+        let eng = engine(4, 2);
+        let d = 64;
+        let mut fired = 0;
+        for step in 0..8 {
+            let rec = snap_record(0, step, &oscillating_snapshot(d, step as usize, 0.95, 0.5));
+            if eng.push("u/0", &rec).unwrap().is_some() {
+                fired += 1;
+            }
+        }
+        // window m+1 = 5 fills at step index 4; fires every push after
+        assert_eq!(fired, 4);
+        assert_eq!(eng.tracked_streams(), 1);
+    }
+
+    #[test]
+    fn recovers_decay_rate() {
+        let eng = engine(8, 2);
+        let d = 128;
+        let r = 0.9;
+        let mut last = None;
+        for step in 0..9 {
+            let rec = snap_record(0, step, &oscillating_snapshot(d, step as usize, r, 0.4));
+            if let Some(res) = eng.push("u/0", &rec).unwrap() {
+                last = Some(res);
+            }
+        }
+        let res = last.expect("window should have fired");
+        // dominant eigenvalue magnitude ≈ decay rate r
+        let lead = res.eigs.iter().map(|e| e.abs()).fold(0.0, f64::max);
+        assert!((lead - r).abs() < 0.05, "lead |λ|={lead} want ~{r}");
+        assert!(res.stability > 0.0);
+        assert_eq!(res.backend, "rust");
+        assert!(res.latency_us < 10_000_000);
+    }
+
+    #[test]
+    fn neutral_oscillation_scores_near_zero() {
+        let eng = engine(8, 2);
+        let d = 96;
+        let mut last = None;
+        for step in 0..9 {
+            let rec = snap_record(0, step, &oscillating_snapshot(d, step as usize, 1.0, 0.6));
+            if let Some(res) = eng.push("u/0", &rec).unwrap() {
+                last = Some(res);
+            }
+        }
+        let res = last.unwrap();
+        assert!(
+            res.stability < 1e-3,
+            "unit-circle dynamics should be ~stable: {}",
+            res.stability
+        );
+    }
+
+    #[test]
+    fn duplicate_and_stale_steps_ignored() {
+        let eng = engine(3, 2);
+        let d = 32;
+        let mk = |s: u64| snap_record(0, s, &oscillating_snapshot(d, s as usize, 0.9, 0.3));
+        assert!(eng.push("u/0", &mk(0)).unwrap().is_none());
+        assert!(eng.push("u/0", &mk(0)).unwrap().is_none()); // dup
+        assert!(eng.push("u/0", &mk(1)).unwrap().is_none());
+        assert!(eng.push("u/0", &mk(1)).unwrap().is_none()); // dup
+        assert!(eng.push("u/0", &mk(0)).unwrap().is_none()); // stale
+        assert!(eng.push("u/0", &mk(2)).unwrap().is_none());
+        // 4th distinct snapshot fills window m+1=4 → fires
+        assert!(eng.push("u/0", &mk(3)).unwrap().is_some());
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let eng = engine(2, 1);
+        let d = 16;
+        for step in 0..3 {
+            let rec = snap_record(0, step, &oscillating_snapshot(d, step as usize, 0.9, 0.2));
+            eng.push("u/0", &rec).unwrap();
+        }
+        // u/1 only has 1 snapshot: must not fire
+        let rec = snap_record(1, 0, &oscillating_snapshot(d, 0, 0.9, 0.2));
+        assert!(eng.push("u/1", &rec).unwrap().is_none());
+        assert_eq!(eng.tracked_streams(), 2);
+    }
+
+    #[test]
+    fn hop_reduces_fire_rate() {
+        let eng = DmdEngine::new(
+            DmdConfig {
+                window: 3,
+                rank: 2,
+                hop: 3,
+                ..Default::default()
+            },
+            None,
+            WorkflowMetrics::new(),
+        )
+        .unwrap();
+        let d = 32;
+        let mut fired = 0;
+        for step in 0..12 {
+            let rec = snap_record(0, step, &oscillating_snapshot(d, step as usize, 0.9, 0.3));
+            if eng.push("u/0", &rec).unwrap().is_some() {
+                fired += 1;
+            }
+        }
+        // window fills at snapshot 4; 8 more pushes → fires at hop=3 → 2-3
+        assert!((2..=3).contains(&fired), "fired {fired}");
+    }
+
+    #[test]
+    fn dim_change_is_error() {
+        let eng = engine(3, 2);
+        let rec = snap_record(0, 0, &vec![1.0; 32]);
+        eng.push("u/0", &rec).unwrap();
+        let bad = snap_record(0, 1, &vec![1.0; 64]);
+        assert!(eng.push("u/0", &bad).is_err());
+    }
+
+    #[test]
+    fn process_batch_end_to_end() {
+        let eng = engine(3, 2);
+        let d = 48;
+        let records: Vec<StreamRecord> = (0..6)
+            .map(|s| snap_record(2, s, &oscillating_snapshot(d, s as usize, 0.92, 0.5)))
+            .collect();
+        let batch = MicroBatch {
+            key: "u/2".into(),
+            records,
+        };
+        let out = eng.process(&batch);
+        assert_eq!(out.len(), 3); // fills at 4th, fires on 4,5,6th
+        assert!(out.iter().all(|r| r.rank == 2));
+        assert!(out.windows(2).all(|w| w[0].step < w[1].step));
+    }
+
+    #[test]
+    fn csv_sink_writes_rows() {
+        let dir = std::env::temp_dir().join(format!("eb-csv-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.csv");
+        let sink = CsvSink::create(path.to_str().unwrap()).unwrap();
+        let res = AnalysisResult {
+            key: "u/0".into(),
+            rank: 0,
+            step: 42,
+            stability: 0.125,
+            eigs: vec![Complex::new(0.9, 0.1)],
+            sigma: vec![3.0, 1.0],
+            latency_us: 1234,
+            backend: "rust",
+        };
+        sink.write(&res).unwrap();
+        sink.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() == 2);
+        assert!(text.contains("u/0,0,42,0.12500000,1234,rust"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

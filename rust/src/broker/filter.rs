@@ -1,0 +1,167 @@
+//! Data filtering / aggregation / format conversion — the paper's §1
+//! "ElasticBroker performs data filtering, aggregation, and format
+//! conversions to close the gap between an HPC ecosystem and a distinct
+//! Cloud ecosystem".
+//!
+//! A [`Filter`] is a pipeline of [`FilterStage`]s applied in `write`
+//! before serialization.  Stages reshape both the data and the declared
+//! shape so the Cloud side always receives a self-consistent record.
+
+use anyhow::{bail, ensure, Result};
+
+/// One reduction/conversion stage.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FilterStage {
+    /// Keep every k-th element (flattens the shape to 1-D).
+    Stride(usize),
+    /// Collapse a leading component axis of size 2 (e.g. `[2, H, W]`
+    /// velocity) into per-cell magnitude `sqrt(ux² + uy²)` → `[H, W]`.
+    Magnitude,
+    /// Clamp values into a range (sensor-style sanitation).
+    Clamp(f32, f32),
+    /// Keep only elements with |v| ≥ threshold, zeroing the rest
+    /// (sparsification; shape unchanged).
+    Threshold(f32),
+}
+
+/// A pipeline of stages (possibly empty = passthrough).
+#[derive(Clone, Debug, Default)]
+pub struct Filter {
+    stages: Vec<FilterStage>,
+}
+
+impl Filter {
+    pub fn passthrough() -> Self {
+        Filter { stages: Vec::new() }
+    }
+
+    pub fn new(stages: Vec<FilterStage>) -> Self {
+        Filter { stages }
+    }
+
+    pub fn is_passthrough(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Apply all stages; returns the (possibly new) shape and data.
+    pub fn apply(&self, shape: &[u32], data: &[f32]) -> Result<(Vec<u32>, Vec<f32>)> {
+        let expect: usize = shape.iter().map(|&d| d as usize).product();
+        ensure!(
+            expect == data.len(),
+            "filter: shape {shape:?} does not match data len {}",
+            data.len()
+        );
+        if self.stages.is_empty() {
+            return Ok((shape.to_vec(), data.to_vec()));
+        }
+        let mut shape = shape.to_vec();
+        let mut data = data.to_vec();
+        for stage in &self.stages {
+            (shape, data) = apply_stage(stage, shape, data)?;
+        }
+        Ok((shape, data))
+    }
+}
+
+fn apply_stage(
+    stage: &FilterStage,
+    shape: Vec<u32>,
+    data: Vec<f32>,
+) -> Result<(Vec<u32>, Vec<f32>)> {
+    match *stage {
+        FilterStage::Stride(k) => {
+            ensure!(k > 0, "stride must be > 0");
+            let out: Vec<f32> = data.iter().copied().step_by(k).collect();
+            Ok((vec![out.len() as u32], out))
+        }
+        FilterStage::Magnitude => {
+            if shape.first() != Some(&2) {
+                bail!("Magnitude stage expects a leading axis of 2, got {shape:?}");
+            }
+            let plane: usize = shape[1..].iter().map(|&d| d as usize).product();
+            let (ux, uy) = data.split_at(plane);
+            let out: Vec<f32> = ux
+                .iter()
+                .zip(uy)
+                .map(|(&x, &y)| (x * x + y * y).sqrt())
+                .collect();
+            Ok((shape[1..].to_vec(), out))
+        }
+        FilterStage::Clamp(lo, hi) => {
+            ensure!(lo <= hi, "clamp: lo > hi");
+            let out = data.into_iter().map(|v| v.clamp(lo, hi)).collect();
+            Ok((shape, out))
+        }
+        FilterStage::Threshold(t) => {
+            let out = data
+                .into_iter()
+                .map(|v| if v.abs() >= t { v } else { 0.0 })
+                .collect();
+            Ok((shape, out))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passthrough_is_identity() {
+        let f = Filter::passthrough();
+        let (s, d) = f.apply(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(s, vec![2, 3]);
+        assert_eq!(d, vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn stride_subsamples() {
+        let f = Filter::new(vec![FilterStage::Stride(3)]);
+        let data: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let (s, d) = f.apply(&[10], &data).unwrap();
+        assert_eq!(s, vec![4]);
+        assert_eq!(d, vec![0., 3., 6., 9.]);
+    }
+
+    #[test]
+    fn magnitude_collapses_components() {
+        let f = Filter::new(vec![FilterStage::Magnitude]);
+        // ux = [3, 0], uy = [4, 1]
+        let (s, d) = f.apply(&[2, 2, 1], &[3., 0., 4., 1.]).unwrap();
+        assert_eq!(s, vec![2, 1]);
+        assert!((d[0] - 5.0).abs() < 1e-6);
+        assert!((d[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn magnitude_requires_component_axis() {
+        let f = Filter::new(vec![FilterStage::Magnitude]);
+        assert!(f.apply(&[3, 2], &[0.; 6]).is_err());
+    }
+
+    #[test]
+    fn clamp_and_threshold() {
+        let f = Filter::new(vec![
+            FilterStage::Clamp(-1.0, 1.0),
+            FilterStage::Threshold(0.5),
+        ]);
+        let (_, d) = f.apply(&[4], &[2.0, 0.2, -0.7, -3.0]).unwrap();
+        assert_eq!(d, vec![1.0, 0.0, -0.7, -1.0]);
+    }
+
+    #[test]
+    fn stages_compose_in_order() {
+        // magnitude then stride: shapes must thread through correctly
+        let f = Filter::new(vec![FilterStage::Magnitude, FilterStage::Stride(2)]);
+        let data: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let (s, d) = f.apply(&[2, 4], &data).unwrap();
+        assert_eq!(s, vec![2]);
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let f = Filter::passthrough();
+        assert!(f.apply(&[3], &[1.0, 2.0]).is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! Process-group → endpoint mapping (the paper's Fig 1).
+//!
+//! Ranks are divided into contiguous groups of `group_size`; group `g`
+//! registers with endpoint `g % n_endpoints`.  The modulo lets users run
+//! fewer endpoints than groups (several groups share an endpoint) or
+//! exactly one per group (the paper's 16:1 ratio).
+
+use anyhow::{ensure, Result};
+
+/// Immutable rank/group/endpoint topology.
+#[derive(Clone, Debug)]
+pub struct GroupMap {
+    total_ranks: usize,
+    group_size: usize,
+    n_endpoints: usize,
+}
+
+impl GroupMap {
+    pub fn new(total_ranks: usize, group_size: usize, n_endpoints: usize) -> Result<Self> {
+        ensure!(total_ranks > 0, "total_ranks must be > 0");
+        ensure!(group_size > 0, "group_size must be > 0");
+        ensure!(n_endpoints > 0, "need at least one endpoint");
+        Ok(GroupMap {
+            total_ranks,
+            group_size,
+            n_endpoints,
+        })
+    }
+
+    pub fn total_ranks(&self) -> usize {
+        self.total_ranks
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+
+    /// Number of groups (last one may be partial).
+    pub fn n_groups(&self) -> usize {
+        (self.total_ranks + self.group_size - 1) / self.group_size
+    }
+
+    /// Group of a rank (the paper's `group_id`).
+    pub fn group_of_rank(&self, rank: usize) -> Result<usize> {
+        ensure!(
+            rank < self.total_ranks,
+            "rank {rank} out of range 0..{}",
+            self.total_ranks
+        );
+        Ok(rank / self.group_size)
+    }
+
+    /// Endpoint index a rank writes to.
+    pub fn endpoint_of_rank(&self, rank: usize) -> Result<usize> {
+        Ok(self.group_of_rank(rank)? % self.n_endpoints)
+    }
+
+    /// All ranks of a group.
+    pub fn ranks_of_group(&self, group: usize) -> Vec<usize> {
+        let lo = group * self.group_size;
+        let hi = ((group + 1) * self.group_size).min(self.total_ranks);
+        (lo..hi).collect()
+    }
+
+    /// All stream keys an endpoint will receive for a field (used by the
+    /// Cloud side to subscribe to exactly its share of the streams).
+    pub fn streams_of_endpoint(&self, endpoint: usize, field: &str) -> Vec<String> {
+        (0..self.total_ranks)
+            .filter(|&r| self.endpoint_of_rank(r).unwrap() == endpoint)
+            .map(|r| crate::record::stream_key(field, r as u32))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, Gen, U64Range};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_topology_16_to_1() {
+        // 32 ranks, groups of 16, 2 endpoints (the paper's Fig 1 shape).
+        let g = GroupMap::new(32, 16, 2).unwrap();
+        assert_eq!(g.n_groups(), 2);
+        for r in 0..16 {
+            assert_eq!(g.endpoint_of_rank(r).unwrap(), 0);
+        }
+        for r in 16..32 {
+            assert_eq!(g.endpoint_of_rank(r).unwrap(), 1);
+        }
+    }
+
+    #[test]
+    fn groups_share_endpoints_when_fewer() {
+        let g = GroupMap::new(64, 16, 2).unwrap();
+        assert_eq!(g.n_groups(), 4);
+        assert_eq!(g.endpoint_of_rank(0).unwrap(), 0);
+        assert_eq!(g.endpoint_of_rank(16).unwrap(), 1);
+        assert_eq!(g.endpoint_of_rank(32).unwrap(), 0);
+        assert_eq!(g.endpoint_of_rank(48).unwrap(), 1);
+    }
+
+    #[test]
+    fn partial_last_group() {
+        let g = GroupMap::new(10, 4, 3).unwrap();
+        assert_eq!(g.n_groups(), 3);
+        assert_eq!(g.ranks_of_group(2), vec![8, 9]);
+    }
+
+    #[test]
+    fn out_of_range_rank_rejected() {
+        let g = GroupMap::new(8, 4, 1).unwrap();
+        assert!(g.group_of_rank(8).is_err());
+        assert!(g.endpoint_of_rank(100).is_err());
+    }
+
+    #[test]
+    fn degenerate_configs_rejected() {
+        assert!(GroupMap::new(0, 4, 1).is_err());
+        assert!(GroupMap::new(4, 0, 1).is_err());
+        assert!(GroupMap::new(4, 4, 0).is_err());
+    }
+
+    #[test]
+    fn streams_of_endpoint_lists_exactly_its_ranks() {
+        let g = GroupMap::new(8, 4, 2).unwrap();
+        assert_eq!(
+            g.streams_of_endpoint(0, "u"),
+            vec!["u/0", "u/1", "u/2", "u/3"]
+        );
+        assert_eq!(
+            g.streams_of_endpoint(1, "u"),
+            vec!["u/4", "u/5", "u/6", "u/7"]
+        );
+    }
+
+    /// Properties from DESIGN.md §7: every rank maps to exactly one
+    /// endpoint; groups partition the rank set; endpoint load is
+    /// balanced to within one group; the union of per-endpoint stream
+    /// sets covers every rank exactly once.
+    #[test]
+    fn prop_mapping_invariants() {
+        struct Topo;
+        impl Gen for Topo {
+            type Value = (u64, u64, u64);
+            fn generate(&self, rng: &mut Rng) -> Self::Value {
+                (
+                    1 + rng.next_below(200),
+                    1 + rng.next_below(32),
+                    1 + rng.next_below(8),
+                )
+            }
+        }
+        prop::forall(0xF16, 300, &Topo, |&(ranks, gsize, neps)| {
+            let g = GroupMap::new(ranks as usize, gsize as usize, neps as usize)
+                .map_err(|e| e.to_string())?;
+            // partition: every rank in exactly one group, contiguous
+            let mut seen = vec![false; ranks as usize];
+            for grp in 0..g.n_groups() {
+                for r in g.ranks_of_group(grp) {
+                    if seen[r] {
+                        return Err(format!("rank {r} in two groups"));
+                    }
+                    seen[r] = true;
+                    if g.group_of_rank(r).unwrap() != grp {
+                        return Err(format!("rank {r} group mismatch"));
+                    }
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err("uncovered rank".into());
+            }
+            // endpoint load balance: counts differ by at most one group
+            let mut load = vec![0usize; neps as usize];
+            for r in 0..ranks as usize {
+                load[g.endpoint_of_rank(r).unwrap()] += 1;
+            }
+            let max = *load.iter().max().unwrap();
+            let min = *load.iter().min().unwrap();
+            if max - min > gsize as usize {
+                return Err(format!("imbalance {max}-{min} > group size {gsize}"));
+            }
+            // stream cover: union over endpoints = all ranks, disjoint
+            let mut covered = vec![false; ranks as usize];
+            for e in 0..neps as usize {
+                for key in g.streams_of_endpoint(e, "u") {
+                    let (_, r) = crate::record::parse_stream_key(&key).unwrap();
+                    if covered[r as usize] {
+                        return Err(format!("rank {r} streamed to two endpoints"));
+                    }
+                    covered[r as usize] = true;
+                }
+            }
+            if !covered.iter().all(|&c| c) {
+                return Err("rank missing from endpoint streams".into());
+            }
+            Ok(())
+        });
+        let _ = U64Range(0, 0); // keep import used
+    }
+}

@@ -1,0 +1,398 @@
+//! The ElasticBroker HPC-side library (the paper's §3.1 contribution).
+//!
+//! Mirrors the paper's C/C++ API (Listing 1.1):
+//!
+//! ```text
+//! broker_ctx* broker_init(char* field_name, int group_id);
+//! broker_write(broker_ctx*, int step, void* data, size_t len);
+//! broker_finalize(broker_ctx*);
+//! ```
+//!
+//! as [`Broker::init`] → [`BrokerCtx::write`] → [`BrokerCtx::finalize`].
+//!
+//! Key properties reproduced from the paper:
+//!
+//! * **Process groups** ([`groups`]): ranks are divided into groups;
+//!   every rank in a group registers with the group's designated Cloud
+//!   endpoint (Fig 1), so endpoint fan-in is bounded and bandwidth can
+//!   be provisioned per group.
+//! * **Asynchronous writes** (the Fig 6 result): `write` transforms the
+//!   field into a stream record and enqueues it on a bounded in-memory
+//!   queue, returning to the simulation immediately; a background
+//!   writer thread ships records to the endpoint.  Queue-full policy is
+//!   configurable: `Block` (backpressure, no loss — default) or
+//!   `DropOldest` (bounded staleness, lossy).
+//! * **Filtering / aggregation / format conversion** ([`filter`]):
+//!   optional per-context stages applied before serialization.
+
+pub mod filter;
+pub mod groups;
+mod queue;
+
+pub use filter::{Filter, FilterStage};
+pub use groups::GroupMap;
+pub use queue::{BoundedQueue, QueuePolicy};
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::WorkflowMetrics;
+use crate::record::StreamRecord;
+use crate::transport::{ConnConfig, RespConn};
+use crate::util;
+
+/// Broker-wide configuration shared by all contexts of a process.
+#[derive(Clone, Debug)]
+pub struct BrokerConfig {
+    /// Cloud endpoints, one per process group (paper Fig 1).
+    pub endpoints: Vec<SocketAddr>,
+    /// Ranks per group (paper default 16).
+    pub group_size: usize,
+    /// Bounded queue capacity per context (records).
+    pub queue_cap: usize,
+    /// Queue-full policy.
+    pub policy: QueuePolicy,
+    /// Transport settings (reconnect, optional WAN throttle).
+    pub conn: ConnConfig,
+    /// Optional data-reduction pipeline applied in `write`.
+    pub filter: Filter,
+}
+
+impl BrokerConfig {
+    pub fn new(endpoints: Vec<SocketAddr>) -> Self {
+        BrokerConfig {
+            endpoints,
+            group_size: 16,
+            queue_cap: 64,
+            policy: QueuePolicy::Block,
+            conn: ConnConfig::default(),
+            filter: Filter::passthrough(),
+        }
+    }
+}
+
+/// Factory for per-(rank, field) contexts.
+pub struct Broker {
+    cfg: BrokerConfig,
+    groups: GroupMap,
+    metrics: WorkflowMetrics,
+}
+
+impl Broker {
+    pub fn new(cfg: BrokerConfig, total_ranks: usize, metrics: WorkflowMetrics) -> Result<Self> {
+        let groups = GroupMap::new(total_ranks, cfg.group_size, cfg.endpoints.len())?;
+        Ok(Broker {
+            cfg,
+            groups,
+            metrics,
+        })
+    }
+
+    pub fn groups(&self) -> &GroupMap {
+        &self.groups
+    }
+
+    /// `broker_init`: register `field` for `rank`, connect to the
+    /// group's endpoint and start the background writer.
+    pub fn init(&self, field: &str, rank: u32) -> Result<BrokerCtx> {
+        self.init_filtered(field, rank, self.cfg.filter.clone())
+    }
+
+    /// `broker_init` with a per-field reduction pipeline (e.g. stream a
+    /// strided or magnitude-aggregated view of one field while another
+    /// ships raw).
+    pub fn init_filtered(&self, field: &str, rank: u32, filter: Filter) -> Result<BrokerCtx> {
+        let endpoint_idx = self.groups.endpoint_of_rank(rank as usize)?;
+        let addr = self.cfg.endpoints[endpoint_idx];
+        let queue = Arc::new(BoundedQueue::new(self.cfg.queue_cap, self.cfg.policy));
+        let key = crate::record::stream_key(field, rank);
+        let conn_cfg = self.cfg.conn.clone();
+        let metrics = self.metrics.clone();
+        let wq = queue.clone();
+        let wkey = key.clone();
+        let writer = std::thread::Builder::new()
+            .name(format!("broker-writer-{key}"))
+            .spawn(move || {
+                let res = writer_loop(addr, conn_cfg, &wq, wkey, metrics);
+                if res.is_err() {
+                    // A dead writer must never leave the producer blocked
+                    // on a full queue: close it so pushes become drops.
+                    wq.close();
+                }
+                res
+            })?;
+        log::debug!("broker: rank {rank} field '{field}' registered with endpoint {addr}");
+        Ok(BrokerCtx {
+            field: field.to_string(),
+            rank,
+            queue,
+            writer: Some(writer),
+            filter,
+            metrics: self.metrics.clone(),
+        })
+    }
+}
+
+/// A registered (field, rank) write context — the paper's `broker_ctx`.
+pub struct BrokerCtx {
+    field: String,
+    rank: u32,
+    queue: Arc<BoundedQueue<StreamRecord>>,
+    writer: Option<std::thread::JoinHandle<Result<()>>>,
+    filter: Filter,
+    metrics: WorkflowMetrics,
+}
+
+impl BrokerCtx {
+    /// `broker_write`: transform the in-memory field into a stream
+    /// record and enqueue it.  Returns as soon as the record is queued
+    /// (the paper's asynchronous-write property); blocks only when the
+    /// queue is full under `QueuePolicy::Block`.
+    pub fn write(&self, step: u64, shape: &[u32], data: &[f32]) -> Result<()> {
+        let t0 = Instant::now();
+        let (shape, reduced) = self.filter.apply(shape, data)?;
+        let record = StreamRecord::from_f32(
+            &self.field,
+            self.rank,
+            step,
+            util::epoch_micros(),
+            &shape,
+            &reduced,
+        )?;
+        let dropped = self.queue.push(record);
+        if dropped > 0 {
+            self.metrics.dropped.add(dropped as u64);
+        }
+        self.metrics
+            .write_call_us
+            .record(t0.elapsed().as_micros() as u64);
+        Ok(())
+    }
+
+    /// `broker_finalize`: flush the queue, stop and join the writer.
+    pub fn finalize(mut self) -> Result<()> {
+        self.queue.close();
+        if let Some(h) = self.writer.take() {
+            match h.join() {
+                Ok(res) => res.with_context(|| {
+                    format!("broker writer for {}/{} failed", self.field, self.rank)
+                })?,
+                Err(_) => anyhow::bail!("broker writer panicked"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Records currently waiting in the queue (diagnostics).
+    pub fn backlog(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn stream_key(&self) -> String {
+        crate::record::stream_key(&self.field, self.rank)
+    }
+}
+
+impl Drop for BrokerCtx {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Background writer: pop records, serialize, XADD to the endpoint.
+///
+/// An `OOM` reply (endpoint over its memory budget) is retried with
+/// backoff — that is exactly how backpressure propagates upstream: the
+/// writer stalls, the bounded queue fills, and `broker_write` blocks
+/// (Block) or sheds old snapshots (DropOldest).  Retrying is bounded so
+/// a permanently wedged endpoint surfaces as an error, not a livelock.
+fn writer_loop(
+    addr: SocketAddr,
+    conn_cfg: ConnConfig,
+    queue: &BoundedQueue<StreamRecord>,
+    key: String,
+    metrics: WorkflowMetrics,
+) -> Result<()> {
+    const OOM_RETRY_EVERY: std::time::Duration = std::time::Duration::from_millis(25);
+    const OOM_RETRY_LIMIT: u32 = 1200; // 30 s of patience
+
+    let mut conn = RespConn::connect(addr, conn_cfg)?;
+    while let Some(record) = queue.pop() {
+        let payload = record.encode();
+        let n = payload.len();
+        let mut oom_attempts = 0u32;
+        loop {
+            let reply = conn.request(&[b"XADD", key.as_bytes(), b"*", b"r", &payload])?;
+            if !reply.is_error() {
+                break;
+            }
+            let msg = reply.as_str_lossy();
+            anyhow::ensure!(msg.starts_with("OOM"), "endpoint rejected XADD: {msg}");
+            oom_attempts += 1;
+            anyhow::ensure!(
+                oom_attempts <= OOM_RETRY_LIMIT,
+                "endpoint {addr} OOM for more than {:?}",
+                OOM_RETRY_EVERY * OOM_RETRY_LIMIT
+            );
+            if oom_attempts == 1 {
+                log::warn!("broker: endpoint {addr} OOM; backing off");
+            }
+            std::thread::sleep(OOM_RETRY_EVERY);
+        }
+        metrics.shipped.record(n as u64);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::endpoint::{EndpointServer, StoreConfig};
+
+    fn setup() -> (EndpointServer, Broker) {
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        let cfg = BrokerConfig {
+            group_size: 4,
+            ..BrokerConfig::new(vec![srv.addr()])
+        };
+        let broker = Broker::new(cfg, 4, WorkflowMetrics::new()).unwrap();
+        (srv, broker)
+    }
+
+    #[test]
+    fn write_lands_in_endpoint_stream() {
+        let (srv, broker) = setup();
+        let ctx = broker.init("velocity", 2).unwrap();
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        for step in 0..5 {
+            ctx.write(step, &[2, 32], &data).unwrap();
+        }
+        ctx.finalize().unwrap();
+        // all records shipped and decodable
+        let store = srv.store();
+        assert_eq!(store.xlen("velocity/2"), 5);
+        let entries = store.read_after("velocity/2", crate::endpoint::EntryId::ZERO, 0);
+        let rec = StreamRecord::decode(&entries[0].fields[0].1).unwrap();
+        assert_eq!(rec.field, "velocity");
+        assert_eq!(rec.rank, 2);
+        assert_eq!(rec.step, 0);
+        assert_eq!(rec.payload_f32().unwrap(), data);
+    }
+
+    #[test]
+    fn finalize_flushes_backlog() {
+        let (srv, broker) = setup();
+        let ctx = broker.init("u", 0).unwrap();
+        let data = vec![1.0f32; 256];
+        for step in 0..50 {
+            ctx.write(step, &[256], &data).unwrap();
+        }
+        ctx.finalize().unwrap(); // must not lose queued records
+        assert_eq!(srv.store().xlen("u/0"), 50);
+    }
+
+    #[test]
+    fn write_returns_before_ship_completes() {
+        // The asynchronous-write property: with a slow (throttled) link,
+        // write() must still return quickly.
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        let cfg = BrokerConfig {
+            group_size: 1,
+            queue_cap: 128,
+            conn: ConnConfig {
+                throttle_bytes_per_sec: Some(200_000.0),
+                ..Default::default()
+            },
+            ..BrokerConfig::new(vec![srv.addr()])
+        };
+        let metrics = WorkflowMetrics::new();
+        let broker = Broker::new(cfg, 1, metrics.clone()).unwrap();
+        let ctx = broker.init("u", 0).unwrap();
+        let data = vec![0.5f32; 16 * 1024]; // 64 KiB per record
+        let t0 = Instant::now();
+        for step in 0..8 {
+            ctx.write(step, &[16 * 1024], &data).unwrap();
+        }
+        let call_time = t0.elapsed();
+        // 8 × 64 KiB at 200 KB/s would take ~2.5 s synchronously.
+        assert!(
+            call_time.as_millis() < 500,
+            "writes not asynchronous: {call_time:?}"
+        );
+        assert!(ctx.backlog() > 0, "expected queued records");
+        ctx.finalize().unwrap();
+        assert_eq!(srv.store().xlen("u/0"), 8);
+        assert!(metrics.write_call_us.count() == 8);
+    }
+
+    #[test]
+    fn drop_oldest_policy_sheds_load() {
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        let cfg = BrokerConfig {
+            group_size: 1,
+            queue_cap: 4,
+            policy: QueuePolicy::DropOldest,
+            conn: ConnConfig {
+                throttle_bytes_per_sec: Some(50_000.0),
+                ..Default::default()
+            },
+            ..BrokerConfig::new(vec![srv.addr()])
+        };
+        let metrics = WorkflowMetrics::new();
+        let broker = Broker::new(cfg, 1, metrics.clone()).unwrap();
+        let ctx = broker.init("u", 0).unwrap();
+        let data = vec![0.5f32; 8 * 1024];
+        for step in 0..40 {
+            ctx.write(step, &[8 * 1024], &data).unwrap();
+        }
+        ctx.finalize().unwrap();
+        let landed = srv.store().xlen("u/0");
+        let dropped = metrics.dropped.get() as usize;
+        assert_eq!(landed + dropped, 40, "landed {landed} + dropped {dropped}");
+        assert!(dropped > 0, "expected drops under a 4-deep queue");
+    }
+
+    #[test]
+    fn multiple_ranks_one_endpoint() {
+        let (srv, broker) = setup();
+        let ctxs: Vec<_> = (0..4).map(|r| broker.init("velocity", r).unwrap()).collect();
+        let data = vec![1.0f32; 32];
+        for ctx in &ctxs {
+            ctx.write(7, &[32], &data).unwrap();
+        }
+        for ctx in ctxs {
+            ctx.finalize().unwrap();
+        }
+        for r in 0..4 {
+            assert_eq!(srv.store().xlen(&format!("velocity/{r}")), 1);
+        }
+    }
+
+    #[test]
+    fn rank_out_of_range_rejected() {
+        let (_srv, broker) = setup();
+        assert!(broker.init("u", 99).is_err());
+    }
+
+    #[test]
+    fn filtered_write_reduces_payload() {
+        let (srv, broker) = setup();
+        let ctx_filtered = broker
+            .init_filtered("u", 0, Filter::new(vec![FilterStage::Stride(4)]))
+            .unwrap();
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        ctx_filtered.write(0, &[64], &data).unwrap();
+        ctx_filtered.finalize().unwrap();
+        let entries = srv
+            .store()
+            .read_after("u/0", crate::endpoint::EntryId::ZERO, 0);
+        let rec = StreamRecord::decode(&entries[0].fields[0].1).unwrap();
+        assert_eq!(rec.payload_f32().unwrap().len(), 16);
+    }
+}

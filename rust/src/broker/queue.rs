@@ -1,0 +1,217 @@
+//! Bounded MPSC queue with selectable full-queue policy — the heart of
+//! the broker's asynchronous write path.
+//!
+//! `std::sync::mpsc::SyncSender` only supports blocking; the paper's
+//! design discussion (and the Fig 6/7 trade-off) needs both *Block*
+//! (lossless backpressure into the simulation) and *DropOldest* (bound
+//! the staleness of what the Cloud sees, lose old snapshots first), so
+//! this is a small Mutex+Condvar ring with both policies.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// What `push` does when the queue is at capacity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// Block the producer until space frees up (lossless).
+    Block,
+    /// Evict the oldest queued item (lossy, bounded staleness).
+    DropOldest,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded queue shared between one producer (the simulation thread)
+/// and one consumer (the broker writer thread).  Multi-producer safe.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+    policy: QueuePolicy,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize, policy: QueuePolicy) -> Self {
+        assert!(cap > 0, "queue capacity must be > 0");
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(cap),
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap,
+            policy,
+        }
+    }
+
+    /// Push an item; returns the number of items dropped (0 or 1).
+    /// Pushing to a closed queue silently drops the item (returns 1).
+    pub fn push(&self, item: T) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return 1;
+        }
+        let mut dropped = 0;
+        match self.policy {
+            QueuePolicy::Block => {
+                while g.items.len() >= self.cap && !g.closed {
+                    g = self.not_full.wait(g).unwrap();
+                }
+                if g.closed {
+                    return 1;
+                }
+            }
+            QueuePolicy::DropOldest => {
+                if g.items.len() >= self.cap {
+                    g.items.pop_front();
+                    dropped = 1;
+                }
+            }
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        dropped
+    }
+
+    /// Pop the next item, blocking; `None` once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue: producers stop, consumer drains what remains.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(8, QueuePolicy::Block);
+        for i in 0..5 {
+            assert_eq!(q.push(i), 0);
+        }
+        q.close();
+        let mut got = Vec::new();
+        while let Some(v) = q.pop() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn block_policy_applies_backpressure() {
+        let q = Arc::new(BoundedQueue::new(2, QueuePolicy::Block));
+        q.push(1);
+        q.push(2);
+        let q2 = q.clone();
+        let t0 = Instant::now();
+        let h = std::thread::spawn(move || {
+            q2.push(3); // must block until a pop
+            t0.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(q.pop(), Some(1));
+        let blocked_for = h.join().unwrap();
+        assert!(
+            blocked_for >= Duration::from_millis(80),
+            "producer did not block: {blocked_for:?}"
+        );
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn drop_oldest_policy_keeps_newest() {
+        let q = BoundedQueue::new(3, QueuePolicy::DropOldest);
+        let mut dropped = 0;
+        for i in 0..10 {
+            dropped += q.push(i);
+        }
+        assert_eq!(dropped, 7);
+        q.close();
+        let mut got = Vec::new();
+        while let Some(v) = q.pop() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn close_unblocks_producer_and_consumer() {
+        let q = Arc::new(BoundedQueue::<u32>::new(1, QueuePolicy::Block));
+        q.push(1);
+        let qp = q.clone();
+        let producer = std::thread::spawn(move || qp.push(2)); // blocks
+        let qc = q.clone();
+        std::thread::sleep(Duration::from_millis(50));
+        q.close();
+        assert_eq!(producer.join().unwrap(), 1); // dropped at close
+        // consumer drains then sees None
+        assert_eq!(qc.pop(), Some(1));
+        assert_eq!(qc.pop(), None);
+    }
+
+    #[test]
+    fn push_after_close_is_dropped() {
+        let q = BoundedQueue::new(4, QueuePolicy::Block);
+        q.push(1);
+        q.close();
+        assert_eq!(q.push(2), 1);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn stress_producer_consumer_lossless() {
+        let q = Arc::new(BoundedQueue::new(16, QueuePolicy::Block));
+        let n = 20_000u64;
+        let qp = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                qp.push(i);
+            }
+            qp.close();
+        });
+        let mut expected = 0u64;
+        while let Some(v) = q.pop() {
+            assert_eq!(v, expected);
+            expected += 1;
+        }
+        assert_eq!(expected, n);
+        producer.join().unwrap();
+    }
+}

@@ -1,0 +1,245 @@
+//! Command-line interface (hand-rolled; no clap in the offline set).
+//!
+//! Subcommands mirror the deployment units of the paper's Fig 2 so the
+//! system can run split across processes exactly like HPC + Cloud:
+//!
+//! ```text
+//! elasticbroker info
+//! elasticbroker endpoint  --bind 0.0.0.0:6379
+//! elasticbroker sim       --endpoints host:6379[,host:6380] [--ranks 16] ...
+//! elasticbroker analysis  --endpoints host:6379 --ranks 16 [--field velocity]
+//! elasticbroker synth     --endpoints host:6379 --ranks 16 ...
+//! elasticbroker workflow  [--config wf.toml] [--io-mode broker] ...
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+/// Parsed `--key value` flags + positional args.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+/// Flags that never take a value.
+const BOOLEAN_FLAGS: &[&str] = &["no-pjrt", "help", "verbose", "dmd-per-batch"];
+
+impl Args {
+    /// Parse from raw argv (not including the subcommand itself).
+    pub fn parse(raw: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if BOOLEAN_FLAGS.contains(&name) {
+                    out.bools.push(name.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.bools.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+
+    /// Comma-separated socket addresses.
+    pub fn get_addrs(&self, key: &str) -> Result<Option<Vec<std::net::SocketAddr>>> {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let mut out = Vec::new();
+                for part in v.split(',') {
+                    out.push(
+                        part.trim()
+                            .parse()
+                            .with_context(|| format!("--{key}: bad address '{part}'"))?,
+                    );
+                }
+                Ok(Some(out))
+            }
+        }
+    }
+}
+
+/// Apply CLI overrides on top of a [`crate::config::WorkflowConfig`].
+pub fn apply_overrides(
+    cfg: &mut crate::config::WorkflowConfig,
+    args: &Args,
+) -> Result<()> {
+    if let Some(v) = args.get_parsed::<usize>("ranks")? {
+        cfg.ranks = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("height")? {
+        cfg.height = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("width")? {
+        cfg.width = v;
+    }
+    if let Some(v) = args.get_parsed::<u64>("steps")? {
+        cfg.steps = v;
+    }
+    if let Some(v) = args.get_parsed::<u64>("write-interval")? {
+        cfg.write_interval = v;
+    }
+    if let Some(v) = args.get("io-mode") {
+        cfg.io_mode = crate::config::IoMode::parse(v)?;
+    }
+    if let Some(v) = args.get("out-dir") {
+        cfg.out_dir = v.to_string();
+    }
+    if args.has_flag("no-pjrt") {
+        cfg.use_pjrt = false;
+    }
+    if let Some(v) = args.get_parsed::<u64>("pfs-commit-ms")? {
+        cfg.pfs_commit_ms = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("group-size")? {
+        cfg.group_size = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("executors")? {
+        cfg.executors = v;
+    }
+    if let Some(v) = args.get_parsed::<u64>("trigger-ms")? {
+        cfg.trigger_ms = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("dmd-window")? {
+        cfg.dmd_window = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("dmd-rank")? {
+        cfg.dmd_rank = v;
+    }
+    if let Some(v) = args.get_parsed::<bool>("dmd-use-pjrt")? {
+        cfg.dmd_use_pjrt = v;
+    }
+    if args.has_flag("dmd-per-batch") {
+        cfg.dmd_per_batch = true;
+    }
+    if let Some(v) = args.get("analysis-csv") {
+        cfg.analysis_csv = v.to_string();
+    }
+    Ok(())
+}
+
+pub const USAGE: &str = "\
+elasticbroker — HPC↔Cloud in-situ workflow system (ElasticBroker reproduction)
+
+USAGE:
+  elasticbroker <subcommand> [flags]
+
+SUBCOMMANDS:
+  info        Show artifact registry and default configuration
+  endpoint    Run a Cloud endpoint (RESP stream store)
+                --bind ADDR          (default 127.0.0.1:6379)
+                --maxlen N           per-stream entry cap
+                --max-memory BYTES   global budget
+  sim         Run the HPC-side CFD simulation against remote endpoints
+                --endpoints A[,B..]  required for --io-mode broker
+                --ranks/--height/--width/--steps/--write-interval
+                --io-mode file|broker|none   --out-dir DIR   --no-pjrt
+  analysis    Run the Cloud-side streaming + DMD service
+                --endpoints A[,B..]  --ranks N  --field NAME
+                --trigger-ms MS --executors N --dmd-window M --dmd-rank R
+                --duration-secs S    how long to serve (default 60)
+                --analysis-csv PATH
+  synth       Run synthetic generators against remote endpoints
+                --endpoints A[,B..]  --ranks N --dim D --records N --rate HZ
+  workflow    Run the whole paper workflow in one process
+                --config FILE (TOML)  plus any sim/analysis flag above
+
+ENVIRONMENT:
+  ELASTICBROKER_ARTIFACTS  artifact dir (default ./artifacts)
+  ELASTICBROKER_LOG        error|warn|info|debug|trace
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_values_and_bools() {
+        let a = Args::parse(&argv(&[
+            "--ranks", "32", "--io-mode=file", "--no-pjrt", "pos1",
+        ]))
+        .unwrap();
+        assert_eq!(a.get("ranks"), Some("32"));
+        assert_eq!(a.get("io-mode"), Some("file"));
+        assert!(a.has_flag("no-pjrt"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.get_parsed::<usize>("ranks").unwrap(), Some(32));
+    }
+
+    #[test]
+    fn bad_numeric_flag_is_error() {
+        let a = Args::parse(&argv(&["--ranks", "many"])).unwrap();
+        assert!(a.get_parsed::<usize>("ranks").is_err());
+    }
+
+    #[test]
+    fn parses_address_lists() {
+        let a = Args::parse(&argv(&["--endpoints", "127.0.0.1:6379,127.0.0.1:6380"])).unwrap();
+        let addrs = a.get_addrs("endpoints").unwrap().unwrap();
+        assert_eq!(addrs.len(), 2);
+        assert_eq!(addrs[1].port(), 6380);
+        let bad = Args::parse(&argv(&["--endpoints", "nonsense"])).unwrap();
+        assert!(bad.get_addrs("endpoints").is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = crate::config::WorkflowConfig::default();
+        let a = Args::parse(&argv(&[
+            "--ranks",
+            "8",
+            "--steps",
+            "100",
+            "--io-mode",
+            "none",
+            "--trigger-ms",
+            "500",
+            "--no-pjrt",
+        ]))
+        .unwrap();
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert_eq!(cfg.ranks, 8);
+        assert_eq!(cfg.steps, 100);
+        assert_eq!(cfg.io_mode, crate::config::IoMode::None);
+        assert_eq!(cfg.trigger_ms, 500);
+        assert!(!cfg.use_pjrt);
+    }
+}

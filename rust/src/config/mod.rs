@@ -1,0 +1,303 @@
+//! Configuration: a TOML-subset parser plus the typed experiment config.
+//!
+//! No serde in the offline crate set, so we parse a pragmatic subset of
+//! TOML ourselves: `[section.subsection]` headers, `key = value` lines,
+//! strings / integers / floats / booleans / flat arrays, `#` comments.
+//! This covers everything the launcher and the bench harnesses need.
+
+mod toml;
+
+pub use toml::{parse, ConfigMap, TomlValue};
+
+use anyhow::{Context, Result};
+
+/// How the simulation emits its per-interval output (paper §4.2 modes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoMode {
+    /// Write snapshots to files ("collated" per-step files, like the
+    /// paper's Lustre runs).
+    File,
+    /// Ship snapshots through the ElasticBroker pipeline.
+    Broker,
+    /// Discard output (the paper's "simulation-only" baseline).
+    None,
+}
+
+impl IoMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "file" => Ok(IoMode::File),
+            "broker" => Ok(IoMode::Broker),
+            "none" | "simulation-only" => Ok(IoMode::None),
+            other => anyhow::bail!("unknown io mode '{other}' (file|broker|none)"),
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            IoMode::File => "file",
+            IoMode::Broker => "broker",
+            IoMode::None => "none",
+        }
+    }
+}
+
+/// Full-workflow configuration (defaults reproduce the paper's §4.2
+/// 16-rank WindAroundBuildings experiment, scaled to one host).
+#[derive(Clone, Debug)]
+pub struct WorkflowConfig {
+    // --- simulation (HPC side) ---
+    /// Number of MPI-style simulation ranks.
+    pub ranks: usize,
+    /// Global lattice height (decomposed across ranks along this axis).
+    pub height: usize,
+    /// Global lattice width.
+    pub width: usize,
+    /// Total simulation timesteps.
+    pub steps: u64,
+    /// Emit output every `write_interval` steps.
+    pub write_interval: u64,
+    /// Output mode.
+    pub io_mode: IoMode,
+    /// Directory for file-mode output.
+    pub out_dir: String,
+    /// Use the PJRT artifacts (true) or the pure-Rust fallback solver.
+    pub use_pjrt: bool,
+    /// Modeled parallel-filesystem commit latency (ms) per collated
+    /// step in file mode (see `sim::SimConfig::pfs_commit_ms`).
+    pub pfs_commit_ms: u64,
+
+    // --- broker ---
+    /// Ranks per process group (one group per endpoint; paper ratio 16:1).
+    pub group_size: usize,
+    /// Per-context bounded queue capacity (records).
+    pub queue_cap: usize,
+    /// Drop-oldest instead of blocking when a queue is full.
+    pub drop_oldest: bool,
+
+    // --- cloud side ---
+    /// Number of endpoints (None → ranks / group_size).
+    pub endpoints: Option<usize>,
+    /// Number of stream-processing executors (paper ratio: = ranks).
+    pub executors: usize,
+    /// Micro-batch trigger interval, milliseconds (paper: 3000).
+    pub trigger_ms: u64,
+    /// DMD window length m (snapshots per analysis; artifact uses m+1).
+    pub dmd_window: usize,
+    /// DMD truncation rank.
+    pub dmd_rank: usize,
+    /// Run the DMD reduction through the PJRT artifact (true) or the
+    /// pure-Rust mirror (false).  On CPU-only PJRT the per-dispatch
+    /// overhead can dominate small windows — see EXPERIMENTS.md §Perf.
+    pub dmd_use_pjrt: bool,
+    /// Analyse once per micro-batch per stream (the paper's per-trigger
+    /// cadence) instead of once per snapshot.
+    pub dmd_per_batch: bool,
+    /// CSV output path for analysis results ("" → none).
+    pub analysis_csv: String,
+}
+
+impl Default for WorkflowConfig {
+    fn default() -> Self {
+        WorkflowConfig {
+            ranks: 16,
+            height: 256,
+            width: 128,
+            steps: 2000,
+            write_interval: 5,
+            io_mode: IoMode::Broker,
+            out_dir: "sim_out".into(),
+            use_pjrt: true,
+            pfs_commit_ms: 25,
+            group_size: 16,
+            queue_cap: 64,
+            drop_oldest: false,
+            endpoints: None,
+            executors: 16,
+            trigger_ms: 3000,
+            dmd_window: 8,
+            dmd_rank: 6,
+            dmd_use_pjrt: true,
+            dmd_per_batch: false,
+            analysis_csv: String::new(),
+        }
+    }
+}
+
+impl WorkflowConfig {
+    /// Effective endpoint count (paper ratio ranks:endpoints = 16:1).
+    pub fn endpoint_count(&self) -> usize {
+        self.endpoints
+            .unwrap_or_else(|| (self.ranks + self.group_size - 1) / self.group_size)
+            .max(1)
+    }
+
+    /// Rows per rank (the Z-axis decomposition of §4.1).
+    pub fn rows_per_rank(&self) -> Result<usize> {
+        anyhow::ensure!(
+            self.height % self.ranks == 0,
+            "height {} not divisible by ranks {}",
+            self.height,
+            self.ranks
+        );
+        Ok(self.height / self.ranks)
+    }
+
+    /// Per-rank snapshot dimension d = rows × width × 2 components.
+    pub fn snapshot_dim(&self) -> Result<usize> {
+        Ok(self.rows_per_rank()? * self.width * 2)
+    }
+
+    /// Load from a TOML-subset file (missing keys keep defaults).
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML-subset text (missing keys keep defaults).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let map = parse(text)?;
+        let mut cfg = WorkflowConfig::default();
+        if let Some(v) = map.get_usize("sim.ranks")? {
+            cfg.ranks = v;
+        }
+        if let Some(v) = map.get_usize("sim.height")? {
+            cfg.height = v;
+        }
+        if let Some(v) = map.get_usize("sim.width")? {
+            cfg.width = v;
+        }
+        if let Some(v) = map.get_u64("sim.steps")? {
+            cfg.steps = v;
+        }
+        if let Some(v) = map.get_u64("sim.write_interval")? {
+            cfg.write_interval = v;
+        }
+        if let Some(v) = map.get_str("sim.io_mode")? {
+            cfg.io_mode = IoMode::parse(&v)?;
+        }
+        if let Some(v) = map.get_str("sim.out_dir")? {
+            cfg.out_dir = v;
+        }
+        if let Some(v) = map.get_bool("sim.use_pjrt")? {
+            cfg.use_pjrt = v;
+        }
+        if let Some(v) = map.get_u64("sim.pfs_commit_ms")? {
+            cfg.pfs_commit_ms = v;
+        }
+        if let Some(v) = map.get_usize("broker.group_size")? {
+            cfg.group_size = v;
+        }
+        if let Some(v) = map.get_usize("broker.queue_cap")? {
+            cfg.queue_cap = v;
+        }
+        if let Some(v) = map.get_bool("broker.drop_oldest")? {
+            cfg.drop_oldest = v;
+        }
+        if let Some(v) = map.get_usize("cloud.endpoints")? {
+            cfg.endpoints = Some(v);
+        }
+        if let Some(v) = map.get_usize("cloud.executors")? {
+            cfg.executors = v;
+        }
+        if let Some(v) = map.get_u64("cloud.trigger_ms")? {
+            cfg.trigger_ms = v;
+        }
+        if let Some(v) = map.get_usize("cloud.dmd_window")? {
+            cfg.dmd_window = v;
+        }
+        if let Some(v) = map.get_usize("cloud.dmd_rank")? {
+            cfg.dmd_rank = v;
+        }
+        if let Some(v) = map.get_bool("cloud.dmd_use_pjrt")? {
+            cfg.dmd_use_pjrt = v;
+        }
+        if let Some(v) = map.get_bool("cloud.dmd_per_batch")? {
+            cfg.dmd_per_batch = v;
+        }
+        if let Some(v) = map.get_str("cloud.analysis_csv")? {
+            cfg.analysis_csv = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check invariants the runtime relies on.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.ranks > 0, "ranks must be > 0");
+        anyhow::ensure!(self.group_size > 0, "group_size must be > 0");
+        anyhow::ensure!(self.executors > 0, "executors must be > 0");
+        anyhow::ensure!(
+            self.dmd_rank <= self.dmd_window,
+            "dmd_rank {} > dmd_window {}",
+            self.dmd_rank,
+            self.dmd_window
+        );
+        self.rows_per_rank()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_experiment() {
+        let c = WorkflowConfig::default();
+        assert_eq!(c.ranks, 16);
+        assert_eq!(c.steps, 2000);
+        assert_eq!(c.trigger_ms, 3000);
+        assert_eq!(c.endpoint_count(), 1); // 16 ranks : 1 endpoint
+        assert_eq!(c.rows_per_rank().unwrap(), 16);
+        assert_eq!(c.snapshot_dim().unwrap(), 16 * 128 * 2);
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let c = WorkflowConfig::from_toml(
+            r#"
+            [sim]
+            ranks = 32
+            height = 256
+            steps = 100
+            io_mode = "file"
+            use_pjrt = false
+
+            [broker]
+            queue_cap = 8
+            drop_oldest = true
+
+            [cloud]
+            executors = 32
+            trigger_ms = 500
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.ranks, 32);
+        assert_eq!(c.io_mode, IoMode::File);
+        assert!(!c.use_pjrt);
+        assert!(c.drop_oldest);
+        assert_eq!(c.executors, 32);
+        assert_eq!(c.endpoint_count(), 2);
+    }
+
+    #[test]
+    fn invalid_decomposition_rejected() {
+        let res = WorkflowConfig::from_toml("[sim]\nranks = 7\n");
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn invalid_rank_window_rejected() {
+        let res = WorkflowConfig::from_toml("[cloud]\ndmd_rank = 12\ndmd_window = 4\n");
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn io_mode_names_roundtrip() {
+        for m in [IoMode::File, IoMode::Broker, IoMode::None] {
+            assert_eq!(IoMode::parse(m.name()).unwrap(), m);
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! A pragmatic TOML-subset parser (see module docs in `config/mod.rs`).
+//!
+//! Supported: `[a.b]` tables, `key = value` with string / integer /
+//! float / boolean / flat array values, `#` comments, blank lines.
+//! Unsupported (rejected loudly rather than misparsed): multi-line
+//! strings, inline tables, arrays-of-tables, datetimes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed scalar or flat array.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+/// Flat `section.key → value` map.
+#[derive(Default, Debug)]
+pub struct ConfigMap {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+impl ConfigMap {
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<Option<String>> {
+        match self.entries.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Str(s)) => Ok(Some(s.clone())),
+            Some(other) => bail!("{key}: expected string, got {other:?}"),
+        }
+    }
+
+    pub fn get_i64(&self, key: &str) -> Result<Option<i64>> {
+        match self.entries.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Int(i)) => Ok(Some(*i)),
+            Some(other) => bail!("{key}: expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        match self.get_i64(key)? {
+            None => Ok(None),
+            Some(i) if i >= 0 => Ok(Some(i as u64)),
+            Some(i) => bail!("{key}: expected non-negative integer, got {i}"),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        Ok(self.get_u64(key)?.map(|v| v as usize))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.entries.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Float(f)) => Ok(Some(*f)),
+            Some(TomlValue::Int(i)) => Ok(Some(*i as f64)),
+            Some(other) => bail!("{key}: expected float, got {other:?}"),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        match self.entries.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Bool(b)) => Ok(Some(*b)),
+            Some(other) => bail!("{key}: expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// Parse TOML-subset text into a flat map.
+pub fn parse(text: &str) -> Result<ConfigMap> {
+    let mut map = ConfigMap::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() || name.starts_with('[') {
+                bail!("line {}: unsupported table syntax '{raw}'", lineno + 1);
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let parsed = parse_scalar(value.trim())
+            .with_context(|| format!("line {}: bad value for {full_key}", lineno + 1))?;
+        map.entries.insert(full_key, parsed);
+    }
+    Ok(map)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must survive.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_scalar(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let body = rest
+            .strip_suffix('"')
+            .context("unterminated string literal")?;
+        // minimal escape handling
+        let body = body.replace("\\\"", "\"").replace("\\\\", "\\");
+        return Ok(TomlValue::Str(body));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        if !body.trim().is_empty() {
+            for part in split_top_level(body) {
+                items.push(parse_scalar(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+/// Split an array body on commas that are not inside strings.
+fn split_top_level(body: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in body.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&body[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let m = parse(
+            r##"
+            top = 1
+            [server]           # trailing comment
+            host = "127.0.0.1" # with a "#" in mind
+            port = 6379
+            ratio = 0.5
+            fast = true
+            tags = ["a", "b"]
+            counts = [1, 2, 3]
+            big = 1_000_000
+            neg = -17
+            "##,
+        )
+        .unwrap();
+        assert_eq!(m.get_i64("top").unwrap(), Some(1));
+        assert_eq!(m.get_str("server.host").unwrap(), Some("127.0.0.1".into()));
+        assert_eq!(m.get_i64("server.port").unwrap(), Some(6379));
+        assert_eq!(m.get_f64("server.ratio").unwrap(), Some(0.5));
+        assert_eq!(m.get_bool("server.fast").unwrap(), Some(true));
+        assert_eq!(m.get_i64("server.big").unwrap(), Some(1_000_000));
+        assert_eq!(m.get_i64("server.neg").unwrap(), Some(-17));
+        match m.get("server.tags").unwrap() {
+            TomlValue::Array(v) => assert_eq!(v.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_survives() {
+        let m = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(m.get_str("s").unwrap(), Some("a#b".into()));
+    }
+
+    #[test]
+    fn type_mismatch_is_error() {
+        let m = parse("x = 5\n").unwrap();
+        assert!(m.get_str("x").is_err());
+        assert!(m.get_bool("x").is_err());
+    }
+
+    #[test]
+    fn negative_u64_is_error() {
+        let m = parse("x = -5\n").unwrap();
+        assert!(m.get_u64("x").is_err());
+    }
+
+    #[test]
+    fn bad_syntax_rejected() {
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("noequals\n").is_err());
+        assert!(parse("x = \n").is_err());
+        assert!(parse("x = \"open\n").is_err());
+        assert!(parse("[[array.of.tables]]\n").is_err());
+    }
+
+    #[test]
+    fn empty_array_ok() {
+        let m = parse("xs = []\n").unwrap();
+        assert_eq!(m.get("xs").unwrap(), &TomlValue::Array(vec![]));
+    }
+
+    #[test]
+    fn later_keys_win() {
+        let m = parse("x = 1\nx = 2\n").unwrap();
+        assert_eq!(m.get_i64("x").unwrap(), Some(2));
+    }
+}

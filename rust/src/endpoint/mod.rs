@@ -1,0 +1,15 @@
+//! The Cloud endpoint: an in-memory stream store behind the RESP wire
+//! protocol — our stand-in for the paper's Redis 5 server instances
+//! (§3.2, Fig 2).  Each endpoint accepts data streams from one HPC
+//! process group and serves polling reads to the stream-processing
+//! executors.
+//!
+//! * [`store`] — the stream data model (`XADD`/`XREAD` semantics,
+//!   per-stream trimming, global memory budget → `OOM` backpressure),
+//! * [`server`] — the TCP RESP2 front-end.
+
+pub mod server;
+pub mod store;
+
+pub use server::EndpointServer;
+pub use store::{Entry, EntryId, Store, StoreConfig};

@@ -1,0 +1,549 @@
+//! The Cloud endpoint server: RESP2 over TCP in front of a [`Store`].
+//!
+//! Mirrors the Redis-5 subset the paper's deployment uses (stream
+//! ingest from the HPC brokers + polling reads from the stream
+//! processing service): `PING`, `ECHO`, `XADD`, `XLEN`, `XREAD`,
+//! `XRANGE`, `KEYS`, `DEL`, `FLUSHALL`, `INFO`, `QUIT`.
+//!
+//! One OS thread per connection (the paper sizes one endpoint per 16
+//! writer processes, so connection counts are small); commands are
+//! dispatched against the shared, internally-locked store.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::store::{EntryId, Store, StoreConfig};
+use crate::wire::{self, Decoder, Value};
+
+/// A running endpoint server (shuts down on drop).
+pub struct EndpointServer {
+    addr: SocketAddr,
+    store: Arc<Store>,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EndpointServer {
+    /// Bind and start serving.  Use port 0 to pick a free port (tests,
+    /// in-process workflows).
+    pub fn start(bind: &str, cfg: StoreConfig) -> Result<EndpointServer> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+        let addr = listener.local_addr()?;
+        let store = Arc::new(Store::new(cfg));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accept_store = store.clone();
+        let accept_shutdown = shutdown.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("endpoint-{}", addr.port()))
+            .spawn(move || accept_loop(listener, accept_store, accept_shutdown))?;
+        log::info!("endpoint: serving RESP on {addr}");
+        Ok(EndpointServer {
+            addr,
+            store,
+            shutdown,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Direct handle to the store (in-process metrics / tests).
+    pub fn store(&self) -> &Arc<Store> {
+        &self.store
+    }
+
+    /// Request shutdown and join the accept thread.
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Unblock accept() with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EndpointServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, store: Arc<Store>, shutdown: Arc<AtomicBool>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let store = store.clone();
+                let shutdown = shutdown.clone();
+                let _ = std::thread::Builder::new()
+                    .name(format!("endpoint-conn-{peer}"))
+                    .spawn(move || {
+                        if let Err(e) = serve_connection(stream, &store, &shutdown) {
+                            log::debug!("endpoint: connection {peer} ended: {e:#}");
+                        }
+                    });
+            }
+            Err(e) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                log::warn!("endpoint: accept error: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    store: &Store,
+    shutdown: &AtomicBool,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(250)))
+        .ok();
+    let mut decoder = Decoder::new();
+    let mut read_buf = [0u8; 64 * 1024];
+    let mut out = Vec::with_capacity(16 * 1024);
+    loop {
+        // Drain complete commands already buffered.
+        loop {
+            match decoder.next() {
+                Ok(Some(cmd)) => {
+                    out.clear();
+                    let quit = dispatch(store, &cmd, &mut out);
+                    stream.write_all(&out)?;
+                    if quit {
+                        return Ok(());
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    out.clear();
+                    wire::encode(&Value::Error(format!("ERR protocol error: {e}")), &mut out);
+                    stream.write_all(&out)?;
+                    return Ok(());
+                }
+            }
+        }
+        match stream.read(&mut read_buf) {
+            Ok(0) => return Ok(()),
+            Ok(n) => decoder.feed(&read_buf[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Execute one command; returns true if the connection should close.
+fn dispatch(store: &Store, cmd: &Value, out: &mut Vec<u8>) -> bool {
+    let reply = match run_command(store, cmd) {
+        Ok(CommandResult::Reply(v)) => v,
+        Ok(CommandResult::Quit) => {
+            wire::encode(&Value::Simple("OK".into()), out);
+            return true;
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            let msg = if msg.starts_with("ERR") || msg.starts_with("OOM") {
+                msg
+            } else {
+                format!("ERR {msg}")
+            };
+            Value::Error(msg)
+        }
+    };
+    wire::encode(&reply, out);
+    false
+}
+
+enum CommandResult {
+    Reply(Value),
+    Quit,
+}
+
+fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
+    use CommandResult::Reply;
+    let parts = cmd
+        .as_array()
+        .context("ERR command must be an array of bulk strings")?;
+    anyhow::ensure!(!parts.is_empty(), "ERR empty command");
+    let name = parts[0]
+        .as_bytes()
+        .context("ERR command name must be a string")?
+        .to_ascii_uppercase();
+    let args = &parts[1..];
+    let s = |v: &Value| -> Result<String> {
+        Ok(String::from_utf8_lossy(v.as_bytes().context("ERR expected string arg")?)
+            .into_owned())
+    };
+
+    match name.as_slice() {
+        b"PING" => Ok(Reply(Value::Simple("PONG".into()))),
+        b"ECHO" => {
+            anyhow::ensure!(args.len() == 1, "ERR wrong number of arguments for 'echo'");
+            Ok(Reply(Value::Bulk(
+                args[0].as_bytes().context("ERR echo arg")?.to_vec(),
+            )))
+        }
+        b"QUIT" => Ok(CommandResult::Quit),
+        b"INFO" => Ok(Reply(Value::Bulk(store.info().into_bytes()))),
+        b"FLUSHALL" => {
+            store.flush_all();
+            Ok(Reply(Value::Simple("OK".into())))
+        }
+        b"KEYS" => {
+            anyhow::ensure!(args.len() == 1, "ERR wrong number of arguments for 'keys'");
+            let pat = s(&args[0])?;
+            Ok(Reply(Value::Array(
+                store
+                    .keys(&pat)
+                    .into_iter()
+                    .map(|k| Value::Bulk(k.into_bytes()))
+                    .collect(),
+            )))
+        }
+        b"DEL" => {
+            let keys: Vec<String> = args.iter().map(&s).collect::<Result<_>>()?;
+            let refs: Vec<&str> = keys.iter().map(|k| k.as_str()).collect();
+            Ok(Reply(Value::Int(store.del(&refs) as i64)))
+        }
+        b"XLEN" => {
+            anyhow::ensure!(args.len() == 1, "ERR wrong number of arguments for 'xlen'");
+            Ok(Reply(Value::Int(store.xlen(&s(&args[0])?) as i64)))
+        }
+        b"XADD" => {
+            anyhow::ensure!(args.len() >= 4, "ERR wrong number of arguments for 'xadd'");
+            let key = s(&args[0])?;
+            let id_s = s(&args[1])?;
+            let id = if id_s == "*" {
+                None
+            } else {
+                Some(EntryId::parse(&id_s).context("ERR invalid stream ID")?)
+            };
+            let rest = &args[2..];
+            anyhow::ensure!(
+                rest.len() % 2 == 0,
+                "ERR wrong number of arguments for 'xadd'"
+            );
+            let mut fields = Vec::with_capacity(rest.len() / 2);
+            for pair in rest.chunks(2) {
+                fields.push((
+                    pair[0].as_bytes().context("ERR field name")?.to_vec(),
+                    pair[1].as_bytes().context("ERR field value")?.to_vec(),
+                ));
+            }
+            let id = store.xadd(&key, id, fields)?;
+            Ok(Reply(Value::Bulk(id.to_string().into_bytes())))
+        }
+        b"XRANGE" => {
+            anyhow::ensure!(args.len() >= 3, "ERR wrong number of arguments for 'xrange'");
+            let key = s(&args[0])?;
+            let start_s = s(&args[1])?;
+            let end_s = s(&args[2])?;
+            let start = if start_s == "-" {
+                EntryId::ZERO
+            } else {
+                EntryId::parse(&start_s).context("ERR invalid start ID")?
+            };
+            let end = if end_s == "+" {
+                EntryId {
+                    ms: u64::MAX,
+                    seq: u64::MAX,
+                }
+            } else {
+                EntryId::parse(&end_s).context("ERR invalid end ID")?
+            };
+            let mut count = 0usize;
+            if args.len() == 5 {
+                anyhow::ensure!(
+                    s(&args[3])?.eq_ignore_ascii_case("count"),
+                    "ERR syntax error"
+                );
+                count = s(&args[4])?.parse().context("ERR value is not an integer")?;
+            }
+            let entries = store.range(&key, start, end, count);
+            Ok(Reply(encode_entries(&entries)))
+        }
+        b"XREAD" => {
+            // XREAD [COUNT n] STREAMS key... id...
+            let mut i = 0usize;
+            let mut count = 0usize;
+            while i < args.len() {
+                let word = s(&args[i])?.to_ascii_uppercase();
+                match word.as_str() {
+                    "COUNT" => {
+                        anyhow::ensure!(i + 1 < args.len(), "ERR syntax error");
+                        count = s(&args[i + 1])?
+                            .parse()
+                            .context("ERR value is not an integer")?;
+                        i += 2;
+                    }
+                    "STREAMS" => {
+                        i += 1;
+                        break;
+                    }
+                    _ => anyhow::bail!("ERR syntax error in XREAD"),
+                }
+            }
+            let rest = &args[i..];
+            anyhow::ensure!(
+                !rest.is_empty() && rest.len() % 2 == 0,
+                "ERR Unbalanced XREAD list of streams"
+            );
+            let nkeys = rest.len() / 2;
+            let mut replies = Vec::new();
+            for k in 0..nkeys {
+                let key = s(&rest[k])?;
+                let id_s = s(&rest[nkeys + k])?;
+                let after = if id_s == "$" {
+                    store.last_id(&key)
+                } else {
+                    EntryId::parse(&id_s).context("ERR invalid stream ID")?
+                };
+                let entries = store.read_after(&key, after, count);
+                if !entries.is_empty() {
+                    replies.push(Value::Array(vec![
+                        Value::Bulk(key.into_bytes()),
+                        encode_entries(&entries),
+                    ]));
+                }
+            }
+            if replies.is_empty() {
+                Ok(Reply(Value::NullArray))
+            } else {
+                Ok(Reply(Value::Array(replies)))
+            }
+        }
+        other => anyhow::bail!(
+            "ERR unknown command '{}'",
+            String::from_utf8_lossy(other)
+        ),
+    }
+}
+
+fn encode_entries(entries: &[super::store::Entry]) -> Value {
+    Value::Array(
+        entries
+            .iter()
+            .map(|e| {
+                let mut fv = Vec::with_capacity(e.fields.len() * 2);
+                for (f, v) in &e.fields {
+                    fv.push(Value::Bulk(f.clone()));
+                    fv.push(Value::Bulk(v.clone()));
+                }
+                Value::Array(vec![
+                    Value::Bulk(e.id.to_string().into_bytes()),
+                    Value::Array(fv),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{ConnConfig, RespConn};
+
+    fn server() -> EndpointServer {
+        EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap()
+    }
+
+    fn conn(srv: &EndpointServer) -> RespConn {
+        RespConn::connect(srv.addr(), ConnConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn ping_echo_info() {
+        let srv = server();
+        let mut c = conn(&srv);
+        c.ping().unwrap();
+        let echo = c.request(&[b"ECHO", b"hello"]).unwrap();
+        assert_eq!(echo, Value::Bulk(b"hello".to_vec()));
+        let info = c.request(&[b"INFO"]).unwrap();
+        assert!(info.as_str_lossy().contains("elasticbroker-endpoint"));
+    }
+
+    #[test]
+    fn xadd_xlen_xread_roundtrip() {
+        let srv = server();
+        let mut c = conn(&srv);
+        let id1 = c
+            .request(&[b"XADD", b"velocity/0", b"*", b"r", b"payload-1"])
+            .unwrap();
+        assert!(matches!(id1, Value::Bulk(_)));
+        c.request(&[b"XADD", b"velocity/0", b"*", b"r", b"payload-2"])
+            .unwrap();
+        let len = c.request(&[b"XLEN", b"velocity/0"]).unwrap();
+        assert_eq!(len, Value::Int(2));
+
+        let reply = c
+            .request(&[b"XREAD", b"COUNT", b"10", b"STREAMS", b"velocity/0", b"0-0"])
+            .unwrap();
+        let streams = reply.as_array().unwrap();
+        assert_eq!(streams.len(), 1);
+        let stream = streams[0].as_array().unwrap();
+        assert_eq!(stream[0].as_bytes().unwrap(), b"velocity/0");
+        let entries = stream[1].as_array().unwrap();
+        assert_eq!(entries.len(), 2);
+        let entry0 = entries[0].as_array().unwrap();
+        let fields = entry0[1].as_array().unwrap();
+        assert_eq!(fields[1].as_bytes().unwrap(), b"payload-1");
+
+        // Read after the first entry id: only the second comes back.
+        let id0 = entry0[0].as_str_lossy();
+        let reply2 = c
+            .request(&[
+                b"XREAD",
+                b"STREAMS",
+                b"velocity/0",
+                id0.as_bytes(),
+            ])
+            .unwrap();
+        let entries2 = reply2.as_array().unwrap()[0].as_array().unwrap()[1]
+            .as_array()
+            .unwrap();
+        assert_eq!(entries2.len(), 1);
+    }
+
+    #[test]
+    fn xread_empty_gives_null_array() {
+        let srv = server();
+        let mut c = conn(&srv);
+        let reply = c
+            .request(&[b"XREAD", b"STREAMS", b"nothing", b"0-0"])
+            .unwrap();
+        assert_eq!(reply, Value::NullArray);
+    }
+
+    #[test]
+    fn xread_multiple_streams() {
+        let srv = server();
+        let mut c = conn(&srv);
+        c.request(&[b"XADD", b"a", b"*", b"r", b"1"]).unwrap();
+        c.request(&[b"XADD", b"b", b"*", b"r", b"2"]).unwrap();
+        let reply = c
+            .request(&[b"XREAD", b"STREAMS", b"a", b"b", b"0-0", b"0-0"])
+            .unwrap();
+        assert_eq!(reply.as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn unknown_command_is_error_not_disconnect() {
+        let srv = server();
+        let mut c = conn(&srv);
+        let reply = c.request(&[b"WAT"]).unwrap();
+        assert!(reply.is_error());
+        c.ping().unwrap(); // connection still alive
+    }
+
+    #[test]
+    fn bad_xadd_is_error() {
+        let srv = server();
+        let mut c = conn(&srv);
+        let reply = c.request(&[b"XADD", b"k", b"*"]).unwrap();
+        assert!(reply.is_error());
+        let reply = c.request(&[b"XADD", b"k", b"not-an-id", b"f", b"v"]).unwrap();
+        assert!(reply.is_error());
+    }
+
+    #[test]
+    fn keys_del_flush() {
+        let srv = server();
+        let mut c = conn(&srv);
+        c.request(&[b"XADD", b"u/1", b"*", b"r", b"x"]).unwrap();
+        c.request(&[b"XADD", b"u/2", b"*", b"r", b"x"]).unwrap();
+        let keys = c.request(&[b"KEYS", b"u/*"]).unwrap();
+        assert_eq!(keys.as_array().unwrap().len(), 2);
+        assert_eq!(c.request(&[b"DEL", b"u/1"]).unwrap(), Value::Int(1));
+        c.request(&[b"FLUSHALL"]).unwrap();
+        let keys = c.request(&[b"KEYS", b"*"]).unwrap();
+        assert!(keys.as_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn xrange_with_count() {
+        let srv = server();
+        let mut c = conn(&srv);
+        for i in 1..=5 {
+            c.request(&[
+                b"XADD",
+                b"s",
+                format!("{i}-0").as_bytes(),
+                b"r",
+                b"x",
+            ])
+            .unwrap();
+        }
+        let reply = c
+            .request(&[b"XRANGE", b"s", b"-", b"+", b"COUNT", b"3"])
+            .unwrap();
+        assert_eq!(reply.as_array().unwrap().len(), 3);
+        let reply = c.request(&[b"XRANGE", b"s", b"2-0", b"3-0"]).unwrap();
+        assert_eq!(reply.as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn concurrent_writers_all_land() {
+        let srv = server();
+        let addr = srv.addr();
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut c = RespConn::connect(addr, ConnConfig::default()).unwrap();
+                    for i in 0..200 {
+                        let payload = format!("{t}:{i}");
+                        let reply = c
+                            .request(&[b"XADD", b"shared", b"*", b"r", payload.as_bytes()])
+                            .unwrap();
+                        assert!(!reply.is_error());
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(srv.store().xlen("shared"), 1600);
+    }
+
+    #[test]
+    fn server_stop_then_connect_fails_eventually() {
+        let mut srv = server();
+        let addr = srv.addr();
+        srv.stop();
+        // after stop, new connections are refused or die immediately
+        std::thread::sleep(Duration::from_millis(50));
+        let res = TcpStream::connect(addr);
+        if let Ok(mut s) = res {
+            // accept loop is gone; the socket should be closed quickly
+            let mut buf = [0u8; 8];
+            s.set_read_timeout(Some(Duration::from_millis(200))).ok();
+            let _ = s.write_all(b"*1\r\n$4\r\nPING\r\n");
+            match s.read(&mut buf) {
+                Ok(0) => {}          // closed
+                Err(_) => {}         // refused/timeout
+                Ok(_) => panic!("server answered after stop"),
+            }
+        }
+    }
+}

@@ -1,0 +1,514 @@
+//! In-memory stream store — the data model of a Redis-streams endpoint.
+//!
+//! Streams are append-only logs of `(EntryId, [(field, value)...])`
+//! entries.  Entry ids are `<ms>-<seq>` pairs, monotonically increasing
+//! per stream exactly like Redis; readers poll with "entries after id".
+//!
+//! Two bounds protect the endpoint (the backpressure story of
+//! DESIGN.md §6): a per-stream `maxlen` (oldest entries trimmed, like
+//! `XADD ... MAXLEN ~ n`) and a global memory budget (when exceeded,
+//! writes fail with a Redis-style `OOM` error the broker backs off on).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+use anyhow::{bail, Result};
+
+/// A Redis-style stream entry id: milliseconds + sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct EntryId {
+    pub ms: u64,
+    pub seq: u64,
+}
+
+impl EntryId {
+    pub const ZERO: EntryId = EntryId { ms: 0, seq: 0 };
+
+    pub fn next(self) -> EntryId {
+        EntryId {
+            ms: self.ms,
+            seq: self.seq + 1,
+        }
+    }
+
+    /// Parse `"123-4"`, `"123"` (seq 0), `"0"`, or `"$"`/`"-"`-free forms.
+    pub fn parse(s: &str) -> Result<EntryId> {
+        let (ms, seq) = match s.split_once('-') {
+            Some((a, b)) => (a.parse()?, b.parse()?),
+            None => (s.parse()?, 0),
+        };
+        Ok(EntryId { ms, seq })
+    }
+}
+
+impl std::fmt::Display for EntryId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}-{}", self.ms, self.seq)
+    }
+}
+
+/// One entry in a stream.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub id: EntryId,
+    pub fields: Vec<(Vec<u8>, Vec<u8>)>,
+}
+
+impl Entry {
+    fn byte_size(&self) -> usize {
+        16 + self
+            .fields
+            .iter()
+            .map(|(k, v)| k.len() + v.len() + 16)
+            .sum::<usize>()
+    }
+}
+
+/// A single append-only stream.
+#[derive(Default, Debug)]
+struct Stream {
+    entries: VecDeque<Entry>,
+    last_id: EntryId,
+    bytes: usize,
+    /// Total entries ever added (survives trims; used by INFO).
+    added: u64,
+}
+
+/// Store configuration.
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    /// Per-stream entry cap; oldest are trimmed past this (0 = unbounded).
+    pub stream_maxlen: usize,
+    /// Global payload budget in bytes; XADD fails with OOM above it
+    /// (0 = unbounded).
+    pub max_memory: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig {
+            stream_maxlen: 4096,
+            max_memory: 1 << 30, // 1 GiB
+        }
+    }
+}
+
+/// Thread-safe stream store (shared by all connection handlers).
+pub struct Store {
+    cfg: StoreConfig,
+    streams: RwLock<HashMap<String, Mutex<Stream>>>,
+    total_bytes: AtomicU64,
+    total_entries: AtomicU64,
+    clock_ms: AtomicU64,
+}
+
+impl Store {
+    pub fn new(cfg: StoreConfig) -> Self {
+        Store {
+            cfg,
+            streams: RwLock::new(HashMap::new()),
+            total_bytes: AtomicU64::new(0),
+            total_entries: AtomicU64::new(0),
+            clock_ms: AtomicU64::new(0),
+        }
+    }
+
+    /// Current wall-clock ms, monotonicized (Redis semantics: if the
+    /// clock steps back, keep using the last ms and bump seq).
+    fn now_ms(&self) -> u64 {
+        let wall = crate::util::epoch_micros() / 1000;
+        self.clock_ms.fetch_max(wall, Ordering::Relaxed);
+        self.clock_ms.load(Ordering::Relaxed)
+    }
+
+    /// Append an entry; `id` of `None` means auto-assign (`XADD key *`).
+    pub fn xadd(
+        &self,
+        key: &str,
+        id: Option<EntryId>,
+        fields: Vec<(Vec<u8>, Vec<u8>)>,
+    ) -> Result<EntryId> {
+        if self.cfg.max_memory > 0
+            && self.total_bytes.load(Ordering::Relaxed) as usize >= self.cfg.max_memory
+        {
+            bail!("OOM command not allowed when used memory > 'maxmemory'");
+        }
+        // Fast path: stream exists (read lock on the map).
+        {
+            let map = self.streams.read().unwrap();
+            if let Some(stream) = map.get(key) {
+                return self.append(&mut stream.lock().unwrap(), id, fields);
+            }
+        }
+        // Slow path: create the stream.
+        let mut map = self.streams.write().unwrap();
+        let stream = map.entry(key.to_string()).or_default();
+        let mut guard = stream.lock().unwrap();
+        let res = self.append(&mut guard, id, fields);
+        drop(guard);
+        res
+    }
+
+    fn append(
+        &self,
+        s: &mut Stream,
+        id: Option<EntryId>,
+        fields: Vec<(Vec<u8>, Vec<u8>)>,
+    ) -> Result<EntryId> {
+        let id = match id {
+            Some(explicit) => {
+                if explicit <= s.last_id {
+                    bail!(
+                        "ERR The ID specified in XADD is equal or smaller than the target stream top item"
+                    );
+                }
+                explicit
+            }
+            None => {
+                let ms = self.now_ms();
+                if ms <= s.last_id.ms {
+                    s.last_id.next()
+                } else {
+                    EntryId { ms, seq: 0 }
+                }
+            }
+        };
+        let entry = Entry { id, fields };
+        let sz = entry.byte_size();
+        s.entries.push_back(entry);
+        s.last_id = id;
+        s.bytes += sz;
+        s.added += 1;
+        self.total_bytes.fetch_add(sz as u64, Ordering::Relaxed);
+        self.total_entries.fetch_add(1, Ordering::Relaxed);
+        if self.cfg.stream_maxlen > 0 {
+            while s.entries.len() > self.cfg.stream_maxlen {
+                if let Some(old) = s.entries.pop_front() {
+                    let osz = old.byte_size();
+                    s.bytes -= osz;
+                    self.total_bytes.fetch_sub(osz as u64, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(id)
+    }
+
+    /// Entries of `key` with id strictly greater than `after`
+    /// (`XREAD`-style), up to `count` (0 = all).
+    pub fn read_after(&self, key: &str, after: EntryId, count: usize) -> Vec<Entry> {
+        let map = self.streams.read().unwrap();
+        let Some(stream) = map.get(key) else {
+            return Vec::new();
+        };
+        let s = stream.lock().unwrap();
+        // Binary search: entries are sorted by id.
+        let start = s.entries.partition_point(|e| e.id <= after);
+        let take = if count == 0 { usize::MAX } else { count };
+        s.entries.iter().skip(start).take(take).cloned().collect()
+    }
+
+    /// Inclusive range query (`XRANGE key start end [COUNT n]`).
+    pub fn range(&self, key: &str, start: EntryId, end: EntryId, count: usize) -> Vec<Entry> {
+        let map = self.streams.read().unwrap();
+        let Some(stream) = map.get(key) else {
+            return Vec::new();
+        };
+        let s = stream.lock().unwrap();
+        let from = s.entries.partition_point(|e| e.id < start);
+        let take = if count == 0 { usize::MAX } else { count };
+        s.entries
+            .iter()
+            .skip(from)
+            .take_while(|e| e.id <= end)
+            .take(take)
+            .cloned()
+            .collect()
+    }
+
+    /// Stream length (`XLEN`).
+    pub fn xlen(&self, key: &str) -> usize {
+        let map = self.streams.read().unwrap();
+        map.get(key)
+            .map(|s| s.lock().unwrap().entries.len())
+            .unwrap_or(0)
+    }
+
+    /// Last assigned id of a stream (0-0 when absent).
+    pub fn last_id(&self, key: &str) -> EntryId {
+        let map = self.streams.read().unwrap();
+        map.get(key)
+            .map(|s| s.lock().unwrap().last_id)
+            .unwrap_or(EntryId::ZERO)
+    }
+
+    /// Delete streams; returns how many existed (`DEL`).
+    pub fn del(&self, keys: &[&str]) -> usize {
+        let mut map = self.streams.write().unwrap();
+        let mut n = 0;
+        for key in keys {
+            if let Some(s) = map.remove(*key) {
+                let bytes = s.lock().unwrap().bytes;
+                self.total_bytes.fetch_sub(bytes as u64, Ordering::Relaxed);
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Drop everything (`FLUSHALL`).
+    pub fn flush_all(&self) {
+        let mut map = self.streams.write().unwrap();
+        map.clear();
+        self.total_bytes.store(0, Ordering::Relaxed);
+    }
+
+    /// Keys matching a glob-lite pattern (`*` suffix/prefix only, or exact).
+    pub fn keys(&self, pattern: &str) -> Vec<String> {
+        let map = self.streams.read().unwrap();
+        let mut out: Vec<String> = map
+            .keys()
+            .filter(|k| glob_lite(pattern, k))
+            .cloned()
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// INFO text (mirrors the fields the paper's Table 1b cares about).
+    pub fn info(&self) -> String {
+        let map = self.streams.read().unwrap();
+        format!(
+            "# Server\r\nserver:elasticbroker-endpoint\r\nversion:0.1.0\r\nproto:RESP2\r\n\
+             # Memory\r\nused_memory:{}\r\nmaxmemory:{}\r\n\
+             # Streams\r\nstreams:{}\r\ntotal_entries_added:{}\r\nstream_maxlen:{}\r\n",
+            self.total_bytes.load(Ordering::Relaxed),
+            self.cfg.max_memory,
+            map.len(),
+            self.total_entries.load(Ordering::Relaxed),
+            self.cfg.stream_maxlen,
+        )
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.total_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn total_entries_added(&self) -> u64 {
+        self.total_entries.load(Ordering::Relaxed)
+    }
+}
+
+/// `*`, `prefix*`, `*suffix`, `*infix*`, or exact match.
+fn glob_lite(pattern: &str, s: &str) -> bool {
+    if pattern == "*" {
+        return true;
+    }
+    match (pattern.strip_prefix('*'), pattern.strip_suffix('*')) {
+        (Some(rest), None) => s.ends_with(rest),
+        (None, Some(rest)) => s.starts_with(rest),
+        (Some(_), Some(_)) => {
+            let infix = &pattern[1..pattern.len() - 1];
+            s.contains(infix)
+        }
+        (None, None) => s == pattern,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, U64Range};
+
+    fn fields(v: &str) -> Vec<(Vec<u8>, Vec<u8>)> {
+        vec![(b"r".to_vec(), v.as_bytes().to_vec())]
+    }
+
+    #[test]
+    fn xadd_auto_ids_monotonic() {
+        let store = Store::new(StoreConfig::default());
+        let mut last = EntryId::ZERO;
+        for i in 0..100 {
+            let id = store.xadd("s", None, fields(&i.to_string())).unwrap();
+            assert!(id > last, "id {id} not > {last}");
+            last = id;
+        }
+        assert_eq!(store.xlen("s"), 100);
+        assert_eq!(store.last_id("s"), last);
+    }
+
+    #[test]
+    fn xadd_explicit_id_must_increase() {
+        let store = Store::new(StoreConfig::default());
+        let id = EntryId { ms: 5, seq: 1 };
+        store.xadd("s", Some(id), fields("a")).unwrap();
+        assert!(store.xadd("s", Some(id), fields("b")).is_err());
+        assert!(store
+            .xadd("s", Some(EntryId { ms: 5, seq: 0 }), fields("c"))
+            .is_err());
+        store
+            .xadd("s", Some(EntryId { ms: 5, seq: 2 }), fields("d"))
+            .unwrap();
+    }
+
+    #[test]
+    fn read_after_returns_only_newer() {
+        let store = Store::new(StoreConfig::default());
+        let mut ids = Vec::new();
+        for i in 0..10 {
+            ids.push(
+                store
+                    .xadd("s", Some(EntryId { ms: i + 1, seq: 0 }), fields(&i.to_string()))
+                    .unwrap(),
+            );
+        }
+        let got = store.read_after("s", ids[4], 0);
+        assert_eq!(got.len(), 5);
+        assert_eq!(got[0].id, ids[5]);
+        let limited = store.read_after("s", EntryId::ZERO, 3);
+        assert_eq!(limited.len(), 3);
+        assert!(store.read_after("s", ids[9], 0).is_empty());
+        assert!(store.read_after("missing", EntryId::ZERO, 0).is_empty());
+    }
+
+    #[test]
+    fn range_inclusive() {
+        let store = Store::new(StoreConfig::default());
+        for i in 1..=5u64 {
+            store
+                .xadd("s", Some(EntryId { ms: i, seq: 0 }), fields("x"))
+                .unwrap();
+        }
+        let got = store.range(
+            "s",
+            EntryId { ms: 2, seq: 0 },
+            EntryId { ms: 4, seq: 0 },
+            0,
+        );
+        assert_eq!(got.len(), 3);
+    }
+
+    #[test]
+    fn maxlen_trims_oldest() {
+        let store = Store::new(StoreConfig {
+            stream_maxlen: 5,
+            max_memory: 0,
+        });
+        for i in 0..12u64 {
+            store
+                .xadd("s", Some(EntryId { ms: i + 1, seq: 0 }), fields("x"))
+                .unwrap();
+        }
+        assert_eq!(store.xlen("s"), 5);
+        let got = store.read_after("s", EntryId::ZERO, 0);
+        assert_eq!(got[0].id.ms, 8); // 12 added, first 7 trimmed
+        assert_eq!(store.total_entries_added(), 12);
+    }
+
+    #[test]
+    fn oom_when_over_budget() {
+        let store = Store::new(StoreConfig {
+            stream_maxlen: 0,
+            max_memory: 100,
+        });
+        let big = vec![(b"r".to_vec(), vec![0u8; 100])];
+        store.xadd("s", None, big.clone()).unwrap();
+        let err = store.xadd("s", None, big).unwrap_err();
+        assert!(err.to_string().contains("OOM"), "{err}");
+        // freeing makes room again
+        store.flush_all();
+        assert_eq!(store.used_bytes(), 0);
+        store.xadd("s", None, fields("ok")).unwrap();
+    }
+
+    #[test]
+    fn del_and_keys() {
+        let store = Store::new(StoreConfig::default());
+        store.xadd("velocity/0", None, fields("a")).unwrap();
+        store.xadd("velocity/1", None, fields("b")).unwrap();
+        store.xadd("pressure/0", None, fields("c")).unwrap();
+        assert_eq!(store.keys("velocity/*").len(), 2);
+        assert_eq!(store.keys("*"), vec!["pressure/0", "velocity/0", "velocity/1"]);
+        assert_eq!(store.keys("*0").len(), 2);
+        assert_eq!(store.del(&["velocity/0", "nope"]), 1);
+        assert_eq!(store.keys("velocity/*").len(), 1);
+    }
+
+    #[test]
+    fn entry_id_parse_display_roundtrip() {
+        for s in ["0-0", "123-4", "99999-1"] {
+            assert_eq!(EntryId::parse(s).unwrap().to_string(), s);
+        }
+        assert_eq!(
+            EntryId::parse("42").unwrap(),
+            EntryId { ms: 42, seq: 0 }
+        );
+        assert!(EntryId::parse("a-b").is_err());
+    }
+
+    #[test]
+    fn info_contains_counters() {
+        let store = Store::new(StoreConfig::default());
+        store.xadd("s", None, fields("x")).unwrap();
+        let info = store.info();
+        assert!(info.contains("streams:1"));
+        assert!(info.contains("total_entries_added:1"));
+    }
+
+    #[test]
+    fn concurrent_xadd_ids_unique_and_monotonic() {
+        let store = std::sync::Arc::new(Store::new(StoreConfig::default()));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let store = store.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut ids = Vec::new();
+                for i in 0..500 {
+                    ids.push(
+                        store
+                            .xadd("s", None, fields(&format!("{t}:{i}")))
+                            .unwrap(),
+                    );
+                }
+                ids
+            }));
+        }
+        let mut all: Vec<EntryId> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        let n = all.len();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), n, "duplicate ids under concurrency");
+        assert_eq!(store.xlen("s"), 4000);
+    }
+
+    /// Property: after any interleaving of adds, read_after(last_id of a
+    /// prefix) returns exactly the suffix.
+    #[test]
+    fn prop_read_after_partitions_stream() {
+        prop::forall(31, 50, &U64Range(1, 60), |n| {
+            let store = Store::new(StoreConfig::default());
+            let mut ids = Vec::new();
+            for i in 0..*n {
+                ids.push(
+                    store
+                        .xadd("s", Some(EntryId { ms: i + 1, seq: 0 }), fields("x"))
+                        .unwrap(),
+                );
+            }
+            for (i, id) in ids.iter().enumerate() {
+                let rest = store.read_after("s", *id, 0);
+                if rest.len() != ids.len() - i - 1 {
+                    return Err(format!(
+                        "after {id}: got {} want {}",
+                        rest.len(),
+                        ids.len() - i - 1
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,62 @@
+//! # ElasticBroker
+//!
+//! A full reproduction of *ElasticBroker: Combining HPC with Cloud to
+//! Provide Realtime Insights into Simulations* (Li, Wang, Yan, Song —
+//! ICCS 2020) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The Rust crate is **Layer 3**: the coordination system and every
+//! substrate the paper depends on, with Python strictly at build time
+//! (`make artifacts` AOT-lowers the Layer-2 JAX models — which call the
+//! Layer-1 Pallas kernels — to HLO text that [`runtime`] loads and
+//! executes through PJRT).
+//!
+//! ## Module map
+//!
+//! HPC side (the paper's §3.1):
+//! * [`sim`] — the CFD simulation substrate: a D2Q9 lattice-Boltzmann
+//!   *WindAroundBuildings* solver with MPI-style rank decomposition and
+//!   halo exchange (stand-in for OpenFOAM `simpleFoam`).
+//! * [`broker`] — the ElasticBroker C/C++-style API
+//!   (`broker_init` / `broker_write` / `broker_finalize`), process
+//!   groups → Cloud endpoints, asynchronous background writers.
+//! * [`synth`] — the synthetic data generator of §4.3.
+//!
+//! Cloud side (the paper's §3.2):
+//! * [`endpoint`] — the Cloud endpoint: an in-memory stream store
+//!   speaking the RESP wire protocol (stand-in for Redis 5).
+//! * [`streamproc`] — the distributed micro-batch stream-processing
+//!   engine (stand-in for Spark Streaming on Kubernetes).
+//! * [`analysis`] — windowed Dynamic Mode Decomposition of the incoming
+//!   streams (stand-in for PyDMD inside Spark executors).
+//!
+//! Substrates:
+//! * [`wire`] — RESP2 protocol codec.
+//! * [`record`] — the simulation→Cloud stream-record format.
+//! * [`transport`] — framed TCP client with reconnect + throttling.
+//! * [`runtime`] — PJRT artifact registry / executor (the AOT bridge).
+//! * [`linalg`] — dense eigensolvers (Francis QR) for the DMD spectra.
+//! * [`metrics`], [`config`], [`util`] — observability, configuration,
+//!   logging/rng/property-test helpers.
+//!
+//! [`workflow`] wires whole experiments together; `main.rs`/[`cli`]
+//! expose them as a launcher.
+
+pub mod analysis;
+pub mod broker;
+pub mod cli;
+pub mod config;
+pub mod endpoint;
+pub mod linalg;
+pub mod metrics;
+pub mod record;
+pub mod runtime;
+pub mod sim;
+pub mod streamproc;
+pub mod synth;
+pub mod transport;
+pub mod util;
+pub mod wire;
+pub mod workflow;
+
+/// Crate-wide result type (anyhow-based, like the rest of the stack).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,268 @@
+//! Pure-Rust mirror of the Layer-2 `dmd_reduced` graph + the paper's
+//! stability metric.
+//!
+//! The compiled artifact computes `(Ã, σ)` from a snapshot window; this
+//! module computes the same quantities with [`Mat`] ops and
+//! [`eig::jacobi_symmetric`].  It serves as
+//!
+//! 1. the fallback when artifacts are not built (tests, quickstart),
+//! 2. the cross-check that the PJRT path returns the right numbers
+//!    (integration test `pjrt_matches_fallback`), and
+//! 3. the reference semantics documented for downstream users.
+//!
+//! The eigenvalue step ([`dmd_eigenvalues`]) and the Fig 5 metric
+//! ([`stability_metric`]) are shared by both paths.
+
+use anyhow::{ensure, Result};
+
+use super::{eig, Complex, Mat};
+
+/// Result of the DMD reduction for one window.
+#[derive(Clone, Debug)]
+pub struct DmdReduced {
+    /// Projected operator Ã (rank × rank).
+    pub atilde: Mat,
+    /// Singular values of X1 (descending, length rank).
+    pub sigma: Vec<f64>,
+}
+
+/// Reduce a snapshot window to `(Ã, σ)` — mirror of `model.dmd_reduced`.
+///
+/// `x` is `(d, m+1)`: column `j` is the snapshot at window step `j`.
+pub fn dmd_reduce(x: &Mat, rank: usize) -> Result<DmdReduced> {
+    let m = x.cols.checked_sub(1).filter(|&m| m > 0);
+    let m = match m {
+        Some(m) => m,
+        None => anyhow::bail!("need at least 2 snapshots, got {}", x.cols),
+    };
+    ensure!(rank >= 1 && rank <= m, "rank {rank} out of range 1..={m}");
+
+    // C = XᵀX  (the gram kernel's job in the artifact).
+    let c = x.t().matmul(x); // (m+1, m+1)
+
+    // G = X1ᵀX1, K = X1ᵀX2 are sub-blocks of C.
+    let mut g = Mat::zeros(m, m);
+    let mut k = Mat::zeros(m, m);
+    for i in 0..m {
+        for j in 0..m {
+            g[(i, j)] = c[(i, j)];
+            k[(i, j)] = c[(i, j + 1)];
+        }
+    }
+
+    // Symmetric eigendecomposition of G (12 sweeps = the HLO solver).
+    let (evals, v) = eig::jacobi_symmetric(&g, 12);
+
+    // Rank-r truncation by descending eigenvalue.
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| evals[b].partial_cmp(&evals[a]).unwrap());
+    let idx = &order[..rank];
+    let sigma: Vec<f64> = idx.iter().map(|&i| evals[i].max(0.0).sqrt()).collect();
+
+    let mut vr = Mat::zeros(m, rank);
+    for (col, &i) in idx.iter().enumerate() {
+        for row in 0..m {
+            vr[(row, col)] = v[(row, i)];
+        }
+    }
+
+    // Degenerate-mode guard (mirror of model.py): σ_i ≪ σ_1 modes are
+    // zeroed rather than divided by, so float noise cannot masquerade
+    // as explosive eigenvalues on near-constant regions.
+    let sigma1 = sigma.first().copied().unwrap_or(0.0).max(1e-30);
+    let inv_sigma: Vec<f64> = sigma
+        .iter()
+        .map(|&s| if s > 1e-5 * sigma1 { 1.0 / s } else { 0.0 })
+        .collect();
+
+    // Ã = Σ⁻¹ Vᵀ K V Σ⁻¹.
+    let core = vr.t().matmul(&k).matmul(&vr); // (r, r)
+    let mut atilde = Mat::zeros(rank, rank);
+    for i in 0..rank {
+        for j in 0..rank {
+            atilde[(i, j)] = core[(i, j)] * inv_sigma[i] * inv_sigma[j];
+        }
+    }
+    Ok(DmdReduced { atilde, sigma })
+}
+
+/// DMD eigenvalues of a projected operator (Francis QR).
+pub fn dmd_eigenvalues(atilde: &Mat) -> Result<Vec<Complex>> {
+    eig::eigenvalues(atilde).map_err(|e| {
+        log::warn!("dmd_eigenvalues failed on {atilde:?}");
+        e
+    })
+}
+
+/// The paper's Fig 5 metric: "average sum of square distances from
+/// eigenvalues to the unit circle".  0 ⇒ all modes neutrally stable
+/// (steady oscillation); larger ⇒ transient growth/decay in the region.
+pub fn stability_metric(eigs: &[Complex]) -> f64 {
+    if eigs.is_empty() {
+        return 0.0;
+    }
+    eigs.iter().map(|l| (l.abs() - 1.0).powi(2)).sum::<f64>() / eigs.len() as f64
+}
+
+/// Full fallback analysis of a window: reduce → eig → metric.
+pub fn analyze_window(x: &Mat, rank: usize) -> Result<(Vec<Complex>, Vec<f64>, f64)> {
+    let red = dmd_reduce(x, rank)?;
+    let eigs = dmd_eigenvalues(&red.atilde)?;
+    let metric = stability_metric(&eigs);
+    Ok((eigs, red.sigma, metric))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sort_spectrum;
+    use crate::util::rng::Rng;
+
+    /// x_{k+1} = A x_k with a known spectrum embedded in a d-dim space.
+    fn linear_system_snapshots(
+        d: usize,
+        n_snap: usize,
+        blocks: &[(f64, f64)], // (re, im) per mode; im != 0 ⇒ 2x2 block
+        seed: u64,
+    ) -> (Mat, Vec<Complex>) {
+        let mut rng = Rng::new(seed);
+        let mut dims = 0;
+        for &(_, im) in blocks {
+            dims += if im != 0.0 { 2 } else { 1 };
+        }
+        let mut dyn_m = Mat::zeros(dims, dims);
+        let mut spectrum = Vec::new();
+        let mut o = 0;
+        for &(re, im) in blocks {
+            if im != 0.0 {
+                dyn_m[(o, o)] = re;
+                dyn_m[(o, o + 1)] = -im;
+                dyn_m[(o + 1, o)] = im;
+                dyn_m[(o + 1, o + 1)] = re;
+                spectrum.push(Complex::new(re, im));
+                spectrum.push(Complex::new(re, -im));
+                o += 2;
+            } else {
+                dyn_m[(o, o)] = re;
+                spectrum.push(Complex::new(re, 0.0));
+                o += 1;
+            }
+        }
+        // random orthonormal spatial modes (Gram-Schmidt)
+        let mut phi = Mat::zeros(d, dims);
+        for c in 0..dims {
+            let mut col: Vec<f64> = (0..d).map(|_| rng.next_normal()).collect();
+            for prev in 0..c {
+                let dot: f64 = (0..d).map(|r| col[r] * phi[(r, prev)]).sum();
+                for r in 0..d {
+                    col[r] -= dot * phi[(r, prev)];
+                }
+            }
+            let norm = col.iter().map(|v| v * v).sum::<f64>().sqrt();
+            for r in 0..d {
+                phi[(r, c)] = col[r] / norm;
+            }
+        }
+        let mut z: Vec<f64> = (0..dims).map(|_| 1.0 + rng.next_f64()).collect();
+        let mut x = Mat::zeros(d, n_snap);
+        for snap in 0..n_snap {
+            for r in 0..d {
+                let mut v = 0.0;
+                for c in 0..dims {
+                    v += phi[(r, c)] * z[c];
+                }
+                x[(r, snap)] = v;
+            }
+            // z ← dyn z
+            let mut nz = vec![0.0; dims];
+            for i in 0..dims {
+                for j in 0..dims {
+                    nz[i] += dyn_m[(i, j)] * z[j];
+                }
+            }
+            z = nz;
+        }
+        (x, spectrum)
+    }
+
+    #[test]
+    fn recovers_real_spectrum() {
+        let (x, want) = linear_system_snapshots(128, 9, &[(0.95, 0.0), (0.8, 0.0), (0.5, 0.0)], 1);
+        let (eigs, sigma, _) = analyze_window(&x, 3).unwrap();
+        let got = sort_spectrum(eigs);
+        let want = sort_spectrum(want);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g.re - w.re).abs() < 1e-4 && g.im.abs() < 1e-4, "{g:?} vs {w:?}");
+        }
+        assert!(sigma.windows(2).all(|w| w[0] >= w[1] - 1e-9));
+    }
+
+    #[test]
+    fn recovers_complex_pair() {
+        let (x, want) =
+            linear_system_snapshots(256, 9, &[(0.9, 0.3), (0.7, 0.0)], 2);
+        let (eigs, _, _) = analyze_window(&x, 3).unwrap();
+        let got = sort_spectrum(eigs);
+        let want = sort_spectrum(want);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g.re - w.re).abs() < 1e-3 && (g.im - w.im).abs() < 1e-3,
+                "{got:?} vs {want:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn stability_metric_zero_on_unit_circle() {
+        let th: f64 = 0.7;
+        let eigs = vec![
+            Complex::new(th.cos(), th.sin()),
+            Complex::new(th.cos(), -th.sin()),
+            Complex::new(1.0, 0.0),
+        ];
+        assert!(stability_metric(&eigs) < 1e-12);
+    }
+
+    #[test]
+    fn stability_metric_grows_with_decay() {
+        let near = vec![Complex::new(0.99, 0.0)];
+        let far = vec![Complex::new(0.5, 0.0)];
+        assert!(stability_metric(&near) < stability_metric(&far));
+        assert!((stability_metric(&far) - 0.25).abs() < 1e-12);
+        assert_eq!(stability_metric(&[]), 0.0);
+    }
+
+    #[test]
+    fn oscillatory_flow_more_stable_than_decaying() {
+        // A steady oscillation (unit-circle modes) must score closer to 0
+        // than a fast-decaying transient — the Fig 5 interpretation.
+        let (x_osc, _) = linear_system_snapshots(200, 9, &[(0.995_f64.cos() as f64, 0.1), (1.0, 0.0)], 3);
+        let (x_dec, _) = linear_system_snapshots(200, 9, &[(0.6, 0.0), (0.4, 0.0)], 4);
+        let (_, _, m_osc) = analyze_window(&x_osc, 3).unwrap();
+        let (_, _, m_dec) = analyze_window(&x_dec, 2).unwrap();
+        assert!(m_osc < m_dec, "osc {m_osc} vs dec {m_dec}");
+    }
+
+    #[test]
+    fn rejects_degenerate_windows() {
+        assert!(dmd_reduce(&Mat::zeros(16, 1), 1).is_err());
+        assert!(dmd_reduce(&Mat::zeros(16, 5), 0).is_err());
+        assert!(dmd_reduce(&Mat::zeros(16, 5), 5).is_err());
+    }
+
+    #[test]
+    fn constant_field_is_neutrally_stable() {
+        // A constant (steady) field gives λ ≈ 1 ⇒ metric ≈ 0.
+        let mut x = Mat::zeros(64, 9);
+        let mut rng = Rng::new(9);
+        let col: Vec<f64> = (0..64).map(|_| rng.next_normal()).collect();
+        for j in 0..9 {
+            for i in 0..64 {
+                x[(i, j)] = col[i];
+            }
+        }
+        let (eigs, _, metric) = analyze_window(&x, 1).unwrap();
+        assert!((eigs[0].re - 1.0).abs() < 1e-6, "{eigs:?}");
+        assert!(metric < 1e-10);
+    }
+}

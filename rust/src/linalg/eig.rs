@@ -1,0 +1,556 @@
+//! Real dense eigensolvers.
+//!
+//! [`eigenvalues`] = Householder-Hessenberg reduction followed by the
+//! Francis implicit double-shift QR iteration (the classic EISPACK
+//! `hqr` scheme, as in Numerical Recipes §11.6) — eigenvalues only,
+//! which is all DMD needs (the paper's Fig 5 plots spectra, not modes).
+//!
+//! [`jacobi_symmetric`] is a cyclic Jacobi eigensolver for symmetric
+//! matrices: it both serves as an independent oracle for `eigenvalues`
+//! in tests and mirrors the Layer-2 HLO Jacobi used inside the
+//! `dmd_reduced` artifact, so the Rust fallback path computes exactly
+//! the same quantities as the compiled graph.
+
+use anyhow::{bail, ensure, Result};
+
+use super::{Complex, Mat};
+
+/// Reduce a square matrix to upper-Hessenberg form in place
+/// (Householder reflections; similarity transform, spectrum preserved).
+pub fn hessenberg(a: &mut Mat) {
+    assert!(a.is_square());
+    let n = a.rows;
+    for k in 0..n.saturating_sub(2) {
+        // Householder vector for column k, rows k+1..n.
+        let mut norm2 = 0.0;
+        for i in k + 1..n {
+            norm2 += a[(i, k)] * a[(i, k)];
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            continue;
+        }
+        let alpha = -norm.copysign(a[(k + 1, k)]);
+        let mut v = vec![0.0; n]; // only k+1.. used
+        v[k + 1] = a[(k + 1, k)] - alpha;
+        for i in k + 2..n {
+            v[i] = a[(i, k)];
+        }
+        let vnorm2: f64 = v[k + 1..].iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        // A ← (I - 2vvᵀ/vᵀv) A : rows k+1..n
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k + 1..n {
+                dot += v[i] * a[(i, j)];
+            }
+            let scale = 2.0 * dot / vnorm2;
+            for i in k + 1..n {
+                a[(i, j)] -= scale * v[i];
+            }
+        }
+        // A ← A (I - 2vvᵀ/vᵀv) : cols k+1..n
+        for i in 0..n {
+            let mut dot = 0.0;
+            for j in k + 1..n {
+                dot += a[(i, j)] * v[j];
+            }
+            let scale = 2.0 * dot / vnorm2;
+            for j in k + 1..n {
+                a[(i, j)] -= scale * v[j];
+            }
+        }
+        // Exact zeros below the subdiagonal in this column.
+        a[(k + 1, k)] = alpha;
+        for i in k + 2..n {
+            a[(i, k)] = 0.0;
+        }
+    }
+}
+
+/// Eigenvalues of an upper-Hessenberg matrix via Francis double-shift QR
+/// (consumes/overwrites the matrix).
+pub fn hqr(mut a: Mat) -> Result<Vec<Complex>> {
+    assert!(a.is_square());
+    let n = a.rows;
+    let mut eigs = Vec::with_capacity(n);
+    if n == 0 {
+        return Ok(eigs);
+    }
+    if n == 1 {
+        eigs.push(Complex::new(a[(0, 0)], 0.0));
+        return Ok(eigs);
+    }
+
+    // Norm over the Hessenberg envelope (deflation threshold scale).
+    let mut anorm = 0.0;
+    for i in 0..n {
+        for j in i.saturating_sub(1)..n {
+            anorm += a[(i, j)].abs();
+        }
+    }
+    if anorm == 0.0 {
+        // zero matrix
+        return Ok(vec![Complex::new(0.0, 0.0); n]);
+    }
+    let eps = f64::EPSILON;
+    let mut t = 0.0; // accumulated exceptional shifts
+    let mut nn = n as isize - 1;
+
+    while nn >= 0 {
+        let mut its = 0;
+        loop {
+            // Look for a single negligible subdiagonal element.
+            let mut l: isize = 0;
+            {
+                let mut ll = nn;
+                while ll >= 1 {
+                    let (lu, _) = (ll as usize, ());
+                    let mut s = a[(lu - 1, lu - 1)].abs() + a[(lu, lu)].abs();
+                    if s == 0.0 {
+                        s = anorm;
+                    }
+                    if a[(lu, lu - 1)].abs() <= eps * s {
+                        a[(lu, lu - 1)] = 0.0;
+                        l = ll;
+                        break;
+                    }
+                    ll -= 1;
+                }
+            }
+            let nnu = nn as usize;
+            let mut x = a[(nnu, nnu)];
+            if l == nn {
+                // One real root found.
+                eigs.push(Complex::new(x + t, 0.0));
+                nn -= 1;
+                break;
+            }
+            let mut y = a[(nnu - 1, nnu - 1)];
+            let mut w = a[(nnu, nnu - 1)] * a[(nnu - 1, nnu)];
+            if l == nn - 1 {
+                // Two roots from the trailing 2×2 block.
+                let p = 0.5 * (y - x);
+                let q = p * p + w;
+                let z = q.abs().sqrt();
+                let xt = x + t;
+                if q >= 0.0 {
+                    let z = p + z.copysign(p);
+                    let e1 = xt + z;
+                    let e2 = if z != 0.0 { xt - w / z } else { e1 };
+                    eigs.push(Complex::new(e1, 0.0));
+                    eigs.push(Complex::new(e2, 0.0));
+                } else {
+                    eigs.push(Complex::new(xt + p, z));
+                    eigs.push(Complex::new(xt + p, -z));
+                }
+                nn -= 2;
+                break;
+            }
+
+            if its == 60 {
+                bail!("hqr: no convergence after 60 iterations on a block");
+            }
+            if its % 10 == 0 && its > 0 {
+                // Exceptional shift (Wilkinson's ad-hoc restart).
+                t += x;
+                for i in 0..=nnu {
+                    a[(i, i)] -= x;
+                }
+                let s = a[(nnu, nnu - 1)].abs() + a[(nnu - 1, nnu - 2)].abs();
+                x = 0.75 * s;
+                y = x;
+                w = -0.4375 * s * s;
+            }
+            its += 1;
+
+            // Find two consecutive small subdiagonals (start of the bulge).
+            let mut m = nn - 2;
+            let (mut p, mut q, mut r) = (0.0f64, 0.0f64, 0.0f64);
+            while m >= l {
+                let mu = m as usize;
+                let z = a[(mu, mu)];
+                let rr = x - z;
+                let ss = y - z;
+                p = (rr * ss - w) / a[(mu + 1, mu)] + a[(mu, mu + 1)];
+                q = a[(mu + 1, mu + 1)] - z - rr - ss;
+                r = a[(mu + 2, mu + 1)];
+                let s = p.abs() + q.abs() + r.abs();
+                p /= s;
+                q /= s;
+                r /= s;
+                if m == l {
+                    break;
+                }
+                let u = a[(mu, mu - 1)].abs() * (q.abs() + r.abs());
+                let v = p.abs()
+                    * (a[(mu - 1, mu - 1)].abs() + z.abs() + a[(mu + 1, mu + 1)].abs());
+                if u <= eps * v {
+                    break;
+                }
+                m -= 1;
+            }
+            let m = m.max(l) as usize;
+            for i in m + 2..=nnu {
+                a[(i, i - 2)] = 0.0;
+                if i > m + 2 {
+                    a[(i, i - 3)] = 0.0;
+                }
+            }
+
+            // Double QR sweep: chase the bulge from m to nn-1.
+            for k in m..nnu {
+                if k != m {
+                    p = a[(k, k - 1)];
+                    q = a[(k + 1, k - 1)];
+                    r = if k != nnu - 1 { a[(k + 2, k - 1)] } else { 0.0 };
+                    x = p.abs() + q.abs() + r.abs();
+                    if x != 0.0 {
+                        p /= x;
+                        q /= x;
+                        r /= x;
+                    }
+                }
+                let s = (p * p + q * q + r * r).sqrt().copysign(p);
+                if s == 0.0 {
+                    continue;
+                }
+                if k == m {
+                    if l != m as isize {
+                        a[(k, k - 1)] = -a[(k, k - 1)];
+                    }
+                } else {
+                    a[(k, k - 1)] = -s * x;
+                }
+                p += s;
+                x = p / s;
+                y = q / s;
+                let z = r / s;
+                q /= p;
+                r /= p;
+                // Row modification.
+                for j in k..=nnu {
+                    let mut pp = a[(k, j)] + q * a[(k + 1, j)];
+                    if k != nnu - 1 {
+                        pp += r * a[(k + 2, j)];
+                        a[(k + 2, j)] -= pp * z;
+                    }
+                    a[(k + 1, j)] -= pp * y;
+                    a[(k, j)] -= pp * x;
+                }
+                // Column modification.
+                let mmin = nnu.min(k + 3);
+                for i in l as usize..=mmin {
+                    let mut pp = x * a[(i, k)] + y * a[(i, k + 1)];
+                    if k != nnu - 1 {
+                        pp += z * a[(i, k + 2)];
+                        a[(i, k + 2)] -= pp * r;
+                    }
+                    a[(i, k + 1)] -= pp * q;
+                    a[(i, k)] -= pp;
+                }
+            }
+        }
+    }
+    Ok(eigs)
+}
+
+/// Eigenvalues of a general real square matrix.
+pub fn eigenvalues(a: &Mat) -> Result<Vec<Complex>> {
+    ensure!(a.is_square(), "eigenvalues: matrix must be square");
+    let mut h = a.clone();
+    hessenberg(&mut h);
+    hqr(h)
+}
+
+/// Cyclic Jacobi eigendecomposition for symmetric matrices.
+///
+/// Returns `(eigenvalues, eigenvectors)` with columns of `v` the
+/// eigenvectors (unsorted).  `sweeps` full cycles — 12 matches the
+/// Layer-2 HLO solver inside the `dmd_reduced` artifact.
+pub fn jacobi_symmetric(a: &Mat, sweeps: usize) -> (Vec<f64>, Mat) {
+    assert!(a.is_square());
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    for _ in 0..sweeps {
+        for p in 0..n.saturating_sub(1) {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let tau = (m[(q, q)] - m[(p, p)]) / (2.0 * apq);
+                let sgn = if tau >= 0.0 { 1.0 } else { -1.0 };
+                let t = sgn / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // M ← Jᵀ M J, applied as row/col updates.
+                for i in 0..n {
+                    let mip = m[(i, p)];
+                    let miq = m[(i, q)];
+                    m[(i, p)] = c * mip - s * miq;
+                    m[(i, q)] = s * mip + c * miq;
+                }
+                for j in 0..n {
+                    let mpj = m[(p, j)];
+                    let mqj = m[(q, j)];
+                    m[(p, j)] = c * mpj - s * mqj;
+                    m[(q, j)] = s * mpj + c * mqj;
+                }
+                for i in 0..n {
+                    let vip = v[(i, p)];
+                    let viq = v[(i, q)];
+                    v[(i, p)] = c * vip - s * viq;
+                    v[(i, q)] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    let evals = (0..n).map(|i| m[(i, i)]).collect();
+    (evals, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sort_spectrum;
+    use crate::util::rng::Rng;
+
+    fn assert_spectrum_close(got: Vec<Complex>, want: Vec<Complex>, tol: f64) {
+        let got = sort_spectrum(got);
+        let want = sort_spectrum(want);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g.re - w.re).abs() < tol && (g.im - w.im).abs() < tol,
+                "eig mismatch: got {g:?} want {w:?} (all got {got:?} want {want:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn eig_diagonal() {
+        let a = Mat::from_rows(&[&[3.0, 0.0, 0.0], &[0.0, -1.0, 0.0], &[0.0, 0.0, 0.5]]);
+        let eigs = eigenvalues(&a).unwrap();
+        assert_spectrum_close(
+            eigs,
+            vec![
+                Complex::new(3.0, 0.0),
+                Complex::new(-1.0, 0.0),
+                Complex::new(0.5, 0.0),
+            ],
+            1e-10,
+        );
+    }
+
+    #[test]
+    fn eig_rotation_block_complex_pair() {
+        // 2D rotation scaled by 0.9: eigenvalues 0.9 e^{±iθ}
+        let th = 0.4f64;
+        let (c, s) = (th.cos(), th.sin());
+        let a = Mat::from_rows(&[&[0.9 * c, -0.9 * s], &[0.9 * s, 0.9 * c]]);
+        let eigs = eigenvalues(&a).unwrap();
+        assert_spectrum_close(
+            eigs,
+            vec![
+                Complex::new(0.9 * c, 0.9 * s),
+                Complex::new(0.9 * c, -0.9 * s),
+            ],
+            1e-10,
+        );
+    }
+
+    #[test]
+    fn eig_companion_matrix_known_roots() {
+        // p(x) = (x-1)(x-2)(x-3) = x^3 - 6x^2 + 11x - 6
+        let a = Mat::from_rows(&[&[6.0, -11.0, 6.0], &[1.0, 0.0, 0.0], &[0.0, 1.0, 0.0]]);
+        let eigs = eigenvalues(&a).unwrap();
+        assert_spectrum_close(
+            eigs,
+            vec![
+                Complex::new(1.0, 0.0),
+                Complex::new(2.0, 0.0),
+                Complex::new(3.0, 0.0),
+            ],
+            1e-8,
+        );
+    }
+
+    #[test]
+    fn eig_defective_jordan_block() {
+        // Jordan block: double eigenvalue 2, defective.
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[0.0, 2.0]]);
+        let eigs = eigenvalues(&a).unwrap();
+        assert_spectrum_close(
+            eigs,
+            vec![Complex::new(2.0, 0.0), Complex::new(2.0, 0.0)],
+            1e-7,
+        );
+    }
+
+    #[test]
+    fn eig_matches_jacobi_on_random_symmetric() {
+        let mut rng = Rng::new(101);
+        for n in [2usize, 3, 5, 8, 12, 16] {
+            let mut a = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..=i {
+                    let v = rng.next_normal();
+                    a[(i, j)] = v;
+                    a[(j, i)] = v;
+                }
+            }
+            let got = eigenvalues(&a).unwrap();
+            let (mut want, _) = jacobi_symmetric(&a, 20);
+            want.sort_by(|x, y| y.partial_cmp(x).unwrap());
+            let got = sort_spectrum(got);
+            for g in &got {
+                assert!(g.im.abs() < 1e-8, "symmetric matrix gave complex eig {g:?}");
+            }
+            let mut got_re: Vec<f64> = got.iter().map(|c| c.re).collect();
+            got_re.sort_by(|x, y| y.partial_cmp(x).unwrap());
+            for (g, w) in got_re.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-7 * (1.0 + w.abs()), "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn eig_similarity_invariant_known_spectrum() {
+        // Build A = Q B Qᵀ with B block-diagonal (known spectrum), Q a
+        // product of random Householder reflections.
+        let mut rng = Rng::new(55);
+        let spectrum = [
+            Complex::new(0.95, 0.0),
+            Complex::new(0.7, 0.3),
+            Complex::new(0.7, -0.3),
+            Complex::new(-0.2, 0.0),
+            Complex::new(0.1, 0.8),
+            Complex::new(0.1, -0.8),
+        ];
+        let n = spectrum.len();
+        let mut b = Mat::zeros(n, n);
+        b[(0, 0)] = 0.95;
+        b[(1, 1)] = 0.7;
+        b[(1, 2)] = -0.3;
+        b[(2, 1)] = 0.3;
+        b[(2, 2)] = 0.7;
+        b[(3, 3)] = -0.2;
+        b[(4, 4)] = 0.1;
+        b[(4, 5)] = -0.8;
+        b[(5, 4)] = 0.8;
+        b[(5, 5)] = 0.1;
+        // random orthogonal similarity
+        let mut q = Mat::eye(n);
+        for _ in 0..3 {
+            let mut v: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            v.iter_mut().for_each(|x| *x /= norm);
+            let mut h = Mat::eye(n);
+            for i in 0..n {
+                for j in 0..n {
+                    h[(i, j)] -= 2.0 * v[i] * v[j];
+                }
+            }
+            q = q.matmul(&h);
+        }
+        let a = q.matmul(&b).matmul(&q.t());
+        let eigs = eigenvalues(&a).unwrap();
+        assert_spectrum_close(eigs, spectrum.to_vec(), 1e-8);
+    }
+
+    #[test]
+    fn eig_scale_edge_cases() {
+        for scale in [1e-8, 1.0, 1e8] {
+            let a = Mat::from_rows(&[
+                &[0.0 * scale, 1.0 * scale],
+                &[-1.0 * scale, 0.0 * scale],
+            ]);
+            let eigs = eigenvalues(&a).unwrap();
+            assert_spectrum_close(
+                eigs,
+                vec![Complex::new(0.0, scale), Complex::new(0.0, -scale)],
+                1e-8 * scale,
+            );
+        }
+    }
+
+    #[test]
+    fn eig_zero_and_tiny_matrices() {
+        assert!(eigenvalues(&Mat::zeros(0, 0)).unwrap().is_empty());
+        let e = eigenvalues(&Mat::from_rows(&[&[7.0]])).unwrap();
+        assert_eq!(e, vec![Complex::new(7.0, 0.0)]);
+        let e = eigenvalues(&Mat::zeros(4, 4)).unwrap();
+        assert_eq!(e.len(), 4);
+        for c in e {
+            assert_eq!((c.re, c.im), (0.0, 0.0));
+        }
+    }
+
+    #[test]
+    fn hessenberg_preserves_spectrum_structure() {
+        let mut rng = Rng::new(7);
+        let n = 8;
+        let mut a = Mat::zeros(n, n);
+        for v in a.data.iter_mut() {
+            *v = rng.next_normal();
+        }
+        let mut h = a.clone();
+        hessenberg(&mut h);
+        // zero below subdiagonal
+        for i in 0..n {
+            for j in 0..i.saturating_sub(1) {
+                assert_eq!(h[(i, j)], 0.0, "({i},{j}) not zeroed");
+            }
+        }
+        // Frobenius norm preserved by the orthogonal similarity
+        assert!((a.fro() - h.fro()).abs() < 1e-9 * a.fro());
+    }
+
+    #[test]
+    fn jacobi_diagonalizes() {
+        let a = Mat::from_rows(&[&[4.0, 1.0, 0.5], &[1.0, 3.0, 0.2], &[0.5, 0.2, 1.0]]);
+        let (evals, v) = jacobi_symmetric(&a, 15);
+        // A v_i = λ_i v_i
+        for i in 0..3 {
+            for r in 0..3 {
+                let mut av = 0.0;
+                for c in 0..3 {
+                    av += a[(r, c)] * v[(c, i)];
+                }
+                assert!((av - evals[i] * v[(r, i)]).abs() < 1e-9);
+            }
+        }
+        let mut sorted = evals.clone();
+        sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let trace: f64 = (0..3).map(|i| a[(i, i)]).sum();
+        assert!((sorted.iter().sum::<f64>() - trace).abs() < 1e-9);
+    }
+
+    /// Property: eigenvalue sum ≈ trace, product of |λ| ≈ |det| (via the
+    /// spectrum of random matrices against those invariants).
+    #[test]
+    fn prop_trace_invariant_random() {
+        let mut rng = Rng::new(2024);
+        for trial in 0..50 {
+            let n = 2 + (trial % 9);
+            let mut a = Mat::zeros(n, n);
+            for v in a.data.iter_mut() {
+                *v = rng.next_normal();
+            }
+            let eigs = eigenvalues(&a).unwrap();
+            assert_eq!(eigs.len(), n);
+            let trace: f64 = (0..n).map(|i| a[(i, i)]).sum();
+            let sum_re: f64 = eigs.iter().map(|c| c.re).sum();
+            let sum_im: f64 = eigs.iter().map(|c| c.im).sum();
+            assert!(
+                (sum_re - trace).abs() < 1e-7 * (1.0 + trace.abs()),
+                "trial {trial}: trace {trace} vs eig-sum {sum_re}"
+            );
+            assert!(sum_im.abs() < 1e-7, "imaginary parts don't cancel: {sum_im}");
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Dense linear algebra substrate.
+//!
+//! The AOT artifact hands the analysis executor a small (r×r, r ≤ 16)
+//! non-symmetric projected operator `Ã`; its eigenvalues are the DMD
+//! eigenvalues.  A general real eigensolver needs dynamically-converging
+//! QR iteration, which does not belong in a static HLO graph and which
+//! the CPU PJRT plugin could only do via LAPACK custom-calls it cannot
+//! execute — so it lives here, in Rust, on the request path:
+//!
+//! * [`Mat`] — row-major dense matrix with the handful of ops we need,
+//! * [`eig::eigenvalues`] — Householder-Hessenberg + Francis
+//!   double-shift QR (the classic EISPACK `hqr` scheme),
+//! * [`eig::jacobi_symmetric`] — cyclic Jacobi for symmetric matrices
+//!   (test oracle, and the mirror of the L2 HLO eigensolver),
+//! * [`dmd`] — a pure-Rust mirror of the L2 `dmd_reduced` graph
+//!   (fallback when artifacts are absent + cross-validation of the PJRT
+//!   path) and the paper's Fig 5 stability metric.
+
+pub mod dmd;
+pub mod eig;
+
+use std::fmt;
+
+use anyhow::{ensure, Result};
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    /// Build from a flat row-major slice.
+    pub fn from_slice(rows: usize, cols: usize, data: &[f64]) -> Result<Self> {
+        ensure!(data.len() == rows * cols, "shape mismatch");
+        Ok(Mat { rows, cols, data: data.to_vec() })
+    }
+
+    /// f32 convenience (artifact outputs are f32).
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Result<Self> {
+        ensure!(data.len() == rows * cols, "shape mismatch");
+        Ok(Mat {
+            rows,
+            cols,
+            data: data.iter().map(|&v| v as f64).collect(),
+        })
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // i-k-j loop order: streams `other` rows, decent cache behaviour
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute element difference (test helper).
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows {
+            write!(f, "  ")?;
+            for j in 0..self.cols {
+                write!(f, "{:>12.6} ", self[(i, j)])?;
+            }
+            writeln!(f)?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// A complex number as (re, im) — all we need for eigenvalue lists.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex {
+    pub fn new(re: f64, im: f64) -> Self {
+        Complex { re, im }
+    }
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+}
+
+/// Sort eigenvalues canonically (by |λ| descending, ties by re, im) so
+/// spectra can be compared across solvers.
+pub fn sort_spectrum(mut eigs: Vec<Complex>) -> Vec<Complex> {
+    eigs.sort_by(|a, b| {
+        b.abs()
+            .partial_cmp(&a.abs())
+            .unwrap()
+            .then(b.re.partial_cmp(&a.re).unwrap())
+            .then(b.im.partial_cmp(&a.im).unwrap())
+    });
+    eigs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let i = Mat::eye(2);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Mat::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        assert_eq!(a.t().t(), a);
+        assert_eq!(a.t().rows, 3);
+    }
+
+    #[test]
+    fn fro_norm() {
+        let a = Mat::from_rows(&[&[3.0, 4.0]]);
+        assert!((a.fro() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sort_spectrum_by_magnitude() {
+        let s = sort_spectrum(vec![
+            Complex::new(0.1, 0.0),
+            Complex::new(0.0, 1.0),
+            Complex::new(-0.5, 0.0),
+        ]);
+        assert_eq!(s[0], Complex::new(0.0, 1.0));
+        assert_eq!(s[2], Complex::new(0.1, 0.0));
+    }
+}

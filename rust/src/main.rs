@@ -1,0 +1,302 @@
+//! `elasticbroker` — the launcher.  See [`elasticbroker::cli::USAGE`].
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use elasticbroker::analysis::{CsvSink, DmdConfig, DmdEngine};
+use elasticbroker::broker::{Broker, BrokerConfig};
+use elasticbroker::cli::{self, Args};
+use elasticbroker::config::{IoMode, WorkflowConfig};
+use elasticbroker::endpoint::{EndpointServer, StoreConfig};
+use elasticbroker::metrics::WorkflowMetrics;
+use elasticbroker::runtime::ArtifactSet;
+use elasticbroker::sim::{SimConfig, SimRunner};
+use elasticbroker::streamproc::{StreamReader, StreamingConfig, StreamingContext};
+use elasticbroker::synth::{self, SynthConfig};
+use elasticbroker::transport::ConnConfig;
+use elasticbroker::util;
+use elasticbroker::workflow;
+
+fn main() {
+    elasticbroker::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{}", cli::USAGE);
+        std::process::exit(2);
+    }
+    let sub = argv[0].clone();
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let res = match sub.as_str() {
+        "info" => cmd_info(),
+        "endpoint" => cmd_endpoint(&args),
+        "sim" => cmd_sim(&args),
+        "analysis" => cmd_analysis(&args),
+        "synth" => cmd_synth(&args),
+        "workflow" => cmd_workflow(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", cli::USAGE);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n\n{}", cli::USAGE);
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = res {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("elasticbroker 0.1.0 — ElasticBroker (ICCS 2020) reproduction");
+    match ArtifactSet::try_load_default() {
+        Some(arts) => {
+            println!("artifacts ({}):", arts.specs().len());
+            for s in arts.specs() {
+                let ins: Vec<String> = s
+                    .inputs
+                    .iter()
+                    .map(|t| format!("{}:{:?}", t.name, t.dims))
+                    .collect();
+                println!("  {:10} {:16} {}", s.name, s.key, ins.join(" "));
+            }
+        }
+        None => println!("artifacts: NOT FOUND (run `make artifacts`; Rust fallbacks active)"),
+    }
+    let cfg = WorkflowConfig::default();
+    println!(
+        "defaults: ranks={} lattice={}x{} steps={} interval={} trigger={}ms window={} rank={}",
+        cfg.ranks,
+        cfg.height,
+        cfg.width,
+        cfg.steps,
+        cfg.write_interval,
+        cfg.trigger_ms,
+        cfg.dmd_window,
+        cfg.dmd_rank
+    );
+    Ok(())
+}
+
+fn cmd_endpoint(args: &Args) -> Result<()> {
+    let bind = args.get("bind").unwrap_or("127.0.0.1:6379");
+    let cfg = StoreConfig {
+        stream_maxlen: args.get_parsed::<usize>("maxlen")?.unwrap_or(4096),
+        max_memory: args.get_parsed::<usize>("max-memory")?.unwrap_or(1 << 30),
+    };
+    let srv = EndpointServer::start(bind, cfg)?;
+    println!("endpoint listening on {}", srv.addr());
+    // Serve until killed.
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn load_workflow_config(args: &Args) -> Result<WorkflowConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => WorkflowConfig::from_file(path)?,
+        None => WorkflowConfig::default(),
+    };
+    cli::apply_overrides(&mut cfg, args)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let cfg = load_workflow_config(args)?;
+    let artifacts = ArtifactSet::try_load_default();
+    let broker = if cfg.io_mode == IoMode::Broker {
+        let endpoints = args
+            .get_addrs("endpoints")?
+            .context("--endpoints required for --io-mode broker")?;
+        Some(Arc::new(Broker::new(
+            BrokerConfig {
+                group_size: cfg.group_size,
+                queue_cap: cfg.queue_cap,
+                ..BrokerConfig::new(endpoints)
+            },
+            cfg.ranks,
+            WorkflowMetrics::new(),
+        )?))
+    } else {
+        None
+    };
+    let sim_cfg = SimConfig {
+        ranks: cfg.ranks,
+        height: cfg.height,
+        width: cfg.width,
+        steps: cfg.steps,
+        write_interval: cfg.write_interval,
+        io_mode: cfg.io_mode,
+        out_dir: cfg.out_dir.clone(),
+        field: "velocity".into(),
+        params: Default::default(),
+        use_pjrt: cfg.use_pjrt,
+        pfs_commit_ms: cfg.pfs_commit_ms,
+    };
+    let rep = SimRunner::run(&sim_cfg, broker, artifacts)?;
+    println!(
+        "simulation: {} ranks × {} steps in {:.2}s [{}] writes/rank={}",
+        rep.ranks,
+        rep.steps,
+        rep.elapsed.as_secs_f64(),
+        rep.backend,
+        rep.writes_per_rank
+    );
+    Ok(())
+}
+
+fn cmd_analysis(args: &Args) -> Result<()> {
+    let cfg = load_workflow_config(args)?;
+    let endpoints = args
+        .get_addrs("endpoints")?
+        .context("--endpoints required")?;
+    let field = args.get("field").unwrap_or("velocity").to_string();
+    let duration = Duration::from_secs(args.get_parsed::<u64>("duration-secs")?.unwrap_or(60));
+    let artifacts = ArtifactSet::try_load_default();
+    let metrics = WorkflowMetrics::new();
+
+    // Subscribe each endpoint reader to its groups' streams.
+    let groups =
+        elasticbroker::broker::GroupMap::new(cfg.ranks, cfg.group_size, endpoints.len())?;
+    let mut readers = Vec::new();
+    for (e, addr) in endpoints.iter().enumerate() {
+        readers.push(StreamReader::connect(
+            *addr,
+            groups.streams_of_endpoint(e, &field),
+            0,
+            ConnConfig::default(),
+        )?);
+    }
+    let engine = Arc::new(DmdEngine::new(
+        DmdConfig {
+            window: cfg.dmd_window,
+            rank: cfg.dmd_rank,
+            hop: 1,
+            ..Default::default()
+        },
+        artifacts,
+        metrics.clone(),
+    )?);
+    let csv = if cfg.analysis_csv.is_empty() {
+        None
+    } else {
+        Some(CsvSink::create(&cfg.analysis_csv)?)
+    };
+    let (tx, rx) = std::sync::mpsc::channel();
+    let ctx = StreamingContext::start(
+        StreamingConfig {
+            trigger_interval: Duration::from_millis(cfg.trigger_ms),
+            executors: cfg.executors,
+            batch_limit: 0,
+        },
+        readers,
+        move |b| engine.process(b),
+        tx,
+    );
+    let t0 = std::time::Instant::now();
+    let mut n = 0usize;
+    while t0.elapsed() < duration {
+        if let Ok((_seq, res)) = rx.recv_timeout(Duration::from_millis(200)) {
+            n += 1;
+            if let Some(c) = &csv {
+                c.write(&res)?;
+            }
+            if n % 50 == 0 {
+                println!(
+                    "analysis: {n} results; latest {} step {} stability {:.3e} ({} µs)",
+                    res.key, res.step, res.stability, res.latency_us
+                );
+            }
+        }
+    }
+    ctx.stop()?;
+    if let Some(c) = &csv {
+        c.flush()?;
+    }
+    println!(
+        "analysis done: {n} results; latency {}",
+        metrics.e2e_latency_us.summary()
+    );
+    Ok(())
+}
+
+fn cmd_synth(args: &Args) -> Result<()> {
+    let endpoints = args
+        .get_addrs("endpoints")?
+        .context("--endpoints required")?;
+    let ranks = args.get_parsed::<usize>("ranks")?.unwrap_or(16);
+    let cfg = SynthConfig {
+        ranks,
+        dim: args.get_parsed::<usize>("dim")?.unwrap_or(512),
+        records_per_rank: args.get_parsed::<u64>("records")?.unwrap_or(200),
+        rate_hz: args.get_parsed::<f64>("rate")?.unwrap_or(0.0),
+        field: args.get("field").unwrap_or("synth").to_string(),
+        ..Default::default()
+    };
+    let metrics = WorkflowMetrics::new();
+    let broker = Arc::new(Broker::new(
+        BrokerConfig {
+            group_size: args.get_parsed::<usize>("group-size")?.unwrap_or(16),
+            ..BrokerConfig::new(endpoints)
+        },
+        ranks,
+        metrics.clone(),
+    )?);
+    let rep = synth::run(&cfg, broker)?;
+    println!(
+        "synth: {} records ({}) in {:.2}s → {}/s",
+        rep.records,
+        util::fmt_bytes(rep.bytes),
+        rep.elapsed.as_secs_f64(),
+        util::fmt_bytes((rep.bytes as f64 / rep.elapsed.as_secs_f64()) as u64)
+    );
+    Ok(())
+}
+
+fn cmd_workflow(args: &Args) -> Result<()> {
+    let cfg = load_workflow_config(args)?;
+    let artifacts = ArtifactSet::try_load_default();
+    if artifacts.is_none() && cfg.use_pjrt {
+        log::warn!("artifacts not found; running with Rust fallbacks");
+    }
+    let rep = workflow::run_cfd_workflow(&cfg, artifacts)?;
+    println!(
+        "workflow [{}] io={} interval={}: sim {:.2}s, end-to-end {:.2}s, {} analyses",
+        rep.backend,
+        cfg.io_mode.name(),
+        cfg.write_interval,
+        rep.sim_elapsed.as_secs_f64(),
+        rep.workflow_elapsed.as_secs_f64(),
+        rep.analysis_results.len()
+    );
+    if !rep.analysis_results.is_empty() {
+        println!("  e2e latency: {}", rep.metrics.e2e_latency_us.summary());
+        println!(
+            "  shipped: {} ({}/s)",
+            util::fmt_bytes(rep.metrics.shipped.bytes()),
+            util::fmt_bytes(rep.metrics.shipped.bytes_per_sec() as u64)
+        );
+        // Fig 5 style summary: mean stability per rank/region.
+        let mut per_rank: std::collections::BTreeMap<u32, (f64, usize)> = Default::default();
+        for a in &rep.analysis_results {
+            let e = per_rank.entry(a.rank).or_insert((0.0, 0));
+            e.0 += a.stability;
+            e.1 += 1;
+        }
+        println!("  per-region stability (mean over windows):");
+        for (rank, (sum, n)) in per_rank {
+            println!("    region {rank:>3}: {:.4e}", sum / n as f64);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,325 @@
+//! Lightweight observability: counters, latency histograms and
+//! throughput meters.  Everything is lock-free on the hot path (atomics)
+//! because the broker writer threads and endpoint connection threads
+//! record into these concurrently.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Monotonic event counter.
+#[derive(Default, Debug)]
+pub struct Counter {
+    n: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn inc(&self) {
+        self.add(1)
+    }
+    pub fn add(&self, v: u64) {
+        self.n.fetch_add(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-linear histogram: 64 power-of-two major buckets × 16 linear
+/// sub-buckets (HdrHistogram-lite).  Records are µs values in the
+/// latency paths; quantile error is bounded by 1/16 ≈ 6% per bucket,
+/// plenty for the Fig 7a latency table.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    min: AtomicU64,
+}
+
+const SUB: usize = 16;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..64 * SUB).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    fn index(v: u64) -> usize {
+        let v = v.max(1);
+        let major = 63 - v.leading_zeros() as usize; // floor(log2 v)
+        let sub = if major == 0 {
+            0
+        } else {
+            // top `log2(SUB)` bits below the leading bit
+            ((v >> major.saturating_sub(4)) as usize) & (SUB - 1)
+        };
+        (major * SUB + sub).min(64 * SUB - 1)
+    }
+
+    /// Representative (upper-edge) value of a bucket index.
+    fn value(idx: usize) -> u64 {
+        let major = idx / SUB;
+        let sub = idx % SUB;
+        if major < 4 {
+            return 1u64 << major;
+        }
+        (1u64 << major) + ((sub as u64 + 1) << (major - 4))
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max(&self) -> u64 {
+        let c = self.count();
+        if c == 0 {
+            0
+        } else {
+            self.max.load(Ordering::Relaxed)
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        let c = self.count();
+        if c == 0 {
+            0
+        } else {
+            self.min.load(Ordering::Relaxed)
+        }
+    }
+
+    /// Approximate quantile (0.0 ..= 1.0).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::value(i).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Compact single-line summary for bench tables.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1} p50={} p95={} p99={} max={}",
+            self.count(),
+            self.mean(),
+            self.quantile(0.50),
+            self.quantile(0.95),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+/// Bytes/records-per-second meter over a wall-clock window.
+pub struct Throughput {
+    start: Instant,
+    bytes: Counter,
+    records: Counter,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput {
+            start: Instant::now(),
+            bytes: Counter::new(),
+            records: Counter::new(),
+        }
+    }
+
+    pub fn record(&self, bytes: u64) {
+        self.bytes.add(bytes);
+        self.records.inc();
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.get()
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records.get()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn bytes_per_sec(&self) -> f64 {
+        self.bytes.get() as f64 / self.elapsed_secs().max(1e-9)
+    }
+
+    pub fn records_per_sec(&self) -> f64 {
+        self.records.get() as f64 / self.elapsed_secs().max(1e-9)
+    }
+}
+
+/// Shared metrics bundle threaded through a whole workflow run.
+#[derive(Clone)]
+pub struct WorkflowMetrics {
+    /// broker_write call → enqueued (the simulation-visible cost).
+    pub write_call_us: Arc<Histogram>,
+    /// record generation → analysis completion (Fig 7a latency).
+    pub e2e_latency_us: Arc<Histogram>,
+    /// bytes shipped HPC → endpoints.
+    pub shipped: Arc<Throughput>,
+    /// bytes ingested by analysis executors.
+    pub analyzed: Arc<Throughput>,
+    /// records dropped by broker queue policy (0 under Block).
+    pub dropped: Arc<Counter>,
+}
+
+impl Default for WorkflowMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WorkflowMetrics {
+    pub fn new() -> Self {
+        WorkflowMetrics {
+            write_call_us: Arc::new(Histogram::new()),
+            e2e_latency_us: Arc::new(Histogram::new()),
+            shipped: Arc::new(Throughput::new()),
+            analyzed: Arc::new(Throughput::new()),
+            dropped: Arc::new(Counter::new()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, U64Range};
+
+    #[test]
+    fn counter_concurrent() {
+        let c = Arc::new(Counter::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn histogram_exact_small_values() {
+        let h = Histogram::new();
+        for v in [1, 2, 3, 4] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 4);
+        assert!((h.mean() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_bounded_error() {
+        let h = Histogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        for (q, want) in [(0.5, 50_000.0), (0.95, 95_000.0), (0.99, 99_000.0)] {
+            let got = h.quantile(q) as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.10, "q={q}: got {got} want {want} (rel {rel:.3})");
+        }
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    /// Property: quantile(1.0) never exceeds max; quantile is monotone in q.
+    #[test]
+    fn prop_quantile_monotone_and_bounded() {
+        prop::forall(9, 50, &U64Range(1, 1_000_000), |seed| {
+            let h = Histogram::new();
+            let mut rng = crate::util::rng::Rng::new(*seed);
+            for _ in 0..200 {
+                h.record(rng.next_below(10_000_000) + 1);
+            }
+            let mut prev = 0;
+            for i in 0..=10 {
+                let q = h.quantile(i as f64 / 10.0);
+                if q < prev {
+                    return Err(format!("quantile not monotone at {i}: {q} < {prev}"));
+                }
+                prev = q;
+            }
+            if h.quantile(1.0) > h.max() {
+                return Err("q(1.0) > max".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let t = Throughput::new();
+        t.record(1000);
+        t.record(500);
+        assert_eq!(t.bytes(), 1500);
+        assert_eq!(t.records(), 2);
+        assert!(t.bytes_per_sec() > 0.0);
+    }
+}

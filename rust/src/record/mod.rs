@@ -1,0 +1,353 @@
+//! The simulation→Cloud stream record: schema + binary codec.
+//!
+//! A record is one field snapshot from one simulation process at one
+//! timestep (the paper's §3.1: "Each stream record contains the
+//! time-step information and the serialized field data of the simulation
+//! process").  We add schema (shape, dtype) so the Cloud side can
+//! reassemble arrays without out-of-band coordination, and a generation
+//! timestamp so the analysis side can measure the §4.3 latency metric.
+//!
+//! Wire layout (little-endian, CRC-protected):
+//!
+//! ```text
+//! magic    u32   0x4542_5231  ("EBR1")
+//! step     u64   simulation timestep
+//! gen_us   u64   generation timestamp, µs since epoch
+//! rank     u32   source MPI-style rank
+//! dtype    u8    0 = f32 (the only dtype the kernels emit today)
+//! ndim     u8    number of dims (<= 4)
+//! dims     u32 × ndim
+//! name_len u16,  name bytes (field name, e.g. "velocity")
+//! payload_len u32, payload bytes
+//! crc32    u32   over everything above
+//! ```
+
+mod crc32;
+
+pub use crc32::crc32;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+/// Payload element type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32 = 0,
+}
+
+impl Dtype {
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<Self> {
+        match v {
+            0 => Ok(Dtype::F32),
+            other => bail!("unknown dtype tag {other}"),
+        }
+    }
+}
+
+const MAGIC: u32 = 0x4542_5231;
+
+/// One field snapshot travelling HPC → Cloud.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamRecord {
+    /// Field name (e.g. `"velocity"`), registered at `broker_init`.
+    pub field: String,
+    /// Source simulation rank.
+    pub rank: u32,
+    /// Simulation timestep the snapshot belongs to.
+    pub step: u64,
+    /// µs-since-epoch at generation (drives the Fig 7a latency metric).
+    pub gen_micros: u64,
+    /// Element type of `payload`.
+    pub dtype: Dtype,
+    /// Array shape (row-major payload).
+    pub shape: Vec<u32>,
+    /// Raw little-endian element bytes; `Arc` so fan-out paths don't copy.
+    pub payload: Arc<Vec<u8>>,
+}
+
+impl StreamRecord {
+    /// Build an f32 record from a slice (copies once into the payload).
+    pub fn from_f32(
+        field: &str,
+        rank: u32,
+        step: u64,
+        gen_micros: u64,
+        shape: &[u32],
+        data: &[f32],
+    ) -> Result<Self> {
+        let n: usize = shape.iter().map(|&d| d as usize).product();
+        if n != data.len() {
+            bail!("shape {shape:?} (={n}) does not match data length {}", data.len());
+        }
+        let mut payload = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(StreamRecord {
+            field: field.to_string(),
+            rank,
+            step,
+            gen_micros,
+            dtype: Dtype::F32,
+            shape: shape.to_vec(),
+            payload: Arc::new(payload),
+        })
+    }
+
+    /// Decode the payload as f32 values.
+    pub fn payload_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("payload is not f32");
+        }
+        if self.payload.len() % 4 != 0 {
+            bail!("payload length {} not divisible by 4", self.payload.len());
+        }
+        Ok(self
+            .payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Number of elements implied by the shape.
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().map(|&d| d as usize).product()
+    }
+
+    /// The endpoint stream key this record belongs to: one stream per
+    /// (field, rank), mirroring the paper's per-process data streams.
+    pub fn stream_key(&self) -> String {
+        stream_key(&self.field, self.rank)
+    }
+
+    /// Serialized size of the encoded record (for metrics/backpressure).
+    pub fn encoded_len(&self) -> usize {
+        4 + 8 + 8 + 4 + 1 + 1 + 4 * self.shape.len() + 2 + self.field.len() + 4
+            + self.payload.len()
+            + 4
+    }
+
+    /// Encode to the binary wire format described in the module docs.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&self.gen_micros.to_le_bytes());
+        out.extend_from_slice(&self.rank.to_le_bytes());
+        out.push(self.dtype as u8);
+        out.push(self.shape.len() as u8);
+        for d in &self.shape {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.field.len() as u16).to_le_bytes());
+        out.extend_from_slice(self.field.as_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Decode from the binary wire format (validates magic + CRC).
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader { buf, pos: 0 };
+        let magic = r.u32()?;
+        if magic != MAGIC {
+            bail!("bad record magic 0x{magic:08x}");
+        }
+        let step = r.u64()?;
+        let gen_micros = r.u64()?;
+        let rank = r.u32()?;
+        let dtype = Dtype::from_u8(r.u8()?)?;
+        let ndim = r.u8()? as usize;
+        if ndim > 4 {
+            bail!("too many dims: {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u32()?);
+        }
+        let name_len = r.u16()? as usize;
+        let name = r.bytes(name_len)?;
+        let field = String::from_utf8(name.to_vec()).context("field name not UTF-8")?;
+        let payload_len = r.u32()? as usize;
+        let payload = r.bytes(payload_len)?.to_vec();
+        let crc_pos = r.pos;
+        let crc = r.u32()?;
+        let want = crc32(&buf[..crc_pos]);
+        if crc != want {
+            bail!("record CRC mismatch: got 0x{crc:08x} want 0x{want:08x}");
+        }
+        let n: usize = shape.iter().map(|&d| d as usize).product();
+        if n * dtype.size() != payload.len() {
+            bail!(
+                "shape {shape:?} implies {} bytes but payload has {}",
+                n * dtype.size(),
+                payload.len()
+            );
+        }
+        Ok(StreamRecord {
+            field,
+            rank,
+            step,
+            gen_micros,
+            dtype,
+            shape,
+            payload: Arc::new(payload),
+        })
+    }
+}
+
+/// Stream key for a (field, rank) pair: `"<field>/<rank>"`.
+pub fn stream_key(field: &str, rank: u32) -> String {
+    format!("{field}/{rank}")
+}
+
+/// Parse a stream key back into (field, rank).
+pub fn parse_stream_key(key: &str) -> Option<(&str, u32)> {
+    let (field, rank) = key.rsplit_once('/')?;
+    Some((field, rank.parse().ok()?))
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("record truncated at offset {} (need {n} more bytes)", self.pos);
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, F32Vec};
+    use crate::util::rng::Rng;
+
+    fn sample() -> StreamRecord {
+        StreamRecord::from_f32("velocity", 3, 120, 1_700_000_000_000_000, &[2, 4], &[
+            0.0, 1.0, -2.5, 3.25, 4.0, 5.5, -6.0, 7.75,
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_basic() {
+        let r = sample();
+        let got = StreamRecord::decode(&r.encode()).unwrap();
+        assert_eq!(got, r);
+        assert_eq!(got.payload_f32().unwrap()[2], -2.5);
+    }
+
+    #[test]
+    fn encoded_len_is_exact() {
+        let r = sample();
+        assert_eq!(r.encode().len(), r.encoded_len());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(StreamRecord::from_f32("v", 0, 0, 0, &[3, 3], &[0.0; 8]).is_err());
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let mut buf = sample().encode();
+        let mid = buf.len() / 2;
+        buf[mid] ^= 0x40;
+        assert!(StreamRecord::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected_at_every_length() {
+        let buf = sample().encode();
+        for cut in 0..buf.len() {
+            assert!(
+                StreamRecord::decode(&buf[..cut]).is_err(),
+                "decode of {cut}-byte prefix should fail"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = sample().encode();
+        buf[0] ^= 0xFF;
+        assert!(StreamRecord::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn stream_key_roundtrip() {
+        assert_eq!(stream_key("velocity", 12), "velocity/12");
+        assert_eq!(parse_stream_key("velocity/12"), Some(("velocity", 12)));
+        assert_eq!(parse_stream_key("a/b/7"), Some(("a/b", 7)));
+        assert_eq!(parse_stream_key("norank"), None);
+    }
+
+    /// Property: arbitrary f32 payloads roundtrip bit-exactly.
+    #[test]
+    fn prop_roundtrip_arbitrary_payloads() {
+        let gen = F32Vec { max_len: 512, scale: 1e6 };
+        prop::forall(0x5EED, 100, &gen, |data| {
+            let shape = [data.len() as u32];
+            let r = StreamRecord::from_f32("u", 7, 9, 11, &shape, data)
+                .map_err(|e| e.to_string())?;
+            let got = StreamRecord::decode(&r.encode()).map_err(|e| e.to_string())?;
+            if got != r {
+                return Err("record mismatch".into());
+            }
+            let back = got.payload_f32().map_err(|e| e.to_string())?;
+            if back.iter().zip(data).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err("payload bits changed".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: single-bit flips anywhere are detected (CRC or schema).
+    #[test]
+    fn prop_bit_flips_detected() {
+        let r = sample();
+        let buf = r.encode();
+        let mut rng = Rng::new(77);
+        for _ in 0..300 {
+            let byte = rng.next_below(buf.len() as u64) as usize;
+            let bit = rng.next_below(8) as u8;
+            let mut fuzzed = buf.clone();
+            fuzzed[byte] ^= 1 << bit;
+            match StreamRecord::decode(&fuzzed) {
+                Err(_) => {}
+                Ok(got) => panic!("undetected corruption at byte {byte} bit {bit}: {got:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Parser for `artifacts/manifest.txt` (written by `python/compile/aot.py`).
+//!
+//! Format: one artifact per line, whitespace-separated `key=value`
+//! pairs; tensor lists are comma-separated `name:dtype:AxBxC` triples:
+//!
+//! ```text
+//! artifact name=lbm_step key=h16_w128 path=lbm_step_h16_w128.hlo.txt \
+//!   inputs=f:f32:9x18x128,mask:f32:18x128 outputs=... meta=tau:0.56,...
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Shape/dtype of one artifact input or output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    /// Only f32 is emitted today; kept as a field for forward-compat.
+    pub dtype: String,
+    pub dims: Vec<i64>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+}
+
+/// One artifact entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Logical name (`lbm_step`, `lbm_init`, `dmd`).
+    pub name: String,
+    /// Shape-variant key (`h16_w128`, `d4096_m9_r6`).
+    pub key: String,
+    /// HLO text file, relative to the artifact dir.
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (`tau`, `u0`, `rank`, `window`, ...).
+    pub meta: HashMap<String, String>,
+}
+
+impl ArtifactSpec {
+    /// Metadata value parsed as f64.
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key)?.parse().ok()
+    }
+
+    /// Metadata value parsed as usize.
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key)?.parse().ok()
+    }
+}
+
+/// Parse the whole manifest text.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
+    let mut specs = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        match parts.next() {
+            Some("artifact") => {}
+            Some(other) => bail!("manifest line {}: unknown entry '{other}'", lineno + 1),
+            None => continue,
+        }
+        let mut fields: HashMap<&str, &str> = HashMap::new();
+        for kv in parts {
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("manifest line {}: bad pair '{kv}'", lineno + 1))?;
+            fields.insert(k, v);
+        }
+        let get = |k: &str| -> Result<&str> {
+            fields
+                .get(k)
+                .copied()
+                .with_context(|| format!("manifest line {}: missing '{k}'", lineno + 1))
+        };
+        let spec = ArtifactSpec {
+            name: get("name")?.to_string(),
+            key: get("key")?.to_string(),
+            path: get("path")?.to_string(),
+            inputs: parse_tensor_list(get("inputs")?)?,
+            outputs: parse_tensor_list(get("outputs")?)?,
+            meta: parse_meta(fields.get("meta").copied().unwrap_or("")),
+        };
+        if spec.path.contains("..") || spec.path.starts_with('/') {
+            bail!("manifest line {}: suspicious path '{}'", lineno + 1, spec.path);
+        }
+        specs.push(spec);
+    }
+    Ok(specs)
+}
+
+fn parse_tensor_list(s: &str) -> Result<Vec<TensorSpec>> {
+    let mut out = Vec::new();
+    for item in s.split(',').filter(|x| !x.is_empty()) {
+        let mut it = item.split(':');
+        let name = it.next().context("tensor: missing name")?;
+        let dtype = it.next().with_context(|| format!("tensor '{name}': missing dtype"))?;
+        if dtype != "f32" {
+            bail!("tensor '{name}': unsupported dtype '{dtype}'");
+        }
+        let dims_s = it.next().with_context(|| format!("tensor '{name}': missing dims"))?;
+        let dims = dims_s
+            .split('x')
+            .map(|d| d.parse::<i64>().map_err(Into::into))
+            .collect::<Result<Vec<i64>>>()
+            .with_context(|| format!("tensor '{name}': bad dims '{dims_s}'"))?;
+        if dims.iter().any(|&d| d <= 0) {
+            bail!("tensor '{name}': non-positive dim in {dims:?}");
+        }
+        out.push(TensorSpec {
+            name: name.to_string(),
+            dtype: dtype.to_string(),
+            dims,
+        });
+    }
+    Ok(out)
+}
+
+fn parse_meta(s: &str) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    for item in s.split(',').filter(|x| !x.is_empty()) {
+        if let Some((k, v)) = item.split_once(':') {
+            out.insert(k.to_string(), v.to_string());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment line
+artifact name=lbm_step key=h16_w128 path=lbm_step_h16_w128.hlo.txt \
+inputs=f:f32:9x18x128,mask:f32:18x128 outputs=f:f32:9x18x128,u:f32:2x16x128 \
+meta=tau:0.56,u0:0.1,block_h:6
+
+artifact name=dmd key=d512_m9_r6 path=dmd_d512_m9_r6.hlo.txt \
+inputs=x:f32:512x9 outputs=atilde:f32:6x6,sigma:f32:6 meta=rank:6,window:8
+";
+
+    #[test]
+    fn parses_sample() {
+        let specs = parse_manifest(SAMPLE).unwrap();
+        assert_eq!(specs.len(), 2);
+        let s = &specs[0];
+        assert_eq!(s.name, "lbm_step");
+        assert_eq!(s.key, "h16_w128");
+        assert_eq!(s.inputs.len(), 2);
+        assert_eq!(s.inputs[0].dims, vec![9, 18, 128]);
+        assert_eq!(s.inputs[0].element_count(), 9 * 18 * 128);
+        assert_eq!(s.outputs[1].name, "u");
+        assert_eq!(s.meta_f64("tau"), Some(0.56));
+        assert_eq!(s.meta_usize("block_h"), Some(6));
+        let d = &specs[1];
+        assert_eq!(d.meta_usize("rank"), Some(6));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse_manifest("garbage name=x\n").is_err());
+        assert!(parse_manifest("artifact name=a key=k\n").is_err()); // missing path
+        assert!(parse_manifest(
+            "artifact name=a key=k path=p inputs=x:f64:3 outputs= meta=\n"
+        )
+        .is_err()); // f64 unsupported
+        assert!(parse_manifest(
+            "artifact name=a key=k path=../evil inputs= outputs= meta=\n"
+        )
+        .is_err()); // path traversal
+        assert!(parse_manifest(
+            "artifact name=a key=k path=p inputs=x:f32:0x3 outputs= meta=\n"
+        )
+        .is_err()); // zero dim
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        if let Ok(text) = std::fs::read_to_string("artifacts/manifest.txt") {
+            let specs = parse_manifest(&text).unwrap();
+            assert!(specs.iter().any(|s| s.name == "lbm_step"));
+            assert!(specs.iter().any(|s| s.name == "dmd"));
+            for s in &specs {
+                assert!(!s.inputs.is_empty());
+                assert!(!s.outputs.is_empty());
+            }
+        }
+    }
+}

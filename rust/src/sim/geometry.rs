@@ -1,0 +1,164 @@
+//! WindAroundBuildings geometry: walls + a deterministic cluster of
+//! rectangular buildings (the paper's Fig 4 case, reduced to 2-D).
+
+/// A solid rectangle in global (row, col) coordinates, half-open.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rect {
+    pub y0: usize,
+    pub y1: usize,
+    pub x0: usize,
+    pub x1: usize,
+}
+
+impl Rect {
+    pub fn contains(&self, y: usize, x: usize) -> bool {
+        y >= self.y0 && y < self.y1 && x >= self.x0 && x < self.x1
+    }
+    pub fn area(&self) -> usize {
+        (self.y1 - self.y0) * (self.x1 - self.x0)
+    }
+}
+
+/// The building cluster, scaled to the lattice size.  Proportions give
+/// an urban-canyon wake structure: staggered blocks of varying size in
+/// the upstream two-thirds of the channel.
+pub fn buildings(h: usize, w: usize) -> Vec<Rect> {
+    let r = |fy0: f64, fy1: f64, fx0: f64, fx1: f64| Rect {
+        y0: (h as f64 * fy0) as usize,
+        y1: (h as f64 * fy1) as usize,
+        x0: (w as f64 * fx0) as usize,
+        x1: (w as f64 * fx1) as usize,
+    };
+    vec![
+        r(0.20, 0.45, 0.20, 0.28),
+        r(0.55, 0.80, 0.24, 0.33),
+        r(0.32, 0.62, 0.42, 0.50),
+        r(0.12, 0.34, 0.58, 0.66),
+        r(0.60, 0.86, 0.57, 0.68),
+    ]
+    .into_iter()
+    .filter(|r| r.area() > 0)
+    .collect()
+}
+
+/// Global solid mask `(h, w)`: channel walls on the first/last row plus
+/// the building cluster.
+pub fn build_mask(h: usize, w: usize) -> Vec<f32> {
+    let mut mask = vec![0.0f32; h * w];
+    for x in 0..w {
+        mask[x] = 1.0; // bottom wall (row 0)
+        mask[(h - 1) * w + x] = 1.0; // top wall
+    }
+    for b in buildings(h, w) {
+        for y in b.y0..b.y1.min(h) {
+            for x in b.x0..b.x1.min(w) {
+                mask[y * w + x] = 1.0;
+            }
+        }
+    }
+    mask
+}
+
+/// Extract the extended per-rank mask (`h_loc + 2` rows with halos).
+/// Halo rows beyond the global domain are solid (they sit behind the
+/// channel walls and never influence the interior).
+pub fn rank_mask(global: &[f32], h: usize, w: usize, ranks: usize, rank: usize) -> Vec<f32> {
+    assert_eq!(global.len(), h * w);
+    assert!(h % ranks == 0, "h {h} not divisible by ranks {ranks}");
+    let h_loc = h / ranks;
+    let hp = h_loc + 2;
+    let mut out = vec![0.0f32; hp * w];
+    let base = rank * h_loc;
+    for yy in 0..hp {
+        let gy = base as isize + yy as isize - 1;
+        for x in 0..w {
+            out[yy * w + x] = if gy < 0 || gy >= h as isize {
+                1.0 // beyond the walls: solid
+            } else {
+                global[gy as usize * w + x]
+            };
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_has_walls_and_buildings() {
+        let (h, w) = (64, 128);
+        let mask = build_mask(h, w);
+        for x in 0..w {
+            assert_eq!(mask[x], 1.0);
+            assert_eq!(mask[(h - 1) * w + x], 1.0);
+        }
+        let solid: usize = mask.iter().filter(|&&v| v > 0.5).count();
+        let total = h * w;
+        // walls are 2 rows; buildings add a noticeable but minor fraction
+        assert!(solid > 2 * w, "no buildings present");
+        assert!(solid < total / 3, "domain mostly solid: {solid}/{total}");
+        // inflow column must be fluid away from the walls
+        for y in 2..h - 2 {
+            assert_eq!(mask[y * w], 0.0, "inflow blocked at row {y}");
+        }
+    }
+
+    #[test]
+    fn buildings_scale_with_domain() {
+        for (h, w) in [(32usize, 64usize), (256, 128), (128, 512)] {
+            let bs = buildings(h, w);
+            assert!(!bs.is_empty());
+            for b in &bs {
+                assert!(b.y1 <= h && b.x1 <= w, "{b:?} out of {h}x{w}");
+                assert!(b.area() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_masks_tile_the_domain() {
+        let (h, w, ranks) = (64, 32, 8);
+        let global = build_mask(h, w);
+        let h_loc = h / ranks;
+        for rank in 0..ranks {
+            let rm = rank_mask(&global, h, w, ranks, rank);
+            assert_eq!(rm.len(), (h_loc + 2) * w);
+            // interior rows match the global mask exactly
+            for yy in 0..h_loc {
+                for x in 0..w {
+                    assert_eq!(
+                        rm[(yy + 1) * w + x],
+                        global[(rank * h_loc + yy) * w + x],
+                        "rank {rank} row {yy} col {x}"
+                    );
+                }
+            }
+        }
+        // boundary halos solid
+        let top = rank_mask(&global, h, w, ranks, 0);
+        assert!(top[..w].iter().all(|&v| v == 1.0));
+        let bot = rank_mask(&global, h, w, ranks, ranks - 1);
+        assert!(bot[(h_loc + 1) * w..].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn neighbour_halos_mirror_interiors() {
+        let (h, w, ranks) = (32, 16, 4);
+        let global = build_mask(h, w);
+        let h_loc = h / ranks;
+        for rank in 0..ranks - 1 {
+            let a = rank_mask(&global, h, w, ranks, rank);
+            let b = rank_mask(&global, h, w, ranks, rank + 1);
+            // a's bottom halo row == b's first interior row
+            assert_eq!(
+                &a[(h_loc + 1) * w..(h_loc + 2) * w],
+                &b[w..2 * w],
+                "rank {rank} halo mismatch"
+            );
+            // b's top halo row == a's last interior row
+            assert_eq!(&b[..w], &a[h_loc * w..(h_loc + 1) * w]);
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! Pure-Rust D2Q9 lattice-Boltzmann step — the exact mirror of the
+//! Layer-2 JAX graph in `python/compile/model.py::lbm_step`.
+//!
+//! Used when artifacts are absent (tests, quickstart) and to
+//! cross-validate the PJRT path (integration test
+//! `pjrt_and_fallback_agree`).  Keep this in lock-step with the Python:
+//! collision (BGK, solids pass through) → streaming (periodic roll) →
+//! full-way bounce-back → inflow (west, equilibrium at ρ=1,u=(u0,0)) →
+//! outflow (east, zero-gradient) → interior velocity moments.
+
+/// D2Q9 velocity set (must match `kernels/ref.py`).
+pub const EX: [i32; 9] = [0, 1, 0, -1, 0, 1, -1, -1, 1];
+pub const EY: [i32; 9] = [0, 0, 1, 0, -1, 1, 1, -1, -1];
+pub const OPP: [usize; 9] = [0, 3, 4, 1, 2, 7, 8, 5, 6];
+pub const W9: [f32; 9] = [
+    4.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 9.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+];
+
+/// Physics parameters (must match the AOT defaults in `model.py`).
+#[derive(Clone, Copy, Debug)]
+pub struct LbmParams {
+    pub tau: f32,
+    pub u0: f32,
+}
+
+impl Default for LbmParams {
+    fn default() -> Self {
+        // Must match model.py DEFAULT_TAU/DEFAULT_U0 (stability-checked
+        // for the full WindAroundBuildings geometry over 2000 steps).
+        LbmParams { tau: 0.60, u0: 0.10 }
+    }
+}
+
+/// Equilibrium distribution for one cell.
+#[inline]
+pub fn equilibrium(rho: f32, ux: f32, uy: f32) -> [f32; 9] {
+    let usq = ux * ux + uy * uy;
+    let mut out = [0.0f32; 9];
+    for c in 0..9 {
+        let cu = EX[c] as f32 * ux + EY[c] as f32 * uy;
+        out[c] = W9[c] * rho * (1.0 + 3.0 * cu + 4.5 * cu * cu - 1.5 * usq);
+    }
+    out
+}
+
+/// Initial state: equilibrium at ρ=1 with the inflow wind (solids at
+/// rest) — mirror of `model.lbm_init`.
+pub fn init(mask: &[f32], hp: usize, w: usize, params: LbmParams) -> Vec<f32> {
+    let plane = hp * w;
+    let mut f = vec![0.0f32; 9 * plane];
+    for cell in 0..plane {
+        let ux = if mask[cell] > 0.5 { 0.0 } else { params.u0 };
+        let feq = equilibrium(1.0, ux, 0.0);
+        for c in 0..9 {
+            f[c * plane + cell] = feq[c];
+        }
+    }
+    f
+}
+
+/// One fused LBM step over an extended `(9, hp, w)` subdomain.
+///
+/// `f` is updated in place; returns the interior `(2, hp-2, w)` velocity
+/// field `(ux rows..., uy rows...)`.  `inflow=false` gives the closed
+/// periodic box used by conservation tests.
+pub fn step(
+    f: &mut Vec<f32>,
+    mask: &[f32],
+    hp: usize,
+    w: usize,
+    params: LbmParams,
+    inflow: bool,
+    scratch: &mut Vec<f32>,
+) -> Vec<f32> {
+    let plane = hp * w;
+    debug_assert_eq!(f.len(), 9 * plane);
+    debug_assert_eq!(mask.len(), plane);
+    let omega = 1.0 / params.tau;
+
+    // 1. collision (solids pass through)
+    scratch.clear();
+    scratch.resize(9 * plane, 0.0);
+    for y in 0..hp {
+        for x in 0..w {
+            let cell = y * w + x;
+            let mut fc = [0.0f32; 9];
+            for c in 0..9 {
+                fc[c] = f[c * plane + cell];
+            }
+            if mask[cell] > 0.5 {
+                for c in 0..9 {
+                    scratch[c * plane + cell] = fc[c];
+                }
+                continue;
+            }
+            let rho: f32 = fc.iter().sum();
+            let inv = 1.0 / rho;
+            let mut ux = 0.0;
+            let mut uy = 0.0;
+            for c in 1..9 {
+                ux += EX[c] as f32 * fc[c];
+                uy += EY[c] as f32 * fc[c];
+            }
+            ux *= inv;
+            uy *= inv;
+            let feq = equilibrium(rho, ux, uy);
+            for c in 0..9 {
+                scratch[c * plane + cell] = fc[c] + omega * (feq[c] - fc[c]);
+            }
+        }
+    }
+
+    // 2. streaming: f_new[c][y][x] = f_post[c][y - ey][x - ex] (periodic)
+    for c in 0..9 {
+        let (ex, ey) = (EX[c], EY[c]);
+        let src_plane = &scratch[c * plane..(c + 1) * plane];
+        let dst_plane = &mut f[c * plane..(c + 1) * plane];
+        for y in 0..hp {
+            let sy = ((y as i32 - ey).rem_euclid(hp as i32)) as usize;
+            for x in 0..w {
+                let sx = ((x as i32 - ex).rem_euclid(w as i32)) as usize;
+                dst_plane[y * w + x] = src_plane[sy * w + sx];
+            }
+        }
+    }
+
+    // 3. full-way bounce-back at solids
+    for y in 0..hp {
+        for x in 0..w {
+            let cell = y * w + x;
+            if mask[cell] > 0.5 {
+                let mut fc = [0.0f32; 9];
+                for c in 0..9 {
+                    fc[c] = f[c * plane + cell];
+                }
+                for c in 0..9 {
+                    f[c * plane + cell] = fc[OPP[c]];
+                }
+            }
+        }
+    }
+
+    if inflow {
+        // 4. inflow: west column to equilibrium(1, u0, 0) on fluid cells
+        let feq_in = equilibrium(1.0, params.u0, 0.0);
+        for y in 0..hp {
+            let cell = y * w;
+            if mask[cell] <= 0.5 {
+                for c in 0..9 {
+                    f[c * plane + cell] = feq_in[c];
+                }
+            }
+        }
+        // 5. outflow: east column copies its west neighbour
+        for y in 0..hp {
+            let dst = y * w + (w - 1);
+            let src = y * w + (w - 2);
+            for c in 0..9 {
+                f[c * plane + dst] = f[c * plane + src];
+            }
+        }
+    }
+
+    // 6. interior velocity moments (rows 1..hp-1)
+    let h = hp - 2;
+    let mut u = vec![0.0f32; 2 * h * w];
+    for y in 0..h {
+        for x in 0..w {
+            let cell = (y + 1) * w + x;
+            let mut rho = 0.0;
+            let mut ux = 0.0;
+            let mut uy = 0.0;
+            for c in 0..9 {
+                let v = f[c * plane + cell];
+                rho += v;
+                ux += EX[c] as f32 * v;
+                uy += EY[c] as f32 * v;
+            }
+            u[y * w + x] = ux / rho;
+            u[h * w + y * w + x] = uy / rho;
+        }
+    }
+    u
+}
+
+/// Total mass (Σf) — conservation diagnostics.
+pub fn total_mass(f: &[f32]) -> f64 {
+    f.iter().map(|&v| v as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn noisy_state(hp: usize, w: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let plane = hp * w;
+        let mask: Vec<f32> = (0..plane)
+            .map(|_| if rng.next_f64() < 0.15 { 1.0 } else { 0.0 })
+            .collect();
+        let mut f = init(&mask, hp, w, LbmParams::default());
+        for v in f.iter_mut() {
+            *v *= 1.0 + 0.05 * (rng.next_f32() - 0.5);
+        }
+        (f, mask)
+    }
+
+    #[test]
+    fn closed_box_conserves_mass() {
+        let (hp, w) = (12, 24);
+        let (mut f, mask) = noisy_state(hp, w, 3);
+        let m0 = total_mass(&f);
+        let mut scratch = Vec::new();
+        for _ in 0..50 {
+            step(&mut f, &mask, hp, w, LbmParams::default(), false, &mut scratch);
+        }
+        let m1 = total_mass(&f);
+        assert!(((m1 - m0) / m0).abs() < 1e-5, "mass drift {m0} -> {m1}");
+    }
+
+    #[test]
+    fn equilibrium_moments() {
+        let feq = equilibrium(1.2, 0.05, -0.03);
+        let rho: f32 = feq.iter().sum();
+        assert!((rho - 1.2).abs() < 1e-6);
+        let ux: f32 = (0..9).map(|c| EX[c] as f32 * feq[c]).sum();
+        let uy: f32 = (0..9).map(|c| EY[c] as f32 * feq[c]).sum();
+        assert!((ux / rho - 0.05).abs() < 1e-6);
+        assert!((uy / rho + 0.03).abs() < 1e-6);
+    }
+
+    #[test]
+    fn init_has_unit_density_and_wind() {
+        let (hp, w) = (6, 8);
+        let mask = vec![0.0f32; hp * w];
+        let f = init(&mask, hp, w, LbmParams::default());
+        let plane = hp * w;
+        for cell in 0..plane {
+            let rho: f32 = (0..9).map(|c| f[c * plane + cell]).sum();
+            assert!((rho - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn stays_finite_with_buildings_600_steps() {
+        let (hp, w) = (34, 96);
+        let plane = hp * w;
+        let mut mask = vec![0.0f32; plane];
+        for x in 0..w {
+            mask[w + x] = 1.0; // bottom wall (row 1)
+            mask[(hp - 2) * w + x] = 1.0; // top wall
+        }
+        for y in 12..22 {
+            for x in 30..36 {
+                mask[y * w + x] = 1.0;
+            }
+        }
+        let params = LbmParams::default();
+        let mut f = init(&mask, hp, w, params);
+        let mut scratch = Vec::new();
+        let mut u = Vec::new();
+        for _ in 0..600 {
+            u = step(&mut f, &mask, hp, w, params, true, &mut scratch);
+        }
+        assert!(u.iter().all(|v| v.is_finite()));
+        let max_u = u.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        assert!(max_u < 0.5, "lattice velocity {max_u} unstable");
+        // wake: slower flow right behind the building than upstream
+        let h = hp - 2;
+        let row = 15usize; // interior row index within the building band
+        let upstream: f32 = (10..20).map(|x| u[row * w + x]).sum::<f32>() / 10.0;
+        let wake: f32 = (37..45).map(|x| u[row * w + x]).sum::<f32>() / 8.0;
+        assert!(upstream > 0.05, "no free stream ({upstream})");
+        assert!(wake < upstream * 0.8, "no wake: up={upstream} wake={wake}");
+        let _ = h;
+    }
+
+    #[test]
+    fn solid_cells_report_zero_velocity_after_init() {
+        let (hp, w) = (8, 8);
+        let plane = hp * w;
+        let mut mask = vec![0.0f32; plane];
+        mask[3 * w + 3] = 1.0;
+        let f = init(&mask, hp, w, LbmParams::default());
+        let mut fc = [0.0f32; 9];
+        for c in 0..9 {
+            fc[c] = f[c * plane + 3 * w + 3];
+        }
+        let ux: f32 = (0..9).map(|c| EX[c] as f32 * fc[c]).sum();
+        assert!(ux.abs() < 1e-7);
+    }
+
+    #[test]
+    fn velocity_set_is_consistent() {
+        // opposite directions really are opposite; weights sum to 1
+        for c in 0..9 {
+            assert_eq!(EX[OPP[c]], -EX[c]);
+            assert_eq!(EY[OPP[c]], -EY[c]);
+        }
+        let sum: f32 = W9.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+}

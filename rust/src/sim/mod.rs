@@ -1,0 +1,23 @@
+//! The CFD simulation substrate — our OpenFOAM `simpleFoam`
+//! *WindAroundBuildings* stand-in (paper §4.1).
+//!
+//! A D2Q9 lattice-Boltzmann channel flow around a cluster of rectangular
+//! buildings, decomposed across MPI-style ranks along the height axis
+//! (the paper decomposes along Z), one thread per rank, with per-step
+//! halo exchange over channels.  Each rank advances its extended
+//! subdomain through either the **AOT-compiled PJRT artifact**
+//! (`lbm_step`, the Pallas collision kernel inlined) or the pure-Rust
+//! mirror ([`lbm`]), and every `write_interval` steps emits its interior
+//! velocity field through one of the paper's three I/O modes:
+//!
+//! * `Broker` — `broker_write` into the ElasticBroker pipeline,
+//! * `File`   — collated per-step files on a shared directory (the
+//!   paper's Lustre baseline; fsync models the PFS commit), or
+//! * `None`   — the simulation-only baseline.
+
+pub mod geometry;
+pub mod lbm;
+mod runner;
+
+pub use geometry::{build_mask, buildings, Rect};
+pub use runner::{SimConfig, SimReport, SimRunner};

@@ -1,0 +1,485 @@
+//! Multi-rank simulation driver: decomposition, halo exchange, I/O.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::geometry;
+use super::lbm::{self, LbmParams};
+use crate::broker::Broker;
+use crate::config::IoMode;
+use crate::runtime::{ArtifactSet, Executable};
+
+/// Simulation configuration (a subset of
+/// [`crate::config::WorkflowConfig`], decoupled so the sim can run
+/// standalone against remote endpoints).
+#[derive(Clone)]
+pub struct SimConfig {
+    pub ranks: usize,
+    pub height: usize,
+    pub width: usize,
+    pub steps: u64,
+    pub write_interval: u64,
+    pub io_mode: IoMode,
+    /// Directory for `IoMode::File` output.
+    pub out_dir: String,
+    /// Field name registered with the broker.
+    pub field: String,
+    pub params: LbmParams,
+    /// Prefer the PJRT artifact; falls back to pure Rust when absent.
+    pub use_pjrt: bool,
+    /// Modeled parallel-filesystem commit latency per collated step
+    /// (`IoMode::File` only).  Local NVMe fsync is ~2 ms; the paper's
+    /// Lustre writes from 16 ranks stall far longer — this knob stands
+    /// in for the shared-PFS round trip (DESIGN.md §2).  0 = raw disk.
+    pub pfs_commit_ms: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            ranks: 16,
+            height: 256,
+            width: 128,
+            steps: 2000,
+            write_interval: 5,
+            io_mode: IoMode::None,
+            out_dir: "sim_out".into(),
+            field: "velocity".into(),
+            params: LbmParams::default(),
+            use_pjrt: true,
+            pfs_commit_ms: 25,
+        }
+    }
+}
+
+/// What a run produced.
+pub struct SimReport {
+    /// Wall-clock from first step to last rank finished.
+    pub elapsed: Duration,
+    pub steps: u64,
+    pub ranks: usize,
+    /// Snapshots written per rank.
+    pub writes_per_rank: u64,
+    /// Final interior velocity field per rank (`2 × h_loc × w` each) —
+    /// used by the examples for visualization and by equivalence tests.
+    pub final_u: Vec<Vec<f32>>,
+    /// Which backend stepped the lattice ("pjrt" or "rust").
+    pub backend: &'static str,
+}
+
+/// Messages between ranks: one packed halo row (9 channels × w).
+type HaloRow = Vec<f32>;
+
+/// The simulation driver.
+pub struct SimRunner;
+
+impl SimRunner {
+    /// Run the full simulation; blocks until every rank finishes.
+    ///
+    /// `broker` must be `Some` when `cfg.io_mode == IoMode::Broker`;
+    /// `artifacts` enables the PJRT backend.
+    pub fn run(
+        cfg: &SimConfig,
+        broker: Option<Arc<Broker>>,
+        artifacts: Option<Arc<ArtifactSet>>,
+    ) -> Result<SimReport> {
+        anyhow::ensure!(cfg.ranks > 0, "ranks must be > 0");
+        anyhow::ensure!(
+            cfg.height % cfg.ranks == 0,
+            "height {} not divisible by ranks {}",
+            cfg.height,
+            cfg.ranks
+        );
+        let h_loc = cfg.height / cfg.ranks;
+        let hp = h_loc + 2;
+        let w = cfg.width;
+
+        // Resolve the stepping backend once (shared executable).
+        let exe: Option<(Arc<Executable>, Arc<Executable>)> = if cfg.use_pjrt {
+            match &artifacts {
+                Some(arts) => {
+                    let key = format!("h{h_loc}_w{w}");
+                    match (arts.executable("lbm_step", &key), arts.executable("lbm_init", &key)) {
+                        (Ok(step), Ok(init)) => Some((step, init)),
+                        _ => {
+                            log::warn!(
+                                "sim: no lbm artifacts for key h{h_loc}_w{w}; using Rust fallback"
+                            );
+                            None
+                        }
+                    }
+                }
+                None => None,
+            }
+        } else {
+            None
+        };
+        let backend = if exe.is_some() { "pjrt" } else { "rust" };
+
+        if cfg.io_mode == IoMode::Broker {
+            anyhow::ensure!(
+                broker.is_some(),
+                "broker required for IoMode::Broker"
+            );
+        }
+
+        // Geometry.
+        let global_mask = geometry::build_mask(cfg.height, w);
+        let masks: Vec<Vec<f32>> = (0..cfg.ranks)
+            .map(|r| geometry::rank_mask(&global_mask, cfg.height, w, cfg.ranks, r))
+            .collect();
+
+        // Halo channels: down[i] carries rank i → i+1; up[i] carries
+        // rank i+1 → i.  Capacity 1 keeps ranks in lockstep without
+        // blocking the sender.
+        let mut down_tx: Vec<Option<SyncSender<HaloRow>>> = vec![None; cfg.ranks];
+        let mut down_rx: Vec<Option<Receiver<HaloRow>>> = (0..cfg.ranks).map(|_| None).collect();
+        let mut up_tx: Vec<Option<SyncSender<HaloRow>>> = vec![None; cfg.ranks];
+        let mut up_rx: Vec<Option<Receiver<HaloRow>>> = (0..cfg.ranks).map(|_| None).collect();
+        for i in 0..cfg.ranks.saturating_sub(1) {
+            let (dtx, drx) = sync_channel::<HaloRow>(1);
+            down_tx[i] = Some(dtx);
+            down_rx[i + 1] = Some(drx);
+            let (utx, urx) = sync_channel::<HaloRow>(1);
+            up_tx[i + 1] = Some(utx);
+            up_rx[i] = Some(urx);
+        }
+
+        // File-mode collated writer.
+        let (file_tx, file_writer) = if cfg.io_mode == IoMode::File {
+            std::fs::create_dir_all(&cfg.out_dir)
+                .with_context(|| format!("creating {}", cfg.out_dir))?;
+            // Rendezvous channel: ranks block until the collated writer
+            // accepts their chunk — OpenFOAM's synchronous collated
+            // write semantics, which is what makes file-based I/O stall
+            // the simulation (Fig 6).
+            let (tx, rx) = sync_channel::<(usize, u64, Vec<f32>)>(0);
+            let dir = cfg.out_dir.clone();
+            let ranks = cfg.ranks;
+            let commit_ms = cfg.pfs_commit_ms;
+            let writer = std::thread::Builder::new()
+                .name("sim-file-writer".into())
+                .spawn(move || collated_writer(rx, &dir, ranks, commit_ms))?;
+            (Some(tx), Some(writer))
+        } else {
+            (None, None)
+        };
+
+        let t0 = Instant::now();
+        let mut handles = Vec::with_capacity(cfg.ranks);
+        for rank in 0..cfg.ranks {
+            let mask = masks[rank].clone();
+            let cfg = cfg.clone();
+            let exe = exe.clone();
+            let broker = broker.clone();
+            let file_tx = file_tx.clone();
+            let dtx = down_tx[rank].take();
+            let drx = down_rx[rank].take();
+            let utx = up_tx[rank].take();
+            let urx = up_rx[rank].take();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("sim-rank-{rank}"))
+                    .spawn(move || -> Result<(u64, Vec<f32>)> {
+                        rank_loop(
+                            rank, &cfg, hp, w, mask, exe, broker, file_tx, dtx, drx, utx, urx,
+                        )
+                    })?,
+            );
+        }
+        drop(file_tx);
+
+        let mut writes = 0u64;
+        let mut final_u = Vec::with_capacity(cfg.ranks);
+        for (rank, h) in handles.into_iter().enumerate() {
+            let (w_count, u) = h
+                .join()
+                .map_err(|_| anyhow::anyhow!("sim rank {rank} panicked"))?
+                .with_context(|| format!("sim rank {rank} failed"))?;
+            writes = w_count; // identical across ranks
+            final_u.push(u);
+        }
+        if let Some(fw) = file_writer {
+            fw.join()
+                .map_err(|_| anyhow::anyhow!("file writer panicked"))??;
+        }
+        let elapsed = t0.elapsed();
+        log::info!(
+            "sim: {} ranks × {} steps ({}x{}) in {:.2}s [{}] io={}",
+            cfg.ranks,
+            cfg.steps,
+            cfg.height,
+            cfg.width,
+            elapsed.as_secs_f64(),
+            backend,
+            cfg.io_mode.name(),
+        );
+        Ok(SimReport {
+            elapsed,
+            steps: cfg.steps,
+            ranks: cfg.ranks,
+            writes_per_rank: writes,
+            final_u,
+            backend,
+        })
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rank_loop(
+    rank: usize,
+    cfg: &SimConfig,
+    hp: usize,
+    w: usize,
+    mask: Vec<f32>,
+    exe: Option<(Arc<Executable>, Arc<Executable>)>,
+    broker: Option<Arc<Broker>>,
+    file_tx: Option<SyncSender<(usize, u64, Vec<f32>)>>,
+    down_tx: Option<SyncSender<HaloRow>>,
+    down_rx: Option<Receiver<HaloRow>>,
+    up_tx: Option<SyncSender<HaloRow>>,
+    up_rx: Option<Receiver<HaloRow>>,
+) -> Result<(u64, Vec<f32>)> {
+    let plane = hp * w;
+    let h_loc = hp - 2;
+
+    // Initial state (PJRT init artifact or Rust mirror — identical).
+    let mut f: Vec<f32> = match &exe {
+        Some((_, init_exe)) => init_exe.run_f32(&[&mask])?.remove(0),
+        None => lbm::init(&mask, hp, w, cfg.params),
+    };
+
+    // Broker context for this rank (the paper's broker_init).
+    let ctx = match (&cfg.io_mode, &broker) {
+        (IoMode::Broker, Some(b)) => Some(b.init(&cfg.field, rank as u32)?),
+        _ => None,
+    };
+
+    let mut scratch: Vec<f32> = Vec::new();
+    let mut u: Vec<f32> = vec![0.0; 2 * h_loc * w];
+    let mut writes = 0u64;
+
+    for step in 1..=cfg.steps {
+        // Advance one lattice step.
+        match &exe {
+            Some((step_exe, _)) => {
+                let mut out = step_exe.run_f32(&[&f, &mask])?;
+                u = out.pop().context("missing u output")?;
+                f = out.pop().context("missing f output")?;
+            }
+            None => {
+                u = lbm::step(&mut f, &mask, hp, w, cfg.params, true, &mut scratch);
+            }
+        }
+
+        // Halo exchange (send first; capacity-1 channels never block
+        // because each is drained every step).
+        if let Some(tx) = &up_tx {
+            tx.send(pack_row(&f, plane, w, 1))
+                .map_err(|_| anyhow::anyhow!("up neighbour of rank {rank} gone"))?;
+        }
+        if let Some(tx) = &down_tx {
+            tx.send(pack_row(&f, plane, w, hp - 2))
+                .map_err(|_| anyhow::anyhow!("down neighbour of rank {rank} gone"))?;
+        }
+        if let Some(rx) = &down_rx {
+            let row = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("halo recv from above failed at rank {rank}"))?;
+            unpack_row(&mut f, plane, w, 0, &row);
+        }
+        if let Some(rx) = &up_rx {
+            let row = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("halo recv from below failed at rank {rank}"))?;
+            unpack_row(&mut f, plane, w, hp - 1, &row);
+        }
+
+        // I/O at the write interval (the paper's runTime().write()
+        // replacement).
+        if step % cfg.write_interval == 0 {
+            writes += 1;
+            match cfg.io_mode {
+                IoMode::Broker => {
+                    ctx.as_ref()
+                        .unwrap()
+                        .write(step, &[2, h_loc as u32, w as u32], &u)?;
+                }
+                IoMode::File => {
+                    file_tx
+                        .as_ref()
+                        .unwrap()
+                        .send((rank, step, u.clone()))
+                        .map_err(|_| anyhow::anyhow!("file writer gone"))?;
+                }
+                IoMode::None => {}
+            }
+        }
+    }
+
+    if let Some(ctx) = ctx {
+        ctx.finalize()?;
+    }
+    Ok((writes, u))
+}
+
+fn pack_row(f: &[f32], plane: usize, w: usize, y: usize) -> HaloRow {
+    let mut out = Vec::with_capacity(9 * w);
+    for c in 0..9 {
+        out.extend_from_slice(&f[c * plane + y * w..c * plane + (y + 1) * w]);
+    }
+    out
+}
+
+fn unpack_row(f: &mut [f32], plane: usize, w: usize, y: usize, row: &HaloRow) {
+    debug_assert_eq!(row.len(), 9 * w);
+    for c in 0..9 {
+        f[c * plane + y * w..c * plane + (y + 1) * w]
+            .copy_from_slice(&row[c * w..(c + 1) * w]);
+    }
+}
+
+/// Collated file writer: assembles all ranks of a step into one file
+/// (the paper's OpenFOAM "collated" Lustre write), fsyncing each file
+/// to model the parallel-filesystem commit the paper pays for.
+fn collated_writer(
+    rx: Receiver<(usize, u64, Vec<f32>)>,
+    dir: &str,
+    ranks: usize,
+    commit_ms: u64,
+) -> Result<()> {
+    let mut pending: BTreeMap<u64, Vec<Option<Vec<f32>>>> = BTreeMap::new();
+    while let Ok((rank, step, data)) = rx.recv() {
+        let slot = pending
+            .entry(step)
+            .or_insert_with(|| vec![None; ranks]);
+        slot[rank] = Some(data);
+        if slot.iter().all(|s| s.is_some()) {
+            let chunks = pending.remove(&step).unwrap();
+            let path = format!("{dir}/step_{step:06}.bin");
+            let mut file = std::fs::File::create(&path)
+                .with_context(|| format!("creating {path}"))?;
+            let mut buf = Vec::new();
+            for chunk in chunks.into_iter().flatten() {
+                for v in chunk {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            file.write_all(&buf)?;
+            file.sync_all()?; // local durability
+            if commit_ms > 0 {
+                // modeled shared-PFS commit latency (see SimConfig docs)
+                std::thread::sleep(std::time::Duration::from_millis(commit_ms));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(ranks: usize, io: IoMode) -> SimConfig {
+        SimConfig {
+            ranks,
+            height: 32,
+            width: 64,
+            steps: 40,
+            write_interval: 10,
+            io_mode: io,
+            out_dir: std::env::temp_dir()
+                .join(format!("eb-sim-{}-{ranks}", std::process::id()))
+                .to_string_lossy()
+                .into_owned(),
+            field: "velocity".into(),
+            params: LbmParams::default(),
+            use_pjrt: false, // unit tests use the Rust mirror
+            pfs_commit_ms: 0, // raw local disk in unit tests
+        }
+    }
+
+    #[test]
+    fn single_rank_runs_and_reports() {
+        let cfg = small_cfg(1, IoMode::None);
+        let rep = SimRunner::run(&cfg, None, None).unwrap();
+        assert_eq!(rep.ranks, 1);
+        assert_eq!(rep.writes_per_rank, 4);
+        assert_eq!(rep.final_u.len(), 1);
+        assert_eq!(rep.final_u[0].len(), 2 * 32 * 64);
+        assert!(rep.final_u[0].iter().all(|v| v.is_finite()));
+        assert_eq!(rep.backend, "rust");
+    }
+
+    #[test]
+    fn multi_rank_matches_single_rank() {
+        // The decomposition invariant: N ranks with halo exchange must
+        // reproduce the single-rank whole-domain run.
+        let rep1 = SimRunner::run(&small_cfg(1, IoMode::None), None, None).unwrap();
+        let rep4 = SimRunner::run(&small_cfg(4, IoMode::None), None, None).unwrap();
+        let whole = &rep1.final_u[0]; // (2, 32, 64)
+        let (h, w) = (32usize, 64usize);
+        let h_loc = h / 4;
+        for rank in 0..4 {
+            let part = &rep4.final_u[rank]; // (2, 8, 64)
+            for comp in 0..2 {
+                for y in 0..h_loc {
+                    for x in 0..w {
+                        let got = part[comp * h_loc * w + y * w + x];
+                        let want = whole[comp * h * w + (rank * h_loc + y) * w + x];
+                        assert!(
+                            (got - want).abs() <= 1e-5,
+                            "rank {rank} comp {comp} ({y},{x}): {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn file_mode_writes_collated_steps() {
+        let cfg = small_cfg(2, IoMode::File);
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+        let rep = SimRunner::run(&cfg, None, None).unwrap();
+        assert_eq!(rep.writes_per_rank, 4);
+        let mut files: Vec<_> = std::fs::read_dir(&cfg.out_dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        files.sort();
+        assert_eq!(
+            files,
+            vec![
+                "step_000010.bin",
+                "step_000020.bin",
+                "step_000030.bin",
+                "step_000040.bin"
+            ]
+        );
+        // collated file holds every rank's interior field
+        let len = std::fs::metadata(format!("{}/step_000010.bin", cfg.out_dir))
+            .unwrap()
+            .len();
+        assert_eq!(len, (2 * 32 * 64 * 4) as u64);
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+
+    #[test]
+    fn broker_mode_requires_broker() {
+        let cfg = small_cfg(1, IoMode::Broker);
+        assert!(SimRunner::run(&cfg, None, None).is_err());
+    }
+
+    #[test]
+    fn invalid_decomposition_rejected() {
+        let mut cfg = small_cfg(3, IoMode::None); // 32 % 3 != 0
+        cfg.ranks = 3;
+        assert!(SimRunner::run(&cfg, None, None).is_err());
+    }
+}

@@ -1,0 +1,268 @@
+//! Endpoint polling: the spark-redis connector stand-in.
+//!
+//! A [`StreamReader`] owns one RESP connection to one endpoint and a
+//! cursor (`last seen id`) per subscribed stream.  Each [`poll`] issues
+//! a single batched `XREAD COUNT n STREAMS k1 k2 ... id1 id2 ...` for
+//! all streams, decodes the [`StreamRecord`] payloads, and advances the
+//! cursors — at-least-once delivery with in-order ids per stream.
+//!
+//! [`poll`]: StreamReader::poll
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+
+use anyhow::{bail, Context, Result};
+
+use crate::endpoint::EntryId;
+use crate::record::StreamRecord;
+use crate::transport::{ConnConfig, RespConn};
+use crate::wire::Value;
+
+use super::MicroBatch;
+
+/// Poller for a set of streams on one endpoint.
+pub struct StreamReader {
+    conn: RespConn,
+    /// stream key → last consumed entry id.
+    cursors: HashMap<String, EntryId>,
+    /// Max records per stream per poll (0 = unlimited).
+    batch_limit: usize,
+    /// Keys in subscription order (stable partition order).
+    keys: Vec<String>,
+}
+
+impl StreamReader {
+    pub fn connect(
+        addr: SocketAddr,
+        keys: Vec<String>,
+        batch_limit: usize,
+        conn_cfg: ConnConfig,
+    ) -> Result<Self> {
+        let conn = RespConn::connect(addr, conn_cfg)?;
+        let cursors = keys.iter().map(|k| (k.clone(), EntryId::ZERO)).collect();
+        Ok(StreamReader {
+            conn,
+            cursors,
+            batch_limit,
+            keys,
+        })
+    }
+
+    pub fn keys(&self) -> &[String] {
+        &self.keys
+    }
+
+    /// Subscribe to an additional stream (starts from the beginning).
+    pub fn subscribe(&mut self, key: String) {
+        if !self.cursors.contains_key(&key) {
+            self.cursors.insert(key.clone(), EntryId::ZERO);
+            self.keys.push(key);
+        }
+    }
+
+    /// One XREAD round-trip; returns a micro-batch per stream that had
+    /// new records (in subscription order).
+    pub fn poll(&mut self) -> Result<Vec<MicroBatch>> {
+        if self.keys.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Build: XREAD COUNT n STREAMS k... id...
+        let count_s = self.batch_limit.to_string();
+        let id_strings: Vec<String> = self
+            .keys
+            .iter()
+            .map(|k| self.cursors[k].to_string())
+            .collect();
+        let mut parts: Vec<&[u8]> = Vec::with_capacity(4 + self.keys.len() * 2);
+        parts.push(b"XREAD");
+        if self.batch_limit > 0 {
+            parts.push(b"COUNT");
+            parts.push(count_s.as_bytes());
+        }
+        parts.push(b"STREAMS");
+        for k in &self.keys {
+            parts.push(k.as_bytes());
+        }
+        for id in &id_strings {
+            parts.push(id.as_bytes());
+        }
+        let reply = self.conn.request(&parts)?;
+        self.parse_xread_reply(reply)
+    }
+
+    fn parse_xread_reply(&mut self, reply: Value) -> Result<Vec<MicroBatch>> {
+        let streams = match reply {
+            Value::NullArray | Value::NullBulk => return Ok(Vec::new()),
+            Value::Array(items) => items,
+            Value::Error(e) => bail!("endpoint error on XREAD: {e}"),
+            other => bail!("unexpected XREAD reply: {other}"),
+        };
+        let mut batches = Vec::with_capacity(streams.len());
+        for stream in streams {
+            let pair = stream.as_array().context("XREAD stream entry not array")?;
+            anyhow::ensure!(pair.len() == 2, "XREAD stream entry len {}", pair.len());
+            let key = String::from_utf8_lossy(
+                pair[0].as_bytes().context("stream key not bytes")?,
+            )
+            .into_owned();
+            let entries = pair[1].as_array().context("entries not array")?;
+            let mut records = Vec::with_capacity(entries.len());
+            let mut max_id = self.cursors.get(&key).copied().unwrap_or(EntryId::ZERO);
+            for e in entries {
+                let e = e.as_array().context("entry not array")?;
+                anyhow::ensure!(e.len() == 2, "entry len {}", e.len());
+                let id_s = String::from_utf8_lossy(
+                    e[0].as_bytes().context("entry id not bytes")?,
+                )
+                .into_owned();
+                let id = EntryId::parse(&id_s)?;
+                let fields = e[1].as_array().context("fields not array")?;
+                // find the record field "r"
+                let mut payload: Option<&[u8]> = None;
+                for fv in fields.chunks(2) {
+                    if fv.len() == 2 && fv[0].as_bytes() == Some(b"r") {
+                        payload = fv[1].as_bytes();
+                    }
+                }
+                let payload = payload.context("entry missing 'r' field")?;
+                match StreamRecord::decode(payload) {
+                    Ok(rec) => records.push(rec),
+                    Err(err) => {
+                        // corrupt record: skip but advance the cursor so
+                        // we don't spin on it forever
+                        log::warn!("reader: dropping corrupt record in {key} at {id}: {err:#}");
+                    }
+                }
+                if id > max_id {
+                    max_id = id;
+                }
+            }
+            self.cursors.insert(key.clone(), max_id);
+            if !records.is_empty() {
+                batches.push(MicroBatch { key, records });
+            }
+        }
+        Ok(batches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::{Broker, BrokerConfig};
+    use crate::endpoint::{EndpointServer, StoreConfig};
+    use crate::metrics::WorkflowMetrics;
+
+    fn setup_with_data(records_per_rank: u64) -> (EndpointServer, Vec<String>) {
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        let cfg = BrokerConfig {
+            group_size: 2,
+            ..BrokerConfig::new(vec![srv.addr()])
+        };
+        let broker = Broker::new(cfg, 2, WorkflowMetrics::new()).unwrap();
+        for rank in 0..2 {
+            let ctx = broker.init("u", rank).unwrap();
+            let data: Vec<f32> = (0..16).map(|i| (i + rank * 100) as f32).collect();
+            for step in 0..records_per_rank {
+                ctx.write(step, &[16], &data).unwrap();
+            }
+            ctx.finalize().unwrap();
+        }
+        (srv, vec!["u/0".into(), "u/1".into()])
+    }
+
+    #[test]
+    fn poll_reads_all_then_nothing() {
+        let (srv, keys) = setup_with_data(5);
+        let mut reader =
+            StreamReader::connect(srv.addr(), keys, 0, ConnConfig::default()).unwrap();
+        let batches = reader.poll().unwrap();
+        assert_eq!(batches.len(), 2);
+        for b in &batches {
+            assert_eq!(b.len(), 5);
+            // in-order steps
+            let steps: Vec<u64> = b.records.iter().map(|r| r.step).collect();
+            assert_eq!(steps, vec![0, 1, 2, 3, 4]);
+        }
+        // cursor advanced: nothing new
+        assert!(reader.poll().unwrap().is_empty());
+    }
+
+    #[test]
+    fn poll_incremental_batches() {
+        let (srv, keys) = setup_with_data(10);
+        let mut reader =
+            StreamReader::connect(srv.addr(), keys, 3, ConnConfig::default()).unwrap();
+        let mut per_stream: HashMap<String, usize> = HashMap::new();
+        loop {
+            let batches = reader.poll().unwrap();
+            if batches.is_empty() {
+                break;
+            }
+            for b in batches {
+                assert!(b.len() <= 3, "COUNT not respected");
+                *per_stream.entry(b.key).or_default() += b.len();
+            }
+        }
+        assert_eq!(per_stream["u/0"], 10);
+        assert_eq!(per_stream["u/1"], 10);
+    }
+
+    #[test]
+    fn poll_sees_new_data_after_cursor() {
+        let (srv, keys) = setup_with_data(2);
+        let mut reader =
+            StreamReader::connect(srv.addr(), keys, 0, ConnConfig::default()).unwrap();
+        assert_eq!(reader.poll().unwrap().len(), 2);
+        // new writes arrive
+        let rec = StreamRecord::from_f32("u", 0, 99, 0, &[1], &[5.0]).unwrap();
+        srv.store()
+            .xadd("u/0", None, vec![(b"r".to_vec(), rec.encode())])
+            .unwrap();
+        let batches = reader.poll().unwrap();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].records[0].step, 99);
+    }
+
+    #[test]
+    fn corrupt_record_skipped_not_fatal() {
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        srv.store()
+            .xadd("u/0", None, vec![(b"r".to_vec(), b"garbage".to_vec())])
+            .unwrap();
+        let good = StreamRecord::from_f32("u", 0, 1, 0, &[1], &[1.0]).unwrap();
+        srv.store()
+            .xadd("u/0", None, vec![(b"r".to_vec(), good.encode())])
+            .unwrap();
+        let mut reader = StreamReader::connect(
+            srv.addr(),
+            vec!["u/0".into()],
+            0,
+            ConnConfig::default(),
+        )
+        .unwrap();
+        let batches = reader.poll().unwrap();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].len(), 1);
+        assert_eq!(batches[0].records[0].step, 1);
+        // cursor advanced past the corrupt entry too
+        assert!(reader.poll().unwrap().is_empty());
+    }
+
+    #[test]
+    fn subscribe_dynamically() {
+        let (srv, _keys) = setup_with_data(1);
+        let mut reader = StreamReader::connect(
+            srv.addr(),
+            vec!["u/0".into()],
+            0,
+            ConnConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(reader.poll().unwrap().len(), 1);
+        reader.subscribe("u/1".into());
+        let batches = reader.poll().unwrap();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].key, "u/1");
+    }
+}

@@ -1,0 +1,211 @@
+//! Synthetic data generator — the paper's §4.3 throughput workload.
+//!
+//! Groups of MPI-style generator ranks continuously produce snapshot
+//! records and push them through the broker, stressing the endpoint +
+//! stream-processing pipeline at configurable scale.  Payloads are
+//! draws from a decaying linear system (not white noise) so the DMD
+//! analysis downstream computes meaningful spectra at full load.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::broker::Broker;
+use crate::util::rng::Rng;
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    /// Number of generator ranks.
+    pub ranks: usize,
+    /// Snapshot dimension per record (the paper's per-process field).
+    pub dim: usize,
+    /// Records per rank to emit (0 = run for `duration`).
+    pub records_per_rank: u64,
+    /// Wall-clock bound when `records_per_rank == 0`.
+    pub duration: Duration,
+    /// Per-rank pacing: records per second (0 = as fast as possible).
+    pub rate_hz: f64,
+    /// Field name.
+    pub field: String,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            ranks: 16,
+            dim: 512,
+            records_per_rank: 200,
+            duration: Duration::from_secs(10),
+            rate_hz: 0.0,
+            field: "synth".into(),
+        }
+    }
+}
+
+/// What the generation run produced.
+pub struct SynthReport {
+    pub elapsed: Duration,
+    pub records: u64,
+    pub bytes: u64,
+}
+
+/// Run all generator ranks to completion.
+pub fn run(cfg: &SynthConfig, broker: Arc<Broker>) -> Result<SynthReport> {
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(cfg.ranks);
+    for rank in 0..cfg.ranks {
+        let cfg = cfg.clone();
+        let broker = broker.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("synth-{rank}"))
+                .spawn(move || -> Result<(u64, u64)> { rank_loop(rank as u32, &cfg, &broker) })?,
+        );
+    }
+    let mut records = 0u64;
+    let mut bytes = 0u64;
+    for h in handles {
+        let (r, b) = h.join().map_err(|_| anyhow::anyhow!("synth rank panicked"))??;
+        records += r;
+        bytes += b;
+    }
+    Ok(SynthReport {
+        elapsed: t0.elapsed(),
+        records,
+        bytes,
+    })
+}
+
+fn rank_loop(rank: u32, cfg: &SynthConfig, broker: &Broker) -> Result<(u64, u64)> {
+    let ctx = broker.init(&cfg.field, rank)?;
+    let mut rng = Rng::new(0xEB00 + rank as u64);
+
+    // Decaying-oscillation generator: x_k[i] = r^k cos(θk + φ_i) + noise.
+    let decay = 0.97 + 0.02 * rng.next_f64(); // per-rank dynamics
+    let theta = 0.2 + 0.5 * rng.next_f64();
+    let phases: Vec<f64> = (0..cfg.dim).map(|_| rng.next_f64() * 6.28).collect();
+
+    let mut data = vec![0.0f32; cfg.dim];
+    let start = Instant::now();
+    let mut step = 0u64;
+    let mut bytes = 0u64;
+    loop {
+        if cfg.records_per_rank > 0 {
+            if step >= cfg.records_per_rank {
+                break;
+            }
+        } else if start.elapsed() >= cfg.duration {
+            break;
+        }
+        let growth = decay.powi(step as i32 % 64); // re-excite periodically
+        for (i, v) in data.iter_mut().enumerate() {
+            let clean = growth * ((theta * step as f64) + phases[i]).cos();
+            *v = (clean + 0.01 * rng.next_normal()) as f32;
+        }
+        ctx.write(step, &[cfg.dim as u32], &data)?;
+        bytes += (cfg.dim * 4) as u64;
+        step += 1;
+        if cfg.rate_hz > 0.0 {
+            let target = start + Duration::from_secs_f64(step as f64 / cfg.rate_hz);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+        }
+    }
+    ctx.finalize()?;
+    Ok((step, bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::BrokerConfig;
+    use crate::endpoint::{EndpointServer, StoreConfig};
+    use crate::metrics::WorkflowMetrics;
+
+    #[test]
+    fn generates_expected_record_counts() {
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        let broker = Arc::new(
+            Broker::new(
+                BrokerConfig {
+                    group_size: 4,
+                    ..BrokerConfig::new(vec![srv.addr()])
+                },
+                4,
+                WorkflowMetrics::new(),
+            )
+            .unwrap(),
+        );
+        let cfg = SynthConfig {
+            ranks: 4,
+            dim: 64,
+            records_per_rank: 25,
+            ..Default::default()
+        };
+        let rep = run(&cfg, broker).unwrap();
+        assert_eq!(rep.records, 100);
+        assert_eq!(rep.bytes, 100 * 64 * 4);
+        for r in 0..4 {
+            assert_eq!(srv.store().xlen(&format!("synth/{r}")), 25);
+        }
+    }
+
+    #[test]
+    fn rate_limited_generation_is_paced() {
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        let broker = Arc::new(
+            Broker::new(
+                BrokerConfig {
+                    group_size: 1,
+                    ..BrokerConfig::new(vec![srv.addr()])
+                },
+                1,
+                WorkflowMetrics::new(),
+            )
+            .unwrap(),
+        );
+        let cfg = SynthConfig {
+            ranks: 1,
+            dim: 16,
+            records_per_rank: 20,
+            rate_hz: 100.0, // 20 records at 100 Hz ≈ 200 ms
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let rep = run(&cfg, broker).unwrap();
+        assert_eq!(rep.records, 20);
+        let elapsed = t0.elapsed();
+        assert!(elapsed >= Duration::from_millis(150), "not paced: {elapsed:?}");
+    }
+
+    #[test]
+    fn duration_bound_terminates() {
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        let broker = Arc::new(
+            Broker::new(
+                BrokerConfig {
+                    group_size: 2,
+                    ..BrokerConfig::new(vec![srv.addr()])
+                },
+                2,
+                WorkflowMetrics::new(),
+            )
+            .unwrap(),
+        );
+        let cfg = SynthConfig {
+            ranks: 2,
+            dim: 32,
+            records_per_rank: 0,
+            duration: Duration::from_millis(150),
+            rate_hz: 200.0,
+            ..Default::default()
+        };
+        let rep = run(&cfg, broker).unwrap();
+        assert!(rep.records > 0);
+        assert!(rep.elapsed < Duration::from_secs(3));
+    }
+}

@@ -1,0 +1,294 @@
+//! TCP client transport: a RESP connection with reconnect/backoff and an
+//! optional outbound bandwidth throttle.
+//!
+//! The throttle exists because the paper's HPC→Cloud link is a real WAN
+//! ("the bandwidth between HPC and Cloud systems is limited"); on a
+//! single host the loopback device would hide every bandwidth effect, so
+//! experiments can cap the per-connection rate to emulate the inter-site
+//! link (see DESIGN.md §2).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::wire::{self, Decoder, Value};
+
+/// Token-bucket rate limiter (bytes/second), burst = one bucket.
+pub struct Throttle {
+    rate: f64,
+    capacity: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl Throttle {
+    pub fn new(bytes_per_sec: f64) -> Self {
+        Throttle {
+            rate: bytes_per_sec,
+            capacity: bytes_per_sec / 10.0, // 100 ms burst
+            tokens: bytes_per_sec / 10.0,
+            last: Instant::now(),
+        }
+    }
+
+    /// Block until `n` bytes worth of tokens have been consumed
+    /// (drains incrementally, so requests larger than the bucket
+    /// capacity still complete at the configured rate).
+    pub fn consume(&mut self, n: usize) {
+        let mut need = n as f64;
+        loop {
+            let now = Instant::now();
+            self.tokens = (self.tokens
+                + self.rate * now.duration_since(self.last).as_secs_f64())
+            .min(self.capacity);
+            self.last = now;
+            let take = need.min(self.tokens);
+            self.tokens -= take;
+            need -= take;
+            if need <= 0.0 {
+                return;
+            }
+            let wait = (need / self.rate).clamp(0.0005, 0.25);
+            std::thread::sleep(Duration::from_secs_f64(wait));
+        }
+    }
+}
+
+/// Connection settings.
+#[derive(Clone, Debug)]
+pub struct ConnConfig {
+    /// Max reconnect attempts before giving up (per call).
+    pub max_retries: u32,
+    /// Initial backoff; doubles per attempt, capped at 1 s.
+    pub backoff: Duration,
+    /// TCP_NODELAY (we write complete commands; latency matters).
+    pub nodelay: bool,
+    /// Optional outbound bandwidth cap (bytes/sec).
+    pub throttle_bytes_per_sec: Option<f64>,
+}
+
+impl Default for ConnConfig {
+    fn default() -> Self {
+        ConnConfig {
+            max_retries: 10,
+            backoff: Duration::from_millis(20),
+            nodelay: true,
+            throttle_bytes_per_sec: None,
+        }
+    }
+}
+
+/// A RESP request/response client connection (one per broker writer
+/// thread / stream reader; not shared across threads).
+pub struct RespConn {
+    addr: SocketAddr,
+    cfg: ConnConfig,
+    stream: Option<TcpStream>,
+    decoder: Decoder,
+    throttle: Option<Throttle>,
+    buf: Vec<u8>,
+    /// Large read buffer: XREAD replies carrying field snapshots run to
+    /// megabytes; fewer, bigger reads also mean fewer decoder retries
+    /// (EXPERIMENTS.md §Perf).
+    read_buf: Box<[u8; 256 * 1024]>,
+}
+
+impl RespConn {
+    /// Connect eagerly (retrying per the config).
+    pub fn connect(addr: SocketAddr, cfg: ConnConfig) -> Result<Self> {
+        let throttle = cfg.throttle_bytes_per_sec.map(Throttle::new);
+        let mut conn = RespConn {
+            addr,
+            cfg,
+            stream: None,
+            decoder: Decoder::new(),
+            throttle,
+            buf: Vec::with_capacity(64 * 1024),
+            read_buf: Box::new([0; 256 * 1024]),
+        };
+        conn.ensure_connected()?;
+        Ok(conn)
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn ensure_connected(&mut self) -> Result<()> {
+        if self.stream.is_some() {
+            return Ok(());
+        }
+        let mut backoff = self.cfg.backoff;
+        let mut last_err: Option<std::io::Error> = None;
+        for attempt in 0..=self.cfg.max_retries {
+            match TcpStream::connect(self.addr) {
+                Ok(s) => {
+                    if self.cfg.nodelay {
+                        let _ = s.set_nodelay(true);
+                    }
+                    self.stream = Some(s);
+                    self.decoder = Decoder::new();
+                    if attempt > 0 {
+                        log::debug!("transport: reconnected to {} after {attempt} attempts", self.addr);
+                    }
+                    return Ok(());
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_secs(1));
+                }
+            }
+        }
+        bail!(
+            "transport: cannot connect to {} after {} attempts: {:?}",
+            self.addr,
+            self.cfg.max_retries + 1,
+            last_err
+        );
+    }
+
+    fn drop_connection(&mut self) {
+        self.stream = None;
+        self.decoder = Decoder::new();
+    }
+
+    /// Send one command and wait for its reply.  On connection failure
+    /// the command is retried on a fresh connection (commands used here
+    /// — XADD/XREAD/PING — are safe to retry: worst case a duplicate
+    /// XADD, which the analysis window treats as a dup step and ignores).
+    pub fn request(&mut self, parts: &[&[u8]]) -> Result<Value> {
+        let mut attempts = 0;
+        loop {
+            attempts += 1;
+            match self.try_request(parts) {
+                Ok(v) => return Ok(v),
+                Err(e) if attempts <= self.cfg.max_retries as usize => {
+                    log::debug!("transport: request error ({e:#}); reconnecting");
+                    self.drop_connection();
+                    self.ensure_connected()?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn try_request(&mut self, parts: &[&[u8]]) -> Result<Value> {
+        self.ensure_connected()?;
+        self.buf.clear();
+        wire::encode_command(parts, &mut self.buf);
+        if let Some(t) = self.throttle.as_mut() {
+            t.consume(self.buf.len());
+        }
+        let stream = self.stream.as_mut().unwrap();
+        stream.write_all(&self.buf).context("write")?;
+        // Read until one full value decodes.
+        loop {
+            if let Some(v) = self.decoder.next()? {
+                return Ok(v);
+            }
+            let n = stream.read(&mut self.read_buf[..]).context("read")?;
+            if n == 0 {
+                bail!("connection closed by peer");
+            }
+            self.decoder.feed(&self.read_buf[..n]);
+        }
+    }
+
+    /// PING → expect PONG (health check).
+    pub fn ping(&mut self) -> Result<()> {
+        match self.request(&[b"PING"])? {
+            Value::Simple(s) if s == "PONG" => Ok(()),
+            other => bail!("unexpected PING reply: {other}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// A one-shot RESP echo server for transport tests.
+    fn spawn_pong_server(replies: usize) -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            if let Ok((mut s, _)) = listener.accept() {
+                let mut buf = [0u8; 1024];
+                for _ in 0..replies {
+                    match s.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {
+                            let _ = s.write_all(b"+PONG\r\n");
+                        }
+                    }
+                }
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn ping_roundtrip() {
+        let addr = spawn_pong_server(1);
+        let mut conn = RespConn::connect(addr, ConnConfig::default()).unwrap();
+        conn.ping().unwrap();
+    }
+
+    #[test]
+    fn connect_failure_reports_error() {
+        // unroutable port on loopback with tiny retry budget
+        let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let cfg = ConnConfig {
+            max_retries: 1,
+            backoff: Duration::from_millis(1),
+            ..Default::default()
+        };
+        assert!(RespConn::connect(addr, cfg).is_err());
+    }
+
+    #[test]
+    fn reconnects_after_peer_close() {
+        // Server that answers once then closes; second request must
+        // trigger a reconnect to a second listener on the same port.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for _ in 0..2 {
+                if let Ok((mut s, _)) = listener.accept() {
+                    let mut buf = [0u8; 256];
+                    if let Ok(n) = s.read(&mut buf) {
+                        if n > 0 {
+                            let _ = s.write_all(b"+PONG\r\n");
+                        }
+                    }
+                    // close
+                }
+            }
+        });
+        let cfg = ConnConfig {
+            max_retries: 5,
+            backoff: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let mut conn = RespConn::connect(addr, cfg).unwrap();
+        conn.ping().unwrap();
+        conn.ping().unwrap(); // forces reconnect
+    }
+
+    #[test]
+    fn throttle_limits_rate() {
+        let mut t = Throttle::new(100_000.0); // 100 KB/s
+        let start = Instant::now();
+        // consume ~30 KB → ≥ ~0.2 s at 100 KB/s (minus the initial burst)
+        for _ in 0..30 {
+            t.consume(1000);
+        }
+        let elapsed = start.elapsed().as_secs_f64();
+        assert!(elapsed > 0.15, "throttle too permissive: {elapsed}s");
+        assert!(elapsed < 3.0, "throttle far too strict: {elapsed}s");
+    }
+}

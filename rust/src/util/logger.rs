@@ -1,0 +1,80 @@
+//! Minimal stderr logger behind the `log` facade.
+//!
+//! Level comes from `ELASTICBROKER_LOG` (error|warn|info|debug|trace),
+//! defaulting to `info`.  Timestamps are relative to process start so
+//! multi-component traces (sim ranks, endpoints, executors) line up.
+
+use std::io::Write;
+use std::sync::Once;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INIT: Once = Once::new();
+
+struct StderrLogger {
+    level: LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{:>8.3}s {} {}] {}",
+            t.as_secs_f64(),
+            lvl,
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent; safe to call from every entrypoint
+/// and from tests).
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("ELASTICBROKER_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            Ok("off") => LevelFilter::Off,
+            _ => LevelFilter::Info,
+        };
+        Lazy::force(&START);
+        let logger = Box::new(StderrLogger { level });
+        if log::set_boxed_logger(logger).is_ok() {
+            log::set_max_level(level);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

@@ -1,0 +1,74 @@
+//! Small shared utilities: logging, deterministic RNG, time helpers and
+//! a miniature property-testing harness (no external crates available
+//! in this offline environment — these are substrates, per DESIGN.md §6).
+
+pub mod logger;
+pub mod prop;
+pub mod rng;
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Microseconds since the Unix epoch (wall clock — used to timestamp
+/// stream records for the latency metric of Fig 7a).
+pub fn epoch_micros() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .expect("clock before epoch")
+        .as_micros() as u64
+}
+
+/// Human-friendly byte formatting for logs and bench tables.
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Human-friendly duration formatting (µs granularity).
+pub fn fmt_micros(us: u64) -> String {
+    if us < 1_000 {
+        format!("{us} µs")
+    } else if us < 1_000_000 {
+        format!("{:.2} ms", us as f64 / 1e3)
+    } else {
+        format!("{:.2} s", us as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_micros_monotonic_enough() {
+        let a = epoch_micros();
+        let b = epoch_micros();
+        assert!(b >= a);
+        // sanity: we are past 2020 and before 2100
+        assert!(a > 1_577_836_800_000_000);
+        assert!(a < 4_102_444_800_000_000);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(17), "17 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn fmt_micros_units() {
+        assert_eq!(fmt_micros(17), "17 µs");
+        assert_eq!(fmt_micros(1500), "1.50 ms");
+        assert_eq!(fmt_micros(2_500_000), "2.50 s");
+    }
+}

@@ -1,0 +1,186 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, check)` draws `cases` random inputs from
+//! `gen` and asserts `check` on each; on failure it greedily shrinks via
+//! the generator's `shrink` candidates before panicking with the minimal
+//! failing input.  Deterministic given the seed, so CI failures replay.
+
+use std::fmt::Debug;
+
+use super::rng::Rng;
+
+/// A generator of random values plus shrink candidates.
+pub trait Gen {
+    type Value: Clone + Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Smaller variants to try when `v` fails (simplest first).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run the property; panics with the minimal counterexample found.
+pub fn forall<G, F>(seed: u64, cases: usize, gen: &G, check: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = check(&v) {
+            // Greedy shrink loop.
+            let mut best = v;
+            let mut best_msg = msg;
+            'outer: loop {
+                for cand in gen.shrink(&best) {
+                    if let Err(m) = check(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Generator: `u64` in `[lo, hi]`, shrinking toward `lo`.
+pub struct U64Range(pub u64, pub u64);
+
+impl Gen for U64Range {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        self.0 + rng.next_below(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Generator: byte vectors up to `max_len`, shrinking by halving length.
+pub struct Bytes(pub usize);
+
+impl Gen for Bytes {
+    type Value = Vec<u8>;
+    fn generate(&self, rng: &mut Rng) -> Vec<u8> {
+        let len = rng.next_below(self.0 as u64 + 1) as usize;
+        (0..len).map(|_| rng.next_u64() as u8).collect()
+    }
+    fn shrink(&self, v: &Vec<u8>) -> Vec<Vec<u8>> {
+        if v.is_empty() {
+            return Vec::new();
+        }
+        vec![
+            Vec::new(),
+            v[..v.len() / 2].to_vec(),
+            v[..v.len() - 1].to_vec(),
+        ]
+    }
+}
+
+/// Generator: f32 vectors of length in `[1, max_len]`, values in ±scale.
+pub struct F32Vec {
+    pub max_len: usize,
+    pub scale: f32,
+}
+
+impl Gen for F32Vec {
+    type Value = Vec<f32>;
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let len = 1 + rng.next_below(self.max_len as u64) as usize;
+        (0..len)
+            .map(|_| (rng.next_f32() * 2.0 - 1.0) * self.scale)
+            .collect()
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        if v.len() <= 1 {
+            return Vec::new();
+        }
+        vec![v[..v.len() / 2].to_vec(), v[..v.len() - 1].to_vec()]
+    }
+}
+
+/// Pair combinator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        forall(1, 200, &U64Range(0, 1000), |v| {
+            if *v <= 1000 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_and_shrinks() {
+        forall(2, 500, &U64Range(0, 10_000), |v| {
+            if *v < 100 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 100"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrink_reaches_minimal_counterexample() {
+        // Capture the panic message and verify the shrunk witness is small.
+        let res = std::panic::catch_unwind(|| {
+            forall(3, 500, &U64Range(0, 10_000), |v| {
+                if *v < 57 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            })
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("input: 57"), "expected minimal witness 57: {msg}");
+    }
+
+    #[test]
+    fn bytes_generator_respects_bound() {
+        let g = Bytes(32);
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            assert!(g.generate(&mut rng).len() <= 32);
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Incremental RESP2 decoder.
+//!
+//! Bytes are appended with [`Decoder::feed`]; [`Decoder::next`] returns
+//! `Ok(Some(value))` when a complete value is buffered, `Ok(None)` when
+//! more bytes are needed, and `Err` on protocol violations.  Consumed
+//! bytes are compacted lazily so long-lived connections don't grow the
+//! buffer unboundedly.
+
+use anyhow::{bail, Result};
+
+use super::Value;
+
+/// Streaming RESP2 parser.
+#[derive(Default)]
+pub struct Decoder {
+    buf: Vec<u8>,
+    /// Read cursor into `buf` (bytes before it are consumed).
+    pos: usize,
+    /// Re-parse gate: a failed parse records how many pending bytes it
+    /// will take before another attempt can possibly succeed (known
+    /// exactly when the failure is inside a length-prefixed bulk).
+    /// Without this, feeding a multi-megabyte XREAD reply in socket
+    /// sized chunks makes parsing O(n²) — measured as the Cloud-ingest
+    /// bottleneck in EXPERIMENTS.md §Perf.
+    min_pending: usize,
+}
+
+/// Refuse absurd sizes early (protects the endpoint from hostile or
+/// corrupt frames).  512 MiB mirrors Redis's proto-max-bulk-len.
+const MAX_BULK: i64 = 512 * 1024 * 1024;
+const MAX_ARRAY: i64 = 16 * 1024 * 1024;
+
+impl Decoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append raw socket bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        // Compact when more than half the buffer is consumed prefix.
+        if self.pos > 4096 && self.pos * 2 > self.buf.len() {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes currently buffered but not yet consumed.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Try to decode the next complete value.
+    pub fn next(&mut self) -> Result<Option<Value>> {
+        if self.pending() < self.min_pending {
+            return Ok(None); // a retry cannot succeed yet
+        }
+        let mut cursor = self.pos;
+        let mut need = self.buf.len() + 1; // absolute index required to retry
+        match parse_value(&self.buf, &mut cursor, &mut need)? {
+            Some(v) => {
+                self.pos = cursor;
+                self.min_pending = 0;
+                Ok(Some(v))
+            }
+            None => {
+                self.min_pending = need.saturating_sub(self.pos).max(self.pending() + 1);
+                Ok(None)
+            }
+        }
+    }
+}
+
+/// Find `\r\n` starting at `*cursor`; return the line body and advance.
+fn parse_line<'a>(buf: &'a [u8], cursor: &mut usize) -> Option<&'a [u8]> {
+    let start = *cursor;
+    let hay = &buf[start..];
+    let idx = hay.windows(2).position(|w| w == b"\r\n")?;
+    *cursor = start + idx + 2;
+    Some(&hay[..idx])
+}
+
+fn parse_int(line: &[u8]) -> Result<i64> {
+    let s = std::str::from_utf8(line)?;
+    Ok(s.trim().parse::<i64>()?)
+}
+
+/// Parse one value at `*cursor`.  On incomplete input returns
+/// `Ok(None)` and sets `need` to the smallest absolute buffer length at
+/// which a retry could possibly succeed (exact for length-prefixed
+/// bulks, `buf.len() + 1` otherwise).
+fn parse_value(buf: &[u8], cursor: &mut usize, need: &mut usize) -> Result<Option<Value>> {
+    if *cursor >= buf.len() {
+        *need = buf.len() + 1;
+        return Ok(None);
+    }
+    let tag = buf[*cursor];
+    let mut c = *cursor + 1;
+    let v = match tag {
+        b'+' => match parse_line(buf, &mut c) {
+            Some(line) => Value::Simple(String::from_utf8_lossy(line).into_owned()),
+            None => {
+                *need = buf.len() + 1;
+                return Ok(None);
+            }
+        },
+        b'-' => match parse_line(buf, &mut c) {
+            Some(line) => Value::Error(String::from_utf8_lossy(line).into_owned()),
+            None => {
+                *need = buf.len() + 1;
+                return Ok(None);
+            }
+        },
+        b':' => match parse_line(buf, &mut c) {
+            Some(line) => Value::Int(parse_int(line)?),
+            None => {
+                *need = buf.len() + 1;
+                return Ok(None);
+            }
+        },
+        b'$' => {
+            let len = match parse_line(buf, &mut c) {
+                Some(line) => parse_int(line)?,
+                None => {
+                    *need = buf.len() + 1;
+                    return Ok(None);
+                }
+            };
+            if len == -1 {
+                Value::NullBulk
+            } else {
+                if len < 0 || len > MAX_BULK {
+                    bail!("invalid bulk length {len}");
+                }
+                let len = len as usize;
+                if buf.len() < c + len + 2 {
+                    *need = c + len + 2; // exact requirement
+                    return Ok(None);
+                }
+                if &buf[c + len..c + len + 2] != b"\r\n" {
+                    bail!("bulk string missing CRLF terminator");
+                }
+                let body = buf[c..c + len].to_vec();
+                c += len + 2;
+                Value::Bulk(body)
+            }
+        }
+        b'*' => {
+            let len = match parse_line(buf, &mut c) {
+                Some(line) => parse_int(line)?,
+                None => {
+                    *need = buf.len() + 1;
+                    return Ok(None);
+                }
+            };
+            if len == -1 {
+                Value::NullArray
+            } else {
+                if len < 0 || len > MAX_ARRAY {
+                    bail!("invalid array length {len}");
+                }
+                let mut items = Vec::with_capacity((len as usize).min(1024));
+                for _ in 0..len {
+                    match parse_value(buf, &mut c, need)? {
+                        Some(item) => items.push(item),
+                        None => return Ok(None),
+                    }
+                }
+                Value::Array(items)
+            }
+        }
+        other => bail!("invalid RESP type byte 0x{other:02x}"),
+    };
+    *cursor = c;
+    Ok(Some(v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partial_then_complete() {
+        let mut d = Decoder::new();
+        d.feed(b"$5\r\nhel");
+        assert!(d.next().unwrap().is_none());
+        d.feed(b"lo\r\n");
+        assert_eq!(d.next().unwrap().unwrap(), Value::Bulk(b"hello".to_vec()));
+    }
+
+    #[test]
+    fn pipelined_values() {
+        let mut d = Decoder::new();
+        d.feed(b"+OK\r\n:7\r\n$-1\r\n");
+        assert_eq!(d.next().unwrap().unwrap(), Value::Simple("OK".into()));
+        assert_eq!(d.next().unwrap().unwrap(), Value::Int(7));
+        assert_eq!(d.next().unwrap().unwrap(), Value::NullBulk);
+        assert!(d.next().unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_bad_type_byte() {
+        let mut d = Decoder::new();
+        d.feed(b"#nope\r\n");
+        assert!(d.next().is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_bulk() {
+        let mut d = Decoder::new();
+        d.feed(b"$999999999999\r\n");
+        assert!(d.next().is_err());
+    }
+
+    #[test]
+    fn rejects_missing_bulk_terminator() {
+        let mut d = Decoder::new();
+        d.feed(b"$3\r\nabcXY");
+        assert!(d.next().is_err());
+    }
+
+    #[test]
+    fn nested_array_incremental() {
+        let mut d = Decoder::new();
+        let wire = b"*2\r\n*1\r\n:1\r\n$2\r\nab\r\n";
+        for chunk in wire.chunks(3) {
+            d.feed(chunk);
+        }
+        assert_eq!(
+            d.next().unwrap().unwrap(),
+            Value::Array(vec![
+                Value::Array(vec![Value::Int(1)]),
+                Value::Bulk(b"ab".to_vec())
+            ])
+        );
+    }
+
+    #[test]
+    fn compaction_keeps_pending_bytes() {
+        let mut d = Decoder::new();
+        // push enough consumed traffic to trigger compaction
+        for _ in 0..2000 {
+            d.feed(b"+OK\r\n");
+            assert_eq!(d.next().unwrap().unwrap(), Value::Simple("OK".into()));
+        }
+        d.feed(b"$3\r\nab"); // partial across a compaction boundary
+        assert!(d.next().unwrap().is_none());
+        d.feed(b"c\r\n");
+        assert_eq!(d.next().unwrap().unwrap(), Value::Bulk(b"abc".to_vec()));
+        assert_eq!(d.pending(), 0);
+    }
+}

@@ -1,0 +1,404 @@
+//! End-to-end workflow orchestration — the paper's Fig 2 deployment,
+//! in-process: bring up the Cloud side (endpoints + streaming service +
+//! DMD executors + collector), run the HPC side (simulation or
+//! synthetic generators + broker), and gather the metrics every
+//! experiment reports.
+//!
+//! The experiment drivers here are what the benches and examples call:
+//!
+//! * [`run_cfd_workflow`]   — Fig 5 (per-region stability) + Fig 6
+//!   (elapsed/end-to-end time per I/O mode),
+//! * [`run_synth_workflow`] — Fig 7 (latency + aggregated throughput at
+//!   scale, ranks : endpoints : executors = 16 : 1 : 16).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::analysis::{AnalysisResult, CsvSink, DmdConfig, DmdEngine};
+use crate::broker::{Broker, BrokerConfig};
+use crate::config::{IoMode, WorkflowConfig};
+use crate::endpoint::{EndpointServer, StoreConfig};
+use crate::metrics::WorkflowMetrics;
+use crate::runtime::ArtifactSet;
+use crate::sim::{SimConfig, SimRunner};
+use crate::streamproc::{StreamReader, StreamingConfig, StreamingContext};
+use crate::synth::{self, SynthConfig};
+use crate::transport::ConnConfig;
+
+/// The running Cloud side: endpoints + streaming + analysis + collector.
+pub struct CloudSide {
+    pub endpoints: Vec<EndpointServer>,
+    streaming: Option<StreamingContext>,
+    collector: Option<std::thread::JoinHandle<Vec<AnalysisResult>>>,
+    pub metrics: WorkflowMetrics,
+    last_result_us: Arc<AtomicU64>,
+}
+
+impl CloudSide {
+    /// Bring up `n_endpoints` endpoint servers and a streaming service
+    /// subscribed to `field/<rank>` for every rank, analysing with DMD.
+    pub fn start(
+        cfg: &WorkflowConfig,
+        field: &str,
+        artifacts: Option<Arc<ArtifactSet>>,
+        metrics: WorkflowMetrics,
+        csv: Option<CsvSink>,
+        warm_dim: Option<usize>,
+    ) -> Result<CloudSide> {
+        let n_endpoints = cfg.endpoint_count();
+        let mut endpoints = Vec::with_capacity(n_endpoints);
+        for _ in 0..n_endpoints {
+            endpoints.push(EndpointServer::start("127.0.0.1:0", StoreConfig::default())?);
+        }
+
+        // Readers: one per endpoint, subscribed to its groups' streams
+        // (the paper's fixed executor↔stream mapping).
+        let groups = crate::broker::GroupMap::new(cfg.ranks, cfg.group_size, n_endpoints)?;
+        let mut readers = Vec::with_capacity(n_endpoints);
+        for (e, srv) in endpoints.iter().enumerate() {
+            let keys = groups.streams_of_endpoint(e, field);
+            readers.push(StreamReader::connect(
+                srv.addr(),
+                keys,
+                0,
+                ConnConfig::default(),
+            )?);
+        }
+
+        let engine = Arc::new(DmdEngine::new(
+            DmdConfig {
+                window: cfg.dmd_window,
+                rank: cfg.dmd_rank,
+                hop: 1,
+                backend: if cfg.dmd_use_pjrt {
+                    crate::analysis::DmdBackend::Pjrt
+                } else {
+                    crate::analysis::DmdBackend::Rust
+                },
+                fire: if cfg.dmd_per_batch {
+                    crate::analysis::FirePolicy::PerBatch
+                } else {
+                    crate::analysis::FirePolicy::PerSnapshot
+                },
+            },
+            artifacts,
+            metrics.clone(),
+        )?);
+        if let Some(d) = warm_dim {
+            engine.warm(d);
+        }
+
+        let (tx, rx) = channel::<(u64, AnalysisResult)>();
+        let streaming = StreamingContext::start(
+            StreamingConfig {
+                trigger_interval: Duration::from_millis(cfg.trigger_ms),
+                executors: cfg.executors,
+                batch_limit: 0,
+            },
+            readers,
+            move |batch| engine.process(batch),
+            tx,
+        );
+
+        let last_result_us = Arc::new(AtomicU64::new(0));
+        let collector_last = last_result_us.clone();
+        let collector = std::thread::Builder::new()
+            .name("collector".into())
+            .spawn(move || {
+                let mut results = Vec::new();
+                while let Ok((_seq, res)) = rx.recv() {
+                    collector_last.store(crate::util::epoch_micros(), Ordering::Relaxed);
+                    if let Some(sink) = &csv {
+                        let _ = sink.write(&res);
+                    }
+                    results.push(res);
+                }
+                if let Some(sink) = &csv {
+                    let _ = sink.flush();
+                }
+                results
+            })?;
+
+        Ok(CloudSide {
+            endpoints,
+            streaming: Some(streaming),
+            collector: Some(collector),
+            metrics,
+            last_result_us,
+        })
+    }
+
+    /// Endpoint addresses (for the HPC-side broker config).
+    pub fn endpoint_addrs(&self) -> Vec<std::net::SocketAddr> {
+        self.endpoints.iter().map(|e| e.addr()).collect()
+    }
+
+    /// Stop streaming (drains the tail), then collect all results.
+    pub fn finish(mut self) -> Result<(Vec<AnalysisResult>, u64)> {
+        if let Some(s) = self.streaming.take() {
+            s.stop()?;
+        }
+        let results = self
+            .collector
+            .take()
+            .unwrap()
+            .join()
+            .map_err(|_| anyhow::anyhow!("collector panicked"))?;
+        let last_us = self.last_result_us.load(Ordering::Relaxed);
+        Ok((results, last_us))
+    }
+}
+
+/// Everything the Fig 5/6 experiments report.
+pub struct CfdWorkflowReport {
+    /// Simulation wall-clock (the paper's "simulation elapsed time").
+    pub sim_elapsed: Duration,
+    /// Simulation start → last analysis result (the paper's "workflow
+    /// end-to-end time"); equals `sim_elapsed` for non-broker modes.
+    pub workflow_elapsed: Duration,
+    pub analysis_results: Vec<AnalysisResult>,
+    pub metrics: WorkflowMetrics,
+    pub backend: &'static str,
+}
+
+/// Fig 5 + Fig 6 driver: CFD simulation (16 ranks by default) with the
+/// chosen I/O mode; when the mode is `Broker`, the full Cloud side runs
+/// alongside and DMD results are collected.
+pub fn run_cfd_workflow(
+    cfg: &WorkflowConfig,
+    artifacts: Option<Arc<ArtifactSet>>,
+) -> Result<CfdWorkflowReport> {
+    cfg.validate()?;
+    let field = "velocity";
+    let metrics = WorkflowMetrics::new();
+
+    let sim_cfg = SimConfig {
+        ranks: cfg.ranks,
+        height: cfg.height,
+        width: cfg.width,
+        steps: cfg.steps,
+        write_interval: cfg.write_interval,
+        io_mode: cfg.io_mode,
+        out_dir: cfg.out_dir.clone(),
+        field: field.into(),
+        params: Default::default(),
+        use_pjrt: cfg.use_pjrt,
+        pfs_commit_ms: cfg.pfs_commit_ms,
+    };
+
+    if cfg.io_mode != IoMode::Broker {
+        // No Cloud side: Fig 6 baseline modes.
+        let t0 = Instant::now();
+        let rep = SimRunner::run(&sim_cfg, None, artifacts)?;
+        let elapsed = t0.elapsed();
+        return Ok(CfdWorkflowReport {
+            sim_elapsed: rep.elapsed,
+            workflow_elapsed: elapsed,
+            analysis_results: Vec::new(),
+            metrics,
+            backend: rep.backend,
+        });
+    }
+
+    let csv = if cfg.analysis_csv.is_empty() {
+        None
+    } else {
+        Some(CsvSink::create(&cfg.analysis_csv)?)
+    };
+    let cloud = CloudSide::start(
+        cfg,
+        field,
+        artifacts.clone(),
+        metrics.clone(),
+        csv,
+        Some(cfg.snapshot_dim()?),
+    )?;
+    let broker = Arc::new(Broker::new(
+        BrokerConfig {
+            group_size: cfg.group_size,
+            queue_cap: cfg.queue_cap,
+            policy: if cfg.drop_oldest {
+                crate::broker::QueuePolicy::DropOldest
+            } else {
+                crate::broker::QueuePolicy::Block
+            },
+            ..BrokerConfig::new(cloud.endpoint_addrs())
+        },
+        cfg.ranks,
+        metrics.clone(),
+    )?);
+
+    let t0 = Instant::now();
+    let start_us = crate::util::epoch_micros();
+    let rep = SimRunner::run(&sim_cfg, Some(broker), artifacts)?;
+    let sim_elapsed = rep.elapsed;
+    let (results, last_us) = cloud.finish()?;
+    let workflow_elapsed = if last_us > start_us {
+        Duration::from_micros(last_us - start_us)
+    } else {
+        t0.elapsed()
+    };
+    let snapshots_per_rank = cfg.steps / cfg.write_interval;
+    if results.is_empty() && snapshots_per_rank > cfg.dmd_window as u64 {
+        anyhow::bail!(
+            "broker workflow produced no analysis results \
+             ({snapshots_per_rank} snapshots/rank should fill the {}+1 window)",
+            cfg.dmd_window
+        );
+    }
+    Ok(CfdWorkflowReport {
+        sim_elapsed,
+        workflow_elapsed,
+        analysis_results: results,
+        metrics,
+        backend: rep.backend,
+    })
+}
+
+/// Fig 7 report for one scale point.
+pub struct SynthWorkflowReport {
+    pub ranks: usize,
+    pub endpoints: usize,
+    pub executors: usize,
+    pub records: u64,
+    pub analyses: usize,
+    /// Generation wall-clock.
+    pub gen_elapsed: Duration,
+    /// Aggregated generator throughput (bytes/sec).
+    pub gen_bytes_per_sec: f64,
+    pub metrics: WorkflowMetrics,
+}
+
+/// Fig 7 driver: synthetic generators at `ranks` scale with the paper's
+/// 16:1:16 ratio, measuring end-to-end latency and aggregated
+/// throughput.
+pub fn run_synth_workflow(
+    ranks: usize,
+    records_per_rank: u64,
+    dim: usize,
+    trigger_ms: u64,
+    rate_hz: f64,
+    artifacts: Option<Arc<ArtifactSet>>,
+) -> Result<SynthWorkflowReport> {
+    let cfg = WorkflowConfig {
+        ranks,
+        group_size: 16,
+        executors: ranks, // paper: #executors == #simulation processes
+        trigger_ms,
+        dmd_window: 8,
+        dmd_rank: 6,
+        // On the CPU PJRT plugin the ~2 ms per-dispatch overhead of the
+        // compiled reduction swamps the d=512 maths at Fig 7 record
+        // rates (EXPERIMENTS.md §Perf); the Rust mirror is semantically
+        // identical, so the scaling experiment uses it by default.
+        dmd_use_pjrt: false,
+        // height/width unused by the synth path but must validate:
+        height: ranks, // 1 row per rank keeps height % ranks == 0
+        ..Default::default()
+    };
+    let field = "synth";
+    let metrics = WorkflowMetrics::new();
+    let cloud = CloudSide::start(&cfg, field, artifacts, metrics.clone(), None, Some(dim))?;
+    let broker = Arc::new(Broker::new(
+        BrokerConfig {
+            group_size: cfg.group_size,
+            queue_cap: cfg.queue_cap,
+            ..BrokerConfig::new(cloud.endpoint_addrs())
+        },
+        ranks,
+        metrics.clone(),
+    )?);
+
+    let synth_cfg = SynthConfig {
+        ranks,
+        dim,
+        records_per_rank,
+        rate_hz,
+        field: field.into(),
+        ..Default::default()
+    };
+    let gen = synth::run(&synth_cfg, broker)?;
+    let (results, _) = cloud.finish()?;
+    Ok(SynthWorkflowReport {
+        ranks,
+        endpoints: cfg.endpoint_count(),
+        executors: cfg.executors,
+        records: gen.records,
+        analyses: results.len(),
+        gen_elapsed: gen.elapsed,
+        gen_bytes_per_sec: gen.bytes as f64 / gen.elapsed.as_secs_f64().max(1e-9),
+        metrics,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(io: IoMode) -> WorkflowConfig {
+        WorkflowConfig {
+            ranks: 4,
+            height: 32,
+            width: 64,
+            steps: 60,
+            write_interval: 5,
+            io_mode: io,
+            out_dir: std::env::temp_dir()
+                .join(format!("eb-wf-{}", std::process::id()))
+                .to_string_lossy()
+                .into_owned(),
+            use_pjrt: false,
+            group_size: 4,
+            executors: 4,
+            trigger_ms: 50,
+            dmd_window: 4,
+            dmd_rank: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn broker_workflow_end_to_end() {
+        let cfg = tiny_cfg(IoMode::Broker);
+        let rep = run_cfd_workflow(&cfg, None).unwrap();
+        // 60 steps, write every 5 → 12 snapshots/rank; window 4+1 fills
+        // at 5 then fires per snapshot → 8 analyses per rank × 4 ranks.
+        assert_eq!(rep.analysis_results.len(), 8 * 4);
+        assert!(rep.workflow_elapsed >= rep.sim_elapsed);
+        // every rank produced results with finite stability
+        for r in 0..4u32 {
+            let per: Vec<_> = rep
+                .analysis_results
+                .iter()
+                .filter(|a| a.rank == r)
+                .collect();
+            assert_eq!(per.len(), 8, "rank {r}");
+            assert!(per.iter().all(|a| a.stability.is_finite()));
+        }
+        assert_eq!(rep.metrics.dropped.get(), 0);
+        assert!(rep.metrics.shipped.bytes() > 0);
+    }
+
+    #[test]
+    fn simulation_only_mode_has_no_cloud() {
+        let cfg = tiny_cfg(IoMode::None);
+        let rep = run_cfd_workflow(&cfg, None).unwrap();
+        assert!(rep.analysis_results.is_empty());
+        assert_eq!(rep.metrics.shipped.bytes(), 0);
+    }
+
+    #[test]
+    fn synth_workflow_small_scale() {
+        let rep = run_synth_workflow(4, 30, 64, 50, 0.0, None).unwrap();
+        assert_eq!(rep.records, 120);
+        assert_eq!(rep.endpoints, 1);
+        // window 8+1 fills at 9 → 22 analyses per rank
+        assert_eq!(rep.analyses, 4 * 22);
+        assert!(rep.metrics.e2e_latency_us.count() > 0);
+        assert!(rep.gen_bytes_per_sec > 0.0);
+    }
+}

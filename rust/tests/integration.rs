@@ -1,0 +1,473 @@
+//! Cross-module integration tests: real TCP, real threads, and (when
+//! `make artifacts` has run) the real PJRT path — the full Fig 2/Fig 3
+//! topology exercised end to end.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use elasticbroker::analysis::{DmdConfig, DmdEngine};
+use elasticbroker::broker::{Broker, BrokerConfig, Filter, FilterStage};
+use elasticbroker::config::{IoMode, WorkflowConfig};
+use elasticbroker::endpoint::{EndpointServer, StoreConfig};
+use elasticbroker::metrics::WorkflowMetrics;
+use elasticbroker::record::StreamRecord;
+use elasticbroker::runtime::ArtifactSet;
+use elasticbroker::sim::{SimConfig, SimRunner};
+use elasticbroker::streamproc::{MicroBatch, StreamReader, StreamingConfig, StreamingContext};
+use elasticbroker::transport::ConnConfig;
+use elasticbroker::workflow::{run_cfd_workflow, run_synth_workflow};
+
+fn artifacts() -> Option<Arc<ArtifactSet>> {
+    ArtifactSet::try_load_default()
+}
+
+/// HPC side and Cloud side in *separate thread domains* over real TCP,
+/// multiple endpoints, the paper's group mapping — records all arrive,
+/// exactly once per (rank, step), in order.
+#[test]
+fn two_endpoint_topology_delivers_everything() {
+    let e0 = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+    let e1 = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+    let metrics = WorkflowMetrics::new();
+    let broker = Arc::new(
+        Broker::new(
+            BrokerConfig {
+                group_size: 4, // 8 ranks → 2 groups → 2 endpoints
+                ..BrokerConfig::new(vec![e0.addr(), e1.addr()])
+            },
+            8,
+            metrics.clone(),
+        )
+        .unwrap(),
+    );
+
+    // HPC side: 8 writer threads.
+    let writers: Vec<_> = (0..8u32)
+        .map(|rank| {
+            let broker = broker.clone();
+            std::thread::spawn(move || {
+                let ctx = broker.init("u", rank).unwrap();
+                let data: Vec<f32> = (0..32).map(|i| (i + rank) as f32).collect();
+                for step in 0..20 {
+                    ctx.write(step, &[32], &data).unwrap();
+                }
+                ctx.finalize().unwrap();
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+
+    // Cloud side: one reader per endpoint with the group's streams.
+    let groups = broker.groups();
+    for (idx, srv) in [(0usize, &e0), (1usize, &e1)] {
+        let keys = groups.streams_of_endpoint(idx, "u");
+        assert_eq!(keys.len(), 4);
+        let mut reader =
+            StreamReader::connect(srv.addr(), keys.clone(), 0, ConnConfig::default()).unwrap();
+        let batches = reader.poll().unwrap();
+        assert_eq!(batches.len(), 4, "endpoint {idx}");
+        for b in &batches {
+            assert_eq!(b.len(), 20);
+            let steps: Vec<u64> = b.records.iter().map(|r| r.step).collect();
+            assert_eq!(steps, (0..20).collect::<Vec<_>>(), "{}", b.key);
+        }
+    }
+    assert_eq!(metrics.shipped.records(), 160);
+    assert_eq!(metrics.dropped.get(), 0);
+}
+
+/// The paper's full pipeline at integration scale, with the analysis
+/// engine on the executors: simulation → broker → endpoint → streaming
+/// → DMD, using the pure-Rust backends.
+#[test]
+fn full_pipeline_rust_backend() {
+    let cfg = WorkflowConfig {
+        ranks: 4,
+        height: 64,
+        width: 64,
+        steps: 120,
+        write_interval: 4,
+        io_mode: IoMode::Broker,
+        use_pjrt: false,
+        group_size: 2, // 2 endpoints
+        endpoints: Some(2),
+        executors: 4,
+        trigger_ms: 60,
+        dmd_window: 6,
+        dmd_rank: 4,
+        ..Default::default()
+    };
+    let rep = run_cfd_workflow(&cfg, None).unwrap();
+    // 30 snapshots/rank; window 7 fills at 7 → 24 analyses × 4 ranks
+    assert_eq!(rep.analysis_results.len(), 24 * 4);
+    for a in &rep.analysis_results {
+        assert!(a.stability.is_finite() && a.stability >= 0.0);
+        assert_eq!(a.eigs.len(), 4);
+        assert_eq!(a.backend, "rust");
+        assert!(a.sigma.windows(2).all(|w| w[0] >= w[1] - 1e-9));
+    }
+    assert!(rep.workflow_elapsed >= rep.sim_elapsed);
+}
+
+/// Same pipeline, PJRT backend (requires `make artifacts`): LBM steps
+/// and DMD reductions go through compiled HLO, and the results agree
+/// with the Rust mirror run on the identical configuration.
+#[test]
+fn pjrt_and_fallback_agree() {
+    let Some(arts) = artifacts() else {
+        eprintln!("WARNING: artifacts absent; skipping PJRT integration test");
+        return;
+    };
+    let mk = |use_pjrt: bool| WorkflowConfig {
+        ranks: 4,
+        height: 32,  // h_loc=8 → lbm artifacts h8_w64; dmd d1024
+        width: 64,
+        steps: 100,
+        write_interval: 5,
+        io_mode: IoMode::Broker,
+        use_pjrt,
+        group_size: 4,
+        executors: 4,
+        trigger_ms: 60,
+        dmd_window: 8,
+        dmd_rank: 6,
+        ..Default::default()
+    };
+    let rep_pjrt = run_cfd_workflow(&mk(true), Some(arts.clone())).unwrap();
+    let rep_rust = run_cfd_workflow(&mk(false), None).unwrap();
+    assert_eq!(rep_pjrt.backend, "pjrt");
+    assert_eq!(rep_rust.backend, "rust");
+    assert_eq!(
+        rep_pjrt.analysis_results.len(),
+        rep_rust.analysis_results.len()
+    );
+    // every analysis window used the compiled dmd artifact
+    assert!(rep_pjrt
+        .analysis_results
+        .iter()
+        .all(|a| a.backend == "pjrt"));
+
+    // deterministic sim ⇒ matching (rank, step) keyed stabilities
+    let key = |a: &elasticbroker::analysis::AnalysisResult| (a.rank, a.step);
+    let mut left = rep_pjrt.analysis_results.clone();
+    let mut right = rep_rust.analysis_results.clone();
+    left.sort_by_key(&key);
+    right.sort_by_key(&key);
+    for (l, r) in left.iter().zip(&right) {
+        assert_eq!(key(l), key(r));
+        let denom = r.stability.abs().max(1e-6);
+        assert!(
+            (l.stability - r.stability).abs() / denom < 0.15,
+            "stability diverged at rank {} step {}: pjrt {} vs rust {}",
+            l.rank,
+            l.step,
+            l.stability,
+            r.stability
+        );
+    }
+}
+
+/// Filters compose with the full pipeline: a Magnitude-aggregating
+/// broker halves the payload and the analysis still works on it.
+#[test]
+fn filtered_stream_analysis() {
+    let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+    let metrics = WorkflowMetrics::new();
+    let broker = Broker::new(
+        BrokerConfig {
+            group_size: 1,
+            ..BrokerConfig::new(vec![srv.addr()])
+        },
+        1,
+        metrics.clone(),
+    )
+    .unwrap();
+    let ctx = broker
+        .init_filtered("u", 0, Filter::new(vec![FilterStage::Magnitude]))
+        .unwrap();
+    let (h, w) = (8usize, 16usize);
+    for step in 0..12u64 {
+        let mut field = vec![0.0f32; 2 * h * w];
+        for (i, v) in field.iter_mut().enumerate() {
+            *v = ((step as f32) * 0.3 + i as f32 * 0.01).sin() * 0.9f32.powi(step as i32);
+        }
+        ctx.write(step, &[2, h as u32, w as u32], &field).unwrap();
+    }
+    ctx.finalize().unwrap();
+
+    let engine = DmdEngine::new(
+        DmdConfig {
+            window: 6,
+            rank: 3,
+            hop: 1,
+            ..Default::default()
+        },
+        None,
+        metrics,
+    )
+    .unwrap();
+    let mut reader =
+        StreamReader::connect(srv.addr(), vec!["u/0".into()], 0, ConnConfig::default()).unwrap();
+    let batches = reader.poll().unwrap();
+    assert_eq!(batches.len(), 1);
+    // magnitude filter collapsed [2,h,w] → [h,w]
+    assert_eq!(batches[0].records[0].shape, vec![h as u32, w as u32]);
+    let results = engine.process(&batches[0]);
+    assert_eq!(results.len(), 6); // 12 snapshots, window 7 → 6 windows
+    assert!(results.iter().all(|r| r.stability.is_finite()));
+}
+
+/// Backpressure propagates endpoint → broker → producer: a tiny memory
+/// budget with a blocked reader eventually OOMs, the broker retries,
+/// and after the reader drains (DEL), everything completes losslessly.
+#[test]
+fn oom_backpressure_recovers_after_drain() {
+    let srv = EndpointServer::start(
+        "127.0.0.1:0",
+        StoreConfig {
+            stream_maxlen: 0,
+            max_memory: 256 * 1024, // tight budget
+        },
+    )
+    .unwrap();
+    let metrics = WorkflowMetrics::new();
+    let broker = Arc::new(
+        Broker::new(
+            BrokerConfig {
+                group_size: 1,
+                queue_cap: 4,
+                ..BrokerConfig::new(vec![srv.addr()])
+            },
+            1,
+            metrics.clone(),
+        )
+        .unwrap(),
+    );
+    // Drainer: periodically frees the stream so OOM clears.
+    let addr = srv.addr();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let dstop = stop.clone();
+    let drainer = std::thread::spawn(move || {
+        let mut conn = RespConnHelper::connect(addr);
+        while !dstop.load(std::sync::atomic::Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(40));
+            conn.del("u/0");
+        }
+    });
+
+    let ctx = broker.init("u", 0).unwrap();
+    let data = vec![0.5f32; 16 * 1024]; // 64 KiB each → 4 fill the budget
+    for step in 0..32u64 {
+        ctx.write(step, &[16 * 1024], &data).unwrap();
+    }
+    ctx.finalize().unwrap(); // must not hang or fail
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    drainer.join().unwrap();
+    assert_eq!(metrics.shipped.records(), 32);
+    assert_eq!(metrics.dropped.get(), 0);
+}
+
+/// Helper: a minimal RESP client for test choreography.
+struct RespConnHelper {
+    conn: elasticbroker::transport::RespConn,
+}
+
+impl RespConnHelper {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        RespConnHelper {
+            conn: elasticbroker::transport::RespConn::connect(addr, ConnConfig::default())
+                .unwrap(),
+        }
+    }
+    fn del(&mut self, key: &str) {
+        let _ = self.conn.request(&[b"DEL", key.as_bytes()]);
+    }
+}
+
+/// Synthetic workflow at the paper's ratio with multiple endpoints.
+#[test]
+fn synth_workflow_two_groups() {
+    let rep = run_synth_workflow(32, 20, 128, 60, 0.0, None).unwrap();
+    assert_eq!(rep.endpoints, 2);
+    assert_eq!(rep.records, 32 * 20);
+    // window 9 → 12 analyses per rank
+    assert_eq!(rep.analyses, 32 * 12);
+    assert!(rep.metrics.e2e_latency_us.quantile(0.5) > 0);
+}
+
+/// File mode and broker mode both deliver every snapshot; None mode is
+/// fastest (shape of Fig 6 at micro scale, Rust backend).
+#[test]
+fn io_modes_complete_and_rank_sanely() {
+    let mk = |mode: IoMode, dir: &str| SimConfig {
+        ranks: 2,
+        height: 16,
+        width: 32,
+        steps: 60,
+        write_interval: 2,
+        io_mode: mode,
+        out_dir: dir.into(),
+        field: "u".into(),
+        params: Default::default(),
+        use_pjrt: false,
+        pfs_commit_ms: 0,
+    };
+    // None
+    let rep_none = SimRunner::run(&mk(IoMode::None, ""), None, None).unwrap();
+    // File
+    let dir = std::env::temp_dir().join(format!("eb-int-file-{}", std::process::id()));
+    let dir_s = dir.to_string_lossy().into_owned();
+    std::fs::remove_dir_all(&dir).ok();
+    let rep_file = SimRunner::run(&mk(IoMode::File, &dir_s), None, None).unwrap();
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 30);
+    std::fs::remove_dir_all(&dir).ok();
+    // Broker
+    let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+    let metrics = WorkflowMetrics::new();
+    let broker = Arc::new(
+        Broker::new(
+            BrokerConfig {
+                group_size: 2,
+                ..BrokerConfig::new(vec![srv.addr()])
+            },
+            2,
+            metrics.clone(),
+        )
+        .unwrap(),
+    );
+    let rep_broker = SimRunner::run(&mk(IoMode::Broker, ""), Some(broker), None).unwrap();
+    assert_eq!(srv.store().xlen("u/0"), 30);
+    assert_eq!(srv.store().xlen("u/1"), 30);
+    // identical physics across modes
+    for (a, b) in rep_none.final_u.iter().zip(&rep_broker.final_u) {
+        assert_eq!(a, b, "I/O mode changed the physics");
+    }
+    for (a, b) in rep_none.final_u.iter().zip(&rep_file.final_u) {
+        assert_eq!(a, b);
+    }
+}
+
+/// A decoded record survives the whole path bit-exactly (HPC write →
+/// RESP wire → store → XREAD → decode).
+#[test]
+fn payload_bit_exact_through_pipeline() {
+    let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+    let broker = Broker::new(
+        BrokerConfig {
+            group_size: 1,
+            ..BrokerConfig::new(vec![srv.addr()])
+        },
+        1,
+        WorkflowMetrics::new(),
+    )
+    .unwrap();
+    let ctx = broker.init("exact", 0).unwrap();
+    let data: Vec<f32> = vec![
+        0.0,
+        -0.0,
+        1.5,
+        f32::MIN_POSITIVE,
+        f32::MAX,
+        -1e-38,
+        std::f32::consts::PI,
+    ];
+    ctx.write(7, &[data.len() as u32], &data).unwrap();
+    ctx.finalize().unwrap();
+    let mut reader = StreamReader::connect(
+        srv.addr(),
+        vec!["exact/0".into()],
+        0,
+        ConnConfig::default(),
+    )
+    .unwrap();
+    let batches = reader.poll().unwrap();
+    let got = batches[0].records[0].payload_f32().unwrap();
+    for (a, b) in got.iter().zip(&data) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+/// Streaming context + engine under sustained concurrent load from many
+/// producers (stress): nothing lost, nothing duplicated.
+#[test]
+fn stress_concurrent_pipeline_exactly_once() {
+    let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+    let metrics = WorkflowMetrics::new();
+    let broker = Arc::new(
+        Broker::new(
+            BrokerConfig {
+                group_size: 8,
+                ..BrokerConfig::new(vec![srv.addr()])
+            },
+            8,
+            metrics.clone(),
+        )
+        .unwrap(),
+    );
+    let keys: Vec<String> = (0..8).map(|r| format!("u/{r}")).collect();
+    let reader = StreamReader::connect(srv.addr(), keys, 0, ConnConfig::default()).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let ctx = StreamingContext::start(
+        StreamingConfig {
+            trigger_interval: Duration::from_millis(25),
+            executors: 8,
+            batch_limit: 0,
+        },
+        vec![reader],
+        |b: &MicroBatch| {
+            b.records
+                .iter()
+                .map(|r| (r.rank, r.step))
+                .collect::<Vec<_>>()
+        },
+        tx,
+    );
+    let producers: Vec<_> = (0..8u32)
+        .map(|rank| {
+            let broker = broker.clone();
+            std::thread::spawn(move || {
+                let ctxw = broker.init("u", rank).unwrap();
+                let data = vec![0.1f32; 64];
+                for step in 0..100u64 {
+                    ctxw.write(step, &[64], &data).unwrap();
+                    if step % 17 == 0 {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+                ctxw.finalize().unwrap();
+            })
+        })
+        .collect();
+    for p in producers {
+        p.join().unwrap();
+    }
+    // allow the final trigger(s) to run, then stop (stop also drains)
+    ctx.stop().unwrap();
+    let mut seen: std::collections::HashSet<(u32, u64)> = std::collections::HashSet::new();
+    let mut total = 0usize;
+    for (_seq, pair) in rx.try_iter() {
+        total += 1;
+        assert!(seen.insert(pair), "duplicate delivery of {pair:?}");
+    }
+    assert_eq!(total, 800);
+}
+
+/// StreamRecord decoding rejects hostile wire data without panicking
+/// (failure injection on the Cloud ingest path).
+#[test]
+fn hostile_wire_data_rejected() {
+    let good = StreamRecord::from_f32("u", 0, 1, 2, &[4], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+    let buf = good.encode();
+    let mut rng = elasticbroker::util::rng::Rng::new(0xBAD);
+    for _ in 0..2000 {
+        let mut fuzz = buf.clone();
+        let flips = 1 + rng.next_below(8) as usize;
+        for _ in 0..flips {
+            let i = rng.next_below(fuzz.len() as u64) as usize;
+            fuzz[i] ^= rng.next_u64() as u8;
+        }
+        let _ = StreamRecord::decode(&fuzz); // must not panic
+    }
+}
