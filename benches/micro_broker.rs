@@ -13,11 +13,54 @@ use std::time::Instant;
 use elasticbroker::broker::{Broker, BrokerConfig, QueuePolicy};
 use elasticbroker::endpoint::{EndpointServer, StoreConfig};
 use elasticbroker::metrics::WorkflowMetrics;
-use elasticbroker::transport::ConnConfig;
+use elasticbroker::transport::{ConnConfig, Request, RespConn};
 use elasticbroker::util;
 
 fn main() -> anyhow::Result<()> {
     elasticbroker::util::logger::init();
+
+    // --- batched pipelined writes vs per-record request/response ---------
+    // The tentpole number: same records, same connection type, same
+    // endpoint; the only difference is one round trip per record vs one
+    // per 64-record batch.
+    println!("# pipelined batch (64) vs per-record request/response, 4 KiB records");
+    let payload = vec![0u8; 4096];
+    let n = 4096usize;
+    let batch = 64usize;
+
+    let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default())?;
+    let mut conn = RespConn::connect(srv.addr(), ConnConfig::default())?;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let reply = conn.request(&[b"XADD", b"seq/0", b"*", b"r", &payload])?;
+        anyhow::ensure!(!reply.is_error(), "XADD failed");
+    }
+    let per_record = n as f64 / t0.elapsed().as_secs_f64();
+
+    let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default())?;
+    let mut conn = RespConn::connect(srv.addr(), ConnConfig::default())?;
+    let t0 = Instant::now();
+    let mut sent = 0usize;
+    while sent < n {
+        let take = batch.min(n - sent);
+        let reqs: Vec<Request> = (0..take)
+            .map(|_| {
+                Request::new("XADD")
+                    .arg("pipe/0")
+                    .arg("*")
+                    .arg("r")
+                    .arg(payload.clone())
+            })
+            .collect();
+        let replies = conn.pipeline(&reqs)?;
+        anyhow::ensure!(replies.iter().all(|r| !r.is_error()), "XADD failed");
+        sent += take;
+    }
+    let pipelined = n as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "  per-record: {per_record:>9.0} rec/s   pipelined x{batch}: {pipelined:>9.0} rec/s   speedup {:.1}x",
+        pipelined / per_record
+    );
 
     // --- write-call latency across payload sizes -------------------------
     println!("# broker_write call latency (enqueue path) + ship throughput");

@@ -21,6 +21,7 @@ fn main() -> anyhow::Result<()> {
         let store = Store::new(StoreConfig {
             stream_maxlen: 0,
             max_memory: 0,
+            ..Default::default()
         });
         let value = vec![0u8; payload];
         let n = 50_000usize.min(200_000_000 / payload.max(1));
@@ -47,6 +48,44 @@ fn main() -> anyhow::Result<()> {
             n as f64 / secs,
             (n * payload) as f64 / secs / 1e6,
             read as f64 / rsecs,
+        );
+    }
+
+    // --- shard scaling: concurrent XADD to DISTINCT streams ----------------
+    // With one shard every writer serializes on the same map lock; with
+    // N shards, writers to distinct streams proceed independently, so
+    // the aggregate rate should grow with the shard count.
+    println!("\n# in-process store: 8 writers, distinct streams, by shard count");
+    for shards in [1usize, 4, 16] {
+        let store = std::sync::Arc::new(Store::new(StoreConfig {
+            stream_maxlen: 0,
+            max_memory: 0,
+            shards,
+        }));
+        let per_thread = 40_000usize;
+        let value = vec![0u8; 256];
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let store = store.clone();
+                let value = value.clone();
+                std::thread::spawn(move || {
+                    let key = format!("s/{t}");
+                    for _ in 0..per_thread {
+                        store
+                            .xadd(&key, None, vec![(b"r".to_vec(), value.clone())])
+                            .unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "  {shards:>2} shard(s): {:>10.0} XADD/s aggregate",
+            (8 * per_thread) as f64 / secs,
         );
     }
 

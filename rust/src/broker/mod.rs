@@ -22,6 +22,15 @@
 //!   writer thread ships records to the endpoint.  Queue-full policy is
 //!   configurable: `Block` (backpressure, no loss — default) or
 //!   `DropOldest` (bounded staleness, lossy).
+//! * **Batched pipelined shipping**: the writer drains the queue in
+//!   coalesced batches ([`BoundedQueue::drain_batch`]) and ships each
+//!   batch as one pipelined `XADD` frame
+//!   ([`crate::transport::RespConn::pipeline`]) — one round trip per
+//!   batch instead of per record.  Knobs: `batch_max_records`,
+//!   `batch_max_bytes` and `linger_ms` on [`BrokerConfig`] (linger
+//!   trades a bounded latency add for fuller batches; the 0 default
+//!   ships whatever has queued the moment the writer is free, so an
+//!   idle stream still sees per-record latency).
 //! * **Filtering / aggregation / format conversion** ([`filter`]):
 //!   optional per-context stages applied before serialization.
 
@@ -35,13 +44,13 @@ pub use queue::{BoundedQueue, QueuePolicy};
 
 use std::net::SocketAddr;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::metrics::WorkflowMetrics;
 use crate::record::StreamRecord;
-use crate::transport::{ConnConfig, RespConn};
+use crate::transport::{ConnConfig, Request, RespConn};
 use crate::util;
 
 /// Broker-wide configuration shared by all contexts of a process.
@@ -59,6 +68,15 @@ pub struct BrokerConfig {
     pub conn: ConnConfig,
     /// Optional data-reduction pipeline applied in `write`.
     pub filter: Filter,
+    /// Max records coalesced into one pipelined `XADD` batch.
+    pub batch_max_records: usize,
+    /// Max payload bytes per batch (0 = unbounded; the first record of
+    /// a batch always ships even when it alone exceeds this).
+    pub batch_max_bytes: usize,
+    /// How long the writer lingers for a batch to fill once it holds at
+    /// least one record (ms; 0 = ship immediately).  Non-zero values
+    /// trade up to that much added latency for fuller batches.
+    pub linger_ms: u64,
 }
 
 impl BrokerConfig {
@@ -70,6 +88,9 @@ impl BrokerConfig {
             policy: QueuePolicy::Block,
             conn: ConnConfig::default(),
             filter: Filter::passthrough(),
+            batch_max_records: 64,
+            batch_max_bytes: 4 << 20, // 4 MiB
+            linger_ms: 0,
         }
     }
 }
@@ -110,13 +131,18 @@ impl Broker {
         let queue = Arc::new(BoundedQueue::new(self.cfg.queue_cap, self.cfg.policy));
         let key = crate::record::stream_key(field, rank);
         let conn_cfg = self.cfg.conn.clone();
+        let batching = BatchTuning {
+            max_records: self.cfg.batch_max_records.max(1),
+            max_bytes: self.cfg.batch_max_bytes,
+            linger: Duration::from_millis(self.cfg.linger_ms),
+        };
         let metrics = self.metrics.clone();
         let wq = queue.clone();
         let wkey = key.clone();
         let writer = std::thread::Builder::new()
             .name(format!("broker-writer-{key}"))
             .spawn(move || {
-                let res = writer_loop(addr, conn_cfg, &wq, wkey, metrics);
+                let res = writer_loop(addr, conn_cfg, batching, &wq, wkey, metrics);
                 if res.is_err() {
                     // A dead writer must never leave the producer blocked
                     // on a full queue: close it so pushes become drops.
@@ -205,47 +231,130 @@ impl Drop for BrokerCtx {
     }
 }
 
-/// Background writer: pop records, serialize, XADD to the endpoint.
+/// Writer-side batching knobs (resolved from [`BrokerConfig`]).
+#[derive(Clone, Copy, Debug)]
+struct BatchTuning {
+    max_records: usize,
+    max_bytes: usize,
+    linger: Duration,
+}
+
+/// Background writer: drain coalesced batches, serialize, ship each
+/// batch as one pipelined `XADD` frame.
 ///
 /// An `OOM` reply (endpoint over its memory budget) is retried with
 /// backoff — that is exactly how backpressure propagates upstream: the
 /// writer stalls, the bounded queue fills, and `broker_write` blocks
-/// (Block) or sheds old snapshots (DropOldest).  Retrying is bounded so
-/// a permanently wedged endpoint surfaces as an error, not a livelock.
+/// (Block) or sheds old snapshots (DropOldest).  Within a batch only
+/// the records that actually got `OOM` are retried, preserving their
+/// relative order and appending each record exactly once.  One caveat:
+/// if endpoint memory frees *mid-frame* (a concurrent `DEL`/trim from
+/// another connection), a later record of the same batch can succeed
+/// while an earlier one OOMs, and the retried record then lands after
+/// it — server-assigned ids cannot be backdated, so that inversion is
+/// unrepairable client-side.  It is detected and logged; the analysis
+/// layer's stale-step filter skips the late record (it stays readable
+/// in the store via XRANGE).  Retrying is bounded so a permanently
+/// wedged endpoint surfaces as an error, not a livelock.
 fn writer_loop(
     addr: SocketAddr,
     conn_cfg: ConnConfig,
+    batching: BatchTuning,
     queue: &BoundedQueue<StreamRecord>,
     key: String,
     metrics: WorkflowMetrics,
 ) -> Result<()> {
-    const OOM_RETRY_EVERY: std::time::Duration = std::time::Duration::from_millis(25);
+    const OOM_RETRY_EVERY: Duration = Duration::from_millis(25);
     const OOM_RETRY_LIMIT: u32 = 1200; // 30 s of patience
 
     let mut conn = RespConn::connect(addr, conn_cfg)?;
-    while let Some(record) = queue.pop() {
-        let payload = record.encode();
-        let n = payload.len();
-        let mut oom_attempts = 0u32;
-        loop {
-            let reply = conn.request(&[b"XADD", key.as_bytes(), b"*", b"r", &payload])?;
-            if !reply.is_error() {
-                break;
-            }
-            let msg = reply.as_str_lossy();
-            anyhow::ensure!(msg.starts_with("OOM"), "endpoint rejected XADD: {msg}");
-            oom_attempts += 1;
-            anyhow::ensure!(
-                oom_attempts <= OOM_RETRY_LIMIT,
-                "endpoint {addr} OOM for more than {:?}",
-                OOM_RETRY_EVERY * OOM_RETRY_LIMIT
+    while let Some(records) = queue.drain_batch(
+        batching.max_records,
+        batching.max_bytes,
+        batching.linger,
+        StreamRecord::encoded_len,
+    ) {
+        let mut reqs: Vec<Request> = Vec::with_capacity(records.len());
+        let mut lens: Vec<usize> = Vec::with_capacity(records.len());
+        for record in &records {
+            let payload = record.encode();
+            lens.push(payload.len());
+            reqs.push(
+                Request::new("XADD")
+                    .arg(key.as_bytes())
+                    .arg("*")
+                    .arg("r")
+                    .arg(payload),
             );
-            if oom_attempts == 1 {
-                log::warn!("broker: endpoint {addr} OOM; backing off");
-            }
-            std::thread::sleep(OOM_RETRY_EVERY);
         }
-        metrics.shipped.record(n as u64);
+        metrics.batch_records.record(reqs.len() as u64);
+        let t0 = Instant::now();
+        let mut oom_attempts = 0u32;
+        while !reqs.is_empty() {
+            // While backing off from OOM, probe with a single record
+            // instead of re-pipelining the whole doomed batch: on a
+            // wedged endpoint this costs one record per 25 ms tick
+            // (the pre-batching behaviour) rather than burning the
+            // possibly-throttled WAN link on megabytes of retries.
+            // Once the probe lands, the remainder ships as a batch.
+            let send = if oom_attempts == 0 { reqs.len() } else { 1 };
+            let replies = conn.pipeline(&reqs[..send])?;
+            let mut failed = vec![false; send];
+            let mut n_failed = 0usize;
+            let mut ok_after_failure = false;
+            for (i, reply) in replies.iter().enumerate() {
+                if reply.is_error() {
+                    let msg = reply.as_str_lossy();
+                    anyhow::ensure!(msg.starts_with("OOM"), "endpoint rejected XADD: {msg}");
+                    failed[i] = true;
+                    n_failed += 1;
+                } else {
+                    ok_after_failure |= n_failed > 0;
+                    metrics.shipped.record(lens[i] as u64);
+                }
+            }
+            if ok_after_failure {
+                // Endpoint memory freed mid-frame: a later record landed
+                // ahead of an OOM'd one.  The retry re-ships the OOM'd
+                // records, but their ids will postdate it (see the
+                // ordering caveat in the function docs).
+                log::warn!(
+                    "broker: stream {key}: record landed ahead of an OOM'd \
+                     predecessor; retried records will arrive out of order"
+                );
+            }
+            if n_failed > 0 {
+                oom_attempts += 1;
+                anyhow::ensure!(
+                    oom_attempts <= OOM_RETRY_LIMIT,
+                    "endpoint {addr} OOM for more than {:?} without progress",
+                    OOM_RETRY_EVERY * OOM_RETRY_LIMIT
+                );
+                if oom_attempts == 1 {
+                    log::warn!(
+                        "broker: endpoint {addr} OOM on {n_failed}/{send} records; backing off"
+                    );
+                }
+                std::thread::sleep(OOM_RETRY_EVERY);
+            } else {
+                oom_attempts = 0; // progress: next attempt batches again
+            }
+            // Keep this attempt's rejected records (in order) plus the
+            // not-yet-attempted tail.
+            let mut i = 0;
+            reqs.retain(|_| {
+                let keep = i >= send || failed[i];
+                i += 1;
+                keep
+            });
+            let mut i = 0;
+            lens.retain(|_| {
+                let keep = i >= send || failed[i];
+                i += 1;
+                keep
+            });
+        }
+        metrics.flush_us.record(t0.elapsed().as_micros() as u64);
     }
     Ok(())
 }
@@ -305,6 +414,9 @@ mod tests {
         let cfg = BrokerConfig {
             group_size: 1,
             queue_cap: 128,
+            // cap batches below the burst size so the throttle stall is
+            // visible as backlog even if the writer wakes up late
+            batch_max_records: 4,
             conn: ConnConfig {
                 throttle_bytes_per_sec: Some(200_000.0),
                 ..Default::default()
@@ -356,6 +468,68 @@ mod tests {
         let dropped = metrics.dropped.get() as usize;
         assert_eq!(landed + dropped, 40, "landed {landed} + dropped {dropped}");
         assert!(dropped > 0, "expected drops under a 4-deep queue");
+    }
+
+    #[test]
+    fn linger_coalesces_writes_into_batches() {
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        let cfg = BrokerConfig {
+            group_size: 1,
+            queue_cap: 64,
+            linger_ms: 60, // let the writer absorb the whole burst
+            ..BrokerConfig::new(vec![srv.addr()])
+        };
+        let metrics = WorkflowMetrics::new();
+        let broker = Broker::new(cfg, 1, metrics.clone()).unwrap();
+        let ctx = broker.init("u", 0).unwrap();
+        let data = vec![1.0f32; 64];
+        for step in 0..16 {
+            ctx.write(step, &[64], &data).unwrap();
+        }
+        ctx.finalize().unwrap();
+        // everything landed exactly once, in order
+        assert_eq!(srv.store().xlen("u/0"), 16);
+        let entries = srv
+            .store()
+            .read_after("u/0", crate::endpoint::EntryId::ZERO, 0);
+        let steps: Vec<u64> = entries
+            .iter()
+            .map(|e| StreamRecord::decode(&e.fields[0].1).unwrap().step)
+            .collect();
+        assert_eq!(steps, (0..16).collect::<Vec<_>>());
+        // and it took fewer flushes than records: coalescing happened
+        assert_eq!(metrics.shipped.records(), 16);
+        let flushes = metrics.batch_records.count();
+        assert!(flushes < 16, "no coalescing: {flushes} flushes for 16 records");
+        assert!(metrics.batch_records.max() >= 2);
+        assert_eq!(metrics.flush_us.count(), flushes);
+    }
+
+    #[test]
+    fn batch_byte_budget_splits_batches() {
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        let cfg = BrokerConfig {
+            group_size: 1,
+            queue_cap: 64,
+            linger_ms: 60,
+            // each record is ~4 KiB encoded; cap batches at ~2 records
+            batch_max_bytes: 9 * 1024,
+            ..BrokerConfig::new(vec![srv.addr()])
+        };
+        let metrics = WorkflowMetrics::new();
+        let broker = Broker::new(cfg, 1, metrics.clone()).unwrap();
+        let ctx = broker.init("u", 0).unwrap();
+        let data = vec![0.5f32; 1024];
+        for step in 0..8 {
+            ctx.write(step, &[1024], &data).unwrap();
+        }
+        ctx.finalize().unwrap();
+        assert_eq!(srv.store().xlen("u/0"), 8);
+        assert!(
+            metrics.batch_records.max() <= 2,
+            "byte budget ignored: max batch {}",
+            metrics.batch_records.max()
+        );
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// What `push` does when the queue is at capacity.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -93,6 +94,85 @@ impl<T> BoundedQueue<T> {
             }
             g = self.not_empty.wait(g).unwrap();
         }
+    }
+
+    /// Pop a coalesced batch — the consumer side of the broker's
+    /// pipelined write path.
+    ///
+    /// Blocks for the first item exactly like [`pop`](Self::pop), then
+    /// greedily takes already-queued items while the batch stays within
+    /// `max_n` records and `max_bytes` (per `size_of`; 0 = unbounded).
+    /// If `linger` is non-zero and the batch is not yet full, waits up
+    /// to that long for more items before returning — the classic
+    /// throughput/latency knob.  Returns `None` once closed *and*
+    /// drained.  The first item is always taken even when it alone
+    /// exceeds `max_bytes`, so oversized records cannot wedge the queue.
+    pub fn drain_batch<F>(
+        &self,
+        max_n: usize,
+        max_bytes: usize,
+        linger: Duration,
+        size_of: F,
+    ) -> Option<Vec<T>>
+    where
+        F: Fn(&T) -> usize,
+    {
+        let max_n = max_n.max(1);
+        let mut g = self.inner.lock().unwrap();
+        while g.items.is_empty() {
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+        let mut batch = Vec::new();
+        let mut bytes = 0usize;
+        let deadline = if linger.is_zero() {
+            None
+        } else {
+            Some(Instant::now() + linger)
+        };
+        loop {
+            // Greedily take what is queued right now.
+            while batch.len() < max_n {
+                let fits = match g.items.front() {
+                    None => break,
+                    Some(item) => {
+                        batch.is_empty()
+                            || max_bytes == 0
+                            || bytes + size_of(item) <= max_bytes
+                    }
+                };
+                if !fits {
+                    // Next item would blow the byte budget: ship what we have.
+                    drop(g);
+                    self.not_full.notify_all();
+                    return Some(batch);
+                }
+                let item = g.items.pop_front().unwrap();
+                bytes += size_of(&item);
+                batch.push(item);
+            }
+            // The greedy take just freed capacity: wake blocked
+            // producers NOW (they acquire the lock once we release it
+            // in wait_timeout below), otherwise a full-queue producer
+            // would stay parked through the whole linger window and
+            // the batch could never fill.
+            self.not_full.notify_all();
+            if batch.len() >= max_n || g.closed {
+                break;
+            }
+            let Some(dl) = deadline else { break };
+            let now = Instant::now();
+            if now >= dl {
+                break;
+            }
+            let (g2, _) = self.not_empty.wait_timeout(g, dl - now).unwrap();
+            g = g2;
+        }
+        drop(g);
+        self.not_full.notify_all();
+        Some(batch)
     }
 
     /// Close the queue: producers stop, consumer drains what remains.
@@ -193,6 +273,115 @@ mod tests {
         assert_eq!(q.push(2), 1);
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn drain_batch_takes_queued_up_to_max_n() {
+        let q = BoundedQueue::new(16, QueuePolicy::Block);
+        for i in 0..10 {
+            q.push(i);
+        }
+        let b = q
+            .drain_batch(4, 0, Duration::ZERO, |_| 1)
+            .unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = q
+            .drain_batch(100, 0, Duration::ZERO, |_| 1)
+            .unwrap();
+        assert_eq!(b, vec![4, 5, 6, 7, 8, 9]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drain_batch_respects_byte_budget() {
+        let q = BoundedQueue::new(16, QueuePolicy::Block);
+        for i in 0..6u64 {
+            q.push(i);
+        }
+        // each item "weighs" 10 bytes; budget 35 → 3 items per batch
+        let b = q.drain_batch(100, 35, Duration::ZERO, |_| 10).unwrap();
+        assert_eq!(b, vec![0, 1, 2]);
+        let b = q.drain_batch(100, 35, Duration::ZERO, |_| 10).unwrap();
+        assert_eq!(b, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn drain_batch_oversized_first_item_still_ships() {
+        let q = BoundedQueue::new(4, QueuePolicy::Block);
+        q.push(1);
+        q.push(2);
+        // every item exceeds the budget alone: batches of exactly one
+        let b = q.drain_batch(8, 5, Duration::ZERO, |_| 100).unwrap();
+        assert_eq!(b, vec![1]);
+        let b = q.drain_batch(8, 5, Duration::ZERO, |_| 100).unwrap();
+        assert_eq!(b, vec![2]);
+    }
+
+    #[test]
+    fn drain_batch_blocks_then_returns_none_after_close() {
+        let q = Arc::new(BoundedQueue::<u32>::new(4, QueuePolicy::Block));
+        let qc = q.clone();
+        let consumer = std::thread::spawn(move || {
+            let mut batches = Vec::new();
+            while let Some(b) = qc.drain_batch(8, 0, Duration::ZERO, |_| 1) {
+                batches.push(b);
+            }
+            batches
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        q.push(7);
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        let batches = consumer.join().unwrap();
+        let total: usize = batches.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 1);
+    }
+
+    #[test]
+    fn drain_batch_linger_collects_stragglers() {
+        let q = Arc::new(BoundedQueue::new(16, QueuePolicy::Block));
+        q.push(0);
+        let qp = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 1..4 {
+                std::thread::sleep(Duration::from_millis(10));
+                qp.push(i);
+            }
+        });
+        // generous linger: the batch should absorb all 4 items
+        let b = q
+            .drain_batch(4, 0, Duration::from_millis(500), |_| 1)
+            .unwrap();
+        producer.join().unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn drain_batch_linger_deadline_bounds_wait() {
+        let q = BoundedQueue::<u32>::new(4, QueuePolicy::Block);
+        q.push(9);
+        let t0 = Instant::now();
+        let b = q
+            .drain_batch(4, 0, Duration::from_millis(50), |_| 1)
+            .unwrap();
+        assert_eq!(b, vec![9]);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(40), "left early: {waited:?}");
+        assert!(waited < Duration::from_secs(2), "over-waited: {waited:?}");
+    }
+
+    #[test]
+    fn drain_batch_frees_capacity_for_blocked_producer() {
+        let q = Arc::new(BoundedQueue::new(2, QueuePolicy::Block));
+        q.push(1);
+        q.push(2);
+        let qp = q.clone();
+        let producer = std::thread::spawn(move || qp.push(3)); // blocks: full
+        std::thread::sleep(Duration::from_millis(30));
+        let b = q.drain_batch(2, 0, Duration::ZERO, |_| 1).unwrap();
+        assert_eq!(b, vec![1, 2]);
+        assert_eq!(producer.join().unwrap(), 0); // unblocked, nothing dropped
+        assert_eq!(q.len(), 1);
     }
 
     #[test]

@@ -128,6 +128,18 @@ pub fn apply_overrides(
     if let Some(v) = args.get_parsed::<usize>("group-size")? {
         cfg.group_size = v;
     }
+    if let Some(v) = args.get_parsed::<usize>("batch-max-records")? {
+        cfg.batch_max_records = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("batch-max-bytes")? {
+        cfg.batch_max_bytes = v;
+    }
+    if let Some(v) = args.get_parsed::<u64>("linger-ms")? {
+        cfg.linger_ms = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("store-shards")? {
+        cfg.store_shards = v;
+    }
     if let Some(v) = args.get_parsed::<usize>("executors")? {
         cfg.executors = v;
     }
@@ -164,17 +176,20 @@ SUBCOMMANDS:
                 --bind ADDR          (default 127.0.0.1:6379)
                 --maxlen N           per-stream entry cap
                 --max-memory BYTES   global budget
+                --shards N           store shards (default 8)
   sim         Run the HPC-side CFD simulation against remote endpoints
                 --endpoints A[,B..]  required for --io-mode broker
                 --ranks/--height/--width/--steps/--write-interval
                 --io-mode file|broker|none   --out-dir DIR   --no-pjrt
+                --batch-max-records N --batch-max-bytes B --linger-ms MS
   analysis    Run the Cloud-side streaming + DMD service
                 --endpoints A[,B..]  --ranks N  --field NAME
                 --trigger-ms MS --executors N --dmd-window M --dmd-rank R
                 --duration-secs S    how long to serve (default 60)
-                --analysis-csv PATH
+                --analysis-csv PATH  --store-shards N (workflow mode)
   synth       Run synthetic generators against remote endpoints
                 --endpoints A[,B..]  --ranks N --dim D --records N --rate HZ
+                --batch-max-records N --batch-max-bytes B --linger-ms MS
   workflow    Run the whole paper workflow in one process
                 --config FILE (TOML)  plus any sim/analysis flag above
 

@@ -73,10 +73,18 @@ pub struct WorkflowConfig {
     pub queue_cap: usize,
     /// Drop-oldest instead of blocking when a queue is full.
     pub drop_oldest: bool,
+    /// Max records per pipelined XADD batch (writer-side coalescing).
+    pub batch_max_records: usize,
+    /// Max payload bytes per batch (0 = unbounded).
+    pub batch_max_bytes: usize,
+    /// Writer linger before shipping a non-full batch (ms; 0 = none).
+    pub linger_ms: u64,
 
     // --- cloud side ---
     /// Number of endpoints (None → ranks / group_size).
     pub endpoints: Option<usize>,
+    /// Stream-store shards per endpoint (cross-stream lock isolation).
+    pub store_shards: usize,
     /// Number of stream-processing executors (paper ratio: = ranks).
     pub executors: usize,
     /// Micro-batch trigger interval, milliseconds (paper: 3000).
@@ -111,7 +119,11 @@ impl Default for WorkflowConfig {
             group_size: 16,
             queue_cap: 64,
             drop_oldest: false,
+            batch_max_records: 64,
+            batch_max_bytes: 4 << 20,
+            linger_ms: 0,
             endpoints: None,
+            store_shards: 8,
             executors: 16,
             trigger_ms: 3000,
             dmd_window: 8,
@@ -194,8 +206,20 @@ impl WorkflowConfig {
         if let Some(v) = map.get_bool("broker.drop_oldest")? {
             cfg.drop_oldest = v;
         }
+        if let Some(v) = map.get_usize("broker.batch_max_records")? {
+            cfg.batch_max_records = v;
+        }
+        if let Some(v) = map.get_usize("broker.batch_max_bytes")? {
+            cfg.batch_max_bytes = v;
+        }
+        if let Some(v) = map.get_u64("broker.linger_ms")? {
+            cfg.linger_ms = v;
+        }
         if let Some(v) = map.get_usize("cloud.endpoints")? {
             cfg.endpoints = Some(v);
+        }
+        if let Some(v) = map.get_usize("cloud.store_shards")? {
+            cfg.store_shards = v;
         }
         if let Some(v) = map.get_usize("cloud.executors")? {
             cfg.executors = v;
@@ -227,6 +251,8 @@ impl WorkflowConfig {
         anyhow::ensure!(self.ranks > 0, "ranks must be > 0");
         anyhow::ensure!(self.group_size > 0, "group_size must be > 0");
         anyhow::ensure!(self.executors > 0, "executors must be > 0");
+        anyhow::ensure!(self.batch_max_records > 0, "batch_max_records must be > 0");
+        anyhow::ensure!(self.store_shards > 0, "store_shards must be > 0");
         anyhow::ensure!(
             self.dmd_rank <= self.dmd_window,
             "dmd_rank {} > dmd_window {}",
@@ -267,10 +293,14 @@ mod tests {
             [broker]
             queue_cap = 8
             drop_oldest = true
+            batch_max_records = 128
+            batch_max_bytes = 1048576
+            linger_ms = 5
 
             [cloud]
             executors = 32
             trigger_ms = 500
+            store_shards = 16
             "#,
         )
         .unwrap();
@@ -278,8 +308,23 @@ mod tests {
         assert_eq!(c.io_mode, IoMode::File);
         assert!(!c.use_pjrt);
         assert!(c.drop_oldest);
+        assert_eq!(c.batch_max_records, 128);
+        assert_eq!(c.batch_max_bytes, 1 << 20);
+        assert_eq!(c.linger_ms, 5);
         assert_eq!(c.executors, 32);
+        assert_eq!(c.store_shards, 16);
         assert_eq!(c.endpoint_count(), 2);
+    }
+
+    #[test]
+    fn batching_defaults_and_validation() {
+        let c = WorkflowConfig::default();
+        assert_eq!(c.batch_max_records, 64);
+        assert_eq!(c.batch_max_bytes, 4 << 20);
+        assert_eq!(c.linger_ms, 0);
+        assert_eq!(c.store_shards, 8);
+        assert!(WorkflowConfig::from_toml("[broker]\nbatch_max_records = 0\n").is_err());
+        assert!(WorkflowConfig::from_toml("[cloud]\nstore_shards = 0\n").is_err());
     }
 
     #[test]

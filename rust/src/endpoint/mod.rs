@@ -6,7 +6,10 @@
 //!
 //! * [`store`] — the stream data model (`XADD`/`XREAD` semantics,
 //!   per-stream trimming, global memory budget → `OOM` backpressure),
-//! * [`server`] — the TCP RESP2 front-end.
+//!   hash-sharded across independent locks so concurrent writers to
+//!   distinct streams scale with [`StoreConfig::shards`],
+//! * [`server`] — the TCP RESP2 front-end; pipelined command frames
+//!   are answered with one coalesced write per frame.
 
 pub mod server;
 pub mod store;

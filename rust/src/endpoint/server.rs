@@ -7,7 +7,11 @@
 //!
 //! One OS thread per connection (the paper sizes one endpoint per 16
 //! writer processes, so connection counts are small); commands are
-//! dispatched against the shared, internally-locked store.
+//! dispatched against the shared, internally-sharded store.  Pipelined
+//! command frames are handled without per-command flushes: every
+//! complete command in the receive buffer is executed and all replies
+//! go out in one write, so broker-side `RespConn::pipeline` batches
+//! cost one syscall pair per batch on both ends of the connection.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -113,29 +117,47 @@ fn serve_connection(
     stream
         .set_read_timeout(Some(Duration::from_millis(250)))
         .ok();
+    // Accumulated replies are flushed once per pipelined frame — but
+    // also whenever the buffer grows past this bound, so a frame of
+    // many large-reply commands (XREADs over megabyte snapshots) can
+    // never balloon the reply buffer without limit.
+    const FLUSH_THRESHOLD: usize = 1 << 20; // 1 MiB
+
     let mut decoder = Decoder::new();
     let mut read_buf = [0u8; 64 * 1024];
     let mut out = Vec::with_capacity(16 * 1024);
     loop {
-        // Drain complete commands already buffered.
+        // Drain ALL complete commands already buffered, accumulating
+        // their replies, and flush once per frame: a client that
+        // pipelines N commands costs one write syscall here, not N
+        // (the server half of the batched write path).
+        let mut quit = false;
         loop {
             match decoder.next() {
                 Ok(Some(cmd)) => {
-                    out.clear();
-                    let quit = dispatch(store, &cmd, &mut out);
-                    stream.write_all(&out)?;
-                    if quit {
-                        return Ok(());
+                    if dispatch(store, &cmd, &mut out) {
+                        quit = true;
+                        break;
+                    }
+                    if out.len() >= FLUSH_THRESHOLD {
+                        stream.write_all(&out)?;
+                        out.clear();
                     }
                 }
                 Ok(None) => break,
                 Err(e) => {
-                    out.clear();
                     wire::encode(&Value::Error(format!("ERR protocol error: {e}")), &mut out);
                     stream.write_all(&out)?;
                     return Ok(());
                 }
             }
+        }
+        if !out.is_empty() {
+            stream.write_all(&out)?;
+            out.clear();
+        }
+        if quit {
+            return Ok(());
         }
         match stream.read(&mut read_buf) {
             Ok(0) => return Ok(()),
@@ -500,6 +522,69 @@ mod tests {
         assert_eq!(reply.as_array().unwrap().len(), 3);
         let reply = c.request(&[b"XRANGE", b"s", b"2-0", b"3-0"]).unwrap();
         assert_eq!(reply.as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn pipelined_frame_gets_all_replies_in_order() {
+        // Hand-rolled pipelining: several commands in ONE tcp write;
+        // every reply must come back, in order, on the same connection.
+        let srv = server();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        let mut frame = Vec::new();
+        for i in 0..5 {
+            wire::encode_command(
+                &[b"XADD", b"p", b"*", b"r", format!("v{i}").as_bytes()],
+                &mut frame,
+            );
+        }
+        wire::encode_command(&[b"XLEN", b"p"], &mut frame);
+        wire::encode_command(&[b"PING"], &mut frame);
+        s.write_all(&frame).unwrap();
+        let mut dec = Decoder::new();
+        let mut buf = [0u8; 4096];
+        let mut replies = Vec::new();
+        while replies.len() < 7 {
+            let n = s.read(&mut buf).unwrap();
+            assert!(n > 0, "server closed early");
+            dec.feed(&buf[..n]);
+            while let Some(v) = dec.next().unwrap() {
+                replies.push(v);
+            }
+        }
+        for r in &replies[..5] {
+            assert!(matches!(r, Value::Bulk(_)), "XADD reply: {r}");
+        }
+        assert_eq!(replies[5], Value::Int(5));
+        assert_eq!(replies[6], Value::Simple("PONG".into()));
+        assert_eq!(srv.store().xlen("p"), 5);
+    }
+
+    #[test]
+    fn pipelined_frame_with_quit_replies_then_closes() {
+        let srv = server();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        let mut frame = Vec::new();
+        wire::encode_command(&[b"PING"], &mut frame);
+        wire::encode_command(&[b"QUIT"], &mut frame);
+        s.write_all(&frame).unwrap();
+        let mut dec = Decoder::new();
+        let mut buf = [0u8; 1024];
+        let mut replies = Vec::new();
+        loop {
+            match s.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => {
+                    dec.feed(&buf[..n]);
+                    while let Some(v) = dec.next().unwrap() {
+                        replies.push(v);
+                    }
+                }
+            }
+        }
+        assert_eq!(
+            replies,
+            vec![Value::Simple("PONG".into()), Value::Simple("OK".into())]
+        );
     }
 
     #[test]

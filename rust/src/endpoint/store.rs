@@ -4,6 +4,19 @@
 //! entries.  Entry ids are `<ms>-<seq>` pairs, monotonically increasing
 //! per stream exactly like Redis; readers poll with "entries after id".
 //!
+//! **Sharding:** the key space is hashed (FNV-1a) across
+//! [`StoreConfig::shards`] independent shards, each with its own
+//! `RwLock<HashMap>` and its own monotonic clock.  Writers to distinct
+//! streams on distinct shards never touch the same lock, so concurrent
+//! `XADD` throughput scales with the shard count instead of serializing
+//! on one global map lock — the scaling substrate for the paper's
+//! many-ranks-per-endpoint fan-in.
+//!
+//! **Id allocation** is a single atomic `fetch_max` on the shard clock
+//! (monotonicized wall-clock ms) followed by seq resolution under the
+//! per-stream lock, so concurrent auto-id writers can never mint
+//! duplicate `(ms, seq)` pairs.
+//!
 //! Two bounds protect the endpoint (the backpressure story of
 //! DESIGN.md §6): a per-stream `maxlen` (oldest entries trimmed, like
 //! `XADD ... MAXLEN ~ n`) and a global memory budget (when exceeded,
@@ -83,6 +96,10 @@ pub struct StoreConfig {
     /// Global payload budget in bytes; XADD fails with OOM above it
     /// (0 = unbounded).
     pub max_memory: usize,
+    /// Number of independent map shards the key space is hashed across
+    /// (values < 1 are clamped to 1).  More shards = less cross-stream
+    /// lock contention; streams never span shards.
+    pub shards: usize,
 }
 
 impl Default for StoreConfig {
@@ -90,36 +107,75 @@ impl Default for StoreConfig {
         StoreConfig {
             stream_maxlen: 4096,
             max_memory: 1 << 30, // 1 GiB
+            shards: 8,
         }
     }
 }
 
-/// Thread-safe stream store (shared by all connection handlers).
-pub struct Store {
-    cfg: StoreConfig,
+/// One independent slice of the key space.
+struct Shard {
     streams: RwLock<HashMap<String, Mutex<Stream>>>,
-    total_bytes: AtomicU64,
-    total_entries: AtomicU64,
+    /// Monotonicized wall-clock ms for this shard's auto-assigned ids.
     clock_ms: AtomicU64,
 }
 
-impl Store {
-    pub fn new(cfg: StoreConfig) -> Self {
-        Store {
-            cfg,
+impl Shard {
+    fn new() -> Self {
+        Shard {
             streams: RwLock::new(HashMap::new()),
-            total_bytes: AtomicU64::new(0),
-            total_entries: AtomicU64::new(0),
             clock_ms: AtomicU64::new(0),
         }
     }
 
     /// Current wall-clock ms, monotonicized (Redis semantics: if the
-    /// clock steps back, keep using the last ms and bump seq).
+    /// clock steps back, keep using the last ms and bump seq).  One
+    /// atomic op: `fetch_max` returns the previous value, so
+    /// `max(prev, wall)` is exactly the value this call stored — no
+    /// separate load that could observe a *different* (later) value and
+    /// race two writers onto the same `(ms, seq)`.
     fn now_ms(&self) -> u64 {
         let wall = crate::util::epoch_micros() / 1000;
-        self.clock_ms.fetch_max(wall, Ordering::Relaxed);
-        self.clock_ms.load(Ordering::Relaxed)
+        self.clock_ms.fetch_max(wall, Ordering::AcqRel).max(wall)
+    }
+}
+
+/// Thread-safe sharded stream store (shared by all connection handlers).
+pub struct Store {
+    cfg: StoreConfig,
+    shards: Vec<Shard>,
+    total_bytes: AtomicU64,
+    total_entries: AtomicU64,
+}
+
+impl Store {
+    pub fn new(cfg: StoreConfig) -> Self {
+        let n = cfg.shards.max(1);
+        Store {
+            cfg,
+            shards: (0..n).map(|_| Shard::new()).collect(),
+            total_bytes: AtomicU64::new(0),
+            total_entries: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of shards the key space is split across.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard a key lives on (stable for the store's lifetime).
+    pub fn shard_of(&self, key: &str) -> usize {
+        // FNV-1a 64: tiny, allocation-free, good avalanche on short keys.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in key.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        (h % self.shards.len() as u64) as usize
+    }
+
+    fn shard(&self, key: &str) -> &Shard {
+        &self.shards[self.shard_of(key)]
     }
 
     /// Append an entry; `id` of `None` means auto-assign (`XADD key *`).
@@ -134,24 +190,26 @@ impl Store {
         {
             bail!("OOM command not allowed when used memory > 'maxmemory'");
         }
-        // Fast path: stream exists (read lock on the map).
+        let shard = self.shard(key);
+        // Fast path: stream exists (read lock on the shard map).
         {
-            let map = self.streams.read().unwrap();
+            let map = shard.streams.read().unwrap();
             if let Some(stream) = map.get(key) {
-                return self.append(&mut stream.lock().unwrap(), id, fields);
+                return self.append(shard, &mut stream.lock().unwrap(), id, fields);
             }
         }
         // Slow path: create the stream.
-        let mut map = self.streams.write().unwrap();
+        let mut map = shard.streams.write().unwrap();
         let stream = map.entry(key.to_string()).or_default();
         let mut guard = stream.lock().unwrap();
-        let res = self.append(&mut guard, id, fields);
+        let res = self.append(shard, &mut guard, id, fields);
         drop(guard);
         res
     }
 
     fn append(
         &self,
+        shard: &Shard,
         s: &mut Stream,
         id: Option<EntryId>,
         fields: Vec<(Vec<u8>, Vec<u8>)>,
@@ -166,7 +224,7 @@ impl Store {
                 explicit
             }
             None => {
-                let ms = self.now_ms();
+                let ms = shard.now_ms();
                 if ms <= s.last_id.ms {
                     s.last_id.next()
                 } else {
@@ -197,7 +255,7 @@ impl Store {
     /// Entries of `key` with id strictly greater than `after`
     /// (`XREAD`-style), up to `count` (0 = all).
     pub fn read_after(&self, key: &str, after: EntryId, count: usize) -> Vec<Entry> {
-        let map = self.streams.read().unwrap();
+        let map = self.shard(key).streams.read().unwrap();
         let Some(stream) = map.get(key) else {
             return Vec::new();
         };
@@ -210,7 +268,7 @@ impl Store {
 
     /// Inclusive range query (`XRANGE key start end [COUNT n]`).
     pub fn range(&self, key: &str, start: EntryId, end: EntryId, count: usize) -> Vec<Entry> {
-        let map = self.streams.read().unwrap();
+        let map = self.shard(key).streams.read().unwrap();
         let Some(stream) = map.get(key) else {
             return Vec::new();
         };
@@ -228,7 +286,7 @@ impl Store {
 
     /// Stream length (`XLEN`).
     pub fn xlen(&self, key: &str) -> usize {
-        let map = self.streams.read().unwrap();
+        let map = self.shard(key).streams.read().unwrap();
         map.get(key)
             .map(|s| s.lock().unwrap().entries.len())
             .unwrap_or(0)
@@ -236,7 +294,7 @@ impl Store {
 
     /// Last assigned id of a stream (0-0 when absent).
     pub fn last_id(&self, key: &str) -> EntryId {
-        let map = self.streams.read().unwrap();
+        let map = self.shard(key).streams.read().unwrap();
         map.get(key)
             .map(|s| s.lock().unwrap().last_id)
             .unwrap_or(EntryId::ZERO)
@@ -244,9 +302,9 @@ impl Store {
 
     /// Delete streams; returns how many existed (`DEL`).
     pub fn del(&self, keys: &[&str]) -> usize {
-        let mut map = self.streams.write().unwrap();
         let mut n = 0;
         for key in keys {
+            let mut map = self.shard(key).streams.write().unwrap();
             if let Some(s) = map.remove(*key) {
                 let bytes = s.lock().unwrap().bytes;
                 self.total_bytes.fetch_sub(bytes as u64, Ordering::Relaxed);
@@ -258,35 +316,43 @@ impl Store {
 
     /// Drop everything (`FLUSHALL`).
     pub fn flush_all(&self) {
-        let mut map = self.streams.write().unwrap();
-        map.clear();
+        for shard in &self.shards {
+            shard.streams.write().unwrap().clear();
+        }
         self.total_bytes.store(0, Ordering::Relaxed);
     }
 
     /// Keys matching a glob-lite pattern (`*` suffix/prefix only, or exact).
     pub fn keys(&self, pattern: &str) -> Vec<String> {
-        let map = self.streams.read().unwrap();
-        let mut out: Vec<String> = map
-            .keys()
-            .filter(|k| glob_lite(pattern, k))
-            .cloned()
-            .collect();
+        let mut out: Vec<String> = Vec::new();
+        for shard in &self.shards {
+            let map = shard.streams.read().unwrap();
+            out.extend(map.keys().filter(|k| glob_lite(pattern, k)).cloned());
+        }
         out.sort();
         out
     }
 
+    /// Total number of live streams across all shards.
+    pub fn stream_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.streams.read().unwrap().len())
+            .sum()
+    }
+
     /// INFO text (mirrors the fields the paper's Table 1b cares about).
     pub fn info(&self) -> String {
-        let map = self.streams.read().unwrap();
         format!(
             "# Server\r\nserver:elasticbroker-endpoint\r\nversion:0.1.0\r\nproto:RESP2\r\n\
              # Memory\r\nused_memory:{}\r\nmaxmemory:{}\r\n\
-             # Streams\r\nstreams:{}\r\ntotal_entries_added:{}\r\nstream_maxlen:{}\r\n",
+             # Streams\r\nstreams:{}\r\ntotal_entries_added:{}\r\nstream_maxlen:{}\r\nshards:{}\r\n",
             self.total_bytes.load(Ordering::Relaxed),
             self.cfg.max_memory,
-            map.len(),
+            self.stream_count(),
             self.total_entries.load(Ordering::Relaxed),
             self.cfg.stream_maxlen,
+            self.shards.len(),
         )
     }
 
@@ -393,6 +459,7 @@ mod tests {
         let store = Store::new(StoreConfig {
             stream_maxlen: 5,
             max_memory: 0,
+            ..Default::default()
         });
         for i in 0..12u64 {
             store
@@ -410,6 +477,7 @@ mod tests {
         let store = Store::new(StoreConfig {
             stream_maxlen: 0,
             max_memory: 100,
+            ..Default::default()
         });
         let big = vec![(b"r".to_vec(), vec![0u8; 100])];
         store.xadd("s", None, big.clone()).unwrap();
@@ -453,8 +521,53 @@ mod tests {
         let info = store.info();
         assert!(info.contains("streams:1"));
         assert!(info.contains("total_entries_added:1"));
+        assert!(info.contains("shards:8"));
     }
 
+    #[test]
+    fn shard_of_is_stable_and_spreads() {
+        let store = Store::new(StoreConfig::default());
+        assert_eq!(store.shard_count(), 8);
+        let keys: Vec<String> = (0..64).map(|i| format!("velocity/{i}")).collect();
+        let mut hit = vec![false; store.shard_count()];
+        for k in &keys {
+            let s = store.shard_of(k);
+            assert_eq!(s, store.shard_of(k), "unstable shard for {k}");
+            assert!(s < store.shard_count());
+            hit[s] = true;
+        }
+        // 64 keys over 8 shards: FNV must touch more than one shard.
+        assert!(hit.iter().filter(|&&h| h).count() > 1, "all keys on one shard");
+    }
+
+    #[test]
+    fn single_shard_store_still_correct() {
+        let store = Store::new(StoreConfig {
+            shards: 1,
+            ..Default::default()
+        });
+        for i in 0..10 {
+            store.xadd(&format!("k/{i}"), None, fields("x")).unwrap();
+        }
+        assert_eq!(store.keys("*").len(), 10);
+        assert_eq!(store.stream_count(), 10);
+        assert_eq!(store.shard_count(), 1);
+    }
+
+    #[test]
+    fn zero_shards_clamped_to_one() {
+        let store = Store::new(StoreConfig {
+            shards: 0,
+            ..Default::default()
+        });
+        store.xadd("s", None, fields("x")).unwrap();
+        assert_eq!(store.shard_count(), 1);
+        assert_eq!(store.xlen("s"), 1);
+    }
+
+    /// Regression (ISSUE 1): id allocation must be a single atomic op.
+    /// 8 threads hammering auto-ids on ONE stream must never mint a
+    /// duplicate `(ms, seq)` pair.
     #[test]
     fn concurrent_xadd_ids_unique_and_monotonic() {
         let store = std::sync::Arc::new(Store::new(StoreConfig::default()));
@@ -482,6 +595,41 @@ mod tests {
         all.dedup();
         assert_eq!(all.len(), n, "duplicate ids under concurrency");
         assert_eq!(store.xlen("s"), 4000);
+    }
+
+    /// 8 threads × 8 distinct streams (spread across shards): every
+    /// record lands exactly once, per-stream ids stay unique and
+    /// strictly increasing, and global counters agree.
+    #[test]
+    fn concurrent_distinct_streams_exactly_once_across_shards() {
+        let store = std::sync::Arc::new(Store::new(StoreConfig::default()));
+        let per = 500usize;
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let store = store.clone();
+                std::thread::spawn(move || {
+                    let key = format!("u/{t}");
+                    let mut ids = Vec::new();
+                    for i in 0..per {
+                        ids.push(store.xadd(&key, None, fields(&i.to_string())).unwrap());
+                    }
+                    (key, ids)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (key, ids) = h.join().unwrap();
+            assert_eq!(store.xlen(&key), per);
+            for w in ids.windows(2) {
+                assert!(w[1] > w[0], "{key}: {} !> {}", w[1], w[0]);
+            }
+            // what the store returns matches what the writer saw, in order
+            let entries = store.read_after(&key, EntryId::ZERO, 0);
+            let got: Vec<EntryId> = entries.iter().map(|e| e.id).collect();
+            assert_eq!(got, ids, "{key}");
+        }
+        assert_eq!(store.total_entries_added(), 8 * per as u64);
+        assert_eq!(store.stream_count(), 8);
     }
 
     /// Property: after any interleaving of adds, read_after(last_id of a

@@ -18,12 +18,15 @@
 //!   halo exchange (stand-in for OpenFOAM `simpleFoam`).
 //! * [`broker`] — the ElasticBroker C/C++-style API
 //!   (`broker_init` / `broker_write` / `broker_finalize`), process
-//!   groups → Cloud endpoints, asynchronous background writers.
+//!   groups → Cloud endpoints, asynchronous background writers that
+//!   coalesce queued records into pipelined batches
+//!   (`batch_max_records` / `batch_max_bytes` / `linger_ms`).
 //! * [`synth`] — the synthetic data generator of §4.3.
 //!
 //! Cloud side (the paper's §3.2):
 //! * [`endpoint`] — the Cloud endpoint: an in-memory stream store
-//!   speaking the RESP wire protocol (stand-in for Redis 5).
+//!   speaking the RESP wire protocol (stand-in for Redis 5), sharded
+//!   across independent locks by stream-name hash.
 //! * [`streamproc`] — the distributed micro-batch stream-processing
 //!   engine (stand-in for Spark Streaming on Kubernetes).
 //! * [`analysis`] — windowed Dynamic Mode Decomposition of the incoming
@@ -32,8 +35,10 @@
 //! Substrates:
 //! * [`wire`] — RESP2 protocol codec.
 //! * [`record`] — the simulation→Cloud stream-record format.
-//! * [`transport`] — framed TCP client with reconnect + throttling.
-//! * [`runtime`] — PJRT artifact registry / executor (the AOT bridge).
+//! * [`transport`] — framed TCP client with reconnect, throttling and
+//!   request pipelining (N commands per round trip).
+//! * [`runtime`] — PJRT artifact registry / executor (the AOT bridge;
+//!   a no-op stub unless the `pjrt` cargo feature is enabled).
 //! * [`linalg`] — dense eigensolvers (Francis QR) for the DMD spectra.
 //! * [`metrics`], [`config`], [`util`] — observability, configuration,
 //!   logging/rng/property-test helpers.

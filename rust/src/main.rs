@@ -92,6 +92,7 @@ fn cmd_endpoint(args: &Args) -> Result<()> {
     let cfg = StoreConfig {
         stream_maxlen: args.get_parsed::<usize>("maxlen")?.unwrap_or(4096),
         max_memory: args.get_parsed::<usize>("max-memory")?.unwrap_or(1 << 30),
+        shards: args.get_parsed::<usize>("shards")?.unwrap_or(8).max(1),
     };
     let srv = EndpointServer::start(bind, cfg)?;
     println!("endpoint listening on {}", srv.addr());
@@ -122,6 +123,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
             BrokerConfig {
                 group_size: cfg.group_size,
                 queue_cap: cfg.queue_cap,
+                batch_max_records: cfg.batch_max_records,
+                batch_max_bytes: cfg.batch_max_bytes,
+                linger_ms: cfg.linger_ms,
                 ..BrokerConfig::new(endpoints)
             },
             cfg.ranks,
@@ -244,9 +248,17 @@ fn cmd_synth(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let metrics = WorkflowMetrics::new();
+    let defaults = WorkflowConfig::default();
     let broker = Arc::new(Broker::new(
         BrokerConfig {
             group_size: args.get_parsed::<usize>("group-size")?.unwrap_or(16),
+            batch_max_records: args
+                .get_parsed::<usize>("batch-max-records")?
+                .unwrap_or(defaults.batch_max_records),
+            batch_max_bytes: args
+                .get_parsed::<usize>("batch-max-bytes")?
+                .unwrap_or(defaults.batch_max_bytes),
+            linger_ms: args.get_parsed::<u64>("linger-ms")?.unwrap_or(defaults.linger_ms),
             ..BrokerConfig::new(endpoints)
         },
         ranks,

@@ -211,6 +211,12 @@ pub struct WorkflowMetrics {
     pub analyzed: Arc<Throughput>,
     /// records dropped by broker queue policy (0 under Block).
     pub dropped: Arc<Counter>,
+    /// records per flushed broker batch (1 = no coalescing happened).
+    pub batch_records: Arc<Histogram>,
+    /// broker batch flush latency µs: drain → every reply drained
+    /// (includes OOM backoff stalls, so p99 here surfaces endpoint
+    /// pressure).
+    pub flush_us: Arc<Histogram>,
 }
 
 impl Default for WorkflowMetrics {
@@ -227,6 +233,8 @@ impl WorkflowMetrics {
             shipped: Arc::new(Throughput::new()),
             analyzed: Arc::new(Throughput::new()),
             dropped: Arc::new(Counter::new()),
+            batch_records: Arc::new(Histogram::new()),
+            flush_us: Arc::new(Histogram::new()),
         }
     }
 }

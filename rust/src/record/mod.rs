@@ -333,6 +333,24 @@ mod tests {
         });
     }
 
+    /// Exhaustive corruption sweep: flipping EVERY byte of the encoded
+    /// record (one at a time) must make decode reject it — either the
+    /// CRC catches it or a schema check does, but it never slips
+    /// through as a "valid" record.
+    #[test]
+    fn every_byte_flip_rejected() {
+        let buf = sample().encode();
+        for i in 0..buf.len() {
+            let mut fuzzed = buf.clone();
+            fuzzed[i] ^= 0xFF;
+            assert!(
+                StreamRecord::decode(&fuzzed).is_err(),
+                "flip of byte {i} (of {}) went undetected",
+                buf.len()
+            );
+        }
+    }
+
     /// Property: single-bit flips anywhere are detected (CRC or schema).
     #[test]
     fn prop_bit_flips_detected() {

@@ -1,0 +1,87 @@
+//! No-PJRT runtime: the API surface of [`super::pjrt`] without the
+//! `xla` dependency.
+//!
+//! [`ArtifactSet::try_load_default`] always answers `None`, so the sim,
+//! analysis engine, workflow drivers, benches and examples all take
+//! their pure-Rust fallback paths — semantically identical to the
+//! compiled artifacts (the mirrors are cross-validated when a `pjrt`
+//! build runs the integration suite).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::ArtifactSpec;
+
+/// Artifact registry placeholder: never holds a compiled artifact.
+pub struct ArtifactSet {
+    specs: Vec<ArtifactSpec>,
+}
+
+impl ArtifactSet {
+    /// Always fails: compiled artifacts need the `pjrt` feature.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        bail!(
+            "cannot load artifacts from {}: elasticbroker was built without \
+             the `pjrt` feature (pure-Rust fallbacks are active)",
+            dir.as_ref().display()
+        )
+    }
+
+    /// Always `None` in a stub build; warns once per call site when
+    /// artifacts are present on disk but unusable.
+    pub fn try_load_default() -> Option<Arc<Self>> {
+        let candidate = std::env::var("ELASTICBROKER_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".into());
+        if Path::new(&candidate).join("manifest.txt").is_file() {
+            log::debug!(
+                "runtime: artifacts found at {candidate} but this build has no \
+                 `pjrt` feature; using pure-Rust fallbacks"
+            );
+        }
+        None
+    }
+
+    /// All parsed specs (always empty in a stub build).
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Find a spec by artifact name + shape key.
+    pub fn find(&self, name: &str, key: &str) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.name == name && s.key == key)
+    }
+
+    /// Always fails: there is no PJRT client to compile with.
+    pub fn executable(&self, name: &str, key: &str) -> Result<Arc<Executable>> {
+        bail!("no PJRT runtime in this build (artifact {name}/{key} requested)")
+    }
+}
+
+/// Compiled-artifact placeholder (never constructed in a stub build).
+pub struct Executable {
+    spec: ArtifactSpec,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Always fails: there is no PJRT executable behind this handle.
+    pub fn run_f32(&self, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        bail!("no PJRT runtime in this build")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_absence_not_panic() {
+        assert!(ArtifactSet::try_load_default().is_none());
+        assert!(ArtifactSet::load("artifacts").is_err());
+    }
+}

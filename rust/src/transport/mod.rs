@@ -1,11 +1,20 @@
-//! TCP client transport: a RESP connection with reconnect/backoff and an
-//! optional outbound bandwidth throttle.
+//! TCP client transport: a RESP connection with reconnect/backoff, an
+//! optional outbound bandwidth throttle, and **pipelining**.
 //!
 //! The throttle exists because the paper's HPC→Cloud link is a real WAN
 //! ("the bandwidth between HPC and Cloud systems is limited"); on a
 //! single host the loopback device would hide every bandwidth effect, so
 //! experiments can cap the per-connection rate to emulate the inter-site
 //! link (see DESIGN.md §2).
+//!
+//! [`RespConn::request`] is the classic one-command round trip (one
+//! write, one reply, one RTT).  [`RespConn::pipeline`] is the batched
+//! hot path the broker writers use: N [`Request`]s are encoded into one
+//! buffered write, then all N replies are drained — one RTT and one
+//! syscall pair per *batch* instead of per command, which is what lets
+//! a single writer saturate the link at small record sizes.  The
+//! throttle is charged once per batch (on the batch's total encoded
+//! bytes), so batching also amortizes token-bucket wakeups.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -54,6 +63,73 @@ impl Throttle {
             std::thread::sleep(Duration::from_secs_f64(wait));
         }
     }
+}
+
+/// One owned RESP command (an array of bulk strings) — the unit of
+/// [`RespConn::pipeline`].  Owning the argument bytes lets callers
+/// build a whole batch up front and retry it wholesale on reconnect.
+#[derive(Clone, Debug, Default)]
+pub struct Request {
+    parts: Vec<Vec<u8>>,
+}
+
+impl Request {
+    /// Start a command, e.g. `Request::new("XADD")`.
+    pub fn new(name: impl Into<Vec<u8>>) -> Self {
+        Request {
+            parts: vec![name.into()],
+        }
+    }
+
+    /// Append one argument (builder style).
+    pub fn arg(mut self, a: impl Into<Vec<u8>>) -> Self {
+        self.parts.push(a.into());
+        self
+    }
+
+    /// Number of parts (command name + args).
+    pub fn len(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parts.is_empty()
+    }
+
+    /// Exact serialized size on the wire.
+    pub fn wire_len(&self) -> usize {
+        // *<n>\r\n then $<len>\r\n<bytes>\r\n per part.
+        let mut n = 1 + decimal_len(self.parts.len()) + 2;
+        for p in &self.parts {
+            n += 1 + decimal_len(p.len()) + 2 + p.len() + 2;
+        }
+        n
+    }
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        // Same wire form as `wire::encode_command`, written out directly
+        // so the hot batch path doesn't build a temporary `Vec<&[u8]>`
+        // per request.
+        out.push(b'*');
+        out.extend_from_slice(self.parts.len().to_string().as_bytes());
+        out.extend_from_slice(b"\r\n");
+        for p in &self.parts {
+            out.push(b'$');
+            out.extend_from_slice(p.len().to_string().as_bytes());
+            out.extend_from_slice(b"\r\n");
+            out.extend_from_slice(p);
+            out.extend_from_slice(b"\r\n");
+        }
+    }
+}
+
+fn decimal_len(mut v: usize) -> usize {
+    let mut n = 1;
+    while v >= 10 {
+        v /= 10;
+        n += 1;
+    }
+    n
 }
 
 /// Connection settings.
@@ -197,6 +273,67 @@ impl RespConn {
         }
     }
 
+    /// Send a batch of commands as one pipelined write and drain all
+    /// replies (`replies[i]` answers `reqs[i]`).
+    ///
+    /// One buffered write + one reply-drain per batch: the per-command
+    /// RTT of [`request`](Self::request) is paid once per *batch*.  The
+    /// throttle, when configured, is charged once on the batch's total
+    /// encoded size.  On connection failure the **whole batch** is
+    /// retried on a fresh connection, so delivery is at-least-once —
+    /// the same contract as `request` (XADD duplicates are shed by the
+    /// analysis window's stale-step filter).
+    pub fn pipeline(&mut self, reqs: &[Request]) -> Result<Vec<Value>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut attempts = 0;
+        loop {
+            attempts += 1;
+            match self.try_pipeline(reqs) {
+                Ok(v) => return Ok(v),
+                Err(e) if attempts <= self.cfg.max_retries as usize => {
+                    log::debug!("transport: pipeline error ({e:#}); reconnecting");
+                    self.drop_connection();
+                    self.ensure_connected()?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn try_pipeline(&mut self, reqs: &[Request]) -> Result<Vec<Value>> {
+        self.ensure_connected()?;
+        self.buf.clear();
+        let total: usize = reqs.iter().map(Request::wire_len).sum();
+        self.buf.reserve(total);
+        for r in reqs {
+            r.encode_into(&mut self.buf);
+        }
+        if let Some(t) = self.throttle.as_mut() {
+            t.consume(self.buf.len()); // charged per batch, not per command
+        }
+        let stream = self.stream.as_mut().unwrap();
+        stream.write_all(&self.buf).context("write")?;
+        let mut replies = Vec::with_capacity(reqs.len());
+        while replies.len() < reqs.len() {
+            if let Some(v) = self.decoder.next()? {
+                replies.push(v);
+                continue;
+            }
+            let n = stream.read(&mut self.read_buf[..]).context("read")?;
+            if n == 0 {
+                bail!(
+                    "connection closed by peer after {}/{} pipelined replies",
+                    replies.len(),
+                    reqs.len()
+                );
+            }
+            self.decoder.feed(&self.read_buf[..n]);
+        }
+        Ok(replies)
+    }
+
     /// PING → expect PONG (health check).
     pub fn ping(&mut self) -> Result<()> {
         match self.request(&[b"PING"])? {
@@ -277,6 +414,91 @@ mod tests {
         let mut conn = RespConn::connect(addr, cfg).unwrap();
         conn.ping().unwrap();
         conn.ping().unwrap(); // forces reconnect
+    }
+
+    #[test]
+    fn request_wire_len_is_exact() {
+        for req in [
+            Request::new("PING"),
+            Request::new("XADD").arg("k").arg("*").arg("r").arg(vec![0u8; 1000]),
+            Request::new("ECHO").arg(Vec::<u8>::new()),
+        ] {
+            let mut buf = Vec::new();
+            req.encode_into(&mut buf);
+            assert_eq!(buf.len(), req.wire_len(), "{req:?}");
+        }
+    }
+
+    #[test]
+    fn pipeline_empty_batch_is_noop() {
+        let addr = spawn_pong_server(1);
+        let mut conn = RespConn::connect(addr, ConnConfig::default()).unwrap();
+        assert!(conn.pipeline(&[]).unwrap().is_empty());
+        conn.ping().unwrap(); // connection still usable
+    }
+
+    #[test]
+    fn pipeline_replies_in_order() {
+        let srv = crate::endpoint::EndpointServer::start(
+            "127.0.0.1:0",
+            crate::endpoint::StoreConfig::default(),
+        )
+        .unwrap();
+        let mut conn = RespConn::connect(srv.addr(), ConnConfig::default()).unwrap();
+        let reqs: Vec<Request> = (0..10)
+            .map(|i| Request::new("ECHO").arg(format!("msg-{i}")))
+            .collect();
+        let replies = conn.pipeline(&reqs).unwrap();
+        assert_eq!(replies.len(), 10);
+        for (i, r) in replies.iter().enumerate() {
+            assert_eq!(r, &Value::Bulk(format!("msg-{i}").into_bytes()));
+        }
+    }
+
+    #[test]
+    fn pipeline_xadd_batch_lands_every_record() {
+        let srv = crate::endpoint::EndpointServer::start(
+            "127.0.0.1:0",
+            crate::endpoint::StoreConfig::default(),
+        )
+        .unwrap();
+        let mut conn = RespConn::connect(srv.addr(), ConnConfig::default()).unwrap();
+        let reqs: Vec<Request> = (0..64)
+            .map(|i| {
+                Request::new("XADD")
+                    .arg("s")
+                    .arg("*")
+                    .arg("r")
+                    .arg(format!("payload-{i}"))
+            })
+            .collect();
+        let replies = conn.pipeline(&reqs).unwrap();
+        assert_eq!(replies.len(), 64);
+        assert!(replies.iter().all(|r| !r.is_error()));
+        // Redis XADD returns the assigned id; ids must be strictly increasing.
+        let ids: Vec<String> = replies.iter().map(|r| r.as_str_lossy()).collect();
+        for w in ids.windows(2) {
+            let a = crate::endpoint::EntryId::parse(&w[0]).unwrap();
+            let b = crate::endpoint::EntryId::parse(&w[1]).unwrap();
+            assert!(b > a, "{} !> {}", w[1], w[0]);
+        }
+        assert_eq!(srv.store().xlen("s"), 64);
+    }
+
+    #[test]
+    fn pipeline_interleaves_with_request() {
+        let srv = crate::endpoint::EndpointServer::start(
+            "127.0.0.1:0",
+            crate::endpoint::StoreConfig::default(),
+        )
+        .unwrap();
+        let mut conn = RespConn::connect(srv.addr(), ConnConfig::default()).unwrap();
+        conn.ping().unwrap();
+        let replies = conn
+            .pipeline(&[Request::new("PING"), Request::new("ECHO").arg("x")])
+            .unwrap();
+        assert_eq!(replies[0], Value::Simple("PONG".into()));
+        conn.ping().unwrap();
     }
 
     #[test]

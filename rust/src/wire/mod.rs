@@ -239,6 +239,139 @@ mod tests {
         });
     }
 
+    /// Random RESP value trees (bounded depth/width), for the nested
+    /// roundtrip property below.
+    fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+        let choice = if depth == 0 {
+            rng.next_below(6) // scalars only at the leaves
+        } else {
+            rng.next_below(8)
+        };
+        match choice {
+            0 => Value::Simple(format!("s{}", rng.next_below(1000))),
+            1 => Value::Error(format!("ERR e{}", rng.next_below(1000))),
+            2 => Value::Int(rng.next_u64() as i64),
+            3 => {
+                let len = rng.next_below(64) as usize;
+                Value::Bulk((0..len).map(|_| rng.next_u64() as u8).collect())
+            }
+            4 => Value::NullBulk,
+            5 => Value::NullArray,
+            _ => {
+                let len = rng.next_below(5) as usize;
+                Value::Array((0..len).map(|_| gen_value(rng, depth - 1)).collect())
+            }
+        }
+    }
+
+    /// Property: arbitrary nested value trees roundtrip exactly, both in
+    /// one feed and byte-at-a-time.
+    #[test]
+    fn prop_roundtrip_nested_trees() {
+        prop::forall(0x17EE, 150, &U64Range(0, u64::MAX / 2), |seed| {
+            let mut rng = Rng::new(*seed);
+            let v = gen_value(&mut rng, 3);
+            let mut buf = Vec::new();
+            encode(&v, &mut buf);
+            // whole-buffer feed
+            let mut dec = Decoder::new();
+            dec.feed(&buf);
+            match dec.next() {
+                Ok(Some(got)) if got == v => {}
+                other => return Err(format!("bulk feed: got {other:?} want {v:?}")),
+            }
+            // byte-at-a-time feed
+            let mut dec = Decoder::new();
+            for b in &buf {
+                dec.feed(std::slice::from_ref(b));
+            }
+            match dec.next() {
+                Ok(Some(got)) if got == v => Ok(()),
+                other => Err(format!("trickle feed: got {other:?} want {v:?}")),
+            }
+        });
+    }
+
+    /// Property: any strict prefix of a valid encoding is "incomplete"
+    /// (`Ok(None)`), never a protocol error — truncation must be
+    /// recoverable when the rest of the bytes arrive.
+    #[test]
+    fn prop_truncation_is_incomplete_not_error() {
+        prop::forall(0x7A11, 60, &U64Range(0, u64::MAX / 2), |seed| {
+            let mut rng = Rng::new(*seed);
+            let v = gen_value(&mut rng, 2);
+            let mut buf = Vec::new();
+            encode(&v, &mut buf);
+            for cut in 0..buf.len() {
+                let mut dec = Decoder::new();
+                dec.feed(&buf[..cut]);
+                match dec.next() {
+                    Ok(None) => {}
+                    Ok(Some(got)) => {
+                        return Err(format!(
+                            "{cut}-byte prefix of {v:?} decoded to {got:?}"
+                        ))
+                    }
+                    Err(e) => return Err(format!("{cut}-byte prefix errored: {e}")),
+                }
+                // feeding the remainder must complete the value
+                dec.feed(&buf[cut..]);
+                match dec.next() {
+                    Ok(Some(got)) if got == v => {}
+                    other => return Err(format!("resume at {cut}: {other:?}")),
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bulk_edge_sizes_roundtrip() {
+        for len in [0usize, 1, 2, 511, 512, 513] {
+            let v = Value::Bulk(vec![0xAB; len]);
+            assert_eq!(roundtrip(&v), v, "len {len}");
+        }
+    }
+
+    #[test]
+    fn bulk_length_clamp_at_512mib() {
+        // One past Redis's proto-max-bulk-len: rejected at the header,
+        // before any payload allocation.
+        let mut d = Decoder::new();
+        d.feed(format!("${}\r\n", 512 * 1024 * 1024 + 1).as_bytes());
+        assert!(d.next().is_err());
+        // Exactly the cap is a legal header: decoder just wants bytes.
+        let mut d = Decoder::new();
+        d.feed(format!("${}\r\n", 512 * 1024 * 1024).as_bytes());
+        assert!(d.next().unwrap().is_none());
+        // Negative lengths other than -1 are protocol errors.
+        let mut d = Decoder::new();
+        d.feed(b"$-2\r\n");
+        assert!(d.next().is_err());
+    }
+
+    #[test]
+    fn array_length_clamp() {
+        let mut d = Decoder::new();
+        d.feed(format!("*{}\r\n", 16 * 1024 * 1024 + 1).as_bytes());
+        assert!(d.next().is_err());
+        let mut d = Decoder::new();
+        d.feed(b"*-2\r\n");
+        assert!(d.next().is_err());
+    }
+
+    #[test]
+    fn crlf_violations_rejected() {
+        // bulk body not followed by CRLF
+        let mut d = Decoder::new();
+        d.feed(b"$3\r\nabcde\r\n");
+        assert!(d.next().is_err());
+        // integer line with junk
+        let mut d = Decoder::new();
+        d.feed(b":12a\r\n");
+        assert!(d.next().is_err());
+    }
+
     /// Property: random byte soup never panics the decoder (it may error).
     #[test]
     fn prop_decoder_never_panics_on_garbage() {

@@ -52,7 +52,13 @@ impl CloudSide {
         let n_endpoints = cfg.endpoint_count();
         let mut endpoints = Vec::with_capacity(n_endpoints);
         for _ in 0..n_endpoints {
-            endpoints.push(EndpointServer::start("127.0.0.1:0", StoreConfig::default())?);
+            endpoints.push(EndpointServer::start(
+                "127.0.0.1:0",
+                StoreConfig {
+                    shards: cfg.store_shards,
+                    ..StoreConfig::default()
+                },
+            )?);
         }
 
         // Readers: one per endpoint, subscribed to its groups' streams
@@ -226,6 +232,9 @@ pub fn run_cfd_workflow(
             } else {
                 crate::broker::QueuePolicy::Block
             },
+            batch_max_records: cfg.batch_max_records,
+            batch_max_bytes: cfg.batch_max_bytes,
+            linger_ms: cfg.linger_ms,
             ..BrokerConfig::new(cloud.endpoint_addrs())
         },
         cfg.ranks,
@@ -307,6 +316,9 @@ pub fn run_synth_workflow(
         BrokerConfig {
             group_size: cfg.group_size,
             queue_cap: cfg.queue_cap,
+            batch_max_records: cfg.batch_max_records,
+            batch_max_bytes: cfg.batch_max_bytes,
+            linger_ms: cfg.linger_ms,
             ..BrokerConfig::new(cloud.endpoint_addrs())
         },
         ranks,

@@ -229,6 +229,7 @@ fn oom_backpressure_recovers_after_drain() {
         StoreConfig {
             stream_maxlen: 0,
             max_memory: 256 * 1024, // tight budget
+            ..StoreConfig::default()
         },
     )
     .unwrap();

@@ -1,0 +1,222 @@
+//! End-to-end exercise of the batched write path (ISSUE 1 tentpole):
+//! a 4-rank synthetic simulation ships through pipelined, coalesced
+//! XADD batches into two sharded endpoints; every record must land
+//! exactly once, and the streaming + windowed-DMD result must match the
+//! offline `linalg::dmd` reference on the same window to 1e-6.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use elasticbroker::analysis::{AnalysisResult, DmdConfig, DmdEngine};
+use elasticbroker::broker::{Broker, BrokerConfig, QueuePolicy};
+use elasticbroker::endpoint::{EndpointServer, EntryId, StoreConfig};
+use elasticbroker::linalg::{dmd, Mat};
+use elasticbroker::metrics::WorkflowMetrics;
+use elasticbroker::record::StreamRecord;
+use elasticbroker::streamproc::{StreamReader, StreamingConfig, StreamingContext};
+use elasticbroker::transport::ConnConfig;
+
+const RANKS: u32 = 4;
+const DIM: usize = 32;
+const STEPS: u64 = 20;
+const WINDOW: usize = 6; // m; the engine windows m+1 = 7 snapshots
+const DMD_RANK: usize = 4;
+
+/// Deterministic decaying-oscillation snapshot for (rank, step).
+fn snapshot(rank: u32, step: u64) -> Vec<f32> {
+    let decay = 0.95f64.powi(step as i32);
+    (0..DIM)
+        .map(|i| {
+            let phase = 0.13 * i as f64 + 0.31 * rank as f64;
+            (decay * (0.4 * step as f64 + phase).cos()) as f32
+        })
+        .collect()
+}
+
+#[test]
+fn batched_pipeline_exactly_once_and_dmd_matches_offline() {
+    let e0 = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+    let e1 = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+    let metrics = WorkflowMetrics::new();
+    let broker = Arc::new(
+        Broker::new(
+            BrokerConfig {
+                group_size: 2, // ranks {0,1} → e0, {2,3} → e1
+                queue_cap: 32,
+                policy: QueuePolicy::Block,
+                batch_max_records: 8,
+                linger_ms: 10, // force real coalescing on the fast path
+                ..BrokerConfig::new(vec![e0.addr(), e1.addr()])
+            },
+            RANKS as usize,
+            metrics.clone(),
+        )
+        .unwrap(),
+    );
+
+    // --- HPC side: 4 synthetic rank threads through the batched broker.
+    let writers: Vec<_> = (0..RANKS)
+        .map(|rank| {
+            let broker = broker.clone();
+            std::thread::spawn(move || {
+                let ctx = broker.init("synth", rank).unwrap();
+                for step in 0..STEPS {
+                    ctx.write(step, &[DIM as u32], &snapshot(rank, step)).unwrap();
+                }
+                ctx.finalize().unwrap();
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    assert_eq!(metrics.dropped.get(), 0, "Block policy must be lossless");
+    assert_eq!(metrics.shipped.records(), (RANKS as u64) * STEPS);
+    // the writers actually coalesced (the whole point of the tentpole)
+    assert!(
+        metrics.batch_records.count() < (RANKS as u64) * STEPS,
+        "no batching: {} flushes for {} records",
+        metrics.batch_records.count(),
+        (RANKS as u64) * STEPS
+    );
+
+    // --- Exactly once, across shards: each endpoint holds exactly its
+    // group's streams, each stream holds steps 0..STEPS in order.
+    for (endpoint, ranks) in [(&e0, [0u32, 1]), (&e1, [2u32, 3])] {
+        let store = endpoint.store();
+        let mut keys = store.keys("*");
+        keys.sort();
+        let mut want: Vec<String> = ranks.iter().map(|r| format!("synth/{r}")).collect();
+        want.sort();
+        assert_eq!(keys, want);
+        assert!(store.shard_count() > 1);
+        for r in ranks {
+            let key = format!("synth/{r}");
+            assert_eq!(store.xlen(&key), STEPS as usize, "{key}");
+            let entries = store.read_after(&key, EntryId::ZERO, 0);
+            let steps: Vec<u64> = entries
+                .iter()
+                .map(|e| StreamRecord::decode(&e.fields[0].1).unwrap().step)
+                .collect();
+            assert_eq!(steps, (0..STEPS).collect::<Vec<_>>(), "{key}");
+            // ids strictly increasing (the atomic per-shard allocator)
+            for w in entries.windows(2) {
+                assert!(w[1].id > w[0].id, "{key}: id order broken");
+            }
+        }
+        assert_eq!(store.total_entries_added(), 2 * STEPS);
+    }
+
+    // --- Cloud side: streaming micro-batches + windowed DMD.
+    let engine = Arc::new(
+        DmdEngine::new(
+            DmdConfig {
+                window: WINDOW,
+                rank: DMD_RANK,
+                hop: 1,
+                backend: elasticbroker::analysis::DmdBackend::Rust,
+                ..Default::default()
+            },
+            None,
+            metrics.clone(),
+        )
+        .unwrap(),
+    );
+    let readers = vec![
+        StreamReader::connect(
+            e0.addr(),
+            vec!["synth/0".into(), "synth/1".into()],
+            0,
+            ConnConfig::default(),
+        )
+        .unwrap(),
+        StreamReader::connect(
+            e1.addr(),
+            vec!["synth/2".into(), "synth/3".into()],
+            0,
+            ConnConfig::default(),
+        )
+        .unwrap(),
+    ];
+    let (tx, rx) = std::sync::mpsc::channel();
+    let eng = engine.clone();
+    let ctx = StreamingContext::start(
+        StreamingConfig {
+            trigger_interval: Duration::from_millis(25),
+            executors: 4,
+            batch_limit: 0,
+        },
+        readers,
+        move |b| eng.process(b),
+        tx,
+    );
+
+    // 20 snapshots, window 7 → 14 analyses per rank.
+    let per_rank = STEPS as usize - WINDOW;
+    let expect = per_rank * RANKS as usize;
+    let mut results: Vec<AnalysisResult> = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while results.len() < expect && Instant::now() < deadline {
+        if let Ok((_seq, res)) = rx.recv_timeout(Duration::from_millis(100)) {
+            results.push(res);
+        }
+    }
+    ctx.stop().unwrap();
+    results.extend(rx.try_iter().map(|(_, r)| r));
+    assert_eq!(results.len(), expect, "analysis count");
+
+    // --- Offline reference: for every rank, rebuild the final window
+    // from what actually landed in the store and run the offline DMD;
+    // the streamed result for the same window must agree to 1e-6.
+    for rank in 0..RANKS {
+        let key = format!("synth/{rank}");
+        let streamed = results
+            .iter()
+            .filter(|r| r.key == key)
+            .max_by_key(|r| r.step)
+            .unwrap_or_else(|| panic!("no results for {key}"));
+        assert_eq!(streamed.step, STEPS - 1);
+        assert_eq!(streamed.rank, rank);
+        assert_eq!(streamed.backend, "rust");
+
+        let endpoint = if rank < 2 { &e0 } else { &e1 };
+        let entries = endpoint.store().read_after(&key, EntryId::ZERO, 0);
+        let m1 = WINDOW + 1;
+        let window: Vec<Vec<f32>> = entries[entries.len() - m1..]
+            .iter()
+            .map(|e| {
+                StreamRecord::decode(&e.fields[0].1)
+                    .unwrap()
+                    .payload_f32()
+                    .unwrap()
+            })
+            .collect();
+        // column j = snapshot j, exactly like the engine assembles it
+        let mut x = vec![0.0f64; DIM * m1];
+        for (j, snap) in window.iter().enumerate() {
+            for i in 0..DIM {
+                x[i * m1 + j] = snap[i] as f64;
+            }
+        }
+        let xm = Mat::from_slice(DIM, m1, &x).unwrap();
+        let (eigs, sigma, stability) = dmd::analyze_window(&xm, DMD_RANK).unwrap();
+
+        assert!(
+            (streamed.stability - stability).abs() <= 1e-6,
+            "{key}: stability {} vs offline {}",
+            streamed.stability,
+            stability
+        );
+        assert_eq!(streamed.eigs.len(), eigs.len());
+        for (a, b) in streamed.eigs.iter().zip(&eigs) {
+            assert!(
+                (a.re - b.re).abs() <= 1e-6 && (a.im - b.im).abs() <= 1e-6,
+                "{key}: eig {a:?} vs offline {b:?}"
+            );
+        }
+        assert_eq!(streamed.sigma.len(), sigma.len());
+        for (a, b) in streamed.sigma.iter().zip(&sigma) {
+            assert!((a - b).abs() <= 1e-6, "{key}: sigma {a} vs offline {b}");
+        }
+    }
+}
