@@ -2,15 +2,28 @@
 //!
 //! * Francis-QR eigenvalues for the Ã sizes DMD produces (r ≤ 16),
 //! * the full Rust-fallback DMD reduction at realistic snapshot dims,
-//! * the PJRT dmd artifact at the same dims (when built) — the
-//!   artifact-vs-fallback comparison that motivates running the
-//!   reduction in compiled HLO.
+//! * **incremental vs full windowed reduction** — the cached-Gram slide
+//!   update (O(d·m) per fire) against the pre-incremental hot path
+//!   (flatten + f32→f64 widen + `XᵀX` from scratch, O(d·m²) per fire),
+//! * the sharded analysis engine under concurrent executor threads,
+//! * the PJRT dmd artifact at the same dims (when built).
 //!
 //! `cargo bench --bench micro_linalg`
+//!
+//! Emits `BENCH_linalg.json` (machine-readable µs/fire for full vs
+//! incremental and the sharded-engine numbers) so CI can track the perf
+//! trajectory.  Set `BENCH_SMOKE=1` for tiny iteration counts (CI smoke
+//! step; numbers are then indicative only).
 
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::Arc;
 use std::time::Instant;
 
+use elasticbroker::analysis::{DmdBackend, DmdConfig, DmdEngine};
 use elasticbroker::linalg::{dmd, eig, Mat};
+use elasticbroker::metrics::WorkflowMetrics;
+use elasticbroker::record::StreamRecord;
 use elasticbroker::runtime::ArtifactSet;
 use elasticbroker::util::rng::Rng;
 
@@ -19,11 +32,127 @@ fn time<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     for _ in 0..iters {
         f();
     }
-    t0.elapsed().as_secs_f64() / iters as f64
+    t0.elapsed().as_secs_f64() / iters.max(1) as f64
+}
+
+/// One steady-state window-slide case: per-fire (Ã, σ) cost, full
+/// recompute vs incremental cached Gram, plus the Gram-kernel-only
+/// split.  Returns (full_us, incr_us, gram_full_us, gram_slide_us).
+fn bench_slide_case(
+    rng: &mut Rng,
+    d: usize,
+    m: usize,
+    rank: usize,
+    iters: usize,
+) -> (f64, f64, f64, f64) {
+    let m1 = m + 1;
+    // Pool of snapshots cycled through the window (steady state).
+    let pool: Vec<Vec<f32>> = (0..64)
+        .map(|_| {
+            let mut s = vec![0.0f32; d];
+            rng.fill_uniform_f32(&mut s, -1.0, 1.0);
+            s
+        })
+        .collect();
+    let mut window: VecDeque<&[f32]> = pool[..m1].iter().map(|s| s.as_slice()).collect();
+    let mut next = m1;
+
+    // --- full recompute, the pre-incremental hot path: flatten the
+    // window to f32 column-interleaved, widen to f64, materialize Xᵀ,
+    // C = XᵀX from scratch, reduce.
+    let full_us = 1e6
+        * time(iters, || {
+            window.pop_front();
+            window.push_back(pool[next % pool.len()].as_slice());
+            next += 1;
+            let mut x = vec![0.0f32; d * m1];
+            for (j, snap) in window.iter().enumerate() {
+                for i in 0..d {
+                    x[i * m1 + j] = snap[i];
+                }
+            }
+            let xf: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+            let xm = Mat::from_slice(d, m1, &xf).unwrap();
+            let c = xm.t().matmul(&xm);
+            let _ = dmd::dmd_reduce_from_gram(&c, rank).unwrap();
+        });
+
+    // --- incremental: cached Gram slide (shift + one row/col of dots)
+    // + scratch-reusing reduction.
+    let mut gram = {
+        let snaps: Vec<&[f32]> = window.iter().copied().collect();
+        elasticbroker::linalg::gram_from_snaps(&snaps)
+    };
+    let mut scratch = dmd::GramScratch::default();
+    let incr_us = 1e6
+        * time(iters, || {
+            window.pop_front();
+            window.push_back(pool[next % pool.len()].as_slice());
+            next += 1;
+            // the engine's shipped steady-state kernel (pending = 1)
+            elasticbroker::linalg::gram_slide_update(&mut gram, 1, |i| window[i]);
+            let _ = dmd::dmd_reduce_from_gram_with(&gram, rank, &mut scratch).unwrap();
+        });
+
+    // --- Gram kernel only (the part whose complexity changed).
+    let gram_full_us = 1e6
+        * time(iters, || {
+            let snaps: Vec<&[f32]> = window.iter().copied().collect();
+            let _ = elasticbroker::linalg::gram_from_snaps(&snaps);
+        });
+    let gram_slide_us = 1e6
+        * time(iters, || {
+            window.pop_front();
+            window.push_back(pool[next % pool.len()].as_slice());
+            next += 1;
+            elasticbroker::linalg::gram_slide_update(&mut gram, 1, |i| window[i]);
+        });
+    (full_us, incr_us, gram_full_us, gram_slide_us)
+}
+
+/// Concurrent executor threads pushing distinct streams through one
+/// shared engine; returns µs per push.
+fn bench_sharded_engine(shards: usize, streams: usize, records: u64, d: usize) -> f64 {
+    let eng = Arc::new(
+        DmdEngine::new(
+            DmdConfig {
+                window: 8,
+                rank: 6,
+                hop: 1,
+                backend: DmdBackend::Rust,
+                shards,
+                ..Default::default()
+            },
+            None,
+            WorkflowMetrics::new(),
+        )
+        .unwrap(),
+    );
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..streams as u32)
+        .map(|r| {
+            let eng = eng.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(1000 + r as u64);
+                let mut snap = vec![0.0f32; d];
+                for step in 0..records {
+                    rng.fill_uniform_f32(&mut snap, -1.0, 1.0);
+                    let rec =
+                        StreamRecord::from_f32("b", r, step, 0, &[d as u32], &snap).unwrap();
+                    let _ = eng.push(&format!("b/{r}"), &rec).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / (streams as f64 * records as f64)
 }
 
 fn main() -> anyhow::Result<()> {
     elasticbroker::util::logger::init();
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
     let mut rng = Rng::new(7);
 
     println!("# Francis QR eigenvalues (the per-window Ã solve)");
@@ -32,7 +161,7 @@ fn main() -> anyhow::Result<()> {
         for v in a.data.iter_mut() {
             *v = rng.next_normal();
         }
-        let per = time(2000, || {
+        let per = time(if smoke { 20 } else { 2000 }, || {
             let _ = eig::eigenvalues(&a).unwrap();
         });
         println!("  n={n:>2}: {:>8.2} µs/solve", per * 1e6);
@@ -47,7 +176,13 @@ fn main() -> anyhow::Result<()> {
         // rust fallback
         let xd: Vec<f64> = xf.iter().map(|&v| v as f64).collect();
         let xm = Mat::from_slice(d, m1, &xd)?;
-        let iters = if d > 10_000 { 20 } else { 200 };
+        let iters = if smoke {
+            3
+        } else if d > 10_000 {
+            20
+        } else {
+            200
+        };
         let rust_per = time(iters, || {
             let _ = dmd::dmd_reduce(&xm, 6).unwrap();
         });
@@ -73,6 +208,44 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    println!("\n# Incremental vs full per-fire reduction (window slide steady state)");
+    let mut json_cases = String::new();
+    for &(d, m, rank) in &[(1024usize, 8usize, 6usize), (4096, 16, 6)] {
+        let iters = if smoke { 5 } else { 300 };
+        let (full_us, incr_us, gram_full_us, gram_slide_us) =
+            bench_slide_case(&mut rng, d, m, rank, iters);
+        let speedup = full_us / incr_us.max(1e-9);
+        let gram_speedup = gram_full_us / gram_slide_us.max(1e-9);
+        println!(
+            "  d={d:>5} m={m:>2}: full {full_us:>9.1} µs   incremental {incr_us:>9.1} µs \
+             ({speedup:.1}x)   [gram only: {gram_full_us:.1} vs {gram_slide_us:.1} µs, \
+             {gram_speedup:.1}x]"
+        );
+        if !json_cases.is_empty() {
+            json_cases.push(',');
+        }
+        let _ = write!(
+            json_cases,
+            r#"{{"name":"dmd_per_fire_d{d}_m{m}","d":{d},"m":{m},"rank":{rank},"full_us":{full_us:.3},"incremental_us":{incr_us:.3},"speedup":{speedup:.3},"gram_full_us":{gram_full_us:.3},"gram_slide_us":{gram_slide_us:.3},"gram_speedup":{gram_speedup:.3}}}"#
+        );
+    }
+
+    println!("\n# Sharded engine, 8 threads x distinct streams (µs/push)");
+    let records = if smoke { 16u64 } else { 400 };
+    let d = 256;
+    let one = bench_sharded_engine(1, 8, records, d);
+    let eight = bench_sharded_engine(8, 8, records, d);
+    println!("  shards=1: {one:>8.2} µs/push   shards=8: {eight:>8.2} µs/push");
+
+    let json = format!(
+        r#"{{"bench":"micro_linalg","smoke":{smoke},"cases":[{json_cases}],"sharded_engine":{{"streams":8,"records_per_stream":{records},"d":{d},"shards1_us_per_push":{one:.3},"shards8_us_per_push":{eight:.3}}}}}"#
+    );
+    // Bench binaries run with cwd = the package root (rust/); anchor the
+    // output at the workspace root where CI expects it.
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_linalg.json");
+    std::fs::write(out_path, &json)?;
+    println!("\nwrote {out_path}");
+
     println!("\n# LBM step, rust fallback vs PJRT artifact (per rank-step)");
     for (h, w) in [(16usize, 128usize), (256, 128)] {
         let hp = h + 2;
@@ -80,7 +253,13 @@ fn main() -> anyhow::Result<()> {
         let params = elasticbroker::sim::lbm::LbmParams::default();
         let mut f = elasticbroker::sim::lbm::init(&mask, hp, w, params);
         let mut scratch = Vec::new();
-        let iters = if h > 100 { 50 } else { 400 };
+        let iters = if smoke {
+            3
+        } else if h > 100 {
+            50
+        } else {
+            400
+        };
         let rust_per = time(iters, || {
             let _ = elasticbroker::sim::lbm::step(&mut f, &mask, hp, w, params, true, &mut scratch);
         });

@@ -9,13 +9,37 @@
 //! eigenvalues (Francis QR, [`crate::linalg::eig`]) and the paper's
 //! Fig 5 stability metric.
 //!
-//! The engine is `Sync` and is shared by all executor threads: state is
-//! per-stream, so partitions (≡ streams) never contend on the same
-//! window.
+//! # Analysis perf model
+//!
+//! Everything downstream of the Gram matrix `C = XᵀX` only touches
+//! `O(m²)` data, and a one-snapshot window slide changes exactly one
+//! row and column of C.  The engine therefore keeps a cached
+//! `(m+1)×(m+1)` Gram per stream, synced at fire time: the slides since
+//! the last fire are applied in one shot — shift the surviving block,
+//! fill the new rows/cols with [`crate::linalg::dot_f32_f64acc`] dot
+//! products against the stored f32 snapshots — so the steady-state
+//! per-fire snapshot-dimension cost drops from `O(d·m²)` (flatten +
+//! widen + `XᵀX` from scratch) to `O(d·m)`, and non-firing pushes
+//! (PerBatch cadence, hop) pay nothing.  The cached entries are
+//! *exact*: each is the same f64-accumulated dot product a full
+//! recompute would produce, so incremental and full reductions agree to
+//! the last bit.  Belt and braces anyway: the cache is rebuilt from the
+//! stored snapshots when more than half the window changed between
+//! fires, every [`DmdConfig::gram_refresh`] slides, and when a fresh
+//! entry is non-finite (the fire is skipped while non-finite data is in
+//! the window).  Benchmark with `cargo bench --bench micro_linalg`
+//! (see `BENCH_linalg.json`).
+//!
+//! The engine is `Sync` and is shared by all executor threads: window
+//! state is FNV-sharded by stream key across [`DmdConfig::shards`]
+//! independent maps (the same pattern as `endpoint::store`), so
+//! executor threads analysing different streams never contend on one
+//! global lock, and the reduction itself runs with no lock held at all.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::Write;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -89,6 +113,14 @@ pub struct DmdConfig {
     pub backend: DmdBackend,
     /// Analysis cadence.
     pub fire: FirePolicy,
+    /// Rebuild the cached Gram from the stored snapshots every
+    /// `gram_refresh` incremental slides (drift bound; 0 = never
+    /// refresh periodically — the non-finite fallback still applies).
+    pub gram_refresh: usize,
+    /// FNV-hashed shards the per-stream window map is split across;
+    /// executor threads on different streams never contend (values < 1
+    /// are clamped to 1).
+    pub shards: usize,
 }
 
 impl Default for DmdConfig {
@@ -99,6 +131,8 @@ impl Default for DmdConfig {
             hop: 1,
             backend: DmdBackend::Pjrt,
             fire: FirePolicy::PerSnapshot,
+            gram_refresh: 64,
+            shards: 8,
         }
     }
 }
@@ -109,13 +143,41 @@ struct WindowState {
     /// New snapshots since the last analysis.
     since_last: usize,
     last_step: Option<u64>,
+    /// Cached `(m+1)×(m+1)` Gram matrix XᵀX of the window as of the
+    /// last fire (None until the window first fills and fires).
+    gram: Option<Mat>,
+    /// Window slides since the Gram was last synced — applied in one
+    /// shot at fire time, so non-firing pushes (PerBatch, hop) pay no
+    /// Gram work at all.
+    pending_slides: usize,
+    /// Incremental slides since the last full Gram rebuild.
+    slides_since_full: usize,
+    /// Whether a PJRT artifact serves this stream's shape (decided once
+    /// when the window first fills — the dimension is fixed per stream,
+    /// the artifact registry per engine).  When true the Gram cache is
+    /// never consumed, so it is not maintained either.
+    pjrt_serves: Option<bool>,
+}
+
+impl WindowState {
+    fn new(m1: usize) -> Self {
+        WindowState {
+            snaps: VecDeque::with_capacity(m1),
+            since_last: 0,
+            last_step: None,
+            gram: None,
+            pending_slides: 0,
+            slides_since_full: 0,
+            pjrt_serves: None,
+        }
+    }
 }
 
 /// The per-stream windowed DMD engine.
 pub struct DmdEngine {
     cfg: DmdConfig,
     artifacts: Option<Arc<ArtifactSet>>,
-    windows: Mutex<HashMap<String, WindowState>>,
+    shards: Vec<Mutex<HashMap<String, WindowState>>>,
     metrics: WorkflowMetrics,
 }
 
@@ -133,12 +195,18 @@ impl DmdEngine {
             cfg.window
         );
         anyhow::ensure!(cfg.hop >= 1, "hop must be >= 1");
+        let n_shards = cfg.shards.max(1);
         Ok(DmdEngine {
             cfg,
             artifacts,
-            windows: Mutex::new(HashMap::new()),
+            shards: (0..n_shards).map(|_| Mutex::new(HashMap::new())).collect(),
             metrics,
         })
+    }
+
+    /// Which shard a stream key's window lives on.
+    fn shard_of(&self, key: &str) -> usize {
+        (util::fnv1a(key.as_bytes()) % self.shards.len() as u64) as usize
     }
 
     /// Process one micro-batch (one partition of a trigger): push every
@@ -175,13 +243,15 @@ impl DmdEngine {
         may_fire: bool,
     ) -> Result<Option<AnalysisResult>> {
         let data = rec.payload_f32()?;
+        let d = data.len();
         let m1 = self.cfg.window + 1;
-        let mut windows = self.windows.lock().unwrap();
-        let st = windows.entry(key.to_string()).or_insert_with(|| WindowState {
-            snaps: VecDeque::with_capacity(m1),
-            since_last: 0,
-            last_step: None,
-        });
+        let mut windows = self.shards[self.shard_of(key)].lock().unwrap();
+        // Borrowed-key fast path: no String allocation once the stream
+        // is known (i.e. on every steady-state record).
+        if !windows.contains_key(key) {
+            windows.insert(key.to_string(), WindowState::new(m1));
+        }
+        let st = windows.get_mut(key).expect("window state just ensured");
         // Drop duplicate/reordered steps (at-least-once transport).
         if let Some(last) = st.last_step {
             if rec.step <= last {
@@ -199,11 +269,16 @@ impl DmdEngine {
             );
         }
         st.snaps.push_back((rec.step, rec.gen_micros, data));
+        let mut slid = false;
         while st.snaps.len() > m1 {
             st.snaps.pop_front();
+            slid = true;
         }
         if st.snaps.len() < m1 {
             return Ok(None);
+        }
+        if slid {
+            st.pending_slides += 1;
         }
         st.since_last += 1;
         if !may_fire {
@@ -213,24 +288,68 @@ impl DmdEngine {
             return Ok(None);
         }
         st.since_last = 0;
-
-        // Assemble X (d × m+1), column j = snapshot j.
-        let d = st.snaps[0].2.len();
-        let mut x = vec![0.0f32; d * m1];
-        for (j, (_, _, snap)) in st.snaps.iter().enumerate() {
-            for i in 0..d {
-                x[i * m1 + j] = snap[i];
-            }
+        // Per-fire cost clock: covers Gram sync / window assembly and
+        // the reduction — everything this fire pays.
+        let t0 = Instant::now();
+        // Decided once per stream: when a PJRT artifact serves this
+        // shape, the fires consume the flattened f32 window and the
+        // Gram cache is never read — so don't pay to maintain it.
+        let pjrt_serves = *st.pjrt_serves.get_or_insert_with(|| {
+            self.cfg.backend == DmdBackend::Pjrt
+                && self.artifacts.as_ref().is_some_and(|arts| {
+                    let akey = format!("d{}_m{}_r{}", d, m1, self.cfg.rank);
+                    arts.find("dmd", &akey).is_some()
+                })
+        });
+        // PJRT path: flatten the window to the artifact's f32 layout
+        // (finiteness checked during the copy).  Rust path: sync the
+        // cached Gram — O(m²) downstream, no flatten, no f32→f64
+        // widening of the window.
+        let (pjrt_x, window_finite) = if pjrt_serves {
+            let (x, finite) = Self::assemble_window(st, d, m1);
+            (Some(x), finite)
+        } else {
+            (None, self.sync_gram(st, m1))
+        };
+        if !window_finite {
+            // Non-finite data in the window: the reduction could only
+            // produce garbage, so skip this fire; analyses resume once
+            // the bad snapshot slides out.
+            log::warn!("analysis: {key}: non-finite window at step {}; skipping fire", rec.step);
+            return Ok(None);
+        }
+        if pjrt_x.is_none() {
+            // Copy the synced Gram into the executor thread's workspace
+            // so the reduction runs without the shard lock.
+            let gram = st.gram.as_ref().expect("gram cached when window is full");
+            WORKSPACE.with(|w| {
+                let mut ws = w.borrow_mut();
+                let gbuf = &mut ws.0;
+                if (gbuf.rows, gbuf.cols) != (gram.rows, gram.cols) {
+                    *gbuf = gram.clone();
+                } else {
+                    gbuf.data.copy_from_slice(&gram.data);
+                }
+            });
         }
         let (step, gen_us) = {
             let newest = st.snaps.back().unwrap();
             (newest.0, newest.1)
         };
-        drop(windows); // analysis itself runs without the map lock
+        drop(windows); // analysis itself runs without any shard lock
 
-        let (atilde, sigma, backend) = self.reduce(d, m1, &x)?;
+        let (atilde, sigma, backend) = match &pjrt_x {
+            Some(x) => self.reduce_pjrt(d, m1, x)?,
+            None => WORKSPACE.with(|w| -> Result<(Mat, Vec<f64>, &'static str)> {
+                let mut ws = w.borrow_mut();
+                let (gbuf, scratch) = &mut *ws;
+                let red = dmd::dmd_reduce_from_gram_with(gbuf, self.cfg.rank, scratch)?;
+                Ok((red.atilde, red.sigma, "rust"))
+            })?,
+        };
         let eigs = dmd::dmd_eigenvalues(&atilde)?;
         let stability = dmd::stability_metric(&eigs);
+        self.metrics.analysis_us.record(t0.elapsed().as_micros() as u64);
         let latency_us = util::epoch_micros().saturating_sub(gen_us);
         self.metrics.e2e_latency_us.record(latency_us);
         self.metrics.analyzed.record((d * 4) as u64);
@@ -245,6 +364,70 @@ impl DmdEngine {
             latency_us,
             backend,
         }))
+    }
+
+    /// Bring the cached Gram up to date with the current window (fire
+    /// time only — non-firing pushes just count slides).  `pending`
+    /// deferred slides are applied in one shot: shift the surviving
+    /// block up-left by `pending`, then fill every entry involving the
+    /// `pending` newest snapshots with fresh dot products — O(pending ·
+    /// d·m), exactly what eager per-slide updates would have cost, but
+    /// skipped entirely for windows that never fire.  Entries are exact
+    /// dot products either way, so no drift accumulates.  Falls back to
+    /// a full O(d·m²) rebuild on window fill, when more than half the
+    /// window changed, on the [`DmdConfig::gram_refresh`] cadence, and
+    /// when a fresh entry is non-finite.  Returns whether the resulting
+    /// Gram is entirely finite.
+    fn sync_gram(&self, st: &mut WindowState, m1: usize) -> bool {
+        debug_assert_eq!(st.snaps.len(), m1);
+        let pending = st.pending_slides;
+        st.pending_slides = 0;
+        let refresh_due =
+            self.cfg.gram_refresh > 0 && st.slides_since_full >= self.cfg.gram_refresh;
+        let incremental_wins = pending <= m1 / 2;
+        if let Some(g) = st.gram.as_mut().filter(|_| !refresh_due && incremental_wins) {
+            if pending > 0 {
+                let snaps = &st.snaps;
+                let finite =
+                    crate::linalg::gram_slide_update(g, pending, |i| snaps[i].2.as_slice());
+                if !finite {
+                    log::debug!("analysis: non-finite Gram slide; full recompute fallback");
+                    return self.rebuild_gram(st);
+                }
+                st.slides_since_full += pending;
+                self.metrics.gram_incremental.inc();
+            }
+            return true; // pending == 0: cache already current and finite
+        }
+        self.rebuild_gram(st)
+    }
+
+    /// Full Gram rebuild from the stored snapshots (window fill,
+    /// refresh cadence, bulk slide, or non-finite fallback).
+    fn rebuild_gram(&self, st: &mut WindowState) -> bool {
+        let snaps: Vec<&[f32]> = st.snaps.iter().map(|(_, _, s)| s.as_slice()).collect();
+        let g = crate::linalg::gram_from_snaps(&snaps);
+        let finite = g.data.iter().all(|v| v.is_finite());
+        st.gram = Some(g);
+        st.slides_since_full = 0;
+        self.metrics.gram_full.inc();
+        finite
+    }
+
+    /// Flatten the window to the artifact's (d × m+1) f32 layout,
+    /// checking finiteness during the copy (so PJRT-served streams skip
+    /// non-finite fires exactly like the Gram path does).
+    fn assemble_window(st: &WindowState, d: usize, m1: usize) -> (Vec<f32>, bool) {
+        let mut x = vec![0.0f32; d * m1];
+        let mut finite = true;
+        for (j, (_, _, snap)) in st.snaps.iter().enumerate() {
+            for i in 0..d {
+                let v = snap[i];
+                finite &= v.is_finite();
+                x[i * m1 + j] = v;
+            }
+        }
+        (x, finite)
     }
 
     /// Pre-compile the PJRT reduction for an expected snapshot
@@ -265,49 +448,52 @@ impl DmdEngine {
         }
     }
 
-    /// The (Ã, σ) reduction: PJRT artifact when the shape matches, else
-    /// the Rust mirror.
-    fn reduce(&self, d: usize, m1: usize, x: &[f32]) -> Result<(Mat, Vec<f64>, &'static str)> {
-        if self.cfg.backend == DmdBackend::Pjrt {
-            if let Some(arts) = &self.artifacts {
-                let key = format!("d{}_m{}_r{}", d, m1, self.cfg.rank);
-                if arts.find("dmd", &key).is_some() {
-                    let exe = arts.executable("dmd", &key)?;
-                    let out = exe.run_f32(&[x])?;
-                    if out[0].iter().all(|v| v.is_finite()) {
-                        let r = self.cfg.rank;
-                        let atilde = Mat::from_f32(r, r, &out[0]).context("atilde shape")?;
-                        let sigma = out[1].iter().map(|&v| v as f64).collect();
-                        return Ok((atilde, sigma, "pjrt"));
-                    }
-                    // Diagnosed in EXPERIMENTS.md §Perf: extremely
-                    // settled windows can drive the f32 Jacobi sweep in
-                    // the artifact to a non-finite rotation.  Keep the
-                    // service available: fall through to the f64 mirror.
-                    if std::env::var("ELASTICBROKER_DUMP_NAN").is_ok() {
-                        let path = format!("/tmp/eb_nan_window_{d}_{m1}.bin");
-                        let bytes: Vec<u8> =
-                            x.iter().flat_map(|v| v.to_le_bytes()).collect();
-                        let _ = std::fs::write(&path, bytes);
-                        log::warn!("analysis: dumped NaN-producing window to {path}");
-                    }
-                    log::warn!(
-                        "analysis: PJRT dmd artifact returned non-finite Ã (d={d}); \
-                         using Rust mirror for this window"
-                    );
-                }
-            }
+    /// The (Ã, σ) reduction through the PJRT artifact (the caller
+    /// already verified one is registered for this shape).
+    fn reduce_pjrt(&self, d: usize, m1: usize, x: &[f32]) -> Result<(Mat, Vec<f64>, &'static str)> {
+        let arts = self.artifacts.as_ref().expect("pjrt path without artifacts");
+        let key = format!("d{}_m{}_r{}", d, m1, self.cfg.rank);
+        let exe = arts.executable("dmd", &key)?;
+        let out = exe.run_f32(&[x])?;
+        if out[0].iter().all(|v| v.is_finite()) {
+            let r = self.cfg.rank;
+            let atilde = Mat::from_f32(r, r, &out[0]).context("atilde shape")?;
+            let sigma = out[1].iter().map(|&v| v as f64).collect();
+            return Ok((atilde, sigma, "pjrt"));
         }
+        // Diagnosed in EXPERIMENTS.md §Perf: extremely settled windows
+        // can drive the f32 Jacobi sweep in the artifact to a
+        // non-finite rotation.  Keep the service available: fall
+        // through to the f64 mirror.
+        if std::env::var("ELASTICBROKER_DUMP_NAN").is_ok() {
+            let path = format!("/tmp/eb_nan_window_{d}_{m1}.bin");
+            let bytes: Vec<u8> = x.iter().flat_map(|v| v.to_le_bytes()).collect();
+            let _ = std::fs::write(&path, bytes);
+            log::warn!("analysis: dumped NaN-producing window to {path}");
+        }
+        log::warn!(
+            "analysis: PJRT dmd artifact returned non-finite Ã (d={d}); \
+             using Rust mirror for this window"
+        );
         let xf: Vec<f64> = x.iter().map(|&v| v as f64).collect();
         let xm = Mat::from_slice(d, m1, &xf)?;
         let red = dmd::dmd_reduce(&xm, self.cfg.rank)?;
         Ok((red.atilde, red.sigma, "rust"))
     }
 
-    /// Streams currently tracked.
+    /// Streams currently tracked (across all shards).
     pub fn tracked_streams(&self) -> usize {
-        self.windows.lock().unwrap().len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
+}
+
+thread_local! {
+    /// Per-executor-thread reduction workspace: the Gram copy the fire
+    /// works on plus the reusable reduction intermediates.  Kept
+    /// thread-local so the reduction runs with no shard lock held and
+    /// allocates nothing per fire after the first use on each thread.
+    static WORKSPACE: std::cell::RefCell<(Mat, dmd::GramScratch)> =
+        std::cell::RefCell::new((Mat::zeros(0, 0), dmd::GramScratch::default()));
 }
 
 /// CSV sink for analysis results (the Fig 5 data file).
@@ -522,6 +708,194 @@ mod tests {
         assert_eq!(out.len(), 3); // fills at 4th, fires on 4,5,6th
         assert!(out.iter().all(|r| r.rank == 2));
         assert!(out.windows(2).all(|w| w[0].step < w[1].step));
+    }
+
+    /// Property: cached-Gram incremental fires ≡ full recompute.
+    /// Random slide sequences over varying (d, m, hop), comparing the
+    /// engine's fired (σ, eigs) — i.e. (Ã, σ) — against an oracle full
+    /// `dmd_reduce` on an independently-maintained copy of the window.
+    /// `gram_refresh: 5` so the periodic rebuild cadence is exercised
+    /// mid-sequence too.
+    #[test]
+    fn prop_incremental_gram_matches_full_recompute() {
+        use crate::linalg::sort_spectrum;
+        use crate::util::rng::Rng;
+        for &(d, m, hop, seed) in &[
+            (16usize, 3usize, 1usize, 5u64),
+            (64, 4, 2, 6),
+            (33, 6, 1, 7),
+            (128, 8, 3, 8),
+        ] {
+            let rank = m.min(3);
+            let metrics = WorkflowMetrics::new();
+            let eng = DmdEngine::new(
+                DmdConfig {
+                    window: m,
+                    rank,
+                    hop,
+                    backend: DmdBackend::Rust,
+                    gram_refresh: 5,
+                    ..Default::default()
+                },
+                None,
+                metrics.clone(),
+            )
+            .unwrap();
+            let mut rng = Rng::new(seed);
+            let mut window: VecDeque<Vec<f32>> = VecDeque::new();
+            let mut fired = 0;
+            for step in 0..40u64 {
+                let snap: Vec<f32> = (0..d)
+                    .map(|_| (rng.next_f64() * 2.0 - 1.0) as f32)
+                    .collect();
+                window.push_back(snap.clone());
+                if window.len() > m + 1 {
+                    window.pop_front();
+                }
+                let res = match eng.push("u/0", &snap_record(0, step, &snap)).unwrap() {
+                    Some(res) => res,
+                    None => continue,
+                };
+                fired += 1;
+                // Oracle: widen the reference window, full dmd_reduce.
+                let mut x = Mat::zeros(d, m + 1);
+                for (j, s) in window.iter().enumerate() {
+                    for (i, &v) in s.iter().enumerate() {
+                        x[(i, j)] = v as f64;
+                    }
+                }
+                let red = dmd::dmd_reduce(&x, rank).unwrap();
+                assert_eq!(res.sigma.len(), red.sigma.len());
+                for (a, b) in res.sigma.iter().zip(&red.sigma) {
+                    assert!(
+                        (a - b).abs() < 1e-9,
+                        "d={d} m={m} hop={hop} step={step}: σ {a} vs {b}"
+                    );
+                }
+                let want = sort_spectrum(dmd::dmd_eigenvalues(&red.atilde).unwrap());
+                let got = sort_spectrum(res.eigs.clone());
+                assert_eq!(got.len(), want.len());
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(
+                        (g.re - w.re).abs() < 1e-9 && (g.im - w.im).abs() < 1e-9,
+                        "d={d} m={m} hop={hop} step={step}: λ {g:?} vs {w:?}"
+                    );
+                }
+            }
+            assert!(fired > 0, "d={d} m={m} hop={hop} never fired");
+            assert!(metrics.gram_incremental.get() > 0, "d={d} m={m}");
+            // fill + at least one periodic refresh
+            assert!(metrics.gram_full.get() >= 2, "d={d} m={m}");
+        }
+    }
+
+    /// Regression: a NaN/Inf snapshot makes the incremental update fall
+    /// back to a full recompute, the fire is skipped while the bad
+    /// snapshot is in the window, and analyses resume after it evicts.
+    #[test]
+    fn nan_snapshot_triggers_full_recompute_and_skips_fire() {
+        let metrics = WorkflowMetrics::new();
+        let eng = DmdEngine::new(
+            DmdConfig {
+                window: 3,
+                rank: 2,
+                hop: 1,
+                backend: DmdBackend::Rust,
+                gram_refresh: 0, // isolate the non-finite fallback
+                ..Default::default()
+            },
+            None,
+            metrics.clone(),
+        )
+        .unwrap();
+        let d = 16;
+        let mk = |s: u64| snap_record(0, s, &oscillating_snapshot(d, s as usize, 0.9, 0.4));
+        // Fill the window (m+1 = 4): one full Gram build, first fire.
+        for s in 0..3 {
+            assert!(eng.push("u/0", &mk(s)).unwrap().is_none());
+        }
+        assert!(eng.push("u/0", &mk(3)).unwrap().is_some());
+        assert_eq!(metrics.gram_full.get(), 1);
+        // One clean slide: served incrementally.
+        assert!(eng.push("u/0", &mk(4)).unwrap().is_some());
+        assert_eq!(metrics.gram_incremental.get(), 1);
+        assert_eq!(metrics.gram_full.get(), 1);
+        // Inject NaN: fallback full recompute, fire skipped.
+        let mut bad = oscillating_snapshot(d, 5, 0.9, 0.4);
+        bad[3] = f32::NAN;
+        assert!(eng.push("u/0", &snap_record(0, 5, &bad)).unwrap().is_none());
+        assert_eq!(metrics.gram_full.get(), 2);
+        assert_eq!(metrics.gram_incremental.get(), 1);
+        // Every slide with the NaN still in the window falls back + skips.
+        for s in 6..9 {
+            assert!(eng.push("u/0", &mk(s)).unwrap().is_none(), "step {s}");
+        }
+        assert_eq!(metrics.gram_full.get(), 5);
+        // Window [6,7,8,9] no longer holds the NaN: incremental resumes.
+        assert!(eng.push("u/0", &mk(9)).unwrap().is_some());
+        assert_eq!(metrics.gram_incremental.get(), 2);
+        assert_eq!(metrics.gram_full.get(), 5);
+    }
+
+    /// An Inf snapshot takes the same fallback path as NaN.
+    #[test]
+    fn inf_snapshot_also_falls_back() {
+        let metrics = WorkflowMetrics::new();
+        let eng = DmdEngine::new(
+            DmdConfig {
+                window: 2,
+                rank: 1,
+                hop: 1,
+                backend: DmdBackend::Rust,
+                gram_refresh: 0,
+                ..Default::default()
+            },
+            None,
+            metrics.clone(),
+        )
+        .unwrap();
+        let d = 8;
+        let mk = |s: u64| snap_record(0, s, &oscillating_snapshot(d, s as usize, 0.9, 0.4));
+        for s in 0..3 {
+            let _ = eng.push("u/0", &mk(s)).unwrap();
+        }
+        let mut bad = oscillating_snapshot(d, 3, 0.9, 0.4);
+        bad[0] = f32::INFINITY;
+        assert!(eng.push("u/0", &snap_record(0, 3, &bad)).unwrap().is_none());
+        assert_eq!(metrics.gram_full.get(), 2); // fill + fallback
+    }
+
+    /// Executor threads on distinct streams drive the sharded engine
+    /// concurrently; every stream fires independently.
+    #[test]
+    fn sharded_windows_concurrent_streams() {
+        let eng = Arc::new(engine(4, 2));
+        let d = 32;
+        let handles: Vec<_> = (0..8u32)
+            .map(|r| {
+                let eng = eng.clone();
+                std::thread::spawn(move || {
+                    let mut fired = 0usize;
+                    for step in 0..16u64 {
+                        let snap = oscillating_snapshot(
+                            d,
+                            step as usize,
+                            0.95,
+                            0.3 + r as f64 * 0.05,
+                        );
+                        let rec = snap_record(r, step, &snap);
+                        if eng.push(&format!("u/{r}"), &rec).unwrap().is_some() {
+                            fired += 1;
+                        }
+                    }
+                    fired
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        // window 4+1 fills at the 5th push → 12 fires per stream
+        assert_eq!(total, 8 * 12);
+        assert_eq!(eng.tracked_streams(), 8);
     }
 
     #[test]

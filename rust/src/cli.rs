@@ -158,6 +158,12 @@ pub fn apply_overrides(
     if args.has_flag("dmd-per-batch") {
         cfg.dmd_per_batch = true;
     }
+    if let Some(v) = args.get_parsed::<usize>("dmd-gram-refresh")? {
+        cfg.dmd_gram_refresh = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("dmd-shards")? {
+        cfg.dmd_shards = v;
+    }
     if let Some(v) = args.get("analysis-csv") {
         cfg.analysis_csv = v.to_string();
     }
@@ -185,6 +191,8 @@ SUBCOMMANDS:
   analysis    Run the Cloud-side streaming + DMD service
                 --endpoints A[,B..]  --ranks N  --field NAME
                 --trigger-ms MS --executors N --dmd-window M --dmd-rank R
+                --dmd-gram-refresh N full Gram rebuild cadence (default 64)
+                --dmd-shards N       analysis window shards (default 8)
                 --duration-secs S    how long to serve (default 60)
                 --analysis-csv PATH  --store-shards N (workflow mode)
   synth       Run synthetic generators against remote endpoints
@@ -247,6 +255,10 @@ mod tests {
             "none",
             "--trigger-ms",
             "500",
+            "--dmd-gram-refresh",
+            "32",
+            "--dmd-shards",
+            "4",
             "--no-pjrt",
         ]))
         .unwrap();
@@ -255,6 +267,8 @@ mod tests {
         assert_eq!(cfg.steps, 100);
         assert_eq!(cfg.io_mode, crate::config::IoMode::None);
         assert_eq!(cfg.trigger_ms, 500);
+        assert_eq!(cfg.dmd_gram_refresh, 32);
+        assert_eq!(cfg.dmd_shards, 4);
         assert!(!cfg.use_pjrt);
     }
 }

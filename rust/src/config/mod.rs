@@ -100,6 +100,13 @@ pub struct WorkflowConfig {
     /// Analyse once per micro-batch per stream (the paper's per-trigger
     /// cadence) instead of once per snapshot.
     pub dmd_per_batch: bool,
+    /// Rebuild each stream's cached Gram matrix from the stored
+    /// snapshots every `dmd_gram_refresh` incremental window slides
+    /// (0 = only on the automatic non-finite fallback).
+    pub dmd_gram_refresh: usize,
+    /// Shards the analysis engine's per-stream window map is hashed
+    /// across (cross-stream lock isolation, like `store_shards`).
+    pub dmd_shards: usize,
     /// CSV output path for analysis results ("" → none).
     pub analysis_csv: String,
 }
@@ -130,6 +137,8 @@ impl Default for WorkflowConfig {
             dmd_rank: 6,
             dmd_use_pjrt: true,
             dmd_per_batch: false,
+            dmd_gram_refresh: 64,
+            dmd_shards: 8,
             analysis_csv: String::new(),
         }
     }
@@ -239,6 +248,12 @@ impl WorkflowConfig {
         if let Some(v) = map.get_bool("cloud.dmd_per_batch")? {
             cfg.dmd_per_batch = v;
         }
+        if let Some(v) = map.get_usize("cloud.dmd_gram_refresh")? {
+            cfg.dmd_gram_refresh = v;
+        }
+        if let Some(v) = map.get_usize("cloud.dmd_shards")? {
+            cfg.dmd_shards = v;
+        }
         if let Some(v) = map.get_str("cloud.analysis_csv")? {
             cfg.analysis_csv = v;
         }
@@ -253,6 +268,7 @@ impl WorkflowConfig {
         anyhow::ensure!(self.executors > 0, "executors must be > 0");
         anyhow::ensure!(self.batch_max_records > 0, "batch_max_records must be > 0");
         anyhow::ensure!(self.store_shards > 0, "store_shards must be > 0");
+        anyhow::ensure!(self.dmd_shards > 0, "dmd_shards must be > 0");
         anyhow::ensure!(
             self.dmd_rank <= self.dmd_window,
             "dmd_rank {} > dmd_window {}",
@@ -325,6 +341,27 @@ mod tests {
         assert_eq!(c.store_shards, 8);
         assert!(WorkflowConfig::from_toml("[broker]\nbatch_max_records = 0\n").is_err());
         assert!(WorkflowConfig::from_toml("[cloud]\nstore_shards = 0\n").is_err());
+    }
+
+    #[test]
+    fn dmd_gram_knobs_parse_and_validate() {
+        let c = WorkflowConfig::default();
+        assert_eq!(c.dmd_gram_refresh, 64);
+        assert_eq!(c.dmd_shards, 8);
+        let c = WorkflowConfig::from_toml(
+            "[cloud]\ndmd_gram_refresh = 16\ndmd_shards = 4\n",
+        )
+        .unwrap();
+        assert_eq!(c.dmd_gram_refresh, 16);
+        assert_eq!(c.dmd_shards, 4);
+        // 0 refresh = never periodically rebuild (valid)
+        assert_eq!(
+            WorkflowConfig::from_toml("[cloud]\ndmd_gram_refresh = 0\n")
+                .unwrap()
+                .dmd_gram_refresh,
+            0
+        );
+        assert!(WorkflowConfig::from_toml("[cloud]\ndmd_shards = 0\n").is_err());
     }
 
     #[test]

@@ -165,13 +165,7 @@ impl Store {
 
     /// Which shard a key lives on (stable for the store's lifetime).
     pub fn shard_of(&self, key: &str) -> usize {
-        // FNV-1a 64: tiny, allocation-free, good avalanche on short keys.
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in key.as_bytes() {
-            h ^= *b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-        (h % self.shards.len() as u64) as usize
+        (crate::util::fnv1a(key.as_bytes()) % self.shards.len() as u64) as usize
     }
 
     fn shard(&self, key: &str) -> &Shard {

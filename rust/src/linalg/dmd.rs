@@ -26,32 +26,80 @@ pub struct DmdReduced {
     pub sigma: Vec<f64>,
 }
 
+/// Reusable intermediates for [`dmd_reduce_from_gram_with`]: the
+/// analysis engine keeps one per executor thread (its thread-local
+/// workspace, reshaped on demand) so the per-fire reduction does not
+/// allocate its `m×m` / `m×r` working matrices on every trigger.
+#[derive(Default)]
+pub struct GramScratch {
+    g: Mat,
+    k: Mat,
+    vr: Mat,
+    kv: Mat,
+}
+
+impl GramScratch {
+    fn ensure(&mut self, m: usize, rank: usize) {
+        let resize = |mat: &mut Mat, r: usize, c: usize| {
+            if (mat.rows, mat.cols) != (r, c) {
+                *mat = Mat::zeros(r, c);
+            }
+        };
+        resize(&mut self.g, m, m);
+        resize(&mut self.k, m, m);
+        resize(&mut self.vr, m, rank);
+        resize(&mut self.kv, m, rank);
+    }
+}
+
 /// Reduce a snapshot window to `(Ã, σ)` — mirror of `model.dmd_reduced`.
 ///
 /// `x` is `(d, m+1)`: column `j` is the snapshot at window step `j`.
 pub fn dmd_reduce(x: &Mat, rank: usize) -> Result<DmdReduced> {
-    let m = x.cols.checked_sub(1).filter(|&m| m > 0);
+    ensure!(x.cols >= 2, "need at least 2 snapshots, got {}", x.cols);
+    // C = XᵀX (the gram kernel's job in the artifact) — symmetric-half
+    // sweep, no xᵀ materialization.
+    let c = crate::linalg::gram(x); // (m+1, m+1)
+    dmd_reduce_from_gram(&c, rank)
+}
+
+/// Reduce starting from the window's Gram matrix `C = XᵀX`
+/// (`(m+1)×(m+1)`) — the entry point shared by the PJRT mirror and the
+/// analysis engine's incrementally-maintained Gram cache: everything
+/// downstream of C only ever touches `O(m²)` data, so a caller that can
+/// update C in `O(d·m)` per window slide never pays the `O(d·m²)`
+/// recompute.
+pub fn dmd_reduce_from_gram(c: &Mat, rank: usize) -> Result<DmdReduced> {
+    let mut scratch = GramScratch::default();
+    dmd_reduce_from_gram_with(c, rank, &mut scratch)
+}
+
+/// [`dmd_reduce_from_gram`] with caller-owned scratch (no per-call
+/// intermediate allocations beyond the returned `Ã`).
+pub fn dmd_reduce_from_gram_with(
+    c: &Mat,
+    rank: usize,
+    scratch: &mut GramScratch,
+) -> Result<DmdReduced> {
+    ensure!(c.is_square(), "gram matrix must be square, got {}x{}", c.rows, c.cols);
+    let m = c.rows.checked_sub(1).filter(|&m| m > 0);
     let m = match m {
         Some(m) => m,
-        None => anyhow::bail!("need at least 2 snapshots, got {}", x.cols),
+        None => anyhow::bail!("need at least 2 snapshots, got {}", c.rows),
     };
     ensure!(rank >= 1 && rank <= m, "rank {rank} out of range 1..={m}");
-
-    // C = XᵀX  (the gram kernel's job in the artifact).
-    let c = x.t().matmul(x); // (m+1, m+1)
+    scratch.ensure(m, rank);
 
     // G = X1ᵀX1, K = X1ᵀX2 are sub-blocks of C.
-    let mut g = Mat::zeros(m, m);
-    let mut k = Mat::zeros(m, m);
     for i in 0..m {
         for j in 0..m {
-            g[(i, j)] = c[(i, j)];
-            k[(i, j)] = c[(i, j + 1)];
+            scratch.g[(i, j)] = c[(i, j)];
+            scratch.k[(i, j)] = c[(i, j + 1)];
         }
     }
 
     // Symmetric eigendecomposition of G (12 sweeps = the HLO solver).
-    let (evals, v) = eig::jacobi_symmetric(&g, 12);
+    let (evals, v) = eig::jacobi_symmetric(&scratch.g, 12);
 
     // Rank-r truncation by descending eigenvalue.
     let mut order: Vec<usize> = (0..m).collect();
@@ -59,10 +107,9 @@ pub fn dmd_reduce(x: &Mat, rank: usize) -> Result<DmdReduced> {
     let idx = &order[..rank];
     let sigma: Vec<f64> = idx.iter().map(|&i| evals[i].max(0.0).sqrt()).collect();
 
-    let mut vr = Mat::zeros(m, rank);
     for (col, &i) in idx.iter().enumerate() {
         for row in 0..m {
-            vr[(row, col)] = v[(row, i)];
+            scratch.vr[(row, col)] = v[(row, i)];
         }
     }
 
@@ -75,12 +122,17 @@ pub fn dmd_reduce(x: &Mat, rank: usize) -> Result<DmdReduced> {
         .map(|&s| if s > 1e-5 * sigma1 { 1.0 / s } else { 0.0 })
         .collect();
 
-    // Ã = Σ⁻¹ Vᵀ K V Σ⁻¹.
-    let core = vr.t().matmul(&k).matmul(&vr); // (r, r)
+    // Ã = Σ⁻¹ Vᵀ K V Σ⁻¹.  KV lands in scratch; the (r×r) core is
+    // contracted directly against Vr without materializing Vrᵀ.
+    scratch.k.matmul_into(&scratch.vr, &mut scratch.kv); // (m, r)
     let mut atilde = Mat::zeros(rank, rank);
     for i in 0..rank {
         for j in 0..rank {
-            atilde[(i, j)] = core[(i, j)] * inv_sigma[i] * inv_sigma[j];
+            let mut core = 0.0;
+            for l in 0..m {
+                core += scratch.vr[(l, i)] * scratch.kv[(l, j)];
+            }
+            atilde[(i, j)] = core * inv_sigma[i] * inv_sigma[j];
         }
     }
     Ok(DmdReduced { atilde, sigma })
@@ -248,6 +300,35 @@ mod tests {
         assert!(dmd_reduce(&Mat::zeros(16, 1), 1).is_err());
         assert!(dmd_reduce(&Mat::zeros(16, 5), 0).is_err());
         assert!(dmd_reduce(&Mat::zeros(16, 5), 5).is_err());
+        assert!(dmd_reduce_from_gram(&Mat::zeros(5, 4), 2).is_err()); // not square
+        assert!(dmd_reduce_from_gram(&Mat::zeros(1, 1), 1).is_err()); // m = 0
+        assert!(dmd_reduce_from_gram(&Mat::zeros(5, 5), 5).is_err()); // rank > m
+    }
+
+    /// The Gram entry point is the same computation as the full reduce,
+    /// and scratch reuse across shapes does not corrupt results.
+    #[test]
+    fn reduce_from_gram_matches_reduce() {
+        let (x, _) = linear_system_snapshots(96, 9, &[(0.9, 0.2), (0.7, 0.0)], 11);
+        let red = dmd_reduce(&x, 3).unwrap();
+        let c = crate::linalg::gram(&x);
+        let red2 = dmd_reduce_from_gram(&c, 3).unwrap();
+        assert!(red.atilde.max_abs_diff(&red2.atilde) < 1e-12);
+        assert_eq!(red.sigma.len(), red2.sigma.len());
+        for (a, b) in red.sigma.iter().zip(&red2.sigma) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // reuse one scratch across two different (m, rank) shapes
+        let mut scratch = GramScratch::default();
+        let red3 = dmd_reduce_from_gram_with(&c, 3, &mut scratch).unwrap();
+        assert!(red2.atilde.max_abs_diff(&red3.atilde) < 1e-15);
+        let (x2, _) = linear_system_snapshots(64, 6, &[(0.8, 0.0)], 12);
+        let c2 = crate::linalg::gram(&x2);
+        let red4 = dmd_reduce_from_gram_with(&c2, 2, &mut scratch).unwrap();
+        assert_eq!((red4.atilde.rows, red4.atilde.cols), (2, 2));
+        // and back to the first shape: identical numbers again
+        let red5 = dmd_reduce_from_gram_with(&c, 3, &mut scratch).unwrap();
+        assert!(red2.atilde.max_abs_diff(&red5.atilde) < 1e-15);
     }
 
     #[test]

@@ -24,7 +24,7 @@ use std::fmt;
 use anyhow::{ensure, Result};
 
 /// Row-major dense f64 matrix.
-#[derive(Clone, PartialEq)]
+#[derive(Clone, PartialEq, Default)]
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
@@ -90,23 +90,45 @@ impl Mat {
     }
 
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
-        // i-k-j loop order: streams `other` rows, decent cache behaviour
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self[(i, k)];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
-                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
-                for (o, &b) in out_row.iter_mut().zip(orow) {
-                    *o += a * b;
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// `out = self × other` without allocating: the hot-path variant the
+    /// analysis engine uses with scratch matrices reused across fires.
+    /// The shared dimension is tiled so a block of `other` rows stays in
+    /// cache while every output row accumulates against it.
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        assert_eq!(
+            (out.rows, out.cols),
+            (self.rows, other.cols),
+            "matmul_into output shape mismatch"
+        );
+        const TILE: usize = 64;
+        let n = other.cols;
+        out.data.fill(0.0);
+        let mut kb = 0;
+        while kb < self.cols {
+            let kend = (kb + TILE).min(self.cols);
+            // i-k-j loop order: streams `other` rows, decent cache behaviour
+            for i in 0..self.rows {
+                let arow = &self.data[i * self.cols..(i + 1) * self.cols];
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for k in kb..kend {
+                    let a = arow[k];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let orow = &other.data[k * n..(k + 1) * n];
+                    for (o, &b) in out_row.iter_mut().zip(orow) {
+                        *o += a * b;
+                    }
                 }
             }
+            kb = kend;
         }
-        out
     }
 
     /// Frobenius norm.
@@ -152,6 +174,112 @@ impl fmt::Debug for Mat {
         }
         write!(f, "]")
     }
+}
+
+/// Gram matrix `C = XᵀX` of a (d × m) snapshot matrix, computed
+/// symmetric-half-only straight from the row-major storage — no `x.t()`
+/// materialization and half the multiplies of `x.t().matmul(x)`.
+///
+/// One sweep over the rows of `x`: row `i` contributes the outer
+/// product of itself with itself to the upper triangle, then the lower
+/// triangle is mirrored.  Per entry the products are accumulated over
+/// `i` ascending — the same order as [`dot_f32_f64acc`] over column
+/// slices, so the incremental analysis cache and this full recompute
+/// agree to the last bit.
+pub fn gram(x: &Mat) -> Mat {
+    let (d, m) = (x.rows, x.cols);
+    let mut c = Mat::zeros(m, m);
+    for i in 0..d {
+        let row = &x.data[i * m..(i + 1) * m];
+        for j in 0..m {
+            let xj = row[j];
+            if xj == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[j * m..(j + 1) * m];
+            for k in j..m {
+                crow[k] += xj * row[k];
+            }
+        }
+    }
+    for j in 0..m {
+        for k in j + 1..m {
+            c.data[k * m + j] = c.data[j * m + k];
+        }
+    }
+    c
+}
+
+/// Dot product of two raw f32 snapshot slices with f64 accumulation —
+/// the primitive the incremental Gram cache is built from.  Consuming
+/// the stored f32 snapshots directly kills the per-fire f32→f64
+/// widening copy of the whole window the old path paid.
+#[inline]
+pub fn dot_f32_f64acc(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len(), "dot length mismatch");
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as f64 * y as f64;
+    }
+    acc
+}
+
+/// Gram matrix of a window given as raw f32 snapshot columns
+/// (`snaps[j]` is snapshot `j`, all the same length): `C[j][k] =
+/// snaps[j] · snaps[k]` with f64 accumulation, symmetric-half-only.
+/// This is the full-recompute path of the analysis engine — it never
+/// widens the window to f64 storage.
+pub fn gram_from_snaps<S: AsRef<[f32]>>(snaps: &[S]) -> Mat {
+    let m = snaps.len();
+    let mut c = Mat::zeros(m, m);
+    for j in 0..m {
+        for k in j..m {
+            let v = dot_f32_f64acc(snaps[j].as_ref(), snaps[k].as_ref());
+            c.data[j * m + k] = v;
+            c.data[k * m + j] = v;
+        }
+    }
+    c
+}
+
+/// Apply `pending` one-snapshot window slides to a cached Gram matrix
+/// in one shot: shift the surviving block up-left (ascending indices,
+/// so the source is always at or past the destination — no overlap
+/// hazard), then fill every entry involving the `pending` newest
+/// snapshots with fresh [`dot_f32_f64acc`] dot products.  `snap(i)`
+/// must yield window snapshot `i` (0 = oldest) of the *current* window.
+///
+/// Returns whether every freshly computed entry is finite: the last
+/// column pairs the newest snapshot with every stored one, and a dot
+/// against a NaN/∞ snapshot can never come back finite, so a finite
+/// batch implies no non-finite snapshot remains anywhere in the window.
+///
+/// This is the analysis engine's steady-state per-fire kernel
+/// (O(pending·d·m) instead of the O(d·m²) full recompute); the
+/// `micro_linalg` bench times this same function.
+pub fn gram_slide_update<'a, F>(g: &mut Mat, pending: usize, snap: F) -> bool
+where
+    F: Fn(usize) -> &'a [f32],
+{
+    debug_assert!(g.is_square());
+    let m1 = g.rows;
+    debug_assert!(pending <= m1);
+    for i in pending..m1 {
+        for j in pending..m1 {
+            g.data[(i - pending) * m1 + (j - pending)] = g.data[i * m1 + j];
+        }
+    }
+    let mut finite = true;
+    for col in m1 - pending..m1 {
+        let sc = snap(col);
+        for row in 0..=col {
+            let v = dot_f32_f64acc(snap(row), sc);
+            finite &= v.is_finite();
+            g.data[row * m1 + col] = v;
+            g.data[col * m1 + row] = v;
+        }
+    }
+    finite
 }
 
 /// A complex number as (re, im) — all we need for eigenvalue lists.
@@ -201,6 +329,112 @@ mod tests {
         let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
         let c = a.matmul(&b);
         assert_eq!(c, Mat::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn matmul_into_matches_matmul_nonsquare() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(11);
+        // sizes straddling the k-tile boundary (64)
+        for (r, k, c) in [(3usize, 5usize, 4usize), (7, 64, 3), (5, 130, 9)] {
+            let mut a = Mat::zeros(r, k);
+            let mut b = Mat::zeros(k, c);
+            for v in a.data.iter_mut() {
+                *v = rng.next_normal();
+            }
+            for v in b.data.iter_mut() {
+                *v = rng.next_normal();
+            }
+            let want = a.matmul(&b);
+            let mut out = Mat::zeros(r, c);
+            a.matmul_into(&b, &mut out);
+            assert!(want.max_abs_diff(&out) < 1e-12, "{r}x{k}x{c}");
+        }
+    }
+
+    #[test]
+    fn gram_matches_explicit_transpose_product() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(21);
+        for (d, m) in [(17usize, 5usize), (128, 9), (64, 1)] {
+            let mut x = Mat::zeros(d, m);
+            for v in x.data.iter_mut() {
+                *v = rng.next_normal();
+            }
+            let want = x.t().matmul(&x);
+            let got = gram(&x);
+            assert!(want.max_abs_diff(&got) < 1e-9, "d={d} m={m}");
+            // exactly symmetric by construction
+            for j in 0..m {
+                for k in 0..m {
+                    assert_eq!(got[(j, k)], got[(k, j)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_f32_f64acc_known() {
+        assert_eq!(dot_f32_f64acc(&[], &[]), 0.0);
+        assert_eq!(dot_f32_f64acc(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        // f64 accumulation: sums that overflow f32 precision stay exact
+        let a = vec![16_777_216.0f32; 4]; // 2^24
+        let b = vec![1.0f32; 4];
+        assert_eq!(dot_f32_f64acc(&a, &b), 4.0 * 16_777_216.0);
+    }
+
+    #[test]
+    fn gram_from_snaps_matches_widened_gram() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(31);
+        let (d, m1) = (53usize, 6usize);
+        let snaps: Vec<Vec<f32>> = (0..m1)
+            .map(|_| (0..d).map(|_| rng.next_normal() as f32).collect())
+            .collect();
+        // widen to a (d, m1) Mat, column j = snapshot j
+        let mut x = Mat::zeros(d, m1);
+        for (j, s) in snaps.iter().enumerate() {
+            for i in 0..d {
+                x[(i, j)] = s[i] as f64;
+            }
+        }
+        let want = gram(&x);
+        let got = gram_from_snaps(&snaps);
+        assert!(want.max_abs_diff(&got) < 1e-12);
+    }
+
+    /// Property: sliding an existing Gram (1..=pending evictions at a
+    /// time) equals recomputing it from the current window.
+    #[test]
+    fn gram_slide_update_matches_recompute() {
+        use crate::util::rng::Rng;
+        use std::collections::VecDeque;
+        let mut rng = Rng::new(41);
+        let (d, m1) = (37usize, 6usize);
+        let mk = |rng: &mut Rng| -> Vec<f32> {
+            (0..d).map(|_| rng.next_normal() as f32).collect()
+        };
+        let mut window: VecDeque<Vec<f32>> = (0..m1).map(|_| mk(&mut rng)).collect();
+        let refs = |w: &VecDeque<Vec<f32>>| -> Vec<Vec<f32>> { w.iter().cloned().collect() };
+        let mut g = gram_from_snaps(&refs(&window));
+        for step in 0..10usize {
+            let pending = 1 + step % 3; // ≤ m1/2
+            for _ in 0..pending {
+                window.pop_front();
+                window.push_back(mk(&mut rng));
+            }
+            let snaps: Vec<&[f32]> = window.iter().map(|s| s.as_slice()).collect();
+            assert!(gram_slide_update(&mut g, pending, |i| snaps[i]));
+            let want = gram_from_snaps(&snaps);
+            assert!(want.max_abs_diff(&g) < 1e-12, "step {step} pending {pending}");
+        }
+        // a NaN snapshot is reported non-finite
+        let mut bad = mk(&mut rng);
+        bad[0] = f32::NAN;
+        window.pop_front();
+        window.push_back(bad);
+        let snaps: Vec<&[f32]> = window.iter().map(|s| s.as_slice()).collect();
+        assert!(!gram_slide_update(&mut g, 1, |i| snaps[i]));
     }
 
     #[test]

@@ -186,6 +186,8 @@ fn cmd_analysis(args: &Args) -> Result<()> {
             window: cfg.dmd_window,
             rank: cfg.dmd_rank,
             hop: 1,
+            gram_refresh: cfg.dmd_gram_refresh,
+            shards: cfg.dmd_shards,
             ..Default::default()
         },
         artifacts,
@@ -230,6 +232,12 @@ fn cmd_analysis(args: &Args) -> Result<()> {
     println!(
         "analysis done: {n} results; latency {}",
         metrics.e2e_latency_us.summary()
+    );
+    println!(
+        "  per-fire analysis {}; gram updates: {} incremental / {} full",
+        metrics.analysis_us.summary(),
+        metrics.gram_incremental.get(),
+        metrics.gram_full.get()
     );
     Ok(())
 }

@@ -217,6 +217,16 @@ pub struct WorkflowMetrics {
     /// (includes OOM backoff stalls, so p99 here surfaces endpoint
     /// pressure).
     pub flush_us: Arc<Histogram>,
+    /// per-fire DMD analysis time µs (Gram sync / window assembly +
+    /// reduction + eigenvalues + metric — everything a fire pays) — the
+    /// Cloud-side cost that must stay under the snapshot inter-arrival
+    /// time for the §4.3 QoS story.
+    pub analysis_us: Arc<Histogram>,
+    /// window slides served by the O(d·m) incremental Gram update.
+    pub gram_incremental: Arc<Counter>,
+    /// full O(d·m²) Gram recomputes (window fill, refresh cadence, or
+    /// non-finite fallback).
+    pub gram_full: Arc<Counter>,
 }
 
 impl Default for WorkflowMetrics {
@@ -235,6 +245,9 @@ impl WorkflowMetrics {
             dropped: Arc::new(Counter::new()),
             batch_records: Arc::new(Histogram::new()),
             flush_us: Arc::new(Histogram::new()),
+            analysis_us: Arc::new(Histogram::new()),
+            gram_incremental: Arc::new(Counter::new()),
+            gram_full: Arc::new(Counter::new()),
         }
     }
 }

@@ -2,10 +2,13 @@
 //! (the paper's Spark `StreamingContext` with a 3-second trigger).
 //!
 //! Every `trigger_interval` the context polls all endpoint readers,
-//! assembles the new records into a [`Dataset`] (one partition per data
-//! stream), pipes every partition through the user's processor on the
-//! executor pool, and forwards the outputs to the sink channel — the
-//! `map → pipe → collect` pipeline of the paper's Fig 3.
+//! assembles the new records into the trigger's partitions (one
+//! micro-batch per data stream — the paper's [`super::Dataset`]), pipes
+//! every partition through the user's processor on the executor pool,
+//! and forwards the outputs to the sink channel — the
+//! `map → pipe → collect` pipeline of the paper's Fig 3.  The partition
+//! buffer is reused across triggers (drained into the pool, capacity
+//! retained).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
@@ -14,7 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::{Dataset, ExecutorPool, MicroBatch, StreamReader};
+use super::{ExecutorPool, MicroBatch, StreamReader};
 
 /// Streaming service configuration.
 #[derive(Clone, Debug)]
@@ -76,32 +79,33 @@ impl StreamingContext {
                 let pool = ExecutorPool::new(cfg.executors);
                 let processor = Arc::new(processor);
                 let mut seq = 0u64;
+                // Partition scratch reused across triggers: `drain(..)`
+                // hands the micro-batches to the pool while the Vec
+                // keeps its capacity for the next trigger.
+                let mut partitions: Vec<MicroBatch> = Vec::new();
                 loop {
                     let deadline = Instant::now() + cfg.trigger_interval;
                     if d_stop.load(Ordering::SeqCst) {
                         // final drain below, then exit
                     }
                     // Poll all endpoints for this trigger.
-                    let mut partitions: Vec<MicroBatch> = Vec::new();
+                    partitions.clear();
                     for r in readers.iter_mut() {
                         partitions.extend(r.poll()?);
                     }
-                    let ds = Dataset {
-                        trigger_seq: seq,
-                        partitions,
-                    };
-                    let n_records = ds.total_records() as u64;
+                    let n_records: u64 =
+                        partitions.iter().map(|p| p.len() as u64).sum();
                     log::debug!(
                         "streaming: trigger {seq}: {} partitions, {} records",
-                        ds.partitions.len(),
+                        partitions.len(),
                         n_records
                     );
                     d_records.fetch_add(n_records, Ordering::Relaxed);
-                    if !ds.partitions.is_empty() {
+                    if !partitions.is_empty() {
                         // pipe each partition exactly once, concurrently
                         let proc = processor.clone();
                         let outputs: Vec<Vec<T>> = pool
-                            .map_collect(ds.partitions, move |batch| proc(&batch));
+                            .map_collect(partitions.drain(..), move |batch| proc(&batch));
                         for out in outputs {
                             for item in out {
                                 if sink.send((seq, item)).is_err() {

@@ -60,18 +60,20 @@ impl ExecutorPool {
 
     /// `rdd.pipe(f).collect()`: run `f` over all items concurrently,
     /// return outputs in input order (blocks until all complete).
-    pub fn map_collect<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    ///
+    /// Accepts any `IntoIterator` so callers can `drain(..)` a reused
+    /// buffer instead of handing over a freshly-allocated `Vec` per
+    /// trigger (the driver loop does exactly that).
+    pub fn map_collect<T, R, F, I>(&self, items: I, f: F) -> Vec<R>
     where
         T: Send + 'static,
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
+        I: IntoIterator<Item = T>,
     {
-        let n = items.len();
-        if n == 0 {
-            return Vec::new();
-        }
         let f = Arc::new(f);
         let (rtx, rrx) = channel::<(usize, R)>();
+        let mut n = 0;
         for (i, item) in items.into_iter().enumerate() {
             let f = f.clone();
             let rtx = rtx.clone();
@@ -79,6 +81,7 @@ impl ExecutorPool {
                 let out = f(item);
                 let _ = rtx.send((i, out));
             });
+            n = i + 1;
         }
         drop(rtx);
         let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
@@ -108,7 +111,7 @@ mod tests {
     #[test]
     fn map_collect_preserves_order() {
         let pool = ExecutorPool::new(4);
-        let out = pool.map_collect((0..100).collect(), |i: i32| i * 2);
+        let out = pool.map_collect((0..100).collect::<Vec<i32>>(), |i: i32| i * 2);
         assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
     }
 
@@ -116,7 +119,7 @@ mod tests {
     fn map_collect_runs_concurrently() {
         let pool = ExecutorPool::new(8);
         let t0 = Instant::now();
-        let _ = pool.map_collect((0..8).collect(), |_: i32| {
+        let _ = pool.map_collect((0..8).collect::<Vec<i32>>(), |_: i32| {
             std::thread::sleep(Duration::from_millis(100));
         });
         let elapsed = t0.elapsed();
@@ -129,7 +132,7 @@ mod tests {
         let pool = ExecutorPool::new(3);
         let counter = Arc::new(AtomicUsize::new(0));
         let c = counter.clone();
-        let out = pool.map_collect((0..500).collect(), move |i: usize| {
+        let out = pool.map_collect((0..500).collect::<Vec<usize>>(), move |i: usize| {
             c.fetch_add(1, Ordering::SeqCst);
             i
         });

@@ -6,9 +6,16 @@
 //! all streams, decodes the [`StreamRecord`] payloads, and advances the
 //! cursors — at-least-once delivery with in-order ids per stream.
 //!
+//! Cursors live in a `Vec` parallel to the subscription-ordered key
+//! list and are addressed by position; the only hashing left on the
+//! poll path is one reply-key → position lookup per *stream section of
+//! the reply*, not one per subscribed key per poll.  The formatted id
+//! strings are scratch buffers reused across polls.
+//!
 //! [`poll`]: StreamReader::poll
 
 use std::collections::HashMap;
+use std::fmt::Write as _;
 use std::net::SocketAddr;
 
 use anyhow::{bail, Context, Result};
@@ -23,12 +30,18 @@ use super::MicroBatch;
 /// Poller for a set of streams on one endpoint.
 pub struct StreamReader {
     conn: RespConn,
-    /// stream key → last consumed entry id.
-    cursors: HashMap<String, EntryId>,
-    /// Max records per stream per poll (0 = unlimited).
-    batch_limit: usize,
     /// Keys in subscription order (stable partition order).
     keys: Vec<String>,
+    /// Last consumed entry id per key, parallel to `keys`.
+    cursors: Vec<EntryId>,
+    /// Reply-key → position in `keys` (touched once per reply stream).
+    index: HashMap<String, usize>,
+    /// Formatted cursor ids, parallel to `keys`; reused across polls.
+    id_bufs: Vec<String>,
+    /// Max records per stream per poll (0 = unlimited).
+    batch_limit: usize,
+    /// Formatted `batch_limit` (the COUNT argument), built once.
+    count_s: String,
 }
 
 impl StreamReader {
@@ -39,13 +52,19 @@ impl StreamReader {
         conn_cfg: ConnConfig,
     ) -> Result<Self> {
         let conn = RespConn::connect(addr, conn_cfg)?;
-        let cursors = keys.iter().map(|k| (k.clone(), EntryId::ZERO)).collect();
-        Ok(StreamReader {
+        let mut reader = StreamReader {
             conn,
-            cursors,
+            keys: Vec::new(),
+            cursors: Vec::new(),
+            index: HashMap::new(),
+            id_bufs: Vec::new(),
             batch_limit,
-            keys,
-        })
+            count_s: batch_limit.to_string(),
+        };
+        for k in keys {
+            reader.subscribe(k);
+        }
+        Ok(reader)
     }
 
     pub fn keys(&self) -> &[String] {
@@ -54,9 +73,11 @@ impl StreamReader {
 
     /// Subscribe to an additional stream (starts from the beginning).
     pub fn subscribe(&mut self, key: String) {
-        if !self.cursors.contains_key(&key) {
-            self.cursors.insert(key.clone(), EntryId::ZERO);
+        if !self.index.contains_key(&key) {
+            self.index.insert(key.clone(), self.keys.len());
             self.keys.push(key);
+            self.cursors.push(EntryId::ZERO);
+            self.id_bufs.push(String::new());
         }
     }
 
@@ -66,24 +87,23 @@ impl StreamReader {
         if self.keys.is_empty() {
             return Ok(Vec::new());
         }
+        // Refresh the reusable id scratch buffers from the cursors.
+        for (buf, id) in self.id_bufs.iter_mut().zip(&self.cursors) {
+            buf.clear();
+            let _ = write!(buf, "{id}");
+        }
         // Build: XREAD COUNT n STREAMS k... id...
-        let count_s = self.batch_limit.to_string();
-        let id_strings: Vec<String> = self
-            .keys
-            .iter()
-            .map(|k| self.cursors[k].to_string())
-            .collect();
         let mut parts: Vec<&[u8]> = Vec::with_capacity(4 + self.keys.len() * 2);
         parts.push(b"XREAD");
         if self.batch_limit > 0 {
             parts.push(b"COUNT");
-            parts.push(count_s.as_bytes());
+            parts.push(self.count_s.as_bytes());
         }
         parts.push(b"STREAMS");
         for k in &self.keys {
             parts.push(k.as_bytes());
         }
-        for id in &id_strings {
+        for id in &self.id_bufs {
             parts.push(id.as_bytes());
         }
         let reply = self.conn.request(&parts)?;
@@ -101,13 +121,20 @@ impl StreamReader {
         for stream in streams {
             let pair = stream.as_array().context("XREAD stream entry not array")?;
             anyhow::ensure!(pair.len() == 2, "XREAD stream entry len {}", pair.len());
-            let key = String::from_utf8_lossy(
-                pair[0].as_bytes().context("stream key not bytes")?,
-            )
-            .into_owned();
+            let key_bytes = pair[0].as_bytes().context("stream key not bytes")?;
+            let key = String::from_utf8_lossy(key_bytes).into_owned();
+            // One hash lookup per reply stream resolves the positional
+            // cursor; everything after is indexed.
+            let pos = match self.index.get(&key) {
+                Some(&p) => p,
+                None => {
+                    log::warn!("reader: XREAD reply for unsubscribed stream {key}; ignoring");
+                    continue;
+                }
+            };
             let entries = pair[1].as_array().context("entries not array")?;
             let mut records = Vec::with_capacity(entries.len());
-            let mut max_id = self.cursors.get(&key).copied().unwrap_or(EntryId::ZERO);
+            let mut max_id = self.cursors[pos];
             for e in entries {
                 let e = e.as_array().context("entry not array")?;
                 anyhow::ensure!(e.len() == 2, "entry len {}", e.len());
@@ -137,7 +164,7 @@ impl StreamReader {
                     max_id = id;
                 }
             }
-            self.cursors.insert(key.clone(), max_id);
+            self.cursors[pos] = max_id;
             if !records.is_empty() {
                 batches.push(MicroBatch { key, records });
             }

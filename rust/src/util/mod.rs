@@ -17,6 +17,19 @@ pub fn epoch_micros() -> u64 {
         .as_micros() as u64
 }
 
+/// FNV-1a 64-bit hash: tiny, allocation-free, good avalanche on short
+/// keys.  Shared by every sharded map in the system (endpoint store,
+/// analysis window shards) so a key lands on the same shard index for a
+/// given shard count everywhere.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Human-friendly byte formatting for logs and bench tables.
 pub fn fmt_bytes(n: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -56,6 +69,14 @@ mod tests {
         // sanity: we are past 2020 and before 2100
         assert!(a > 1_577_836_800_000_000);
         assert!(a < 4_102_444_800_000_000);
+    }
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // Reference values for FNV-1a 64 (offset basis / "a" / "foobar").
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
     }
 
     #[test]

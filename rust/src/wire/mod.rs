@@ -107,8 +107,52 @@ impl fmt::Display for Value {
     }
 }
 
-/// Serialize a value into `out`.
+/// Decimal digit count of an unsigned value.
+fn dec_len(mut v: u64) -> usize {
+    let mut n = 1;
+    while v >= 10 {
+        v /= 10;
+        n += 1;
+    }
+    n
+}
+
+/// Decimal length of a signed value (sign included).
+fn int_len(v: i64) -> usize {
+    if v < 0 {
+        1 + dec_len(v.unsigned_abs())
+    } else {
+        dec_len(v as u64)
+    }
+}
+
+/// Exact serialized size of a value on the wire.
+pub fn encoded_len(v: &Value) -> usize {
+    match v {
+        Value::Simple(s) => 1 + s.len() + 2,
+        Value::Error(e) => 1 + e.len() + 2,
+        Value::Int(i) => 1 + int_len(*i) + 2,
+        Value::Bulk(b) => 1 + dec_len(b.len() as u64) + 2 + b.len() + 2,
+        Value::NullBulk => 5,
+        Value::Array(items) => {
+            1 + dec_len(items.len() as u64)
+                + 2
+                + items.iter().map(encoded_len).sum::<usize>()
+        }
+        Value::NullArray => 5,
+    }
+}
+
+/// Serialize a value into `out`.  The exact frame length is computed
+/// first and reserved in one step, so big frames (endpoint XREAD
+/// replies carrying whole snapshot payloads) never reallocate
+/// mid-encode.
 pub fn encode(v: &Value, out: &mut Vec<u8>) {
+    out.reserve(encoded_len(v));
+    encode_raw(v, out);
+}
+
+fn encode_raw(v: &Value, out: &mut Vec<u8>) {
     match v {
         Value::Simple(s) => {
             out.push(b'+');
@@ -138,16 +182,28 @@ pub fn encode(v: &Value, out: &mut Vec<u8>) {
             out.extend_from_slice(items.len().to_string().as_bytes());
             out.extend_from_slice(b"\r\n");
             for item in items {
-                encode(item, out);
+                encode_raw(item, out);
             }
         }
         Value::NullArray => out.extend_from_slice(b"*-1\r\n"),
     }
 }
 
+/// Exact serialized size of a client command (array of bulk strings).
+pub fn command_len(parts: &[&[u8]]) -> usize {
+    let mut n = 1 + dec_len(parts.len() as u64) + 2;
+    for p in parts {
+        n += 1 + dec_len(p.len() as u64) + 2 + p.len() + 2;
+    }
+    n
+}
+
 /// Serialize a client command (array of bulk strings) — what Redis
-/// clients put on the wire.
+/// clients put on the wire.  Reserves the exact frame length up front:
+/// the broker's pipelined XADD batches append many commands into one
+/// buffer and must not reallocate mid-encode on the hot path.
 pub fn encode_command(parts: &[&[u8]], out: &mut Vec<u8>) {
+    out.reserve(command_len(parts));
     out.push(b'*');
     out.extend_from_slice(parts.len().to_string().as_bytes());
     out.extend_from_slice(b"\r\n");
@@ -214,6 +270,54 @@ mod tests {
         let mut buf = Vec::new();
         encode_command(&[b"PING"], &mut buf);
         assert_eq!(buf, b"*1\r\n$4\r\nPING\r\n");
+    }
+
+    /// Property: `encoded_len`/`command_len` predict the exact byte
+    /// count, so a single up-front reserve suffices (no reallocation
+    /// mid-encode).
+    #[test]
+    fn prop_encoded_len_is_exact() {
+        prop::forall(0x1E4, 150, &U64Range(0, u64::MAX / 2), |seed| {
+            let mut rng = Rng::new(*seed);
+            let v = gen_value(&mut rng, 3);
+            let want = encoded_len(&v);
+            let mut buf = Vec::new();
+            encode(&v, &mut buf);
+            if buf.len() != want {
+                return Err(format!("encoded_len {want} != actual {} for {v:?}", buf.len()));
+            }
+            if buf.capacity() > want.max(8) * 2 {
+                return Err(format!(
+                    "over-allocated: cap {} for len {want}",
+                    buf.capacity()
+                ));
+            }
+            Ok(())
+        });
+        // negative ints exercise int_len's sign branch
+        for i in [i64::MIN, -1_000_000, -1, 0, 9, 10, i64::MAX] {
+            let v = Value::Int(i);
+            let mut buf = Vec::new();
+            encode(&v, &mut buf);
+            assert_eq!(buf.len(), encoded_len(&v), "int {i}");
+        }
+    }
+
+    #[test]
+    fn command_len_is_exact() {
+        let cases: Vec<Vec<&[u8]>> = vec![
+            vec![b"PING"],
+            vec![b"XADD", b"u/0", b"*", b"r", &[0u8; 300]],
+            vec![b""],
+        ];
+        for parts in cases {
+            let mut buf = Vec::new();
+            encode_command(&parts, &mut buf);
+            assert_eq!(buf.len(), command_len(&parts));
+            // the reserve covered the whole frame: capacity was set
+            // once, before any bytes were written
+            assert!(buf.capacity() >= buf.len());
+        }
     }
 
     /// Property: arbitrary bulk payloads + ints survive a roundtrip even

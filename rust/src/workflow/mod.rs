@@ -90,6 +90,8 @@ impl CloudSide {
                 } else {
                     crate::analysis::FirePolicy::PerSnapshot
                 },
+                gram_refresh: cfg.dmd_gram_refresh,
+                shards: cfg.dmd_shards,
             },
             artifacts,
             metrics.clone(),
