@@ -3,21 +3,32 @@
 //! * `broker_write` call latency (the simulation-visible cost — the
 //!   quantity Fig 6 says must stay tiny),
 //! * sustained ship throughput per writer and aggregated across ranks,
-//! * queue policy comparison under a slow link.
+//! * queue policy comparison under a slow link,
+//! * **migration cost** (ISSUE 3): µs to drain + re-register one
+//!   context onto another endpoint (tombstone + dial + epoch-fenced
+//!   HELLO + first fenced write).
 //!
 //! `cargo bench --bench micro_broker`
+//!
+//! Emits `BENCH_broker.json` (pipelined speedup + migration-cost
+//! quantiles) so CI can track the trajectory.  Set `BENCH_SMOKE=1` for
+//! tiny iteration counts (numbers then indicative only).
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use elasticbroker::broker::{Broker, BrokerConfig, QueuePolicy};
+use elasticbroker::broker::{
+    Broker, BrokerConfig, GroupMap, QueuePolicy, Shipper, TopologyHandle,
+};
 use elasticbroker::endpoint::{EndpointServer, StoreConfig};
 use elasticbroker::metrics::WorkflowMetrics;
-use elasticbroker::transport::{ConnConfig, Request, RespConn};
+use elasticbroker::record::StreamRecord;
+use elasticbroker::transport::{ConnConfig, Dialer, Request, RespConn, TcpDialer};
 use elasticbroker::util;
 
 fn main() -> anyhow::Result<()> {
     elasticbroker::util::logger::init();
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
 
     // --- batched pipelined writes vs per-record request/response ---------
     // The tentpole number: same records, same connection type, same
@@ -25,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     // per 64-record batch.
     println!("# pipelined batch (64) vs per-record request/response, 4 KiB records");
     let payload = vec![0u8; 4096];
-    let n = 4096usize;
+    let n = if smoke { 256usize } else { 4096usize };
     let batch = 64usize;
 
     let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default())?;
@@ -82,7 +93,7 @@ fn main() -> anyhow::Result<()> {
         )?;
         let ctx = broker.init("u", 0)?;
         let data = vec![0.5f32; dim];
-        let n = 400u64;
+        let n = if smoke { 50u64 } else { 400u64 };
         let t0 = Instant::now();
         for step in 0..n {
             ctx.write(step, &[dim as u32], &data)?;
@@ -117,10 +128,11 @@ fn main() -> anyhow::Result<()> {
     let handles: Vec<_> = (0..16u32)
         .map(|r| {
             let broker = broker.clone();
+            let steps = if smoke { 20u64 } else { 200u64 };
             std::thread::spawn(move || -> anyhow::Result<()> {
                 let ctx = broker.init("u", r)?;
                 let data = vec![0.5f32; 4096];
-                for step in 0..200 {
+                for step in 0..steps {
                     ctx.write(step, &[4096], &data)?;
                 }
                 ctx.finalize()
@@ -159,7 +171,7 @@ fn main() -> anyhow::Result<()> {
         )?;
         let ctx = broker.init("u", 0)?;
         let data = vec![0.5f32; 16384];
-        let n = 64u64;
+        let n = if smoke { 12u64 } else { 64u64 };
         let t0 = Instant::now();
         for step in 0..n {
             ctx.write(step, &[16384], &data)?;
@@ -177,5 +189,59 @@ fn main() -> anyhow::Result<()> {
             metrics.write_call_us.quantile(0.99)
         );
     }
+
+    // --- migration cost (ISSUE 3): drain + re-register one context -------
+    // The shipper ping-pongs one stream between two live endpoints; each
+    // iteration pays the full migration protocol — handoff tombstone on
+    // the old endpoint, TCP dial of the new one, epoch-fenced HELLO, and
+    // one fenced record write to prove the stream is flowing again.
+    println!("\n# migration cost: drain + re-register one context (tombstone + dial + HELLO)");
+    let e0 = EndpointServer::start("127.0.0.1:0", StoreConfig::default())?;
+    let e1 = EndpointServer::start("127.0.0.1:0", StoreConfig::default())?;
+    let metrics = WorkflowMetrics::new();
+    let topology = TopologyHandle::new_static(GroupMap::new(1, 1, 1)?, vec![e0.addr()])?;
+    topology.add_endpoint(e1.addr())?;
+    let resolver = topology.clone();
+    let dialer: Arc<dyn Dialer> = Arc::new(TcpDialer::new(
+        move |e| resolver.endpoint_addr(e),
+        ConnConfig::default(),
+    ));
+    let mut shipper = Shipper::register(
+        "mig/0".into(),
+        0,
+        topology.clone(),
+        dialer,
+        metrics.clone(),
+        4,
+    )?;
+    let iters = if smoke { 20u64 } else { 200u64 };
+    let mut migration_us: Vec<f64> = Vec::with_capacity(iters as usize);
+    for i in 0..iters {
+        let target = if i % 2 == 0 { 1usize } else { 0 }; // ping-pong e0 ↔ e1
+        topology.assign(&[(0, target)])?;
+        let record = StreamRecord::from_f32("mig", 0, i, util::epoch_micros(), &[1], &[1.0])?;
+        let t0 = Instant::now();
+        shipper.ship(std::slice::from_ref(&record))?;
+        migration_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    migration_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mig_mean = migration_us.iter().sum::<f64>() / migration_us.len() as f64;
+    let mig_p50 = migration_us[migration_us.len() / 2];
+    let mig_p99 = migration_us[(migration_us.len() * 99) / 100];
+    println!(
+        "  {iters} migrations: mean {mig_mean:.0} µs  p50 {mig_p50:.0} µs  p99 {mig_p99:.0} µs \
+         ({} handoffs, {} migrations counted)",
+        metrics.handoffs.get(),
+        metrics.migrations.get(),
+    );
+
+    // --- machine-readable trajectory ------------------------------------
+    let json = format!(
+        r#"{{"bench":"micro_broker","smoke":{smoke},"pipelined":{{"batch":{batch},"per_record_rps":{per_record:.0},"pipelined_rps":{pipelined:.0},"speedup":{:.2}}},"migration":{{"iters":{iters},"mean_us":{mig_mean:.1},"p50_us":{mig_p50:.1},"p99_us":{mig_p99:.1}}}}}"#,
+        pipelined / per_record
+    );
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_broker.json");
+    std::fs::write(out_path, &json)?;
+    println!("\nwrote {out_path}");
     Ok(())
 }

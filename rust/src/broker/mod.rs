@@ -33,14 +33,28 @@
 //!   idle stream still sees per-record latency).
 //! * **Filtering / aggregation / format conversion** ([`filter`]):
 //!   optional per-context stages applied before serialization.
+//! * **Elasticity** (ISSUE 3, the paper's namesake behaviour): the
+//!   group→endpoint assignment is a versioned [`Topology`] rather than
+//!   a constant.  Writers ship through the epoch-fenced [`Shipper`]
+//!   protocol (`HELLO` registration, `XADDF` fenced writes, `XHANDOFF`
+//!   tombstones), migrate between endpoints at batch boundaries with
+//!   no record loss or duplication, and a QoS-driven [`Rebalancer`]
+//!   moves groups off dead or saturated endpoints at runtime.  See
+//!   ROADMAP.md §"Elasticity model".
 
 pub mod filter;
 pub mod groups;
 mod queue;
+pub mod rebalancer;
+pub mod shipper;
+pub mod topology;
 
 pub use filter::{Filter, FilterStage};
 pub use groups::GroupMap;
 pub use queue::{BoundedQueue, QueuePolicy};
+pub use rebalancer::{EndpointSample, MigrationPlan, QosThresholds, Rebalancer};
+pub use shipper::Shipper;
+pub use topology::{EndpointSlot, Topology, TopologyHandle};
 
 use std::net::SocketAddr;
 use std::sync::Arc;
@@ -50,7 +64,7 @@ use anyhow::{Context, Result};
 
 use crate::metrics::WorkflowMetrics;
 use crate::record::StreamRecord;
-use crate::transport::{ConnConfig, Request, RespConn};
+use crate::transport::{ConnConfig, Dialer, TcpDialer};
 use crate::util;
 
 /// Broker-wide configuration shared by all contexts of a process.
@@ -96,24 +110,64 @@ impl BrokerConfig {
 }
 
 /// Factory for per-(rank, field) contexts.
+///
+/// [`Broker::new`] builds the classic static topology (group `g` →
+/// endpoint `g % n`, fixed addresses) — every pre-elastic caller keeps
+/// working unchanged.  [`Broker::with_topology`] attaches the broker
+/// to a shared, mutable [`TopologyHandle`] instead: writers then
+/// follow epoch bumps (scale-out, scale-in, rebalancing) at batch
+/// boundaries via the [`Shipper`] migration protocol.
 pub struct Broker {
     cfg: BrokerConfig,
-    groups: GroupMap,
+    topology: TopologyHandle,
+    dialer: Arc<dyn Dialer>,
     metrics: WorkflowMetrics,
 }
 
 impl Broker {
     pub fn new(cfg: BrokerConfig, total_ranks: usize, metrics: WorkflowMetrics) -> Result<Self> {
         let groups = GroupMap::new(total_ranks, cfg.group_size, cfg.endpoints.len())?;
+        let topology = TopologyHandle::new_static(groups, cfg.endpoints.clone())?;
+        let resolver = topology.clone();
+        let dialer: Arc<dyn Dialer> = Arc::new(TcpDialer::new(
+            move |e| resolver.endpoint_addr(e),
+            cfg.conn.clone(),
+        ));
         Ok(Broker {
             cfg,
-            groups,
+            topology,
+            dialer,
             metrics,
         })
     }
 
-    pub fn groups(&self) -> &GroupMap {
-        &self.groups
+    /// Elastic constructor: writers ship per `topology` (shared with
+    /// the rebalancer and the Cloud-side [`crate::streamproc::ElasticReader`])
+    /// through `dialer`.  `cfg.endpoints` is ignored — the topology
+    /// owns endpoint addressing.
+    pub fn with_topology(
+        cfg: BrokerConfig,
+        topology: TopologyHandle,
+        dialer: Arc<dyn Dialer>,
+        metrics: WorkflowMetrics,
+    ) -> Broker {
+        Broker {
+            cfg,
+            topology,
+            dialer,
+            metrics,
+        }
+    }
+
+    /// The rank→group partition (a small copy; the assignment half of
+    /// the topology is versioned and lives behind [`Broker::topology`]).
+    pub fn groups(&self) -> GroupMap {
+        self.topology.snapshot().groups
+    }
+
+    /// The shared versioned topology this broker ships by.
+    pub fn topology(&self) -> &TopologyHandle {
+        &self.topology
     }
 
     /// `broker_init`: register `field` for `rank`, connect to the
@@ -126,23 +180,29 @@ impl Broker {
     /// strided or magnitude-aggregated view of one field while another
     /// ships raw).
     pub fn init_filtered(&self, field: &str, rank: u32, filter: Filter) -> Result<BrokerCtx> {
-        let endpoint_idx = self.groups.endpoint_of_rank(rank as usize)?;
-        let addr = self.cfg.endpoints[endpoint_idx];
+        // Validate the rank synchronously (the paper API returns the
+        // error from broker_init, not from a later write).
+        let group = self.topology.snapshot().groups.group_of_rank(rank as usize)?;
         let queue = Arc::new(BoundedQueue::new(self.cfg.queue_cap, self.cfg.policy));
         let key = crate::record::stream_key(field, rank);
-        let conn_cfg = self.cfg.conn.clone();
         let batching = BatchTuning {
             max_records: self.cfg.batch_max_records.max(1),
             max_bytes: self.cfg.batch_max_bytes,
             linger: Duration::from_millis(self.cfg.linger_ms),
         };
         let metrics = self.metrics.clone();
+        let topology = self.topology.clone();
+        let dialer = self.dialer.clone();
+        let max_recover = self.cfg.conn.max_retries.max(1);
         let wq = queue.clone();
         let wkey = key.clone();
         let writer = std::thread::Builder::new()
             .name(format!("broker-writer-{key}"))
             .spawn(move || {
-                let res = writer_loop(addr, conn_cfg, batching, &wq, wkey, metrics);
+                let res = Shipper::register(
+                    wkey, group, topology, dialer, metrics.clone(), max_recover,
+                )
+                .and_then(|mut shipper| writer_loop(&mut shipper, batching, &wq, metrics));
                 if res.is_err() {
                     // A dead writer must never leave the producer blocked
                     // on a full queue: close it so pushes become drops.
@@ -150,7 +210,7 @@ impl Broker {
                 }
                 res
             })?;
-        log::debug!("broker: rank {rank} field '{field}' registered with endpoint {addr}");
+        log::debug!("broker: rank {rank} field '{field}' registered (group {group})");
         Ok(BrokerCtx {
             field: field.to_string(),
             rank,
@@ -239,122 +299,33 @@ struct BatchTuning {
     linger: Duration,
 }
 
-/// Background writer: drain coalesced batches, serialize, ship each
-/// batch as one pipelined `XADD` frame.
-///
-/// An `OOM` reply (endpoint over its memory budget) is retried with
-/// backoff — that is exactly how backpressure propagates upstream: the
-/// writer stalls, the bounded queue fills, and `broker_write` blocks
-/// (Block) or sheds old snapshots (DropOldest).  Within a batch only
-/// the records that actually got `OOM` are retried, preserving their
-/// relative order and appending each record exactly once.  One caveat:
-/// if endpoint memory frees *mid-frame* (a concurrent `DEL`/trim from
-/// another connection), a later record of the same batch can succeed
-/// while an earlier one OOMs, and the retried record then lands after
-/// it — server-assigned ids cannot be backdated, so that inversion is
-/// unrepairable client-side.  It is detected and logged; the analysis
-/// layer's stale-step filter skips the late record (it stays readable
-/// in the store via XRANGE).  Retrying is bounded so a permanently
-/// wedged endpoint surfaces as an error, not a livelock.
+/// Background writer: drain coalesced batches and hand each one to the
+/// epoch-fenced [`Shipper`] (one pipelined `XADDF` frame per batch,
+/// plus the whole elastic protocol — migration at batch boundaries,
+/// `HELLO` re-registration after transport failures, `STALE` fencing,
+/// partial `OOM` retry that preserves stream order; see
+/// [`shipper`]'s module docs).  Per-endpoint QoS (flush latency, peak
+/// queue depth) is recorded against the endpoint each batch actually
+/// shipped to, which is what feeds the [`Rebalancer`].
 fn writer_loop(
-    addr: SocketAddr,
-    conn_cfg: ConnConfig,
+    shipper: &mut Shipper,
     batching: BatchTuning,
     queue: &BoundedQueue<StreamRecord>,
-    key: String,
     metrics: WorkflowMetrics,
 ) -> Result<()> {
-    const OOM_RETRY_EVERY: Duration = Duration::from_millis(25);
-    const OOM_RETRY_LIMIT: u32 = 1200; // 30 s of patience
-
-    let mut conn = RespConn::connect(addr, conn_cfg)?;
     while let Some(records) = queue.drain_batch(
         batching.max_records,
         batching.max_bytes,
         batching.linger,
         StreamRecord::encoded_len,
     ) {
-        let mut reqs: Vec<Request> = Vec::with_capacity(records.len());
-        let mut lens: Vec<usize> = Vec::with_capacity(records.len());
-        for record in &records {
-            let payload = record.encode();
-            lens.push(payload.len());
-            reqs.push(
-                Request::new("XADD")
-                    .arg(key.as_bytes())
-                    .arg("*")
-                    .arg("r")
-                    .arg(payload),
-            );
-        }
-        metrics.batch_records.record(reqs.len() as u64);
+        metrics.batch_records.record(records.len() as u64);
+        shipper.qos().queue_depth.set_max(queue.len() as u64);
         let t0 = Instant::now();
-        let mut oom_attempts = 0u32;
-        while !reqs.is_empty() {
-            // While backing off from OOM, probe with a single record
-            // instead of re-pipelining the whole doomed batch: on a
-            // wedged endpoint this costs one record per 25 ms tick
-            // (the pre-batching behaviour) rather than burning the
-            // possibly-throttled WAN link on megabytes of retries.
-            // Once the probe lands, the remainder ships as a batch.
-            let send = if oom_attempts == 0 { reqs.len() } else { 1 };
-            let replies = conn.pipeline(&reqs[..send])?;
-            let mut failed = vec![false; send];
-            let mut n_failed = 0usize;
-            let mut ok_after_failure = false;
-            for (i, reply) in replies.iter().enumerate() {
-                if reply.is_error() {
-                    let msg = reply.as_str_lossy();
-                    anyhow::ensure!(msg.starts_with("OOM"), "endpoint rejected XADD: {msg}");
-                    failed[i] = true;
-                    n_failed += 1;
-                } else {
-                    ok_after_failure |= n_failed > 0;
-                    metrics.shipped.record(lens[i] as u64);
-                }
-            }
-            if ok_after_failure {
-                // Endpoint memory freed mid-frame: a later record landed
-                // ahead of an OOM'd one.  The retry re-ships the OOM'd
-                // records, but their ids will postdate it (see the
-                // ordering caveat in the function docs).
-                log::warn!(
-                    "broker: stream {key}: record landed ahead of an OOM'd \
-                     predecessor; retried records will arrive out of order"
-                );
-            }
-            if n_failed > 0 {
-                oom_attempts += 1;
-                anyhow::ensure!(
-                    oom_attempts <= OOM_RETRY_LIMIT,
-                    "endpoint {addr} OOM for more than {:?} without progress",
-                    OOM_RETRY_EVERY * OOM_RETRY_LIMIT
-                );
-                if oom_attempts == 1 {
-                    log::warn!(
-                        "broker: endpoint {addr} OOM on {n_failed}/{send} records; backing off"
-                    );
-                }
-                std::thread::sleep(OOM_RETRY_EVERY);
-            } else {
-                oom_attempts = 0; // progress: next attempt batches again
-            }
-            // Keep this attempt's rejected records (in order) plus the
-            // not-yet-attempted tail.
-            let mut i = 0;
-            reqs.retain(|_| {
-                let keep = i >= send || failed[i];
-                i += 1;
-                keep
-            });
-            let mut i = 0;
-            lens.retain(|_| {
-                let keep = i >= send || failed[i];
-                i += 1;
-                keep
-            });
-        }
-        metrics.flush_us.record(t0.elapsed().as_micros() as u64);
+        shipper.ship(&records)?;
+        let us = t0.elapsed().as_micros() as u64;
+        metrics.flush_us.record(us);
+        shipper.qos().flush_us.record(us);
     }
     Ok(())
 }
@@ -552,6 +523,227 @@ mod tests {
     fn rank_out_of_range_rejected() {
         let (_srv, broker) = setup();
         assert!(broker.init("u", 99).is_err());
+    }
+
+    // --- ISSUE 3 fault-injection regressions: deterministic, no
+    // --- sleeps, no real sockets (everything runs on SimConn).
+
+    fn sim_records(rank: u32, steps: std::ops::Range<u64>) -> Vec<StreamRecord> {
+        steps
+            .map(|s| {
+                StreamRecord::from_f32("u", rank, s, 0, &[2], &[s as f32, 1.0]).unwrap()
+            })
+            .collect()
+    }
+
+    fn sim_steps(store: &crate::endpoint::Store, key: &str) -> Vec<u64> {
+        store
+            .read_after(key, crate::endpoint::EntryId::ZERO, 0)
+            .iter()
+            .filter(|e| e.fields[0].0 != b"h")
+            .map(|e| StreamRecord::decode(&e.fields[0].1).unwrap().step)
+            .collect()
+    }
+
+    fn dummy_addrs(n: usize) -> Vec<SocketAddr> {
+        (0..n).map(|_| "127.0.0.1:1".parse().unwrap()).collect()
+    }
+
+    /// The writer survives endpoint death mid-batch: the frame is cut
+    /// after a prefix landed (no replies seen), reconnects are refused
+    /// twice, and the re-shipped frame is deduplicated server-side —
+    /// stream order preserved, every record exactly once.
+    #[test]
+    fn shipper_survives_endpoint_death_mid_batch() {
+        use crate::transport::sim::{FaultSchedule, SimDialer, SimNet};
+
+        let net = SimNet::new();
+        let e0 = net.add_endpoint(StoreConfig::default());
+        let topology = TopologyHandle::new_static(
+            GroupMap::new(1, 1, 1).unwrap(),
+            dummy_addrs(1),
+        )
+        .unwrap();
+        let metrics = WorkflowMetrics::new();
+        let dialer: Arc<dyn Dialer> = Arc::new(SimDialer::new(net.clone()));
+        let mut shipper = Shipper::register(
+            "u/0".into(),
+            0,
+            topology,
+            dialer,
+            metrics.clone(),
+            8,
+        )
+        .unwrap();
+        net.inject(
+            e0,
+            FaultSchedule {
+                drop_after_frames: Some(0), // the batch frame dies
+                partial_commands: 2,        // ...with 2 of 5 records landed
+                refuse_connects: 2,         // ...and the endpoint down a while
+                ..Default::default()
+            },
+        );
+        shipper.ship(&sim_records(0, 0..5)).unwrap();
+        let store = net.store(e0);
+        assert_eq!(sim_steps(&store, "u/0"), vec![0, 1, 2, 3, 4]);
+        assert_eq!(store.xlen("u/0"), 5, "no duplicates stored");
+        assert!(metrics.reconnects.get() >= 3, "2 refused + 1 success");
+        assert_eq!(metrics.migrations.get(), 0);
+        assert_eq!(metrics.stale_rejections.get(), 0);
+        assert_eq!(metrics.shipped.records(), 5);
+    }
+
+    /// A writer that raced a migration writes at its old epoch, is
+    /// rejected `STALE`, re-registers on the new endpoint at the new
+    /// epoch and re-ships — no loss, no duplication, and the old
+    /// endpoint's segment ends with handoff tombstones.
+    #[test]
+    fn stale_writer_after_migration_re_registers_without_loss() {
+        use crate::transport::sim::{FaultSchedule, SimDialer, SimNet};
+
+        let net = SimNet::new();
+        let e0 = net.add_endpoint(StoreConfig::default());
+        let e1 = net.add_endpoint(StoreConfig::default());
+        let topology = TopologyHandle::new_static(
+            GroupMap::new(1, 1, 2).unwrap(),
+            dummy_addrs(2),
+        )
+        .unwrap();
+        let metrics = WorkflowMetrics::new();
+        let dialer: Arc<dyn Dialer> = Arc::new(SimDialer::new(net.clone()));
+        let mut shipper = Shipper::register(
+            "u/0".into(),
+            0,
+            topology.clone(),
+            dialer,
+            metrics.clone(),
+            8,
+        )
+        .unwrap();
+        shipper.ship(&sim_records(0, 0..3)).unwrap();
+        assert_eq!(shipper.endpoint(), 0);
+
+        // Script the takeover to happen exactly while the next frame is
+        // in flight (after the shipper's topology check, before the
+        // endpoint applies the frame): an external controller fences
+        // the e0 stream and reassigns the group to e1.
+        let store0 = net.store(e0);
+        let topo = topology.clone();
+        net.inject(
+            e0,
+            FaultSchedule {
+                before_frame: Some(Box::new(move || {
+                    let next = topo.epoch() + 1;
+                    store0.xhandoff("u/0", next, Some(1)).unwrap();
+                    topo.assign(&[(0, 1)]).unwrap();
+                })),
+                ..Default::default()
+            },
+        );
+        shipper.ship(&sim_records(0, 3..8)).unwrap();
+
+        // every stale write was rejected, then re-shipped to e1
+        assert!(metrics.stale_rejections.get() >= 1);
+        assert_eq!(metrics.migrations.get(), 1);
+        assert_eq!(shipper.endpoint(), 1);
+        assert_eq!(shipper.epoch(), topology.epoch());
+        assert_eq!(sim_steps(&net.store(e0), "u/0"), vec![0, 1, 2]);
+        assert_eq!(sim_steps(&net.store(e1), "u/0"), vec![3, 4, 5, 6, 7]);
+        // the old segment is fenced and tombstoned for readers
+        assert!(net.store(e0).stream_epoch("u/0") >= 2);
+        let entries = net
+            .store(e0)
+            .read_after("u/0", crate::endpoint::EntryId::ZERO, 0);
+        assert_eq!(entries.last().unwrap().fields[0].0, b"h");
+    }
+
+    /// A zombie writer (stream fenced above it, topology with nothing
+    /// newer to offer) must fail hard instead of fighting the fence.
+    #[test]
+    fn zombie_writer_with_no_newer_topology_fails_hard() {
+        use crate::transport::sim::{SimDialer, SimNet};
+
+        let net = SimNet::new();
+        let e0 = net.add_endpoint(StoreConfig::default());
+        let topology = TopologyHandle::new_static(
+            GroupMap::new(1, 1, 1).unwrap(),
+            dummy_addrs(1),
+        )
+        .unwrap();
+        let metrics = WorkflowMetrics::new();
+        let dialer: Arc<dyn Dialer> = Arc::new(SimDialer::new(net.clone()));
+        let mut shipper = Shipper::register(
+            "u/0".into(),
+            0,
+            topology,
+            dialer,
+            metrics.clone(),
+            4,
+        )
+        .unwrap();
+        shipper.ship(&sim_records(0, 0..2)).unwrap();
+        // a successor fences the stream far above anything we know
+        net.store(e0).xhandoff("u/0", 99, None).unwrap();
+        let err = shipper.ship(&sim_records(0, 2..4)).unwrap_err();
+        assert!(err.to_string().contains("fenced above"), "{err}");
+        // nothing stale landed
+        assert_eq!(sim_steps(&net.store(e0), "u/0"), vec![0, 1]);
+    }
+
+    /// Batch-boundary migration (the graceful path): after a scale-out
+    /// reassigns the group, the next batch ships to the new endpoint,
+    /// with a tombstone closing the old segment.
+    #[test]
+    fn graceful_migration_at_batch_boundary() {
+        use crate::transport::sim::{SimDialer, SimNet};
+
+        let net = SimNet::new();
+        let e0 = net.add_endpoint(StoreConfig::default());
+        let topology = TopologyHandle::new_static(
+            GroupMap::new(2, 1, 1).unwrap(), // 2 groups on one endpoint
+            dummy_addrs(1),
+        )
+        .unwrap();
+        let metrics = WorkflowMetrics::new();
+        let dialer: Arc<dyn Dialer> = Arc::new(SimDialer::new(net.clone()));
+        let mut s0 = Shipper::register(
+            "u/0".into(), 0, topology.clone(), dialer.clone(), metrics.clone(), 4,
+        )
+        .unwrap();
+        let mut s1 = Shipper::register(
+            "u/1".into(), 1, topology.clone(), dialer, metrics.clone(), 4,
+        )
+        .unwrap();
+        s0.ship(&sim_records(0, 0..4)).unwrap();
+        s1.ship(&sim_records(1, 0..4)).unwrap();
+
+        // scale out: one group moves to the new endpoint
+        let e1 = net.add_endpoint(StoreConfig::default());
+        let (slot, _) = topology.scale_out("127.0.0.1:1".parse().unwrap()).unwrap();
+        assert_eq!(slot, e1);
+        s0.ship(&sim_records(0, 4..8)).unwrap();
+        s1.ship(&sim_records(1, 4..8)).unwrap();
+
+        assert_eq!(metrics.migrations.get(), 1, "exactly one group moved");
+        assert_eq!(metrics.handoffs.get(), 1);
+        // the moved stream: old segment 0..4 + tombstone, new segment 4..8
+        let moved = topology.snapshot().groups_of_endpoint(e1);
+        assert_eq!(moved.len(), 1);
+        let key = format!("u/{}", moved[0]);
+        assert_eq!(
+            sim_steps(&net.store(e0), &key),
+            vec![0, 1, 2, 3],
+            "{key} old segment"
+        );
+        assert_eq!(
+            sim_steps(&net.store(e1), &key),
+            vec![4, 5, 6, 7],
+            "{key} new segment"
+        );
+        // the unmoved stream never left e0
+        let stayed = if moved[0] == 0 { "u/1" } else { "u/0" };
+        assert_eq!(sim_steps(&net.store(e0), stayed).len(), 8);
     }
 
     #[test]

@@ -1,0 +1,398 @@
+//! QoS-driven topology rebalancing (the paper's §4 "high quality of
+//! service under varying load" behaviour, ISSUE 3).
+//!
+//! The broker writers already emit per-endpoint QoS into
+//! [`crate::metrics::QosBoard`]: batch flush latency, reconnect
+//! pressure and peak queue depth.  The [`Rebalancer`] samples that
+//! board on a fixed cadence and turns it into topology mutations:
+//!
+//! * an endpoint whose **reconnect pressure** crossed the threshold
+//!   since the last sweep is presumed dead and drained — all its
+//!   groups move to the least-loaded survivors;
+//! * an endpoint whose **flush p95** or **peak queue depth** crossed a
+//!   threshold is saturated and sheds one group per sweep to the
+//!   least-loaded calm endpoint (one group at a time keeps the control
+//!   loop stable — no oscillation between two half-loaded endpoints).
+//!
+//! The decision function ([`evaluate`]) is pure — `(topology, samples,
+//! thresholds) → plan` — so tests drive it with synthetic QoS
+//! deterministically; the sampling thread is just a thin shell around
+//! it.  Every applied plan bumps the topology epoch, which is what the
+//! writers ([`super::Shipper`]) and readers
+//! ([`crate::streamproc::ElasticReader`]) key their migrations off.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::topology::{Topology, TopologyHandle};
+use crate::metrics::WorkflowMetrics;
+
+/// When QoS signals trigger action.  A threshold of 0 disables that
+/// signal.
+#[derive(Clone, Debug)]
+pub struct QosThresholds {
+    /// Flush p95 (µs, over the last sweep's samples) above which an
+    /// endpoint is saturated.
+    pub flush_p95_us: u64,
+    /// Peak writer-queue depth at/above which an endpoint is saturated.
+    pub queue_depth: u64,
+    /// Reconnect attempts per sweep at/above which an endpoint is dead.
+    pub reconnects: u64,
+}
+
+impl Default for QosThresholds {
+    fn default() -> Self {
+        QosThresholds {
+            flush_p95_us: 250_000,
+            queue_depth: 48,
+            reconnects: 3,
+        }
+    }
+}
+
+/// One endpoint's QoS over the last sweep.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EndpointSample {
+    pub flush_p95_us: u64,
+    pub queue_depth: u64,
+    /// Reconnect attempts since the previous sweep.
+    pub reconnect_delta: u64,
+}
+
+/// What a sweep decided.  Empty plan = topology untouched.
+#[derive(Clone, Debug, Default)]
+pub struct MigrationPlan {
+    /// Endpoints presumed dead: drain (mark not-live, move all groups).
+    pub drain: Vec<usize>,
+    /// Load-shedding moves: `(group, target endpoint)`.
+    pub moves: Vec<(usize, usize)>,
+}
+
+impl MigrationPlan {
+    pub fn is_empty(&self) -> bool {
+        self.drain.is_empty() && self.moves.is_empty()
+    }
+}
+
+/// Pure decision function: map per-endpoint QoS onto a migration plan.
+/// `samples[e]` describes endpoint slot `e`; missing slots read as
+/// quiet.  Deterministic (lowest indices win ties).
+pub fn evaluate(
+    topo: &Topology,
+    samples: &[EndpointSample],
+    thr: &QosThresholds,
+) -> MigrationPlan {
+    let mut plan = MigrationPlan::default();
+    let quiet = EndpointSample::default();
+    let sample = |e: usize| samples.get(e).copied().unwrap_or(quiet);
+
+    let live = topo.live_endpoints();
+    // Dead endpoints first: reconnect pressure says nobody can ship.
+    for &e in &live {
+        if thr.reconnects > 0 && sample(e).reconnect_delta >= thr.reconnects {
+            plan.drain.push(e);
+        }
+    }
+    // Survivors that are merely saturated shed one group per sweep.
+    let healthy: Vec<usize> = live
+        .iter()
+        .copied()
+        .filter(|e| !plan.drain.contains(e))
+        .collect();
+    if healthy.len() < 2 {
+        return plan; // nowhere to shed to
+    }
+    let pressured = |e: usize| -> bool {
+        let s = sample(e);
+        (thr.flush_p95_us > 0 && s.flush_p95_us > thr.flush_p95_us)
+            || (thr.queue_depth > 0 && s.queue_depth >= thr.queue_depth)
+    };
+    for &e in &healthy {
+        if !pressured(e) {
+            continue;
+        }
+        let my_groups = topo.groups_of_endpoint(e);
+        if my_groups.is_empty() {
+            continue;
+        }
+        // Least-loaded calm endpoint strictly below our load.
+        let target = healthy
+            .iter()
+            .copied()
+            .filter(|&t| t != e && !pressured(t))
+            .min_by_key(|&t| (topo.groups_of_endpoint(t).len(), t));
+        if let Some(t) = target {
+            if topo.groups_of_endpoint(t).len() < my_groups.len() {
+                plan.moves.push((my_groups[0], t));
+            }
+        }
+    }
+    plan
+}
+
+/// Apply a plan to the live topology.  Returns the new epoch if
+/// anything changed.  Drains that would remove the last live endpoint
+/// are skipped with a warning (better a degraded endpoint than none).
+pub fn apply(plan: &MigrationPlan, handle: &TopologyHandle) -> Result<Option<u64>> {
+    if plan.is_empty() {
+        return Ok(None);
+    }
+    let mut epoch = None;
+    for &e in &plan.drain {
+        match handle.drain_endpoint(e) {
+            Ok(ep) => epoch = Some(ep),
+            Err(err) => log::warn!("rebalancer: cannot drain endpoint {e}: {err:#}"),
+        }
+    }
+    // Moves targeting an endpoint a drain just killed are recomputed
+    // next sweep; only apply the ones that still make sense.
+    let topo = handle.snapshot();
+    let moves: Vec<(usize, usize)> = plan
+        .moves
+        .iter()
+        .copied()
+        .filter(|&(g, t)| {
+            g < topo.assignment.len()
+                && t < topo.endpoints.len()
+                && topo.endpoints[t].live
+                && topo.assignment[g] != t
+        })
+        .collect();
+    if !moves.is_empty() {
+        epoch = Some(handle.assign(&moves)?);
+    }
+    Ok(epoch)
+}
+
+/// The sampling thread: QoS board → [`evaluate`] → [`apply`], every
+/// `interval`.  Stop with [`Rebalancer::stop`] (or drop).
+pub struct Rebalancer {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Rebalancer {
+    pub fn start(
+        topology: TopologyHandle,
+        metrics: WorkflowMetrics,
+        thresholds: QosThresholds,
+        interval: Duration,
+    ) -> Rebalancer {
+        let stop = Arc::new(AtomicBool::new(false));
+        let t_stop = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("rebalancer".into())
+            .spawn(move || {
+                let mut last_reconnects: Vec<u64> = Vec::new();
+                // Per-endpoint histogram snapshots: every QoS signal is
+                // windowed to the sweep (deltas / take), so a slow or
+                // flaky *spell* decays instead of branding an endpoint
+                // saturated for the rest of the run.
+                let mut flush_windows: Vec<Vec<u64>> = Vec::new();
+                while !t_stop.load(Ordering::SeqCst) {
+                    let topo = topology.snapshot();
+                    let n = topo.endpoints.len();
+                    last_reconnects.resize(n, 0);
+                    flush_windows.resize_with(n, Vec::new);
+                    let mut samples = Vec::with_capacity(n);
+                    for e in 0..n {
+                        let slot = metrics.qos.slot(e);
+                        let total = slot.reconnects.get();
+                        let delta = total.saturating_sub(last_reconnects[e]);
+                        last_reconnects[e] = total;
+                        samples.push(EndpointSample {
+                            flush_p95_us: slot
+                                .flush_us
+                                .windowed_quantile(&mut flush_windows[e], 0.95),
+                            queue_depth: slot.queue_depth.take(),
+                            reconnect_delta: delta,
+                        });
+                    }
+                    let plan = evaluate(&topo, &samples, &thresholds);
+                    if !plan.is_empty() {
+                        log::info!(
+                            "rebalancer: drain {:?}, moves {:?} (epoch {})",
+                            plan.drain,
+                            plan.moves,
+                            topo.epoch
+                        );
+                        if let Err(e) = apply(&plan, &topology) {
+                            log::warn!("rebalancer: apply failed: {e:#}");
+                        }
+                    }
+                    // Sleep in small slices so stop() returns promptly.
+                    let mut left = interval;
+                    while !left.is_zero() && !t_stop.load(Ordering::SeqCst) {
+                        let nap = left.min(Duration::from_millis(20));
+                        std::thread::sleep(nap);
+                        left -= nap;
+                    }
+                }
+            })
+            .expect("spawn rebalancer");
+        Rebalancer {
+            stop,
+            thread: Some(thread),
+        }
+    }
+
+    /// Stop the sweep loop and join the thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Rebalancer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::groups::GroupMap;
+
+    fn topo(ranks: usize, gsize: usize, n_eps: usize) -> TopologyHandle {
+        let groups = GroupMap::new(ranks, gsize, n_eps).unwrap();
+        let addrs = (0..n_eps)
+            .map(|i| format!("127.0.0.1:{}", 7200 + i).parse().unwrap())
+            .collect();
+        TopologyHandle::new_static(groups, addrs).unwrap()
+    }
+
+    #[test]
+    fn quiet_board_yields_empty_plan() {
+        let h = topo(64, 16, 2);
+        let plan = evaluate(&h.snapshot(), &[], &QosThresholds::default());
+        assert!(plan.is_empty());
+        assert_eq!(apply(&plan, &h).unwrap(), None);
+        assert_eq!(h.epoch(), 1);
+    }
+
+    #[test]
+    fn reconnect_pressure_drains_dead_endpoint() {
+        let h = topo(64, 16, 2); // groups 0,2 → e0; 1,3 → e1
+        let samples = vec![
+            EndpointSample::default(),
+            EndpointSample {
+                reconnect_delta: 5,
+                ..Default::default()
+            },
+        ];
+        let plan = evaluate(&h.snapshot(), &samples, &QosThresholds::default());
+        assert_eq!(plan.drain, vec![1]);
+        let epoch = apply(&plan, &h).unwrap().unwrap();
+        assert_eq!(epoch, 2);
+        let t = h.snapshot();
+        assert!(!t.endpoints[1].live);
+        assert_eq!(t.groups_of_endpoint(0).len(), 4);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn saturation_sheds_one_group_to_calm_endpoint() {
+        let h = topo(64, 16, 2);
+        let samples = vec![
+            EndpointSample {
+                flush_p95_us: 999_999,
+                ..Default::default()
+            },
+            EndpointSample::default(),
+        ];
+        let thr = QosThresholds::default();
+        let plan = evaluate(&h.snapshot(), &samples, &thr);
+        // e0 and e1 both hold 2 groups: no strictly-less target → no move
+        assert!(plan.is_empty());
+        // skew load: everything on e0, then saturation sheds one group
+        h.assign(&[(1, 0), (3, 0)]).unwrap();
+        let plan = evaluate(&h.snapshot(), &samples, &thr);
+        assert_eq!(plan.moves, vec![(0, 1)]);
+        apply(&plan, &h).unwrap().unwrap();
+        let t = h.snapshot();
+        assert_eq!(t.groups_of_endpoint(1), vec![0]);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn queue_depth_also_counts_as_saturation() {
+        let h = topo(48, 16, 3);
+        h.assign(&[(1, 0), (2, 0)]).unwrap(); // all 3 groups on e0
+        let samples = vec![EndpointSample {
+            queue_depth: 64,
+            ..Default::default()
+        }];
+        let plan = evaluate(&h.snapshot(), &samples, &QosThresholds::default());
+        assert_eq!(plan.moves.len(), 1);
+        let (_, target) = plan.moves[0];
+        assert!(target == 1 || target == 2);
+    }
+
+    #[test]
+    fn never_drains_the_last_live_endpoint() {
+        let h = topo(16, 16, 1);
+        let samples = vec![EndpointSample {
+            reconnect_delta: 99,
+            ..Default::default()
+        }];
+        let plan = evaluate(&h.snapshot(), &samples, &QosThresholds::default());
+        assert_eq!(plan.drain, vec![0]);
+        // apply refuses (skips) and leaves the topology valid
+        assert_eq!(apply(&plan, &h).unwrap(), None);
+        let t = h.snapshot();
+        assert!(t.endpoints[0].live);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn zero_thresholds_disable_signals() {
+        let h = topo(64, 16, 2);
+        h.assign(&[(1, 0), (3, 0)]).unwrap();
+        let thr = QosThresholds {
+            flush_p95_us: 0,
+            queue_depth: 0,
+            reconnects: 0,
+        };
+        let samples = vec![
+            EndpointSample {
+                flush_p95_us: u64::MAX,
+                queue_depth: u64::MAX,
+                reconnect_delta: u64::MAX,
+            },
+            EndpointSample::default(),
+        ];
+        assert!(evaluate(&h.snapshot(), &samples, &thr).is_empty());
+    }
+
+    #[test]
+    fn sampling_thread_reacts_to_injected_reconnect_pressure() {
+        let h = topo(64, 16, 2);
+        let metrics = WorkflowMetrics::new();
+        let reb = Rebalancer::start(
+            h.clone(),
+            metrics.clone(),
+            QosThresholds::default(),
+            Duration::from_millis(10),
+        );
+        // simulate writers failing against endpoint 1
+        metrics.qos.slot(1).reconnects.add(10);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while h.epoch() == 1 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        reb.stop();
+        let t = h.snapshot();
+        assert!(!t.endpoints[1].live, "endpoint 1 not drained");
+        t.validate().unwrap();
+    }
+}

@@ -1,0 +1,422 @@
+//! Versioned group→endpoint topology — the substrate of the paper's
+//! *elastic* claim (ISSUE 3 tentpole).
+//!
+//! [`GroupMap`] stays what it always was: the immutable partition of
+//! ranks into process groups.  What used to be hard-wired on top of it
+//! (group *g* → endpoint *g mod n*, fixed at `Broker::init`) is now a
+//! [`Topology`]: an **epoch-numbered** assignment of groups to endpoint
+//! slots, where slots can be added (scale-out), drained (scale-in) or
+//! marked dead (failure), and every assignment change bumps the epoch.
+//!
+//! The epoch is the fencing token of the whole migration protocol:
+//! writers register streams with `HELLO <key> <epoch>`, endpoints
+//! reject writes below the stream's fence (`STALE`), and handoff
+//! tombstones carry the epoch the stream moved at — so two writers
+//! racing a migration can never interleave appends, and a reader can
+//! follow a stream across endpoints without loss or duplication.
+//!
+//! [`TopologyHandle`] is the shared, cheaply-pollable view: writers
+//! check `epoch()` (one atomic load) at every batch boundary and only
+//! take the read lock when it moved.
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{ensure, Result};
+
+use super::groups::GroupMap;
+
+/// One endpoint slot.  Slot indices are stable for the topology's
+/// lifetime (a removed endpoint keeps its index, marked not-live), so
+/// writers, dialers and QoS boards can key everything by slot.
+#[derive(Clone, Debug)]
+pub struct EndpointSlot {
+    pub addr: SocketAddr,
+    pub live: bool,
+}
+
+/// An epoch-numbered group→endpoint assignment.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// Monotonic version; bumped by every assignment change.  Starts
+    /// at 1 (0 means "never registered" on the endpoint side).
+    pub epoch: u64,
+    /// The immutable rank→group partition.
+    pub groups: GroupMap,
+    /// `assignment[g]` = endpoint slot group `g` writes to.
+    pub assignment: Vec<usize>,
+    /// Endpoint slots (stable indices; `live` toggles).
+    pub endpoints: Vec<EndpointSlot>,
+}
+
+impl Topology {
+    /// The static topology every pre-elastic run used: group `g` on
+    /// endpoint `g % n`, all endpoints live, epoch 1.
+    pub fn new_static(groups: GroupMap, addrs: Vec<SocketAddr>) -> Result<Topology> {
+        ensure!(!addrs.is_empty(), "need at least one endpoint");
+        let n = addrs.len();
+        let assignment = (0..groups.n_groups()).map(|g| g % n).collect();
+        let topo = Topology {
+            epoch: 1,
+            groups,
+            assignment,
+            endpoints: addrs
+                .into_iter()
+                .map(|addr| EndpointSlot { addr, live: true })
+                .collect(),
+        };
+        topo.validate()?;
+        Ok(topo)
+    }
+
+    /// Endpoint slot a group currently writes to.
+    pub fn endpoint_of_group(&self, group: usize) -> Result<usize> {
+        ensure!(
+            group < self.assignment.len(),
+            "group {group} out of range 0..{}",
+            self.assignment.len()
+        );
+        Ok(self.assignment[group])
+    }
+
+    /// Endpoint slot a rank currently writes to.
+    pub fn endpoint_of_rank(&self, rank: usize) -> Result<usize> {
+        self.endpoint_of_group(self.groups.group_of_rank(rank)?)
+    }
+
+    /// Groups currently assigned to endpoint slot `e`.
+    pub fn groups_of_endpoint(&self, e: usize) -> Vec<usize> {
+        (0..self.assignment.len())
+            .filter(|&g| self.assignment[g] == e)
+            .collect()
+    }
+
+    /// Live endpoint slot indices.
+    pub fn live_endpoints(&self) -> Vec<usize> {
+        (0..self.endpoints.len())
+            .filter(|&e| self.endpoints[e].live)
+            .collect()
+    }
+
+    /// Stream keys endpoint `e` currently receives for `field`.
+    pub fn streams_of_endpoint(&self, e: usize, field: &str) -> Vec<String> {
+        (0..self.groups.total_ranks())
+            .filter(|&r| self.endpoint_of_rank(r).unwrap() == e)
+            .map(|r| crate::record::stream_key(field, r as u32))
+            .collect()
+    }
+
+    /// The core invariant: every group is assigned to exactly one
+    /// endpoint slot that exists and is live.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.assignment.len() == self.groups.n_groups(),
+            "assignment covers {} groups, topology has {}",
+            self.assignment.len(),
+            self.groups.n_groups()
+        );
+        for (g, &e) in self.assignment.iter().enumerate() {
+            ensure!(
+                e < self.endpoints.len(),
+                "group {g} assigned to missing endpoint {e}"
+            );
+            ensure!(
+                self.endpoints[e].live,
+                "group {g} assigned to dead endpoint {e}"
+            );
+        }
+        ensure!(
+            !self.live_endpoints().is_empty(),
+            "no live endpoints left"
+        );
+        Ok(())
+    }
+
+    /// Live endpoint with the fewest assigned groups, excluding `not`
+    /// (ties broken by lowest index — deterministic).
+    fn least_loaded_live(&self, not: Option<usize>) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None; // (load, idx)
+        for e in 0..self.endpoints.len() {
+            if !self.endpoints[e].live || Some(e) == not {
+                continue;
+            }
+            let load = self.groups_of_endpoint(e).len();
+            let better = match best {
+                None => true,
+                Some((bl, bi)) => load < bl || (load == bl && e < bi),
+            };
+            if better {
+                best = Some((load, e));
+            }
+        }
+        best.map(|(_, e)| e)
+    }
+}
+
+/// Shared, versioned view of the topology.
+///
+/// Cloning the handle shares the topology.  `epoch()` is one atomic
+/// load, so writers can poll for changes at every batch boundary for
+/// free; all mutating operations bump the epoch exactly once and keep
+/// the [`Topology::validate`] invariant.
+#[derive(Clone)]
+pub struct TopologyHandle {
+    inner: Arc<RwLock<Topology>>,
+    epoch: Arc<AtomicU64>,
+}
+
+impl TopologyHandle {
+    pub fn new(topology: Topology) -> TopologyHandle {
+        let epoch = Arc::new(AtomicU64::new(topology.epoch));
+        TopologyHandle {
+            inner: Arc::new(RwLock::new(topology)),
+            epoch,
+        }
+    }
+
+    /// Convenience: a static topology from a rank partition + addresses.
+    pub fn new_static(groups: GroupMap, addrs: Vec<SocketAddr>) -> Result<TopologyHandle> {
+        Ok(TopologyHandle::new(Topology::new_static(groups, addrs)?))
+    }
+
+    /// Current epoch (one atomic load; no lock).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// A consistent copy of the whole topology.
+    pub fn snapshot(&self) -> Topology {
+        self.inner.read().unwrap().clone()
+    }
+
+    /// Where a group writes right now: `(endpoint slot, epoch)`.
+    pub fn route(&self, group: usize) -> Result<(usize, u64)> {
+        let t = self.inner.read().unwrap();
+        Ok((t.endpoint_of_group(group)?, t.epoch))
+    }
+
+    /// Address of an endpoint slot (the TCP dialer's resolver).
+    pub fn endpoint_addr(&self, e: usize) -> Result<SocketAddr> {
+        let t = self.inner.read().unwrap();
+        ensure!(e < t.endpoints.len(), "no endpoint slot {e}");
+        Ok(t.endpoints[e].addr)
+    }
+
+    fn mutate<R>(&self, f: impl FnOnce(&mut Topology) -> Result<R>) -> Result<R> {
+        let mut t = self.inner.write().unwrap();
+        let before = t.clone();
+        match f(&mut t).and_then(|r| t.validate().map(|_| r)) {
+            Ok(r) => {
+                t.epoch += 1;
+                self.epoch.store(t.epoch, Ordering::Release);
+                Ok(r)
+            }
+            Err(e) => {
+                *t = before; // roll back a rejected mutation wholesale
+                Err(e)
+            }
+        }
+    }
+
+    /// Add an endpoint slot without moving any group onto it yet.
+    /// Bumps the epoch (the slot becomes routable for future moves).
+    pub fn add_endpoint(&self, addr: SocketAddr) -> Result<usize> {
+        self.mutate(|t| {
+            t.endpoints.push(EndpointSlot { addr, live: true });
+            Ok(t.endpoints.len() - 1)
+        })
+    }
+
+    /// Move specific groups: `moves` = `(group, target endpoint)`.
+    /// Returns the new epoch.
+    pub fn assign(&self, moves: &[(usize, usize)]) -> Result<u64> {
+        self.mutate(|t| {
+            for &(g, e) in moves {
+                ensure!(g < t.assignment.len(), "no group {g}");
+                t.assignment[g] = e;
+            }
+            Ok(())
+        })?;
+        Ok(self.epoch())
+    }
+
+    /// Scale-out: add an endpoint and rebalance groups onto it so live
+    /// loads differ by at most one group (fewest moves, deterministic).
+    /// Returns `(new slot index, new epoch)`.
+    pub fn scale_out(&self, addr: SocketAddr) -> Result<(usize, u64)> {
+        let slot = self.mutate(|t| {
+            t.endpoints.push(EndpointSlot { addr, live: true });
+            let slot = t.endpoints.len() - 1;
+            rebalance_in_place(t);
+            Ok(slot)
+        })?;
+        Ok((slot, self.epoch()))
+    }
+
+    /// Scale-in / failure: mark a slot not-live and move its groups to
+    /// the least-loaded surviving endpoints.  The slot keeps its index;
+    /// its server (if still up) stays drainable by readers.  Returns
+    /// the new epoch.
+    pub fn drain_endpoint(&self, e: usize) -> Result<u64> {
+        self.mutate(|t| {
+            ensure!(e < t.endpoints.len(), "no endpoint slot {e}");
+            ensure!(t.endpoints[e].live, "endpoint {e} already drained");
+            t.endpoints[e].live = false;
+            for g in 0..t.assignment.len() {
+                if t.assignment[g] == e {
+                    let target = t
+                        .least_loaded_live(None)
+                        .ok_or_else(|| anyhow::anyhow!("no live endpoint to drain {e} into"))?;
+                    t.assignment[g] = target;
+                }
+            }
+            Ok(())
+        })?;
+        Ok(self.epoch())
+    }
+
+    /// Even out group load across live endpoints (at most one group of
+    /// spread).  Returns the new epoch if anything moved; a no-op
+    /// leaves the epoch untouched.
+    pub fn rebalance(&self) -> Result<Option<u64>> {
+        let mut t = self.inner.write().unwrap();
+        let before = t.clone();
+        if !rebalance_in_place(&mut t) {
+            return Ok(None);
+        }
+        if let Err(e) = t.validate() {
+            *t = before;
+            return Err(e);
+        }
+        t.epoch += 1;
+        self.epoch.store(t.epoch, Ordering::Release);
+        Ok(Some(t.epoch))
+    }
+}
+
+/// Move groups from the most- to the least-loaded live endpoint until
+/// the spread is ≤ 1.  Deterministic (lowest indices win ties); returns
+/// whether anything moved.
+fn rebalance_in_place(t: &mut Topology) -> bool {
+    let mut moved = false;
+    loop {
+        let live = t.live_endpoints();
+        if live.len() < 2 {
+            return moved;
+        }
+        let loads: Vec<(usize, usize)> = live
+            .iter()
+            .map(|&e| (e, t.groups_of_endpoint(e).len()))
+            .collect();
+        let &(min_e, min_l) = loads.iter().min_by_key(|&&(e, l)| (l, e)).unwrap();
+        let &(max_e, max_l) = loads.iter().max_by_key(|&&(e, l)| (l, usize::MAX - e)).unwrap();
+        if max_l - min_l <= 1 {
+            return moved;
+        }
+        // move the lowest-numbered group off the most-loaded endpoint
+        let g = t.groups_of_endpoint(max_e)[0];
+        t.assignment[g] = min_e;
+        moved = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    fn topo(ranks: usize, gsize: usize, n_eps: usize) -> TopologyHandle {
+        let groups = GroupMap::new(ranks, gsize, n_eps).unwrap();
+        let addrs = (0..n_eps).map(|i| addr(7000 + i as u16)).collect();
+        TopologyHandle::new_static(groups, addrs).unwrap()
+    }
+
+    #[test]
+    fn static_topology_matches_legacy_modulo_mapping() {
+        let h = topo(64, 16, 2);
+        let t = h.snapshot();
+        assert_eq!(t.epoch, 1);
+        for r in 0..64 {
+            let legacy = t.groups.endpoint_of_rank(r).unwrap();
+            assert_eq!(t.endpoint_of_rank(r).unwrap(), legacy);
+        }
+        assert_eq!(t.streams_of_endpoint(0, "u").len(), 32);
+        assert_eq!(t.streams_of_endpoint(1, "u").len(), 32);
+    }
+
+    #[test]
+    fn scale_out_rebalances_and_bumps_epoch_once() {
+        let h = topo(64, 16, 1); // 4 groups on 1 endpoint
+        let (slot, epoch) = h.scale_out(addr(7100)).unwrap();
+        assert_eq!(slot, 1);
+        assert_eq!(epoch, 2);
+        assert_eq!(h.epoch(), 2);
+        let t = h.snapshot();
+        assert_eq!(t.groups_of_endpoint(0).len(), 2);
+        assert_eq!(t.groups_of_endpoint(1).len(), 2);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn drain_moves_groups_to_survivors() {
+        let h = topo(64, 16, 2); // groups 0,2 → e0; 1,3 → e1
+        let epoch = h.drain_endpoint(1).unwrap();
+        assert_eq!(epoch, 2);
+        let t = h.snapshot();
+        assert!(!t.endpoints[1].live);
+        assert_eq!(t.groups_of_endpoint(0).len(), 4);
+        t.validate().unwrap();
+        // slot index stayed stable
+        assert_eq!(t.endpoints.len(), 2);
+    }
+
+    #[test]
+    fn draining_last_endpoint_rejected_and_rolled_back() {
+        let h = topo(16, 16, 1);
+        assert!(h.drain_endpoint(0).is_err());
+        // rolled back wholesale: still live, epoch unchanged
+        let t = h.snapshot();
+        assert!(t.endpoints[0].live);
+        assert_eq!(t.epoch, 1);
+        assert_eq!(h.epoch(), 1);
+    }
+
+    #[test]
+    fn assign_validates_target_liveness() {
+        let h = topo(32, 16, 2);
+        h.drain_endpoint(1).unwrap();
+        let err = h.assign(&[(0, 1)]).unwrap_err();
+        assert!(err.to_string().contains("dead endpoint"), "{err}");
+        // failed assign must not bump the epoch
+        assert_eq!(h.epoch(), 2);
+    }
+
+    #[test]
+    fn route_reports_current_slot_and_epoch() {
+        let h = topo(32, 16, 2);
+        assert_eq!(h.route(0).unwrap(), (0, 1));
+        assert_eq!(h.route(1).unwrap(), (1, 1));
+        let e = h.assign(&[(1, 0)]).unwrap();
+        assert_eq!(h.route(1).unwrap(), (0, e));
+        assert!(h.route(5).is_err());
+    }
+
+    #[test]
+    fn rebalance_is_idempotent_at_spread_one() {
+        let h = topo(48, 16, 3); // 3 groups, 3 endpoints, load 1 each
+        assert!(h.rebalance().unwrap().is_none());
+        // skew it: everything on endpoint 0
+        h.assign(&[(1, 0), (2, 0)]).unwrap();
+        let epoch = h.rebalance().unwrap().unwrap();
+        assert!(epoch > 1);
+        let t = h.snapshot();
+        for e in 0..3 {
+            assert_eq!(t.groups_of_endpoint(e).len(), 1, "endpoint {e}");
+        }
+        assert!(h.rebalance().unwrap().is_none());
+    }
+}

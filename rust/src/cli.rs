@@ -167,6 +167,18 @@ pub fn apply_overrides(
     if let Some(v) = args.get("analysis-csv") {
         cfg.analysis_csv = v.to_string();
     }
+    if let Some(v) = args.get_parsed::<u64>("rebalance-ms")? {
+        cfg.rebalance_ms = v;
+    }
+    if let Some(v) = args.get_parsed::<u64>("qos-flush-p95-us")? {
+        cfg.qos_flush_p95_us = v;
+    }
+    if let Some(v) = args.get_parsed::<u64>("qos-queue-depth")? {
+        cfg.qos_queue_depth = v;
+    }
+    if let Some(v) = args.get_parsed::<u64>("qos-reconnects")? {
+        cfg.qos_reconnects = v;
+    }
     Ok(())
 }
 
@@ -200,6 +212,10 @@ SUBCOMMANDS:
                 --batch-max-records N --batch-max-bytes B --linger-ms MS
   workflow    Run the whole paper workflow in one process
                 --config FILE (TOML)  plus any sim/analysis flag above
+                --rebalance-ms MS    QoS rebalancer sweep cadence
+                                     (0 = static topology, the default)
+                --qos-flush-p95-us N --qos-queue-depth N
+                --qos-reconnects N   saturation / death thresholds
 
 ENVIRONMENT:
   ELASTICBROKER_ARTIFACTS  artifact dir (default ./artifacts)
@@ -259,6 +275,10 @@ mod tests {
             "32",
             "--dmd-shards",
             "4",
+            "--rebalance-ms",
+            "250",
+            "--qos-queue-depth",
+            "32",
             "--no-pjrt",
         ]))
         .unwrap();
@@ -269,6 +289,8 @@ mod tests {
         assert_eq!(cfg.trigger_ms, 500);
         assert_eq!(cfg.dmd_gram_refresh, 32);
         assert_eq!(cfg.dmd_shards, 4);
+        assert_eq!(cfg.rebalance_ms, 250);
+        assert_eq!(cfg.qos_queue_depth, 32);
         assert!(!cfg.use_pjrt);
     }
 }

@@ -109,6 +109,20 @@ pub struct WorkflowConfig {
     pub dmd_shards: usize,
     /// CSV output path for analysis results ("" → none).
     pub analysis_csv: String,
+
+    // --- elasticity (ISSUE 3) ---
+    /// Rebalancer sweep cadence in ms (0 = elasticity disabled: static
+    /// topology, the pre-elastic behaviour).
+    pub rebalance_ms: u64,
+    /// QoS threshold: per-endpoint flush p95 (µs) above which the
+    /// endpoint is saturated and sheds a group (0 = signal disabled).
+    pub qos_flush_p95_us: u64,
+    /// QoS threshold: peak writer-queue depth at/above which an
+    /// endpoint is saturated (0 = signal disabled).
+    pub qos_queue_depth: u64,
+    /// QoS threshold: reconnect attempts per sweep at/above which an
+    /// endpoint is presumed dead and drained (0 = signal disabled).
+    pub qos_reconnects: u64,
 }
 
 impl Default for WorkflowConfig {
@@ -140,6 +154,10 @@ impl Default for WorkflowConfig {
             dmd_gram_refresh: 64,
             dmd_shards: 8,
             analysis_csv: String::new(),
+            rebalance_ms: 0,
+            qos_flush_p95_us: 250_000,
+            qos_queue_depth: 48,
+            qos_reconnects: 3,
         }
     }
 }
@@ -257,6 +275,18 @@ impl WorkflowConfig {
         if let Some(v) = map.get_str("cloud.analysis_csv")? {
             cfg.analysis_csv = v;
         }
+        if let Some(v) = map.get_u64("elastic.rebalance_ms")? {
+            cfg.rebalance_ms = v;
+        }
+        if let Some(v) = map.get_u64("elastic.qos_flush_p95_us")? {
+            cfg.qos_flush_p95_us = v;
+        }
+        if let Some(v) = map.get_u64("elastic.qos_queue_depth")? {
+            cfg.qos_queue_depth = v;
+        }
+        if let Some(v) = map.get_u64("elastic.qos_reconnects")? {
+            cfg.qos_reconnects = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -362,6 +392,24 @@ mod tests {
             0
         );
         assert!(WorkflowConfig::from_toml("[cloud]\ndmd_shards = 0\n").is_err());
+    }
+
+    #[test]
+    fn elastic_knobs_parse_with_defaults() {
+        let c = WorkflowConfig::default();
+        assert_eq!(c.rebalance_ms, 0, "elasticity off by default");
+        assert_eq!(c.qos_flush_p95_us, 250_000);
+        assert_eq!(c.qos_queue_depth, 48);
+        assert_eq!(c.qos_reconnects, 3);
+        let c = WorkflowConfig::from_toml(
+            "[elastic]\nrebalance_ms = 200\nqos_flush_p95_us = 50000\n\
+             qos_queue_depth = 16\nqos_reconnects = 5\n",
+        )
+        .unwrap();
+        assert_eq!(c.rebalance_ms, 200);
+        assert_eq!(c.qos_flush_p95_us, 50_000);
+        assert_eq!(c.qos_queue_depth, 16);
+        assert_eq!(c.qos_reconnects, 5);
     }
 
     #[test]

@@ -15,4 +15,4 @@ pub mod server;
 pub mod store;
 
 pub use server::EndpointServer;
-pub use store::{Entry, EntryId, Store, StoreConfig};
+pub use store::{Entry, EntryId, FencedAdd, HelloReply, Store, StoreConfig};

@@ -3,7 +3,16 @@
 //! Mirrors the Redis-5 subset the paper's deployment uses (stream
 //! ingest from the HPC brokers + polling reads from the stream
 //! processing service): `PING`, `ECHO`, `XADD`, `XLEN`, `XREAD`,
-//! `XRANGE`, `KEYS`, `DEL`, `FLUSHALL`, `INFO`, `QUIT`.
+//! `XRANGE`, `KEYS`, `DEL`, `FLUSHALL`, `INFO`, `QUIT` — plus the
+//! elasticity extensions (ISSUE 3): `HELLO key epoch` (epoch-fenced
+//! writer registration; replies `[last_id, last_step|nil, epoch]`),
+//! `XADDF key epoch step [FORCE] field value...` (fenced +
+//! step-deduplicated append; replies the new id, `+DUP` for an
+//! already-landed step, or a `STALE` error for a writer behind the
+//! stream's epoch; `FORCE` skips the dedupe for records the writer
+//! knows were explicitly rejected), `XHANDOFF key epoch [dest]`
+//! (migration tombstone, optionally naming the endpoint slot the
+//! stream moved to) and `XLASTSTEP key`.
 //!
 //! One OS thread per connection (the paper sizes one endpoint per 16
 //! writer processes, so connection counts are small); commands are
@@ -21,7 +30,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::store::{EntryId, Store, StoreConfig};
+use super::store::{EntryId, FencedAdd, Store, StoreConfig};
 use crate::wire::{self, Decoder, Value};
 
 /// A running endpoint server (shuts down on drop).
@@ -177,24 +186,40 @@ fn serve_connection(
 
 /// Execute one command; returns true if the connection should close.
 fn dispatch(store: &Store, cmd: &Value, out: &mut Vec<u8>) -> bool {
-    let reply = match run_command(store, cmd) {
-        Ok(CommandResult::Reply(v)) => v,
-        Ok(CommandResult::Quit) => {
-            wire::encode(&Value::Simple("OK".into()), out);
-            return true;
-        }
+    let (reply, quit) = execute(store, cmd);
+    if quit {
+        wire::encode(&Value::Simple("OK".into()), out);
+        return true;
+    }
+    wire::encode(&reply, out);
+    false
+}
+
+/// Execute one decoded command against a store, mapping errors to
+/// RESP error replies exactly like the TCP front-end does.  Public so
+/// the in-process sim transport ([`crate::transport::sim::SimConn`])
+/// exercises the *same* dispatcher as real connections — fault
+/// injection tests and production share one command semantics.
+///
+/// Returns `(reply, quit)`; on `quit` the reply is unset (`OK` is what
+/// the wire sends) and the connection should close.
+pub fn execute(store: &Store, cmd: &Value) -> (Value, bool) {
+    match run_command(store, cmd) {
+        Ok(CommandResult::Reply(v)) => (v, false),
+        Ok(CommandResult::Quit) => (Value::Simple("OK".into()), true),
         Err(e) => {
             let msg = e.to_string();
-            let msg = if msg.starts_with("ERR") || msg.starts_with("OOM") {
+            let msg = if msg.starts_with("ERR")
+                || msg.starts_with("OOM")
+                || msg.starts_with("STALE")
+            {
                 msg
             } else {
                 format!("ERR {msg}")
             };
-            Value::Error(msg)
+            (Value::Error(msg), false)
         }
-    };
-    wire::encode(&reply, out);
-    false
+    }
 }
 
 enum CommandResult {
@@ -275,6 +300,92 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
             }
             let id = store.xadd(&key, id, fields)?;
             Ok(Reply(Value::Bulk(id.to_string().into_bytes())))
+        }
+        b"HELLO" => {
+            anyhow::ensure!(args.len() == 2, "ERR wrong number of arguments for 'hello'");
+            let key = s(&args[0])?;
+            let epoch: u64 = s(&args[1])?
+                .parse()
+                .context("ERR value is not an integer")?;
+            let h = store.hello(&key, epoch)?;
+            Ok(Reply(Value::Array(vec![
+                Value::Bulk(h.last_id.to_string().into_bytes()),
+                match h.last_step {
+                    Some(st) => Value::Int(st as i64),
+                    None => Value::NullBulk,
+                },
+                Value::Int(h.epoch as i64),
+            ])))
+        }
+        b"XADDF" => {
+            // XADDF key epoch step [FORCE] field value [field value ...]
+            anyhow::ensure!(
+                args.len() >= 5,
+                "ERR wrong number of arguments for 'xaddf'"
+            );
+            let key = s(&args[0])?;
+            let epoch: u64 = s(&args[1])?
+                .parse()
+                .context("ERR value is not an integer")?;
+            let step: u64 = s(&args[2])?
+                .parse()
+                .context("ERR value is not an integer")?;
+            let mut rest = &args[3..];
+            let mut force = false;
+            if let Some(first) = rest.first() {
+                if first
+                    .as_bytes()
+                    .map(|b| b.eq_ignore_ascii_case(b"FORCE"))
+                    .unwrap_or(false)
+                {
+                    force = true;
+                    rest = &rest[1..];
+                }
+            }
+            anyhow::ensure!(
+                !rest.is_empty() && rest.len() % 2 == 0,
+                "ERR wrong number of arguments for 'xaddf'"
+            );
+            let mut fields = Vec::with_capacity(rest.len() / 2);
+            for pair in rest.chunks(2) {
+                fields.push((
+                    pair[0].as_bytes().context("ERR field name")?.to_vec(),
+                    pair[1].as_bytes().context("ERR field value")?.to_vec(),
+                ));
+            }
+            match store.xadd_fenced(&key, epoch, step, force, fields)? {
+                FencedAdd::Added(id) => {
+                    Ok(Reply(Value::Bulk(id.to_string().into_bytes())))
+                }
+                FencedAdd::Duplicate => Ok(Reply(Value::Simple("DUP".into()))),
+            }
+        }
+        b"XHANDOFF" => {
+            // XHANDOFF key epoch [dest]
+            anyhow::ensure!(
+                args.len() == 2 || args.len() == 3,
+                "ERR wrong number of arguments for 'xhandoff'"
+            );
+            let key = s(&args[0])?;
+            let epoch: u64 = s(&args[1])?
+                .parse()
+                .context("ERR value is not an integer")?;
+            let dest: Option<u64> = match args.get(2) {
+                Some(v) => Some(s(v)?.parse().context("ERR value is not an integer")?),
+                None => None,
+            };
+            let id = store.xhandoff(&key, epoch, dest)?;
+            Ok(Reply(Value::Bulk(id.to_string().into_bytes())))
+        }
+        b"XLASTSTEP" => {
+            anyhow::ensure!(
+                args.len() == 1,
+                "ERR wrong number of arguments for 'xlaststep'"
+            );
+            match store.fenced_last_step(&s(&args[0])?) {
+                Some(st) => Ok(Reply(Value::Int(st as i64))),
+                None => Ok(Reply(Value::NullBulk)),
+            }
         }
         b"XRANGE" => {
             anyhow::ensure!(args.len() >= 3, "ERR wrong number of arguments for 'xrange'");
@@ -585,6 +696,41 @@ mod tests {
             replies,
             vec![Value::Simple("PONG".into()), Value::Simple("OK".into())]
         );
+    }
+
+    #[test]
+    fn fenced_commands_over_the_wire() {
+        let srv = server();
+        let mut c = conn(&srv);
+        let h = c.request(&[b"HELLO", b"u/0", b"1"]).unwrap();
+        let parts = h.as_array().unwrap();
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[1], Value::NullBulk); // no fenced step yet
+        assert_eq!(parts[2], Value::Int(1));
+        let id = c
+            .request(&[b"XADDF", b"u/0", b"1", b"0", b"r", b"p0"])
+            .unwrap();
+        assert!(matches!(id, Value::Bulk(_)));
+        // same step re-shipped: deduplicated server-side
+        let dup = c
+            .request(&[b"XADDF", b"u/0", b"1", b"0", b"r", b"p0"])
+            .unwrap();
+        assert_eq!(dup, Value::Simple("DUP".into()));
+        assert_eq!(
+            c.request(&[b"XLASTSTEP", b"u/0"]).unwrap(),
+            Value::Int(0)
+        );
+        // handoff to epoch 2: the epoch-1 writer is now stale
+        c.request(&[b"XHANDOFF", b"u/0", b"2"]).unwrap();
+        let stale = c
+            .request(&[b"XADDF", b"u/0", b"1", b"1", b"r", b"p1"])
+            .unwrap();
+        assert!(stale.is_error());
+        assert!(stale.as_str_lossy().starts_with("STALE"), "{stale}");
+        // re-registration at the current epoch reports the resume point
+        let h2 = c.request(&[b"HELLO", b"u/0", b"2"]).unwrap();
+        assert_eq!(h2.as_array().unwrap()[1], Value::Int(0));
+        assert_eq!(c.request(&[b"XLEN", b"u/0"]).unwrap(), Value::Int(2));
     }
 
     #[test]

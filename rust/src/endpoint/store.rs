@@ -79,13 +79,70 @@ impl Entry {
 }
 
 /// A single append-only stream.
-#[derive(Default, Debug)]
+#[derive(Debug)]
 struct Stream {
     entries: VecDeque<Entry>,
     last_id: EntryId,
     bytes: usize,
     /// Total entries ever added (survives trims; used by INFO).
     added: u64,
+    /// Epoch fence: the topology epoch of the writer currently allowed
+    /// to append (0 = unfenced, plain `XADD` only).  `HELLO`/`XHANDOFF`
+    /// raise it; fenced writes (`XADDF`) below it are rejected with a
+    /// `STALE` error so a migrated-away (or zombie) writer can never
+    /// interleave with its successor.
+    writer_epoch: u64,
+    /// Highest simulation step landed through fenced writes
+    /// (`u64::MAX` = none yet).  `XADDF` at or below this is answered
+    /// `DUP` without storing — the server-side dedupe that keeps a
+    /// stream exactly-once when a writer re-ships an unacked frame
+    /// after a connection failure.
+    last_step: u64,
+}
+
+impl Default for Stream {
+    fn default() -> Self {
+        Stream {
+            entries: VecDeque::new(),
+            last_id: EntryId::ZERO,
+            bytes: 0,
+            added: 0,
+            writer_epoch: 0,
+            last_step: u64::MAX, // sentinel: no fenced write yet
+        }
+    }
+}
+
+impl Stream {
+    fn last_step(&self) -> Option<u64> {
+        if self.last_step == u64::MAX {
+            None
+        } else {
+            Some(self.last_step)
+        }
+    }
+}
+
+/// What [`Store::hello`] tells a (re-)registering writer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HelloReply {
+    /// Last assigned entry id (0-0 when the stream is empty).
+    pub last_id: EntryId,
+    /// Highest step landed through fenced writes, if any — the resume
+    /// point: everything at or below this is already durable here.
+    pub last_step: Option<u64>,
+    /// The epoch now fencing the stream (the caller's).
+    pub epoch: u64,
+}
+
+/// Outcome of a fenced append ([`Store::xadd_fenced`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FencedAdd {
+    /// Stored under this id.
+    Added(EntryId),
+    /// Step at or below the stream's high-water mark: already stored
+    /// by an earlier (possibly unacked) frame; nothing written.
+    Duplicate,
 }
 
 /// Store configuration.
@@ -170,6 +227,135 @@ impl Store {
 
     fn shard(&self, key: &str) -> &Shard {
         &self.shards[self.shard_of(key)]
+    }
+
+    /// Run `f` on the (created-if-missing) stream behind `key`, holding
+    /// its per-stream lock.
+    fn with_stream<R>(&self, key: &str, f: impl FnOnce(&Shard, &mut Stream) -> R) -> R {
+        let shard = self.shard(key);
+        {
+            let map = shard.streams.read().unwrap();
+            if let Some(stream) = map.get(key) {
+                let mut guard = stream.lock().unwrap();
+                return f(shard, &mut guard);
+            }
+        }
+        let mut map = shard.streams.write().unwrap();
+        let stream = map.entry(key.to_string()).or_default();
+        let mut guard = stream.lock().unwrap();
+        f(shard, &mut guard)
+    }
+
+    /// Writer (re-)registration with epoch fencing (`HELLO key epoch`).
+    ///
+    /// Raises the stream's fence to `epoch` and reports the resume
+    /// point (last id + last fenced step).  A caller whose epoch is
+    /// behind the fence — a writer that was migrated away and didn't
+    /// notice yet — is rejected with a `STALE` error and must re-read
+    /// the topology before trying again.
+    pub fn hello(&self, key: &str, epoch: u64) -> Result<HelloReply> {
+        self.with_stream(key, |_, s| {
+            if epoch < s.writer_epoch {
+                bail!(
+                    "STALE epoch {epoch} behind stream epoch {}",
+                    s.writer_epoch
+                );
+            }
+            s.writer_epoch = epoch;
+            Ok(HelloReply {
+                last_id: s.last_id,
+                last_step: s.last_step(),
+                epoch,
+            })
+        })
+    }
+
+    /// Epoch-fenced, step-deduplicated append (`XADDF`) — the elastic
+    /// broker's write primitive.
+    ///
+    /// * `epoch < fence` → `STALE` error (a migrated-away writer can
+    ///   never interleave with its successor);
+    /// * `step ≤ high-water` and not `force` → [`FencedAdd::Duplicate`],
+    ///   nothing stored (a writer re-shipping an *unacked* frame after
+    ///   a connection failure cannot double-store a record);
+    /// * `force` skips the dedupe: the writer affirmatively knows the
+    ///   record was rejected (an explicit `OOM` reply) even though a
+    ///   later step of the same frame landed, so the watermark lies —
+    ///   the record is appended late (out of step order, like the
+    ///   pre-elastic OOM-inversion behaviour; readers' step dedupe
+    ///   skips it at delivery, it stays readable via `XRANGE`);
+    /// * otherwise append with an auto id, like `XADD key *`.
+    pub fn xadd_fenced(
+        &self,
+        key: &str,
+        epoch: u64,
+        step: u64,
+        force: bool,
+        fields: Vec<(Vec<u8>, Vec<u8>)>,
+    ) -> Result<FencedAdd> {
+        self.with_stream(key, |shard, s| {
+            if epoch < s.writer_epoch {
+                bail!(
+                    "STALE epoch {epoch} behind stream epoch {}",
+                    s.writer_epoch
+                );
+            }
+            s.writer_epoch = epoch;
+            if !force && s.last_step != u64::MAX && step <= s.last_step {
+                return Ok(FencedAdd::Duplicate);
+            }
+            if self.cfg.max_memory > 0
+                && self.total_bytes.load(Ordering::Relaxed) as usize >= self.cfg.max_memory
+            {
+                bail!("OOM command not allowed when used memory > 'maxmemory'");
+            }
+            let id = self.append(shard, s, None, fields)?;
+            if s.last_step == u64::MAX || step > s.last_step {
+                s.last_step = step;
+            }
+            Ok(FencedAdd::Added(id))
+        })
+    }
+
+    /// Append a handoff tombstone (`XHANDOFF key epoch [dest]`): marks
+    /// this endpoint's segment of the stream as finished and raises the
+    /// fence to `epoch`, so readers know to follow the stream onward
+    /// (to `dest`, the endpoint slot the writer migrated to, when
+    /// given; readers fall back to the live topology otherwise) and any
+    /// write still in flight from the departing epoch is rejected as
+    /// stale.  Bypasses the memory budget — the tombstone is the
+    /// migration signal and must land even under OOM backpressure.
+    pub fn xhandoff(&self, key: &str, epoch: u64, dest: Option<u64>) -> Result<EntryId> {
+        self.with_stream(key, |shard, s| {
+            if epoch < s.writer_epoch {
+                bail!(
+                    "STALE epoch {epoch} behind stream epoch {}",
+                    s.writer_epoch
+                );
+            }
+            s.writer_epoch = epoch;
+            let mut fields = vec![(b"h".to_vec(), epoch.to_string().into_bytes())];
+            if let Some(d) = dest {
+                fields.push((b"d".to_vec(), d.to_string().into_bytes()));
+            }
+            self.append(shard, s, None, fields)
+        })
+    }
+
+    /// Highest fenced step landed on `key` (`XLASTSTEP`; read-only, no
+    /// fence check — a departing writer uses it to learn what its
+    /// broken frame managed to land before it moves on).
+    pub fn fenced_last_step(&self, key: &str) -> Option<u64> {
+        let map = self.shard(key).streams.read().unwrap();
+        map.get(key).and_then(|s| s.lock().unwrap().last_step())
+    }
+
+    /// Current epoch fence of `key` (0 when absent/unfenced).
+    pub fn stream_epoch(&self, key: &str) -> u64 {
+        let map = self.shard(key).streams.read().unwrap();
+        map.get(key)
+            .map(|s| s.lock().unwrap().writer_epoch)
+            .unwrap_or(0)
     }
 
     /// Append an entry; `id` of `None` means auto-assign (`XADD key *`).
@@ -624,6 +810,126 @@ mod tests {
         }
         assert_eq!(store.total_entries_added(), 8 * per as u64);
         assert_eq!(store.stream_count(), 8);
+    }
+
+    /// ISSUE 3: epoch fencing — a writer behind the stream's epoch is
+    /// rejected (write *and* registration) until it re-registers at a
+    /// current epoch.
+    #[test]
+    fn stale_epoch_writes_rejected_after_takeover() {
+        let store = Store::new(StoreConfig::default());
+        store.hello("u/0", 1).unwrap();
+        assert_eq!(
+            store.xadd_fenced("u/0", 1, 0, false, fields("a")).unwrap(),
+            FencedAdd::Added(store.last_id("u/0"))
+        );
+        // takeover: a successor hands the stream off at epoch 2
+        store.xhandoff("u/0", 2, Some(1)).unwrap();
+        assert_eq!(store.stream_epoch("u/0"), 2);
+        let err = store.xadd_fenced("u/0", 1, 1, false, fields("b")).unwrap_err();
+        assert!(err.to_string().starts_with("STALE"), "{err}");
+        let err = store.hello("u/0", 1).unwrap_err();
+        assert!(err.to_string().starts_with("STALE"), "{err}");
+        // re-register at the current epoch: accepted, resume point intact
+        let re = store.hello("u/0", 2).unwrap();
+        assert_eq!(re.last_step, Some(0));
+        assert!(matches!(
+            store.xadd_fenced("u/0", 2, 1, false, fields("c")).unwrap(),
+            FencedAdd::Added(_)
+        ));
+        // stream: record a, tombstone, record c — the stale 'b' never landed
+        assert_eq!(store.xlen("u/0"), 3);
+    }
+
+    /// ISSUE 3: server-side step dedupe — re-shipping an unacked frame
+    /// cannot double-store a record.
+    #[test]
+    fn fenced_duplicate_steps_not_stored() {
+        let store = Store::new(StoreConfig::default());
+        let hello = store.hello("u/0", 1).unwrap();
+        assert_eq!(hello.last_step, None);
+        assert_eq!(hello.last_id, EntryId::ZERO);
+        for step in 0..4u64 {
+            assert!(matches!(
+                store.xadd_fenced("u/0", 1, step, false, fields("x")).unwrap(),
+                FencedAdd::Added(_)
+            ));
+        }
+        // the whole frame re-shipped: every record is a dup, none stored
+        for step in 0..4u64 {
+            assert_eq!(
+                store.xadd_fenced("u/0", 1, step, false, fields("x")).unwrap(),
+                FencedAdd::Duplicate
+            );
+        }
+        assert_eq!(store.xlen("u/0"), 4);
+        assert_eq!(store.fenced_last_step("u/0"), Some(3));
+        // fresh steps still land
+        assert!(matches!(
+            store.xadd_fenced("u/0", 1, 4, false, fields("x")).unwrap(),
+            FencedAdd::Added(_)
+        ));
+        assert_eq!(store.xlen("u/0"), 5);
+    }
+
+    /// The OOM-inversion escape hatch: a writer that *knows* a record
+    /// was explicitly rejected (not merely unacked) forces it past the
+    /// watermark dedupe so it is never silently lost.
+    #[test]
+    fn forced_write_bypasses_step_dedupe() {
+        let store = Store::new(StoreConfig::default());
+        store.hello("u/0", 1).unwrap();
+        store.xadd_fenced("u/0", 1, 5, false, fields("a")).unwrap();
+        // un-forced: swallowed as a duplicate
+        assert_eq!(
+            store.xadd_fenced("u/0", 1, 3, false, fields("late")).unwrap(),
+            FencedAdd::Duplicate
+        );
+        // forced: stored (late, out of step order), watermark untouched
+        assert!(matches!(
+            store.xadd_fenced("u/0", 1, 3, true, fields("late")).unwrap(),
+            FencedAdd::Added(_)
+        ));
+        assert_eq!(store.xlen("u/0"), 2);
+        assert_eq!(store.fenced_last_step("u/0"), Some(5));
+        // fencing still applies to forced writes
+        store.xhandoff("u/0", 2, None).unwrap();
+        let err = store
+            .xadd_fenced("u/0", 1, 9, true, fields("x"))
+            .unwrap_err();
+        assert!(err.to_string().starts_with("STALE"), "{err}");
+    }
+
+    #[test]
+    fn handoff_tombstone_lands_even_under_oom() {
+        let store = Store::new(StoreConfig {
+            stream_maxlen: 0,
+            max_memory: 60,
+            ..Default::default()
+        });
+        store.hello("u/0", 1).unwrap();
+        store
+            .xadd_fenced("u/0", 1, 0, false, vec![(b"r".to_vec(), vec![0u8; 64])])
+            .unwrap();
+        let err = store
+            .xadd_fenced("u/0", 1, 1, false, vec![(b"r".to_vec(), vec![0u8; 64])])
+            .unwrap_err();
+        assert!(err.to_string().contains("OOM"), "{err}");
+        // the migration signal must still land
+        store.xhandoff("u/0", 2, Some(1)).unwrap();
+        assert_eq!(store.stream_epoch("u/0"), 2);
+        let entries = store.read_after("u/0", EntryId::ZERO, 0);
+        assert_eq!(entries.last().unwrap().fields[0].0, b"h");
+    }
+
+    #[test]
+    fn unfenced_stream_reports_zero_epoch_and_no_step() {
+        let store = Store::new(StoreConfig::default());
+        store.xadd("plain", None, fields("x")).unwrap();
+        assert_eq!(store.stream_epoch("plain"), 0);
+        assert_eq!(store.fenced_last_step("plain"), None);
+        assert_eq!(store.stream_epoch("absent"), 0);
+        assert_eq!(store.fenced_last_step("absent"), None);
     }
 
     /// Property: after any interleaving of adds, read_after(last_id of a

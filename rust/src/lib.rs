@@ -20,7 +20,11 @@
 //!   (`broker_init` / `broker_write` / `broker_finalize`), process
 //!   groups → Cloud endpoints, asynchronous background writers that
 //!   coalesce queued records into pipelined batches
-//!   (`batch_max_records` / `batch_max_bytes` / `linger_ms`).
+//!   (`batch_max_records` / `batch_max_bytes` / `linger_ms`), and the
+//!   *elasticity layer*: an epoch-versioned group→endpoint `Topology`,
+//!   the epoch-fenced `Shipper` migration protocol (no record loss or
+//!   duplication across endpoint changes) and a QoS-driven
+//!   `Rebalancer`.
 //! * [`synth`] — the synthetic data generator of §4.3.
 //!
 //! Cloud side (the paper's §3.2):
@@ -36,7 +40,9 @@
 //! * [`wire`] — RESP2 protocol codec.
 //! * [`record`] — the simulation→Cloud stream-record format.
 //! * [`transport`] — framed TCP client with reconnect, throttling and
-//!   request pipelining (N commands per round trip).
+//!   request pipelining (N commands per round trip); the `Conn`/`Dialer`
+//!   abstraction with a deterministic fault-injecting in-process
+//!   implementation (`transport::sim`) for the elasticity tests.
 //! * [`runtime`] — PJRT artifact registry / executor (the AOT bridge;
 //!   a no-op stub unless the `pjrt` cargo feature is enabled).
 //! * [`linalg`] — dense eigensolvers (Francis QR) for the DMD spectra.

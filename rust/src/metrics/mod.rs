@@ -136,6 +136,39 @@ impl Histogram {
         self.max()
     }
 
+    /// Quantile over only the samples recorded since `prev` was last
+    /// captured — the windowed view control loops need (a lifetime
+    /// quantile never decays, so a brief slow spell would otherwise
+    /// look like permanent saturation).  Updates `prev` to the current
+    /// bucket counts; returns 0 when no new samples arrived.
+    pub fn windowed_quantile(&self, prev: &mut Vec<u64>, q: f64) -> u64 {
+        let n = self.buckets.len();
+        if prev.len() != n {
+            prev.clear();
+            prev.resize(n, 0);
+        }
+        let mut deltas = vec![0u64; n];
+        let mut total = 0u64;
+        for (i, d) in deltas.iter_mut().enumerate() {
+            let cur = self.buckets[i].load(Ordering::Relaxed);
+            *d = cur.saturating_sub(prev[i]);
+            total += *d;
+            prev[i] = cur;
+        }
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, d) in deltas.iter().enumerate() {
+            seen += d;
+            if seen >= target {
+                return Self::value(i);
+            }
+        }
+        Self::value(n - 1)
+    }
+
     /// Compact single-line summary for bench tables.
     pub fn summary(&self) -> String {
         format!(
@@ -147,6 +180,94 @@ impl Histogram {
             self.quantile(0.99),
             self.max()
         )
+    }
+}
+
+/// Last-value gauge with a high-watermark (`set_max`) mode, for
+/// sampled quantities like queue depth where the *peak since the last
+/// rebalancer sweep* is the interesting signal.
+#[derive(Default, Debug)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+    /// Raise the gauge to `v` if higher (concurrent writers keep the max).
+    pub fn set_max(&self, v: u64) {
+        self.v.fetch_max(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+    /// Read and reset to zero (one sweep's worth of signal).
+    pub fn take(&self) -> u64 {
+        self.v.swap(0, Ordering::Relaxed)
+    }
+}
+
+/// Per-endpoint QoS signals the [`crate::broker::Rebalancer`] watches:
+/// flush latency, reconnect pressure and peak writer-queue depth, all
+/// recorded by the broker writer threads against the endpoint they are
+/// currently shipping to.
+#[derive(Default)]
+pub struct EndpointStats {
+    /// Batch flush latency to this endpoint (µs).
+    pub flush_us: Histogram,
+    /// Reconnect attempts against this endpoint (successes + failures);
+    /// a dead endpoint shows up as a burst of these.
+    pub reconnects: Counter,
+    /// Peak writer-queue depth observed since the last rebalancer sweep
+    /// (set via [`Gauge::set_max`], drained via [`Gauge::take`]).
+    pub queue_depth: Gauge,
+}
+
+impl EndpointStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Growable slot board of per-endpoint stats, indexed by topology
+/// endpoint slot.  Slots are created on first touch and never removed
+/// (endpoint indices are stable for a topology's lifetime).
+#[derive(Default)]
+pub struct QosBoard {
+    slots: std::sync::RwLock<Vec<Arc<EndpointStats>>>,
+}
+
+impl QosBoard {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stats slot for endpoint `idx`, growing the board as needed.
+    pub fn slot(&self, idx: usize) -> Arc<EndpointStats> {
+        {
+            let slots = self.slots.read().unwrap();
+            if let Some(s) = slots.get(idx) {
+                return s.clone();
+            }
+        }
+        let mut slots = self.slots.write().unwrap();
+        while slots.len() <= idx {
+            slots.push(Arc::new(EndpointStats::new()));
+        }
+        slots[idx].clone()
+    }
+
+    /// Number of slots touched so far.
+    pub fn len(&self) -> usize {
+        self.slots.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -227,6 +348,19 @@ pub struct WorkflowMetrics {
     /// full O(d·m²) Gram recomputes (window fill, refresh cadence, or
     /// non-finite fallback).
     pub gram_full: Arc<Counter>,
+    /// Per-endpoint QoS board the rebalancer samples.
+    pub qos: Arc<QosBoard>,
+    /// Stream migrations completed by broker writers (epoch-fenced
+    /// endpoint switches, including rebalancer-driven ones).
+    pub migrations: Arc<Counter>,
+    /// Writes/HELLOs the broker had rejected as stale-epoch (each one
+    /// is a fencing save: a would-be split-brain write that did not
+    /// land).
+    pub stale_rejections: Arc<Counter>,
+    /// Handoff tombstones written during migrations.
+    pub handoffs: Arc<Counter>,
+    /// Transport reconnect attempts by broker writers (all endpoints).
+    pub reconnects: Arc<Counter>,
 }
 
 impl Default for WorkflowMetrics {
@@ -248,6 +382,11 @@ impl WorkflowMetrics {
             analysis_us: Arc::new(Histogram::new()),
             gram_incremental: Arc::new(Counter::new()),
             gram_full: Arc::new(Counter::new()),
+            qos: Arc::new(QosBoard::new()),
+            migrations: Arc::new(Counter::new()),
+            stale_rejections: Arc::new(Counter::new()),
+            handoffs: Arc::new(Counter::new()),
+            reconnects: Arc::new(Counter::new()),
         }
     }
 }
@@ -332,6 +471,54 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// ISSUE 3: the rebalancer's saturation signal must see only the
+    /// last sweep's samples, not the lifetime distribution.
+    #[test]
+    fn windowed_quantile_sees_only_new_samples() {
+        let h = Histogram::new();
+        let mut win = Vec::new();
+        // warmup: a slow spell
+        for _ in 0..100 {
+            h.record(1_000_000);
+        }
+        assert!(h.windowed_quantile(&mut win, 0.95) >= 500_000);
+        // no new samples → quiet, even though lifetime p95 stays high
+        assert_eq!(h.windowed_quantile(&mut win, 0.95), 0);
+        assert!(h.quantile(0.95) >= 500_000, "lifetime view unchanged");
+        // fast spell: the window reflects it immediately
+        for _ in 0..100 {
+            h.record(100);
+        }
+        let w = h.windowed_quantile(&mut win, 0.95);
+        assert!(w > 0 && w < 10_000, "windowed p95 {w} should be fast");
+    }
+
+    #[test]
+    fn gauge_set_max_and_take() {
+        let g = Gauge::new();
+        g.set_max(5);
+        g.set_max(3);
+        assert_eq!(g.get(), 5);
+        g.set_max(9);
+        assert_eq!(g.take(), 9);
+        assert_eq!(g.get(), 0);
+        g.set(4);
+        assert_eq!(g.get(), 4);
+    }
+
+    #[test]
+    fn qos_board_grows_and_slots_are_stable() {
+        let b = QosBoard::new();
+        assert!(b.is_empty());
+        let s3 = b.slot(3);
+        assert_eq!(b.len(), 4);
+        s3.reconnects.inc();
+        // same underlying slot on re-fetch
+        assert_eq!(b.slot(3).reconnects.get(), 1);
+        // earlier slots exist and are independent
+        assert_eq!(b.slot(0).reconnects.get(), 0);
     }
 
     #[test]

@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::{ExecutorPool, MicroBatch, StreamReader};
+use super::{ExecutorPool, MicroBatch, Poller};
 
 /// Streaming service configuration.
 #[derive(Clone, Debug)]
@@ -54,18 +54,21 @@ pub struct StreamingContext {
 impl StreamingContext {
     /// Start the trigger loop.
     ///
-    /// `readers` — one per endpoint (their streams become partitions);
-    /// `processor` — the pipe stage, run once per partition per trigger
-    /// on the executor pool; `sink` — where collected outputs go.
-    pub fn start<T, F>(
+    /// `readers` — any [`Poller`]s (classically one [`super::StreamReader`]
+    /// per endpoint; elastically a single [`super::ElasticReader`] that
+    /// follows streams across endpoints); `processor` — the pipe stage,
+    /// run once per partition per trigger on the executor pool; `sink`
+    /// — where collected outputs go.
+    pub fn start<T, F, P>(
         cfg: StreamingConfig,
-        mut readers: Vec<StreamReader>,
+        mut readers: Vec<P>,
         processor: F,
         sink: Sender<(u64, T)>,
     ) -> StreamingContext
     where
         T: Send + 'static,
         F: Fn(&MicroBatch) -> Vec<T> + Send + Sync + 'static,
+        P: Poller + 'static,
     {
         let stop = Arc::new(AtomicBool::new(false));
         let triggers = Arc::new(AtomicU64::new(0));

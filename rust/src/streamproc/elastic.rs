@@ -1,0 +1,428 @@
+//! Cross-endpoint stream following (the Cloud half of ISSUE 3's
+//! elasticity protocol).
+//!
+//! An [`ElasticReader`] consumes a set of streams whose endpoint
+//! assignment changes at runtime.  Correctness rests on one structural
+//! fact the writers guarantee: a stream's life is a **chain of
+//! segments**, one per endpoint visit, each segment terminated by an
+//! `XHANDOFF` tombstone naming the endpoint the stream moved to —
+//! except the final, still-open segment.  Steps increase monotonically
+//! along the chain, so chain order *is* step order.
+//!
+//! The reader therefore keeps, per stream and per endpoint, a queue of
+//! polled segments ([`Segment`]) and a **home** pointer — the segment
+//! chain position it is currently consuming:
+//!
+//! 1. records polled from any endpoint are enqueued, never delivered
+//!    directly (a migrated writer's later segment can be polled before
+//!    an earlier one elsewhere);
+//! 2. delivery walks the chain: consume the home endpoint's queued
+//!    segments in order; a closed segment's tombstone moves the home to
+//!    its recorded destination (falling back to the live topology for
+//!    legacy tombstones without one) and the walk continues there —
+//!    so a stream that bounced A→B→A between two polls still delivers
+//!    A's first segment, then B's, then A's second, never skipping B;
+//! 3. the home endpoint's *open* segment is delivered incrementally
+//!    (it is by construction the newest chain position we know of);
+//! 4. if the home endpoint is dead (unreachable and not live in the
+//!    topology) its tombstone is never coming: once its queue is
+//!    drained the reader follows the topology instead.
+//!
+//! Delivered records are additionally deduplicated by simulation step
+//! (re-shipped frames collapse), so every record reaches the analysis
+//! layer exactly once, in step order, per stream.  Cursors of a failed
+//! connection are harvested and the replacement reader resumes from
+//! them, so a transient endpoint error never replays a segment chain.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::broker::TopologyHandle;
+use crate::endpoint::EntryId;
+use crate::record::StreamRecord;
+use crate::transport::Dialer;
+
+use super::{MicroBatch, Poller, StreamReader};
+
+/// Per-(stream, endpoint) segment queue.
+#[derive(Default)]
+struct SegQueue {
+    /// Tombstone-terminated segments, in chain order:
+    /// `(records, destination endpoint)`.
+    closed: VecDeque<(Vec<StreamRecord>, Option<usize>)>,
+    /// Records of the still-open segment.
+    open: Vec<StreamRecord>,
+}
+
+struct StreamState {
+    group: usize,
+    /// Chain position currently consumed: the endpoint whose segment
+    /// is next to deliver.
+    home: usize,
+    /// Highest step delivered (dedupe watermark).
+    delivered: Option<u64>,
+    /// Queued segments per endpoint.
+    segs: HashMap<usize, SegQueue>,
+}
+
+/// Polls a set of streams across every endpoint the topology knows,
+/// following migrations.  Implements [`Poller`], so it drops into
+/// [`super::StreamingContext`] wherever a [`StreamReader`] would.
+pub struct ElasticReader {
+    topology: TopologyHandle,
+    dialer: Arc<dyn Dialer>,
+    batch_limit: usize,
+    readers: HashMap<usize, StreamReader>,
+    streams: HashMap<String, StreamState>,
+    /// Cursors harvested from failed readers, keyed by endpoint; the
+    /// replacement reader resumes from them.
+    saved_cursors: HashMap<usize, Vec<(String, EntryId)>>,
+    /// Endpoints confirmed gone (unreachable *and* not live in the
+    /// topology) — their tombstones will never arrive.
+    dead: HashSet<usize>,
+}
+
+impl ElasticReader {
+    /// Subscribe `keys` (stream keys, `"<field>/<rank>"`), homing each
+    /// at its group's current endpoint.
+    pub fn new(
+        topology: TopologyHandle,
+        dialer: Arc<dyn Dialer>,
+        keys: Vec<String>,
+        batch_limit: usize,
+    ) -> Result<ElasticReader> {
+        let topo = topology.snapshot();
+        let mut streams = HashMap::with_capacity(keys.len());
+        for key in keys {
+            let (_, rank) = crate::record::parse_stream_key(&key)
+                .with_context(|| format!("bad stream key '{key}'"))?;
+            let group = topo.groups.group_of_rank(rank as usize)?;
+            let home = topo.endpoint_of_group(group)?;
+            streams.insert(
+                key,
+                StreamState {
+                    group,
+                    home,
+                    delivered: None,
+                    segs: HashMap::new(),
+                },
+            );
+        }
+        Ok(ElasticReader {
+            topology,
+            dialer,
+            batch_limit,
+            readers: HashMap::new(),
+            streams,
+            saved_cursors: HashMap::new(),
+            dead: HashSet::new(),
+        })
+    }
+
+    /// Streams currently subscribed (any home).
+    pub fn key_count(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// One sweep: poll every endpoint that currently homes a stream,
+    /// enqueue the polled segments, then walk each stream's chain and
+    /// emit everything that became deliverable, in step order.
+    pub fn poll(&mut self) -> Result<Vec<MicroBatch>> {
+        // 1. Make sure a reader exists for every home and is subscribed.
+        let mut homes: Vec<usize> = self.streams.values().map(|s| s.home).collect();
+        homes.sort_unstable();
+        homes.dedup();
+        for &e in &homes {
+            if !self.readers.contains_key(&e) {
+                match self.dialer.dial(e) {
+                    Ok(conn) => {
+                        let mut reader =
+                            StreamReader::with_conn(conn, Vec::new(), self.batch_limit);
+                        if let Some(cursors) = self.saved_cursors.remove(&e) {
+                            for (key, cursor) in cursors {
+                                reader.subscribe_from(key, cursor);
+                            }
+                        }
+                        self.readers.insert(e, reader);
+                        self.dead.remove(&e);
+                    }
+                    Err(err) => {
+                        log::warn!("elastic reader: cannot dial endpoint {e}: {err:#}");
+                        self.mark_unreachable(e);
+                        continue;
+                    }
+                }
+            }
+            let reader = self.readers.get_mut(&e).unwrap();
+            for (key, st) in self.streams.iter() {
+                if st.home == e && !reader.is_subscribed(key) {
+                    reader.subscribe(key.clone());
+                }
+            }
+        }
+
+        // 2. Poll in deterministic endpoint order; enqueue segments.
+        let mut order: Vec<usize> = self.readers.keys().copied().collect();
+        order.sort_unstable();
+        for e in order {
+            let Some(reader) = self.readers.get_mut(&e) else {
+                continue;
+            };
+            match reader.poll_segments() {
+                Ok(polled) => {
+                    for sb in polled {
+                        let Some(st) = self.streams.get_mut(&sb.key) else {
+                            continue;
+                        };
+                        let q = st.segs.entry(e).or_default();
+                        for seg in sb.segments {
+                            q.open.extend(seg.records);
+                            if let Some((_epoch, dest)) = seg.handoff {
+                                let records = std::mem::take(&mut q.open);
+                                q.closed.push_back((records, dest));
+                            }
+                        }
+                    }
+                }
+                Err(err) => {
+                    log::warn!(
+                        "elastic reader: poll of endpoint {e} failed ({err:#}); \
+                         dropping the connection"
+                    );
+                    let reader = self.readers.remove(&e).unwrap();
+                    self.saved_cursors.insert(e, reader.cursor_positions());
+                    self.mark_unreachable(e);
+                }
+            }
+        }
+
+        // 3. Walk each stream's chain from its home; gather deliverable
+        // records (deterministic key order).
+        let mut keys: Vec<String> = self.streams.keys().cloned().collect();
+        keys.sort_unstable();
+        let mut out = Vec::new();
+        for key in keys {
+            let st = self.streams.get_mut(&key).unwrap();
+            let mut gathered: Vec<StreamRecord> = Vec::new();
+            loop {
+                let q = st.segs.entry(st.home).or_default();
+                if let Some((records, dest)) = q.closed.pop_front() {
+                    gathered.extend(records);
+                    let target = match dest {
+                        Some(d) => d,
+                        // legacy tombstone without a destination: the
+                        // live topology is the best guess
+                        None => self.topology.route(st.group)?.0,
+                    };
+                    log::debug!(
+                        "elastic reader: {key}: segment chain hop {} -> {target}",
+                        st.home
+                    );
+                    st.home = target;
+                    continue;
+                }
+                // the open segment at the chain head is deliverable
+                gathered.append(&mut q.open);
+                if self.dead.contains(&st.home) {
+                    // no tombstone is coming; follow the topology once
+                    // the dead endpoint's queue is drained
+                    let (target, _) = self.topology.route(st.group)?;
+                    if target != st.home {
+                        log::warn!(
+                            "elastic reader: {key}: home endpoint {} is gone; \
+                             following the topology to endpoint {target}",
+                            st.home
+                        );
+                        st.home = target;
+                        continue;
+                    }
+                }
+                break;
+            }
+            // Deliver: step order + dedupe + watermark.
+            gathered.sort_by_key(|r| r.step);
+            gathered.dedup_by_key(|r| r.step);
+            let records: Vec<StreamRecord> = gathered
+                .into_iter()
+                .filter(|r| st.delivered.is_none_or(|d| r.step > d))
+                .collect();
+            if records.is_empty() {
+                continue;
+            }
+            st.delivered = Some(records.last().unwrap().step);
+            out.push(MicroBatch { key, records });
+        }
+        Ok(out)
+    }
+
+    /// An endpoint cannot be reached.  If the topology still lists it
+    /// live the failure is transient (retry next sweep); otherwise its
+    /// tombstones are never coming and the per-stream chain walk will
+    /// fall back to the topology once its queues drain.
+    fn mark_unreachable(&mut self, e: usize) {
+        let topo = self.topology.snapshot();
+        let live = topo.endpoints.get(e).map(|s| s.live).unwrap_or(false);
+        if !live {
+            self.dead.insert(e);
+        }
+    }
+}
+
+impl Poller for ElasticReader {
+    fn poll(&mut self) -> Result<Vec<MicroBatch>> {
+        ElasticReader::poll(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::{GroupMap, Shipper, TopologyHandle};
+    use crate::endpoint::StoreConfig;
+    use crate::metrics::WorkflowMetrics;
+    use crate::transport::sim::{SimDialer, SimNet};
+
+    fn rec(step: u64) -> StreamRecord {
+        StreamRecord::from_f32("u", 0, step, 0, &[1], &[step as f32]).unwrap()
+    }
+
+    fn steps(b: &MicroBatch) -> Vec<u64> {
+        b.records.iter().map(|r| r.step).collect()
+    }
+
+    struct Rig {
+        net: Arc<SimNet>,
+        topology: TopologyHandle,
+        shipper: Shipper,
+        reader: ElasticReader,
+    }
+
+    /// One stream, two sim endpoints, stream initially on endpoint 0.
+    fn rig() -> Rig {
+        let net = SimNet::new();
+        net.add_endpoint(StoreConfig::default());
+        net.add_endpoint(StoreConfig::default());
+        let addrs = vec!["127.0.0.1:1".parse().unwrap(); 2];
+        let topology =
+            TopologyHandle::new_static(GroupMap::new(1, 1, 2).unwrap(), addrs).unwrap();
+        let dialer: Arc<dyn Dialer> = Arc::new(SimDialer::new(net.clone()));
+        let metrics = WorkflowMetrics::new();
+        let shipper = Shipper::register(
+            "u/0".into(),
+            0,
+            topology.clone(),
+            dialer.clone(),
+            metrics.clone(),
+            4,
+        )
+        .unwrap();
+        let reader =
+            ElasticReader::new(topology.clone(), dialer, vec!["u/0".into()], 0).unwrap();
+        Rig {
+            net,
+            topology,
+            shipper,
+            reader,
+        }
+    }
+
+    #[test]
+    fn delivers_in_step_order_and_dedupes() {
+        let mut rig = rig();
+        rig.shipper.ship(&[rec(0), rec(1)]).unwrap();
+        let out = rig.reader.poll().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(steps(&out[0]), vec![0, 1]);
+        // nothing new → nothing delivered
+        assert!(rig.reader.poll().unwrap().is_empty());
+    }
+
+    /// The bounce-back scenario: e0 → e1 → e0.  After the bounce, the
+    /// new e0 segment is polled while the chain position is still
+    /// behind; it must be queued and released — in step order, exactly
+    /// once — only after e1's segment has been consumed.
+    #[test]
+    fn queues_later_segment_until_chain_reaches_it() {
+        let mut rig = rig();
+        rig.shipper.ship(&[rec(0), rec(1)]).unwrap();
+        assert_eq!(steps(&rig.reader.poll().unwrap()[0]), vec![0, 1]);
+
+        // migrate to e1; tombstone lands on e0, steps 2..4 on e1
+        rig.topology.assign(&[(0, 1)]).unwrap();
+        rig.shipper.ship(&[rec(2), rec(3)]).unwrap();
+        // the reader consumes e0's tombstone and re-homes; e1's reader
+        // appears next sweep
+        let mid: Vec<MicroBatch> = rig.reader.poll().unwrap();
+        let mid_steps: Vec<u64> = mid.iter().flat_map(steps).collect();
+
+        // bounce back to e0; tombstone lands on e1, steps 4..6 on e0
+        rig.topology.assign(&[(0, 0)]).unwrap();
+        rig.shipper.ship(&[rec(4), rec(5)]).unwrap();
+
+        // remaining sweeps must deliver everything once, in step order
+        let mut got = mid_steps;
+        for _ in 0..4 {
+            for b in rig.reader.poll().unwrap() {
+                got.extend(steps(&b));
+            }
+        }
+        assert_eq!(got, vec![2, 3, 4, 5], "in order, exactly once");
+        // both segments really do live on their endpoints
+        assert_eq!(rig.net.store(0).xlen("u/0"), 5); // 0,1 + tomb + 4,5
+        assert_eq!(rig.net.store(1).xlen("u/0"), 3); // 2,3 + tomb
+    }
+
+    /// The bounce that crosses a *single* poll (the review finding):
+    /// both migrations happen between two polls, so one poll of e0
+    /// returns [0,1, tomb→e1, 4,5] while e1 was never polled.  The
+    /// post-tombstone records must wait for e1's segment.
+    #[test]
+    fn bounce_within_one_poll_gap_loses_nothing() {
+        let mut rig = rig();
+        rig.shipper.ship(&[rec(0), rec(1)]).unwrap();
+        // no poll here: the reader sees everything at once below
+        rig.topology.assign(&[(0, 1)]).unwrap();
+        rig.shipper.ship(&[rec(2), rec(3)]).unwrap();
+        rig.topology.assign(&[(0, 0)]).unwrap();
+        rig.shipper.ship(&[rec(4), rec(5)]).unwrap();
+
+        let mut got: Vec<u64> = Vec::new();
+        for _ in 0..4 {
+            for b in rig.reader.poll().unwrap() {
+                got.extend(steps(&b));
+            }
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5], "no gap, no reorder");
+    }
+
+    /// Endpoint death: no tombstone ever arrives; once the topology
+    /// drains the endpoint, the reader follows it and later records
+    /// still flow.
+    #[test]
+    fn follows_topology_when_home_endpoint_dies() {
+        let mut rig = rig();
+        // move the stream to e1 and deliver its first records
+        rig.topology.assign(&[(0, 1)]).unwrap();
+        rig.shipper.ship(&[rec(0), rec(1)]).unwrap();
+        let mut delivered: Vec<u64> = Vec::new();
+        for _ in 0..3 {
+            for b in rig.reader.poll().unwrap() {
+                delivered.extend(steps(&b));
+            }
+        }
+        assert_eq!(delivered, vec![0, 1]);
+
+        // e1 dies for good; the controller drains it
+        rig.net.kill(1);
+        rig.topology.drain_endpoint(1).unwrap();
+        rig.shipper.ship(&[rec(2), rec(3)]).unwrap(); // recovers onto e0
+        for _ in 0..4 {
+            for b in rig.reader.poll().unwrap() {
+                delivered.extend(steps(&b));
+            }
+        }
+        assert_eq!(delivered, vec![0, 1, 2, 3], "stream followed the topology");
+    }
+}

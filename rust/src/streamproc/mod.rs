@@ -16,17 +16,39 @@
 //!
 //! * [`pool`] — the executor thread pool,
 //! * [`reader`] — endpoint polling (`XREAD`) and record decoding,
+//! * [`elastic`] — cross-endpoint stream following (migrations),
 //! * [`context`] — the trigger loop gluing it together.
 
 pub mod context;
+pub mod elastic;
 pub mod pool;
 pub mod reader;
 
 pub use context::{StreamingConfig, StreamingContext};
+pub use elastic::ElasticReader;
 pub use pool::ExecutorPool;
-pub use reader::StreamReader;
+pub use reader::{Segment, StreamReader, StreamSegments};
 
 use crate::record::StreamRecord;
+
+/// Anything the streaming context can poll micro-batches from: a
+/// single-endpoint [`StreamReader`], a migration-following
+/// [`ElasticReader`], or a boxed mix of both.
+pub trait Poller: Send {
+    fn poll(&mut self) -> anyhow::Result<Vec<MicroBatch>>;
+}
+
+impl Poller for StreamReader {
+    fn poll(&mut self) -> anyhow::Result<Vec<MicroBatch>> {
+        StreamReader::poll(self)
+    }
+}
+
+impl Poller for Box<dyn Poller> {
+    fn poll(&mut self) -> anyhow::Result<Vec<MicroBatch>> {
+        (**self).poll()
+    }
+}
 
 /// Records from one data stream for one trigger window (Fig 3's
 /// per-stream micro-batch / Dataframe).

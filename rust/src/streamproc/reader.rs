@@ -1,8 +1,8 @@
 //! Endpoint polling: the spark-redis connector stand-in.
 //!
-//! A [`StreamReader`] owns one RESP connection to one endpoint and a
-//! cursor (`last seen id`) per subscribed stream.  Each [`poll`] issues
-//! a single batched `XREAD COUNT n STREAMS k1 k2 ... id1 id2 ...` for
+//! A [`StreamReader`] owns one connection to one endpoint and a cursor
+//! (`last seen id`) per subscribed stream.  Each [`poll`] issues a
+//! single batched `XREAD COUNT n STREAMS k1 k2 ... id1 id2 ...` for
 //! all streams, decodes the [`StreamRecord`] payloads, and advances the
 //! cursors — at-least-once delivery with in-order ids per stream.
 //!
@@ -11,6 +11,17 @@
 //! poll path is one reply-key → position lookup per *stream section of
 //! the reply*, not one per subscribed key per poll.  The formatted id
 //! strings are scratch buffers reused across polls.
+//!
+//! The connection is a [`Conn`] trait object, so the same reader runs
+//! over TCP ([`StreamReader::connect`]) or over the in-process sim
+//! transport ([`StreamReader::with_conn`]).  Handoff tombstones
+//! (entries with an `h` field, written by a migrating writer's
+//! `XHANDOFF`) split a stream's entries into [`Segment`]s:
+//! [`StreamReader::poll_segments`] preserves the record/tombstone
+//! interleaving — which [`super::ElasticReader`] needs to follow a
+//! stream's hop chain across endpoints without reordering — while
+//! plain [`poll`] flattens segments into one micro-batch per stream
+//! (tombstones are invisible to static-topology consumers).
 //!
 //! [`poll`]: StreamReader::poll
 
@@ -22,14 +33,34 @@ use anyhow::{bail, Context, Result};
 
 use crate::endpoint::EntryId;
 use crate::record::StreamRecord;
-use crate::transport::{ConnConfig, RespConn};
+use crate::transport::{Conn, ConnConfig, Request, RespConn};
 use crate::wire::Value;
 
 use super::MicroBatch;
 
+/// One contiguous run of a stream's entries on one endpoint: either
+/// still open (more records may append) or terminated by a handoff
+/// tombstone.
+#[derive(Debug)]
+pub struct Segment {
+    /// Records of this segment, in id order.
+    pub records: Vec<StreamRecord>,
+    /// The tombstone that terminated the segment, if any:
+    /// `(epoch, destination endpoint slot)` — the destination is absent
+    /// on tombstones written by peers that did not know it.
+    pub handoff: Option<(u64, Option<usize>)>,
+}
+
+/// All new segments of one stream from one poll, in entry order.
+#[derive(Debug)]
+pub struct StreamSegments {
+    pub key: String,
+    pub segments: Vec<Segment>,
+}
+
 /// Poller for a set of streams on one endpoint.
 pub struct StreamReader {
-    conn: RespConn,
+    conn: Box<dyn Conn>,
     /// Keys in subscription order (stable partition order).
     keys: Vec<String>,
     /// Last consumed entry id per key, parallel to `keys`.
@@ -52,6 +83,11 @@ impl StreamReader {
         conn_cfg: ConnConfig,
     ) -> Result<Self> {
         let conn = RespConn::connect(addr, conn_cfg)?;
+        Ok(Self::with_conn(Box::new(conn), keys, batch_limit))
+    }
+
+    /// A reader over an already-established [`Conn`] (TCP or sim).
+    pub fn with_conn(conn: Box<dyn Conn>, keys: Vec<String>, batch_limit: usize) -> Self {
         let mut reader = StreamReader {
             conn,
             keys: Vec::new(),
@@ -64,7 +100,7 @@ impl StreamReader {
         for k in keys {
             reader.subscribe(k);
         }
-        Ok(reader)
+        reader
     }
 
     pub fn keys(&self) -> &[String] {
@@ -73,17 +109,62 @@ impl StreamReader {
 
     /// Subscribe to an additional stream (starts from the beginning).
     pub fn subscribe(&mut self, key: String) {
+        self.subscribe_from(key, EntryId::ZERO);
+    }
+
+    /// Subscribe with an explicit starting cursor — a reader rebuilt
+    /// after a connection loss resumes exactly where the old one
+    /// stopped instead of replaying the whole stream.
+    pub fn subscribe_from(&mut self, key: String, after: EntryId) {
         if !self.index.contains_key(&key) {
             self.index.insert(key.clone(), self.keys.len());
             self.keys.push(key);
-            self.cursors.push(EntryId::ZERO);
+            self.cursors.push(after);
             self.id_bufs.push(String::new());
         }
     }
 
+    /// Whether `key` is subscribed.
+    pub fn is_subscribed(&self, key: &str) -> bool {
+        self.index.contains_key(key)
+    }
+
+    /// Current `(key, cursor)` pairs — harvest before dropping a
+    /// failed reader so its successor can `subscribe_from` the same
+    /// positions.
+    pub fn cursor_positions(&self) -> Vec<(String, EntryId)> {
+        self.keys
+            .iter()
+            .cloned()
+            .zip(self.cursors.iter().copied())
+            .collect()
+    }
+
     /// One XREAD round-trip; returns a micro-batch per stream that had
-    /// new records (in subscription order).
+    /// new records (in subscription order).  Handoff tombstones are
+    /// dropped (static-topology consumers never see them).  A transport
+    /// failure is retried once on a fresh connection before surfacing.
     pub fn poll(&mut self) -> Result<Vec<MicroBatch>> {
+        let polled = self.poll_segments()?;
+        let mut batches = Vec::with_capacity(polled.len());
+        for sb in polled {
+            let mut records = Vec::new();
+            for seg in sb.segments {
+                records.extend(seg.records);
+            }
+            if !records.is_empty() {
+                batches.push(MicroBatch {
+                    key: sb.key,
+                    records,
+                });
+            }
+        }
+        Ok(batches)
+    }
+
+    /// One XREAD round-trip, preserving the record/tombstone
+    /// interleaving per stream (see [`Segment`]).
+    pub fn poll_segments(&mut self) -> Result<Vec<StreamSegments>> {
         if self.keys.is_empty() {
             return Ok(Vec::new());
         }
@@ -93,31 +174,37 @@ impl StreamReader {
             let _ = write!(buf, "{id}");
         }
         // Build: XREAD COUNT n STREAMS k... id...
-        let mut parts: Vec<&[u8]> = Vec::with_capacity(4 + self.keys.len() * 2);
-        parts.push(b"XREAD");
+        let mut req = Request::new("XREAD");
         if self.batch_limit > 0 {
-            parts.push(b"COUNT");
-            parts.push(self.count_s.as_bytes());
+            req = req.arg("COUNT").arg(self.count_s.as_bytes());
         }
-        parts.push(b"STREAMS");
+        req = req.arg("STREAMS");
         for k in &self.keys {
-            parts.push(k.as_bytes());
+            req = req.arg(k.as_bytes());
         }
         for id in &self.id_bufs {
-            parts.push(id.as_bytes());
+            req = req.arg(id.as_bytes());
         }
-        let reply = self.conn.request(&parts)?;
+        let reply = match self.conn.exchange(std::slice::from_ref(&req)) {
+            Ok(mut replies) => replies.pop().context("empty XREAD reply")?,
+            Err(e) => {
+                log::debug!("reader: XREAD failed ({e:#}); reconnecting once");
+                self.conn.reconnect()?;
+                let mut replies = self.conn.exchange(std::slice::from_ref(&req))?;
+                replies.pop().context("empty XREAD reply")?
+            }
+        };
         self.parse_xread_reply(reply)
     }
 
-    fn parse_xread_reply(&mut self, reply: Value) -> Result<Vec<MicroBatch>> {
+    fn parse_xread_reply(&mut self, reply: Value) -> Result<Vec<StreamSegments>> {
         let streams = match reply {
             Value::NullArray | Value::NullBulk => return Ok(Vec::new()),
             Value::Array(items) => items,
             Value::Error(e) => bail!("endpoint error on XREAD: {e}"),
             other => bail!("unexpected XREAD reply: {other}"),
         };
-        let mut batches = Vec::with_capacity(streams.len());
+        let mut out = Vec::with_capacity(streams.len());
         for stream in streams {
             let pair = stream.as_array().context("XREAD stream entry not array")?;
             anyhow::ensure!(pair.len() == 2, "XREAD stream entry len {}", pair.len());
@@ -133,7 +220,11 @@ impl StreamReader {
                 }
             };
             let entries = pair[1].as_array().context("entries not array")?;
-            let mut records = Vec::with_capacity(entries.len());
+            let mut segments: Vec<Segment> = Vec::new();
+            let mut current = Segment {
+                records: Vec::with_capacity(entries.len()),
+                handoff: None,
+            };
             let mut max_id = self.cursors[pos];
             for e in entries {
                 let e = e.as_array().context("entry not array")?;
@@ -144,20 +235,54 @@ impl StreamReader {
                 .into_owned();
                 let id = EntryId::parse(&id_s)?;
                 let fields = e[1].as_array().context("fields not array")?;
-                // find the record field "r"
+                // record field "r" / handoff fields "h" (epoch) + "d" (dest)
                 let mut payload: Option<&[u8]> = None;
+                let mut handoff: Option<u64> = None;
+                let mut dest: Option<usize> = None;
                 for fv in fields.chunks(2) {
-                    if fv.len() == 2 && fv[0].as_bytes() == Some(b"r") {
+                    if fv.len() != 2 {
+                        continue;
+                    }
+                    let name = fv[0].as_bytes();
+                    if name == Some(b"r") {
                         payload = fv[1].as_bytes();
+                    } else if name == Some(b"h") {
+                        handoff = fv[1]
+                            .as_bytes()
+                            .and_then(|b| std::str::from_utf8(b).ok())
+                            .and_then(|s| s.parse().ok());
+                    } else if name == Some(b"d") {
+                        dest = fv[1]
+                            .as_bytes()
+                            .and_then(|b| std::str::from_utf8(b).ok())
+                            .and_then(|s| s.parse().ok());
                     }
                 }
-                let payload = payload.context("entry missing 'r' field")?;
-                match StreamRecord::decode(payload) {
-                    Ok(rec) => records.push(rec),
-                    Err(err) => {
-                        // corrupt record: skip but advance the cursor so
-                        // we don't spin on it forever
-                        log::warn!("reader: dropping corrupt record in {key} at {id}: {err:#}");
+                if let Some(epoch) = handoff {
+                    // migration tombstone: close the current segment
+                    current.handoff = Some((epoch, dest));
+                    segments.push(std::mem::replace(
+                        &mut current,
+                        Segment {
+                            records: Vec::new(),
+                            handoff: None,
+                        },
+                    ));
+                } else {
+                    match payload {
+                        Some(p) => match StreamRecord::decode(p) {
+                            Ok(rec) => current.records.push(rec),
+                            Err(err) => {
+                                // corrupt record: skip but advance the
+                                // cursor so we don't spin on it forever
+                                log::warn!(
+                                    "reader: dropping corrupt record in {key} at {id}: {err:#}"
+                                );
+                            }
+                        },
+                        None => log::warn!(
+                            "reader: entry without 'r' field in {key} at {id}; skipping"
+                        ),
                     }
                 }
                 if id > max_id {
@@ -165,11 +290,14 @@ impl StreamReader {
                 }
             }
             self.cursors[pos] = max_id;
-            if !records.is_empty() {
-                batches.push(MicroBatch { key, records });
+            if !current.records.is_empty() {
+                segments.push(current);
+            }
+            if !segments.is_empty() {
+                out.push(StreamSegments { key, segments });
             }
         }
-        Ok(batches)
+        Ok(out)
     }
 }
 

@@ -14,7 +14,28 @@
 //! syscall pair per *batch* instead of per command, which is what lets
 //! a single writer saturate the link at small record sizes.  The
 //! throttle is charged once per batch (on the batch's total encoded
-//! bytes), so batching also amortizes token-bucket wakeups.
+//! bytes) **and only on successful flushes**: a frame that dies
+//! mid-flight is not charged, so the reconnect retry does not pay the
+//! WAN budget twice for the same bytes.
+//!
+//! # The [`Conn`] abstraction
+//!
+//! The elasticity layer (broker writers that migrate between
+//! endpoints, and their fault-injection tests) talks to endpoints
+//! through the [`Conn`] trait: one *single-attempt* pipelined
+//! [`exchange`](Conn::exchange) plus an explicit
+//! [`reconnect`](Conn::reconnect).  Unlike [`RespConn::pipeline`] —
+//! which retries a whole batch internally and is therefore only
+//! at-least-once — `Conn` surfaces every transport failure to the
+//! caller, so the epoch-fenced shipping protocol
+//! ([`crate::broker::Shipper`]) can re-register with `HELLO` and
+//! resume exactly-once.  [`RespConn`] implements `Conn` over TCP;
+//! [`sim::SimConn`] implements it in-process with a deterministic
+//! fault schedule (no sockets, no sleeps) for the regression tests.
+//! [`Dialer`] abstracts "connect me to topology endpoint slot N" the
+//! same way.
+
+pub mod sim;
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -23,6 +44,35 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::wire::{self, Decoder, Value};
+
+/// A request/reply stream connection to one endpoint, as the elastic
+/// shipping protocol sees it: pipelined exchanges that either fully
+/// succeed or leave the connection broken until [`reconnect`]ed.
+///
+/// [`reconnect`]: Conn::reconnect
+pub trait Conn: Send {
+    /// Ship all `reqs` as one pipelined frame and drain all replies
+    /// (`replies[i]` answers `reqs[i]`).  **Single attempt**: any
+    /// transport failure is returned as `Err` and the connection must
+    /// be [`reconnect`](Conn::reconnect)ed before reuse — the caller
+    /// owns the retry policy (and its dedup/fencing obligations).
+    fn exchange(&mut self, reqs: &[Request]) -> Result<Vec<Value>>;
+
+    /// Re-establish the connection after a failure.  TCP
+    /// implementations may sleep/back off per their config; the
+    /// in-process sim implementation never sleeps.
+    fn reconnect(&mut self) -> Result<()>;
+
+    /// Human-readable endpoint label for logs.
+    fn label(&self) -> String;
+}
+
+/// Connects [`Conn`]s to topology endpoint slots.  The broker resolves
+/// a group to an endpoint *index*; the dialer turns that index into a
+/// live connection (TCP address lookup, or an in-process sim endpoint).
+pub trait Dialer: Send + Sync {
+    fn dial(&self, endpoint: usize) -> Result<Box<dyn Conn>>;
+}
 
 /// Token-bucket rate limiter (bytes/second), burst = one bucket.
 pub struct Throttle {
@@ -87,6 +137,24 @@ impl Request {
         self
     }
 
+    /// Replace part `i` in place (0 = the command name).  Lets a
+    /// caller reuse a built request across retries while updating one
+    /// small argument (e.g. the epoch of a fenced write) instead of
+    /// re-cloning megabyte payloads.
+    pub fn set_arg(&mut self, i: usize, a: impl Into<Vec<u8>>) {
+        self.parts[i] = a.into();
+    }
+
+    /// Borrow part `i` (0 = the command name).
+    pub fn part(&self, i: usize) -> Option<&[u8]> {
+        self.parts.get(i).map(|p| p.as_slice())
+    }
+
+    /// Insert an argument before part `i` (shifting the rest right).
+    pub fn insert_arg(&mut self, i: usize, a: impl Into<Vec<u8>>) {
+        self.parts.insert(i, a.into());
+    }
+
     /// Number of parts (command name + args).
     pub fn len(&self) -> usize {
         self.parts.len()
@@ -94,6 +162,12 @@ impl Request {
 
     pub fn is_empty(&self) -> bool {
         self.parts.is_empty()
+    }
+
+    /// The command as a decoded RESP value (what the server-side
+    /// dispatcher consumes) — the in-process sim transport's "wire".
+    pub fn to_value(&self) -> Value {
+        Value::Array(self.parts.iter().map(|p| Value::Bulk(p.clone())).collect())
     }
 
     /// Exact serialized size on the wire.
@@ -255,22 +329,26 @@ impl RespConn {
         self.ensure_connected()?;
         self.buf.clear();
         wire::encode_command(parts, &mut self.buf);
-        if let Some(t) = self.throttle.as_mut() {
-            t.consume(self.buf.len());
-        }
         let stream = self.stream.as_mut().unwrap();
         stream.write_all(&self.buf).context("write")?;
         // Read until one full value decodes.
-        loop {
+        let reply = loop {
             if let Some(v) = self.decoder.next()? {
-                return Ok(v);
+                break v;
             }
             let n = stream.read(&mut self.read_buf[..]).context("read")?;
             if n == 0 {
                 bail!("connection closed by peer");
             }
             self.decoder.feed(&self.read_buf[..n]);
+        };
+        // Charge the throttle only once the command actually completed:
+        // a frame that died mid-flight is re-sent on a fresh connection
+        // and must not pay the WAN budget twice for the same bytes.
+        if let Some(t) = self.throttle.as_mut() {
+            t.consume(self.buf.len());
         }
+        Ok(reply)
     }
 
     /// Send a batch of commands as one pipelined write and drain all
@@ -310,9 +388,6 @@ impl RespConn {
         for r in reqs {
             r.encode_into(&mut self.buf);
         }
-        if let Some(t) = self.throttle.as_mut() {
-            t.consume(self.buf.len()); // charged per batch, not per command
-        }
         let stream = self.stream.as_mut().unwrap();
         stream.write_all(&self.buf).context("write")?;
         let mut replies = Vec::with_capacity(reqs.len());
@@ -331,6 +406,12 @@ impl RespConn {
             }
             self.decoder.feed(&self.read_buf[..n]);
         }
+        // Charged per batch, not per command — and only on success, so
+        // a flaky link's reconnect retries don't double-pay the WAN
+        // budget for bytes that never produced a reply.
+        if let Some(t) = self.throttle.as_mut() {
+            t.consume(self.buf.len());
+        }
         Ok(replies)
     }
 
@@ -340,6 +421,53 @@ impl RespConn {
             Value::Simple(s) if s == "PONG" => Ok(()),
             other => bail!("unexpected PING reply: {other}"),
         }
+    }
+}
+
+impl Conn for RespConn {
+    fn exchange(&mut self, reqs: &[Request]) -> Result<Vec<Value>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        match self.try_pipeline(reqs) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                // Leave the connection cleanly broken so the caller's
+                // reconnect() starts from a fresh stream + decoder.
+                self.drop_connection();
+                Err(e)
+            }
+        }
+    }
+
+    fn reconnect(&mut self) -> Result<()> {
+        self.drop_connection();
+        self.ensure_connected()
+    }
+
+    fn label(&self) -> String {
+        self.addr.to_string()
+    }
+}
+
+/// [`Dialer`] over TCP: endpoint slot → address via a shared
+/// [`crate::broker::TopologyHandle`]-style resolver closure.  Kept as
+/// a closure so `transport` does not depend on `broker` types.
+pub struct TcpDialer<F: Fn(usize) -> Result<SocketAddr> + Send + Sync> {
+    resolve: F,
+    cfg: ConnConfig,
+}
+
+impl<F: Fn(usize) -> Result<SocketAddr> + Send + Sync> TcpDialer<F> {
+    pub fn new(resolve: F, cfg: ConnConfig) -> Self {
+        TcpDialer { resolve, cfg }
+    }
+}
+
+impl<F: Fn(usize) -> Result<SocketAddr> + Send + Sync> Dialer for TcpDialer<F> {
+    fn dial(&self, endpoint: usize) -> Result<Box<dyn Conn>> {
+        let addr = (self.resolve)(endpoint)?;
+        Ok(Box::new(RespConn::connect(addr, self.cfg.clone())?))
     }
 }
 
@@ -499,6 +627,46 @@ mod tests {
             .unwrap();
         assert_eq!(replies[0], Value::Simple("PONG".into()));
         conn.ping().unwrap();
+    }
+
+    /// ISSUE 3 satellite: a frame that dies mid-flight must not be
+    /// charged against the WAN throttle — only successful flushes pay,
+    /// so a flaky link's retries don't double-bill the budget.
+    #[test]
+    fn failed_frame_does_not_pay_the_throttle() {
+        // A server that accepts and immediately closes: the frame is
+        // written but no reply ever comes back.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for _ in 0..4 {
+                if let Ok((s, _)) = listener.accept() {
+                    drop(s);
+                }
+            }
+        });
+        let cfg = ConnConfig {
+            max_retries: 0,
+            backoff: Duration::from_millis(1),
+            // 1 KB/s: pre-charging a 64 KiB frame would stall for
+            // about a minute; charging on success only returns fast.
+            throttle_bytes_per_sec: Some(1000.0),
+            ..Default::default()
+        };
+        let mut conn = RespConn::connect(addr, cfg).unwrap();
+        let req = Request::new("XADD")
+            .arg("s")
+            .arg("*")
+            .arg("r")
+            .arg(vec![0u8; 64 * 1024]);
+        let t0 = Instant::now();
+        let res = conn.exchange(std::slice::from_ref(&req));
+        assert!(res.is_err(), "no reply should mean an error");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "failed frame paid the throttle: {:?}",
+            t0.elapsed()
+        );
     }
 
     #[test]

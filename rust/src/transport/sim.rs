@@ -1,0 +1,430 @@
+//! Deterministic in-process transport for fault-injection tests.
+//!
+//! [`SimNet`] is a registry of in-process endpoints (each a real
+//! [`Store`] behind the real [`crate::endpoint::server::execute`]
+//! dispatcher — sim connections exercise exactly the command semantics
+//! production TCP connections do).  [`SimConn`] implements
+//! [`Conn`](super::Conn) against one endpoint with a scripted
+//! [`FaultSchedule`]:
+//!
+//! * **drop after N frames** — the N-th pipelined exchange applies only
+//!   its first `partial_commands` commands to the store, then the
+//!   connection breaks *before any reply reaches the caller* (the
+//!   landed-but-unacked condition the epoch-fenced `HELLO` resume
+//!   protocol must survive);
+//! * **refuse reconnect for K attempts** — dial/reconnect fails K times
+//!   before succeeding (endpoint death + recovery);
+//! * **virtual delay** — per-frame latency is *accumulated, never
+//!   slept*, so tests stay instant and deterministic;
+//! * **on_drop hook** — runs exactly when the scripted drop fires, so a
+//!   test can interleave world changes (a takeover `XHANDOFF`, a
+//!   topology bump) at a precise point of the protocol without threads
+//!   or sleeps.
+//!
+//! Everything is deterministic; [`FaultSchedule::seeded`] derives a
+//! schedule from a `u64` seed for property tests.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{bail, Result};
+
+use super::{Conn, Dialer, Request};
+use crate::endpoint::{server, Store, StoreConfig};
+use crate::wire::Value;
+
+/// Scripted faults for one sim endpoint.  The default schedule is
+/// fault-free.
+#[derive(Default)]
+pub struct FaultSchedule {
+    /// Break the connection on the N-th next frame (0 = the very next
+    /// exchange breaks).  Consumed when it fires.
+    pub drop_after_frames: Option<u64>,
+    /// How many commands of the breaking frame still reach the store
+    /// before the break (models a frame cut mid-flight: the server
+    /// processed a prefix, the client saw no replies).
+    pub partial_commands: usize,
+    /// Refuse this many dial/reconnect attempts before accepting one.
+    pub refuse_connects: u32,
+    /// Virtual per-frame latency (accumulated on the conn, never slept).
+    pub delay_us_per_frame: u64,
+    /// Runs exactly when the scripted drop fires (after the partial
+    /// prefix is applied, before the caller sees the error).
+    pub on_drop: Option<Box<dyn FnOnce() + Send>>,
+    /// Runs once, at the start of the next frame, *before* any of its
+    /// commands are applied and without breaking the connection — the
+    /// deterministic stand-in for "the world changed while this frame
+    /// was in flight" (e.g. a takeover fencing the stream mid-race).
+    pub before_frame: Option<Box<dyn FnOnce() + Send>>,
+}
+
+impl FaultSchedule {
+    /// A deterministic schedule derived from a seed: drops within the
+    /// first `horizon_frames` frames with a random partial prefix and
+    /// 0–2 refused reconnects.  Same seed → same schedule.
+    pub fn seeded(seed: u64, horizon_frames: u64) -> FaultSchedule {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0x51_3D_C0_4E);
+        FaultSchedule {
+            drop_after_frames: Some(rng.next_below(horizon_frames.max(1))),
+            partial_commands: rng.next_below(4) as usize,
+            refuse_connects: rng.next_below(3) as u32,
+            delay_us_per_frame: rng.next_below(500),
+            ..Default::default()
+        }
+    }
+}
+
+struct SimEndpoint {
+    store: Arc<Store>,
+    up: AtomicBool,
+    faults: Mutex<FaultSchedule>,
+    /// Pipelined frames served (diagnostics).
+    frames: AtomicU64,
+}
+
+/// Registry of in-process endpoints, shared by sim dialers and tests.
+#[derive(Default)]
+pub struct SimNet {
+    endpoints: RwLock<Vec<Arc<SimEndpoint>>>,
+}
+
+impl SimNet {
+    pub fn new() -> Arc<SimNet> {
+        Arc::new(SimNet::default())
+    }
+
+    /// Add an endpoint (its index is stable for the net's lifetime).
+    pub fn add_endpoint(&self, cfg: StoreConfig) -> usize {
+        let mut eps = self.endpoints.write().unwrap();
+        eps.push(Arc::new(SimEndpoint {
+            store: Arc::new(Store::new(cfg)),
+            up: AtomicBool::new(true),
+            faults: Mutex::new(FaultSchedule::default()),
+            frames: AtomicU64::new(0),
+        }));
+        eps.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.endpoints.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn endpoint(&self, idx: usize) -> Result<Arc<SimEndpoint>> {
+        let eps = self.endpoints.read().unwrap();
+        match eps.get(idx) {
+            Some(ep) => Ok(ep.clone()),
+            None => bail!("sim: no endpoint {idx} (have {})", eps.len()),
+        }
+    }
+
+    /// Direct handle to an endpoint's store (assertions, injections).
+    pub fn store(&self, idx: usize) -> Arc<Store> {
+        self.endpoint(idx).expect("sim endpoint").store.clone()
+    }
+
+    /// Replace endpoint `idx`'s fault schedule.
+    pub fn inject(&self, idx: usize, schedule: FaultSchedule) {
+        let ep = self.endpoint(idx).expect("sim endpoint");
+        *ep.faults.lock().unwrap() = schedule;
+    }
+
+    /// Mark an endpoint down: live conns break on next use, dials fail.
+    pub fn kill(&self, idx: usize) {
+        self.endpoint(idx)
+            .expect("sim endpoint")
+            .up
+            .store(false, Ordering::SeqCst);
+    }
+
+    /// Bring a killed endpoint back (store contents intact).
+    pub fn revive(&self, idx: usize) {
+        self.endpoint(idx)
+            .expect("sim endpoint")
+            .up
+            .store(true, Ordering::SeqCst);
+    }
+
+    /// Frames served by endpoint `idx` so far.
+    pub fn frames(&self, idx: usize) -> u64 {
+        self.endpoint(idx)
+            .expect("sim endpoint")
+            .frames
+            .load(Ordering::Relaxed)
+    }
+}
+
+/// In-process [`Conn`] to one [`SimNet`] endpoint.
+pub struct SimConn {
+    idx: usize,
+    ep: Arc<SimEndpoint>,
+    broken: bool,
+    virtual_us: u64,
+}
+
+impl SimConn {
+    /// Virtual latency accumulated from the fault schedule's per-frame
+    /// delay (what a wall clock would have seen; nothing ever sleeps).
+    pub fn virtual_elapsed_us(&self) -> u64 {
+        self.virtual_us
+    }
+}
+
+impl Conn for SimConn {
+    fn exchange(&mut self, reqs: &[Request]) -> Result<Vec<Value>> {
+        if self.broken {
+            bail!("sim: connection to endpoint {} is broken", self.idx);
+        }
+        if !self.ep.up.load(Ordering::SeqCst) {
+            self.broken = true;
+            bail!("sim: endpoint {} is down", self.idx);
+        }
+        // Consult (and advance) the fault schedule.
+        let mut breaking = false;
+        let mut applied = reqs.len();
+        let (pre, hook) = {
+            let mut f = self.ep.faults.lock().unwrap();
+            self.virtual_us += f.delay_us_per_frame;
+            let pre = f.before_frame.take();
+            let mut hook = None;
+            if let Some(n) = f.drop_after_frames {
+                if n == 0 {
+                    breaking = true;
+                    applied = f.partial_commands.min(reqs.len());
+                    f.drop_after_frames = None;
+                    hook = f.on_drop.take();
+                } else {
+                    f.drop_after_frames = Some(n - 1);
+                }
+            }
+            (pre, hook)
+        };
+        self.ep.frames.fetch_add(1, Ordering::Relaxed);
+        if let Some(h) = pre {
+            h(); // the frame is "in flight": the world may change first
+        }
+        // The applied prefix goes through the *real* command dispatcher.
+        let mut replies = Vec::with_capacity(applied);
+        for req in &reqs[..applied] {
+            let (reply, _quit) = server::execute(&self.ep.store, &req.to_value());
+            replies.push(reply);
+        }
+        if breaking {
+            self.broken = true;
+            if let Some(h) = hook {
+                h();
+            }
+            bail!(
+                "sim: connection to endpoint {} dropped mid-frame \
+                 ({applied}/{} commands applied, no replies delivered)",
+                self.idx,
+                reqs.len()
+            );
+        }
+        Ok(replies)
+    }
+
+    fn reconnect(&mut self) -> Result<()> {
+        if !self.ep.up.load(Ordering::SeqCst) {
+            bail!("sim: endpoint {} is down", self.idx);
+        }
+        {
+            let mut f = self.ep.faults.lock().unwrap();
+            if f.refuse_connects > 0 {
+                f.refuse_connects -= 1;
+                bail!("sim: endpoint {} refused the connection", self.idx);
+            }
+        }
+        self.broken = false;
+        Ok(())
+    }
+
+    fn label(&self) -> String {
+        format!("sim://{}", self.idx)
+    }
+}
+
+/// [`Dialer`] over a [`SimNet`].  Dialing counts as a connect attempt,
+/// so `refuse_connects` covers fresh dials and reconnects alike.
+pub struct SimDialer {
+    net: Arc<SimNet>,
+}
+
+impl SimDialer {
+    pub fn new(net: Arc<SimNet>) -> SimDialer {
+        SimDialer { net }
+    }
+}
+
+impl Dialer for SimDialer {
+    fn dial(&self, endpoint: usize) -> Result<Box<dyn Conn>> {
+        let ep = self.net.endpoint(endpoint)?;
+        if !ep.up.load(Ordering::SeqCst) {
+            bail!("sim: endpoint {endpoint} is down");
+        }
+        {
+            let mut f = ep.faults.lock().unwrap();
+            if f.refuse_connects > 0 {
+                f.refuse_connects -= 1;
+                bail!("sim: endpoint {endpoint} refused the connection");
+            }
+        }
+        Ok(Box::new(SimConn {
+            idx: endpoint,
+            ep,
+            broken: false,
+            virtual_us: 0,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xaddf(key: &str, epoch: u64, step: u64, payload: &str) -> Request {
+        Request::new("XADDF")
+            .arg(key)
+            .arg(epoch.to_string())
+            .arg(step.to_string())
+            .arg("r")
+            .arg(payload)
+    }
+
+    #[test]
+    fn exchange_runs_real_dispatcher() {
+        let net = SimNet::new();
+        let e = net.add_endpoint(StoreConfig::default());
+        let mut conn = SimDialer::new(net.clone()).dial(e).unwrap();
+        let replies = conn
+            .exchange(&[
+                Request::new("PING"),
+                Request::new("XADD").arg("s").arg("*").arg("r").arg("x"),
+                Request::new("XLEN").arg("s"),
+            ])
+            .unwrap();
+        assert_eq!(replies.len(), 3);
+        assert_eq!(replies[0], Value::Simple("PONG".into()));
+        assert_eq!(replies[2], Value::Int(1));
+        assert_eq!(net.store(e).xlen("s"), 1);
+    }
+
+    #[test]
+    fn drop_after_frames_applies_partial_prefix_without_replies() {
+        let net = SimNet::new();
+        let e = net.add_endpoint(StoreConfig::default());
+        net.inject(
+            e,
+            FaultSchedule {
+                drop_after_frames: Some(1), // second frame breaks
+                partial_commands: 2,
+                ..Default::default()
+            },
+        );
+        let mut conn = SimDialer::new(net.clone()).dial(e).unwrap();
+        conn.exchange(&[xaddf("s", 1, 0, "a")]).unwrap(); // frame 0 fine
+        let err = conn
+            .exchange(&[xaddf("s", 1, 1, "b"), xaddf("s", 1, 2, "c"), xaddf("s", 1, 3, "d")])
+            .unwrap_err();
+        assert!(err.to_string().contains("dropped mid-frame"), "{err}");
+        // exactly the 2-command prefix landed, caller saw nothing
+        assert_eq!(net.store(e).xlen("s"), 3);
+        assert_eq!(net.store(e).fenced_last_step("s"), Some(2));
+        // conn unusable until reconnected
+        assert!(conn.exchange(&[Request::new("PING")]).is_err());
+        conn.reconnect().unwrap();
+        let replies = conn.exchange(&[Request::new("PING")]).unwrap();
+        assert_eq!(replies[0], Value::Simple("PONG".into()));
+    }
+
+    #[test]
+    fn refuse_connects_counts_down_then_accepts() {
+        let net = SimNet::new();
+        let e = net.add_endpoint(StoreConfig::default());
+        net.inject(
+            e,
+            FaultSchedule {
+                refuse_connects: 2,
+                ..Default::default()
+            },
+        );
+        let dialer = SimDialer::new(net.clone());
+        assert!(dialer.dial(e).is_err());
+        assert!(dialer.dial(e).is_err());
+        let mut conn = dialer.dial(e).unwrap();
+        conn.exchange(&[Request::new("PING")]).unwrap();
+    }
+
+    #[test]
+    fn kill_breaks_conns_and_dials_until_revive() {
+        let net = SimNet::new();
+        let e = net.add_endpoint(StoreConfig::default());
+        let dialer = SimDialer::new(net.clone());
+        let mut conn = dialer.dial(e).unwrap();
+        net.kill(e);
+        assert!(conn.exchange(&[Request::new("PING")]).is_err());
+        assert!(conn.reconnect().is_err());
+        assert!(dialer.dial(e).is_err());
+        net.revive(e);
+        conn.reconnect().unwrap();
+        conn.exchange(&[Request::new("PING")]).unwrap();
+    }
+
+    #[test]
+    fn on_drop_hook_fires_exactly_at_the_break() {
+        let net = SimNet::new();
+        let e = net.add_endpoint(StoreConfig::default());
+        let store = net.store(e);
+        net.inject(
+            e,
+            FaultSchedule {
+                drop_after_frames: Some(0),
+                partial_commands: 1,
+                on_drop: Some(Box::new(move || {
+                    // takeover happens exactly while the conn is down
+                    store.xhandoff("s", 9, None).unwrap();
+                })),
+                ..Default::default()
+            },
+        );
+        let mut conn = SimDialer::new(net.clone()).dial(e).unwrap();
+        let err = conn
+            .exchange(&[xaddf("s", 1, 0, "a"), xaddf("s", 1, 1, "b")])
+            .unwrap_err();
+        assert!(err.to_string().contains("dropped"), "{err}");
+        // prefix landed at epoch 1, then the hook fenced the stream at 9
+        assert_eq!(net.store(e).stream_epoch("s"), 9);
+        assert_eq!(net.store(e).fenced_last_step("s"), Some(0));
+    }
+
+    #[test]
+    fn seeded_schedule_is_deterministic_and_never_sleeps() {
+        let a = FaultSchedule::seeded(42, 10);
+        let b = FaultSchedule::seeded(42, 10);
+        assert_eq!(a.drop_after_frames, b.drop_after_frames);
+        assert_eq!(a.partial_commands, b.partial_commands);
+        assert_eq!(a.refuse_connects, b.refuse_connects);
+        assert!(a.drop_after_frames.unwrap() < 10);
+
+        // virtual delay accumulates without sleeping
+        let net = SimNet::new();
+        let e = net.add_endpoint(StoreConfig::default());
+        net.inject(
+            e,
+            FaultSchedule {
+                delay_us_per_frame: 250,
+                ..Default::default()
+            },
+        );
+        let mut conn = SimDialer::new(net.clone()).dial(e).unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..4 {
+            conn.exchange(&[Request::new("PING")]).unwrap();
+        }
+        assert!(t0.elapsed() < std::time::Duration::from_millis(100));
+        assert_eq!(net.frames(e), 4);
+    }
+}

@@ -19,15 +19,17 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::analysis::{AnalysisResult, CsvSink, DmdConfig, DmdEngine};
-use crate::broker::{Broker, BrokerConfig};
+use crate::broker::{Broker, BrokerConfig, QosThresholds, Rebalancer, TopologyHandle};
 use crate::config::{IoMode, WorkflowConfig};
 use crate::endpoint::{EndpointServer, StoreConfig};
 use crate::metrics::WorkflowMetrics;
 use crate::runtime::ArtifactSet;
 use crate::sim::{SimConfig, SimRunner};
-use crate::streamproc::{StreamReader, StreamingConfig, StreamingContext};
+use crate::streamproc::{
+    ElasticReader, Poller, StreamReader, StreamingConfig, StreamingContext,
+};
 use crate::synth::{self, SynthConfig};
-use crate::transport::ConnConfig;
+use crate::transport::{ConnConfig, Dialer, TcpDialer};
 
 /// The running Cloud side: endpoints + streaming + analysis + collector.
 pub struct CloudSide {
@@ -35,6 +37,9 @@ pub struct CloudSide {
     streaming: Option<StreamingContext>,
     collector: Option<std::thread::JoinHandle<Vec<AnalysisResult>>>,
     pub metrics: WorkflowMetrics,
+    /// The shared versioned topology when the run is elastic
+    /// (`cfg.rebalance_ms > 0`); `None` for static runs.
+    pub topology: Option<TopologyHandle>,
     last_result_us: Arc<AtomicU64>,
 }
 
@@ -61,19 +66,43 @@ impl CloudSide {
             )?);
         }
 
-        // Readers: one per endpoint, subscribed to its groups' streams
-        // (the paper's fixed executor↔stream mapping).
+        // Readers.  Static runs keep the paper's fixed executor↔stream
+        // mapping (one reader per endpoint).  Elastic runs poll through
+        // a single ElasticReader that follows streams across endpoints
+        // as the rebalancer migrates them.
         let groups = crate::broker::GroupMap::new(cfg.ranks, cfg.group_size, n_endpoints)?;
-        let mut readers = Vec::with_capacity(n_endpoints);
-        for (e, srv) in endpoints.iter().enumerate() {
-            let keys = groups.streams_of_endpoint(e, field);
-            readers.push(StreamReader::connect(
-                srv.addr(),
+        let addrs: Vec<std::net::SocketAddr> =
+            endpoints.iter().map(|e| e.addr()).collect();
+        let mut readers: Vec<Box<dyn Poller>> = Vec::with_capacity(n_endpoints);
+        let topology = if cfg.rebalance_ms > 0 {
+            let topo = TopologyHandle::new_static(groups.clone(), addrs)?;
+            let resolver = topo.clone();
+            let dialer: Arc<dyn Dialer> = Arc::new(TcpDialer::new(
+                move |e| resolver.endpoint_addr(e),
+                ConnConfig::default(),
+            ));
+            let keys: Vec<String> = (0..cfg.ranks)
+                .map(|r| crate::record::stream_key(field, r as u32))
+                .collect();
+            readers.push(Box::new(ElasticReader::new(
+                topo.clone(),
+                dialer,
                 keys,
                 0,
-                ConnConfig::default(),
-            )?);
-        }
+            )?));
+            Some(topo)
+        } else {
+            for (e, srv) in endpoints.iter().enumerate() {
+                let keys = groups.streams_of_endpoint(e, field);
+                readers.push(Box::new(StreamReader::connect(
+                    srv.addr(),
+                    keys,
+                    0,
+                    ConnConfig::default(),
+                )?));
+            }
+            None
+        };
 
         let engine = Arc::new(DmdEngine::new(
             DmdConfig {
@@ -136,6 +165,7 @@ impl CloudSide {
             streaming: Some(streaming),
             collector: Some(collector),
             metrics,
+            topology,
             last_result_us,
         })
     }
@@ -225,28 +255,60 @@ pub fn run_cfd_workflow(
         csv,
         Some(cfg.snapshot_dim()?),
     )?;
-    let broker = Arc::new(Broker::new(
-        BrokerConfig {
-            group_size: cfg.group_size,
-            queue_cap: cfg.queue_cap,
-            policy: if cfg.drop_oldest {
-                crate::broker::QueuePolicy::DropOldest
-            } else {
-                crate::broker::QueuePolicy::Block
-            },
-            batch_max_records: cfg.batch_max_records,
-            batch_max_bytes: cfg.batch_max_bytes,
-            linger_ms: cfg.linger_ms,
-            ..BrokerConfig::new(cloud.endpoint_addrs())
+    let broker_cfg = BrokerConfig {
+        group_size: cfg.group_size,
+        queue_cap: cfg.queue_cap,
+        policy: if cfg.drop_oldest {
+            crate::broker::QueuePolicy::DropOldest
+        } else {
+            crate::broker::QueuePolicy::Block
         },
-        cfg.ranks,
-        metrics.clone(),
-    )?);
+        batch_max_records: cfg.batch_max_records,
+        batch_max_bytes: cfg.batch_max_bytes,
+        linger_ms: cfg.linger_ms,
+        ..BrokerConfig::new(cloud.endpoint_addrs())
+    };
+    // Elastic runs share the Cloud side's versioned topology with the
+    // broker writers and run the QoS rebalancer alongside.
+    let (broker, rebalancer) = match cloud.topology.clone() {
+        Some(topo) => {
+            let conn_cfg = broker_cfg.conn.clone();
+            let resolver = topo.clone();
+            let dialer: Arc<dyn Dialer> = Arc::new(TcpDialer::new(
+                move |e| resolver.endpoint_addr(e),
+                conn_cfg,
+            ));
+            let broker = Arc::new(Broker::with_topology(
+                broker_cfg,
+                topo.clone(),
+                dialer,
+                metrics.clone(),
+            ));
+            let reb = Rebalancer::start(
+                topo,
+                metrics.clone(),
+                QosThresholds {
+                    flush_p95_us: cfg.qos_flush_p95_us,
+                    queue_depth: cfg.qos_queue_depth,
+                    reconnects: cfg.qos_reconnects,
+                },
+                Duration::from_millis(cfg.rebalance_ms),
+            );
+            (broker, Some(reb))
+        }
+        None => (
+            Arc::new(Broker::new(broker_cfg, cfg.ranks, metrics.clone())?),
+            None,
+        ),
+    };
 
     let t0 = Instant::now();
     let start_us = crate::util::epoch_micros();
     let rep = SimRunner::run(&sim_cfg, Some(broker), artifacts)?;
     let sim_elapsed = rep.elapsed;
+    if let Some(reb) = rebalancer {
+        reb.stop(); // no topology churn while the tail drains
+    }
     let (results, last_us) = cloud.finish()?;
     let workflow_elapsed = if last_us > start_us {
         Duration::from_micros(last_us - start_us)
@@ -395,6 +457,36 @@ mod tests {
         }
         assert_eq!(rep.metrics.dropped.get(), 0);
         assert!(rep.metrics.shipped.bytes() > 0);
+    }
+
+    /// ISSUE 3: the elastic wiring (versioned topology + ElasticReader
+    /// + rebalancer) behind `rebalance_ms > 0` must reproduce the
+    /// static run exactly when QoS stays quiet.
+    #[test]
+    fn elastic_workflow_matches_static_behaviour() {
+        let mut cfg = tiny_cfg(IoMode::Broker);
+        cfg.rebalance_ms = 25;
+        // thresholds a healthy loopback run never crosses
+        cfg.qos_flush_p95_us = 60_000_000;
+        cfg.qos_queue_depth = 1 << 32;
+        cfg.qos_reconnects = 1 << 32;
+        let rep = run_cfd_workflow(&cfg, None).unwrap();
+        assert_eq!(rep.analysis_results.len(), 8 * 4);
+        assert_eq!(rep.metrics.dropped.get(), 0);
+        assert_eq!(
+            rep.metrics.migrations.get(),
+            0,
+            "quiet QoS must not migrate anything"
+        );
+        assert_eq!(rep.metrics.stale_rejections.get(), 0);
+        for r in 0..4u32 {
+            let per = rep
+                .analysis_results
+                .iter()
+                .filter(|a| a.rank == r)
+                .count();
+            assert_eq!(per, 8, "rank {r}");
+        }
     }
 
     #[test]

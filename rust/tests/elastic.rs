@@ -1,0 +1,248 @@
+//! ISSUE 3 integration: 4 ranks streaming through a mid-run endpoint
+//! scale-out (1→2) and scale-in (2→1).  Every record must land exactly
+//! once (union across endpoint segments, no per-endpoint duplicates),
+//! the analysis layer must see every window fire with no gaps, and the
+//! final per-stream DMD result must match the offline `linalg::dmd`
+//! reference on the same window to 1e-6 — i.e. the elastic run is
+//! indistinguishable from a static-topology run (same oracle pattern
+//! as `tests/pipeline.rs`).
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use elasticbroker::analysis::{AnalysisResult, DmdConfig, DmdEngine};
+use elasticbroker::broker::{
+    Broker, BrokerConfig, BrokerCtx, GroupMap, QueuePolicy, TopologyHandle,
+};
+use elasticbroker::endpoint::{EndpointServer, EntryId, StoreConfig};
+use elasticbroker::linalg::{dmd, Mat};
+use elasticbroker::metrics::WorkflowMetrics;
+use elasticbroker::record::StreamRecord;
+use elasticbroker::streamproc::{ElasticReader, StreamingConfig, StreamingContext};
+use elasticbroker::transport::{ConnConfig, Dialer, TcpDialer};
+
+const RANKS: u32 = 4;
+const DIM: usize = 32;
+const STEPS: u64 = 20;
+const WINDOW: usize = 6; // m; the engine windows m+1 = 7 snapshots
+const DMD_RANK: usize = 4;
+
+/// Deterministic decaying-oscillation snapshot for (rank, step).
+fn snapshot(rank: u32, step: u64) -> Vec<f32> {
+    let decay = 0.95f64.powi(step as i32);
+    (0..DIM)
+        .map(|i| {
+            let phase = 0.17 * i as f64 + 0.29 * rank as f64;
+            (decay * (0.4 * step as f64 + phase).cos()) as f32
+        })
+        .collect()
+}
+
+/// Write one phase of steps on every rank, then wait for the writers'
+/// queues to drain so topology changes land between phases.
+fn write_phase(ctxs: &[BrokerCtx], lo: u64, hi: u64) {
+    for step in lo..hi {
+        for (r, ctx) in ctxs.iter().enumerate() {
+            ctx.write(step, &[DIM as u32], &snapshot(r as u32, step)).unwrap();
+        }
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while ctxs.iter().any(|c| c.backlog() > 0) && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(
+        ctxs.iter().all(|c| c.backlog() == 0),
+        "writer backlog did not drain"
+    );
+}
+
+/// All record steps of `key` on `srv`, tombstones excluded; asserts the
+/// segment is strictly step-increasing (per-endpoint exactly-once).
+fn segment_steps(srv: &EndpointServer, key: &str) -> Vec<u64> {
+    let entries = srv.store().read_after(key, EntryId::ZERO, 0);
+    let mut steps = Vec::new();
+    for e in &entries {
+        if e.fields[0].0 == b"h" {
+            continue;
+        }
+        let rec = StreamRecord::decode(&e.fields[0].1).unwrap();
+        if let Some(&prev) = steps.last() {
+            assert!(rec.step > prev, "{key}: segment not strictly increasing");
+        }
+        steps.push(rec.step);
+    }
+    steps
+}
+
+#[test]
+fn elastic_scale_out_and_in_is_exactly_once_and_matches_static_dmd() {
+    let e0 = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+    let e1 = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+    let metrics = WorkflowMetrics::new();
+
+    // group_size 1 → four groups; the topology starts with e0 only.
+    let groups = GroupMap::new(RANKS as usize, 1, 1).unwrap();
+    let topology = TopologyHandle::new_static(groups, vec![e0.addr()]).unwrap();
+    let resolver = topology.clone();
+    let dialer: Arc<dyn Dialer> = Arc::new(TcpDialer::new(
+        move |e| resolver.endpoint_addr(e),
+        ConnConfig::default(),
+    ));
+    let broker = Arc::new(Broker::with_topology(
+        BrokerConfig {
+            group_size: 1,
+            queue_cap: 32,
+            policy: QueuePolicy::Block,
+            batch_max_records: 4,
+            ..BrokerConfig::new(vec![e0.addr()])
+        },
+        topology.clone(),
+        dialer.clone(),
+        metrics.clone(),
+    ));
+
+    // Cloud side: one ElasticReader follows all four streams across
+    // endpoints; windowed DMD per stream.
+    let engine = Arc::new(
+        DmdEngine::new(
+            DmdConfig {
+                window: WINDOW,
+                rank: DMD_RANK,
+                hop: 1,
+                backend: elasticbroker::analysis::DmdBackend::Rust,
+                ..Default::default()
+            },
+            None,
+            metrics.clone(),
+        )
+        .unwrap(),
+    );
+    let keys: Vec<String> = (0..RANKS).map(|r| format!("synth/{r}")).collect();
+    let reader = ElasticReader::new(topology.clone(), dialer.clone(), keys, 0).unwrap();
+    let (tx, rx) = channel();
+    let eng = engine.clone();
+    let ctx = StreamingContext::start(
+        StreamingConfig {
+            trigger_interval: Duration::from_millis(25),
+            executors: 4,
+            batch_limit: 0,
+        },
+        vec![reader],
+        move |b| eng.process(b),
+        tx,
+    );
+
+    // --- HPC side: three phases around a scale-out and a scale-in.
+    let ctxs: Vec<BrokerCtx> = (0..RANKS).map(|r| broker.init("synth", r).unwrap()).collect();
+    write_phase(&ctxs, 0, 7);
+
+    let (slot, epoch2) = topology.scale_out(e1.addr()).unwrap();
+    assert_eq!(slot, 1);
+    assert_eq!(epoch2, 2);
+    write_phase(&ctxs, 7, 14);
+    {
+        // mid-run checkpoint: the rebalance moved two groups onto e1
+        let t = topology.snapshot();
+        assert_eq!(t.groups_of_endpoint(0).len(), 2);
+        assert_eq!(t.groups_of_endpoint(1).len(), 2);
+    }
+
+    let epoch3 = topology.drain_endpoint(1).unwrap();
+    assert_eq!(epoch3, 3);
+    write_phase(&ctxs, 14, STEPS);
+    for c in ctxs {
+        c.finalize().unwrap();
+    }
+
+    // --- Exactly once across the migrations.
+    assert_eq!(metrics.dropped.get(), 0);
+    assert_eq!(metrics.shipped.records(), (RANKS as u64) * STEPS);
+    assert_eq!(metrics.migrations.get(), 4, "2 groups out + 2 groups back");
+    assert_eq!(metrics.handoffs.get(), 4);
+    assert_eq!(metrics.stale_rejections.get(), 0, "graceful run: no fencing saves");
+    for r in 0..RANKS {
+        let key = format!("synth/{r}");
+        let s0 = segment_steps(&e0, &key);
+        let s1 = segment_steps(&e1, &key);
+        let mut union: Vec<u64> = s0.iter().chain(s1.iter()).copied().collect();
+        union.sort_unstable();
+        assert_eq!(
+            union,
+            (0..STEPS).collect::<Vec<_>>(),
+            "{key}: union of segments must be every step exactly once \
+             (e0: {s0:?}, e1: {s1:?})"
+        );
+    }
+
+    // --- The analysis saw every window fire, in order, no gaps.
+    let per_rank = STEPS as usize - WINDOW;
+    let expect = per_rank * RANKS as usize;
+    let mut results: Vec<AnalysisResult> = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while results.len() < expect && Instant::now() < deadline {
+        if let Ok((_seq, res)) = rx.recv_timeout(Duration::from_millis(100)) {
+            results.push(res);
+        }
+    }
+    ctx.stop().unwrap();
+    results.extend(rx.try_iter().map(|(_, r)| r));
+    assert_eq!(results.len(), expect, "analysis count");
+    for r in 0..RANKS {
+        let key = format!("synth/{r}");
+        let mut steps: Vec<u64> = results
+            .iter()
+            .filter(|a| a.key == key)
+            .map(|a| a.step)
+            .collect();
+        steps.sort_unstable();
+        assert_eq!(
+            steps,
+            (WINDOW as u64..STEPS).collect::<Vec<_>>(),
+            "{key}: fire steps have gaps — records were lost or reordered"
+        );
+    }
+
+    // --- Oracle: the final window's DMD must match the offline
+    // reference (≡ a static-topology run; the snapshots are a pure
+    // function of (rank, step), so this is the same window a static
+    // run would analyse).
+    for rank in 0..RANKS {
+        let key = format!("synth/{rank}");
+        let streamed = results
+            .iter()
+            .filter(|a| a.key == key)
+            .max_by_key(|a| a.step)
+            .unwrap();
+        assert_eq!(streamed.step, STEPS - 1);
+        assert_eq!(streamed.backend, "rust");
+
+        let m1 = WINDOW + 1;
+        let mut x = vec![0.0f64; DIM * m1];
+        for (j, step) in (STEPS - m1 as u64..STEPS).enumerate() {
+            let snap = snapshot(rank, step);
+            for i in 0..DIM {
+                x[i * m1 + j] = snap[i] as f64;
+            }
+        }
+        let xm = Mat::from_slice(DIM, m1, &x).unwrap();
+        let (eigs, sigma, stability) = dmd::analyze_window(&xm, DMD_RANK).unwrap();
+
+        assert!(
+            (streamed.stability - stability).abs() <= 1e-6,
+            "{key}: stability {} vs offline {}",
+            streamed.stability,
+            stability
+        );
+        assert_eq!(streamed.eigs.len(), eigs.len());
+        for (a, b) in streamed.eigs.iter().zip(&eigs) {
+            assert!(
+                (a.re - b.re).abs() <= 1e-6 && (a.im - b.im).abs() <= 1e-6,
+                "{key}: eig {a:?} vs offline {b:?}"
+            );
+        }
+        for (a, b) in streamed.sigma.iter().zip(&sigma) {
+            assert!((a - b).abs() <= 1e-6, "{key}: sigma {a} vs offline {b}");
+        }
+    }
+}
