@@ -61,6 +61,7 @@ fn main() -> anyhow::Result<()> {
             stream_maxlen: 0,
             max_memory: 0,
             shards,
+            ..Default::default()
         }));
         let per_thread = 40_000usize;
         let value = vec![0u8; 256];

@@ -1,0 +1,134 @@
+//! Microbenchmark: the endpoint write-ahead log (ISSUE 4).
+//!
+//! * **append cost vs durability**: µs/record for `fsync=always` with
+//!   group-commit batches of 1 / 8 / 64 (batch 1 = one fsync per
+//!   record, the Redis `appendfsync always` analogue; batch k = k
+//!   appends sharing one fsync, what concurrent endpoint connections
+//!   get from the WAL's group commit),
+//! * **replay throughput**: MB/s and entries/s to recover a log, the
+//!   number that bounds endpoint restart time.
+//!
+//! `cargo bench --bench micro_wal`
+//!
+//! Emits `BENCH_wal.json` so CI tracks the trajectory.  Set
+//! `BENCH_SMOKE=1` for tiny iteration counts (numbers then indicative
+//! only).  The bench asserts its own budget: replay must finish inside
+//! `replay.budget_ms` even in smoke mode.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use elasticbroker::endpoint::wal::{FsyncPolicy, Wal, WalConfig};
+use elasticbroker::endpoint::{Entry, EntryId};
+
+fn bench_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("eb-bench-wal-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn entry(ms: u64, payload_len: usize) -> Entry {
+    Entry {
+        id: EntryId { ms, seq: 0 },
+        fields: vec![(b"r".to_vec(), vec![0x5A; payload_len])],
+    }
+}
+
+/// µs per record appending `n` 1 KiB records in group-commit batches of
+/// `batch` (one fsync per batch).
+fn append_us_per_record(n: u64, batch: u64, tag: &str) -> anyhow::Result<f64> {
+    let dir = bench_dir(tag);
+    // Policy Never + explicit sync per batch == group commit of `batch`
+    // (batch 1 is exactly fsync=always).
+    let (wal, _) = Wal::open(WalConfig {
+        dir: dir.clone(),
+        fsync: FsyncPolicy::Never,
+        segment_bytes: 256 << 20, // no rotation mid-measurement
+    })?;
+    let t0 = Instant::now();
+    let mut i = 0u64;
+    while i < n {
+        let take = batch.min(n - i);
+        for j in 0..take {
+            wal.append_add("bench/0", &entry(i + j + 1, 1024), 1, i + j)?;
+        }
+        wal.sync()?;
+        i += take;
+    }
+    let us = t0.elapsed().as_secs_f64() * 1e6 / n as f64;
+    drop(wal);
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(us)
+}
+
+fn main() -> anyhow::Result<()> {
+    elasticbroker::util::logger::init();
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+
+    // --- group-commit append cost -----------------------------------
+    println!("# wal append µs/record, 1 KiB records, fsync=always vs group-commit batches");
+    let n = if smoke { 64u64 } else { 2048u64 };
+    let always_us = append_us_per_record(n, 1, "b1")?;
+    let batch8_us = append_us_per_record(n, 8, "b8")?;
+    let batch64_us = append_us_per_record(n, 64, "b64")?;
+    let speedup8 = always_us / batch8_us.max(1e-9);
+    let speedup64 = always_us / batch64_us.max(1e-9);
+    println!(
+        "  fsync=always: {always_us:>8.1} µs   batch 8: {batch8_us:>8.1} µs ({speedup8:.1}x)   \
+         batch 64: {batch64_us:>8.1} µs ({speedup64:.1}x)"
+    );
+
+    // --- replay throughput ------------------------------------------
+    let entries = if smoke { 5_000u64 } else { 100_000u64 };
+    let payload = 64usize;
+    let dir = bench_dir("replay");
+    {
+        let (wal, _) = Wal::open(WalConfig {
+            dir: dir.clone(),
+            fsync: FsyncPolicy::Never,
+            segment_bytes: 8 << 20,
+        })?;
+        for i in 0..entries {
+            wal.append_add("bench/0", &entry(i + 1, payload), 1, i)?;
+        }
+        wal.sync()?;
+    }
+    let t0 = Instant::now();
+    let (wal, replay) = Wal::open(WalConfig {
+        dir: dir.clone(),
+        fsync: FsyncPolicy::Never,
+        segment_bytes: 8 << 20,
+    })?;
+    let replay_ms = t0.elapsed().as_secs_f64() * 1e3;
+    anyhow::ensure!(
+        replay.entries == entries,
+        "replay lost entries: {} of {entries}",
+        replay.entries
+    );
+    let bytes = wal.stats().bytes as f64;
+    let mb_per_s = bytes / 1e6 / (replay_ms / 1e3).max(1e-9);
+    let entries_per_s = entries as f64 / (replay_ms / 1e3).max(1e-9);
+    println!("\n# wal replay: {entries} entries, {:.1} MB", bytes / 1e6);
+    println!(
+        "  {replay_ms:.1} ms → {mb_per_s:.0} MB/s, {entries_per_s:.0} entries/s"
+    );
+    drop(wal);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // The self-reported budget CI holds the bench to: recovery of this
+    // log must never take longer than this, even on a cold smoke runner.
+    let budget_ms = 30_000.0f64;
+    anyhow::ensure!(
+        replay_ms <= budget_ms,
+        "replay took {replay_ms:.0} ms, over the {budget_ms:.0} ms budget"
+    );
+
+    // --- machine-readable trajectory --------------------------------
+    let json = format!(
+        r#"{{"bench":"micro_wal","smoke":{smoke},"append":{{"records":{n},"always_us":{always_us:.2},"batch8_us":{batch8_us:.2},"batch64_us":{batch64_us:.2},"speedup8":{speedup8:.2},"speedup64":{speedup64:.2}}},"replay":{{"entries":{entries},"ms":{replay_ms:.1},"mb_per_s":{mb_per_s:.1},"entries_per_s":{entries_per_s:.0},"budget_ms":{budget_ms:.0}}}}}"#
+    );
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_wal.json");
+    std::fs::write(out_path, &json)?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

@@ -82,5 +82,31 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\n(values near 0 ⇒ steady flow in that region; larger ⇒ transients)");
+
+    // --- the same pipeline with durable endpoints (ISSUE 4) ----------
+    // Each endpoint writes a segmented WAL under `wal_dir/ep<i>`; with
+    // retention on, the streaming side acknowledges consumed cursors
+    // (`XACKPOS`) and the endpoints trim their logs by them.  A crashed
+    // endpoint restarted on the same directory replays its streams and
+    // fencing state — see `rust/tests/crash_restart.rs` for that story.
+    let wal_dir = std::env::temp_dir().join(format!("eb-quickstart-wal-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&wal_dir);
+    let cfg = WorkflowConfig {
+        steps: 100,
+        wal_dir: wal_dir.to_string_lossy().into_owned(),
+        wal_fsync: elasticbroker::endpoint::FsyncPolicy::EveryMs(5),
+        retention: true,
+        ..cfg
+    };
+    println!("\n=== once more, with persistence (wal_dir = {}) ===", cfg.wal_dir);
+    let report = run_cfd_workflow(&cfg, None)?;
+    println!(
+        "durable run: {} analyses in {:.2} s, {} shipped, {} replay gap(s)",
+        report.analysis_results.len(),
+        report.workflow_elapsed.as_secs_f64(),
+        util::fmt_bytes(report.metrics.shipped.bytes()),
+        report.metrics.replay_gaps.get()
+    );
+    let _ = std::fs::remove_dir_all(&wal_dir);
     Ok(())
 }

@@ -60,6 +60,11 @@ pub struct EndpointSample {
     pub queue_depth: u64,
     /// Reconnect attempts since the previous sweep.
     pub reconnect_delta: u64,
+    /// The endpoint persists its streams to a WAL (ISSUE 4): preferred
+    /// as a shed target over an equally-loaded in-memory endpoint —
+    /// migrating a stream onto durable ground costs nothing extra and
+    /// upgrades its fault story.
+    pub durable: bool,
 }
 
 /// What a sweep decided.  Empty plan = topology untouched.
@@ -118,12 +123,14 @@ pub fn evaluate(
         if my_groups.is_empty() {
             continue;
         }
-        // Least-loaded calm endpoint strictly below our load.
+        // Least-loaded calm endpoint strictly below our load; between
+        // equally-loaded candidates a durable (WAL-backed) endpoint
+        // wins, then the lowest slot index.
         let target = healthy
             .iter()
             .copied()
             .filter(|&t| t != e && !pressured(t))
-            .min_by_key(|&t| (topo.groups_of_endpoint(t).len(), t));
+            .min_by_key(|&t| (topo.groups_of_endpoint(t).len(), !sample(t).durable, t));
         if let Some(t) = target {
             if topo.groups_of_endpoint(t).len() < my_groups.len() {
                 plan.moves.push((my_groups[0], t));
@@ -209,6 +216,7 @@ impl Rebalancer {
                                 .windowed_quantile(&mut flush_windows[e], 0.95),
                             queue_depth: slot.queue_depth.take(),
                             reconnect_delta: delta,
+                            durable: slot.durable.get() > 0,
                         });
                     }
                     let plan = evaluate(&topo, &samples, &thresholds);
@@ -336,6 +344,31 @@ mod tests {
         assert_eq!(plan.moves.len(), 1);
         let (_, target) = plan.moves[0];
         assert!(target == 1 || target == 2);
+    }
+
+    /// ISSUE 4: between equally-loaded calm targets, a durable
+    /// endpoint wins the shed.
+    #[test]
+    fn shed_prefers_durable_target_on_ties() {
+        let h = topo(48, 16, 3); // 3 groups over e0..e2
+        h.assign(&[(1, 0), (2, 0)]).unwrap(); // all 3 groups on e0
+        let samples = vec![
+            EndpointSample {
+                queue_depth: 64,
+                ..Default::default()
+            },
+            EndpointSample::default(), // e1: empty, in-memory
+            EndpointSample {
+                durable: true, // e2: empty, WAL-backed
+                ..Default::default()
+            },
+        ];
+        let plan = evaluate(&h.snapshot(), &samples, &QosThresholds::default());
+        assert_eq!(plan.moves.len(), 1);
+        assert_eq!(plan.moves[0].1, 2, "durable endpoint should win the tie");
+        // with no durability info, the lowest index keeps winning
+        let plan = evaluate(&h.snapshot(), &samples[..2], &QosThresholds::default());
+        assert_eq!(plan.moves[0].1, 1);
     }
 
     #[test]

@@ -33,6 +33,16 @@
 //!   behaviour: only the rejected records are retried, in order, with
 //!   a single-record probe while backing off, so a wedged endpoint
 //!   costs one record per tick, not the whole batch.
+//! * **Restarted endpoints (ISSUE 4).**  Reconnecting to an endpoint
+//!   that crashed and recovered from its WAL is just the recovery path:
+//!   `HELLO` reports the replayed high-water mark and the re-shipped
+//!   frame dedupes against it.  The shipper additionally compares that
+//!   mark with the highest step it was ever *acked* for on this
+//!   endpoint — if the recovered mark is lower, the endpoint restarted
+//!   from a stale log (fsync policy looser than `always`) and acked
+//!   records are gone for good; the loss is counted in the
+//!   `replay_gaps` metric and logged, since no re-ship can mend it
+//!   (the records were dropped from the queue at ack time).
 //!
 //! [`ship`]: Shipper::ship
 
@@ -61,6 +71,11 @@ pub struct Shipper {
     /// Whether we ever completed a registration (migrations are only
     /// counted after the first one).
     registered: bool,
+    /// Highest step the *current endpoint* acknowledged (stored or
+    /// deduped) for this stream's current segment — the bar a restarted
+    /// endpoint's recovered high-water mark is measured against.
+    /// Reset on migration (a fresh endpoint starts a fresh segment).
+    acked_step: Option<u64>,
     metrics: WorkflowMetrics,
     stats: Arc<EndpointStats>,
     /// Recovery attempts per failure before giving up.
@@ -93,6 +108,7 @@ impl Shipper {
             endpoint: usize::MAX, // forces the first sync to dial
             epoch: 0,
             registered: false,
+            acked_step: None,
             metrics,
             stats,
             max_recover,
@@ -125,6 +141,10 @@ impl Shipper {
     fn ensure_registered(&mut self, reconnect: bool) -> Result<()> {
         let (ep, epoch) = self.topology.route(self.group)?;
         let moving = ep != self.endpoint;
+        // Gap detection only makes sense when re-registering with the
+        // SAME endpoint (recovery): after a migration the new endpoint
+        // legitimately starts a fresh segment with no high-water mark.
+        let check_gap = self.registered && !moving;
         if moving || self.conn.is_none() {
             if moving && self.conn.is_some() {
                 // Graceful handoff: tombstone the old endpoint's segment
@@ -157,15 +177,22 @@ impl Shipper {
             }
             self.endpoint = ep;
             self.stats = self.metrics.qos.slot(ep);
+            // Fresh endpoint = fresh segment: the old endpoint's acked
+            // bar does not apply here.
+            self.acked_step = None;
         } else if reconnect {
             self.conn.as_mut().unwrap().reconnect()?;
         }
         self.epoch = epoch;
-        self.hello()
+        self.hello(check_gap)
     }
 
-    /// `HELLO <key> <epoch>` on the current connection.
-    fn hello(&mut self) -> Result<()> {
+    /// `HELLO <key> <epoch>` on the current connection.  With
+    /// `check_replay_gap`, compare the endpoint's reported high-water
+    /// mark against the highest step it ever acked us for — a lower
+    /// mark means the endpoint restarted from a stale WAL and acked
+    /// records are unrecoverable (counted in `replay_gaps`).
+    fn hello(&mut self, check_replay_gap: bool) -> Result<()> {
         let req = Request::new("HELLO")
             .arg(self.key.as_bytes())
             .arg(self.epoch.to_string());
@@ -181,6 +208,25 @@ impl Shipper {
                 self.metrics.stale_rejections.inc();
             }
             bail!("HELLO {} epoch {} rejected: {msg}", self.key, self.epoch);
+        }
+        if check_replay_gap {
+            if let (Some(mine), Some(parts)) = (self.acked_step, reply.as_array()) {
+                let endpoint_step = match parts.get(1) {
+                    Some(Value::Int(s)) => Some(*s as u64),
+                    _ => None,
+                };
+                if endpoint_step.map_or(true, |s| s < mine) {
+                    self.metrics.replay_gaps.inc();
+                    log::warn!(
+                        "shipper {}: endpoint {} recovered with step {:?} below \
+                         our acked step {mine} — it restarted from a stale WAL; \
+                         the acked records in between are unrecoverable",
+                        self.key,
+                        self.endpoint,
+                        endpoint_step
+                    );
+                }
+            }
         }
         self.registered = true;
         Ok(())
@@ -239,10 +285,12 @@ impl Shipper {
         let mut built_epoch = self.epoch;
         let mut reqs: Vec<Request> = Vec::with_capacity(records.len());
         let mut lens: Vec<usize> = Vec::with_capacity(records.len());
+        let mut steps: Vec<u64> = Vec::with_capacity(records.len());
         let mut forced: Vec<bool> = vec![false; records.len()];
         for r in records {
             let payload = r.encode();
             lens.push(payload.len());
+            steps.push(r.step);
             reqs.push(
                 Request::new("XADDF")
                     .arg(self.key.as_bytes())
@@ -295,6 +343,10 @@ impl Shipper {
                     // unacked frame) — either way the record is durable.
                     _ => {
                         self.metrics.shipped.record(lens[i] as u64);
+                        self.acked_step = Some(
+                            self.acked_step
+                                .map_or(steps[i], |a| a.max(steps[i])),
+                        );
                         last_ok = Some(i);
                     }
                 }
@@ -375,6 +427,12 @@ impl Shipper {
                 keep
             });
             let mut i = 0;
+            steps.retain(|_| {
+                let keep = i >= send || failed[i];
+                i += 1;
+                keep
+            });
+            let mut i = 0;
             forced.retain(|_| {
                 let keep = i >= send || failed[i];
                 i += 1;
@@ -395,6 +453,110 @@ mod tests {
     use crate::util::prop::{self, U64Range};
     use crate::util::rng::Rng;
     use std::collections::BTreeSet;
+
+    fn rec(step: u64) -> StreamRecord {
+        StreamRecord::from_f32("u", 0, step, 0, &[1], &[step as f32]).unwrap()
+    }
+
+    fn one_rank_rig(
+        net: &Arc<SimNet>,
+        metrics: &WorkflowMetrics,
+    ) -> (TopologyHandle, Shipper) {
+        let dummy: std::net::SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let topology =
+            TopologyHandle::new_static(GroupMap::new(1, 1, 1).unwrap(), vec![dummy])
+                .unwrap();
+        let dialer: Arc<dyn Dialer> = Arc::new(SimDialer::new(net.clone()));
+        let shipper = Shipper::register(
+            "u/0".into(),
+            0,
+            topology.clone(),
+            dialer,
+            metrics.clone(),
+            8,
+        )
+        .unwrap();
+        (topology, shipper)
+    }
+
+    /// ISSUE 4: reconnecting to an endpoint that crashed and recovered
+    /// from its (fsync=always) WAL is loss-free — exactly-once resumes
+    /// through the replayed high-water mark, no replay gap counted.
+    #[test]
+    fn crash_restart_with_wal_resumes_exactly_once() {
+        let dir = std::env::temp_dir().join(format!(
+            "eb-ship-crash-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let net = SimNet::new();
+        let e = net.add_endpoint(StoreConfig {
+            wal: Some(crate::endpoint::WalConfig {
+                dir: dir.clone(),
+                fsync: crate::endpoint::FsyncPolicy::Always,
+                segment_bytes: 1 << 20,
+            }),
+            ..Default::default()
+        });
+        let metrics = WorkflowMetrics::new();
+        let (_topology, mut shipper) = one_rank_rig(&net, &metrics);
+        shipper.ship(&[rec(0), rec(1)]).unwrap();
+        // crash mid-batch: 1 of 2 records lands (and is logged), the
+        // endpoint restarts from its WAL before the shipper reconnects
+        net.inject(
+            e,
+            FaultSchedule {
+                drop_after_frames: Some(0),
+                partial_commands: 1,
+                crash_on_drop: true,
+                refuse_connects: 1,
+                ..Default::default()
+            },
+        );
+        shipper.ship(&[rec(2), rec(3)]).unwrap();
+        // every step landed exactly once across the crash
+        let mut seen = Vec::new();
+        for entry in net.store(e).read_after("u/0", EntryId::ZERO, 0) {
+            seen.push(StreamRecord::decode(&entry.fields[0].1).unwrap().step);
+        }
+        assert_eq!(seen, vec![0, 1, 2, 3], "exactly-once across the crash");
+        assert_eq!(metrics.replay_gaps.get(), 0, "durable restart is loss-free");
+        assert_eq!(net.store(e).fenced_last_step("u/0"), Some(3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE 4: an *in-memory* endpoint restarted after a crash lost
+    /// acked records; the shipper's HELLO notices the stale high-water
+    /// mark and counts the unrecoverable gap.
+    #[test]
+    fn stale_restart_without_wal_counts_replay_gap() {
+        let net = SimNet::new();
+        let e = net.add_endpoint(StoreConfig::default());
+        let metrics = WorkflowMetrics::new();
+        let (_topology, mut shipper) = one_rank_rig(&net, &metrics);
+        shipper.ship(&[rec(0), rec(1)]).unwrap();
+        net.inject(
+            e,
+            FaultSchedule {
+                drop_after_frames: Some(0),
+                partial_commands: 0,
+                crash_on_drop: true,
+                ..Default::default()
+            },
+        );
+        shipper.ship(&[rec(2), rec(3)]).unwrap();
+        assert_eq!(
+            metrics.replay_gaps.get(),
+            1,
+            "stale restart must be detected"
+        );
+        // the wiped endpoint only has the post-crash records
+        let mut seen = Vec::new();
+        for entry in net.store(e).read_after("u/0", EntryId::ZERO, 0) {
+            seen.push(StreamRecord::decode(&entry.fields[0].1).unwrap().step);
+        }
+        assert_eq!(seen, vec![2, 3], "acked pre-crash records are gone");
+    }
 
     /// ISSUE 3 satellite: arbitrary sequences of endpoint add / drain /
     /// slowdown / fault events over random (ranks, groups, endpoints)

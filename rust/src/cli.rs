@@ -25,7 +25,7 @@ pub struct Args {
 }
 
 /// Flags that never take a value.
-const BOOLEAN_FLAGS: &[&str] = &["no-pjrt", "help", "verbose", "dmd-per-batch"];
+const BOOLEAN_FLAGS: &[&str] = &["no-pjrt", "help", "verbose", "dmd-per-batch", "retention"];
 
 impl Args {
     /// Parse from raw argv (not including the subcommand itself).
@@ -167,6 +167,18 @@ pub fn apply_overrides(
     if let Some(v) = args.get("analysis-csv") {
         cfg.analysis_csv = v.to_string();
     }
+    if let Some(v) = args.get("persist-dir") {
+        cfg.wal_dir = v.to_string();
+    }
+    if let Some(v) = args.get("wal-fsync") {
+        cfg.wal_fsync = crate::endpoint::FsyncPolicy::parse(v)?;
+    }
+    if let Some(v) = args.get_parsed::<usize>("wal-segment-bytes")? {
+        cfg.wal_segment_bytes = v;
+    }
+    if args.has_flag("retention") {
+        cfg.retention = true;
+    }
     if let Some(v) = args.get_parsed::<u64>("rebalance-ms")? {
         cfg.rebalance_ms = v;
     }
@@ -195,6 +207,13 @@ SUBCOMMANDS:
                 --maxlen N           per-stream entry cap
                 --max-memory BYTES   global budget
                 --shards N           store shards (default 8)
+                --persist-dir DIR    write-ahead log dir (default: none,
+                                     in-memory only)
+                --wal-fsync P        never|always|every_ms(N)
+                                     (default every_ms(5))
+                --wal-segment-bytes N  rotation threshold (default 64 MiB)
+                --retention          never trim/GC unread entries; readers
+                                     ack cursors (needs --persist-dir)
   sim         Run the HPC-side CFD simulation against remote endpoints
                 --endpoints A[,B..]  required for --io-mode broker
                 --ranks/--height/--width/--steps/--write-interval
@@ -216,6 +235,11 @@ SUBCOMMANDS:
                                      (0 = static topology, the default)
                 --qos-flush-p95-us N --qos-queue-depth N
                 --qos-reconnects N   saturation / death thresholds
+                --persist-dir DIR    durable endpoints: per-endpoint WALs
+                                     under DIR/ep<i> ([endpoint] wal_dir)
+                --wal-fsync P --wal-segment-bytes N --retention
+                                     (see `endpoint`; retention turns on
+                                     reader cursor acks + log GC)
 
 ENVIRONMENT:
   ELASTICBROKER_ARTIFACTS  artifact dir (default ./artifacts)
@@ -279,6 +303,11 @@ mod tests {
             "250",
             "--qos-queue-depth",
             "32",
+            "--persist-dir",
+            "/tmp/eb-wal",
+            "--wal-fsync",
+            "always",
+            "--retention",
             "--no-pjrt",
         ]))
         .unwrap();
@@ -291,6 +320,16 @@ mod tests {
         assert_eq!(cfg.dmd_shards, 4);
         assert_eq!(cfg.rebalance_ms, 250);
         assert_eq!(cfg.qos_queue_depth, 32);
+        assert_eq!(cfg.wal_dir, "/tmp/eb-wal");
+        assert_eq!(cfg.wal_fsync, crate::endpoint::FsyncPolicy::Always);
+        assert!(cfg.retention);
         assert!(!cfg.use_pjrt);
+    }
+
+    #[test]
+    fn bad_fsync_policy_flag_is_error() {
+        let mut cfg = crate::config::WorkflowConfig::default();
+        let a = Args::parse(&argv(&["--wal-fsync", "sometimes"])).unwrap();
+        assert!(apply_overrides(&mut cfg, &a).is_err());
     }
 }

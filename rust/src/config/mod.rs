@@ -11,6 +11,8 @@ pub use toml::{parse, ConfigMap, TomlValue};
 
 use anyhow::{Context, Result};
 
+use crate::endpoint::FsyncPolicy;
+
 /// How the simulation emits its per-interval output (paper §4.2 modes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum IoMode {
@@ -110,6 +112,22 @@ pub struct WorkflowConfig {
     /// CSV output path for analysis results ("" → none).
     pub analysis_csv: String,
 
+    // --- durability (ISSUE 4) ---
+    /// Directory for the endpoints' write-ahead logs ("" = in-memory
+    /// endpoints, the pre-ISSUE-4 behaviour).  Each endpoint gets its
+    /// own `ep<i>/` subdirectory.
+    pub wal_dir: String,
+    /// WAL fsync policy: `never` | `always` | `every_ms(N)`.  Only
+    /// meaningful when `wal_dir` is set; `always` makes crash-restart
+    /// loss-free, `every_ms(N)` bounds loss to N ms per endpoint.
+    pub wal_fsync: FsyncPolicy,
+    /// WAL segment rotation threshold (bytes).
+    pub wal_segment_bytes: usize,
+    /// Ack-based retention: readers acknowledge consumed cursors and
+    /// endpoints never trim (or GC) unread entries.  Requires
+    /// `wal_dir` (validation rejects it otherwise).
+    pub retention: bool,
+
     // --- elasticity (ISSUE 3) ---
     /// Rebalancer sweep cadence in ms (0 = elasticity disabled: static
     /// topology, the pre-elastic behaviour).
@@ -154,6 +172,10 @@ impl Default for WorkflowConfig {
             dmd_gram_refresh: 64,
             dmd_shards: 8,
             analysis_csv: String::new(),
+            wal_dir: String::new(),
+            wal_fsync: FsyncPolicy::EveryMs(5),
+            wal_segment_bytes: 64 << 20,
+            retention: false,
             rebalance_ms: 0,
             qos_flush_p95_us: 250_000,
             qos_queue_depth: 48,
@@ -275,6 +297,18 @@ impl WorkflowConfig {
         if let Some(v) = map.get_str("cloud.analysis_csv")? {
             cfg.analysis_csv = v;
         }
+        if let Some(v) = map.get_str("endpoint.wal_dir")? {
+            cfg.wal_dir = v;
+        }
+        if let Some(v) = map.get_str("endpoint.fsync")? {
+            cfg.wal_fsync = FsyncPolicy::parse(&v)?;
+        }
+        if let Some(v) = map.get_usize("endpoint.wal_segment_bytes")? {
+            cfg.wal_segment_bytes = v;
+        }
+        if let Some(v) = map.get_bool("endpoint.retention")? {
+            cfg.retention = v;
+        }
         if let Some(v) = map.get_u64("elastic.rebalance_ms")? {
             cfg.rebalance_ms = v;
         }
@@ -304,6 +338,15 @@ impl WorkflowConfig {
             "dmd_rank {} > dmd_window {}",
             self.dmd_rank,
             self.dmd_window
+        );
+        anyhow::ensure!(
+            !(self.retention && self.wal_dir.is_empty()),
+            "endpoint.retention requires endpoint.wal_dir (--persist-dir): \
+             ack-based retention is log retention"
+        );
+        anyhow::ensure!(
+            self.wal_dir.is_empty() || self.wal_segment_bytes > 0,
+            "endpoint.wal_segment_bytes must be > 0"
         );
         self.rows_per_rank()?;
         Ok(())
@@ -410,6 +453,37 @@ mod tests {
         assert_eq!(c.qos_flush_p95_us, 50_000);
         assert_eq!(c.qos_queue_depth, 16);
         assert_eq!(c.qos_reconnects, 5);
+    }
+
+    #[test]
+    fn durability_knobs_parse_and_validate() {
+        let c = WorkflowConfig::default();
+        assert!(c.wal_dir.is_empty(), "persistence off by default");
+        assert_eq!(c.wal_fsync, FsyncPolicy::EveryMs(5));
+        assert_eq!(c.wal_segment_bytes, 64 << 20);
+        assert!(!c.retention);
+        let c = WorkflowConfig::from_toml(
+            "[endpoint]\nwal_dir = \"/tmp/eb-wal\"\nfsync = \"always\"\n\
+             wal_segment_bytes = 1048576\nretention = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.wal_dir, "/tmp/eb-wal");
+        assert_eq!(c.wal_fsync, FsyncPolicy::Always);
+        assert_eq!(c.wal_segment_bytes, 1 << 20);
+        assert!(c.retention);
+        // every_ms form
+        let c = WorkflowConfig::from_toml(
+            "[endpoint]\nwal_dir = \"w\"\nfsync = \"every_ms(25)\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.wal_fsync, FsyncPolicy::EveryMs(25));
+        // retention without a wal_dir is rejected
+        assert!(WorkflowConfig::from_toml("[endpoint]\nretention = true\n").is_err());
+        // bad policy is rejected
+        assert!(
+            WorkflowConfig::from_toml("[endpoint]\nwal_dir = \"w\"\nfsync = \"meh\"\n")
+                .is_err()
+        );
     }
 
     #[test]

@@ -1,18 +1,24 @@
-//! The Cloud endpoint: an in-memory stream store behind the RESP wire
-//! protocol — our stand-in for the paper's Redis 5 server instances
-//! (§3.2, Fig 2).  Each endpoint accepts data streams from one HPC
-//! process group and serves polling reads to the stream-processing
-//! executors.
+//! The Cloud endpoint: a stream store behind the RESP wire protocol —
+//! our stand-in for the paper's Redis 5 server instances (§3.2, Fig 2).
+//! Each endpoint accepts data streams from one HPC process group and
+//! serves polling reads to the stream-processing executors.
 //!
 //! * [`store`] — the stream data model (`XADD`/`XREAD` semantics,
 //!   per-stream trimming, global memory budget → `OOM` backpressure),
 //!   hash-sharded across independent locks so concurrent writers to
 //!   distinct streams scale with [`StoreConfig::shards`],
+//! * [`wal`] — the ISSUE 4 durability layer: a segmented, CRC-framed
+//!   write-ahead log with group-commit fsync, torn-tail-truncating
+//!   replay and ack-based retention; with [`StoreConfig::wal`] set the
+//!   store logs every mutation before acking and [`Store::open`]
+//!   restores entries *and* fencing state after a crash,
 //! * [`server`] — the TCP RESP2 front-end; pipelined command frames
 //!   are answered with one coalesced write per frame.
 
 pub mod server;
 pub mod store;
+pub mod wal;
 
 pub use server::EndpointServer;
 pub use store::{Entry, EntryId, FencedAdd, HelloReply, Store, StoreConfig};
+pub use wal::{FsyncPolicy, Wal, WalConfig, WalStats};

@@ -12,7 +12,11 @@
 //! stream's epoch; `FORCE` skips the dedupe for records the writer
 //! knows were explicitly rejected), `XHANDOFF key epoch [dest]`
 //! (migration tombstone, optionally naming the endpoint slot the
-//! stream moved to) and `XLASTSTEP key`.
+//! stream moved to) and `XLASTSTEP key` — plus the durability
+//! extension (ISSUE 4): `XACKPOS key id` (a reader acknowledges every
+//! entry at or below `id`; the ack is the retention floor — WAL
+//! segments wholly below it are reclaimed and `maxlen` trimming never
+//! crosses it while retention is on).
 //!
 //! One OS thread per connection (the paper sizes one endpoint per 16
 //! writer processes, so connection counts are small); commands are
@@ -47,7 +51,8 @@ impl EndpointServer {
     pub fn start(bind: &str, cfg: StoreConfig) -> Result<EndpointServer> {
         let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
         let addr = listener.local_addr()?;
-        let store = Arc::new(Store::new(cfg));
+        // Store::open replays the WAL when the config carries one.
+        let store = Arc::new(Store::open(cfg)?);
         let shutdown = Arc::new(AtomicBool::new(false));
         let accept_store = store.clone();
         let accept_shutdown = shutdown.clone();
@@ -386,6 +391,17 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
                 Some(st) => Ok(Reply(Value::Int(st as i64))),
                 None => Ok(Reply(Value::NullBulk)),
             }
+        }
+        b"XACKPOS" => {
+            // XACKPOS key id — reader cursor acknowledgement (ISSUE 4).
+            anyhow::ensure!(
+                args.len() == 2,
+                "ERR wrong number of arguments for 'xackpos'"
+            );
+            let key = s(&args[0])?;
+            let pos = EntryId::parse(&s(&args[1])?).context("ERR invalid stream ID")?;
+            let acked = store.xackpos(&key, pos)?;
+            Ok(Reply(Value::Bulk(acked.to_string().into_bytes())))
         }
         b"XRANGE" => {
             anyhow::ensure!(args.len() >= 3, "ERR wrong number of arguments for 'xrange'");
@@ -755,6 +771,98 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(srv.store().xlen("shared"), 1600);
+    }
+
+    #[test]
+    fn xackpos_over_the_wire_and_persistence_info() {
+        let dir = std::env::temp_dir().join(format!(
+            "eb-server-ack-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = StoreConfig {
+            retention: true,
+            wal: Some(crate::endpoint::wal::WalConfig {
+                dir: dir.clone(),
+                fsync: crate::endpoint::wal::FsyncPolicy::Never,
+                segment_bytes: 1 << 20,
+            }),
+            ..Default::default()
+        };
+        let srv = EndpointServer::start("127.0.0.1:0", cfg).unwrap();
+        let mut c = conn(&srv);
+        let id = c.request(&[b"XADD", b"u/0", b"*", b"r", b"x"]).unwrap();
+        let id_s = id.as_str_lossy();
+        let acked = c
+            .request(&[b"XACKPOS", b"u/0", id_s.as_bytes()])
+            .unwrap();
+        assert_eq!(acked.as_str_lossy(), id_s);
+        assert_eq!(srv.store().acked("u/0").to_string(), id_s);
+        // bad args are errors, not disconnects
+        assert!(c.request(&[b"XACKPOS", b"u/0"]).unwrap().is_error());
+        assert!(c
+            .request(&[b"XACKPOS", b"u/0", b"not-an-id"])
+            .unwrap()
+            .is_error());
+        let info = c.request(&[b"INFO"]).unwrap();
+        let text = info.as_str_lossy();
+        assert!(text.contains("# Persistence"), "{text}");
+        assert!(text.contains("wal_enabled:1"));
+        assert!(text.contains("retention:1"));
+        drop(c);
+        drop(srv);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE 4 over TCP: stop a durable server, start a fresh one on
+    /// the same WAL dir — entries, fences and watermarks all survive.
+    #[test]
+    fn restarted_server_serves_replayed_state() {
+        let dir = std::env::temp_dir().join(format!(
+            "eb-server-restart-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = StoreConfig {
+            wal: Some(crate::endpoint::wal::WalConfig {
+                dir: dir.clone(),
+                fsync: crate::endpoint::wal::FsyncPolicy::Always,
+                segment_bytes: 1 << 20,
+            }),
+            ..Default::default()
+        };
+        {
+            let srv = EndpointServer::start("127.0.0.1:0", cfg.clone()).unwrap();
+            let mut c = conn(&srv);
+            c.request(&[b"HELLO", b"u/0", b"4"]).unwrap();
+            for step in 0..3u64 {
+                let r = c
+                    .request(&[
+                        b"XADDF",
+                        b"u/0",
+                        b"4",
+                        step.to_string().as_bytes(),
+                        b"r",
+                        b"p",
+                    ])
+                    .unwrap();
+                assert!(!r.is_error(), "{r}");
+            }
+        }
+        let srv = EndpointServer::start("127.0.0.1:0", cfg).unwrap();
+        let mut c = conn(&srv);
+        assert_eq!(c.request(&[b"XLEN", b"u/0"]).unwrap(), Value::Int(3));
+        assert_eq!(c.request(&[b"XLASTSTEP", b"u/0"]).unwrap(), Value::Int(2));
+        // a pre-restart zombie (epoch 3) is still fenced out
+        let stale = c
+            .request(&[b"XADDF", b"u/0", b"3", b"9", b"r", b"z"])
+            .unwrap();
+        assert!(stale.as_str_lossy().starts_with("STALE"), "{stale}");
+        let info = c.request(&[b"INFO"]).unwrap();
+        assert!(info.as_str_lossy().contains("replayed_entries:3"));
+        drop(c);
+        drop(srv);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

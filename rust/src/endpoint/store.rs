@@ -21,12 +21,37 @@
 //! DESIGN.md §6): a per-stream `maxlen` (oldest entries trimmed, like
 //! `XADD ... MAXLEN ~ n`) and a global memory budget (when exceeded,
 //! writes fail with a Redis-style `OOM` error the broker backs off on).
+//!
+//! **Durability (ISSUE 4):** with [`StoreConfig::wal`] set, every
+//! accepted mutation is appended to the segmented log
+//! ([`super::wal::Wal`]) *before* the caller sees the reply — entries,
+//! epoch-fence raises, step high-water marks, reader ack cursors and
+//! deletes alike — and [`Store::open`] replays it after a crash so a
+//! restarted endpoint rejoins the PR 3 protocol without violating
+//! `STALE`/`DUP` semantics (the shard id clocks are re-seeded from the
+//! replayed ids, so new auto ids can never collide with replayed ones).
+//! The durable variants of the two bounds soften:
+//!
+//! * **budget** — instead of hard-OOM-rejecting the write, the store
+//!   evicts the written stream's oldest in-memory entries (they stay
+//!   readable: [`Store::range`]/[`Store::read_after`] transparently
+//!   fall back to log reads below the eviction watermark);
+//! * **maxlen** — with [`StoreConfig::retention`], entries above the
+//!   stream's acked cursor ([`Store::xackpos`], `XACKPOS`) are *never*
+//!   trimmed (unread data cannot be silently dropped); without
+//!   retention the pre-durability trim behaviour stands but every
+//!   dropped-unread entry is counted in `trimmed_unread`.
+//!
+//! Acks also drive log retention: segments wholly at or below the acked
+//! cursors are deleted ([`super::wal::Wal::collect_garbage`]).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
+
+use super::wal::{Wal, WalConfig, WalOp, WalStats};
 
 /// A Redis-style stream entry id: milliseconds + sequence.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
@@ -98,6 +123,20 @@ struct Stream {
     /// stream exactly-once when a writer re-ships an unacked frame
     /// after a connection failure.
     last_step: u64,
+    /// Reader-acknowledged cursor (`XACKPOS`): everything at or below
+    /// is consumed — the retention floor for trimming and log GC.
+    acked: EntryId,
+    /// Entries evicted from memory under budget pressure (still in the
+    /// WAL; reads inside `[evicted_from, evicted_below)` fall back to
+    /// log reads).
+    evicted: u64,
+    /// Inclusive lower bound of the evicted id range.  The log also
+    /// holds ids below this — entries `maxlen`-trimmed away, or from a
+    /// deleted predecessor stream — which are logically gone and must
+    /// never be resurrected by the read fallback.
+    evicted_from: EntryId,
+    /// Exclusive upper bound of the evicted id range (`ZERO` = none).
+    evicted_below: EntryId,
 }
 
 impl Default for Stream {
@@ -109,6 +148,10 @@ impl Default for Stream {
             added: 0,
             writer_epoch: 0,
             last_step: u64::MAX, // sentinel: no fenced write yet
+            acked: EntryId::ZERO,
+            evicted: 0,
+            evicted_from: EntryId::ZERO,
+            evicted_below: EntryId::ZERO,
         }
     }
 }
@@ -157,6 +200,13 @@ pub struct StoreConfig {
     /// (values < 1 are clamped to 1).  More shards = less cross-stream
     /// lock contention; streams never span shards.
     pub shards: usize,
+    /// Write-ahead log configuration (`None` = in-memory only, the
+    /// pre-ISSUE-4 behaviour).  With a WAL, [`Store::open`] replays it
+    /// and every mutation is logged before it is acknowledged.
+    pub wal: Option<WalConfig>,
+    /// Ack-based retention: never trim/GC entries above the acked
+    /// cursor.  Requires `wal` (rejected by [`Store::open`] otherwise).
+    pub retention: bool,
 }
 
 impl Default for StoreConfig {
@@ -165,6 +215,8 @@ impl Default for StoreConfig {
             stream_maxlen: 4096,
             max_memory: 1 << 30, // 1 GiB
             shards: 8,
+            wal: None,
+            retention: false,
         }
     }
 }
@@ -202,17 +254,107 @@ pub struct Store {
     shards: Vec<Shard>,
     total_bytes: AtomicU64,
     total_entries: AtomicU64,
+    /// The durability log (`None` = in-memory only).
+    wal: Option<Wal>,
+    /// Entries restored from the WAL at open (INFO `replayed_entries`).
+    replayed: u64,
+    /// Entries dropped by `maxlen` trimming that no reader had acked —
+    /// the silent-unread-loss ISSUE 4's retention mode eliminates.
+    trimmed_unread: AtomicU64,
+    /// Entries evicted from memory to the log under budget pressure.
+    evicted_entries: AtomicU64,
 }
 
 impl Store {
+    /// In-memory store.  Panics if `cfg` asks for durability — use
+    /// [`Store::open`] for WAL-backed configurations (it can fail on
+    /// I/O and replays existing segments).
     pub fn new(cfg: StoreConfig) -> Self {
+        Self::open(cfg).expect("Store::new: use Store::open for WAL-backed configs")
+    }
+
+    /// Open a store: create the shards, and — when [`StoreConfig::wal`]
+    /// is set — replay the log, restoring entries, epoch fences, step
+    /// high-water marks, acked cursors and the shard id clocks.
+    pub fn open(cfg: StoreConfig) -> Result<Store> {
+        anyhow::ensure!(
+            !(cfg.retention && cfg.wal.is_none()),
+            "retention requires a wal_dir (ack-based retention is log retention)"
+        );
         let n = cfg.shards.max(1);
-        Store {
+        let mut store = Store {
             cfg,
             shards: (0..n).map(|_| Shard::new()).collect(),
             total_bytes: AtomicU64::new(0),
             total_entries: AtomicU64::new(0),
+            wal: None,
+            replayed: 0,
+            trimmed_unread: AtomicU64::new(0),
+            evicted_entries: AtomicU64::new(0),
+        };
+        if let Some(wal_cfg) = store.cfg.wal.clone() {
+            let (wal, replay) = Wal::open(wal_cfg).context("opening endpoint wal")?;
+            store.replayed = replay.entries;
+            if replay.truncated_bytes > 0 {
+                log::warn!(
+                    "endpoint store: recovery truncated {} torn wal bytes",
+                    replay.truncated_bytes
+                );
+            }
+            for (key, rs) in replay.streams {
+                let shard = &store.shards[store.shard_of(&key)];
+                shard.clock_ms.fetch_max(rs.last_id.ms, Ordering::AcqRel);
+                let mut stream = Stream {
+                    entries: rs.entries.into(),
+                    last_id: rs.last_id,
+                    bytes: 0,
+                    added: 0,
+                    writer_epoch: rs.epoch,
+                    last_step: rs.step,
+                    acked: rs.acked,
+                    evicted: 0,
+                    evicted_from: EntryId::ZERO,
+                    evicted_below: EntryId::ZERO,
+                };
+                stream.bytes = stream.entries.iter().map(|e| e.byte_size()).sum();
+                stream.added = stream.entries.len() as u64;
+                store
+                    .total_bytes
+                    .fetch_add(stream.bytes as u64, Ordering::Relaxed);
+                store
+                    .total_entries
+                    .fetch_add(stream.added, Ordering::Relaxed);
+                // Re-apply the maxlen policy to the replayed window
+                // (same retention rule as the live path; losses were
+                // already counted by the previous incarnation).
+                store.trim_with(&mut stream, false);
+                shard
+                    .streams
+                    .write()
+                    .unwrap()
+                    .insert(key, Mutex::new(stream));
+            }
+            store.wal = Some(wal);
+            // Recovery transiently materializes the whole live log
+            // (bounded by retention acks in steady state); settle back
+            // under the memory budget before serving — the evicted
+            // entries stay readable through the log, exactly as they
+            // were before the crash.
+            if store.over_budget() {
+                store.evict_global();
+                log::warn!(
+                    "endpoint store: recovered log exceeded the memory budget; \
+                     {} entries evicted back to log-backed cold storage",
+                    store.evicted_entries()
+                );
+            }
+            log::info!(
+                "endpoint store: recovered {} entries across {} streams from wal",
+                store.replayed,
+                store.stream_count()
+            );
         }
+        Ok(store)
     }
 
     /// Number of shards the key space is split across.
@@ -261,6 +403,16 @@ impl Store {
                     s.writer_epoch
                 );
             }
+            if epoch > s.writer_epoch {
+                // The fence is protocol state: log the raise so a
+                // restarted endpoint still rejects the old epoch.
+                if let Some(w) = &self.wal {
+                    w.append(&WalOp::Fence {
+                        key: key.to_string(),
+                        epoch,
+                    })?;
+                }
+            }
             s.writer_epoch = epoch;
             Ok(HelloReply {
                 last_id: s.last_id,
@@ -293,6 +445,9 @@ impl Store {
         force: bool,
         fields: Vec<(Vec<u8>, Vec<u8>)>,
     ) -> Result<FencedAdd> {
+        if self.over_budget() {
+            self.evict_global();
+        }
         self.with_stream(key, |shard, s| {
             if epoch < s.writer_epoch {
                 bail!(
@@ -304,15 +459,17 @@ impl Store {
             if !force && s.last_step != u64::MAX && step <= s.last_step {
                 return Ok(FencedAdd::Duplicate);
             }
-            if self.cfg.max_memory > 0
-                && self.total_bytes.load(Ordering::Relaxed) as usize >= self.cfg.max_memory
-            {
-                bail!("OOM command not allowed when used memory > 'maxmemory'");
-            }
-            let id = self.append(shard, s, None, fields)?;
-            if s.last_step == u64::MAX || step > s.last_step {
-                s.last_step = step;
-            }
+            self.ensure_budget(s)?;
+            // The post-append high-water mark travels with the entry
+            // into the log and is applied by `append` exactly when the
+            // entry is (including the framed-but-fsync-failed case, so
+            // a client retry DUP-dedupes instead of double-storing).
+            let new_step = if s.last_step == u64::MAX || step > s.last_step {
+                step
+            } else {
+                s.last_step
+            };
+            let id = self.append_with_step(shard, key, s, None, fields, Some(new_step))?;
             Ok(FencedAdd::Added(id))
         })
     }
@@ -338,8 +495,47 @@ impl Store {
             if let Some(d) = dest {
                 fields.push((b"d".to_vec(), d.to_string().into_bytes()));
             }
-            self.append(shard, s, None, fields)
+            self.append(shard, key, s, None, fields)
         })
+    }
+
+    /// Record a reader's consumed cursor (`XACKPOS key id`): everything
+    /// at or below `pos` is acknowledged.  The ack is logged (it is the
+    /// retention floor recovery must know) and log segments wholly
+    /// below the acked cursors are reclaimed.  Returns the stream's
+    /// acked cursor after the call.  Acking an unknown (or concurrently
+    /// deleted) stream is a no-op answering `0-0` — it must not
+    /// resurrect a phantom stream, in memory or in the log.
+    pub fn xackpos(&self, key: &str, pos: EntryId) -> Result<EntryId> {
+        let acked = {
+            let map = self.shard(key).streams.read().unwrap();
+            let Some(stream) = map.get(key) else {
+                return Ok(EntryId::ZERO);
+            };
+            let mut s = stream.lock().unwrap();
+            if pos > s.acked {
+                if let Some(w) = &self.wal {
+                    w.append(&WalOp::Ack {
+                        key: key.to_string(),
+                        pos,
+                    })?;
+                }
+                s.acked = pos;
+            }
+            s.acked
+        };
+        if let Some(w) = &self.wal {
+            w.collect_garbage();
+        }
+        Ok(acked)
+    }
+
+    /// Reader-acked cursor of `key` (`0-0` when absent or never acked).
+    pub fn acked(&self, key: &str) -> EntryId {
+        let map = self.shard(key).streams.read().unwrap();
+        map.get(key)
+            .map(|s| s.lock().unwrap().acked)
+            .unwrap_or(EntryId::ZERO)
     }
 
     /// Highest fenced step landed on `key` (`XLASTSTEP`; read-only, no
@@ -365,34 +561,183 @@ impl Store {
         id: Option<EntryId>,
         fields: Vec<(Vec<u8>, Vec<u8>)>,
     ) -> Result<EntryId> {
-        if self.cfg.max_memory > 0
-            && self.total_bytes.load(Ordering::Relaxed) as usize >= self.cfg.max_memory
-        {
-            bail!("OOM command not allowed when used memory > 'maxmemory'");
+        if self.over_budget() {
+            self.evict_global();
         }
-        let shard = self.shard(key);
-        // Fast path: stream exists (read lock on the shard map).
-        {
+        self.with_stream(key, |shard, s| {
+            self.ensure_budget(s)?;
+            self.append(shard, key, s, id, fields)
+        })
+    }
+
+    fn over_budget(&self) -> bool {
+        self.cfg.max_memory > 0
+            && self.total_bytes.load(Ordering::Relaxed) as usize >= self.cfg.max_memory
+    }
+
+    /// Evict one stream's oldest in-memory entries (WAL-backed, so they
+    /// stay readable through [`Store::range`]/[`Store::read_after`])
+    /// until the store is back under budget or only the hot tail entry
+    /// remains resident.
+    fn evict_stream(&self, s: &mut Stream) {
+        while s.entries.len() > 1 && self.over_budget() {
+            let old = s.entries.pop_front().unwrap();
+            let osz = old.byte_size();
+            s.bytes -= osz;
+            if s.evicted == 0 || s.evicted_from == EntryId::ZERO {
+                s.evicted_from = old.id;
+            }
+            s.evicted += 1;
+            s.evicted_below = old.id.next();
+            self.total_bytes.fetch_sub(osz as u64, Ordering::Relaxed);
+            self.evicted_entries.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Global cold-entry eviction for durable stores: sweep every shard
+    /// and evict the oldest log-backed entries stream by stream until
+    /// the budget holds again — so a write to a small stream is never
+    /// OOM-rejected just because a *different* stream ate the budget.
+    /// Called with **no** stream lock held; contended streams are
+    /// skipped (`try_lock`), so this can never deadlock with writers.
+    fn evict_global(&self) {
+        if self.wal.is_none() {
+            return;
+        }
+        for shard in &self.shards {
+            if !self.over_budget() {
+                return;
+            }
             let map = shard.streams.read().unwrap();
-            if let Some(stream) = map.get(key) {
-                return self.append(shard, &mut stream.lock().unwrap(), id, fields);
+            for stream in map.values() {
+                let Ok(mut s) = stream.try_lock() else {
+                    continue;
+                };
+                self.evict_stream(&mut s);
+                if !self.over_budget() {
+                    return;
+                }
             }
         }
-        // Slow path: create the stream.
-        let mut map = shard.streams.write().unwrap();
-        let stream = map.entry(key.to_string()).or_default();
-        let mut guard = stream.lock().unwrap();
-        let res = self.append(shard, &mut guard, id, fields);
-        drop(guard);
-        res
+    }
+
+    /// Enforce the global memory budget before an append (called under
+    /// the stream's lock, after [`Store::evict_global`] had its chance).
+    /// In-memory stores keep the hard `OOM` behaviour; WAL-backed
+    /// stores first evict this stream's own oldest entries and only
+    /// fail when there is nothing left to evict anywhere.
+    fn ensure_budget(&self, s: &mut Stream) -> Result<()> {
+        if !self.over_budget() {
+            return Ok(());
+        }
+        if self.wal.is_some() {
+            self.evict_stream(s);
+            if !self.over_budget() {
+                return Ok(());
+            }
+        }
+        bail!("OOM command not allowed when used memory > 'maxmemory'");
+    }
+
+    /// Apply the `maxlen` trim policy to a stream.  With retention
+    /// enabled, entries above the acked cursor are never trimmed (the
+    /// unread-data-loss fix); without it, dropped-unread entries are
+    /// counted in `trimmed_unread` so the loss is at least observable.
+    fn trim(&self, s: &mut Stream) {
+        self.trim_with(s, true);
+    }
+
+    /// `count_unread: false` is the replay-normalization path: entries
+    /// trimmed while re-applying `maxlen` to a replayed window were
+    /// already dropped (and reported) by the previous incarnation —
+    /// counting them again would overstate the loss on every restart.
+    fn trim_with(&self, s: &mut Stream, count_unread: bool) {
+        if self.cfg.stream_maxlen == 0 {
+            return;
+        }
+        // Oldest first.  The budget-evicted window (log-backed, ids
+        // strictly below everything resident) is logically the head of
+        // the stream, so maxlen drops it *before* any resident entry —
+        // trimming residents past a live window would punch a hole into
+        // the `[evicted_from, evicted_below)` range the read fallback
+        // serves, resurrecting trimmed ids from the log.  Per-id
+        // granularity is gone once entries live only in the log, so the
+        // window goes as a whole.
+        if s.evicted > 0 && s.entries.len() + s.evicted as usize > self.cfg.stream_maxlen {
+            // id of the newest evicted entry (evicted_below = id.next())
+            let last_evicted = EntryId {
+                ms: s.evicted_below.ms,
+                seq: s.evicted_below.seq.saturating_sub(1),
+            };
+            if self.cfg.retention && last_evicted > s.acked {
+                // unread data in the window: retention forbids the trim
+                // (and the resident front is younger still, so nothing
+                // below can trim either)
+                return;
+            }
+            if count_unread && s.acked < s.evicted_from {
+                // the whole window was dropped unread; a partially-acked
+                // window (acked inside the range) is approximated as
+                // read — the consumer provably reached into it.
+                self.trimmed_unread
+                    .fetch_add(s.evicted, Ordering::Relaxed);
+            }
+            s.evicted = 0;
+            s.evicted_from = EntryId::ZERO;
+            s.evicted_below = EntryId::ZERO;
+        }
+        if s.evicted > 0 {
+            return; // window retained: resident entries are younger
+        }
+        while s.entries.len() > self.cfg.stream_maxlen {
+            {
+                let old = s.entries.front().unwrap();
+                if self.cfg.retention && old.id > s.acked {
+                    break; // unread data: retention forbids the trim
+                }
+            }
+            let old = s.entries.pop_front().unwrap();
+            if count_unread && old.id > s.acked {
+                self.trimmed_unread.fetch_add(1, Ordering::Relaxed);
+            }
+            let osz = old.byte_size();
+            s.bytes -= osz;
+            self.total_bytes.fetch_sub(osz as u64, Ordering::Relaxed);
+        }
     }
 
     fn append(
         &self,
         shard: &Shard,
+        key: &str,
         s: &mut Stream,
         id: Option<EntryId>,
         fields: Vec<(Vec<u8>, Vec<u8>)>,
+    ) -> Result<EntryId> {
+        self.append_with_step(shard, key, s, id, fields, None)
+    }
+
+    /// The one true append.  `step` of `Some(n)` raises the stream's
+    /// fenced high-water mark to `n` together with the entry.
+    ///
+    /// Log-before-ack: the entry (with the stream's post-append fencing
+    /// state) is framed into the WAL before anything is mutated.  Two
+    /// failure shapes, both exactly-once:
+    /// * the frame never reached the log (write error; torn bytes are
+    ///   truncated away) — nothing is applied, plain error;
+    /// * the frame IS in the log but its policy fsync failed — the
+    ///   entry is applied to memory (replay would include it) and the
+    ///   error surfaces anyway, so the caller knows durability was not
+    ///   confirmed; its retry dedupes (`DUP` via the raised watermark)
+    ///   instead of double-storing.
+    fn append_with_step(
+        &self,
+        shard: &Shard,
+        key: &str,
+        s: &mut Stream,
+        id: Option<EntryId>,
+        fields: Vec<(Vec<u8>, Vec<u8>)>,
+        step: Option<u64>,
     ) -> Result<EntryId> {
         let id = match id {
             Some(explicit) => {
@@ -413,62 +758,121 @@ impl Store {
             }
         };
         let entry = Entry { id, fields };
+        let mut sync_err: Option<anyhow::Error> = None;
+        if let Some(w) = &self.wal {
+            let log_step = step.unwrap_or(s.last_step);
+            let seq = w.append_add_unsynced(key, &entry, s.writer_epoch, log_step)?;
+            if let Err(e) = w.sync_appended(seq) {
+                sync_err = Some(e);
+            }
+        }
         let sz = entry.byte_size();
         s.entries.push_back(entry);
         s.last_id = id;
+        if let Some(n) = step {
+            s.last_step = n;
+        }
         s.bytes += sz;
         s.added += 1;
         self.total_bytes.fetch_add(sz as u64, Ordering::Relaxed);
         self.total_entries.fetch_add(1, Ordering::Relaxed);
-        if self.cfg.stream_maxlen > 0 {
-            while s.entries.len() > self.cfg.stream_maxlen {
-                if let Some(old) = s.entries.pop_front() {
-                    let osz = old.byte_size();
-                    s.bytes -= osz;
-                    self.total_bytes.fetch_sub(osz as u64, Ordering::Relaxed);
-                }
-            }
+        self.trim(s);
+        match sync_err {
+            Some(e) => Err(e.context(format!(
+                "entry {id} of '{key}' is framed but not confirmed durable"
+            ))),
+            None => Ok(id),
         }
-        Ok(id)
     }
 
     /// Entries of `key` with id strictly greater than `after`
-    /// (`XREAD`-style), up to `count` (0 = all).
+    /// (`XREAD`-style), up to `count` (0 = all).  Entries the budget
+    /// evicted from memory are transparently served back from the log
+    /// (cold path), so a slow reader's cursor never skips data.
     pub fn read_after(&self, key: &str, after: EntryId, count: usize) -> Vec<Entry> {
-        let map = self.shard(key).streams.read().unwrap();
-        let Some(stream) = map.get(key) else {
-            return Vec::new();
-        };
-        let s = stream.lock().unwrap();
-        // Binary search: entries are sorted by id.
-        let start = s.entries.partition_point(|e| e.id <= after);
         let take = if count == 0 { usize::MAX } else { count };
-        s.entries.iter().skip(start).take(take).cloned().collect()
+        // Snapshot the resident suffix and the evicted range under the
+        // locks, then do the (cold) log scan with every lock dropped —
+        // a catching-up reader must not stall this stream's writers for
+        // the duration of a multi-MB segment scan.
+        let (mem, log_range) = {
+            let map = self.shard(key).streams.read().unwrap();
+            let Some(stream) = map.get(key) else {
+                return Vec::new();
+            };
+            let s = stream.lock().unwrap();
+            // Binary search: entries are sorted by id.
+            let start = s.entries.partition_point(|e| e.id <= after);
+            let mem: Vec<Entry> =
+                s.entries.iter().skip(start).take(take).cloned().collect();
+            // Clamp to the evicted range: ids below `evicted_from` in
+            // the log were trimmed/deleted, i.e. logically gone.
+            let log_range = (s.evicted > 0 && after < s.evicted_below)
+                .then(|| (s.evicted_from.max(after.next()), s.evicted_below));
+            (mem, log_range)
+        };
+        let mut out: Vec<Entry> = match (log_range, &self.wal) {
+            (Some((from, below)), Some(w)) => {
+                let mut v = w.read_entries(key, from, below);
+                v.truncate(take);
+                v
+            }
+            _ => Vec::new(),
+        };
+        let remaining = take.saturating_sub(out.len());
+        out.extend(mem.into_iter().take(remaining));
+        out
     }
 
     /// Inclusive range query (`XRANGE key start end [COUNT n]`).
+    /// Budget-evicted entries are served back from the log (cold path);
+    /// entries already acked away by retention GC may be gone for good.
     pub fn range(&self, key: &str, start: EntryId, end: EntryId, count: usize) -> Vec<Entry> {
-        let map = self.shard(key).streams.read().unwrap();
-        let Some(stream) = map.get(key) else {
-            return Vec::new();
-        };
-        let s = stream.lock().unwrap();
-        let from = s.entries.partition_point(|e| e.id < start);
         let take = if count == 0 { usize::MAX } else { count };
-        s.entries
-            .iter()
-            .skip(from)
-            .take_while(|e| e.id <= end)
-            .take(take)
-            .cloned()
-            .collect()
+        // Same shape as read_after: snapshot under the locks, scan the
+        // log (cold path) with the locks dropped.
+        let (mem, log_range) = {
+            let map = self.shard(key).streams.read().unwrap();
+            let Some(stream) = map.get(key) else {
+                return Vec::new();
+            };
+            let s = stream.lock().unwrap();
+            let from = s.entries.partition_point(|e| e.id < start);
+            let mem: Vec<Entry> = s
+                .entries
+                .iter()
+                .skip(from)
+                .take_while(|e| e.id <= end)
+                .take(take)
+                .cloned()
+                .collect();
+            let log_range = (s.evicted > 0 && start < s.evicted_below)
+                .then(|| (s.evicted_from.max(start), s.evicted_below));
+            (mem, log_range)
+        };
+        let mut out: Vec<Entry> = match (log_range, &self.wal) {
+            (Some((from, below)), Some(w)) => {
+                let mut v = w.read_entries(key, from, below);
+                v.retain(|e| e.id <= end);
+                v.truncate(take);
+                v
+            }
+            _ => Vec::new(),
+        };
+        let remaining = take.saturating_sub(out.len());
+        out.extend(mem.into_iter().take(remaining));
+        out
     }
 
-    /// Stream length (`XLEN`).
+    /// Stream length (`XLEN`) — logical: budget-evicted entries still
+    /// count (they remain readable through the log).
     pub fn xlen(&self, key: &str) -> usize {
         let map = self.shard(key).streams.read().unwrap();
         map.get(key)
-            .map(|s| s.lock().unwrap().entries.len())
+            .map(|s| {
+                let s = s.lock().unwrap();
+                s.entries.len() + s.evicted as usize
+            })
             .unwrap_or(0)
     }
 
@@ -480,26 +884,83 @@ impl Store {
             .unwrap_or(EntryId::ZERO)
     }
 
-    /// Delete streams; returns how many existed (`DEL`).
+    /// Delete streams; returns how many existed (`DEL`).  The `Del` op
+    /// is logged *while the shard map is write-locked*: a concurrent
+    /// `XADD` recreating the stream cannot frame its `Add` before the
+    /// `Del`, so replay order always matches what clients were acked.
     pub fn del(&self, keys: &[&str]) -> usize {
         let mut n = 0;
+        let mut logged_any = false;
         for key in keys {
             let mut map = self.shard(key).streams.write().unwrap();
-            if let Some(s) = map.remove(*key) {
-                let bytes = s.lock().unwrap().bytes;
-                self.total_bytes.fetch_sub(bytes as u64, Ordering::Relaxed);
-                n += 1;
+            if !map.contains_key(*key) {
+                continue;
+            }
+            // Log-before-apply, like every other mutation: if the Del
+            // op cannot be framed, the delete is NOT performed — a
+            // delete acked but absent from the log would resurrect the
+            // stream at the next replay.
+            if let Some(w) = &self.wal {
+                if let Err(e) = w.append(&WalOp::Del {
+                    keys: vec![(*key).to_string()],
+                }) {
+                    log::error!(
+                        "endpoint store: cannot log DEL of '{key}': {e:#}; \
+                         delete not applied"
+                    );
+                    continue;
+                }
+                logged_any = true;
+            }
+            let s = map.remove(*key).unwrap();
+            let bytes = s.lock().unwrap().bytes;
+            self.total_bytes.fetch_sub(bytes as u64, Ordering::Relaxed);
+            n += 1;
+        }
+        if logged_any {
+            if let Some(w) = &self.wal {
+                w.collect_garbage();
             }
         }
         n
     }
 
-    /// Drop everything (`FLUSHALL`).
+    /// Drop everything (`FLUSHALL`).  Like [`Store::del`], each shard's
+    /// `Del` op is framed under that shard's write lock so replay can
+    /// never order a concurrent recreate before the flush.
     pub fn flush_all(&self) {
+        let mut logged_any = false;
         for shard in &self.shards {
-            shard.streams.write().unwrap().clear();
+            let mut map = shard.streams.write().unwrap();
+            if map.is_empty() {
+                continue;
+            }
+            // Log-before-apply (see `del`): an unlogged flush would
+            // resurrect this shard's streams at the next replay.
+            if let Some(w) = &self.wal {
+                if let Err(e) = w.append(&WalOp::Del {
+                    keys: map.keys().cloned().collect(),
+                }) {
+                    log::error!(
+                        "endpoint store: cannot log FLUSHALL: {e:#}; \
+                         this shard's streams were not flushed"
+                    );
+                    continue;
+                }
+                logged_any = true;
+            }
+            let mut bytes = 0usize;
+            for s in map.values() {
+                bytes += s.lock().unwrap().bytes;
+            }
+            map.clear();
+            self.total_bytes.fetch_sub(bytes as u64, Ordering::Relaxed);
         }
-        self.total_bytes.store(0, Ordering::Relaxed);
+        if logged_any {
+            if let Some(w) = &self.wal {
+                w.collect_garbage();
+            }
+        }
     }
 
     /// Keys matching a glob-lite pattern (`*` suffix/prefix only, or exact).
@@ -521,18 +982,36 @@ impl Store {
             .sum()
     }
 
-    /// INFO text (mirrors the fields the paper's Table 1b cares about).
+    /// INFO text (mirrors the fields the paper's Table 1b cares about,
+    /// plus the ISSUE 4 `# Persistence` section).
     pub fn info(&self) -> String {
+        let wal = self.wal_stats().unwrap_or_default();
         format!(
             "# Server\r\nserver:elasticbroker-endpoint\r\nversion:0.1.0\r\nproto:RESP2\r\n\
              # Memory\r\nused_memory:{}\r\nmaxmemory:{}\r\n\
-             # Streams\r\nstreams:{}\r\ntotal_entries_added:{}\r\nstream_maxlen:{}\r\nshards:{}\r\n",
+             # Streams\r\nstreams:{}\r\ntotal_entries_added:{}\r\nstream_maxlen:{}\r\nshards:{}\r\n\
+             # Persistence\r\nwal_enabled:{}\r\nretention:{}\r\nwal_bytes:{}\r\nwal_segments:{}\r\n\
+             wal_fsync:{}\r\nlast_fsync_us:{}\r\nreplayed_entries:{}\r\ntrimmed_unread:{}\r\n\
+             evicted_entries:{}\r\ngc_segments:{}\r\n",
             self.total_bytes.load(Ordering::Relaxed),
             self.cfg.max_memory,
             self.stream_count(),
             self.total_entries.load(Ordering::Relaxed),
             self.cfg.stream_maxlen,
             self.shards.len(),
+            u8::from(self.wal.is_some()),
+            u8::from(self.cfg.retention),
+            wal.bytes,
+            if self.wal.is_some() { wal.segments } else { 0 },
+            self.wal
+                .as_ref()
+                .map(|w| w.fsync_policy().name())
+                .unwrap_or_else(|| "-".into()),
+            wal.last_fsync_us,
+            self.replayed,
+            self.trimmed_unread.load(Ordering::Relaxed),
+            self.evicted_entries.load(Ordering::Relaxed),
+            wal.gc_segments,
         )
     }
 
@@ -542,6 +1021,40 @@ impl Store {
 
     pub fn total_entries_added(&self) -> u64 {
         self.total_entries.load(Ordering::Relaxed)
+    }
+
+    /// Whether this store is backed by a write-ahead log.
+    pub fn is_durable(&self) -> bool {
+        self.wal.is_some()
+    }
+
+    /// WAL figures (`None` for in-memory stores).
+    pub fn wal_stats(&self) -> Option<WalStats> {
+        self.wal.as_ref().map(|w| w.stats())
+    }
+
+    /// Entries restored from the WAL when this store was opened.
+    pub fn replayed_entries(&self) -> u64 {
+        self.replayed
+    }
+
+    /// Entries dropped by `maxlen` trimming that no reader had acked.
+    pub fn trimmed_unread(&self) -> u64 {
+        self.trimmed_unread.load(Ordering::Relaxed)
+    }
+
+    /// Entries evicted from memory to the log under budget pressure.
+    pub fn evicted_entries(&self) -> u64 {
+        self.evicted_entries.load(Ordering::Relaxed)
+    }
+
+    /// Force everything logged so far to disk (any fsync policy); no-op
+    /// for in-memory stores.  Tests and graceful shutdown use this.
+    pub fn sync_wal(&self) -> Result<()> {
+        match &self.wal {
+            Some(w) => w.sync(),
+            None => Ok(()),
+        }
     }
 }
 
@@ -930,6 +1443,388 @@ mod tests {
         assert_eq!(store.fenced_last_step("plain"), None);
         assert_eq!(store.stream_epoch("absent"), 0);
         assert_eq!(store.fenced_last_step("absent"), None);
+    }
+
+    // ---- ISSUE 4: durability ------------------------------------------
+
+    use super::super::wal::{FsyncPolicy, WalConfig};
+
+    fn wal_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "eb-store-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn durable_cfg(tag: &str) -> (StoreConfig, std::path::PathBuf) {
+        let dir = wal_dir(tag);
+        (
+            StoreConfig {
+                wal: Some(WalConfig {
+                    dir: dir.clone(),
+                    fsync: FsyncPolicy::Never,
+                    segment_bytes: 1 << 20,
+                }),
+                ..Default::default()
+            },
+            dir,
+        )
+    }
+
+    /// The tentpole invariant: a restart restores entries AND the
+    /// fencing state (epoch fences, step high-water marks, id clocks),
+    /// so a restarted endpoint rejoins the PR 3 protocol without
+    /// violating STALE/DUP semantics.
+    #[test]
+    fn restart_restores_entries_and_fencing_state() {
+        let (cfg, dir) = durable_cfg("restart");
+        let last_id;
+        {
+            let store = Store::open(cfg.clone()).unwrap();
+            store.hello("u/0", 3).unwrap();
+            for step in 0..5u64 {
+                store
+                    .xadd_fenced("u/0", 3, step, false, fields(&step.to_string()))
+                    .unwrap();
+            }
+            store.xhandoff("u/1", 7, Some(2)).unwrap();
+            store.xadd("plain", None, fields("p")).unwrap();
+            last_id = store.last_id("u/0");
+        }
+        let store = Store::open(cfg).unwrap();
+        assert_eq!(store.replayed_entries(), 7);
+        assert_eq!(store.xlen("u/0"), 5);
+        assert_eq!(store.last_id("u/0"), last_id);
+        assert_eq!(store.stream_epoch("u/0"), 3);
+        assert_eq!(store.fenced_last_step("u/0"), Some(4));
+        assert_eq!(store.stream_epoch("u/1"), 7);
+        assert_eq!(store.xlen("plain"), 1);
+        // zombie writer behind the recovered fence is still rejected
+        let err = store.hello("u/0", 2).unwrap_err();
+        assert!(err.to_string().starts_with("STALE"), "{err}");
+        let err = store
+            .xadd_fenced("u/0", 2, 9, false, fields("z"))
+            .unwrap_err();
+        assert!(err.to_string().starts_with("STALE"), "{err}");
+        // DUP dedupe still holds across the restart
+        assert_eq!(
+            store.xadd_fenced("u/0", 3, 4, false, fields("re")).unwrap(),
+            FencedAdd::Duplicate
+        );
+        // the id clock resumed past the replayed ids
+        let id = store.xadd("u/0", None, fields("new")).unwrap();
+        assert!(id > last_id, "recovered clock minted {id} <= {last_id}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Satellite: with retention, maxlen trimming never drops entries
+    /// above the acked cursor; acking unlocks the trim.
+    #[test]
+    fn retention_never_trims_unread_entries() {
+        let dir = wal_dir("retention");
+        let store = Store::open(StoreConfig {
+            stream_maxlen: 5,
+            retention: true,
+            wal: Some(WalConfig {
+                dir: dir.clone(),
+                fsync: FsyncPolicy::Never,
+                segment_bytes: 1 << 20,
+            }),
+            ..Default::default()
+        })
+        .unwrap();
+        let mut ids = Vec::new();
+        for i in 0..12u64 {
+            ids.push(
+                store
+                    .xadd("s", Some(EntryId { ms: i + 1, seq: 0 }), fields("x"))
+                    .unwrap(),
+            );
+        }
+        // nothing acked: nothing trimmed, despite maxlen 5
+        assert_eq!(store.xlen("s"), 12);
+        assert_eq!(store.trimmed_unread(), 0);
+        // ack the first 9: the next append may trim, but only ≤ acked
+        store.xackpos("s", ids[8]).unwrap();
+        store
+            .xadd("s", Some(EntryId { ms: 100, seq: 0 }), fields("x"))
+            .unwrap();
+        assert_eq!(store.xlen("s"), 5); // 13 total, 8 acked ones trimmed
+        let first = store.read_after("s", EntryId::ZERO, 1);
+        assert_eq!(first[0].id, ids[8]);
+        assert_eq!(store.trimmed_unread(), 0, "retention never drops unread");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Satellite regression: without retention the old silent-drop trim
+    /// behaviour stands, but the loss is now counted.
+    #[test]
+    fn trimmed_unread_counts_silent_drops() {
+        let store = Store::new(StoreConfig {
+            stream_maxlen: 5,
+            max_memory: 0,
+            ..Default::default()
+        });
+        for i in 0..12u64 {
+            store
+                .xadd("s", Some(EntryId { ms: i + 1, seq: 0 }), fields("x"))
+                .unwrap();
+        }
+        assert_eq!(store.xlen("s"), 5);
+        assert_eq!(store.trimmed_unread(), 7, "12 added, 7 dropped unread");
+    }
+
+    /// Tentpole: over-budget writes on a durable store evict cold
+    /// entries to the log instead of OOM-rejecting, and reads serve the
+    /// evicted range back from the log.
+    #[test]
+    fn budget_evicts_to_log_instead_of_oom() {
+        let dir = wal_dir("evict");
+        let store = Store::open(StoreConfig {
+            stream_maxlen: 0,
+            max_memory: 600,
+            wal: Some(WalConfig {
+                dir: dir.clone(),
+                fsync: FsyncPolicy::Never,
+                segment_bytes: 1 << 20,
+            }),
+            ..Default::default()
+        })
+        .unwrap();
+        let n = 12u64;
+        let mut ids = Vec::new();
+        for i in 0..n {
+            // ~116 B each: the budget fits ~5 in memory
+            ids.push(
+                store
+                    .xadd(
+                        "s",
+                        Some(EntryId { ms: i + 1, seq: 0 }),
+                        vec![(b"r".to_vec(), vec![i as u8; 100])],
+                    )
+                    .unwrap(),
+            );
+        }
+        assert!(store.evicted_entries() > 0, "nothing was evicted");
+        assert!(
+            (store.used_bytes() as usize) < 600 + 200,
+            "memory stayed near the budget"
+        );
+        // logical length and full reads are unaffected by eviction
+        assert_eq!(store.xlen("s"), n as usize);
+        let all = store.read_after("s", EntryId::ZERO, 0);
+        assert_eq!(all.len(), n as usize);
+        let got: Vec<EntryId> = all.iter().map(|e| e.id).collect();
+        assert_eq!(got, ids, "log-backed read_after lost or reordered entries");
+        assert_eq!(all[0].fields[0].1, vec![0u8; 100]);
+        // XRANGE over an evicted-only window
+        let head = store.range("s", ids[0], ids[2], 0);
+        assert_eq!(head.len(), 3);
+        let head_ids: Vec<EntryId> = head.iter().map(|e| e.id).collect();
+        assert_eq!(head_ids, ids[..3].to_vec());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Acks advance retention: closed segments wholly below the acked
+    /// cursor are reclaimed from disk.
+    #[test]
+    fn acks_reclaim_wal_segments() {
+        let dir = wal_dir("ack-gc");
+        let store = Store::open(StoreConfig {
+            stream_maxlen: 0,
+            retention: true,
+            wal: Some(WalConfig {
+                dir: dir.clone(),
+                fsync: FsyncPolicy::Never,
+                segment_bytes: 4096,
+            }),
+            ..Default::default()
+        })
+        .unwrap();
+        let mut last = EntryId::ZERO;
+        for i in 0..40u64 {
+            last = store
+                .xadd(
+                    "s",
+                    Some(EntryId { ms: i + 1, seq: 0 }),
+                    vec![(b"r".to_vec(), vec![0u8; 256])],
+                )
+                .unwrap();
+        }
+        let before = store.wal_stats().unwrap();
+        assert!(before.segments > 1, "rotation never happened");
+        store.xackpos("s", last).unwrap();
+        let after = store.wal_stats().unwrap();
+        assert!(
+            after.segments < before.segments,
+            "ack did not reclaim segments ({} -> {})",
+            before.segments,
+            after.segments
+        );
+        assert_eq!(store.acked("s"), last);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The budget is global: a write to a small stream must evict
+    /// another stream's cold entries rather than OOM.
+    #[test]
+    fn budget_eviction_is_cross_stream() {
+        let dir = wal_dir("evict-global");
+        let store = Store::open(StoreConfig {
+            stream_maxlen: 0,
+            max_memory: 800,
+            wal: Some(WalConfig {
+                dir: dir.clone(),
+                fsync: FsyncPolicy::Never,
+                segment_bytes: 1 << 20,
+            }),
+            ..Default::default()
+        })
+        .unwrap();
+        // hog: one stream eats the whole budget
+        for i in 0..8u64 {
+            store
+                .xadd(
+                    "hog",
+                    Some(EntryId { ms: i + 1, seq: 0 }),
+                    vec![(b"r".to_vec(), vec![1u8; 100])],
+                )
+                .unwrap();
+        }
+        // a different (tiny) stream must still be writable
+        store.xadd("tiny", None, fields("x")).unwrap();
+        assert_eq!(store.xlen("tiny"), 1);
+        assert!(store.evicted_entries() > 0, "hog was not evicted");
+        // the hog's evicted entries still read back in full
+        assert_eq!(store.read_after("hog", EntryId::ZERO, 0).len(), 8);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Interleaved budget eviction and maxlen trimming must never let
+    /// the log fallback resurrect trimmed (logically deleted) entries:
+    /// the evicted window is the logical head, so trim drops it first.
+    #[test]
+    fn trim_never_resurrects_evicted_entries_via_log() {
+        let dir = wal_dir("trim-evict");
+        let store = Store::open(StoreConfig {
+            stream_maxlen: 3,
+            max_memory: 300,
+            wal: Some(WalConfig {
+                dir: dir.clone(),
+                fsync: FsyncPolicy::Never,
+                segment_bytes: 1 << 20,
+            }),
+            ..Default::default()
+        })
+        .unwrap();
+        for i in 1..=5u64 {
+            store
+                .xadd(
+                    "s",
+                    Some(EntryId { ms: i, seq: 0 }),
+                    vec![(b"r".to_vec(), vec![i as u8; 100])],
+                )
+                .unwrap();
+        }
+        // logical stream is the maxlen-3 tail; ids 1-2 were evicted to
+        // the log and then trimmed away — they must stay gone
+        assert_eq!(store.xlen("s"), 3);
+        let ids: Vec<u64> = store
+            .read_after("s", EntryId::ZERO, 0)
+            .iter()
+            .map(|e| e.id.ms)
+            .collect();
+        assert_eq!(ids, vec![3, 4, 5], "trimmed ids resurrected from the log");
+        let ids: Vec<u64> = store
+            .range("s", EntryId { ms: 1, seq: 0 }, EntryId { ms: 5, seq: 0 }, 0)
+            .iter()
+            .map(|e| e.id.ms)
+            .collect();
+        assert_eq!(ids, vec![3, 4, 5]);
+        assert_eq!(store.trimmed_unread(), 2, "evicted-then-trimmed drops counted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Acking an unknown stream must not resurrect it (phantom streams
+    /// would come back on every replay).
+    #[test]
+    fn xackpos_on_unknown_stream_is_a_noop() {
+        let (cfg, dir) = durable_cfg("ack-noop");
+        {
+            let store = Store::open(cfg.clone()).unwrap();
+            assert_eq!(store.xackpos("ghost", EntryId { ms: 9, seq: 0 }).unwrap(), EntryId::ZERO);
+            assert_eq!(store.stream_count(), 0, "phantom stream created");
+            store.xadd("real", None, fields("x")).unwrap();
+            store.del(&["real"]).unwrap();
+            assert_eq!(store.xackpos("real", EntryId { ms: 9, seq: 0 }).unwrap(), EntryId::ZERO);
+            assert_eq!(store.stream_count(), 0);
+        }
+        let store = Store::open(cfg).unwrap();
+        assert_eq!(store.stream_count(), 0, "phantom stream replayed");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Restart must not re-count unread losses the previous incarnation
+    /// already reported.
+    #[test]
+    fn replay_does_not_recount_trimmed_unread() {
+        let dir = wal_dir("trim-replay");
+        let cfg = StoreConfig {
+            stream_maxlen: 5,
+            wal: Some(WalConfig {
+                dir: dir.clone(),
+                fsync: FsyncPolicy::Never,
+                segment_bytes: 1 << 20,
+            }),
+            ..Default::default()
+        };
+        {
+            let store = Store::open(cfg.clone()).unwrap();
+            for i in 0..12u64 {
+                store
+                    .xadd("s", Some(EntryId { ms: i + 1, seq: 0 }), fields("x"))
+                    .unwrap();
+            }
+            assert_eq!(store.trimmed_unread(), 7);
+        }
+        let store = Store::open(cfg).unwrap();
+        assert_eq!(store.xlen("s"), 5);
+        assert_eq!(
+            store.trimmed_unread(),
+            0,
+            "replay re-counted losses the old incarnation reported"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retention_without_wal_rejected() {
+        let res = Store::open(StoreConfig {
+            retention: true,
+            wal: None,
+            ..Default::default()
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn info_has_persistence_section() {
+        let (cfg, dir) = durable_cfg("info");
+        let store = Store::open(cfg).unwrap();
+        store.xadd("s", None, fields("x")).unwrap();
+        let info = store.info();
+        assert!(info.contains("# Persistence"), "{info}");
+        assert!(info.contains("wal_enabled:1"));
+        assert!(info.contains("wal_segments:1"));
+        assert!(info.contains("wal_fsync:never"));
+        assert!(store.is_durable());
+        // in-memory stores report the section too, zeroed
+        let mem = Store::new(StoreConfig::default());
+        assert!(mem.info().contains("wal_enabled:0"));
+        assert!(!mem.is_durable());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// Property: after any interleaving of adds, read_after(last_id of a

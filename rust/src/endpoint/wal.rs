@@ -1,0 +1,1502 @@
+//! Durable endpoint streams: a segmented, CRC-framed write-ahead log.
+//!
+//! The paper's Cloud endpoints are Redis-streams instances whose fault
+//! story rests on AOF persistence; this module is our equivalent.  Every
+//! state mutation the store accepts (`XADD`/`XADDF`/`XHANDOFF` entries,
+//! `HELLO` fence raises, `XACKPOS` reader cursors, `DEL`) is appended to
+//! the log *before* the command is acknowledged, so a crashed endpoint
+//! restarts into exactly the state its writers were acked against —
+//! including the fencing state (per-stream epoch fences, step high-water
+//! marks, id clocks) the PR 3 elasticity protocol depends on.
+//!
+//! **Framing.**  The log is a sequence of frames:
+//!
+//! ```text
+//! len     u32   payload length
+//! crc32   u32   CRC-32 (IEEE, `record::crc32`) over the payload
+//! payload       one encoded [`WalOp`]
+//! ```
+//!
+//! Replay accepts the longest valid frame prefix of each segment: a
+//! short frame (torn write at crash) or a CRC mismatch terminates the
+//! segment and the file is truncated back to the last valid frame
+//! boundary, so a torn tail can never poison recovery.
+//!
+//! **Segments.**  Frames go to `wal-<seq>.log` files; when the current
+//! segment passes [`WalConfig::segment_bytes`] it is fsynced, closed and
+//! a new segment opened.  Each new segment starts with a
+//! [`WalOp::Snapshot`] of every live stream's *metadata* (last id, epoch
+//! fence, step high-water mark, acked cursor) — the log's own state, no
+//! store locks taken — which is what makes old segments disposable:
+//! their data can be reclaimed without losing fencing state.
+//!
+//! **Group commit.**  [`FsyncPolicy`] decides durability latency:
+//! `Always` fsyncs before acking every append, but concurrent appenders
+//! share fsyncs — one thread syncs while the others wait on a condvar
+//! and all appends at or below the synced frame sequence are released
+//! together (classic group commit, the difference the `micro_wal` bench
+//! measures); `EveryMs(n)` acks after the buffered write and bounds loss
+//! to `n` ms via a background flusher; `Never` leaves syncing to the OS.
+//!
+//! **Retention.**  Readers acknowledge consumed cursors (`XACKPOS`);
+//! [`Wal::collect_garbage`] deletes closed segments from the front of
+//! the log while every entry they hold is at or below its stream's
+//! acked cursor (or the stream was deleted).  Entries evicted from
+//! memory by the store's budget remain readable through
+//! [`Wal::read_entries`] until they are acked away.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::store::{Entry, EntryId};
+use crate::record::crc32;
+
+/// When an append becomes durable relative to its acknowledgement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// Never fsync explicitly; the OS flushes when it pleases.  Crash
+    /// loss is unbounded, process-exit loss is none (data is written,
+    /// not buffered in user space).
+    Never,
+    /// A background flusher fsyncs every `n` ms; appends ack after the
+    /// buffered write, so crash loss is bounded to the last `n` ms.
+    EveryMs(u64),
+    /// fsync before acking every append (group-committed: concurrent
+    /// appenders share one fsync).
+    Always,
+}
+
+impl FsyncPolicy {
+    /// Parse `"never"`, `"always"` or `"every_ms(N)"`.
+    pub fn parse(s: &str) -> Result<FsyncPolicy> {
+        match s {
+            "never" => Ok(FsyncPolicy::Never),
+            "always" => Ok(FsyncPolicy::Always),
+            other => {
+                let n: Option<u64> = other
+                    .strip_prefix("every_ms(")
+                    .and_then(|r| r.strip_suffix(')'))
+                    .and_then(|n| n.parse().ok());
+                match n {
+                    Some(ms) => Ok(FsyncPolicy::EveryMs(ms.max(1))),
+                    None => bail!(
+                        "bad fsync policy '{other}' (never|always|every_ms(N))"
+                    ),
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            FsyncPolicy::Never => "never".into(),
+            FsyncPolicy::Always => "always".into(),
+            FsyncPolicy::EveryMs(n) => format!("every_ms({n})"),
+        }
+    }
+}
+
+/// WAL configuration.
+#[derive(Clone, Debug)]
+pub struct WalConfig {
+    /// Directory holding the segment files (created if missing).
+    pub dir: PathBuf,
+    /// Durability policy (see [`FsyncPolicy`]).
+    pub fsync: FsyncPolicy,
+    /// Segment rotation threshold in bytes (clamped to ≥ 4 KiB).
+    pub segment_bytes: usize,
+}
+
+impl Default for WalConfig {
+    fn default() -> Self {
+        WalConfig {
+            dir: PathBuf::from("wal"),
+            fsync: FsyncPolicy::EveryMs(5),
+            segment_bytes: 64 << 20,
+        }
+    }
+}
+
+/// Per-stream metadata carried by segment-head snapshots.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamMeta {
+    pub key: String,
+    pub last_id: EntryId,
+    /// Epoch fence (0 = unfenced).
+    pub epoch: u64,
+    /// Step high-water mark (`u64::MAX` = no fenced write yet).
+    pub step: u64,
+    /// Reader-acked cursor (retention floor).
+    pub acked: EntryId,
+}
+
+/// One logged state mutation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WalOp {
+    /// Entry appended to `key` (records and handoff tombstones alike),
+    /// together with the stream's fencing state *after* the append so
+    /// recovery restores epochs and high-water marks exactly.
+    Add {
+        key: String,
+        id: EntryId,
+        epoch: u64,
+        /// Step high-water mark after the append (`u64::MAX` = none).
+        step: u64,
+        fields: Vec<(Vec<u8>, Vec<u8>)>,
+    },
+    /// Fence raised without an entry (`HELLO`).
+    Fence { key: String, epoch: u64 },
+    /// Reader acknowledged everything at or below `pos` (`XACKPOS`).
+    Ack { key: String, pos: EntryId },
+    /// Streams deleted (`DEL` / `FLUSHALL`).
+    Del { keys: Vec<String> },
+    /// Segment-head metadata snapshot (written at rotation).
+    Snapshot { streams: Vec<StreamMeta> },
+}
+
+const TAG_ADD: u8 = 1;
+const TAG_FENCE: u8 = 2;
+const TAG_ACK: u8 = 3;
+const TAG_DEL: u8 = 4;
+const TAG_SNAPSHOT: u8 = 5;
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_id(out: &mut Vec<u8>, id: EntryId) {
+    out.extend_from_slice(&id.ms.to_le_bytes());
+    out.extend_from_slice(&id.seq.to_le_bytes());
+}
+
+/// Encode an `Add` op straight from borrowed parts (the hot path: no
+/// intermediate [`WalOp`], no field clones).
+pub(crate) fn encode_add(
+    key: &str,
+    id: EntryId,
+    epoch: u64,
+    step: u64,
+    fields: &[(Vec<u8>, Vec<u8>)],
+) -> Vec<u8> {
+    let payload: usize = fields.iter().map(|(k, v)| 8 + k.len() + v.len()).sum();
+    let mut out = Vec::with_capacity(1 + 2 + key.len() + 16 + 16 + 2 + payload);
+    out.push(TAG_ADD);
+    put_str(&mut out, key);
+    put_id(&mut out, id);
+    out.extend_from_slice(&epoch.to_le_bytes());
+    out.extend_from_slice(&step.to_le_bytes());
+    out.extend_from_slice(&(fields.len() as u16).to_le_bytes());
+    for (k, v) in fields {
+        out.extend_from_slice(&(k.len() as u32).to_le_bytes());
+        out.extend_from_slice(k);
+        out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        out.extend_from_slice(v);
+    }
+    out
+}
+
+impl WalOp {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            WalOp::Add {
+                key,
+                id,
+                epoch,
+                step,
+                fields,
+            } => encode_add(key, *id, *epoch, *step, fields),
+            WalOp::Fence { key, epoch } => {
+                let mut out = Vec::with_capacity(3 + key.len() + 8);
+                out.push(TAG_FENCE);
+                put_str(&mut out, key);
+                out.extend_from_slice(&epoch.to_le_bytes());
+                out
+            }
+            WalOp::Ack { key, pos } => {
+                let mut out = Vec::with_capacity(3 + key.len() + 16);
+                out.push(TAG_ACK);
+                put_str(&mut out, key);
+                put_id(&mut out, *pos);
+                out
+            }
+            WalOp::Del { keys } => {
+                let mut out = Vec::new();
+                out.push(TAG_DEL);
+                out.extend_from_slice(&(keys.len() as u16).to_le_bytes());
+                for k in keys {
+                    put_str(&mut out, k);
+                }
+                out
+            }
+            WalOp::Snapshot { streams } => {
+                let mut out = Vec::new();
+                out.push(TAG_SNAPSHOT);
+                out.extend_from_slice(&(streams.len() as u32).to_le_bytes());
+                for m in streams {
+                    put_str(&mut out, &m.key);
+                    put_id(&mut out, m.last_id);
+                    out.extend_from_slice(&m.epoch.to_le_bytes());
+                    out.extend_from_slice(&m.step.to_le_bytes());
+                    put_id(&mut out, m.acked);
+                }
+                out
+            }
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<WalOp> {
+        let mut r = Reader { buf, pos: 0 };
+        let op = match r.u8()? {
+            TAG_ADD => {
+                let key = r.str()?;
+                let id = r.id()?;
+                let epoch = r.u64()?;
+                let step = r.u64()?;
+                let nfields = r.u16()? as usize;
+                let mut fields = Vec::with_capacity(nfields.min(1024));
+                for _ in 0..nfields {
+                    let klen = r.u32()? as usize;
+                    let k = r.bytes(klen)?.to_vec();
+                    let vlen = r.u32()? as usize;
+                    let v = r.bytes(vlen)?.to_vec();
+                    fields.push((k, v));
+                }
+                WalOp::Add {
+                    key,
+                    id,
+                    epoch,
+                    step,
+                    fields,
+                }
+            }
+            TAG_FENCE => WalOp::Fence {
+                key: r.str()?,
+                epoch: r.u64()?,
+            },
+            TAG_ACK => WalOp::Ack {
+                key: r.str()?,
+                pos: r.id()?,
+            },
+            TAG_DEL => {
+                let n = r.u16()? as usize;
+                let mut keys = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    keys.push(r.str()?);
+                }
+                WalOp::Del { keys }
+            }
+            TAG_SNAPSHOT => {
+                let n = r.u32()? as usize;
+                let mut streams = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    streams.push(StreamMeta {
+                        key: r.str()?,
+                        last_id: r.id()?,
+                        epoch: r.u64()?,
+                        step: r.u64()?,
+                        acked: r.id()?,
+                    });
+                }
+                WalOp::Snapshot { streams }
+            }
+            other => bail!("unknown wal op tag {other}"),
+        };
+        if r.pos != buf.len() {
+            bail!("wal op has {} trailing bytes", buf.len() - r.pos);
+        }
+        Ok(op)
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!("wal op truncated at offset {}", self.pos);
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+    fn id(&mut self) -> Result<EntryId> {
+        Ok(EntryId {
+            ms: self.u64()?,
+            seq: self.u64()?,
+        })
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        Ok(String::from_utf8_lossy(self.bytes(n)?).into_owned())
+    }
+}
+
+/// One stream's state as reconstructed by replay.
+#[derive(Clone, Debug)]
+pub struct ReplayedStream {
+    /// Surviving entries in id order (acked-away entries are gone).
+    pub entries: Vec<Entry>,
+    pub last_id: EntryId,
+    pub epoch: u64,
+    /// `u64::MAX` = no fenced write yet.
+    pub step: u64,
+    pub acked: EntryId,
+}
+
+impl Default for ReplayedStream {
+    fn default() -> Self {
+        ReplayedStream {
+            entries: Vec::new(),
+            last_id: EntryId::ZERO,
+            epoch: 0,
+            step: u64::MAX,
+            acked: EntryId::ZERO,
+        }
+    }
+}
+
+/// Everything [`Wal::open`] reconstructed from disk.
+#[derive(Default)]
+pub struct Replay {
+    pub streams: HashMap<String, ReplayedStream>,
+    /// Entries replayed into memory (INFO `replayed_entries`).
+    pub entries: u64,
+    /// Torn/corrupt tail bytes truncated away during recovery.
+    pub truncated_bytes: u64,
+}
+
+/// Point-in-time WAL figures for INFO / the QoS board.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WalStats {
+    pub segments: usize,
+    pub bytes: u64,
+    /// µs-since-epoch of the last fsync (0 = never).
+    pub last_fsync_us: u64,
+    pub appended_ops: u64,
+    pub gc_segments: u64,
+}
+
+struct KeyMeta {
+    last_id: EntryId,
+    epoch: u64,
+    step: u64,
+    acked: EntryId,
+}
+
+struct Segment {
+    seq: u64,
+    path: PathBuf,
+    file: Arc<File>,
+    bytes: u64,
+    /// Highest entry id appended per key in this segment (GC input).
+    max_ids: HashMap<String, EntryId>,
+}
+
+struct ClosedSegment {
+    path: PathBuf,
+    bytes: u64,
+    max_ids: HashMap<String, EntryId>,
+}
+
+struct WalState {
+    current: Segment,
+    /// Closed segments, oldest first.
+    closed: Vec<ClosedSegment>,
+    /// Live per-stream metadata (mirrors the ops appended so far; what
+    /// rotation snapshots — derived entirely under the wal lock, so no
+    /// store locks are ever taken from inside the log).
+    meta: HashMap<String, KeyMeta>,
+    /// Frames appended (group-commit sequence).
+    write_seq: u64,
+    /// Frames known durable.
+    sync_seq: u64,
+    /// A group-commit fsync is in flight.
+    syncing: bool,
+    appended_ops: u64,
+}
+
+struct Shared {
+    state: Mutex<WalState>,
+    synced: Condvar,
+    last_fsync_us: AtomicU64,
+}
+
+impl Shared {
+    /// Group commit: make every frame at or below `seq` durable.  One
+    /// waiter performs the fsync with the lock released; the rest wait
+    /// on the condvar and are released together.
+    fn sync_to(&self, seq: u64) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.sync_seq >= seq {
+                return Ok(());
+            }
+            if st.syncing {
+                st = self.synced.wait(st).unwrap();
+                continue;
+            }
+            st.syncing = true;
+            let file = st.current.file.clone();
+            let upto = st.write_seq;
+            drop(st);
+            let res = file.sync_data();
+            self.last_fsync_us
+                .store(crate::util::epoch_micros(), Ordering::Relaxed);
+            st = self.state.lock().unwrap();
+            st.syncing = false;
+            if res.is_ok() {
+                st.sync_seq = st.sync_seq.max(upto);
+            }
+            self.synced.notify_all();
+            res.context("wal fsync")?;
+        }
+    }
+
+    fn sync_all(&self) -> Result<()> {
+        let seq = self.state.lock().unwrap().write_seq;
+        self.sync_to(seq)
+    }
+}
+
+/// The append-only segmented log.  All methods are `&self`; internal
+/// locking serializes frame writes, group-commits fsyncs, and keeps
+/// cold-path log reads consistent with concurrent appends.
+pub struct Wal {
+    cfg: WalConfig,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    flusher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    gc_segments: AtomicU64,
+}
+
+fn segment_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("wal-{seq:016x}.log"))
+}
+
+/// Write one frame to the state's current segment.  A failed write may
+/// have left a *partial* frame on disk; the file is truncated back to
+/// the last good frame boundary before the error surfaces — otherwise
+/// later, successfully-acked frames would land after torn bytes and be
+/// silently discarded by the longest-valid-prefix rule at replay.
+fn write_frame(st: &mut WalState, payload: &[u8]) -> Result<()> {
+    let mut frame = Vec::with_capacity(8 + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&crc32(payload).to_le_bytes());
+    frame.extend_from_slice(payload);
+    if let Err(e) = (&*st.current.file).write_all(&frame) {
+        if let Err(t) = st.current.file.set_len(st.current.bytes) {
+            log::error!(
+                "wal: cannot truncate torn tail after a failed append \
+                 (segment {}): {t} — entries appended after this point \
+                 may be lost at the next replay",
+                st.current.path.display()
+            );
+        }
+        return Err(e).context("wal append");
+    }
+    st.current.bytes += frame.len() as u64;
+    st.write_seq += 1;
+    Ok(())
+}
+
+struct ScanOutcome {
+    valid_bytes: u64,
+    file_bytes: u64,
+}
+
+/// Walk a segment's frames, calling `on_op` for every valid one; stops
+/// at the first torn or corrupt frame (the longest-valid-prefix rule).
+fn scan_segment(path: &Path, mut on_op: impl FnMut(WalOp)) -> Result<ScanOutcome> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut pos = 0usize;
+    while buf.len() - pos >= 8 {
+        let len = u32::from_le_bytes([buf[pos], buf[pos + 1], buf[pos + 2], buf[pos + 3]])
+            as usize;
+        let crc = u32::from_le_bytes([
+            buf[pos + 4],
+            buf[pos + 5],
+            buf[pos + 6],
+            buf[pos + 7],
+        ]);
+        if len > 1 << 30 || buf.len() - pos - 8 < len {
+            break; // torn tail (or a corrupt length field)
+        }
+        let payload = &buf[pos + 8..pos + 8 + len];
+        if crc32(payload) != crc {
+            break; // corrupt tail
+        }
+        match WalOp::decode(payload) {
+            Ok(op) => on_op(op),
+            Err(e) => {
+                // CRC-valid but undecodable: treat as end of log too.
+                log::warn!("wal: {}: undecodable frame: {e:#}", path.display());
+                break;
+            }
+        }
+        pos += 8 + len;
+    }
+    Ok(ScanOutcome {
+        valid_bytes: pos as u64,
+        file_bytes: buf.len() as u64,
+    })
+}
+
+fn apply_replay(
+    replay: &mut Replay,
+    max_ids: &mut HashMap<String, EntryId>,
+    op: WalOp,
+) {
+    match op {
+        WalOp::Add {
+            key,
+            id,
+            epoch,
+            step,
+            fields,
+        } => {
+            let st = replay.streams.entry(key.clone()).or_default();
+            // Ids are strictly increasing per stream in a healthy log;
+            // a non-increasing id means the same append was framed
+            // twice (a write that hit the file but whose fsync failed,
+            // so the store reported an error and the client re-shipped
+            // the identical entry).  Keep the first copy: replay stays
+            // exactly-once and the sorted-entries invariant holds.
+            if id > st.last_id {
+                st.entries.push(Entry { id, fields });
+                st.last_id = id;
+                replay.entries += 1;
+            } else {
+                log::warn!(
+                    "wal: replay skipping duplicate entry {id} of '{key}' \
+                     (stream already at {})",
+                    st.last_id
+                );
+            }
+            st.epoch = epoch;
+            st.step = step;
+            let m = max_ids.entry(key).or_insert(EntryId::ZERO);
+            if id > *m {
+                *m = id;
+            }
+        }
+        WalOp::Fence { key, epoch } => {
+            let st = replay.streams.entry(key).or_default();
+            st.epoch = st.epoch.max(epoch);
+        }
+        WalOp::Ack { key, pos } => {
+            let st = replay.streams.entry(key).or_default();
+            if pos > st.acked {
+                st.acked = pos;
+            }
+        }
+        WalOp::Del { keys } => {
+            for k in keys {
+                replay.streams.remove(&k);
+            }
+        }
+        WalOp::Snapshot { streams } => {
+            for m in streams {
+                let st = replay.streams.entry(m.key).or_default();
+                if m.last_id > st.last_id {
+                    st.last_id = m.last_id;
+                }
+                st.epoch = st.epoch.max(m.epoch);
+                if m.step != u64::MAX {
+                    st.step = if st.step == u64::MAX {
+                        m.step
+                    } else {
+                        st.step.max(m.step)
+                    };
+                }
+                if m.acked > st.acked {
+                    st.acked = m.acked;
+                }
+            }
+        }
+    }
+}
+
+impl Wal {
+    /// Open (or create) the log at `cfg.dir`, replaying every segment.
+    /// Torn or corrupt segment tails are truncated back to the last
+    /// valid frame; replay reconstructs entries *and* fencing state.
+    pub fn open(cfg: WalConfig) -> Result<(Wal, Replay)> {
+        let cfg = WalConfig {
+            segment_bytes: cfg.segment_bytes.max(4096),
+            ..cfg
+        };
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating wal dir {}", cfg.dir.display()))?;
+        let mut segs: Vec<(u64, PathBuf)> = Vec::new();
+        for entry in std::fs::read_dir(&cfg.dir)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if let Some(seq) = name
+                .strip_prefix("wal-")
+                .and_then(|r| r.strip_suffix(".log"))
+                .and_then(|h| u64::from_str_radix(h, 16).ok())
+            {
+                segs.push((seq, entry.path()));
+            }
+        }
+        segs.sort();
+
+        let mut replay = Replay::default();
+        let mut closed: Vec<ClosedSegment> = Vec::new();
+        let mut last: Option<Segment> = None;
+        let n = segs.len();
+        for (i, (seq, path)) in segs.into_iter().enumerate() {
+            let mut max_ids = HashMap::new();
+            let outcome =
+                scan_segment(&path, |op| apply_replay(&mut replay, &mut max_ids, op))?;
+            if outcome.valid_bytes < outcome.file_bytes {
+                log::warn!(
+                    "wal: {}: truncating {} torn/corrupt tail bytes",
+                    path.display(),
+                    outcome.file_bytes - outcome.valid_bytes
+                );
+                let f = OpenOptions::new().write(true).open(&path)?;
+                f.set_len(outcome.valid_bytes)?;
+                f.sync_data().ok();
+                replay.truncated_bytes += outcome.file_bytes - outcome.valid_bytes;
+            }
+            if i + 1 == n {
+                let file = Arc::new(OpenOptions::new().append(true).open(&path)?);
+                last = Some(Segment {
+                    seq,
+                    path,
+                    file,
+                    bytes: outcome.valid_bytes,
+                    max_ids,
+                });
+            } else {
+                closed.push(ClosedSegment {
+                    path,
+                    bytes: outcome.valid_bytes,
+                    max_ids,
+                });
+            }
+        }
+        let current = match last {
+            Some(seg) => seg,
+            None => {
+                let path = segment_path(&cfg.dir, 1);
+                let file = Arc::new(
+                    OpenOptions::new().create(true).append(true).open(&path)?,
+                );
+                Segment {
+                    seq: 1,
+                    path,
+                    file,
+                    bytes: 0,
+                    max_ids: HashMap::new(),
+                }
+            }
+        };
+        let meta: HashMap<String, KeyMeta> = replay
+            .streams
+            .iter()
+            .map(|(k, s)| {
+                (
+                    k.clone(),
+                    KeyMeta {
+                        last_id: s.last_id,
+                        epoch: s.epoch,
+                        step: s.step,
+                        acked: s.acked,
+                    },
+                )
+            })
+            .collect();
+        let shared = Arc::new(Shared {
+            state: Mutex::new(WalState {
+                current,
+                closed,
+                meta,
+                write_seq: 0,
+                sync_seq: 0,
+                syncing: false,
+                appended_ops: 0,
+            }),
+            synced: Condvar::new(),
+            last_fsync_us: AtomicU64::new(0),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let flusher = if let FsyncPolicy::EveryMs(ms) = cfg.fsync {
+            let f_shared = shared.clone();
+            let f_stop = stop.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("wal-flush".into())
+                    .spawn(move || {
+                        while !f_stop.load(Ordering::SeqCst) {
+                            std::thread::sleep(Duration::from_millis(ms.max(1)));
+                            if let Err(e) = f_shared.sync_all() {
+                                log::warn!("wal: periodic fsync failed: {e:#}");
+                            }
+                        }
+                    })?,
+            )
+        } else {
+            None
+        };
+        Ok((
+            Wal {
+                cfg,
+                shared,
+                stop,
+                flusher: Mutex::new(flusher),
+                gc_segments: AtomicU64::new(0),
+            },
+            replay,
+        ))
+    }
+
+    /// Append one op, honouring the fsync policy before returning.
+    pub fn append(&self, op: &WalOp) -> Result<()> {
+        match op {
+            WalOp::Add { key, fields, .. } => {
+                validate_key(key)?;
+                anyhow::ensure!(
+                    fields.len() <= u16::MAX as usize,
+                    "wal: entry has too many fields ({})",
+                    fields.len()
+                );
+            }
+            WalOp::Fence { key, .. } | WalOp::Ack { key, .. } => validate_key(key)?,
+            WalOp::Del { keys } => {
+                anyhow::ensure!(
+                    keys.len() <= u16::MAX as usize,
+                    "wal: DEL of too many keys ({})",
+                    keys.len()
+                );
+                for k in keys {
+                    validate_key(k)?;
+                }
+            }
+            WalOp::Snapshot { .. } => {}
+        }
+        let payload = op.encode();
+        let seq = self.append_payload(&payload, |meta, max_ids| match op {
+            WalOp::Add {
+                key,
+                id,
+                epoch,
+                step,
+                ..
+            } => {
+                note_add(meta, max_ids, key, *id, *epoch, *step);
+            }
+            WalOp::Fence { key, epoch } => {
+                let m = meta_entry(meta, key);
+                m.epoch = m.epoch.max(*epoch);
+            }
+            WalOp::Ack { key, pos } => {
+                let m = meta_entry(meta, key);
+                if *pos > m.acked {
+                    m.acked = *pos;
+                }
+            }
+            WalOp::Del { keys } => {
+                for k in keys {
+                    meta.remove(k);
+                }
+            }
+            WalOp::Snapshot { .. } => {}
+        })?;
+        self.maybe_sync(seq)
+    }
+
+    /// Append an entry op straight from the store's borrowed parts —
+    /// the `XADD`/`XADDF`/`XHANDOFF` hot path (no field clones).
+    pub fn append_add(
+        &self,
+        key: &str,
+        entry: &Entry,
+        epoch: u64,
+        step: u64,
+    ) -> Result<()> {
+        let seq = self.append_add_unsynced(key, entry, epoch, step)?;
+        self.sync_appended(seq)
+    }
+
+    /// Frame an entry op without waiting on the fsync policy; returns
+    /// the frame's group-commit sequence for [`Wal::sync_appended`].
+    /// On error nothing reached the log (a partial write is truncated
+    /// away), so the caller may safely report the append as failed.
+    pub fn append_add_unsynced(
+        &self,
+        key: &str,
+        entry: &Entry,
+        epoch: u64,
+        step: u64,
+    ) -> Result<u64> {
+        validate_key(key)?;
+        anyhow::ensure!(
+            entry.fields.len() <= u16::MAX as usize,
+            "wal: entry has too many fields ({})",
+            entry.fields.len()
+        );
+        let payload = encode_add(key, entry.id, epoch, step, &entry.fields);
+        self.append_payload(&payload, |meta, max_ids| {
+            note_add(meta, max_ids, key, entry.id, epoch, step);
+        })
+    }
+
+    /// Make frame `seq` durable per the fsync policy.  An error here
+    /// means the frame IS in the log file but its durability could not
+    /// be confirmed — the caller must treat the op as applied (a
+    /// replay will include it) while surfacing the failure.
+    pub fn sync_appended(&self, seq: u64) -> Result<()> {
+        self.maybe_sync(seq)
+    }
+
+    fn maybe_sync(&self, seq: u64) -> Result<()> {
+        if self.cfg.fsync == FsyncPolicy::Always {
+            self.shared.sync_to(seq)?;
+        }
+        Ok(())
+    }
+
+    fn append_payload(
+        &self,
+        payload: &[u8],
+        note: impl FnOnce(&mut HashMap<String, KeyMeta>, &mut HashMap<String, EntryId>),
+    ) -> Result<u64> {
+        let mut st = self.shared.state.lock().unwrap();
+        write_frame(&mut st, payload)?;
+        st.appended_ops += 1;
+        let seq = st.write_seq;
+        // note() updates the wal-local stream metadata + the current
+        // segment's max-id index in one shot.
+        {
+            let WalState {
+                ref mut meta,
+                ref mut current,
+                ..
+            } = *st;
+            note(meta, &mut current.max_ids);
+        }
+        if st.current.bytes >= self.cfg.segment_bytes as u64 {
+            // The entry frame is already committed to the log; a
+            // rotation failure (ENOSPC opening the next segment, a
+            // failed snapshot write — its torn bytes are truncated by
+            // write_frame) must NOT fail the append, or the caller
+            // would retry an entry that replay will deliver and
+            // double-store it.  The oversized segment keeps absorbing
+            // appends and rotation is retried on the next one.
+            if let Err(e) = self.rotate(&mut st) {
+                log::error!("wal: segment rotation failed (will retry): {e:#}");
+            }
+        }
+        Ok(seq)
+    }
+
+    /// Close the current segment (fsynced) and open the next, writing a
+    /// metadata snapshot at its head so the closed predecessors become
+    /// disposable once their data is acked.
+    fn rotate(&self, st: &mut WalState) -> Result<()> {
+        st.current.file.sync_data().context("wal rotate fsync")?;
+        self.shared
+            .last_fsync_us
+            .store(crate::util::epoch_micros(), Ordering::Relaxed);
+        st.sync_seq = st.write_seq;
+        let seq = st.current.seq + 1;
+        let path = segment_path(&self.cfg.dir, seq);
+        let file = Arc::new(OpenOptions::new().create(true).append(true).open(&path)?);
+        let old = std::mem::replace(
+            &mut st.current,
+            Segment {
+                seq,
+                path,
+                file,
+                bytes: 0,
+                max_ids: HashMap::new(),
+            },
+        );
+        st.closed.push(ClosedSegment {
+            path: old.path,
+            bytes: old.bytes,
+            max_ids: old.max_ids,
+        });
+        let snap = WalOp::Snapshot {
+            streams: st
+                .meta
+                .iter()
+                .map(|(k, m)| StreamMeta {
+                    key: k.clone(),
+                    last_id: m.last_id,
+                    epoch: m.epoch,
+                    step: m.step,
+                    acked: m.acked,
+                })
+                .collect(),
+        };
+        write_frame(st, &snap.encode())?;
+        log::debug!(
+            "wal: rotated to segment {seq} ({} closed)",
+            st.closed.len()
+        );
+        Ok(())
+    }
+
+    /// Force everything appended so far to disk (any policy).
+    pub fn sync(&self) -> Result<()> {
+        self.shared.sync_all()
+    }
+
+    /// Entries of `key` with `from ≤ id < below`, read back from the
+    /// log — how the store serves ranges it evicted from memory.  Cold
+    /// path, but deliberately **not** under the wal lock: the segment
+    /// paths are snapshotted and the files scanned lock-free, so a slow
+    /// reader below the eviction watermark never stalls the append
+    /// path.  This is safe because (a) every entry below the eviction
+    /// watermark was fully written (its frame precedes any in-flight
+    /// tail frame) and the scan's longest-valid-prefix rule shrugs off
+    /// a torn concurrent tail, and (b) a segment GC'd mid-scan held
+    /// only acked entries, which are allowed to be gone.
+    pub fn read_entries(&self, key: &str, from: EntryId, below: EntryId) -> Vec<Entry> {
+        // Prune with the per-segment max-id index: a segment can only
+        // contribute if it ever saw `key` reach an id ≥ `from` — which
+        // skips the (old, acked-but-not-yet-GC'd) prefix of the log and
+        // every segment that never held the stream at all.
+        let overlaps = |max_ids: &HashMap<String, EntryId>| {
+            max_ids.get(key).map_or(false, |m| *m >= from)
+        };
+        let paths: Vec<PathBuf> = {
+            let st = self.shared.state.lock().unwrap();
+            let mut paths: Vec<PathBuf> = st
+                .closed
+                .iter()
+                .filter(|c| overlaps(&c.max_ids))
+                .map(|c| c.path.clone())
+                .collect();
+            if overlaps(&st.current.max_ids) {
+                paths.push(st.current.path.clone());
+            }
+            paths
+        };
+        let mut out: Vec<Entry> = Vec::new();
+        for path in &paths {
+            let res = scan_segment(path, |op| {
+                if let WalOp::Add { key: k, id, fields, .. } = op {
+                    if k == key && id >= from && id < below {
+                        out.push(Entry { id, fields });
+                    }
+                }
+            });
+            if let Err(e) = res {
+                // e.g. the segment was GC'd between snapshot and scan
+                log::debug!("wal: read_entries skipping {}: {e:#}", path.display());
+            }
+        }
+        // Log order is id order per stream, but entries may repeat
+        // across a replayed prefix; keep it defensive.
+        out.sort_by_key(|e| e.id);
+        out.dedup_by_key(|e| e.id);
+        out
+    }
+
+    /// Delete closed segments from the front of the log while every
+    /// entry they hold is acked (or its stream deleted).  Returns how
+    /// many segments were reclaimed.
+    pub fn collect_garbage(&self) -> usize {
+        let mut st = self.shared.state.lock().unwrap();
+        let mut removed = 0usize;
+        loop {
+            let deletable = match st.closed.first() {
+                None => false,
+                Some(first) => first.max_ids.iter().all(|(k, max)| {
+                    match st.meta.get(k) {
+                        Some(m) => m.acked >= *max,
+                        None => true, // stream deleted: data is dead
+                    }
+                }),
+            };
+            if !deletable {
+                break;
+            }
+            let seg = st.closed.remove(0);
+            if let Err(e) = std::fs::remove_file(&seg.path) {
+                log::warn!("wal: cannot delete {}: {e}", seg.path.display());
+            }
+            removed += 1;
+        }
+        if removed > 0 {
+            self.gc_segments.fetch_add(removed as u64, Ordering::Relaxed);
+            log::debug!("wal: reclaimed {removed} segment(s)");
+        }
+        removed
+    }
+
+    pub fn stats(&self) -> WalStats {
+        let st = self.shared.state.lock().unwrap();
+        WalStats {
+            segments: st.closed.len() + 1,
+            bytes: st.closed.iter().map(|c| c.bytes).sum::<u64>() + st.current.bytes,
+            last_fsync_us: self.shared.last_fsync_us.load(Ordering::Relaxed),
+            appended_ops: st.appended_ops,
+            gc_segments: self.gc_segments.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn fsync_policy(&self) -> FsyncPolicy {
+        self.cfg.fsync
+    }
+}
+
+/// A key must fit the frame's `u16` length field — a wrapped length
+/// would produce a CRC-valid but undecodable frame, which replay treats
+/// as end-of-log, silently truncating everything after it.  Reject the
+/// op before anything touches the file instead.
+fn validate_key(key: &str) -> Result<()> {
+    anyhow::ensure!(
+        key.len() <= u16::MAX as usize,
+        "wal: stream key too long for the log ({} bytes, max {})",
+        key.len(),
+        u16::MAX
+    );
+    Ok(())
+}
+
+fn meta_entry<'a>(
+    meta: &'a mut HashMap<String, KeyMeta>,
+    key: &str,
+) -> &'a mut KeyMeta {
+    if !meta.contains_key(key) {
+        meta.insert(
+            key.to_string(),
+            KeyMeta {
+                last_id: EntryId::ZERO,
+                epoch: 0,
+                step: u64::MAX,
+                acked: EntryId::ZERO,
+            },
+        );
+    }
+    meta.get_mut(key).unwrap()
+}
+
+fn note_add(
+    meta: &mut HashMap<String, KeyMeta>,
+    max_ids: &mut HashMap<String, EntryId>,
+    key: &str,
+    id: EntryId,
+    epoch: u64,
+    step: u64,
+) {
+    let m = meta_entry(meta, key);
+    if id > m.last_id {
+        m.last_id = id;
+    }
+    m.epoch = epoch;
+    m.step = step;
+    let mx = max_ids.entry(key.to_string()).or_insert(EntryId::ZERO);
+    if id > *mx {
+        *mx = id;
+    }
+}
+
+impl Drop for Wal {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.flusher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        // Clean-shutdown durability regardless of policy (best effort).
+        let _ = self.shared.sync_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "eb-wal-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn cfg(dir: &Path, fsync: FsyncPolicy, segment_bytes: usize) -> WalConfig {
+        WalConfig {
+            dir: dir.to_path_buf(),
+            fsync,
+            segment_bytes,
+        }
+    }
+
+    fn entry(ms: u64, val: &str) -> Entry {
+        Entry {
+            id: EntryId { ms, seq: 0 },
+            fields: vec![(b"r".to_vec(), val.as_bytes().to_vec())],
+        }
+    }
+
+    #[test]
+    fn fsync_policy_parse_roundtrip() {
+        for p in [
+            FsyncPolicy::Never,
+            FsyncPolicy::Always,
+            FsyncPolicy::EveryMs(25),
+        ] {
+            assert_eq!(FsyncPolicy::parse(&p.name()).unwrap(), p);
+        }
+        assert!(FsyncPolicy::parse("sometimes").is_err());
+        assert!(FsyncPolicy::parse("every_ms(x)").is_err());
+        // 0 is clamped to 1 ms
+        assert_eq!(
+            FsyncPolicy::parse("every_ms(0)").unwrap(),
+            FsyncPolicy::EveryMs(1)
+        );
+    }
+
+    #[test]
+    fn op_encode_decode_roundtrip() {
+        let ops = vec![
+            WalOp::Add {
+                key: "u/0".into(),
+                id: EntryId { ms: 42, seq: 7 },
+                epoch: 3,
+                step: 11,
+                fields: vec![
+                    (b"r".to_vec(), vec![0u8, 1, 2, 255]),
+                    (b"h".to_vec(), b"9".to_vec()),
+                ],
+            },
+            WalOp::Fence {
+                key: "u/1".into(),
+                epoch: 12,
+            },
+            WalOp::Ack {
+                key: "u/2".into(),
+                pos: EntryId { ms: 9, seq: 3 },
+            },
+            WalOp::Del {
+                keys: vec!["a".into(), "b".into()],
+            },
+            WalOp::Snapshot {
+                streams: vec![StreamMeta {
+                    key: "u/0".into(),
+                    last_id: EntryId { ms: 42, seq: 7 },
+                    epoch: 3,
+                    step: u64::MAX,
+                    acked: EntryId { ms: 1, seq: 0 },
+                }],
+            },
+        ];
+        for op in ops {
+            let got = WalOp::decode(&op.encode()).unwrap();
+            assert_eq!(got, op);
+        }
+        assert!(WalOp::decode(&[99]).is_err());
+        assert!(WalOp::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn replay_restores_entries_fences_steps_and_acks() {
+        let dir = tmpdir("replay");
+        {
+            let (wal, replay) =
+                Wal::open(cfg(&dir, FsyncPolicy::Always, 1 << 20)).unwrap();
+            assert!(replay.streams.is_empty());
+            wal.append(&WalOp::Fence {
+                key: "u/0".into(),
+                epoch: 2,
+            })
+            .unwrap();
+            wal.append_add("u/0", &entry(5, "a"), 2, 0).unwrap();
+            wal.append_add("u/0", &entry(6, "b"), 2, 1).unwrap();
+            wal.append(&WalOp::Ack {
+                key: "u/0".into(),
+                pos: EntryId { ms: 5, seq: 0 },
+            })
+            .unwrap();
+            wal.append_add("u/1", &entry(3, "x"), 0, u64::MAX).unwrap();
+        }
+        let (_wal, replay) =
+            Wal::open(cfg(&dir, FsyncPolicy::Always, 1 << 20)).unwrap();
+        assert_eq!(replay.entries, 3);
+        assert_eq!(replay.truncated_bytes, 0);
+        let s0 = &replay.streams["u/0"];
+        assert_eq!(s0.entries.len(), 2);
+        assert_eq!(s0.last_id, EntryId { ms: 6, seq: 0 });
+        assert_eq!(s0.epoch, 2);
+        assert_eq!(s0.step, 1);
+        assert_eq!(s0.acked, EntryId { ms: 5, seq: 0 });
+        let s1 = &replay.streams["u/1"];
+        assert_eq!(s1.entries.len(), 1);
+        assert_eq!(s1.epoch, 0);
+        assert_eq!(s1.step, u64::MAX);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rotation_spans_segments_and_replay_still_complete() {
+        let dir = tmpdir("rotate");
+        let n = 40u64;
+        {
+            let (wal, _) = Wal::open(cfg(&dir, FsyncPolicy::Never, 4096)).unwrap();
+            for i in 0..n {
+                // ~300 B per frame → several segments at the 4 KiB floor
+                let e = Entry {
+                    id: EntryId { ms: i + 1, seq: 0 },
+                    fields: vec![(b"r".to_vec(), vec![7u8; 256])],
+                };
+                wal.append_add("u/0", &e, 1, i).unwrap();
+            }
+            assert!(wal.stats().segments > 1, "no rotation happened");
+        }
+        let (wal, replay) = Wal::open(cfg(&dir, FsyncPolicy::Never, 4096)).unwrap();
+        assert_eq!(replay.entries, n);
+        let s = &replay.streams["u/0"];
+        assert_eq!(s.entries.len(), n as usize);
+        assert_eq!(s.step, n - 1);
+        assert_eq!(s.epoch, 1);
+        // ids strictly increasing in replay order
+        for w in s.entries.windows(2) {
+            assert!(w[1].id > w[0].id);
+        }
+        drop(wal);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_reclaims_acked_segments_but_keeps_fencing_state() {
+        let dir = tmpdir("gc");
+        {
+            let (wal, _) = Wal::open(cfg(&dir, FsyncPolicy::Never, 4096)).unwrap();
+            for i in 0..40u64 {
+                let e = Entry {
+                    id: EntryId { ms: i + 1, seq: 0 },
+                    fields: vec![(b"r".to_vec(), vec![7u8; 256])],
+                };
+                wal.append_add("u/0", &e, 5, i).unwrap();
+            }
+            let before = wal.stats().segments;
+            assert!(before > 1);
+            // nothing acked: nothing to reclaim
+            assert_eq!(wal.collect_garbage(), 0);
+            // ack everything: every closed segment goes
+            wal.append(&WalOp::Ack {
+                key: "u/0".into(),
+                pos: EntryId { ms: 40, seq: 0 },
+            })
+            .unwrap();
+            let removed = wal.collect_garbage();
+            assert!(removed > 0);
+            assert_eq!(wal.stats().segments, before - removed);
+        }
+        // the segment-head snapshot preserved fencing state across GC
+        let (_wal, replay) = Wal::open(cfg(&dir, FsyncPolicy::Never, 4096)).unwrap();
+        let s = &replay.streams["u/0"];
+        assert_eq!(s.epoch, 5);
+        assert_eq!(s.step, 39);
+        assert_eq!(s.last_id, EntryId { ms: 40, seq: 0 });
+        assert_eq!(s.acked, EntryId { ms: 40, seq: 0 });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_entries_serves_ranges_from_the_log() {
+        let dir = tmpdir("read");
+        let (wal, _) = Wal::open(cfg(&dir, FsyncPolicy::Never, 4096)).unwrap();
+        for i in 1..=20u64 {
+            wal.append_add("u/0", &entry(i, &i.to_string()), 1, i).unwrap();
+            wal.append_add("other", &entry(i, "o"), 1, i).unwrap();
+        }
+        let got = wal.read_entries(
+            "u/0",
+            EntryId { ms: 5, seq: 0 },
+            EntryId { ms: 12, seq: 0 },
+        );
+        let ids: Vec<u64> = got.iter().map(|e| e.id.ms).collect();
+        assert_eq!(ids, (5..12).collect::<Vec<_>>());
+        assert!(wal
+            .read_entries("missing", EntryId::ZERO, EntryId { ms: u64::MAX, seq: 0 })
+            .is_empty());
+        drop(wal);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Satellite: torn-tail property — truncate the (single) segment at
+    /// EVERY byte offset; replay must equal the longest valid frame
+    /// prefix, and the recovered log must accept new appends.
+    #[test]
+    fn torn_tail_replay_is_longest_valid_prefix() {
+        let dir = tmpdir("torn-src");
+        let mut frame_ends: Vec<(u64, usize)> = Vec::new(); // (entries, end offset)
+        {
+            let (wal, _) = Wal::open(cfg(&dir, FsyncPolicy::Never, 1 << 20)).unwrap();
+            let mut off = 0usize;
+            for i in 1..=6u64 {
+                let e = entry(i, &format!("payload-{i}"));
+                let payload = encode_add("u/0", e.id, 1, i, &e.fields);
+                wal.append_add("u/0", &e, 1, i).unwrap();
+                off += 8 + payload.len();
+                frame_ends.push((i, off));
+            }
+        }
+        let seg = segment_path(&dir, 1);
+        let bytes = std::fs::read(&seg).unwrap();
+        assert_eq!(bytes.len(), frame_ends.last().unwrap().1);
+
+        let work = tmpdir("torn-work");
+        for cut in 0..=bytes.len() {
+            let _ = std::fs::remove_dir_all(&work);
+            std::fs::create_dir_all(&work).unwrap();
+            std::fs::write(segment_path(&work, 1), &bytes[..cut]).unwrap();
+            let (wal, replay) =
+                Wal::open(cfg(&work, FsyncPolicy::Never, 1 << 20)).unwrap();
+            let want: u64 = frame_ends
+                .iter()
+                .filter(|(_, end)| *end <= cut)
+                .map(|(i, _)| *i)
+                .max()
+                .unwrap_or(0);
+            assert_eq!(
+                replay.entries, want,
+                "cut at {cut}: replayed {} want {want}",
+                replay.entries
+            );
+            // the truncated log accepts appends again
+            wal.append_add("u/0", &entry(100, "post"), 1, 100).unwrap();
+            drop(wal);
+            let (_w2, r2) = Wal::open(cfg(&work, FsyncPolicy::Never, 1 << 20)).unwrap();
+            assert_eq!(r2.entries, want + 1, "cut at {cut}: post-recovery append lost");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&work);
+    }
+
+    /// Satellite: every-byte-flip corruption sweep — flipping any single
+    /// byte of the segment must never let replay accept a frame that
+    /// differs from the original prefix (mirrors the `wire`/`record`
+    /// property tests).
+    #[test]
+    fn every_byte_flip_yields_a_valid_prefix_only() {
+        let dir = tmpdir("flip-src");
+        let mut originals: Vec<Entry> = Vec::new();
+        {
+            let (wal, _) = Wal::open(cfg(&dir, FsyncPolicy::Never, 1 << 20)).unwrap();
+            for i in 1..=4u64 {
+                let e = entry(i, &format!("v{i}"));
+                wal.append_add("u/0", &e, 2, i).unwrap();
+                originals.push(e);
+            }
+        }
+        let bytes = std::fs::read(segment_path(&dir, 1)).unwrap();
+        let work = tmpdir("flip-work");
+        for i in 0..bytes.len() {
+            let mut fuzzed = bytes.clone();
+            fuzzed[i] ^= 0xFF;
+            let _ = std::fs::remove_dir_all(&work);
+            std::fs::create_dir_all(&work).unwrap();
+            std::fs::write(segment_path(&work, 1), &fuzzed).unwrap();
+            let (_wal, replay) =
+                Wal::open(cfg(&work, FsyncPolicy::Never, 1 << 20)).unwrap();
+            let got = replay
+                .streams
+                .get("u/0")
+                .map(|s| s.entries.clone())
+                .unwrap_or_default();
+            assert!(
+                got.len() < originals.len(),
+                "flip at byte {i} went undetected (all {} entries replayed)",
+                originals.len()
+            );
+            for (g, o) in got.iter().zip(&originals) {
+                assert_eq!(g.id, o.id, "flip at byte {i} corrupted a replayed id");
+                assert_eq!(
+                    g.fields, o.fields,
+                    "flip at byte {i} corrupted a replayed payload"
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&work);
+    }
+
+    /// Group commit under contention: concurrent fsync=always appenders
+    /// all get durability, none deadlocks, everything replays.
+    #[test]
+    fn group_commit_concurrent_appenders() {
+        let dir = tmpdir("group");
+        let per = 40u64;
+        {
+            let (wal, _) = Wal::open(cfg(&dir, FsyncPolicy::Always, 1 << 20)).unwrap();
+            let wal = Arc::new(wal);
+            let handles: Vec<_> = (0..4u64)
+                .map(|t| {
+                    let wal = wal.clone();
+                    std::thread::spawn(move || {
+                        for i in 0..per {
+                            let e = Entry {
+                                id: EntryId {
+                                    ms: t * 1000 + i + 1,
+                                    seq: 0,
+                                },
+                                fields: vec![(b"r".to_vec(), vec![t as u8; 32])],
+                            };
+                            wal.append_add(&format!("u/{t}"), &e, 1, i).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert!(wal.stats().last_fsync_us > 0);
+        }
+        let (_wal, replay) = Wal::open(cfg(&dir, FsyncPolicy::Always, 1 << 20)).unwrap();
+        assert_eq!(replay.entries, 4 * per);
+        for t in 0..4 {
+            assert_eq!(replay.streams[&format!("u/{t}")].entries.len(), per as usize);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn every_ms_flusher_syncs_in_background() {
+        let dir = tmpdir("everyms");
+        {
+            let (wal, _) = Wal::open(cfg(&dir, FsyncPolicy::EveryMs(1), 1 << 20)).unwrap();
+            wal.append_add("u/0", &entry(1, "a"), 1, 0).unwrap();
+            let deadline = std::time::Instant::now() + Duration::from_secs(5);
+            while wal.stats().last_fsync_us == 0 && std::time::Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            assert!(wal.stats().last_fsync_us > 0, "flusher never fsynced");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -28,9 +28,13 @@
 //! * [`synth`] — the synthetic data generator of §4.3.
 //!
 //! Cloud side (the paper's §3.2):
-//! * [`endpoint`] — the Cloud endpoint: an in-memory stream store
-//!   speaking the RESP wire protocol (stand-in for Redis 5), sharded
-//!   across independent locks by stream-name hash.
+//! * [`endpoint`] — the Cloud endpoint: a stream store speaking the
+//!   RESP wire protocol (stand-in for Redis 5), sharded across
+//!   independent locks by stream-name hash, with an optional
+//!   durability layer (`endpoint::wal`, the AOF analogue): a
+//!   segmented CRC-framed write-ahead log with group-commit fsync,
+//!   crash recovery that restores entries *and* fencing state, and
+//!   ack-based retention.
 //! * [`streamproc`] — the distributed micro-batch stream-processing
 //!   engine (stand-in for Spark Streaming on Kubernetes).
 //! * [`analysis`] — windowed Dynamic Mode Decomposition of the incoming

@@ -89,10 +89,24 @@ fn cmd_info() -> Result<()> {
 
 fn cmd_endpoint(args: &Args) -> Result<()> {
     let bind = args.get("bind").unwrap_or("127.0.0.1:6379");
+    let wal = match args.get("persist-dir") {
+        Some(dir) => Some(elasticbroker::endpoint::WalConfig {
+            dir: dir.into(),
+            fsync: elasticbroker::endpoint::FsyncPolicy::parse(
+                args.get("wal-fsync").unwrap_or("every_ms(5)"),
+            )?,
+            segment_bytes: args
+                .get_parsed::<usize>("wal-segment-bytes")?
+                .unwrap_or(64 << 20),
+        }),
+        None => None,
+    };
     let cfg = StoreConfig {
         stream_maxlen: args.get_parsed::<usize>("maxlen")?.unwrap_or(4096),
         max_memory: args.get_parsed::<usize>("max-memory")?.unwrap_or(1 << 30),
         shards: args.get_parsed::<usize>("shards")?.unwrap_or(8).max(1),
+        wal,
+        retention: args.has_flag("retention"),
     };
     let srv = EndpointServer::start(bind, cfg)?;
     println!("endpoint listening on {}", srv.addr());

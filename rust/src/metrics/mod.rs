@@ -225,6 +225,10 @@ pub struct EndpointStats {
     /// Peak writer-queue depth observed since the last rebalancer sweep
     /// (set via [`Gauge::set_max`], drained via [`Gauge::take`]).
     pub queue_depth: Gauge,
+    /// 1 when the endpoint persists its streams to a WAL (ISSUE 4) —
+    /// set by whoever provisions the endpoint; the rebalancer prefers
+    /// durable endpoints as migration targets, ties being equal.
+    pub durable: Gauge,
 }
 
 impl EndpointStats {
@@ -361,6 +365,12 @@ pub struct WorkflowMetrics {
     pub handoffs: Arc<Counter>,
     /// Transport reconnect attempts by broker writers (all endpoints).
     pub reconnects: Arc<Counter>,
+    /// Re-registrations where the endpoint's recovered step high-water
+    /// mark sat *below* what this writer had already been acked for —
+    /// an endpoint restarted from a stale WAL (fsync policy looser than
+    /// `always`) lost acked records it can never get back.  Should stay
+    /// 0 under `fsync=always`.
+    pub replay_gaps: Arc<Counter>,
 }
 
 impl Default for WorkflowMetrics {
@@ -387,6 +397,7 @@ impl WorkflowMetrics {
             stale_rejections: Arc::new(Counter::new()),
             handoffs: Arc::new(Counter::new()),
             reconnects: Arc::new(Counter::new()),
+            replay_gaps: Arc::new(Counter::new()),
         }
     }
 }

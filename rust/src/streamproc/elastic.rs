@@ -77,11 +77,18 @@ pub struct ElasticReader {
     readers: HashMap<usize, StreamReader>,
     streams: HashMap<String, StreamState>,
     /// Cursors harvested from failed readers, keyed by endpoint; the
-    /// replacement reader resumes from them.
+    /// replacement reader resumes from them.  A *restarted* durable
+    /// endpoint replays its WAL with the original entry ids, so these
+    /// cursors stay valid across an endpoint crash — resume is a plain
+    /// `subscribe_from`, no replay of already-delivered segments.
     saved_cursors: HashMap<usize, Vec<(String, EntryId)>>,
     /// Endpoints confirmed gone (unreachable *and* not live in the
     /// topology) — their tombstones will never arrive.
     dead: HashSet<usize>,
+    /// Forwarded to every per-endpoint reader: acknowledge consumed
+    /// cursors (`XACKPOS`) after each poll so durable endpoints can
+    /// trim their WAL (ISSUE 4 ack-based retention).
+    auto_ack: bool,
 }
 
 impl ElasticReader {
@@ -118,12 +125,22 @@ impl ElasticReader {
             streams,
             saved_cursors: HashMap::new(),
             dead: HashSet::new(),
+            auto_ack: false,
         })
     }
 
     /// Streams currently subscribed (any home).
     pub fn key_count(&self) -> usize {
         self.streams.len()
+    }
+
+    /// Enable per-endpoint cursor acknowledgement (`XACKPOS`) after
+    /// every poll — the retention signal durable endpoints trim by.
+    pub fn set_auto_ack(&mut self, on: bool) {
+        self.auto_ack = on;
+        for reader in self.readers.values_mut() {
+            reader.set_auto_ack(on);
+        }
     }
 
     /// One sweep: poll every endpoint that currently homes a stream,
@@ -140,6 +157,7 @@ impl ElasticReader {
                     Ok(conn) => {
                         let mut reader =
                             StreamReader::with_conn(conn, Vec::new(), self.batch_limit);
+                        reader.set_auto_ack(self.auto_ack);
                         if let Some(cursors) = self.saved_cursors.remove(&e) {
                             for (key, cursor) in cursors {
                                 reader.subscribe_from(key, cursor);

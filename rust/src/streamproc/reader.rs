@@ -65,6 +65,9 @@ pub struct StreamReader {
     keys: Vec<String>,
     /// Last consumed entry id per key, parallel to `keys`.
     cursors: Vec<EntryId>,
+    /// Last cursor acknowledged to the endpoint (`XACKPOS`), parallel
+    /// to `keys` — the ISSUE 4 retention floor.
+    acked: Vec<EntryId>,
     /// Reply-key → position in `keys` (touched once per reply stream).
     index: HashMap<String, usize>,
     /// Formatted cursor ids, parallel to `keys`; reused across polls.
@@ -73,6 +76,9 @@ pub struct StreamReader {
     batch_limit: usize,
     /// Formatted `batch_limit` (the COUNT argument), built once.
     count_s: String,
+    /// Acknowledge consumed cursors after every poll (durable
+    /// endpoints use the acks to trim their WAL and memory).
+    auto_ack: bool,
 }
 
 impl StreamReader {
@@ -92,10 +98,12 @@ impl StreamReader {
             conn,
             keys: Vec::new(),
             cursors: Vec::new(),
+            acked: Vec::new(),
             index: HashMap::new(),
             id_bufs: Vec::new(),
             batch_limit,
             count_s: batch_limit.to_string(),
+            auto_ack: false,
         };
         for k in keys {
             reader.subscribe(k);
@@ -120,8 +128,47 @@ impl StreamReader {
             self.index.insert(key.clone(), self.keys.len());
             self.keys.push(key);
             self.cursors.push(after);
+            self.acked.push(after);
             self.id_bufs.push(String::new());
         }
+    }
+
+    /// Acknowledge consumed cursors back to the endpoint after every
+    /// poll (`XACKPOS`).  On for durable endpoints with ack-based
+    /// retention; harmless (one tiny command per advanced stream) for
+    /// in-memory ones.
+    pub fn set_auto_ack(&mut self, on: bool) {
+        self.auto_ack = on;
+    }
+
+    /// Send `XACKPOS` for every stream whose cursor advanced past its
+    /// last acknowledged position.  Best-effort by design: the ack is a
+    /// retention hint, so transport errors are surfaced but a failed
+    /// ack is simply retried after the next poll.
+    pub fn ack_consumed(&mut self) -> Result<()> {
+        let mut reqs: Vec<Request> = Vec::new();
+        let mut idxs: Vec<usize> = Vec::new();
+        for (i, (cur, ack)) in self.cursors.iter().zip(&self.acked).enumerate() {
+            if cur > ack {
+                reqs.push(
+                    Request::new("XACKPOS")
+                        .arg(self.keys[i].as_bytes())
+                        .arg(cur.to_string()),
+                );
+                idxs.push(i);
+            }
+        }
+        if reqs.is_empty() {
+            return Ok(());
+        }
+        let replies = self.conn.exchange(&reqs)?;
+        for (j, &i) in idxs.iter().enumerate() {
+            match replies.get(j) {
+                Some(r) if !r.is_error() => self.acked[i] = self.cursors[i],
+                _ => {}
+            }
+        }
+        Ok(())
     }
 
     /// Whether `key` is subscribed.
@@ -194,7 +241,13 @@ impl StreamReader {
                 replies.pop().context("empty XREAD reply")?
             }
         };
-        self.parse_xread_reply(reply)
+        let out = self.parse_xread_reply(reply)?;
+        if self.auto_ack {
+            if let Err(e) = self.ack_consumed() {
+                log::debug!("reader: ack failed (retried next poll): {e:#}");
+            }
+        }
+        Ok(out)
     }
 
     fn parse_xread_reply(&mut self, reply: Value) -> Result<Vec<StreamSegments>> {
@@ -402,6 +455,31 @@ mod tests {
         assert_eq!(batches[0].records[0].step, 1);
         // cursor advanced past the corrupt entry too
         assert!(reader.poll().unwrap().is_empty());
+    }
+
+    /// ISSUE 4: auto-ack pushes consumed cursors back to the endpoint
+    /// after each poll (the retention floor for durable endpoints).
+    #[test]
+    fn auto_ack_advances_endpoint_cursor() {
+        let (srv, keys) = setup_with_data(3);
+        let mut reader =
+            StreamReader::connect(srv.addr(), keys, 0, ConnConfig::default()).unwrap();
+        reader.set_auto_ack(true);
+        assert_eq!(srv.store().acked("u/0"), crate::endpoint::EntryId::ZERO);
+        let batches = reader.poll().unwrap();
+        assert_eq!(batches.len(), 2);
+        for key in ["u/0", "u/1"] {
+            assert_eq!(
+                srv.store().acked(key),
+                srv.store().last_id(key),
+                "{key}: ack did not reach the endpoint"
+            );
+        }
+        // nothing new: no redundant acks needed, cursor stays
+        reader.poll().unwrap();
+        assert_eq!(srv.store().acked("u/0"), srv.store().last_id("u/0"));
+        // explicit ack API is idempotent
+        reader.ack_consumed().unwrap();
     }
 
     #[test]

@@ -19,7 +19,17 @@
 //! * **on_drop hook** — runs exactly when the scripted drop fires, so a
 //!   test can interleave world changes (a takeover `XHANDOFF`, a
 //!   topology bump) at a precise point of the protocol without threads
-//!   or sleeps.
+//!   or sleeps;
+//! * **kill + restart (ISSUE 4)** — [`SimNet::kill`] models a crashed
+//!   endpoint process and [`SimNet::restart`] brings it back the way an
+//!   orchestrator would: the in-memory [`Store`] is rebuilt from its
+//!   [`StoreConfig`] — a WAL-backed endpoint replays its log (entries,
+//!   fences, watermarks restored), an in-memory one comes back empty.
+//!   [`FaultSchedule::crash_on_drop`] scripts the whole sequence at an
+//!   exact frame boundary: the breaking frame's partial prefix lands
+//!   (and is logged), then the endpoint crashes and is immediately
+//!   restarted from disk, so the caller's reconnect exercises the real
+//!   recovery path.
 //!
 //! Everything is deterministic; [`FaultSchedule::seeded`] derives a
 //! schedule from a `u64` seed for property tests.
@@ -46,6 +56,11 @@ pub struct FaultSchedule {
     pub partial_commands: usize,
     /// Refuse this many dial/reconnect attempts before accepting one.
     pub refuse_connects: u32,
+    /// When the scripted drop fires, also crash-and-restart the
+    /// endpoint: its store is rebuilt from its [`StoreConfig`] (WAL
+    /// replay for durable endpoints, empty for in-memory ones) before
+    /// the caller sees the broken connection.
+    pub crash_on_drop: bool,
     /// Virtual per-frame latency (accumulated on the conn, never slept).
     pub delay_us_per_frame: u64,
     /// Runs exactly when the scripted drop fires (after the partial
@@ -75,11 +90,29 @@ impl FaultSchedule {
 }
 
 struct SimEndpoint {
-    store: Arc<Store>,
+    /// The current store incarnation — swapped on restart, so handles
+    /// taken before a crash keep pointing at the dead incarnation.
+    store: RwLock<Arc<Store>>,
+    cfg: StoreConfig,
     up: AtomicBool,
     faults: Mutex<FaultSchedule>,
     /// Pipelined frames served (diagnostics).
     frames: AtomicU64,
+}
+
+impl SimEndpoint {
+    fn current_store(&self) -> Arc<Store> {
+        self.store.read().unwrap().clone()
+    }
+
+    /// Rebuild the store from its config — a fresh process image.  A
+    /// WAL-backed endpoint replays its log; an in-memory one loses
+    /// everything (the contrast ISSUE 4's tests assert).
+    fn restart_store(&self) {
+        let fresh =
+            Arc::new(Store::open(self.cfg.clone()).expect("sim endpoint restart"));
+        *self.store.write().unwrap() = fresh;
+    }
 }
 
 /// Registry of in-process endpoints, shared by sim dialers and tests.
@@ -94,10 +127,14 @@ impl SimNet {
     }
 
     /// Add an endpoint (its index is stable for the net's lifetime).
+    /// WAL-backed configs replay their log on the spot, exactly like
+    /// [`EndpointServer::start`](crate::endpoint::EndpointServer::start).
     pub fn add_endpoint(&self, cfg: StoreConfig) -> usize {
         let mut eps = self.endpoints.write().unwrap();
+        let store = Arc::new(Store::open(cfg.clone()).expect("sim endpoint store"));
         eps.push(Arc::new(SimEndpoint {
-            store: Arc::new(Store::new(cfg)),
+            store: RwLock::new(store),
+            cfg,
             up: AtomicBool::new(true),
             faults: Mutex::new(FaultSchedule::default()),
             frames: AtomicU64::new(0),
@@ -121,9 +158,11 @@ impl SimNet {
         }
     }
 
-    /// Direct handle to an endpoint's store (assertions, injections).
+    /// Direct handle to an endpoint's *current* store incarnation
+    /// (assertions, injections).  After a [`SimNet::restart`] the
+    /// handle from before the crash points at the dead incarnation.
     pub fn store(&self, idx: usize) -> Arc<Store> {
-        self.endpoint(idx).expect("sim endpoint").store.clone()
+        self.endpoint(idx).expect("sim endpoint").current_store()
     }
 
     /// Replace endpoint `idx`'s fault schedule.
@@ -140,12 +179,23 @@ impl SimNet {
             .store(false, Ordering::SeqCst);
     }
 
-    /// Bring a killed endpoint back (store contents intact).
+    /// Bring a killed endpoint back (store contents intact) — models a
+    /// network partition healing, NOT a process restart.
     pub fn revive(&self, idx: usize) {
         self.endpoint(idx)
             .expect("sim endpoint")
             .up
             .store(true, Ordering::SeqCst);
+    }
+
+    /// Restart a killed endpoint as the orchestrator would restart a
+    /// crashed process: the store is rebuilt from its config — durable
+    /// endpoints replay their WAL (entries, epoch fences and step
+    /// high-water marks restored), in-memory endpoints come back empty.
+    pub fn restart(&self, idx: usize) {
+        let ep = self.endpoint(idx).expect("sim endpoint");
+        ep.restart_store();
+        ep.up.store(true, Ordering::SeqCst);
     }
 
     /// Frames served by endpoint `idx` so far.
@@ -184,6 +234,7 @@ impl Conn for SimConn {
         }
         // Consult (and advance) the fault schedule.
         let mut breaking = false;
+        let mut crash = false;
         let mut applied = reqs.len();
         let (pre, hook) = {
             let mut f = self.ep.faults.lock().unwrap();
@@ -193,6 +244,7 @@ impl Conn for SimConn {
             if let Some(n) = f.drop_after_frames {
                 if n == 0 {
                     breaking = true;
+                    crash = f.crash_on_drop;
                     applied = f.partial_commands.min(reqs.len());
                     f.drop_after_frames = None;
                     hook = f.on_drop.take();
@@ -206,21 +258,30 @@ impl Conn for SimConn {
         if let Some(h) = pre {
             h(); // the frame is "in flight": the world may change first
         }
-        // The applied prefix goes through the *real* command dispatcher.
+        // The applied prefix goes through the *real* command dispatcher,
+        // against the endpoint's current store incarnation.
+        let store = self.ep.current_store();
         let mut replies = Vec::with_capacity(applied);
         for req in &reqs[..applied] {
-            let (reply, _quit) = server::execute(&self.ep.store, &req.to_value());
+            let (reply, _quit) = server::execute(&store, &req.to_value());
             replies.push(reply);
         }
         if breaking {
             self.broken = true;
+            if crash {
+                // The endpoint process dies with the partial prefix
+                // applied (and logged) and is restarted from disk; the
+                // caller's reconnect lands on the recovered incarnation.
+                self.ep.restart_store();
+            }
             if let Some(h) = hook {
                 h();
             }
             bail!(
-                "sim: connection to endpoint {} dropped mid-frame \
+                "sim: connection to endpoint {} {} mid-frame \
                  ({applied}/{} commands applied, no replies delivered)",
                 self.idx,
+                if crash { "crashed" } else { "dropped" },
                 reqs.len()
             );
         }
@@ -398,6 +459,75 @@ mod tests {
         // prefix landed at epoch 1, then the hook fenced the stream at 9
         assert_eq!(net.store(e).stream_epoch("s"), 9);
         assert_eq!(net.store(e).fenced_last_step("s"), Some(0));
+    }
+
+    /// ISSUE 4: a scripted crash mid-frame applies (and logs) the
+    /// partial prefix, restarts the endpoint from its WAL, and the
+    /// recovered incarnation still fences and dedupes correctly.
+    #[test]
+    fn crash_on_drop_restarts_from_wal() {
+        let dir = std::env::temp_dir().join(format!(
+            "eb-sim-crash-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let net = SimNet::new();
+        let e = net.add_endpoint(StoreConfig {
+            wal: Some(crate::endpoint::WalConfig {
+                dir: dir.clone(),
+                fsync: crate::endpoint::FsyncPolicy::Always,
+                segment_bytes: 1 << 20,
+            }),
+            ..Default::default()
+        });
+        net.inject(
+            e,
+            FaultSchedule {
+                drop_after_frames: Some(1),
+                partial_commands: 1,
+                crash_on_drop: true,
+                ..Default::default()
+            },
+        );
+        let mut conn = SimDialer::new(net.clone()).dial(e).unwrap();
+        conn.exchange(&[xaddf("s", 1, 0, "a")]).unwrap();
+        let err = conn
+            .exchange(&[xaddf("s", 1, 1, "b"), xaddf("s", 1, 2, "c")])
+            .unwrap_err();
+        assert!(err.to_string().contains("crashed"), "{err}");
+        // the restarted incarnation replayed the prefix: steps 0,1
+        let store = net.store(e);
+        assert_eq!(store.xlen("s"), 2);
+        assert_eq!(store.fenced_last_step("s"), Some(1));
+        assert!(store.replayed_entries() >= 2);
+        // reconnect + re-ship: DUP for the landed step, fresh one lands
+        conn.reconnect().unwrap();
+        let replies = conn
+            .exchange(&[xaddf("s", 1, 1, "b"), xaddf("s", 1, 2, "c")])
+            .unwrap();
+        assert_eq!(replies[0], Value::Simple("DUP".into()));
+        assert!(!replies[1].is_error());
+        assert_eq!(net.store(e).xlen("s"), 3);
+        drop(conn);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The contrast case: an in-memory endpoint restarted after a kill
+    /// comes back empty — the data loss ISSUE 4's WAL exists to stop.
+    #[test]
+    fn kill_restart_without_wal_loses_everything() {
+        let net = SimNet::new();
+        let e = net.add_endpoint(StoreConfig::default());
+        let mut conn = SimDialer::new(net.clone()).dial(e).unwrap();
+        conn.exchange(&[xaddf("s", 1, 0, "a")]).unwrap();
+        assert_eq!(net.store(e).xlen("s"), 1);
+        net.kill(e);
+        assert!(conn.exchange(&[Request::new("PING")]).is_err());
+        net.restart(e);
+        conn.reconnect().unwrap();
+        conn.exchange(&[Request::new("PING")]).unwrap();
+        assert_eq!(net.store(e).xlen("s"), 0, "in-memory data should be gone");
+        assert_eq!(net.store(e).stream_epoch("s"), 0, "fence gone too");
     }
 
     #[test]

@@ -56,14 +56,33 @@ impl CloudSide {
     ) -> Result<CloudSide> {
         let n_endpoints = cfg.endpoint_count();
         let mut endpoints = Vec::with_capacity(n_endpoints);
-        for _ in 0..n_endpoints {
+        for i in 0..n_endpoints {
+            // Durable endpoints (ISSUE 4): one WAL per endpoint under
+            // `wal_dir/ep<i>`, so a restarted endpoint replays only its
+            // own streams.
+            let wal = if cfg.wal_dir.is_empty() {
+                None
+            } else {
+                Some(crate::endpoint::WalConfig {
+                    dir: std::path::PathBuf::from(&cfg.wal_dir).join(format!("ep{i}")),
+                    fsync: cfg.wal_fsync,
+                    segment_bytes: cfg.wal_segment_bytes,
+                })
+            };
             endpoints.push(EndpointServer::start(
                 "127.0.0.1:0",
                 StoreConfig {
                     shards: cfg.store_shards,
+                    wal,
+                    retention: cfg.retention,
                     ..StoreConfig::default()
                 },
             )?);
+            if !cfg.wal_dir.is_empty() {
+                // Advertise durability on the QoS board: the rebalancer
+                // prefers durable endpoints as migration targets.
+                metrics.qos.slot(i).durable.set(1);
+            }
         }
 
         // Readers.  Static runs keep the paper's fixed executor↔stream
@@ -84,22 +103,19 @@ impl CloudSide {
             let keys: Vec<String> = (0..cfg.ranks)
                 .map(|r| crate::record::stream_key(field, r as u32))
                 .collect();
-            readers.push(Box::new(ElasticReader::new(
-                topo.clone(),
-                dialer,
-                keys,
-                0,
-            )?));
+            let mut elastic = ElasticReader::new(topo.clone(), dialer, keys, 0)?;
+            // With retention on, consumed cursors are acked back so the
+            // endpoints can trim their WALs.
+            elastic.set_auto_ack(cfg.retention);
+            readers.push(Box::new(elastic));
             Some(topo)
         } else {
             for (e, srv) in endpoints.iter().enumerate() {
                 let keys = groups.streams_of_endpoint(e, field);
-                readers.push(Box::new(StreamReader::connect(
-                    srv.addr(),
-                    keys,
-                    0,
-                    ConnConfig::default(),
-                )?));
+                let mut reader =
+                    StreamReader::connect(srv.addr(), keys, 0, ConnConfig::default())?;
+                reader.set_auto_ack(cfg.retention);
+                readers.push(Box::new(reader));
             }
             None
         };
@@ -487,6 +503,35 @@ mod tests {
                 .count();
             assert_eq!(per, 8, "rank {r}");
         }
+    }
+
+    /// ISSUE 4: the same workflow with durable endpoints + retention
+    /// produces identical analysis coverage, leaves WAL segments on
+    /// disk, and the reader acks keep the logs bounded.
+    #[test]
+    fn durable_workflow_matches_in_memory_behaviour() {
+        let wal_root = std::env::temp_dir().join(format!(
+            "eb-wf-wal-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&wal_root);
+        let mut cfg = tiny_cfg(IoMode::Broker);
+        cfg.wal_dir = wal_root.to_string_lossy().into_owned();
+        cfg.wal_fsync = crate::endpoint::FsyncPolicy::EveryMs(2);
+        cfg.retention = true;
+        let rep = run_cfd_workflow(&cfg, None).unwrap();
+        assert_eq!(rep.analysis_results.len(), 8 * 4);
+        assert_eq!(rep.metrics.dropped.get(), 0);
+        assert_eq!(rep.metrics.replay_gaps.get(), 0);
+        // the endpoint's WAL really exists on disk
+        let ep0 = wal_root.join("ep0");
+        let segs = std::fs::read_dir(&ep0)
+            .expect("wal dir missing")
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with("wal-"))
+            .count();
+        assert!(segs >= 1, "no wal segments written");
+        let _ = std::fs::remove_dir_all(&wal_root);
     }
 
     #[test]

@@ -1,0 +1,313 @@
+//! ISSUE 4 integration: 4 ranks streaming through WAL-backed endpoints,
+//! one of which is killed mid-batch (via the `transport::sim`
+//! kill+restart fault) and restarted from its log.
+//!
+//! Asserted end to end:
+//! * replay restores entries, epoch fences and step high-water marks
+//!   (a pre-crash zombie writer still gets `STALE` after recovery, a
+//!   re-shipped landed step still gets `DUP`);
+//! * the union of segments across endpoints is exactly-once and
+//!   gap-free despite the crash;
+//! * the streamed DMD on the delivered records matches the offline
+//!   `linalg::dmd` oracle to 1e-6 — the crash is invisible to the
+//!   analysis layer;
+//! * reader acks (retention) bound the log without ever dropping
+//!   unread data.
+
+use std::sync::Arc;
+
+use elasticbroker::analysis::{AnalysisResult, DmdConfig, DmdEngine};
+use elasticbroker::broker::{GroupMap, Shipper, TopologyHandle};
+use elasticbroker::endpoint::{EntryId, FsyncPolicy, StoreConfig, WalConfig};
+use elasticbroker::linalg::{dmd, Mat};
+use elasticbroker::metrics::WorkflowMetrics;
+use elasticbroker::record::StreamRecord;
+use elasticbroker::streamproc::ElasticReader;
+use elasticbroker::transport::sim::{FaultSchedule, SimDialer, SimNet};
+use elasticbroker::transport::{Conn as _, Dialer, Request};
+
+const RANKS: u32 = 4;
+const DIM: usize = 32;
+const STEPS: u64 = 16;
+const WINDOW: usize = 6; // m; the engine windows m+1 = 7 snapshots
+const DMD_RANK: usize = 4;
+
+/// Deterministic decaying-oscillation snapshot for (rank, step) — a
+/// pure function, so the streamed windows are bit-identical to what a
+/// crash-free static run would analyse.
+fn snapshot(rank: u32, step: u64) -> Vec<f32> {
+    let decay = 0.95f64.powi(step as i32);
+    (0..DIM)
+        .map(|i| {
+            let phase = 0.17 * i as f64 + 0.29 * rank as f64;
+            (decay * (0.4 * step as f64 + phase).cos()) as f32
+        })
+        .collect()
+}
+
+fn rec(rank: u32, step: u64) -> StreamRecord {
+    StreamRecord::from_f32("synth", rank, step, 0, &[DIM as u32], &snapshot(rank, step))
+        .unwrap()
+}
+
+#[test]
+fn endpoint_crash_restart_is_exactly_once_and_matches_offline_dmd() {
+    let wal_root = std::env::temp_dir().join(format!(
+        "eb-crash-restart-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&wal_root);
+
+    // --- two durable sim endpoints (fsync=always: crash is loss-free)
+    let net = SimNet::new();
+    for i in 0..2usize {
+        net.add_endpoint(StoreConfig {
+            retention: true,
+            wal: Some(WalConfig {
+                dir: wal_root.join(format!("ep{i}")),
+                fsync: FsyncPolicy::Always,
+                segment_bytes: 1 << 20,
+            }),
+            ..Default::default()
+        });
+    }
+    let dummy = || -> std::net::SocketAddr { "127.0.0.1:1".parse().unwrap() };
+    let groups = GroupMap::new(RANKS as usize, 2, 2).unwrap();
+    let topology =
+        TopologyHandle::new_static(groups.clone(), vec![dummy(), dummy()]).unwrap();
+    let dialer: Arc<dyn Dialer> = Arc::new(SimDialer::new(net.clone()));
+    let metrics = WorkflowMetrics::new();
+
+    let mut shippers: Vec<Shipper> = (0..RANKS)
+        .map(|r| {
+            Shipper::register(
+                format!("synth/{r}"),
+                groups.group_of_rank(r as usize).unwrap(),
+                topology.clone(),
+                dialer.clone(),
+                metrics.clone(),
+                8,
+            )
+            .unwrap()
+        })
+        .collect();
+
+    // Cloud side: ElasticReader (auto-acking: retention trims by it)
+    // feeding the windowed DMD engine, driven synchronously.
+    let engine = DmdEngine::new(
+        DmdConfig {
+            window: WINDOW,
+            rank: DMD_RANK,
+            hop: 1,
+            backend: elasticbroker::analysis::DmdBackend::Rust,
+            ..Default::default()
+        },
+        None,
+        metrics.clone(),
+    )
+    .unwrap();
+    let keys: Vec<String> = (0..RANKS).map(|r| format!("synth/{r}")).collect();
+    let mut reader =
+        ElasticReader::new(topology.clone(), dialer.clone(), keys, 0).unwrap();
+    reader.set_auto_ack(true);
+    let mut results: Vec<AnalysisResult> = Vec::new();
+    let mut delivered: Vec<Vec<u64>> = vec![Vec::new(); RANKS as usize];
+
+    let drain =
+        |reader: &mut ElasticReader,
+         results: &mut Vec<AnalysisResult>,
+         delivered: &mut Vec<Vec<u64>>| {
+            for _ in 0..4 {
+                for batch in reader.poll().unwrap() {
+                    let (_, rank) =
+                        elasticbroker::record::parse_stream_key(&batch.key).unwrap();
+                    delivered[rank as usize]
+                        .extend(batch.records.iter().map(|r| r.step));
+                    results.extend(engine.process(&batch));
+                }
+            }
+        };
+
+    // --- phase 1: steps 0..8, two-record frames, no faults.
+    for lo in (0..8u64).step_by(2) {
+        for (r, shipper) in shippers.iter_mut().enumerate() {
+            shipper
+                .ship(&[rec(r as u32, lo), rec(r as u32, lo + 1)])
+                .unwrap();
+        }
+    }
+    drain(&mut reader, &mut results, &mut delivered);
+
+    // --- the fault: endpoint 0 crashes mid-batch on its next frame —
+    // 1 of 2 records lands (and is fsynced), the process dies, the
+    // orchestrator restarts it from its WAL, and the first reconnect
+    // is refused for good measure.
+    let victim_rank = (0..RANKS)
+        .find(|&r| {
+            let g = groups.group_of_rank(r as usize).unwrap();
+            topology.route(g).unwrap().0 == 0
+        })
+        .expect("some rank homed on endpoint 0");
+    let victim_key = format!("synth/{victim_rank}");
+    net.inject(
+        0,
+        FaultSchedule {
+            drop_after_frames: Some(0),
+            partial_commands: 1,
+            crash_on_drop: true,
+            refuse_connects: 1,
+            ..Default::default()
+        },
+    );
+
+    // --- phase 2: steps 8..16; the victim ships first and eats the
+    // crash inside one `ship` call (recover → reconnect → HELLO against
+    // the replayed fence → re-ship, DUP for the landed record).
+    for lo in (8..STEPS).step_by(2) {
+        shippers[victim_rank as usize]
+            .ship(&[rec(victim_rank, lo), rec(victim_rank, lo + 1)])
+            .unwrap();
+        for r in 0..RANKS {
+            if r != victim_rank {
+                shippers[r as usize]
+                    .ship(&[rec(r, lo), rec(r, lo + 1)])
+                    .unwrap();
+            }
+        }
+    }
+    drain(&mut reader, &mut results, &mut delivered);
+
+    // --- recovery restored the fencing state: replayed entries exist,
+    // the high-water mark is intact, and a pre-crash zombie (epoch 0,
+    // below the replayed fence) is still rejected — over the wire.
+    let store0 = net.store(0);
+    assert!(store0.replayed_entries() > 0, "endpoint 0 never replayed");
+    assert!(store0.info().contains("wal_enabled:1"));
+    assert_eq!(store0.fenced_last_step(&victim_key), Some(STEPS - 1));
+    let mut zombie = SimDialer::new(net.clone()).dial(0).unwrap();
+    let reply = zombie
+        .exchange(&[Request::new("XADDF")
+            .arg(victim_key.as_bytes())
+            .arg("0")
+            .arg("99")
+            .arg("r")
+            .arg("z")])
+        .unwrap();
+    assert!(
+        reply[0].is_error() && reply[0].as_str_lossy().starts_with("STALE"),
+        "zombie writer not fenced after recovery: {}",
+        reply[0]
+    );
+    let err = store0.hello(&victim_key, 0).unwrap_err();
+    assert!(err.to_string().starts_with("STALE"), "{err}");
+    assert_eq!(
+        metrics.replay_gaps.get(),
+        0,
+        "fsync=always recovery must be loss-free"
+    );
+
+    // --- exactly-once, gap-free: per-endpoint segments are strictly
+    // increasing and their union is every step exactly once.
+    for r in 0..RANKS {
+        let key = format!("synth/{r}");
+        let mut union: Vec<u64> = Vec::new();
+        for e in 0..2usize {
+            let mut prev: Option<u64> = None;
+            for entry in net.store(e).read_after(&key, EntryId::ZERO, 0) {
+                if entry.fields[0].0 == b"h" {
+                    continue; // handoff tombstone
+                }
+                let rec = StreamRecord::decode(&entry.fields[0].1).unwrap();
+                if let Some(p) = prev {
+                    assert!(
+                        rec.step > p,
+                        "{key}: endpoint {e} segment not strictly increasing"
+                    );
+                }
+                prev = Some(rec.step);
+                union.push(rec.step);
+            }
+        }
+        union.sort_unstable();
+        assert_eq!(
+            union,
+            (0..STEPS).collect::<Vec<u64>>(),
+            "{key}: union of segments must be every step exactly once"
+        );
+        // ...and delivery to the analysis layer saw the same thing.
+        assert_eq!(
+            delivered[r as usize],
+            (0..STEPS).collect::<Vec<u64>>(),
+            "{key}: delivered stream has gaps or reorders"
+        );
+    }
+
+    // --- reader acks reached the durable endpoints (retention floor).
+    assert!(
+        net.store(1).acked(&format!(
+            "synth/{}",
+            (0..RANKS)
+                .find(|&r| {
+                    let g = groups.group_of_rank(r as usize).unwrap();
+                    topology.route(g).unwrap().0 == 1
+                })
+                .unwrap()
+        )) > EntryId::ZERO,
+        "auto-ack never reached endpoint 1"
+    );
+
+    // --- the streamed DMD ≡ offline oracle at 1e-6 on the final window.
+    let expect = (STEPS as usize - WINDOW) * RANKS as usize;
+    assert_eq!(results.len(), expect, "analysis fire count");
+    for rank in 0..RANKS {
+        let key = format!("synth/{rank}");
+        let fires: Vec<u64> = {
+            let mut s: Vec<u64> = results
+                .iter()
+                .filter(|a| a.key == key)
+                .map(|a| a.step)
+                .collect();
+            s.sort_unstable();
+            s
+        };
+        assert_eq!(
+            fires,
+            (WINDOW as u64..STEPS).collect::<Vec<u64>>(),
+            "{key}: fire steps have gaps"
+        );
+        let streamed = results
+            .iter()
+            .filter(|a| a.key == key)
+            .max_by_key(|a| a.step)
+            .unwrap();
+        assert_eq!(streamed.step, STEPS - 1);
+
+        let m1 = WINDOW + 1;
+        let mut x = vec![0.0f64; DIM * m1];
+        for (j, step) in (STEPS - m1 as u64..STEPS).enumerate() {
+            let snap = snapshot(rank, step);
+            for (i, v) in snap.iter().enumerate() {
+                x[i * m1 + j] = *v as f64;
+            }
+        }
+        let xm = Mat::from_slice(DIM, m1, &x).unwrap();
+        let (eigs, sigma, stability) = dmd::analyze_window(&xm, DMD_RANK).unwrap();
+        assert!(
+            (streamed.stability - stability).abs() <= 1e-6,
+            "{key}: stability {} vs offline {}",
+            streamed.stability,
+            stability
+        );
+        for (a, b) in streamed.eigs.iter().zip(&eigs) {
+            assert!(
+                (a.re - b.re).abs() <= 1e-6 && (a.im - b.im).abs() <= 1e-6,
+                "{key}: eig {a:?} vs offline {b:?}"
+            );
+        }
+        for (a, b) in streamed.sigma.iter().zip(&sigma) {
+            assert!((a - b).abs() <= 1e-6, "{key}: sigma {a} vs offline {b}");
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&wal_root);
+}
