@@ -1,0 +1,242 @@
+//! Microbenchmark: the broker-side data-reduction stage pipeline
+//! (ISSUE 5) on real LBM velocity fields.
+//!
+//! * **wire-bytes reduction**: encoded frame bytes staged vs raw, per
+//!   stage configuration, on two field regimes — the *smooth* early
+//!   transient right after initialization (near-equilibrium, the
+//!   best case for lossless compression) and the *developed* flow
+//!   after warm-up (realistic steady-state entropy),
+//! * **stage cost**: µs/record for each pipeline stage (filter /
+//!   aggregate / convert / compress) from the stage histograms.
+//!
+//! `cargo bench --bench micro_stages`
+//!
+//! Emits `BENCH_stages.json` so CI tracks the trajectory.  Set
+//! `BENCH_SMOKE=1` for tiny iteration counts.  The bench asserts its
+//! own acceptance gate: lossless shuffle-lz must achieve ≥ 3× wire
+//! reduction on the smooth LBM fields.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use elasticbroker::broker::{StagePipeline, StagesConfig};
+use elasticbroker::metrics::StageMetrics;
+use elasticbroker::record::{CodecKind, Encoding, StreamRecord};
+use elasticbroker::sim::lbm::{self, LbmParams};
+
+/// WindAroundBuildings-style subdomain: walls top and bottom, one
+/// building block in the stream (the `stays_finite` test geometry).
+fn geometry(hp: usize, w: usize) -> Vec<f32> {
+    let mut mask = vec![0.0f32; hp * w];
+    for x in 0..w {
+        mask[w + x] = 1.0; // bottom wall (row 1)
+        mask[(hp - 2) * w + x] = 1.0; // top wall
+    }
+    for y in 12..22 {
+        for x in 30..36 {
+            mask[y * w + x] = 1.0;
+        }
+    }
+    mask
+}
+
+/// Velocity snapshots `(2, hp-2, w)` at the requested steps.
+fn lbm_snapshots(hp: usize, w: usize, capture: &[u64]) -> Vec<Vec<f32>> {
+    let mask = geometry(hp, w);
+    let params = LbmParams::default();
+    let mut f = lbm::init(&mask, hp, w, params);
+    let mut scratch = Vec::new();
+    let mut out = Vec::with_capacity(capture.len());
+    let last = *capture.iter().max().unwrap();
+    for step in 1..=last {
+        let u = lbm::step(&mut f, &mask, hp, w, params, true, &mut scratch);
+        if capture.contains(&step) {
+            out.push(u);
+        }
+    }
+    out
+}
+
+struct CaseReport {
+    name: &'static str,
+    records: usize,
+    raw_bytes: usize,
+    wire_bytes: usize,
+    ratio: f64,
+    filter_us: f64,
+    aggregate_us: f64,
+    convert_us: f64,
+    compress_us: f64,
+    total_us_per_record: f64,
+}
+
+/// Run one stage configuration over the snapshots; report wire bytes
+/// (full encoded frames, headers included) staged vs raw.
+fn run_case(
+    name: &'static str,
+    cfg: StagesConfig,
+    shape: &[u32],
+    snaps: &[Vec<f32>],
+) -> anyhow::Result<CaseReport> {
+    let metrics = Arc::new(StageMetrics::new());
+    let pipeline = StagePipeline::new(cfg, metrics.clone())?;
+    let mut raw_bytes = 0usize;
+    let mut wire_bytes = 0usize;
+    let t0 = Instant::now();
+    for (i, snap) in snaps.iter().enumerate() {
+        let staged = pipeline
+            .apply("u", 0, i as u64, i as u64, 0, shape, snap)?
+            .expect("no filtering configured in bench cases");
+        wire_bytes += staged.encoded_len();
+        // decode must roundtrip (keeps the bench honest)
+        let back = StreamRecord::decode(&staged.encode())?;
+        anyhow::ensure!(back.payload_f32()?.len() * 4 == back.payload.len());
+        let raw = StreamRecord::from_f32("u", 0, i as u64, 0, shape, snap)?;
+        raw_bytes += raw.encoded_len();
+    }
+    let total_us = t0.elapsed().as_secs_f64() * 1e6;
+    Ok(CaseReport {
+        name,
+        records: snaps.len(),
+        raw_bytes,
+        wire_bytes,
+        ratio: raw_bytes as f64 / wire_bytes as f64,
+        filter_us: metrics.filter_us.mean(),
+        aggregate_us: metrics.aggregate_us.mean(),
+        convert_us: metrics.convert_us.mean(),
+        compress_us: metrics.compress_us.mean(),
+        total_us_per_record: total_us / snaps.len() as f64,
+    })
+}
+
+fn cases() -> Vec<(&'static str, StagesConfig)> {
+    vec![
+        (
+            "lossless_shuffle_lz",
+            StagesConfig { codec: CodecKind::ShuffleLz, ..Default::default() },
+        ),
+        (
+            "agg2_shuffle_lz",
+            StagesConfig {
+                aggregate: 2,
+                codec: CodecKind::ShuffleLz,
+                ..Default::default()
+            },
+        ),
+        (
+            "f16_shuffle_lz",
+            StagesConfig {
+                convert: Encoding::F16,
+                codec: CodecKind::ShuffleLz,
+                ..Default::default()
+            },
+        ),
+        (
+            "qdelta1e4_shuffle_lz",
+            StagesConfig {
+                convert: Encoding::QDelta,
+                qdelta_step: 1e-4,
+                codec: CodecKind::ShuffleLz,
+                ..Default::default()
+            },
+        ),
+    ]
+}
+
+fn print_report(r: &CaseReport) {
+    println!(
+        "  {:<22} {:>9} → {:>9} B  ({:>5.2}x)  \
+         µs/rec: filter {:>5.1} agg {:>5.1} conv {:>6.1} comp {:>7.1} total {:>7.1}",
+        r.name,
+        r.raw_bytes,
+        r.wire_bytes,
+        r.ratio,
+        r.filter_us,
+        r.aggregate_us,
+        r.convert_us,
+        r.compress_us,
+        r.total_us_per_record,
+    );
+}
+
+fn json_case(r: &CaseReport) -> String {
+    format!(
+        r#"{{"name":"{}","records":{},"raw_bytes":{},"wire_bytes":{},"ratio":{:.3},"filter_us":{:.2},"aggregate_us":{:.2},"convert_us":{:.2},"compress_us":{:.2},"total_us_per_record":{:.2}}}"#,
+        r.name,
+        r.records,
+        r.raw_bytes,
+        r.wire_bytes,
+        r.ratio,
+        r.filter_us,
+        r.aggregate_us,
+        r.convert_us,
+        r.compress_us,
+        r.total_us_per_record,
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    elasticbroker::util::logger::init();
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (hp, w) = (34usize, 96usize);
+    let h = hp - 2;
+    let shape = [2u32, h as u32, w as u32];
+
+    // --- smooth regime: the early transient, steps 1..=8 ------------
+    let smooth_steps: Vec<u64> = (1..=8).collect();
+    // --- developed regime: after warm-up, 8 snapshots 10 steps apart
+    let warm = if smoke { 60u64 } else { 240 };
+    let developed_steps: Vec<u64> = (1..=8).map(|i| warm + i * 10).collect();
+    let all_steps: Vec<u64> = smooth_steps
+        .iter()
+        .chain(developed_steps.iter())
+        .copied()
+        .collect();
+    let snaps = lbm_snapshots(hp, w, &all_steps);
+    let (smooth, developed) = snaps.split_at(smooth_steps.len());
+    println!(
+        "# stage pipeline on LBM fields ({h}x{w}, d={}, {} smooth + {} developed snapshots)",
+        2 * h * w,
+        smooth.len(),
+        developed.len()
+    );
+
+    let mut json_sections = Vec::new();
+    let mut smooth_lossless_ratio = 0.0;
+    for (regime, set) in [("smooth", smooth), ("developed", developed)] {
+        println!("\n## {regime} fields");
+        let mut reports = Vec::new();
+        for (name, cfg) in cases() {
+            let rep = run_case(name, cfg, &shape, set)?;
+            print_report(&rep);
+            if regime == "smooth" && name == "lossless_shuffle_lz" {
+                smooth_lossless_ratio = rep.ratio;
+            }
+            reports.push(rep);
+        }
+        json_sections.push(format!(
+            r#""{regime}":[{}]"#,
+            reports.iter().map(json_case).collect::<Vec<_>>().join(",")
+        ));
+    }
+
+    // --- the acceptance gate this PR ships under ---------------------
+    let gate = 3.0;
+    println!(
+        "\nsmooth lossless shuffle-lz wire reduction: {smooth_lossless_ratio:.2}x (gate ≥ {gate}x)"
+    );
+    anyhow::ensure!(
+        smooth_lossless_ratio >= gate,
+        "lossless wire reduction {smooth_lossless_ratio:.2}x under the {gate}x gate"
+    );
+
+    let json = format!(
+        r#"{{"bench":"micro_stages","smoke":{smoke},"field_dim":{},"lossless_smooth_ratio":{smooth_lossless_ratio:.3},"gate":{gate},{}}}"#,
+        2 * h * w,
+        json_sections.join(",")
+    );
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_stages.json");
+    std::fs::write(out_path, &json)?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

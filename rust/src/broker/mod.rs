@@ -31,8 +31,15 @@
 //!   trades a bounded latency add for fuller batches; the 0 default
 //!   ships whatever has queued the moment the writer is free, so an
 //!   idle stream still sees per-record latency).
-//! * **Filtering / aggregation / format conversion** ([`filter`]):
-//!   optional per-context stages applied before serialization.
+//! * **Filtering / aggregation / format conversion** ([`filter`],
+//!   [`stages`]): [`filter`] is the legacy per-context value-transform
+//!   pipeline; [`stages`] (ISSUE 5) is the full data-reduction stage
+//!   pipeline — filter (decimation / rank subset / ROI) → aggregate
+//!   (block-mean + sidecar stats) → convert (f16 / quantized delta
+//!   with stated error bound) → compress (byte-shuffle + LZ behind the
+//!   [`crate::record::Codec`] trait) — producing self-describing
+//!   `EBR2` frames the Cloud side decodes transparently.  See
+//!   ROADMAP.md §"Reduction model".
 //! * **Elasticity** (ISSUE 3, the paper's namesake behaviour): the
 //!   group→endpoint assignment is a versioned [`Topology`] rather than
 //!   a constant.  Writers ship through the epoch-fenced [`Shipper`]
@@ -47,6 +54,7 @@ pub mod groups;
 mod queue;
 pub mod rebalancer;
 pub mod shipper;
+pub mod stages;
 pub mod topology;
 
 pub use filter::{Filter, FilterStage};
@@ -54,9 +62,11 @@ pub use groups::GroupMap;
 pub use queue::{BoundedQueue, QueuePolicy};
 pub use rebalancer::{EndpointSample, MigrationPlan, QosThresholds, Rebalancer};
 pub use shipper::Shipper;
+pub use stages::{StagePipeline, StagesConfig};
 pub use topology::{EndpointSlot, Topology, TopologyHandle};
 
 use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -82,6 +92,10 @@ pub struct BrokerConfig {
     pub conn: ConnConfig,
     /// Optional data-reduction pipeline applied in `write`.
     pub filter: Filter,
+    /// Stage-pipeline knobs (filter → aggregate → convert → compress,
+    /// ISSUE 5); the default is a passthrough that ships classic raw
+    /// `EBR1` frames.
+    pub stages: StagesConfig,
     /// Max records coalesced into one pipelined `XADD` batch.
     pub batch_max_records: usize,
     /// Max payload bytes per batch (0 = unbounded; the first record of
@@ -102,6 +116,7 @@ impl BrokerConfig {
             policy: QueuePolicy::Block,
             conn: ConnConfig::default(),
             filter: Filter::passthrough(),
+            stages: StagesConfig::default(),
             batch_max_records: 64,
             batch_max_bytes: 4 << 20, // 4 MiB
             linger_ms: 0,
@@ -122,6 +137,8 @@ pub struct Broker {
     topology: TopologyHandle,
     dialer: Arc<dyn Dialer>,
     metrics: WorkflowMetrics,
+    /// Shared data-reduction pipeline every context writes through.
+    stages: Arc<StagePipeline>,
 }
 
 impl Broker {
@@ -133,30 +150,41 @@ impl Broker {
             move |e| resolver.endpoint_addr(e),
             cfg.conn.clone(),
         ));
+        let stages = Arc::new(StagePipeline::new(
+            cfg.stages.clone(),
+            metrics.stages.clone(),
+        )?);
         Ok(Broker {
             cfg,
             topology,
             dialer,
             metrics,
+            stages,
         })
     }
 
     /// Elastic constructor: writers ship per `topology` (shared with
     /// the rebalancer and the Cloud-side [`crate::streamproc::ElasticReader`])
     /// through `dialer`.  `cfg.endpoints` is ignored — the topology
-    /// owns endpoint addressing.
+    /// owns endpoint addressing.  Fails only on an invalid
+    /// [`BrokerConfig::stages`] config.
     pub fn with_topology(
         cfg: BrokerConfig,
         topology: TopologyHandle,
         dialer: Arc<dyn Dialer>,
         metrics: WorkflowMetrics,
-    ) -> Broker {
-        Broker {
+    ) -> Result<Broker> {
+        let stages = Arc::new(StagePipeline::new(
+            cfg.stages.clone(),
+            metrics.stages.clone(),
+        )?);
+        Ok(Broker {
             cfg,
             topology,
             dialer,
             metrics,
-        }
+            stages,
+        })
     }
 
     /// The rank→group partition (a small copy; the assignment half of
@@ -217,6 +245,8 @@ impl Broker {
             queue,
             writer: Some(writer),
             filter,
+            stages: self.stages.clone(),
+            write_seq: AtomicU64::new(0),
             metrics: self.metrics.clone(),
         })
     }
@@ -229,6 +259,11 @@ pub struct BrokerCtx {
     queue: Arc<BoundedQueue<StreamRecord>>,
     writer: Option<std::thread::JoinHandle<Result<()>>>,
     filter: Filter,
+    /// Shared data-reduction stage pipeline (ISSUE 5).
+    stages: Arc<StagePipeline>,
+    /// Writes issued through this context — the sequence the decimation
+    /// filter counts (independent of the simulation step numbering).
+    write_seq: AtomicU64,
     metrics: WorkflowMetrics,
 }
 
@@ -237,17 +272,33 @@ impl BrokerCtx {
     /// record and enqueue it.  Returns as soon as the record is queued
     /// (the paper's asynchronous-write property); blocks only when the
     /// queue is full under `QueuePolicy::Block`.
+    ///
+    /// The record first runs the legacy per-context [`Filter`], then
+    /// the [`StagePipeline`] (filter → aggregate → convert →
+    /// compress).  A record the stage filter decides never ships
+    /// (decimation, rank subsetting) returns `Ok` without enqueueing —
+    /// intentional reduction, not loss.
     pub fn write(&self, step: u64, shape: &[u32], data: &[f32]) -> Result<()> {
         let t0 = Instant::now();
         let (shape, reduced) = self.filter.apply(shape, data)?;
-        let record = StreamRecord::from_f32(
+        let seq = self.write_seq.fetch_add(1, Ordering::Relaxed);
+        let record = match self.stages.apply(
             &self.field,
             self.rank,
             step,
+            seq,
             util::epoch_micros(),
             &shape,
             &reduced,
-        )?;
+        )? {
+            Some(rec) => rec,
+            None => {
+                self.metrics
+                    .write_call_us
+                    .record(t0.elapsed().as_micros() as u64);
+                return Ok(());
+            }
+        };
         let dropped = self.queue.push(record);
         if dropped > 0 {
             self.metrics.dropped.add(dropped as u64);
@@ -744,6 +795,90 @@ mod tests {
         // the unmoved stream never left e0
         let stayed = if moved[0] == 0 { "u/1" } else { "u/0" };
         assert_eq!(sim_steps(&net.store(e0), stayed).len(), 8);
+    }
+
+    /// ISSUE 5: staged writes ship opaque `EBR2` frames that the
+    /// endpoint stores unchanged, cost fewer wire bytes than raw, and
+    /// decode back to the aggregated f32 data on the Cloud side.
+    #[test]
+    fn staged_write_reduces_wire_bytes_and_decodes() {
+        use crate::record::CodecKind;
+
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        let cfg = BrokerConfig {
+            group_size: 1,
+            stages: StagesConfig {
+                aggregate: 2,
+                codec: CodecKind::ShuffleLz,
+                ..Default::default()
+            },
+            ..BrokerConfig::new(vec![srv.addr()])
+        };
+        let metrics = WorkflowMetrics::new();
+        let broker = Broker::new(cfg, 1, metrics.clone()).unwrap();
+        let ctx = broker.init("u", 0).unwrap();
+        // smooth field: the codec must win
+        let data: Vec<f32> = (0..256).map(|i| (i as f32 * 0.05).sin()).collect();
+        for step in 0..4 {
+            ctx.write(step, &[256], &data).unwrap();
+        }
+        ctx.finalize().unwrap();
+        assert_eq!(srv.store().xlen("u/0"), 4);
+        let stage = &metrics.stages;
+        assert_eq!(stage.records_in.get(), 4);
+        assert!(
+            stage.bytes_out.get() < stage.bytes_in.get() / 2,
+            "aggregate 2 + codec must at least halve: {} vs {}",
+            stage.bytes_out.get(),
+            stage.bytes_in.get()
+        );
+        // the stored frame is EBR2 and decodes to the block-mean oracle
+        let entries = srv
+            .store()
+            .read_after("u/0", crate::endpoint::EntryId::ZERO, 0);
+        let rec = StreamRecord::decode(&entries[0].fields[0].1).unwrap();
+        let meta = rec.meta.as_ref().expect("staged frame header");
+        assert_eq!(meta.err_bound, 0.0, "aggregate+lz is lossless end to end");
+        assert!(meta.stats.is_some());
+        assert_eq!(rec.shape, vec![128]);
+        let (oracle_shape, oracle) =
+            stages::block_mean_last_axis(&[256], &data, 2).unwrap();
+        assert_eq!(rec.shape, oracle_shape);
+        let got = rec.payload_f32().unwrap();
+        assert_eq!(got.len(), oracle.len());
+        for (a, b) in got.iter().zip(&oracle) {
+            assert_eq!(a.to_bits(), b.to_bits(), "lossless staged bits changed");
+        }
+    }
+
+    /// ISSUE 5: decimation thins the stream without counting as drops.
+    #[test]
+    fn decimated_write_ships_every_nth() {
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        let cfg = BrokerConfig {
+            group_size: 1,
+            stages: StagesConfig { decimate: 3, ..Default::default() },
+            ..BrokerConfig::new(vec![srv.addr()])
+        };
+        let metrics = WorkflowMetrics::new();
+        let broker = Broker::new(cfg, 1, metrics.clone()).unwrap();
+        let ctx = broker.init("u", 0).unwrap();
+        let data = vec![1.0f32; 16];
+        for step in 0..9 {
+            ctx.write(step, &[16], &data).unwrap();
+        }
+        ctx.finalize().unwrap();
+        assert_eq!(srv.store().xlen("u/0"), 3);
+        assert_eq!(metrics.dropped.get(), 0, "decimation is not queue loss");
+        assert_eq!(metrics.stages.records_filtered.get(), 6);
+        let entries = srv
+            .store()
+            .read_after("u/0", crate::endpoint::EntryId::ZERO, 0);
+        let steps: Vec<u64> = entries
+            .iter()
+            .map(|e| StreamRecord::decode(&e.fields[0].1).unwrap().step)
+            .collect();
+        assert_eq!(steps, vec![0, 3, 6]);
     }
 
     #[test]

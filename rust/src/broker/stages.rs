@@ -1,0 +1,591 @@
+//! The broker-side data-reduction stage pipeline (ISSUE 5 tentpole) —
+//! the paper's §1 promise made concrete: "ElasticBroker performs data
+//! filtering, aggregation, and format conversions to close the gap
+//! between an HPC ecosystem and a distinct Cloud ecosystem".
+//!
+//! Every record a [`crate::broker::BrokerCtx`] writes passes through
+//! four composable stages between the simulation and the batch queue:
+//!
+//! ```text
+//!          ┌────────┐   ┌───────────┐   ┌─────────┐   ┌──────────┐
+//!  write → │ filter │ → │ aggregate │ → │ convert │ → │ compress │ → queue
+//!          └────────┘   └───────────┘   └─────────┘   └──────────┘
+//!   drop records      block-mean        f32→f16 /      byte-shuffle
+//!   (decimation,      downsample +      quantized      + LZ behind
+//!   rank subset)      min/max/mean      delta, with    the Codec
+//!   or crop (ROI)     sidecar stats     stated bound   trait
+//! ```
+//!
+//! 1. **filter** — every-Nth-step decimation, rank subsetting (only
+//!    every `rank_stride`-th rank ships at all) and region-of-interest
+//!    cropping along the last (fastest-varying, spatial) axis.
+//! 2. **aggregate** — block-mean spatial downsampling by a configured
+//!    factor along the last axis, with per-field min/max/mean sidecar
+//!    stats carried in the frame header.
+//! 3. **convert** — element format conversion
+//!    ([`crate::record::Encoding`]): raw f32, IEEE binary16, or
+//!    quantized-delta, the lossy ones carrying their *measured* max
+//!    absolute error in the header so downstream consumers know the
+//!    bound.
+//! 4. **compress** — lossless payload compression behind the
+//!    [`crate::record::Codec`] trait (byte-shuffle + LZ by default),
+//!    with a per-frame fallback to uncompressed when a frame does not
+//!    actually shrink.
+//!
+//! The output is a staged [`StreamRecord`] whose `EBR2` frame the
+//! endpoints and the WAL store opaquely — the reduction carries
+//! through wire *and* disk multiplicatively — and which
+//! [`StreamRecord::decode`] reverses transparently on the Cloud side,
+//! so the DMD analysis sees plain f32 snapshots (bit-exact for
+//! lossless stages, within the stated bound for lossy ones).  Peers
+//! that never enable stages keep exchanging byte-identical `EBR1`
+//! frames: interop is unchanged.
+//!
+//! Costs and achieved reduction are recorded in
+//! [`crate::metrics::StageMetrics`]; benchmark with
+//! `cargo bench --bench micro_stages` (emits `BENCH_stages.json`).
+
+use std::borrow::Cow;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::metrics::StageMetrics;
+use crate::record::{codec_for, convert, CodecKind, Encoding, FieldStats, FrameMeta, StreamRecord};
+
+/// Stage-pipeline knobs (config `[stages]`, CLI `--stage-*`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StagesConfig {
+    /// Keep every `decimate`-th written record per context (1 = all).
+    pub decimate: u64,
+    /// Ship only ranks with `rank % rank_stride == 0` (1 = all ranks).
+    pub rank_stride: u32,
+    /// Region of interest: keep elements `[lo, hi)` of the last axis.
+    pub roi: Option<(u32, u32)>,
+    /// Block-mean downsampling factor along the last axis (1 = off).
+    pub aggregate: usize,
+    /// Compute min/max/mean sidecar stats even when `aggregate` is off
+    /// (aggregated frames always carry them).
+    pub stats: bool,
+    /// Element encoding of the shipped payload.
+    pub convert: Encoding,
+    /// Quantization step for [`Encoding::QDelta`] (absolute error is
+    /// at most half of this).
+    pub qdelta_step: f32,
+    /// Lossless payload codec.
+    pub codec: CodecKind,
+}
+
+impl Default for StagesConfig {
+    fn default() -> Self {
+        StagesConfig {
+            decimate: 1,
+            rank_stride: 1,
+            roi: None,
+            aggregate: 1,
+            stats: false,
+            convert: Encoding::F32,
+            qdelta_step: 1e-3,
+            codec: CodecKind::None,
+        }
+    }
+}
+
+impl StagesConfig {
+    /// Whether the pipeline changes nothing (records then ship as
+    /// classic raw `EBR1` frames).
+    pub fn is_passthrough(&self) -> bool {
+        self.decimate <= 1
+            && self.rank_stride <= 1
+            && self.roi.is_none()
+            && self.aggregate <= 1
+            && !self.stats
+            && self.convert == Encoding::F32
+            && self.codec == CodecKind::None
+    }
+
+    /// Parse a `lo:hi` ROI spec (elements of the last axis, hi
+    /// exclusive).
+    pub fn parse_roi(s: &str) -> Result<(u32, u32)> {
+        let (lo, hi) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("roi '{s}' is not lo:hi"))?;
+        let lo: u32 = lo.trim().parse().map_err(|e| anyhow::anyhow!("roi lo: {e}"))?;
+        let hi: u32 = hi.trim().parse().map_err(|e| anyhow::anyhow!("roi hi: {e}"))?;
+        ensure!(lo < hi, "roi {lo}:{hi} is empty");
+        Ok((lo, hi))
+    }
+
+    /// Sanity-check invariants the pipeline relies on.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.decimate >= 1, "stages.decimate must be >= 1");
+        ensure!(self.rank_stride >= 1, "stages.rank_stride must be >= 1");
+        ensure!(self.aggregate >= 1, "stages.aggregate must be >= 1");
+        if let Some((lo, hi)) = self.roi {
+            ensure!(lo < hi, "stages.roi {lo}:{hi} is empty");
+        }
+        if self.convert == Encoding::QDelta {
+            ensure!(
+                self.qdelta_step > 0.0 && self.qdelta_step.is_finite(),
+                "stages.qdelta_step must be a positive finite number"
+            );
+        }
+        Ok(())
+    }
+
+    /// The provenance tag carried in every staged frame header, with
+    /// the codec that actually applied to this frame.
+    fn provenance(&self, applied_codec: CodecKind) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if self.rank_stride > 1 {
+            parts.push(format!("ranks%{}", self.rank_stride));
+        }
+        if self.decimate > 1 {
+            parts.push(format!("decim:{}", self.decimate));
+        }
+        if let Some((lo, hi)) = self.roi {
+            parts.push(format!("roi:{lo}:{hi}"));
+        }
+        if self.aggregate > 1 {
+            parts.push(format!("agg:{}", self.aggregate));
+        }
+        if self.convert != Encoding::F32 {
+            parts.push(self.convert.name().to_string());
+        }
+        if applied_codec != CodecKind::None {
+            parts.push(applied_codec.name().to_string());
+        }
+        parts.join("|")
+    }
+}
+
+/// The runnable pipeline: validated config + metrics.  One shared
+/// instance serves every context of a broker (it is stateless per
+/// record; the decimation counter lives in the context).
+pub struct StagePipeline {
+    cfg: StagesConfig,
+    metrics: Arc<StageMetrics>,
+}
+
+impl StagePipeline {
+    pub fn new(cfg: StagesConfig, metrics: Arc<StageMetrics>) -> Result<StagePipeline> {
+        cfg.validate()?;
+        Ok(StagePipeline { cfg, metrics })
+    }
+
+    /// A do-nothing pipeline (records ship as raw `EBR1` frames).
+    pub fn passthrough() -> StagePipeline {
+        StagePipeline {
+            cfg: StagesConfig::default(),
+            metrics: Arc::new(StageMetrics::new()),
+        }
+    }
+
+    pub fn config(&self) -> &StagesConfig {
+        &self.cfg
+    }
+
+    pub fn is_passthrough(&self) -> bool {
+        self.cfg.is_passthrough()
+    }
+
+    /// Whether the filter stage ships this rank at all.
+    pub fn admits_rank(&self, rank: u32) -> bool {
+        rank % self.cfg.rank_stride.max(1) == 0
+    }
+
+    /// Run one snapshot through filter → aggregate → convert →
+    /// compress.  `seq` is the per-context write sequence number the
+    /// decimation filter counts (the first write is kept).  Returns
+    /// `None` when the filter stage drops the record — an intentional
+    /// reduction, not an error.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply(
+        &self,
+        field: &str,
+        rank: u32,
+        step: u64,
+        seq: u64,
+        gen_micros: u64,
+        shape: &[u32],
+        data: &[f32],
+    ) -> Result<Option<StreamRecord>> {
+        if self.is_passthrough() {
+            return Ok(Some(StreamRecord::from_f32(
+                field, rank, step, gen_micros, shape, data,
+            )?));
+        }
+        let n: usize = shape.iter().map(|&d| d as usize).product();
+        ensure!(
+            n == data.len(),
+            "stages: shape {shape:?} does not match data len {}",
+            data.len()
+        );
+        self.metrics.records_in.inc();
+        self.metrics.bytes_in.add((data.len() * 4) as u64);
+
+        // --- 1. filter ------------------------------------------------
+        let t = Instant::now();
+        if !self.admits_rank(rank) || (self.cfg.decimate > 1 && seq % self.cfg.decimate != 0) {
+            self.metrics.records_filtered.inc();
+            self.metrics.filter_us.record(t.elapsed().as_micros() as u64);
+            return Ok(None);
+        }
+        // Borrow until a stage actually reshapes the data — a codec- or
+        // convert-only config never copies the snapshot here.
+        let (mut shape, mut data): (Cow<'_, [u32]>, Cow<'_, [f32]>) = match self.cfg.roi {
+            Some((lo, hi)) => {
+                let (s, d) = crop_last_axis(shape, data, lo, hi)?;
+                (Cow::Owned(s), Cow::Owned(d))
+            }
+            None => (Cow::Borrowed(shape), Cow::Borrowed(data)),
+        };
+        self.metrics.filter_us.record(t.elapsed().as_micros() as u64);
+
+        // --- 2. aggregate ---------------------------------------------
+        let t = Instant::now();
+        if self.cfg.aggregate > 1 {
+            let (s, d) = block_mean_last_axis(&shape, &data, self.cfg.aggregate)?;
+            shape = Cow::Owned(s);
+            data = Cow::Owned(d);
+        }
+        let stats = if self.cfg.aggregate > 1 || self.cfg.stats {
+            Some(field_stats(&data))
+        } else {
+            None
+        };
+        self.metrics.aggregate_us.record(t.elapsed().as_micros() as u64);
+
+        // --- 3. convert -----------------------------------------------
+        let t = Instant::now();
+        let (encoded, err_bound, enc_param) = match self.cfg.convert {
+            Encoding::F32 => {
+                let mut b = Vec::with_capacity(data.len() * 4);
+                for v in data.iter() {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+                (b, 0.0, 0.0)
+            }
+            Encoding::F16 => {
+                let (b, e) = convert::encode_f16(&data)?;
+                (b, e, 0.0)
+            }
+            Encoding::QDelta => {
+                let (b, e) = convert::encode_qdelta(&data, self.cfg.qdelta_step)?;
+                (b, e, self.cfg.qdelta_step)
+            }
+        };
+        self.metrics.convert_us.record(t.elapsed().as_micros() as u64);
+
+        // --- 4. compress ----------------------------------------------
+        let t = Instant::now();
+        let raw_len = encoded.len() as u32;
+        let (applied_codec, payload) = match self.cfg.codec {
+            CodecKind::None => (CodecKind::None, encoded),
+            kind => {
+                let comp = codec_for(kind).compress(&encoded, self.cfg.convert.elem_size());
+                // Per-frame fallback: never ship a frame the codec grew.
+                if comp.len() < encoded.len() {
+                    (kind, comp)
+                } else {
+                    (CodecKind::None, encoded)
+                }
+            }
+        };
+        self.metrics.compress_us.record(t.elapsed().as_micros() as u64);
+        self.metrics.bytes_out.add(payload.len() as u64);
+
+        let meta = FrameMeta {
+            encoding: self.cfg.convert,
+            codec: applied_codec,
+            enc_param,
+            err_bound,
+            raw_len,
+            stats,
+            provenance: self.cfg.provenance(applied_codec),
+        };
+        Ok(Some(StreamRecord::from_staged(
+            field, rank, step, gen_micros, &shape, payload, meta,
+        )))
+    }
+}
+
+/// Crop the last axis of a row-major array to `[lo, hi)`.
+pub fn crop_last_axis(
+    shape: &[u32],
+    data: &[f32],
+    lo: u32,
+    hi: u32,
+) -> Result<(Vec<u32>, Vec<f32>)> {
+    let Some(&w) = shape.last() else {
+        bail!("roi: record has no shape");
+    };
+    ensure!(
+        lo < hi && hi <= w,
+        "roi {lo}:{hi} out of bounds for last axis {w}"
+    );
+    let (lo, hi, w) = (lo as usize, hi as usize, w as usize);
+    let rows = data.len() / w;
+    let mut out = Vec::with_capacity(rows * (hi - lo));
+    for r in 0..rows {
+        out.extend_from_slice(&data[r * w + lo..r * w + hi]);
+    }
+    let mut new_shape = shape.to_vec();
+    *new_shape.last_mut().unwrap() = (hi - lo) as u32;
+    Ok((new_shape, out))
+}
+
+/// Block-mean downsample along the last axis by factor `k`; a trailing
+/// partial block averages the elements it has.
+pub fn block_mean_last_axis(
+    shape: &[u32],
+    data: &[f32],
+    k: usize,
+) -> Result<(Vec<u32>, Vec<f32>)> {
+    ensure!(k >= 1, "aggregate factor must be >= 1");
+    let Some(&w) = shape.last() else {
+        bail!("aggregate: record has no shape");
+    };
+    let w = w as usize;
+    ensure!(w > 0, "aggregate: empty last axis");
+    let out_w = w.div_ceil(k);
+    let rows = data.len() / w;
+    let mut out = Vec::with_capacity(rows * out_w);
+    for r in 0..rows {
+        let row = &data[r * w..(r + 1) * w];
+        for b in 0..out_w {
+            let start = b * k;
+            let end = (start + k).min(w);
+            let mut sum = 0f64;
+            for &v in &row[start..end] {
+                sum += v as f64;
+            }
+            out.push((sum / (end - start) as f64) as f32);
+        }
+    }
+    let mut new_shape = shape.to_vec();
+    *new_shape.last_mut().unwrap() = out_w as u32;
+    Ok((new_shape, out))
+}
+
+/// Min / max / mean of a field (the sidecar stats).
+pub fn field_stats(data: &[f32]) -> FieldStats {
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    let mut sum = 0f64;
+    for &v in data {
+        if v < min {
+            min = v;
+        }
+        if v > max {
+            max = v;
+        }
+        sum += v as f64;
+    }
+    if data.is_empty() {
+        return FieldStats { min: 0.0, max: 0.0, mean: 0.0 };
+    }
+    FieldStats {
+        min,
+        max,
+        mean: (sum / data.len() as f64) as f32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pipeline(cfg: StagesConfig) -> StagePipeline {
+        StagePipeline::new(cfg, Arc::new(StageMetrics::new())).unwrap()
+    }
+
+    fn smooth(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.05).sin()).collect()
+    }
+
+    #[test]
+    fn passthrough_emits_v1_records() {
+        let p = StagePipeline::passthrough();
+        assert!(p.is_passthrough());
+        let rec = p
+            .apply("u", 0, 7, 0, 0, &[4], &[1.0, 2.0, 3.0, 4.0])
+            .unwrap()
+            .unwrap();
+        assert!(rec.meta.is_none());
+        assert_eq!(rec.payload_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn decimation_keeps_every_nth() {
+        let m = Arc::new(StageMetrics::new());
+        let p = StagePipeline::new(
+            StagesConfig { decimate: 3, ..Default::default() },
+            m.clone(),
+        )
+        .unwrap();
+        let data = smooth(8);
+        let kept: Vec<u64> = (0..9u64)
+            .filter(|&seq| {
+                p.apply("u", 0, seq, seq, 0, &[8], &data).unwrap().is_some()
+            })
+            .collect();
+        assert_eq!(kept, vec![0, 3, 6]);
+        assert_eq!(m.records_in.get(), 9);
+        assert_eq!(m.records_filtered.get(), 6);
+    }
+
+    #[test]
+    fn rank_subsetting_drops_odd_ranks() {
+        let p = pipeline(StagesConfig { rank_stride: 2, ..Default::default() });
+        assert!(p.admits_rank(0) && !p.admits_rank(1) && p.admits_rank(2));
+        let data = smooth(4);
+        assert!(p.apply("u", 1, 0, 0, 0, &[4], &data).unwrap().is_none());
+        assert!(p.apply("u", 2, 0, 0, 0, &[4], &data).unwrap().is_some());
+    }
+
+    #[test]
+    fn roi_crops_last_axis() {
+        let p = pipeline(StagesConfig { roi: Some((2, 6)), ..Default::default() });
+        let data: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let rec = p.apply("u", 0, 0, 0, 0, &[2, 8], &data).unwrap().unwrap();
+        assert_eq!(rec.shape, vec![2, 4]);
+        let back = StreamRecord::decode(&rec.encode()).unwrap();
+        assert_eq!(
+            back.payload_f32().unwrap(),
+            vec![2., 3., 4., 5., 10., 11., 12., 13.]
+        );
+        // out-of-bounds roi is an error
+        let bad = pipeline(StagesConfig { roi: Some((2, 9)), ..Default::default() });
+        assert!(bad.apply("u", 0, 0, 0, 0, &[2, 8], &data).is_err());
+    }
+
+    #[test]
+    fn aggregate_block_means_and_carries_stats() {
+        let p = pipeline(StagesConfig { aggregate: 2, ..Default::default() });
+        let data = vec![1.0f32, 3.0, 5.0, 7.0, 2.0, 4.0, 6.0, 8.0];
+        let rec = p.apply("u", 0, 0, 0, 0, &[2, 4], &data).unwrap().unwrap();
+        assert_eq!(rec.shape, vec![2, 2]);
+        let back = StreamRecord::decode(&rec.encode()).unwrap();
+        assert_eq!(back.payload_f32().unwrap(), vec![2.0, 6.0, 3.0, 7.0]);
+        let stats = back.meta.unwrap().stats.unwrap();
+        assert_eq!(stats.min, 2.0);
+        assert_eq!(stats.max, 7.0);
+        assert!((stats.mean - 4.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn aggregate_partial_tail_block() {
+        let (shape, data) =
+            block_mean_last_axis(&[5], &[1.0, 2.0, 3.0, 4.0, 10.0], 2).unwrap();
+        assert_eq!(shape, vec![3]);
+        assert_eq!(data, vec![1.5, 3.5, 10.0]);
+    }
+
+    #[test]
+    fn lossless_codec_roundtrips_bit_exact() {
+        let m = Arc::new(StageMetrics::new());
+        let p = StagePipeline::new(
+            StagesConfig { codec: CodecKind::ShuffleLz, ..Default::default() },
+            m.clone(),
+        )
+        .unwrap();
+        let data = smooth(512);
+        let rec = p.apply("u", 0, 3, 0, 0, &[512], &data).unwrap().unwrap();
+        let meta = rec.meta.as_ref().unwrap();
+        assert_eq!(meta.err_bound, 0.0);
+        let back = StreamRecord::decode(&rec.encode()).unwrap();
+        let got = back.payload_f32().unwrap();
+        assert_eq!(got.len(), data.len());
+        for (a, b) in got.iter().zip(&data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "lossless bits changed");
+        }
+        assert!(m.bytes_out.get() < m.bytes_in.get(), "smooth field must shrink");
+        assert!(m.reduction_factor() > 1.0);
+    }
+
+    #[test]
+    fn lossy_roundtrip_within_stated_bound() {
+        for convert in [Encoding::F16, Encoding::QDelta] {
+            let p = pipeline(StagesConfig {
+                convert,
+                qdelta_step: 1e-3,
+                codec: CodecKind::ShuffleLz,
+                ..Default::default()
+            });
+            let data = smooth(256);
+            let rec = p.apply("u", 0, 0, 0, 0, &[256], &data).unwrap().unwrap();
+            let bound = rec.meta.as_ref().unwrap().err_bound;
+            let back = StreamRecord::decode(&rec.encode()).unwrap();
+            for (a, b) in back.payload_f32().unwrap().iter().zip(&data) {
+                assert!(
+                    (a - b).abs() <= bound + 1e-12,
+                    "{convert:?}: {b} → {a} over bound {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn incompressible_frame_falls_back_to_uncompressed() {
+        let p = pipeline(StagesConfig { codec: CodecKind::ShuffleLz, ..Default::default() });
+        // white noise: the LZ pass cannot win; the frame must ship
+        // uncompressed rather than grown
+        let mut rng = crate::util::rng::Rng::new(3);
+        let data: Vec<f32> =
+            (0..256).map(|_| f32::from_bits(rng.next_below(u32::MAX as u64) as u32)).collect();
+        let data: Vec<f32> = data
+            .into_iter()
+            .map(|v| if v.is_finite() { v } else { 0.0 })
+            .collect();
+        let rec = p.apply("u", 0, 0, 0, 0, &[256], &data).unwrap().unwrap();
+        let meta = rec.meta.as_ref().unwrap();
+        assert_eq!(meta.codec, CodecKind::None, "fallback should disable the codec");
+        assert_eq!(rec.payload.len(), meta.raw_len as usize);
+        let back = StreamRecord::decode(&rec.encode()).unwrap();
+        for (a, b) in back.payload_f32().unwrap().iter().zip(&data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn stages_compose_and_provenance_records_them() {
+        let p = pipeline(StagesConfig {
+            decimate: 2,
+            roi: Some((0, 8)),
+            aggregate: 2,
+            convert: Encoding::F16,
+            codec: CodecKind::ShuffleLz,
+            ..Default::default()
+        });
+        let data = smooth(32);
+        let rec = p.apply("u", 0, 0, 0, 0, &[2, 16], &data).unwrap().unwrap();
+        assert_eq!(rec.shape, vec![2, 4]); // 16 → roi 8 → agg 4
+        let prov = rec.meta.as_ref().unwrap().provenance.clone();
+        assert!(prov.contains("decim:2"), "{prov}");
+        assert!(prov.contains("roi:0:8"), "{prov}");
+        assert!(prov.contains("agg:2"), "{prov}");
+        assert!(prov.contains("f16"), "{prov}");
+        // odd write sequence numbers are decimated away
+        assert!(p.apply("u", 0, 1, 1, 0, &[2, 16], &data).unwrap().is_none());
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        assert!(StagesConfig { decimate: 0, ..Default::default() }.validate().is_err());
+        assert!(StagesConfig { rank_stride: 0, ..Default::default() }.validate().is_err());
+        assert!(StagesConfig { aggregate: 0, ..Default::default() }.validate().is_err());
+        assert!(StagesConfig { roi: Some((4, 4)), ..Default::default() }.validate().is_err());
+        assert!(StagesConfig {
+            convert: Encoding::QDelta,
+            qdelta_step: 0.0,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert_eq!(StagesConfig::parse_roi("8:120").unwrap(), (8, 120));
+        assert!(StagesConfig::parse_roi("120").is_err());
+        assert!(StagesConfig::parse_roi("9:3").is_err());
+    }
+}

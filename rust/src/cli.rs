@@ -25,7 +25,14 @@ pub struct Args {
 }
 
 /// Flags that never take a value.
-const BOOLEAN_FLAGS: &[&str] = &["no-pjrt", "help", "verbose", "dmd-per-batch", "retention"];
+const BOOLEAN_FLAGS: &[&str] = &[
+    "no-pjrt",
+    "help",
+    "verbose",
+    "dmd-per-batch",
+    "retention",
+    "stage-stats",
+];
 
 impl Args {
     /// Parse from raw argv (not including the subcommand itself).
@@ -137,6 +144,30 @@ pub fn apply_overrides(
     if let Some(v) = args.get_parsed::<u64>("linger-ms")? {
         cfg.linger_ms = v;
     }
+    if let Some(v) = args.get_parsed::<u64>("stage-decimate")? {
+        cfg.stages.decimate = v;
+    }
+    if let Some(v) = args.get_parsed::<u32>("stage-rank-stride")? {
+        cfg.stages.rank_stride = v;
+    }
+    if let Some(v) = args.get("stage-roi") {
+        cfg.stages.roi = Some(crate::broker::StagesConfig::parse_roi(v)?);
+    }
+    if let Some(v) = args.get_parsed::<usize>("stage-aggregate")? {
+        cfg.stages.aggregate = v;
+    }
+    if args.has_flag("stage-stats") {
+        cfg.stages.stats = true;
+    }
+    if let Some(v) = args.get("stage-convert") {
+        cfg.stages.convert = crate::record::Encoding::parse(v)?;
+    }
+    if let Some(v) = args.get_parsed::<f32>("stage-qdelta-step")? {
+        cfg.stages.qdelta_step = v;
+    }
+    if let Some(v) = args.get("stage-codec") {
+        cfg.stages.codec = crate::record::CodecKind::parse(v)?;
+    }
     if let Some(v) = args.get_parsed::<usize>("store-shards")? {
         cfg.store_shards = v;
     }
@@ -219,6 +250,15 @@ SUBCOMMANDS:
                 --ranks/--height/--width/--steps/--write-interval
                 --io-mode file|broker|none   --out-dir DIR   --no-pjrt
                 --batch-max-records N --batch-max-bytes B --linger-ms MS
+                data-reduction stages ([stages] in TOML):
+                --stage-decimate N   ship every Nth write (default 1)
+                --stage-rank-stride N  ship ranks where rank%N==0
+                --stage-roi LO:HI    crop last axis to [LO, HI)
+                --stage-aggregate K  block-mean last axis by K
+                --stage-stats        min/max/mean sidecar stats
+                --stage-convert E    f32|f16|qdelta (default f32)
+                --stage-qdelta-step S  qdelta quantization step
+                --stage-codec C      none|shuffle-lz (default none)
   analysis    Run the Cloud-side streaming + DMD service
                 --endpoints A[,B..]  --ranks N  --field NAME
                 --trigger-ms MS --executors N --dmd-window M --dmd-rank R
@@ -324,6 +364,39 @@ mod tests {
         assert_eq!(cfg.wal_fsync, crate::endpoint::FsyncPolicy::Always);
         assert!(cfg.retention);
         assert!(!cfg.use_pjrt);
+    }
+
+    #[test]
+    fn stage_flags_apply() {
+        let mut cfg = crate::config::WorkflowConfig::default();
+        let a = Args::parse(&argv(&[
+            "--stage-decimate",
+            "2",
+            "--stage-roi",
+            "4:60",
+            "--stage-aggregate",
+            "4",
+            "--stage-convert",
+            "f16",
+            "--stage-codec",
+            "shuffle-lz",
+            "--stage-stats",
+        ]))
+        .unwrap();
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert_eq!(cfg.stages.decimate, 2);
+        assert_eq!(cfg.stages.roi, Some((4, 60)));
+        assert_eq!(cfg.stages.aggregate, 4);
+        assert_eq!(cfg.stages.convert, crate::record::Encoding::F16);
+        assert_eq!(cfg.stages.codec, crate::record::CodecKind::ShuffleLz);
+        assert!(cfg.stages.stats);
+        // bad specs surface as errors
+        let bad = Args::parse(&argv(&["--stage-convert", "f64"])).unwrap();
+        let mut cfg = crate::config::WorkflowConfig::default();
+        assert!(apply_overrides(&mut cfg, &bad).is_err());
+        let bad = Args::parse(&argv(&["--stage-roi", "60"])).unwrap();
+        let mut cfg = crate::config::WorkflowConfig::default();
+        assert!(apply_overrides(&mut cfg, &bad).is_err());
     }
 
     #[test]

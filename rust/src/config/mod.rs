@@ -11,7 +11,9 @@ pub use toml::{parse, ConfigMap, TomlValue};
 
 use anyhow::{Context, Result};
 
+use crate::broker::StagesConfig;
 use crate::endpoint::FsyncPolicy;
+use crate::record::{CodecKind, Encoding};
 
 /// How the simulation emits its per-interval output (paper §4.2 modes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -81,6 +83,12 @@ pub struct WorkflowConfig {
     pub batch_max_bytes: usize,
     /// Writer linger before shipping a non-full batch (ms; 0 = none).
     pub linger_ms: u64,
+
+    // --- data-reduction stages (ISSUE 5) ---
+    /// Broker-side stage pipeline: filter (decimation / rank subset /
+    /// ROI) → aggregate (block-mean + stats) → convert (f16 / qdelta)
+    /// → compress (shuffle-lz).  Defaults to a passthrough.
+    pub stages: StagesConfig,
 
     // --- cloud side ---
     /// Number of endpoints (None → ranks / group_size).
@@ -161,6 +169,7 @@ impl Default for WorkflowConfig {
             batch_max_records: 64,
             batch_max_bytes: 4 << 20,
             linger_ms: 0,
+            stages: StagesConfig::default(),
             endpoints: None,
             store_shards: 8,
             executors: 16,
@@ -264,6 +273,30 @@ impl WorkflowConfig {
         if let Some(v) = map.get_u64("broker.linger_ms")? {
             cfg.linger_ms = v;
         }
+        if let Some(v) = map.get_u64("stages.decimate")? {
+            cfg.stages.decimate = v;
+        }
+        if let Some(v) = map.get_u64("stages.rank_stride")? {
+            cfg.stages.rank_stride = v as u32;
+        }
+        if let Some(v) = map.get_str("stages.roi")? {
+            cfg.stages.roi = Some(StagesConfig::parse_roi(&v)?);
+        }
+        if let Some(v) = map.get_usize("stages.aggregate")? {
+            cfg.stages.aggregate = v;
+        }
+        if let Some(v) = map.get_bool("stages.stats")? {
+            cfg.stages.stats = v;
+        }
+        if let Some(v) = map.get_str("stages.convert")? {
+            cfg.stages.convert = Encoding::parse(&v)?;
+        }
+        if let Some(v) = map.get_f64("stages.qdelta_step")? {
+            cfg.stages.qdelta_step = v as f32;
+        }
+        if let Some(v) = map.get_str("stages.codec")? {
+            cfg.stages.codec = CodecKind::parse(&v)?;
+        }
         if let Some(v) = map.get_usize("cloud.endpoints")? {
             cfg.endpoints = Some(v);
         }
@@ -348,6 +381,7 @@ impl WorkflowConfig {
             self.wal_dir.is_empty() || self.wal_segment_bytes > 0,
             "endpoint.wal_segment_bytes must be > 0"
         );
+        self.stages.validate()?;
         self.rows_per_rank()?;
         Ok(())
     }
@@ -435,6 +469,35 @@ mod tests {
             0
         );
         assert!(WorkflowConfig::from_toml("[cloud]\ndmd_shards = 0\n").is_err());
+    }
+
+    #[test]
+    fn stage_knobs_parse_and_validate() {
+        let c = WorkflowConfig::default();
+        assert!(c.stages.is_passthrough(), "stages off by default");
+        let c = WorkflowConfig::from_toml(
+            "[stages]\ndecimate = 2\nrank_stride = 2\nroi = \"8:120\"\n\
+             aggregate = 4\nstats = true\nconvert = \"qdelta\"\n\
+             qdelta_step = 0.0001\ncodec = \"shuffle-lz\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.stages.decimate, 2);
+        assert_eq!(c.stages.rank_stride, 2);
+        assert_eq!(c.stages.roi, Some((8, 120)));
+        assert_eq!(c.stages.aggregate, 4);
+        assert!(c.stages.stats);
+        assert_eq!(c.stages.convert, Encoding::QDelta);
+        assert!((c.stages.qdelta_step - 1e-4).abs() < 1e-10);
+        assert_eq!(c.stages.codec, CodecKind::ShuffleLz);
+        // invalid knobs are rejected through the shared validation
+        assert!(WorkflowConfig::from_toml("[stages]\naggregate = 0\n").is_err());
+        assert!(WorkflowConfig::from_toml("[stages]\nroi = \"9\"\n").is_err());
+        assert!(WorkflowConfig::from_toml("[stages]\nconvert = \"f64\"\n").is_err());
+        assert!(WorkflowConfig::from_toml("[stages]\ncodec = \"zstd\"\n").is_err());
+        assert!(WorkflowConfig::from_toml(
+            "[stages]\nconvert = \"qdelta\"\nqdelta_step = 0.0\n"
+        )
+        .is_err());
     }
 
     #[test]

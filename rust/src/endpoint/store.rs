@@ -1473,6 +1473,51 @@ mod tests {
         )
     }
 
+    /// ISSUE 5: staged (`EBR2`) payloads are opaque bytes to the store
+    /// and the WAL — logged, replayed and served back byte-identically,
+    /// so the stage pipeline's wire reduction carries through to disk.
+    #[test]
+    fn staged_payloads_pass_through_store_and_wal_opaquely() {
+        use crate::broker::{StagePipeline, StagesConfig};
+        use crate::record::{CodecKind, StreamRecord};
+
+        let (cfg, dir) = durable_cfg("staged");
+        let pipeline = StagePipeline::new(
+            StagesConfig {
+                aggregate: 2,
+                codec: CodecKind::ShuffleLz,
+                ..Default::default()
+            },
+            std::sync::Arc::new(crate::metrics::StageMetrics::new()),
+        )
+        .unwrap();
+        let data: Vec<f32> = (0..128).map(|i| (i as f32 * 0.05).sin()).collect();
+        let rec = pipeline
+            .apply("u", 0, 9, 0, 0, &[128], &data)
+            .unwrap()
+            .unwrap();
+        let frame = rec.encode();
+        {
+            let store = Store::open(cfg.clone()).unwrap();
+            store
+                .xadd("u/0", None, vec![(b"r".to_vec(), frame.clone())])
+                .unwrap();
+        }
+        // crash-restart: the replayed frame must be byte-identical
+        let store = Store::open(cfg).unwrap();
+        let entries = store.read_after("u/0", EntryId::ZERO, 0);
+        assert_eq!(entries.len(), 1);
+        assert_eq!(
+            entries[0].fields[0].1, frame,
+            "WAL replay must not touch staged bytes"
+        );
+        let got = StreamRecord::decode(&entries[0].fields[0].1).unwrap();
+        assert_eq!(got.shape, vec![64]);
+        assert_eq!(got.step, 9);
+        assert!(got.meta.unwrap().provenance.contains("agg:2"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     /// The tentpole invariant: a restart restores entries AND the
     /// fencing state (epoch fences, step high-water marks, id clocks),
     /// so a restarted endpoint rejoins the PR 3 protocol without

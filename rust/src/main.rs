@@ -140,6 +140,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
                 batch_max_records: cfg.batch_max_records,
                 batch_max_bytes: cfg.batch_max_bytes,
                 linger_ms: cfg.linger_ms,
+                stages: cfg.stages.clone(),
                 ..BrokerConfig::new(endpoints)
             },
             cfg.ranks,

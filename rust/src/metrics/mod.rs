@@ -275,6 +275,52 @@ impl QosBoard {
     }
 }
 
+/// Cost and reduction accounting for the broker-side data-reduction
+/// stage pipeline (`crate::broker::stages`, ISSUE 5).  Writers record
+/// into this concurrently; everything is atomics underneath.
+#[derive(Default)]
+pub struct StageMetrics {
+    /// Records entering the pipeline (after the legacy per-field
+    /// `Filter`, before any stage).  Note the boundary: reductions the
+    /// per-field `broker::Filter` makes are upstream of this
+    /// accounting — `bytes_in` measures what enters the *stage*
+    /// pipeline, so `reduction_factor` reports the stages' own work.
+    pub records_in: Counter,
+    /// Records the filter stage decided never ship (step decimation /
+    /// rank subsetting) — intentional reduction, distinct from the
+    /// queue-pressure `dropped` counter.
+    pub records_filtered: Counter,
+    /// Raw f32 payload bytes entering the pipeline.
+    pub bytes_in: Counter,
+    /// Encoded payload bytes leaving it — what the wire, the endpoint
+    /// store and the WAL actually carry.
+    pub bytes_out: Counter,
+    /// Per-record filter stage cost (µs).
+    pub filter_us: Histogram,
+    /// Per-record aggregate stage cost (µs).
+    pub aggregate_us: Histogram,
+    /// Per-record format-conversion stage cost (µs).
+    pub convert_us: Histogram,
+    /// Per-record compression stage cost (µs).
+    pub compress_us: Histogram,
+}
+
+impl StageMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Achieved payload reduction factor so far (≥ 1.0 once data has
+    /// flowed; 1.0 before).
+    pub fn reduction_factor(&self) -> f64 {
+        let out = self.bytes_out.get();
+        if out == 0 {
+            return 1.0;
+        }
+        self.bytes_in.get() as f64 / out as f64
+    }
+}
+
 /// Bytes/records-per-second meter over a wall-clock window.
 pub struct Throughput {
     start: Instant,
@@ -347,6 +393,9 @@ pub struct WorkflowMetrics {
     /// Cloud-side cost that must stay under the snapshot inter-arrival
     /// time for the §4.3 QoS story.
     pub analysis_us: Arc<Histogram>,
+    /// Data-reduction stage pipeline accounting (bytes in/out, per-
+    /// stage µs) — the ISSUE 5 wire/WAL-bytes lever.
+    pub stages: Arc<StageMetrics>,
     /// window slides served by the O(d·m) incremental Gram update.
     pub gram_incremental: Arc<Counter>,
     /// full O(d·m²) Gram recomputes (window fill, refresh cadence, or
@@ -390,6 +439,7 @@ impl WorkflowMetrics {
             batch_records: Arc::new(Histogram::new()),
             flush_us: Arc::new(Histogram::new()),
             analysis_us: Arc::new(Histogram::new()),
+            stages: Arc::new(StageMetrics::new()),
             gram_incremental: Arc::new(Counter::new()),
             gram_full: Arc::new(Counter::new()),
             qos: Arc::new(QosBoard::new()),

@@ -1,0 +1,399 @@
+//! Lossy format conversion for staged stream records (ISSUE 5).
+//!
+//! Two encodings below raw little-endian f32, both with a *measured*
+//! error bound carried in the frame header ([`super::FrameMeta`]) so
+//! the Cloud side knows exactly how far a decoded snapshot can sit
+//! from the original:
+//!
+//! * **f16** ([`encode_f16`]/[`decode_f16`]) — IEEE 754 binary16 with
+//!   round-to-nearest-even, implemented by bit manipulation (no `half`
+//!   crate in the offline set).  Relative precision ~2⁻¹¹; the encoder
+//!   reports the actual max absolute error it introduced.
+//! * **quantized delta** ([`encode_qdelta`]/[`decode_qdelta`]) —
+//!   uniform quantization to multiples of a configured step (absolute
+//!   error ≤ step/2), then first-order delta + zigzag + LEB128-style
+//!   varint.  Smooth fields quantize to tiny deltas that fit one byte,
+//!   and the downstream LZ pass collapses the rest.
+//!
+//! Both decoders are fully bounds-checked: corrupt input returns an
+//! error, never a panic (the record CRC normally rejects it first).
+
+use anyhow::{ensure, Result};
+
+/// Wire tag of the element encoding of a staged frame's payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Encoding {
+    /// Raw little-endian f32 (lossless).
+    #[default]
+    F32 = 0,
+    /// IEEE 754 binary16.
+    F16 = 1,
+    /// Quantized first-order delta with varint packing.
+    QDelta = 2,
+}
+
+impl Encoding {
+    pub fn from_u8(v: u8) -> Result<Self> {
+        match v {
+            0 => Ok(Encoding::F32),
+            1 => Ok(Encoding::F16),
+            2 => Ok(Encoding::QDelta),
+            other => anyhow::bail!("unknown encoding tag {other}"),
+        }
+    }
+
+    /// Parse the config/CLI spelling (`f32` | `f16` | `qdelta`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Encoding::F32),
+            "f16" => Ok(Encoding::F16),
+            "qdelta" => Ok(Encoding::QDelta),
+            other => anyhow::bail!("unknown encoding '{other}' (f32|f16|qdelta)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Encoding::F32 => "f32",
+            Encoding::F16 => "f16",
+            Encoding::QDelta => "qdelta",
+        }
+    }
+
+    /// Width in bytes of one encoded element, for the byte-shuffle
+    /// pass; 1 (identity shuffle) for variable-length encodings.
+    pub fn elem_size(self) -> usize {
+        match self {
+            Encoding::F32 => 4,
+            Encoding::F16 => 2,
+            Encoding::QDelta => 1,
+        }
+    }
+
+    /// Whether decode(encode(x)) == x bit-exactly.
+    pub fn is_lossless(self) -> bool {
+        self == Encoding::F32
+    }
+}
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN (keep NaN signalling as a quiet payload bit)
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow → ±inf
+    }
+    if unbiased >= -14 {
+        // normal half: 10 mantissa bits, round on the 13 dropped
+        let mut h = (((unbiased + 15) as u32) << 10) | (man >> 13);
+        let round = man & 0x1FFF;
+        if round > 0x1000 || (round == 0x1000 && h & 1 == 1) {
+            h += 1; // may carry into the exponent — that is correct
+        }
+        return sign | h as u16;
+    }
+    if unbiased < -25 {
+        return sign; // underflow → ±0
+    }
+    // subnormal half: shift the (implicit-bit-extended) mantissa down
+    let man = man | 0x0080_0000;
+    let shift = (13 + (-14 - unbiased)) as u32;
+    let mut h = man >> shift;
+    let rem = man & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rem > half || (rem == half && h & 1 == 1) {
+        h += 1;
+    }
+    sign | h as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 31 {
+        sign | 0x7F80_0000 | (man << 13) // inf / nan
+    } else if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal: value = man × 2⁻²⁴; normalize for f32
+            let k = 31 - man.leading_zeros(); // man ≤ 0x3FF → k ∈ 0..=9
+            let r = man & !(1u32 << k);
+            let exp32 = (k as i32 - 24 + 127) as u32;
+            sign | (exp32 << 23) | (r << (23 - k))
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Encode to packed little-endian f16; returns the bytes and the
+/// actual max absolute error introduced.  A *finite* input outside the
+/// f16 range (|v| > 65504) would saturate to ±inf with an unbounded
+/// error, which would make the frame's stated bound a lie — that is
+/// rejected as an error, exactly like the qdelta quantizer-range
+/// check.  Non-finite inputs (NaN/±inf) pass through faithfully and
+/// do not contribute to the bound (the analysis side already skips
+/// non-finite windows).
+pub fn encode_f16(data: &[f32]) -> Result<(Vec<u8>, f32)> {
+    let mut out = Vec::with_capacity(data.len() * 2);
+    let mut max_err = 0f32;
+    for &v in data {
+        let h = f32_to_f16_bits(v);
+        let back = f16_bits_to_f32(h);
+        ensure!(
+            back.is_finite() || !v.is_finite(),
+            "f16: value {v} overflows the f16 range (max 65504)"
+        );
+        out.extend_from_slice(&h.to_le_bytes());
+        let e = (back - v).abs();
+        if e.is_finite() && e > max_err {
+            max_err = e;
+        }
+    }
+    Ok((out, max_err))
+}
+
+/// Reverse [`encode_f16`]; `n` is the element count from the frame
+/// shape.
+pub fn decode_f16(bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+    ensure!(
+        bytes.len() == n * 2,
+        "f16 payload {} bytes, expected {} for {n} elements",
+        bytes.len(),
+        n * 2
+    );
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect())
+}
+
+#[inline]
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Quantize to multiples of `step` (absolute error ≤ step/2), then
+/// delta + zigzag + varint encode.  Returns the bytes and the actual
+/// max absolute error.  Fails on non-finite values and on values too
+/// large for the quantizer range (the pipeline surfaces that as a
+/// write error rather than silently corrupting the field).
+pub fn encode_qdelta(data: &[f32], step: f32) -> Result<(Vec<u8>, f32)> {
+    ensure!(
+        step > 0.0 && step.is_finite(),
+        "qdelta step must be a positive finite number, got {step}"
+    );
+    let inv = 1.0 / step as f64;
+    let mut out = Vec::with_capacity(data.len());
+    let mut prev: i64 = 0;
+    let mut max_err = 0f32;
+    for &v in data {
+        ensure!(v.is_finite(), "qdelta: non-finite value {v}");
+        let q = (v as f64 * inv).round();
+        ensure!(
+            q.abs() <= i32::MAX as f64,
+            "qdelta: value {v} overflows the quantizer (step {step})"
+        );
+        let q = q as i64;
+        let e = ((q as f64 * step as f64) as f32 - v).abs();
+        if e > max_err {
+            max_err = e;
+        }
+        write_varint(&mut out, zigzag(q - prev));
+        prev = q;
+    }
+    Ok((out, max_err))
+}
+
+/// Reverse [`encode_qdelta`]; `n` is the element count from the frame
+/// shape and `step` the quantization step from the frame header.
+pub fn decode_qdelta(bytes: &[u8], n: usize, step: f32) -> Result<Vec<f32>> {
+    ensure!(
+        step > 0.0 && step.is_finite(),
+        "qdelta step must be a positive finite number, got {step}"
+    );
+    let mut out = Vec::with_capacity(n);
+    let mut pos = 0usize;
+    let mut prev: i64 = 0;
+    for _ in 0..n {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            ensure!(pos < bytes.len(), "qdelta: truncated varint");
+            ensure!(shift < 64, "qdelta: varint overflow");
+            let b = bytes[pos];
+            pos += 1;
+            v |= ((b & 0x7F) as u64) << shift;
+            shift += 7;
+            if b & 0x80 == 0 {
+                break;
+            }
+        }
+        prev = prev.wrapping_add(unzigzag(v));
+        out.push((prev as f64 * step as f64) as f32);
+    }
+    ensure!(
+        pos == bytes.len(),
+        "qdelta: {} trailing bytes after {n} elements",
+        bytes.len() - pos
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn f16_special_values_roundtrip() {
+        for (x, h) in [
+            (0.0f32, 0x0000u16),
+            (-0.0, 0x8000),
+            (1.0, 0x3C00),
+            (-2.0, 0xC000),
+            (65504.0, 0x7BFF),        // max finite half
+            (f32::INFINITY, 0x7C00),
+            (f32::NEG_INFINITY, 0xFC00),
+            (6.103_515_6e-5, 0x0400), // smallest normal half
+            (5.960_464_5e-8, 0x0001), // smallest subnormal half
+        ] {
+            assert_eq!(f32_to_f16_bits(x), h, "encoding {x}");
+            if x.is_finite() {
+                assert_eq!(f16_bits_to_f32(h), x, "decoding 0x{h:04x}");
+            }
+        }
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // overflow beyond half range → inf
+        assert_eq!(f32_to_f16_bits(1e9), 0x7C00);
+        assert_eq!(f32_to_f16_bits(-1e9), 0xFC00);
+        // underflow below subnormal range → signed zero
+        assert_eq!(f32_to_f16_bits(1e-9), 0x0000);
+        assert_eq!(f32_to_f16_bits(-1e-9), 0x8000);
+    }
+
+    #[test]
+    fn f16_error_is_bounded_and_reported() {
+        let mut rng = Rng::new(7);
+        let data: Vec<f32> = (0..2000)
+            .map(|_| (rng.next_f64() * 20.0 - 10.0) as f32)
+            .collect();
+        let (bytes, max_err) = encode_f16(&data).unwrap();
+        let back = decode_f16(&bytes, data.len()).unwrap();
+        let mut worst = 0f32;
+        for (a, b) in back.iter().zip(&data) {
+            let e = (a - b).abs();
+            // binary16 relative precision: ≤ 2⁻¹¹ of the magnitude
+            assert!(e <= b.abs() * (1.0 / 2048.0) + 1e-7, "{b} → {a}");
+            if e > worst {
+                worst = e;
+            }
+        }
+        assert!((worst - max_err).abs() < 1e-12, "reported bound {max_err} vs {worst}");
+    }
+
+    #[test]
+    fn f16_subnormal_halves_roundtrip_exactly() {
+        // every subnormal half value decodes and re-encodes to itself
+        for h in 1u16..0x0400 {
+            let x = f16_bits_to_f32(h);
+            assert_eq!(f32_to_f16_bits(x), h, "subnormal 0x{h:04x}");
+        }
+    }
+
+    #[test]
+    fn qdelta_bound_and_roundtrip() {
+        let mut rng = Rng::new(99);
+        let step = 1e-3f32;
+        let data: Vec<f32> = (0..3000)
+            .map(|_| (rng.next_f64() * 2.0 - 1.0) as f32)
+            .collect();
+        let (bytes, max_err) = encode_qdelta(&data, step).unwrap();
+        assert!(max_err <= step / 2.0 + 1e-9, "err {max_err} over step/2");
+        let back = decode_qdelta(&bytes, data.len(), step).unwrap();
+        assert_eq!(back.len(), data.len());
+        for (a, b) in back.iter().zip(&data) {
+            assert!((a - b).abs() <= max_err + 1e-9, "{b} → {a}");
+        }
+        // smooth data packs into ~1 byte/elem
+        let smooth: Vec<f32> = (0..3000).map(|i| (i as f32 * 1e-4).sin()).collect();
+        let (bytes, _) = encode_qdelta(&smooth, step).unwrap();
+        assert!(bytes.len() <= smooth.len() + 8, "smooth deltas should be 1 byte each");
+    }
+
+    #[test]
+    fn f16_rejects_finite_overflow_but_passes_nonfinite() {
+        // a finite value beyond f16 range would saturate to inf with an
+        // unbounded error — rejected, so the stated bound stays honest
+        assert!(encode_f16(&[1.0, 70000.0]).is_err());
+        assert!(encode_f16(&[-1e9]).is_err());
+        // genuine non-finite data passes through faithfully
+        let (bytes, _) = encode_f16(&[f32::NAN, f32::INFINITY, 1.0]).unwrap();
+        let back = decode_f16(&bytes, 3).unwrap();
+        assert!(back[0].is_nan());
+        assert_eq!(back[1], f32::INFINITY);
+        assert_eq!(back[2], 1.0);
+    }
+
+    #[test]
+    fn qdelta_rejects_bad_input() {
+        assert!(encode_qdelta(&[1.0, f32::NAN], 1e-3).is_err());
+        assert!(encode_qdelta(&[f32::INFINITY], 1e-3).is_err());
+        assert!(encode_qdelta(&[1.0], 0.0).is_err());
+        assert!(encode_qdelta(&[1e30], 1e-6).is_err(), "quantizer overflow");
+        // decode: truncation and trailing garbage fail cleanly
+        let (bytes, _) = encode_qdelta(&[0.5, -0.25, 0.125], 1e-3).unwrap();
+        assert!(decode_qdelta(&bytes[..bytes.len() - 1], 3, 1e-3).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(decode_qdelta(&extra, 3, 1e-3).is_err());
+        // every-byte-flip: error or wrong data, never a panic
+        for i in 0..bytes.len() {
+            let mut fuzzed = bytes.clone();
+            fuzzed[i] ^= 0xFF;
+            let _ = decode_qdelta(&fuzzed, 3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn encoding_tags_roundtrip() {
+        for e in [Encoding::F32, Encoding::F16, Encoding::QDelta] {
+            assert_eq!(Encoding::from_u8(e as u8).unwrap(), e);
+            assert_eq!(Encoding::parse(e.name()).unwrap(), e);
+        }
+        assert!(Encoding::from_u8(7).is_err());
+        assert!(Encoding::parse("f64").is_err());
+        assert_eq!(Encoding::F32.elem_size(), 4);
+        assert_eq!(Encoding::F16.elem_size(), 2);
+        assert_eq!(Encoding::QDelta.elem_size(), 1);
+        assert!(Encoding::F32.is_lossless() && !Encoding::F16.is_lossless());
+    }
+}

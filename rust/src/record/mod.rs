@@ -21,9 +21,45 @@
 //! payload_len u32, payload bytes
 //! crc32    u32   over everything above
 //! ```
+//!
+//! # Staged frames (ISSUE 5)
+//!
+//! Records that passed through the broker-side data-reduction pipeline
+//! (`crate::broker::stages`) are framed with a second magic, `"EBR2"`,
+//! and a self-describing [`FrameMeta`] header between the field name
+//! and the payload:
+//!
+//! ```text
+//! magic    u32   0x4542_5232  ("EBR2")
+//! ...      (step, gen_us, rank, dtype, dims, name as in EBR1;
+//!           dtype/dims describe the DECODED data)
+//! enc      u8    element encoding (0 f32 | 1 f16 | 2 qdelta)
+//! codec    u8    payload codec   (0 none | 1 shuffle-lz)
+//! enc_param   f32  encoding parameter (qdelta quantization step)
+//! err_bound   f32  measured max abs error of the encoding (0 lossless)
+//! raw_len  u32   encoded-but-uncompressed payload bytes (codec input)
+//! flags    u8    bit 0: sidecar stats present
+//! stats    f32 × 3   min, max, mean (iff flag bit 0)
+//! prov_len u16,  provenance bytes (e.g. "agg:2|f16|shuffle-lz")
+//! payload_len u32, payload bytes (codec output)
+//! crc32    u32   over everything above
+//! ```
+//!
+//! [`StreamRecord::decode`] dispatches on the magic and *reverses* the
+//! conversion and compression, so every consumer downstream of a
+//! decode — endpoint readers, `crate::streamproc`, `crate::analysis` —
+//! sees plain f32 payloads whether or not the producer staged them
+//! (peers that never enable stages keep emitting byte-identical EBR1
+//! frames).  Endpoints and the WAL store the encoded bytes opaquely,
+//! so the wire reduction carries through to disk.
 
 mod crc32;
 
+pub mod codec;
+pub mod convert;
+
+pub use codec::{codec_for, Codec, CodecKind};
+pub use convert::Encoding;
 pub use crc32::crc32;
 
 use std::sync::Arc;
@@ -52,6 +88,41 @@ impl Dtype {
 }
 
 const MAGIC: u32 = 0x4542_5231;
+const MAGIC2: u32 = 0x4542_5232;
+
+/// Per-field sidecar statistics computed by the aggregate stage
+/// (carried in [`FrameMeta`] so dashboards and triage can read them
+/// without decoding the payload).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FieldStats {
+    pub min: f32,
+    pub max: f32,
+    pub mean: f32,
+}
+
+/// Self-describing header of a staged (`"EBR2"`) frame: how the
+/// payload was encoded and compressed, with enough information to
+/// reverse both, plus stage provenance and sidecar stats.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FrameMeta {
+    /// Element encoding of the payload (before compression).
+    pub encoding: Encoding,
+    /// Compression applied after the encoding.
+    pub codec: CodecKind,
+    /// Encoding parameter: the quantization step for
+    /// [`Encoding::QDelta`], 0 otherwise.
+    pub enc_param: f32,
+    /// Measured max absolute error the encoding introduced
+    /// (0 for lossless encodings).
+    pub err_bound: f32,
+    /// Length in bytes of the encoded-but-uncompressed payload — what
+    /// the codec must decompress back to.
+    pub raw_len: u32,
+    /// Sidecar min/max/mean of the (post-aggregate) field data.
+    pub stats: Option<FieldStats>,
+    /// Human-readable stage provenance, e.g. `"roi:8:120|agg:2|f16|shuffle-lz"`.
+    pub provenance: String,
+}
 
 /// One field snapshot travelling HPC → Cloud.
 #[derive(Clone, Debug, PartialEq)]
@@ -68,8 +139,13 @@ pub struct StreamRecord {
     pub dtype: Dtype,
     /// Array shape (row-major payload).
     pub shape: Vec<u32>,
-    /// Raw little-endian element bytes; `Arc` so fan-out paths don't copy.
+    /// Raw little-endian element bytes; `Arc` so fan-out paths don't
+    /// copy.  For a *staged* record on the producer side this holds the
+    /// encoded+compressed bytes ([`FrameMeta::raw_len`] describes
+    /// them); after [`StreamRecord::decode`] it always holds raw f32.
     pub payload: Arc<Vec<u8>>,
+    /// Stage-pipeline header (`None` = classic raw EBR1 frame).
+    pub meta: Option<FrameMeta>,
 }
 
 impl StreamRecord {
@@ -98,7 +174,33 @@ impl StreamRecord {
             dtype: Dtype::F32,
             shape: shape.to_vec(),
             payload: Arc::new(payload),
+            meta: None,
         })
+    }
+
+    /// Build a staged record from an already encoded+compressed
+    /// payload (the stage pipeline's output).  `shape` is the decoded
+    /// shape after filtering/aggregation; `meta` describes how to get
+    /// the f32 data back.
+    pub fn from_staged(
+        field: &str,
+        rank: u32,
+        step: u64,
+        gen_micros: u64,
+        shape: &[u32],
+        payload: Vec<u8>,
+        meta: FrameMeta,
+    ) -> Self {
+        StreamRecord {
+            field: field.to_string(),
+            rank,
+            step,
+            gen_micros,
+            dtype: Dtype::F32,
+            shape: shape.to_vec(),
+            payload: Arc::new(payload),
+            meta: Some(meta),
+        }
     }
 
     /// Decode the payload as f32 values.
@@ -129,15 +231,33 @@ impl StreamRecord {
 
     /// Serialized size of the encoded record (for metrics/backpressure).
     pub fn encoded_len(&self) -> usize {
-        4 + 8 + 8 + 4 + 1 + 1 + 4 * self.shape.len() + 2 + self.field.len() + 4
+        let base = 4 + 8 + 8 + 4 + 1 + 1 + 4 * self.shape.len() + 2 + self.field.len() + 4
             + self.payload.len()
-            + 4
+            + 4;
+        match &self.meta {
+            None => base,
+            // enc + codec + enc_param + err_bound + raw_len + flags
+            // + optional stats + prov_len + provenance
+            Some(m) => {
+                base + 1
+                    + 1
+                    + 4
+                    + 4
+                    + 4
+                    + 1
+                    + if m.stats.is_some() { 12 } else { 0 }
+                    + 2
+                    + m.provenance.len()
+            }
+        }
     }
 
-    /// Encode to the binary wire format described in the module docs.
+    /// Encode to the binary wire format described in the module docs
+    /// (`EBR1` for raw records, `EBR2` when a stage header is present).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.encoded_len());
-        out.extend_from_slice(&MAGIC.to_le_bytes());
+        let magic = if self.meta.is_some() { MAGIC2 } else { MAGIC };
+        out.extend_from_slice(&magic.to_le_bytes());
         out.extend_from_slice(&self.step.to_le_bytes());
         out.extend_from_slice(&self.gen_micros.to_le_bytes());
         out.extend_from_slice(&self.rank.to_le_bytes());
@@ -148,6 +268,21 @@ impl StreamRecord {
         }
         out.extend_from_slice(&(self.field.len() as u16).to_le_bytes());
         out.extend_from_slice(self.field.as_bytes());
+        if let Some(m) = &self.meta {
+            out.push(m.encoding as u8);
+            out.push(m.codec as u8);
+            out.extend_from_slice(&m.enc_param.to_le_bytes());
+            out.extend_from_slice(&m.err_bound.to_le_bytes());
+            out.extend_from_slice(&m.raw_len.to_le_bytes());
+            out.push(u8::from(m.stats.is_some()));
+            if let Some(s) = &m.stats {
+                out.extend_from_slice(&s.min.to_le_bytes());
+                out.extend_from_slice(&s.max.to_le_bytes());
+                out.extend_from_slice(&s.mean.to_le_bytes());
+            }
+            out.extend_from_slice(&(m.provenance.len() as u16).to_le_bytes());
+            out.extend_from_slice(m.provenance.as_bytes());
+        }
         out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
         out.extend_from_slice(&self.payload);
         let crc = crc32(&out);
@@ -156,12 +291,16 @@ impl StreamRecord {
     }
 
     /// Decode from the binary wire format (validates magic + CRC).
+    /// Staged (`EBR2`) frames are decompressed and converted back, so
+    /// the returned record always carries a raw f32 payload; the stage
+    /// header survives in [`StreamRecord::meta`].
     pub fn decode(buf: &[u8]) -> Result<Self> {
         let mut r = Reader { buf, pos: 0 };
         let magic = r.u32()?;
-        if magic != MAGIC {
+        if magic != MAGIC && magic != MAGIC2 {
             bail!("bad record magic 0x{magic:08x}");
         }
+        let staged = magic == MAGIC2;
         let step = r.u64()?;
         let gen_micros = r.u64()?;
         let rank = r.u32()?;
@@ -177,6 +316,36 @@ impl StreamRecord {
         let name_len = r.u16()? as usize;
         let name = r.bytes(name_len)?;
         let field = String::from_utf8(name.to_vec()).context("field name not UTF-8")?;
+        let meta = if staged {
+            let encoding = Encoding::from_u8(r.u8()?)?;
+            let codec = CodecKind::from_u8(r.u8()?)?;
+            let enc_param = f32::from_le_bytes(r.bytes(4)?.try_into().unwrap());
+            let err_bound = f32::from_le_bytes(r.bytes(4)?.try_into().unwrap());
+            let raw_len = r.u32()?;
+            let flags = r.u8()?;
+            let stats = if flags & 1 != 0 {
+                let min = f32::from_le_bytes(r.bytes(4)?.try_into().unwrap());
+                let max = f32::from_le_bytes(r.bytes(4)?.try_into().unwrap());
+                let mean = f32::from_le_bytes(r.bytes(4)?.try_into().unwrap());
+                Some(FieldStats { min, max, mean })
+            } else {
+                None
+            };
+            let prov_len = r.u16()? as usize;
+            let provenance = String::from_utf8(r.bytes(prov_len)?.to_vec())
+                .context("provenance not UTF-8")?;
+            Some(FrameMeta {
+                encoding,
+                codec,
+                enc_param,
+                err_bound,
+                raw_len,
+                stats,
+                provenance,
+            })
+        } else {
+            None
+        };
         let payload_len = r.u32()? as usize;
         let payload = r.bytes(payload_len)?.to_vec();
         let crc_pos = r.pos;
@@ -186,13 +355,76 @@ impl StreamRecord {
             bail!("record CRC mismatch: got 0x{crc:08x} want 0x{want:08x}");
         }
         let n: usize = shape.iter().map(|&d| d as usize).product();
-        if n * dtype.size() != payload.len() {
-            bail!(
-                "shape {shape:?} implies {} bytes but payload has {}",
-                n * dtype.size(),
-                payload.len()
-            );
-        }
+        let (payload, meta) = match meta {
+            None => {
+                if n * dtype.size() != payload.len() {
+                    bail!(
+                        "shape {shape:?} implies {} bytes but payload has {}",
+                        n * dtype.size(),
+                        payload.len()
+                    );
+                }
+                (payload, None)
+            }
+            Some(m) => {
+                // Validate the claimed pre-codec length against what the
+                // shape allows BEFORE decompressing — a crafted frame
+                // must not be able to demand a huge allocation from a
+                // few bytes.  Fixed-width encodings are exact; qdelta
+                // varints are at most 10 bytes per element.
+                let raw_len = m.raw_len as usize;
+                let max_raw = match m.encoding {
+                    Encoding::F32 | Encoding::F16 => n.saturating_mul(m.encoding.elem_size()),
+                    Encoding::QDelta => n.saturating_mul(10),
+                };
+                if m.encoding != Encoding::QDelta && raw_len != max_raw {
+                    bail!(
+                        "staged frame claims {raw_len} encoded bytes, shape {shape:?} \
+                         implies {max_raw}"
+                    );
+                }
+                if raw_len > max_raw {
+                    bail!(
+                        "staged frame claims {raw_len} encoded bytes, more than the \
+                         {max_raw} the shape {shape:?} allows"
+                    );
+                }
+                // Reverse compression, then the element encoding — the
+                // consumer sees raw f32 regardless of what shipped.
+                let encoded = codec_for(m.codec).decompress(
+                    &payload,
+                    raw_len,
+                    m.encoding.elem_size(),
+                )?;
+                let values: Vec<f32> = match m.encoding {
+                    Encoding::F32 => encoded
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                    Encoding::F16 => convert::decode_f16(&encoded, n)?,
+                    Encoding::QDelta => convert::decode_qdelta(&encoded, n, m.enc_param)?,
+                };
+                let mut raw = Vec::with_capacity(values.len() * 4);
+                for v in &values {
+                    raw.extend_from_slice(&v.to_le_bytes());
+                }
+                // Rewrite the header to describe the payload the record
+                // now actually holds (raw uncompressed f32), keeping the
+                // provenance, error bound and sidecar stats.  Re-encoding
+                // a decoded record therefore produces a valid frame
+                // instead of one whose header lies about compression.
+                let decoded_meta = FrameMeta {
+                    encoding: Encoding::F32,
+                    codec: CodecKind::None,
+                    enc_param: 0.0,
+                    err_bound: m.err_bound,
+                    raw_len: raw.len() as u32,
+                    stats: m.stats,
+                    provenance: m.provenance,
+                };
+                (raw, Some(decoded_meta))
+            }
+        };
         Ok(StreamRecord {
             field,
             rank,
@@ -201,6 +433,7 @@ impl StreamRecord {
             dtype,
             shape,
             payload: Arc::new(payload),
+            meta,
         })
     }
 }
@@ -349,6 +582,106 @@ mod tests {
                 buf.len()
             );
         }
+    }
+
+    /// Build a staged (EBR2) sample: f16 + shuffle-lz over a smooth
+    /// ramp, with sidecar stats and provenance.
+    fn staged_sample() -> (StreamRecord, Vec<f32>) {
+        let data: Vec<f32> = (0..64).map(|i| (i as f32) * 0.125 - 4.0).collect();
+        let (encoded, err) = convert::encode_f16(&data).unwrap();
+        let raw_len = encoded.len() as u32;
+        let payload = codec_for(CodecKind::ShuffleLz).compress(&encoded, 2);
+        let rec = StreamRecord::from_staged(
+            "velocity",
+            3,
+            120,
+            1_700_000_000_000_000,
+            &[8, 8],
+            payload,
+            FrameMeta {
+                encoding: Encoding::F16,
+                codec: CodecKind::ShuffleLz,
+                enc_param: 0.0,
+                err_bound: err,
+                raw_len,
+                stats: Some(FieldStats { min: -4.0, max: 3.875, mean: -0.0625 }),
+                provenance: "f16|shuffle-lz".into(),
+            },
+        );
+        (rec, data)
+    }
+
+    #[test]
+    fn staged_roundtrip_decodes_to_raw_f32() {
+        let (rec, data) = staged_sample();
+        let buf = rec.encode();
+        assert_eq!(buf.len(), rec.encoded_len());
+        let got = StreamRecord::decode(&buf).unwrap();
+        assert_eq!(got.field, "velocity");
+        assert_eq!(got.step, 120);
+        assert_eq!(got.shape, vec![8, 8]);
+        let meta = got.meta.as_ref().expect("stage header survives decode");
+        // the header is rewritten to describe the *decoded* payload
+        // (raw uncompressed f32); provenance/bound/stats carry through
+        assert_eq!(meta.encoding, Encoding::F32);
+        assert_eq!(meta.codec, CodecKind::None);
+        assert_eq!(meta.raw_len as usize, got.payload.len());
+        assert_eq!(meta.provenance, "f16|shuffle-lz");
+        assert_eq!(meta.stats.unwrap().max, 3.875);
+        let back = got.payload_f32().unwrap();
+        assert_eq!(back.len(), data.len());
+        for (a, b) in back.iter().zip(&data) {
+            assert!((a - b).abs() <= meta.err_bound, "{b} → {a}");
+        }
+        // this ramp is exactly representable in f16: lossless here
+        assert_eq!(meta.err_bound, 0.0);
+        assert_eq!(back, data);
+        // decode∘encode is stable: re-encoding the decoded record
+        // yields a valid frame that decodes to the same record
+        let again = StreamRecord::decode(&got.encode()).unwrap();
+        assert_eq!(again, got);
+    }
+
+    #[test]
+    fn staged_frame_is_smaller_than_raw_on_smooth_data() {
+        let (rec, data) = staged_sample();
+        let raw = StreamRecord::from_f32("velocity", 3, 120, 0, &[8, 8], &data).unwrap();
+        assert!(
+            rec.encoded_len() < raw.encoded_len(),
+            "staged {} vs raw {}",
+            rec.encoded_len(),
+            raw.encoded_len()
+        );
+    }
+
+    /// Exhaustive corruption sweep over the staged format: every byte
+    /// flip must be rejected cleanly (CRC or schema), never panic.
+    #[test]
+    fn staged_every_byte_flip_rejected() {
+        let (rec, _) = staged_sample();
+        let buf = rec.encode();
+        for i in 0..buf.len() {
+            let mut fuzzed = buf.clone();
+            fuzzed[i] ^= 0xFF;
+            assert!(
+                StreamRecord::decode(&fuzzed).is_err(),
+                "flip of staged byte {i} (of {}) went undetected",
+                buf.len()
+            );
+        }
+        for cut in 0..buf.len() {
+            assert!(StreamRecord::decode(&buf[..cut]).is_err(), "{cut}-byte prefix");
+        }
+    }
+
+    /// v1 frames must stay byte-identical with the pre-stages encoder
+    /// (meta-less records never grow the EBR2 header).
+    #[test]
+    fn raw_frames_keep_v1_magic() {
+        let buf = sample().encode();
+        assert_eq!(&buf[0..4], &0x4542_5231u32.to_le_bytes());
+        let (staged, _) = staged_sample();
+        assert_eq!(&staged.encode()[0..4], &0x4542_5232u32.to_le_bytes());
     }
 
     /// Property: single-bit flips anywhere are detected (CRC or schema).

@@ -1,4 +1,5 @@
-//! No-PJRT runtime: the API surface of [`super::pjrt`] without the
+//! No-PJRT runtime: the API surface of `super::pjrt` (compiled out of
+//! the default build — see the `pjrt` cargo feature) without the
 //! `xla` dependency.
 //!
 //! [`ArtifactSet::try_load_default`] always answers `None`, so the sim,

@@ -482,6 +482,49 @@ mod tests {
         reader.ack_consumed().unwrap();
     }
 
+    /// ISSUE 5: staged (`EBR2`) frames decode transparently on the
+    /// poll path — consumers see raw f32 plus the stage header, with
+    /// no reader-side configuration at all.
+    #[test]
+    fn staged_records_decode_transparently() {
+        use crate::broker::{stages, StagePipeline, StagesConfig};
+
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        let pipeline = StagePipeline::new(
+            StagesConfig {
+                aggregate: 2,
+                codec: crate::record::CodecKind::ShuffleLz,
+                ..Default::default()
+            },
+            std::sync::Arc::new(crate::metrics::StageMetrics::new()),
+        )
+        .unwrap();
+        let data: Vec<f32> = (0..64).map(|i| (i as f32 * 0.1).sin()).collect();
+        let rec = pipeline
+            .apply("u", 0, 5, 0, 0, &[64], &data)
+            .unwrap()
+            .unwrap();
+        srv.store()
+            .xadd("u/0", None, vec![(b"r".to_vec(), rec.encode())])
+            .unwrap();
+        let mut reader = StreamReader::connect(
+            srv.addr(),
+            vec!["u/0".into()],
+            0,
+            ConnConfig::default(),
+        )
+        .unwrap();
+        let batches = reader.poll().unwrap();
+        assert_eq!(batches.len(), 1);
+        let got = &batches[0].records[0];
+        assert_eq!(got.step, 5);
+        let meta = got.meta.as_ref().expect("stage header reaches consumers");
+        assert!(meta.provenance.contains("agg:2"), "{}", meta.provenance);
+        assert!(meta.stats.is_some());
+        let (_, oracle) = stages::block_mean_last_axis(&[64], &data, 2).unwrap();
+        assert_eq!(got.payload_f32().unwrap(), oracle);
+    }
+
     #[test]
     fn subscribe_dynamically() {
         let (srv, _keys) = setup_with_data(1);

@@ -282,6 +282,7 @@ pub fn run_cfd_workflow(
         batch_max_records: cfg.batch_max_records,
         batch_max_bytes: cfg.batch_max_bytes,
         linger_ms: cfg.linger_ms,
+        stages: cfg.stages.clone(),
         ..BrokerConfig::new(cloud.endpoint_addrs())
     };
     // Elastic runs share the Cloud side's versioned topology with the
@@ -299,7 +300,7 @@ pub fn run_cfd_workflow(
                 topo.clone(),
                 dialer,
                 metrics.clone(),
-            ));
+            )?);
             let reb = Rebalancer::start(
                 topo,
                 metrics.clone(),
@@ -532,6 +533,37 @@ mod tests {
             .count();
         assert!(segs >= 1, "no wal segments written");
         let _ = std::fs::remove_dir_all(&wal_root);
+    }
+
+    /// ISSUE 5: a lossless staged run (shuffle-lz wire codec) keeps
+    /// the exact analysis coverage of the raw run while shipping fewer
+    /// bytes end to end.
+    #[test]
+    fn staged_workflow_reduces_shipped_bytes() {
+        let mut cfg = tiny_cfg(IoMode::Broker);
+        cfg.stages.codec = crate::record::CodecKind::ShuffleLz;
+        let rep = run_cfd_workflow(&cfg, None).unwrap();
+        assert_eq!(rep.analysis_results.len(), 8 * 4, "coverage must not change");
+        assert_eq!(rep.metrics.dropped.get(), 0);
+        let st = &rep.metrics.stages;
+        assert_eq!(st.records_in.get(), 12 * 4, "12 snapshots × 4 ranks");
+        assert!(
+            st.bytes_out.get() < st.bytes_in.get(),
+            "smooth CFD fields must compress: {} vs {}",
+            st.bytes_out.get(),
+            st.bytes_in.get()
+        );
+        assert!(st.reduction_factor() > 1.0);
+        // per-stage cost clocks ticked
+        assert_eq!(st.compress_us.count(), 12 * 4);
+        for r in 0..4u32 {
+            let per = rep
+                .analysis_results
+                .iter()
+                .filter(|a| a.rank == r)
+                .count();
+            assert_eq!(per, 8, "rank {r}");
+        }
     }
 
     #[test]

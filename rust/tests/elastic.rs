@@ -89,18 +89,21 @@ fn elastic_scale_out_and_in_is_exactly_once_and_matches_static_dmd() {
         move |e| resolver.endpoint_addr(e),
         ConnConfig::default(),
     ));
-    let broker = Arc::new(Broker::with_topology(
-        BrokerConfig {
-            group_size: 1,
-            queue_cap: 32,
-            policy: QueuePolicy::Block,
-            batch_max_records: 4,
-            ..BrokerConfig::new(vec![e0.addr()])
-        },
-        topology.clone(),
-        dialer.clone(),
-        metrics.clone(),
-    ));
+    let broker = Arc::new(
+        Broker::with_topology(
+            BrokerConfig {
+                group_size: 1,
+                queue_cap: 32,
+                policy: QueuePolicy::Block,
+                batch_max_records: 4,
+                ..BrokerConfig::new(vec![e0.addr()])
+            },
+            topology.clone(),
+            dialer.clone(),
+            metrics.clone(),
+        )
+        .unwrap(),
+    );
 
     // Cloud side: one ElasticReader follows all four streams across
     // endpoints; windowed DMD per stream.

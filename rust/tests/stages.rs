@@ -1,0 +1,378 @@
+//! End-to-end exercise of the broker-side data-reduction stage
+//! pipeline (ISSUE 5 tentpole): 4 ranks ship staged (`EBR2`) frames —
+//! filter → aggregate → convert → compress — through a real endpoint
+//! into the streaming + windowed-DMD stack.
+//!
+//! Pinned invariants:
+//!
+//! * **Lossless stages** (aggregate + shuffle-lz): the streamed DMD
+//!   matches the offline oracle on the same window to 1e-6, the
+//!   decoded payloads are bit-exactly the block-mean of the source
+//!   data, and wire bytes genuinely shrink.
+//! * **Lossy stages** (f16 / qdelta): every decoded snapshot sits
+//!   within the frame's *stated* error bound of the original, and the
+//!   streamed DMD still matches the offline oracle (computed on the
+//!   decoded snapshots, which is what the Cloud side can ever see) to
+//!   1e-6.
+//! * **Corruption**: staged frames reject every single-byte flip
+//!   cleanly (CRC or schema — never a panic), and the codec layer
+//!   itself never panics on corrupt compressed streams.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use elasticbroker::analysis::{AnalysisResult, DmdBackend, DmdConfig, DmdEngine};
+use elasticbroker::broker::{stages, Broker, BrokerConfig, StagesConfig};
+use elasticbroker::endpoint::{EndpointServer, EntryId, StoreConfig};
+use elasticbroker::linalg::{dmd, Mat};
+use elasticbroker::metrics::WorkflowMetrics;
+use elasticbroker::record::{codec, CodecKind, Encoding, StreamRecord};
+use elasticbroker::streamproc::{StreamReader, StreamingConfig, StreamingContext};
+use elasticbroker::transport::ConnConfig;
+use elasticbroker::util::prop::{self, F32Vec};
+
+const RANKS: u32 = 4;
+const DIM: usize = 32;
+const STEPS: u64 = 20;
+const WINDOW: usize = 6; // m; the engine windows m+1 = 7 snapshots
+const DMD_RANK: usize = 4;
+
+/// Deterministic decaying-oscillation snapshot for (rank, step) —
+/// smooth in space, so the lossless codec genuinely compresses it.
+fn snapshot(rank: u32, step: u64) -> Vec<f32> {
+    let decay = 0.95f64.powi(step as i32);
+    (0..DIM)
+        .map(|i| {
+            let phase = 0.13 * i as f64 + 0.31 * rank as f64;
+            (decay * (0.4 * step as f64 + phase).cos()) as f32
+        })
+        .collect()
+}
+
+/// Ship every (rank, step) snapshot through a broker configured with
+/// `stages`, run the streaming + DMD stack, and return the collected
+/// results plus the endpoint (for offline oracles).
+fn run_staged(
+    stages_cfg: StagesConfig,
+) -> (Vec<AnalysisResult>, EndpointServer, WorkflowMetrics) {
+    let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+    let metrics = WorkflowMetrics::new();
+    let broker = Arc::new(
+        Broker::new(
+            BrokerConfig {
+                group_size: RANKS as usize,
+                queue_cap: 32,
+                batch_max_records: 8,
+                linger_ms: 5,
+                stages: stages_cfg,
+                ..BrokerConfig::new(vec![srv.addr()])
+            },
+            RANKS as usize,
+            metrics.clone(),
+        )
+        .unwrap(),
+    );
+
+    let writers: Vec<_> = (0..RANKS)
+        .map(|rank| {
+            let broker = broker.clone();
+            std::thread::spawn(move || {
+                let ctx = broker.init("synth", rank).unwrap();
+                for step in 0..STEPS {
+                    ctx.write(step, &[DIM as u32], &snapshot(rank, step)).unwrap();
+                }
+                ctx.finalize().unwrap();
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    assert_eq!(metrics.dropped.get(), 0);
+
+    let engine = Arc::new(
+        DmdEngine::new(
+            DmdConfig {
+                window: WINDOW,
+                rank: DMD_RANK,
+                hop: 1,
+                backend: DmdBackend::Rust,
+                ..Default::default()
+            },
+            None,
+            metrics.clone(),
+        )
+        .unwrap(),
+    );
+    let keys: Vec<String> = (0..RANKS).map(|r| format!("synth/{r}")).collect();
+    let reader = StreamReader::connect(srv.addr(), keys, 0, ConnConfig::default()).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let eng = engine.clone();
+    let ctx = StreamingContext::start(
+        StreamingConfig {
+            trigger_interval: Duration::from_millis(25),
+            executors: 4,
+            batch_limit: 0,
+        },
+        vec![reader],
+        move |b| eng.process(b),
+        tx,
+    );
+    let per_rank = STEPS as usize - WINDOW;
+    let expect = per_rank * RANKS as usize;
+    let mut results: Vec<AnalysisResult> = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while results.len() < expect && Instant::now() < deadline {
+        if let Ok((_seq, res)) = rx.recv_timeout(Duration::from_millis(100)) {
+            results.push(res);
+        }
+    }
+    ctx.stop().unwrap();
+    results.extend(rx.try_iter().map(|(_, r)| r));
+    assert_eq!(results.len(), expect, "analysis count");
+    (results, srv, metrics)
+}
+
+/// Offline oracle on the *landed* (decoded) snapshots of the final
+/// window, compared against the streamed result at 1e-6.
+fn assert_streamed_matches_offline(
+    results: &[AnalysisResult],
+    srv: &EndpointServer,
+    dim: usize,
+) {
+    for rank in 0..RANKS {
+        let key = format!("synth/{rank}");
+        let streamed = results
+            .iter()
+            .filter(|r| r.key == key)
+            .max_by_key(|r| r.step)
+            .unwrap_or_else(|| panic!("no results for {key}"));
+        assert_eq!(streamed.step, STEPS - 1);
+        assert_eq!(streamed.backend, "rust");
+
+        let entries = srv.store().read_after(&key, EntryId::ZERO, 0);
+        let m1 = WINDOW + 1;
+        let window: Vec<Vec<f32>> = entries[entries.len() - m1..]
+            .iter()
+            .map(|e| {
+                StreamRecord::decode(&e.fields[0].1)
+                    .unwrap()
+                    .payload_f32()
+                    .unwrap()
+            })
+            .collect();
+        let mut x = vec![0.0f64; dim * m1];
+        for (j, snap) in window.iter().enumerate() {
+            assert_eq!(snap.len(), dim, "{key}: decoded dim");
+            for i in 0..dim {
+                x[i * m1 + j] = snap[i] as f64;
+            }
+        }
+        let xm = Mat::from_slice(dim, m1, &x).unwrap();
+        let (eigs, sigma, stability) = dmd::analyze_window(&xm, DMD_RANK).unwrap();
+        assert!(
+            (streamed.stability - stability).abs() <= 1e-6,
+            "{key}: stability {} vs offline {}",
+            streamed.stability,
+            stability
+        );
+        for (a, b) in streamed.eigs.iter().zip(&eigs) {
+            assert!(
+                (a.re - b.re).abs() <= 1e-6 && (a.im - b.im).abs() <= 1e-6,
+                "{key}: eig {a:?} vs offline {b:?}"
+            );
+        }
+        for (a, b) in streamed.sigma.iter().zip(&sigma) {
+            assert!((a - b).abs() <= 1e-6, "{key}: sigma {a} vs offline {b}");
+        }
+    }
+}
+
+/// Lossless stages: aggregate-by-2 + shuffle-lz.  Streamed DMD ≡
+/// offline oracle, decoded payloads ≡ block-mean of the source
+/// bit-exactly, wire bytes shrink.
+#[test]
+fn staged_lossless_dmd_matches_offline_oracle() {
+    let cfg = StagesConfig {
+        aggregate: 2,
+        codec: CodecKind::ShuffleLz,
+        ..Default::default()
+    };
+    let dim = DIM / 2;
+    let (results, srv, metrics) = run_staged(cfg);
+    assert_streamed_matches_offline(&results, &srv, dim);
+
+    // decoded payloads are bit-exactly the block-mean of the source
+    for rank in 0..RANKS {
+        let key = format!("synth/{rank}");
+        let entries = srv.store().read_after(&key, EntryId::ZERO, 0);
+        assert_eq!(entries.len(), STEPS as usize);
+        for e in &entries {
+            let rec = StreamRecord::decode(&e.fields[0].1).unwrap();
+            let meta = rec.meta.as_ref().expect("staged frame");
+            assert_eq!(meta.err_bound, 0.0, "lossless path must report 0 bound");
+            assert!(meta.stats.is_some(), "aggregate carries sidecar stats");
+            let (_, oracle) =
+                stages::block_mean_last_axis(&[DIM as u32], &snapshot(rank, rec.step), 2)
+                    .unwrap();
+            let got = rec.payload_f32().unwrap();
+            assert_eq!(got.len(), oracle.len());
+            for (a, b) in got.iter().zip(&oracle) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{key} step {}", rec.step);
+            }
+        }
+    }
+
+    // the reduction is real: raw input bytes vs shipped payload bytes
+    let st = &metrics.stages;
+    assert!(
+        st.bytes_out.get() < st.bytes_in.get() / 2,
+        "aggregate 2 must at least halve payloads: {} vs {}",
+        st.bytes_out.get(),
+        st.bytes_in.get()
+    );
+}
+
+/// Lossy stages: every decoded snapshot within the stated bound, and
+/// the streamed DMD ≡ the oracle on what actually landed.
+#[test]
+fn staged_lossy_dmd_within_stated_bound() {
+    for (name, cfg) in [
+        (
+            "f16",
+            StagesConfig {
+                convert: Encoding::F16,
+                codec: CodecKind::ShuffleLz,
+                ..Default::default()
+            },
+        ),
+        (
+            "qdelta",
+            StagesConfig {
+                convert: Encoding::QDelta,
+                qdelta_step: 1e-4,
+                codec: CodecKind::ShuffleLz,
+                ..Default::default()
+            },
+        ),
+    ] {
+        let (results, srv, _metrics) = run_staged(cfg);
+        assert_streamed_matches_offline(&results, &srv, DIM);
+        for rank in 0..RANKS {
+            let key = format!("synth/{rank}");
+            let entries = srv.store().read_after(&key, EntryId::ZERO, 0);
+            for e in &entries {
+                let rec = StreamRecord::decode(&e.fields[0].1).unwrap();
+                let meta = rec.meta.as_ref().expect("staged frame");
+                let bound = meta.err_bound;
+                assert!(
+                    bound > 0.0 && bound < 1e-2,
+                    "{name} {key}: implausible bound {bound}"
+                );
+                let original = snapshot(rank, rec.step);
+                for (a, b) in rec.payload_f32().unwrap().iter().zip(&original) {
+                    assert!(
+                        (a - b).abs() <= bound + 1e-12,
+                        "{name} {key} step {}: {b} → {a} over stated bound {bound}",
+                        rec.step
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Property: codec roundtrip identity over random payloads, and
+/// every-byte-flip corruption of both the compressed stream and the
+/// full staged frame fails cleanly — never panics, never slips
+/// through the frame CRC.
+#[test]
+fn prop_codec_roundtrip_and_corruption_rejected() {
+    let gen = F32Vec { max_len: 256, scale: 1e3 };
+    prop::forall(0x57A6E5, 60, &gen, |data| {
+        if data.is_empty() {
+            return Ok(());
+        }
+        let raw: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let c = codec::codec_for(CodecKind::ShuffleLz);
+        let comp = c.compress(&raw, 4);
+        let back = c
+            .decompress(&comp, raw.len(), 4)
+            .map_err(|e| e.to_string())?;
+        if back != raw {
+            return Err("codec roundtrip not identity".into());
+        }
+        // corrupt compressed stream: must never panic (Ok-with-wrong-
+        // bytes is fine at this layer; the frame CRC is the gate)
+        for i in 0..comp.len() {
+            let mut fuzzed = comp.clone();
+            fuzzed[i] ^= 0xFF;
+            let _ = c.decompress(&fuzzed, raw.len(), 4);
+        }
+        // full staged frame: every byte flip must be rejected
+        let pipeline = elasticbroker::broker::StagePipeline::new(
+            StagesConfig { codec: CodecKind::ShuffleLz, ..Default::default() },
+            Arc::new(elasticbroker::metrics::StageMetrics::new()),
+        )
+        .map_err(|e| e.to_string())?;
+        let rec = pipeline
+            .apply("u", 0, 1, 0, 0, &[data.len() as u32], data)
+            .map_err(|e| e.to_string())?
+            .expect("no filter configured");
+        let frame = rec.encode();
+        for i in 0..frame.len() {
+            let mut fuzzed = frame.clone();
+            fuzzed[i] ^= 0xFF;
+            if StreamRecord::decode(&fuzzed).is_ok() {
+                return Err(format!("flip of staged frame byte {i} went undetected"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property: the lossy encodings hold their stated bound over random
+/// fields (both through the pipeline and after a wire roundtrip).
+#[test]
+fn prop_lossy_bound_holds_over_random_fields() {
+    let gen = F32Vec { max_len: 200, scale: 50.0 };
+    for (convert_kind, step) in [(Encoding::F16, 0.0f32), (Encoding::QDelta, 1e-3)] {
+        prop::forall(0xB0C5D + convert_kind as u64, 40, &gen, |data| {
+            if data.is_empty() {
+                return Ok(());
+            }
+            let pipeline = elasticbroker::broker::StagePipeline::new(
+                StagesConfig {
+                    convert: convert_kind,
+                    qdelta_step: if step > 0.0 { step } else { 1e-3 },
+                    codec: CodecKind::ShuffleLz,
+                    ..Default::default()
+                },
+                Arc::new(elasticbroker::metrics::StageMetrics::new()),
+            )
+            .map_err(|e| e.to_string())?;
+            let rec = match pipeline.apply("u", 0, 0, 0, 0, &[data.len() as u32], data) {
+                Ok(Some(rec)) => rec,
+                Ok(None) => return Err("unexpected filter drop".into()),
+                // qdelta legitimately rejects values outside its
+                // quantizer range; that is a clean error, not a bug
+                Err(_) if convert_kind == Encoding::QDelta => return Ok(()),
+                Err(e) => return Err(e.to_string()),
+            };
+            let bound = rec.meta.as_ref().unwrap().err_bound;
+            let wire = StreamRecord::decode(&rec.encode()).map_err(|e| e.to_string())?;
+            for (a, b) in wire.payload_f32().unwrap().iter().zip(data) {
+                if (a - b).abs() > bound + 1e-9 {
+                    return Err(format!(
+                        "{convert_kind:?}: {b} → {a} over stated bound {bound}"
+                    ));
+                }
+            }
+            // qdelta's a-priori guarantee: bound ≤ step/2 (+ f32 eps)
+            if convert_kind == Encoding::QDelta && bound > step / 2.0 + 1e-6 {
+                return Err(format!("qdelta bound {bound} exceeds step/2"));
+            }
+            Ok(())
+        });
+    }
+}
