@@ -1,0 +1,172 @@
+//! Microbenchmark: the consumer fan-out serving layer (ISSUE 6).
+//!
+//! * **fan-out drain**: 1 / 16 / 64 independent consumer groups, each
+//!   over its own TCP connection, tail the same preloaded stream on one
+//!   endpoint.  Reports aggregate records/s served and the per-subscriber
+//!   µs/record — the cost a dashboard pays to follow a simulation live,
+//!   and how that cost scales when many dashboards follow the same run.
+//! * **reduced views**: one full-fidelity `XREAD` of a snapshot backlog
+//!   vs the same read with a server-side `STRIDE 8` view.  Reports reply
+//!   bytes and µs for each — the bandwidth a coarse preview saves the
+//!   consumer without a second stream on the producer side.
+//!
+//! `cargo bench --bench micro_fanout`
+//!
+//! Emits `BENCH_fanout.json` so CI tracks the trajectory.  Set
+//! `BENCH_SMOKE=1` for tiny sizes (numbers then indicative only).  The
+//! bench asserts its own invariants: every subscriber must drain the
+//! whole backlog, and the strided reply must be smaller than the full
+//! one.
+
+use std::time::Instant;
+
+use elasticbroker::endpoint::{EndpointServer, StoreConfig};
+use elasticbroker::record::StreamRecord;
+use elasticbroker::streamproc::StreamReader;
+use elasticbroker::transport::{ConnConfig, RespConn};
+use elasticbroker::wire::Value;
+
+/// One synthetic snapshot record, `shape` f32s of deterministic data.
+fn rec(field: &str, step: u64, shape: &[u32]) -> StreamRecord {
+    let n: usize = shape.iter().map(|&d| d as usize).product();
+    let data: Vec<f32> = (0..n)
+        .map(|i| (step as f32 * 0.7 + i as f32 * 0.013).sin())
+        .collect();
+    StreamRecord::from_f32(field, 0, step, 0, shape, &data).unwrap()
+}
+
+fn preload(srv: &EndpointServer, key: &str, field: &str, n: u64, shape: &[u32]) {
+    for step in 0..n {
+        srv.store()
+            .xadd(key, None, vec![(b"r".to_vec(), rec(field, step, shape).encode())])
+            .unwrap();
+    }
+}
+
+/// Total bulk-string bytes in a RESP reply (payload the wire carried).
+fn reply_bytes(v: &Value) -> usize {
+    match v {
+        Value::Bulk(b) => b.len(),
+        Value::Array(items) => items.iter().map(reply_bytes).sum(),
+        _ => 0,
+    }
+}
+
+/// `subs` group readers drain an `n`-record backlog concurrently.
+/// Returns (aggregate records/s, per-subscriber µs/record).
+fn fanout_drain(
+    srv: &EndpointServer,
+    key: &str,
+    subs: usize,
+    n: u64,
+) -> anyhow::Result<(f64, f64)> {
+    let addr = srv.addr();
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..subs)
+        .map(|i| {
+            let key = key.to_string();
+            std::thread::spawn(move || -> anyhow::Result<u64> {
+                let mut r = StreamReader::connect(
+                    addr,
+                    vec![key],
+                    256,
+                    ConnConfig::default(),
+                )?;
+                r.set_auto_ack(true);
+                r.set_group(format!("bench-{subs}-{i}"));
+                let mut got = 0u64;
+                let mut polls = 0u64;
+                while got < n {
+                    for b in r.poll()? {
+                        got += b.records.len() as u64;
+                    }
+                    polls += 1;
+                    anyhow::ensure!(
+                        polls <= 4 * n + 64,
+                        "subscriber stuck: {got} of {n} after {polls} polls"
+                    );
+                }
+                Ok(got)
+            })
+        })
+        .collect();
+    for h in handles {
+        let got = h.join().unwrap()?;
+        anyhow::ensure!(got == n, "subscriber drained {got} of {n} records");
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let agg = (subs as u64 * n) as f64 / secs;
+    let us_per_rec = secs * 1e6 / n as f64;
+    Ok((agg, us_per_rec))
+}
+
+fn main() -> anyhow::Result<()> {
+    elasticbroker::util::logger::init();
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+
+    // --- fan-out drain ----------------------------------------------
+    // 4 KiB snapshots: small enough that the cost measured is the
+    // serving path (XREAD + group XACKPOS round trips), not memcpy.
+    let n = if smoke { 64u64 } else { 1024u64 };
+    let shape = [4u32, 256];
+    let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default())?;
+    preload(&srv, "u/0", "u", n, &shape);
+
+    println!("# fan-out: N consumer groups drain the same {n}-record stream (4 KiB f32 snapshots)");
+    let mut fan = Vec::new();
+    for subs in [1usize, 16, 64] {
+        let (agg, us) = fanout_drain(&srv, "u/0", subs, n)?;
+        println!("  {subs:>2} subscriber(s): {agg:>9.0} rec/s aggregate, {us:>7.1} µs/rec per subscriber");
+        fan.push((subs, agg, us));
+    }
+
+    // --- reduced view vs full fidelity ------------------------------
+    // Bigger snapshots so the byte ratio dominates framing overhead.
+    let m = if smoke { 16u64 } else { 128u64 };
+    let vshape = [16u32, 1024]; // 64 KiB per record
+    preload(&srv, "v/0", "v", m, &vshape);
+    let stride = 8u32;
+
+    let mut conn = RespConn::connect(srv.addr(), ConnConfig::default())?;
+    let time_read = |conn: &mut RespConn, extra: &[&[u8]]| -> anyhow::Result<(f64, usize)> {
+        let mut cmd: Vec<&[u8]> = vec![b"XREAD"];
+        cmd.extend_from_slice(extra);
+        cmd.extend_from_slice(&[b"STREAMS", b"v/0", b"0-0"]);
+        let t0 = Instant::now();
+        let reply = conn.request(&cmd)?;
+        let us = t0.elapsed().as_secs_f64() * 1e6;
+        anyhow::ensure!(!reply.is_error(), "XREAD failed: {}", reply.as_str_lossy());
+        Ok((us, reply_bytes(&reply)))
+    };
+    // Warm both paths once so the timed reads don't pay first-touch costs.
+    time_read(&mut conn, &[])?;
+    time_read(&mut conn, &[b"STRIDE", b"8"])?;
+    let (full_us, full_bytes) = time_read(&mut conn, &[])?;
+    let (stride_us, stride_bytes) = time_read(&mut conn, &[b"STRIDE", b"8"])?;
+    anyhow::ensure!(
+        stride_bytes < full_bytes,
+        "strided reply ({stride_bytes} B) not smaller than full ({full_bytes} B)"
+    );
+    let ratio = full_bytes as f64 / stride_bytes.max(1) as f64;
+    println!("\n# reduced view: {m} × 64 KiB backlog, full XREAD vs STRIDE {stride}");
+    println!(
+        "  full:   {:>9} B in {full_us:>8.0} µs\n  stride: {:>9} B in {stride_us:>8.0} µs  ({ratio:.1}x fewer bytes)",
+        full_bytes, stride_bytes
+    );
+
+    // --- machine-readable trajectory --------------------------------
+    let fan_json: Vec<String> = fan
+        .iter()
+        .map(|(s, agg, us)| {
+            format!(r#"{{"subs":{s},"agg_rec_s":{agg:.0},"us_per_rec":{us:.2}}}"#)
+        })
+        .collect();
+    let json = format!(
+        r#"{{"bench":"micro_fanout","smoke":{smoke},"fanout":{{"records":{n},"payload_bytes":4096,"drains":[{}]}},"view":{{"records":{m},"stride":{stride},"full_bytes":{full_bytes},"stride_bytes":{stride_bytes},"bytes_ratio":{ratio:.2},"full_us":{full_us:.0},"stride_us":{stride_us:.0}}}}}"#,
+        fan_json.join(",")
+    );
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fanout.json");
+    std::fs::write(out_path, &json)?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

@@ -71,6 +71,138 @@ pub struct AnalysisResult {
     pub backend: &'static str,
 }
 
+/// Stream-key prefix for published analysis results (ISSUE 6).
+pub const RESULTS_PREFIX: &str = "results";
+
+/// The endpoint stream key `source_key`'s analysis results are
+/// published on: `results/<field>/<rank>`.
+/// [`crate::record::parse_stream_key`] splits on the *last* `/`, so
+/// the published record's field is `results/<field>` and the rank
+/// survives round trips through the reader machinery unchanged.
+pub fn results_key(source_key: &str) -> String {
+    format!("{RESULTS_PREFIX}/{source_key}")
+}
+
+/// Results-record payload magic (`EBRA` little-endian).
+const RESULTS_MAGIC: u32 = 0x4152_4245;
+const RESULTS_VERSION: u32 = 1;
+/// Fixed payload bytes before the eigenvalue/σ arrays.
+const RESULTS_HEADER: usize = 40;
+
+impl AnalysisResult {
+    /// Pack this result into a compact [`StreamRecord`] for the
+    /// results stream.  Every f64 travels as its raw IEEE-754 bytes
+    /// inside the payload — no f32 round trip anywhere — so
+    /// [`AnalysisResult::from_record`] recovers the engine's values
+    /// bit-exactly.  Payload layout (all little-endian):
+    ///
+    /// ```text
+    /// u32 magic "EBRA"   u32 version   u32 backend (0=rust 1=pjrt)
+    /// u32 n_eigs         u32 n_sigma   u32 pad
+    /// u64 latency_us     f64 stability
+    /// (f64 re, f64 im) × n_eigs        f64 × n_sigma
+    /// ```
+    ///
+    /// The record's field is [`results_key`]`(self.key)` minus the
+    /// rank suffix, its rank/step mirror the source fire, and
+    /// `gen_micros` is stamped at publish time so subscriber latency
+    /// tracking keeps working.
+    pub fn to_record(&self) -> StreamRecord {
+        let ne = self.eigs.len();
+        let ns = self.sigma.len();
+        let mut p = Vec::with_capacity(RESULTS_HEADER + 16 * ne + 8 * ns);
+        p.extend_from_slice(&RESULTS_MAGIC.to_le_bytes());
+        p.extend_from_slice(&RESULTS_VERSION.to_le_bytes());
+        let backend_tag: u32 = u32::from(self.backend == "pjrt");
+        p.extend_from_slice(&backend_tag.to_le_bytes());
+        p.extend_from_slice(&(ne as u32).to_le_bytes());
+        p.extend_from_slice(&(ns as u32).to_le_bytes());
+        p.extend_from_slice(&0u32.to_le_bytes());
+        p.extend_from_slice(&self.latency_us.to_le_bytes());
+        p.extend_from_slice(&self.stability.to_le_bytes());
+        for c in &self.eigs {
+            p.extend_from_slice(&c.re.to_le_bytes());
+            p.extend_from_slice(&c.im.to_le_bytes());
+        }
+        for s in &self.sigma {
+            p.extend_from_slice(&s.to_le_bytes());
+        }
+        let (field, rank) = crate::record::parse_stream_key(&self.key)
+            .unwrap_or((self.key.as_str(), self.rank));
+        StreamRecord {
+            field: format!("{RESULTS_PREFIX}/{field}"),
+            rank,
+            step: self.step,
+            gen_micros: util::epoch_micros(),
+            dtype: crate::record::Dtype::F32,
+            shape: vec![(p.len() / 4) as u32],
+            payload: Arc::new(p),
+            meta: None,
+        }
+    }
+
+    /// Decode a results-stream record published by
+    /// [`AnalysisResult::to_record`] (bit-exact inverse).
+    pub fn from_record(rec: &StreamRecord) -> Result<AnalysisResult> {
+        let p: &[u8] = &rec.payload;
+        anyhow::ensure!(
+            p.len() >= RESULTS_HEADER,
+            "results payload too short: {} bytes",
+            p.len()
+        );
+        let u32_at = |o: usize| u32::from_le_bytes(p[o..o + 4].try_into().unwrap());
+        let u64_at = |o: usize| u64::from_le_bytes(p[o..o + 8].try_into().unwrap());
+        let f64_at = |o: usize| f64::from_le_bytes(p[o..o + 8].try_into().unwrap());
+        anyhow::ensure!(
+            u32_at(0) == RESULTS_MAGIC,
+            "not a results record (magic 0x{:08x})",
+            u32_at(0)
+        );
+        anyhow::ensure!(
+            u32_at(4) == RESULTS_VERSION,
+            "unsupported results version {}",
+            u32_at(4)
+        );
+        let backend = if u32_at(8) == 1 { "pjrt" } else { "rust" };
+        let ne = u32_at(12) as usize;
+        let ns = u32_at(16) as usize;
+        anyhow::ensure!(
+            p.len() == RESULTS_HEADER + 16 * ne + 8 * ns,
+            "results payload {} bytes, header implies {}",
+            p.len(),
+            RESULTS_HEADER + 16 * ne + 8 * ns
+        );
+        let latency_us = u64_at(24);
+        let stability = f64_at(32);
+        let mut off = RESULTS_HEADER;
+        let mut eigs = Vec::with_capacity(ne);
+        for _ in 0..ne {
+            eigs.push(Complex::new(f64_at(off), f64_at(off + 8)));
+            off += 16;
+        }
+        let mut sigma = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            sigma.push(f64_at(off));
+            off += 8;
+        }
+        let field = rec
+            .field
+            .strip_prefix(RESULTS_PREFIX)
+            .and_then(|s| s.strip_prefix('/'))
+            .unwrap_or(&rec.field);
+        Ok(AnalysisResult {
+            key: crate::record::stream_key(field, rec.rank),
+            rank: rec.rank,
+            step: rec.step,
+            stability,
+            eigs,
+            sigma,
+            latency_us,
+            backend,
+        })
+    }
+}
+
 /// Which implementation computes the (Ã, σ) reduction.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum DmdBackend {
@@ -935,6 +1067,69 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// ISSUE 6: the results-stream codec is a bit-exact f64 round trip
+    /// through the real wire format (encode → EBR1 frame → decode).
+    #[test]
+    fn results_record_roundtrip_is_bit_exact() {
+        let res = AnalysisResult {
+            key: "u/3".into(),
+            rank: 3,
+            step: 17,
+            stability: 0.123_456_789_012_345_67,
+            eigs: vec![
+                Complex::new(0.999_999_999_999_9, -1.0e-17),
+                Complex::new(f64::MIN_POSITIVE, -0.25),
+            ],
+            sigma: vec![3.141_592_653_589_793, 1e-300, 0.0],
+            latency_us: 987_654_321,
+            backend: "pjrt",
+        };
+        let rec = res.to_record();
+        assert_eq!(rec.stream_key(), results_key("u/3"));
+        assert_eq!(rec.step, 17);
+        // round trip through the wire format like a real subscriber
+        let wire = StreamRecord::decode(&rec.encode()).unwrap();
+        let got = AnalysisResult::from_record(&wire).unwrap();
+        assert_eq!(got.key, "u/3");
+        assert_eq!(got.rank, 3);
+        assert_eq!(got.step, 17);
+        assert_eq!(got.backend, "pjrt");
+        assert_eq!(got.latency_us, res.latency_us);
+        assert_eq!(got.stability.to_bits(), res.stability.to_bits());
+        assert_eq!(got.eigs.len(), res.eigs.len());
+        for (a, b) in got.eigs.iter().zip(&res.eigs) {
+            assert_eq!(a.re.to_bits(), b.re.to_bits());
+            assert_eq!(a.im.to_bits(), b.im.to_bits());
+        }
+        assert_eq!(got.sigma.len(), res.sigma.len());
+        for (a, b) in got.sigma.iter().zip(&res.sigma) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn results_decode_rejects_non_results_records() {
+        // a plain snapshot record is not a results frame
+        let snap = snap_record(0, 1, &[1.0; 16]);
+        assert!(AnalysisResult::from_record(&snap).is_err());
+        // truncated payloads are rejected before any array reads
+        let res = AnalysisResult {
+            key: "u/0".into(),
+            rank: 0,
+            step: 1,
+            stability: 0.5,
+            eigs: vec![Complex::new(1.0, 0.0)],
+            sigma: vec![2.0],
+            latency_us: 10,
+            backend: "rust",
+        };
+        let mut rec = res.to_record();
+        let mut short = (*rec.payload).clone();
+        short.truncate(super::RESULTS_HEADER - 4);
+        rec.payload = Arc::new(short);
+        assert!(AnalysisResult::from_record(&rec).is_err());
     }
 
     #[test]

@@ -1,11 +1,15 @@
-//! Data filtering / aggregation / format conversion — the paper's §1
-//! "ElasticBroker performs data filtering, aggregation, and format
-//! conversions to close the gap between an HPC ecosystem and a distinct
-//! Cloud ecosystem".
+//! Per-element value transforms — the paper's §1 "data filtering"
+//! vocabulary (stride / magnitude / clamp / threshold).
 //!
-//! A [`Filter`] is a pipeline of [`FilterStage`]s applied in `write`
-//! before serialization.  Stages reshape both the data and the declared
-//! shape so the Cloud side always receives a self-consistent record.
+//! A [`Filter`] is a pipeline of [`FilterStage`]s.  Since ISSUE 6 it
+//! no longer runs as a separate pre-serialization step: the broker
+//! folds it into the head of the [`super::stages`] filter stage
+//! (`StagesConfig::transforms`), so one reduction mechanism exists and
+//! transformed bytes are part of the `StageMetrics` byte accounting.
+//! [`Filter`] and [`FilterStage`] remain the public config surface
+//! ([`super::BrokerConfig::filter`], [`super::Broker::init_filtered`]).
+//! Stages reshape both the data and the declared shape so the Cloud
+//! side always receives a self-consistent record.
 
 use anyhow::{bail, ensure, Result};
 
@@ -41,6 +45,12 @@ impl Filter {
 
     pub fn is_passthrough(&self) -> bool {
         self.stages.is_empty()
+    }
+
+    /// The stage list — consumed when the broker folds this filter
+    /// into a `StagesConfig` (ISSUE 6).
+    pub fn into_stages(self) -> Vec<FilterStage> {
+        self.stages
     }
 
     /// Apply all stages; returns the (possibly new) shape and data.

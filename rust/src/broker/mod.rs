@@ -32,9 +32,12 @@
 //!   ships whatever has queued the moment the writer is free, so an
 //!   idle stream still sees per-record latency).
 //! * **Filtering / aggregation / format conversion** ([`filter`],
-//!   [`stages`]): [`filter`] is the legacy per-context value-transform
-//!   pipeline; [`stages`] (ISSUE 5) is the full data-reduction stage
-//!   pipeline — filter (decimation / rank subset / ROI) → aggregate
+//!   [`stages`]): [`filter`] declares per-context value transforms
+//!   (stride / magnitude / clamp / threshold) which the broker folds
+//!   into the head of the stage pipeline's filter stage (ISSUE 6, so
+//!   one reduction mechanism exists and every reduced byte is
+//!   accounted); [`stages`] (ISSUE 5) is the full data-reduction stage
+//!   pipeline — filter (transforms / decimation / rank subset / ROI) → aggregate
 //!   (block-mean + sidecar stats) → convert (f16 / quantized delta
 //!   with stated error bound) → compress (byte-shuffle + LZ behind the
 //!   [`crate::record::Codec`] trait) — producing self-describing
@@ -206,11 +209,28 @@ impl Broker {
 
     /// `broker_init` with a per-field reduction pipeline (e.g. stream a
     /// strided or magnitude-aggregated view of one field while another
-    /// ships raw).
+    /// ships raw).  The transforms are folded into the context's stage
+    /// pipeline (ISSUE 6): they run at the head of the filter stage and
+    /// their reductions are part of the shared [`StageMetrics`] byte
+    /// accounting.
+    ///
+    /// [`StageMetrics`]: crate::metrics::StageMetrics
     pub fn init_filtered(&self, field: &str, rank: u32, filter: Filter) -> Result<BrokerCtx> {
         // Validate the rank synchronously (the paper API returns the
         // error from broker_init, not from a later write).
         let group = self.topology.snapshot().groups.group_of_rank(rank as usize)?;
+        // Per-context transforms prepend to the broker-wide stage
+        // config; the pipeline shares the broker's StageMetrics so all
+        // reduction accounting lands in one place.
+        let stages = if filter.is_passthrough() {
+            self.stages.clone()
+        } else {
+            let mut scfg = self.cfg.stages.clone();
+            let mut transforms = filter.into_stages();
+            transforms.extend(scfg.transforms);
+            scfg.transforms = transforms;
+            Arc::new(StagePipeline::new(scfg, self.metrics.stages.clone())?)
+        };
         let queue = Arc::new(BoundedQueue::new(self.cfg.queue_cap, self.cfg.policy));
         let key = crate::record::stream_key(field, rank);
         let batching = BatchTuning {
@@ -244,8 +264,7 @@ impl Broker {
             rank,
             queue,
             writer: Some(writer),
-            filter,
-            stages: self.stages.clone(),
+            stages,
             write_seq: AtomicU64::new(0),
             metrics: self.metrics.clone(),
         })
@@ -258,8 +277,9 @@ pub struct BrokerCtx {
     rank: u32,
     queue: Arc<BoundedQueue<StreamRecord>>,
     writer: Option<std::thread::JoinHandle<Result<()>>>,
-    filter: Filter,
-    /// Shared data-reduction stage pipeline (ISSUE 5).
+    /// Shared data-reduction stage pipeline (ISSUE 5); contexts with
+    /// per-field transforms ([`Broker::init_filtered`]) hold their own
+    /// pipeline sharing the broker's metrics (ISSUE 6).
     stages: Arc<StagePipeline>,
     /// Writes issued through this context — the sequence the decimation
     /// filter counts (independent of the simulation step numbering).
@@ -273,14 +293,13 @@ impl BrokerCtx {
     /// (the paper's asynchronous-write property); blocks only when the
     /// queue is full under `QueuePolicy::Block`.
     ///
-    /// The record first runs the legacy per-context [`Filter`], then
-    /// the [`StagePipeline`] (filter → aggregate → convert →
+    /// The record runs the [`StagePipeline`] (filter — including any
+    /// per-context [`Filter`] transforms — → aggregate → convert →
     /// compress).  A record the stage filter decides never ships
     /// (decimation, rank subsetting) returns `Ok` without enqueueing —
     /// intentional reduction, not loss.
     pub fn write(&self, step: u64, shape: &[u32], data: &[f32]) -> Result<()> {
         let t0 = Instant::now();
-        let (shape, reduced) = self.filter.apply(shape, data)?;
         let seq = self.write_seq.fetch_add(1, Ordering::Relaxed);
         let record = match self.stages.apply(
             &self.field,
@@ -288,8 +307,8 @@ impl BrokerCtx {
             step,
             seq,
             util::epoch_micros(),
-            &shape,
-            &reduced,
+            shape,
+            data,
         )? {
             Some(rec) => rec,
             None => {
@@ -883,7 +902,13 @@ mod tests {
 
     #[test]
     fn filtered_write_reduces_payload() {
-        let (srv, broker) = setup();
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        let cfg = BrokerConfig {
+            group_size: 4,
+            ..BrokerConfig::new(vec![srv.addr()])
+        };
+        let metrics = WorkflowMetrics::new();
+        let broker = Broker::new(cfg, 4, metrics.clone()).unwrap();
         let ctx_filtered = broker
             .init_filtered("u", 0, Filter::new(vec![FilterStage::Stride(4)]))
             .unwrap();
@@ -895,5 +920,10 @@ mod tests {
             .read_after("u/0", crate::endpoint::EntryId::ZERO, 0);
         let rec = StreamRecord::decode(&entries[0].fields[0].1).unwrap();
         assert_eq!(rec.payload_f32().unwrap().len(), 16);
+        // ISSUE 6 satellite: the per-context transform is part of the
+        // stage byte accounting — 64 raw f32 in, 16 shipped f32 out.
+        assert_eq!(metrics.stages.bytes_in.get(), 64 * 4);
+        assert_eq!(metrics.stages.bytes_out.get(), 16 * 4);
+        assert!((metrics.stages.reduction_factor() - 4.0).abs() < 1e-9);
     }
 }

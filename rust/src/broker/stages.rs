@@ -17,8 +17,12 @@
 //! ```
 //!
 //! 1. **filter** — every-Nth-step decimation, rank subsetting (only
-//!    every `rank_stride`-th rank ships at all) and region-of-interest
-//!    cropping along the last (fastest-varying, spatial) axis.
+//!    every `rank_stride`-th rank ships at all), per-element value
+//!    transforms ([`FilterStage`]: stride / magnitude / clamp /
+//!    threshold — the formerly separate `broker::Filter`, folded in
+//!    here by ISSUE 6 so its reductions are part of the stage byte
+//!    accounting) and region-of-interest cropping along the last
+//!    (fastest-varying, spatial) axis.
 //! 2. **aggregate** — block-mean spatial downsampling by a configured
 //!    factor along the last axis, with per-field min/max/mean sidecar
 //!    stats carried in the frame header.
@@ -51,12 +55,19 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
+use super::filter::{Filter, FilterStage};
 use crate::metrics::StageMetrics;
 use crate::record::{codec_for, convert, CodecKind, Encoding, FieldStats, FrameMeta, StreamRecord};
 
 /// Stage-pipeline knobs (config `[stages]`, CLI `--stage-*`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct StagesConfig {
+    /// Per-element value transforms ([`FilterStage`]: stride /
+    /// magnitude / clamp / threshold) run at the head of the filter
+    /// stage (ISSUE 6: the formerly separate `broker::Filter` now
+    /// lives here, so transformed bytes are part of the stage byte
+    /// accounting instead of silently evading it).
+    pub transforms: Vec<FilterStage>,
     /// Keep every `decimate`-th written record per context (1 = all).
     pub decimate: u64,
     /// Ship only ranks with `rank % rank_stride == 0` (1 = all ranks).
@@ -80,6 +91,7 @@ pub struct StagesConfig {
 impl Default for StagesConfig {
     fn default() -> Self {
         StagesConfig {
+            transforms: Vec::new(),
             decimate: 1,
             rank_stride: 1,
             roi: None,
@@ -96,7 +108,8 @@ impl StagesConfig {
     /// Whether the pipeline changes nothing (records then ship as
     /// classic raw `EBR1` frames).
     pub fn is_passthrough(&self) -> bool {
-        self.decimate <= 1
+        self.transforms.is_empty()
+            && self.decimate <= 1
             && self.rank_stride <= 1
             && self.roi.is_none()
             && self.aggregate <= 1
@@ -119,6 +132,17 @@ impl StagesConfig {
 
     /// Sanity-check invariants the pipeline relies on.
     pub fn validate(&self) -> Result<()> {
+        for t in &self.transforms {
+            match *t {
+                FilterStage::Stride(k) => {
+                    ensure!(k >= 1, "stages.transforms: stride must be >= 1")
+                }
+                FilterStage::Clamp(lo, hi) => {
+                    ensure!(lo <= hi, "stages.transforms: clamp lo > hi")
+                }
+                FilterStage::Magnitude | FilterStage::Threshold(_) => {}
+            }
+        }
         ensure!(self.decimate >= 1, "stages.decimate must be >= 1");
         ensure!(self.rank_stride >= 1, "stages.rank_stride must be >= 1");
         ensure!(self.aggregate >= 1, "stages.aggregate must be >= 1");
@@ -138,6 +162,14 @@ impl StagesConfig {
     /// the codec that actually applied to this frame.
     fn provenance(&self, applied_codec: CodecKind) -> String {
         let mut parts: Vec<String> = Vec::new();
+        for t in &self.transforms {
+            parts.push(match *t {
+                FilterStage::Stride(k) => format!("xstride:{k}"),
+                FilterStage::Magnitude => "mag".to_string(),
+                FilterStage::Clamp(lo, hi) => format!("clamp:{lo}:{hi}"),
+                FilterStage::Threshold(thr) => format!("thr:{thr}"),
+            });
+        }
         if self.rank_stride > 1 {
             parts.push(format!("ranks%{}", self.rank_stride));
         }
@@ -165,19 +197,24 @@ impl StagesConfig {
 /// record; the decimation counter lives in the context).
 pub struct StagePipeline {
     cfg: StagesConfig,
+    /// The value-transform head of the filter stage, prebuilt from
+    /// `cfg.transforms`.
+    xform: Filter,
     metrics: Arc<StageMetrics>,
 }
 
 impl StagePipeline {
     pub fn new(cfg: StagesConfig, metrics: Arc<StageMetrics>) -> Result<StagePipeline> {
         cfg.validate()?;
-        Ok(StagePipeline { cfg, metrics })
+        let xform = Filter::new(cfg.transforms.clone());
+        Ok(StagePipeline { cfg, xform, metrics })
     }
 
     /// A do-nothing pipeline (records ship as raw `EBR1` frames).
     pub fn passthrough() -> StagePipeline {
         StagePipeline {
             cfg: StagesConfig::default(),
+            xform: Filter::passthrough(),
             metrics: Arc::new(StageMetrics::new()),
         }
     }
@@ -234,13 +271,18 @@ impl StagePipeline {
         }
         // Borrow until a stage actually reshapes the data — a codec- or
         // convert-only config never copies the snapshot here.
-        let (mut shape, mut data): (Cow<'_, [u32]>, Cow<'_, [f32]>) = match self.cfg.roi {
-            Some((lo, hi)) => {
-                let (s, d) = crop_last_axis(shape, data, lo, hi)?;
+        let (mut shape, mut data): (Cow<'_, [u32]>, Cow<'_, [f32]>) =
+            if self.xform.is_passthrough() {
+                (Cow::Borrowed(shape), Cow::Borrowed(data))
+            } else {
+                let (s, d) = self.xform.apply(shape, data)?;
                 (Cow::Owned(s), Cow::Owned(d))
-            }
-            None => (Cow::Borrowed(shape), Cow::Borrowed(data)),
-        };
+            };
+        if let Some((lo, hi)) = self.cfg.roi {
+            let (s, d) = crop_last_axis(&shape, &data, lo, hi)?;
+            shape = Cow::Owned(s);
+            data = Cow::Owned(d);
+        }
         self.metrics.filter_us.record(t.elapsed().as_micros() as u64);
 
         // --- 2. aggregate ---------------------------------------------
@@ -569,6 +611,66 @@ mod tests {
         assert!(prov.contains("f16"), "{prov}");
         // odd write sequence numbers are decimated away
         assert!(p.apply("u", 0, 1, 1, 0, &[2, 16], &data).unwrap().is_none());
+    }
+
+    /// ISSUE 6 satellite: the folded-in value transforms are part of
+    /// the stage byte accounting — a stride-16 reduction shows up in
+    /// `bytes_in`/`bytes_out` instead of silently evading it.
+    #[test]
+    fn transforms_count_in_byte_accounting() {
+        let m = Arc::new(StageMetrics::new());
+        let p = StagePipeline::new(
+            StagesConfig {
+                transforms: vec![FilterStage::Stride(16)],
+                ..Default::default()
+            },
+            m.clone(),
+        )
+        .unwrap();
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let rec = p.apply("u", 0, 0, 0, 0, &[64], &data).unwrap().unwrap();
+        assert_eq!(
+            rec.payload_f32().unwrap(),
+            vec![0.0, 16.0, 32.0, 48.0],
+            "stride-16 keeps every 16th element"
+        );
+        assert_eq!(m.bytes_in.get(), 64 * 4, "pre-transform bytes counted");
+        assert_eq!(m.bytes_out.get(), 4 * 4, "post-transform bytes counted");
+        assert!((m.reduction_factor() - 16.0).abs() < 1e-9);
+        let prov = rec.meta.unwrap().provenance;
+        assert!(prov.contains("xstride:16"), "{prov}");
+    }
+
+    /// Transforms compose with the downstream stages in order
+    /// (transform → ROI → aggregate), matching the legacy
+    /// filter-then-stages pipeline.
+    #[test]
+    fn transforms_compose_with_roi_and_aggregate() {
+        let p = pipeline(StagesConfig {
+            transforms: vec![FilterStage::Magnitude, FilterStage::Clamp(0.0, 10.0)],
+            roi: Some((0, 4)),
+            aggregate: 2,
+            ..Default::default()
+        });
+        // ux = 3,0,8,0,0,0,0,0 ; uy = 4,1,6,0,0,0,0,0 → magnitude
+        // [5,1,10,0,0,0,0,0] (clamp is a no-op here) → roi [5,1,10,0]
+        // → agg2 [3,5]
+        let mut data = vec![0.0f32; 16];
+        (data[0], data[1], data[2]) = (3.0, 0.0, 8.0);
+        (data[8], data[9], data[10]) = (4.0, 1.0, 6.0);
+        let rec = p.apply("u", 0, 0, 0, 0, &[2, 8], &data).unwrap().unwrap();
+        assert_eq!(rec.shape, vec![2]);
+        let got = StreamRecord::decode(&rec.encode())
+            .unwrap()
+            .payload_f32()
+            .unwrap();
+        assert_eq!(got, vec![3.0, 5.0]);
+        assert!(StagesConfig {
+            transforms: vec![FilterStage::Stride(0)],
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
     }
 
     #[test]

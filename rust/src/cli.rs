@@ -32,6 +32,7 @@ const BOOLEAN_FLAGS: &[&str] = &[
     "dmd-per-batch",
     "retention",
     "stage-stats",
+    "results-stream",
 ];
 
 impl Args {
@@ -198,6 +199,12 @@ pub fn apply_overrides(
     if let Some(v) = args.get("analysis-csv") {
         cfg.analysis_csv = v.to_string();
     }
+    if let Some(v) = args.get("consumer-group") {
+        cfg.consumer_group = v.to_string();
+    }
+    if args.has_flag("results-stream") {
+        cfg.results_stream = true;
+    }
     if let Some(v) = args.get("persist-dir") {
         cfg.wal_dir = v.to_string();
     }
@@ -266,6 +273,10 @@ SUBCOMMANDS:
                 --dmd-shards N       analysis window shards (default 8)
                 --duration-secs S    how long to serve (default 60)
                 --analysis-csv PATH  --store-shards N (workflow mode)
+                --consumer-group G   named group the readers ack under
+                                     (independent cursor per group)
+                --results-stream     publish DMD fires back into the
+                                     endpoints as results/<field>/<rank>
   synth       Run synthetic generators against remote endpoints
                 --endpoints A[,B..]  --ranks N --dim D --records N --rate HZ
                 --batch-max-records N --batch-max-bytes B --linger-ms MS
@@ -349,6 +360,9 @@ mod tests {
             "always",
             "--retention",
             "--no-pjrt",
+            "--consumer-group",
+            "dashboard",
+            "--results-stream",
         ]))
         .unwrap();
         apply_overrides(&mut cfg, &a).unwrap();
@@ -364,6 +378,8 @@ mod tests {
         assert_eq!(cfg.wal_fsync, crate::endpoint::FsyncPolicy::Always);
         assert!(cfg.retention);
         assert!(!cfg.use_pjrt);
+        assert_eq!(cfg.consumer_group, "dashboard");
+        assert!(cfg.results_stream);
     }
 
     #[test]

@@ -120,6 +120,18 @@ pub struct WorkflowConfig {
     /// CSV output path for analysis results ("" → none).
     pub analysis_csv: String,
 
+    // --- consumer fan-out (ISSUE 6) ---
+    /// Named consumer group the workflow's readers ack under ("" = the
+    /// endpoint's default group).  Each group keeps an independent
+    /// persisted cursor per stream; retention/GC only trims below the
+    /// *minimum* cursor across groups, so side-car consumers
+    /// (dashboards, archivers) never lose unread entries.
+    pub consumer_group: String,
+    /// Publish every DMD fire back into the first endpoint as a
+    /// compact `results/<field>/<rank>` stream that subscribers tail
+    /// through the same reader machinery as the data streams.
+    pub results_stream: bool,
+
     // --- durability (ISSUE 4) ---
     /// Directory for the endpoints' write-ahead logs ("" = in-memory
     /// endpoints, the pre-ISSUE-4 behaviour).  Each endpoint gets its
@@ -181,6 +193,8 @@ impl Default for WorkflowConfig {
             dmd_gram_refresh: 64,
             dmd_shards: 8,
             analysis_csv: String::new(),
+            consumer_group: String::new(),
+            results_stream: false,
             wal_dir: String::new(),
             wal_fsync: FsyncPolicy::EveryMs(5),
             wal_segment_bytes: 64 << 20,
@@ -329,6 +343,12 @@ impl WorkflowConfig {
         }
         if let Some(v) = map.get_str("cloud.analysis_csv")? {
             cfg.analysis_csv = v;
+        }
+        if let Some(v) = map.get_str("cloud.consumer_group")? {
+            cfg.consumer_group = v;
+        }
+        if let Some(v) = map.get_bool("cloud.results_stream")? {
+            cfg.results_stream = v;
         }
         if let Some(v) = map.get_str("endpoint.wal_dir")? {
             cfg.wal_dir = v;
@@ -547,6 +567,19 @@ mod tests {
             WorkflowConfig::from_toml("[endpoint]\nwal_dir = \"w\"\nfsync = \"meh\"\n")
                 .is_err()
         );
+    }
+
+    #[test]
+    fn fanout_knobs_parse_with_defaults() {
+        let c = WorkflowConfig::default();
+        assert!(c.consumer_group.is_empty(), "default group by default");
+        assert!(!c.results_stream, "results stream off by default");
+        let c = WorkflowConfig::from_toml(
+            "[cloud]\nconsumer_group = \"dashboard\"\nresults_stream = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.consumer_group, "dashboard");
+        assert!(c.results_stream);
     }
 
     #[test]

@@ -16,7 +16,16 @@
 //! extension (ISSUE 4): `XACKPOS key id` (a reader acknowledges every
 //! entry at or below `id`; the ack is the retention floor — WAL
 //! segments wholly below it are reclaimed and `maxlen` trimming never
-//! crosses it while retention is on).
+//! crosses it while retention is on) — plus the consumer fan-out
+//! extensions (ISSUE 6): `XACKPOS key GROUP name id` (per-group ack
+//! cursors; the retention floor becomes the min across groups) and the
+//! `XREAD` reduced-view options `STRIDE k` (server-side block-mean
+//! down-resolution of each record's last axis), `ROI lo:hi` (crop the
+//! last axis) and `SINCESTEP s` (skip records below simulation step
+//! `s`) — each served record is re-staged through the broker's
+//! [`crate::broker::stages`] reduction ops and returned as a
+//! self-describing `EBR2` frame, so a subscriber's transparent decode
+//! just works on the reduced view.
 //!
 //! One OS thread per connection (the paper sizes one endpoint per 16
 //! writer processes, so connection counts are small); commands are
@@ -34,7 +43,9 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::store::{EntryId, FencedAdd, Store, StoreConfig};
+use super::store::{Entry, EntryId, FencedAdd, Store, StoreConfig};
+use crate::broker::stages::{self, StagesConfig};
+use crate::record::{CodecKind, Encoding, FrameMeta, StreamRecord};
 use crate::wire::{self, Decoder, Value};
 
 /// A running endpoint server (shuts down on drop).
@@ -393,14 +404,28 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
             }
         }
         b"XACKPOS" => {
-            // XACKPOS key id — reader cursor acknowledgement (ISSUE 4).
+            // XACKPOS key [GROUP name] id — reader cursor
+            // acknowledgement (ISSUE 4), per consumer group (ISSUE 6).
+            // The group-less form acks the "default" group.
             anyhow::ensure!(
-                args.len() == 2,
+                args.len() == 2 || args.len() == 4,
                 "ERR wrong number of arguments for 'xackpos'"
             );
             let key = s(&args[0])?;
-            let pos = EntryId::parse(&s(&args[1])?).context("ERR invalid stream ID")?;
-            let acked = store.xackpos(&key, pos)?;
+            let acked = if args.len() == 4 {
+                anyhow::ensure!(
+                    s(&args[1])?.eq_ignore_ascii_case("group"),
+                    "ERR syntax error in XACKPOS"
+                );
+                let group = s(&args[2])?;
+                let pos =
+                    EntryId::parse(&s(&args[3])?).context("ERR invalid stream ID")?;
+                store.xackpos_group(&key, &group, pos)?
+            } else {
+                let pos =
+                    EntryId::parse(&s(&args[1])?).context("ERR invalid stream ID")?;
+                store.xackpos(&key, pos)?
+            };
             Ok(Reply(Value::Bulk(acked.to_string().into_bytes())))
         }
         b"XRANGE" => {
@@ -433,9 +458,11 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
             Ok(Reply(encode_entries(&entries)))
         }
         b"XREAD" => {
-            // XREAD [COUNT n] STREAMS key... id...
+            // XREAD [COUNT n] [STRIDE k] [ROI lo:hi] [SINCESTEP s]
+            //       STREAMS key... id...
             let mut i = 0usize;
             let mut count = 0usize;
+            let mut view = ViewOpts::default();
             while i < args.len() {
                 let word = s(&args[i])?.to_ascii_uppercase();
                 match word.as_str() {
@@ -444,6 +471,32 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
                         count = s(&args[i + 1])?
                             .parse()
                             .context("ERR value is not an integer")?;
+                        i += 2;
+                    }
+                    "STRIDE" => {
+                        anyhow::ensure!(i + 1 < args.len(), "ERR syntax error");
+                        let k: usize = s(&args[i + 1])?
+                            .parse()
+                            .context("ERR value is not an integer")?;
+                        anyhow::ensure!(k >= 1, "ERR STRIDE must be >= 1");
+                        view.stride = k;
+                        i += 2;
+                    }
+                    "ROI" => {
+                        anyhow::ensure!(i + 1 < args.len(), "ERR syntax error");
+                        view.roi = Some(
+                            StagesConfig::parse_roi(&s(&args[i + 1])?)
+                                .context("ERR invalid ROI")?,
+                        );
+                        i += 2;
+                    }
+                    "SINCESTEP" => {
+                        anyhow::ensure!(i + 1 < args.len(), "ERR syntax error");
+                        view.since_step = Some(
+                            s(&args[i + 1])?
+                                .parse()
+                                .context("ERR value is not an integer")?,
+                        );
                         i += 2;
                     }
                     "STREAMS" => {
@@ -469,6 +522,7 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
                     EntryId::parse(&id_s).context("ERR invalid stream ID")?
                 };
                 let entries = store.read_after(&key, after, count);
+                let entries = reduce_entries(store, entries, &view)?;
                 if !entries.is_empty() {
                     replies.push(Value::Array(vec![
                         Value::Bulk(key.into_bytes()),
@@ -487,6 +541,110 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
             String::from_utf8_lossy(other)
         ),
     }
+}
+
+/// Server-side reduced-view options parsed from `XREAD STRIDE k ROI lo:hi
+/// SINCESTEP s` (ISSUE 6).  All default to "off"; `is_passthrough` lets the
+/// hot path skip payload decode entirely when no view was requested.
+#[derive(Debug, Clone, Default)]
+struct ViewOpts {
+    /// Block-mean decimation factor along the last axis; 0 or 1 = off.
+    stride: usize,
+    /// Region of interest `[lo, hi)` along the last axis.
+    roi: Option<(u32, u32)>,
+    /// Drop entries whose record step is below this.
+    since_step: Option<u64>,
+}
+
+impl ViewOpts {
+    fn is_passthrough(&self) -> bool {
+        self.stride <= 1 && self.roi.is_none() && self.since_step.is_none()
+    }
+}
+
+/// Apply a reduced view to freshly read entries.  Entries whose `"r"` field
+/// fails to decode are counted via [`Store::note_corrupt_record`] and passed
+/// through untouched (the reader's own corrupt-record handling decides);
+/// tombstone/handoff entries without an `"r"` field always pass through.
+fn reduce_entries(store: &Store, entries: Vec<Entry>, view: &ViewOpts) -> Result<Vec<Entry>> {
+    if view.is_passthrough() {
+        return Ok(entries);
+    }
+    let mut out = Vec::with_capacity(entries.len());
+    'entries: for mut e in entries {
+        for fv in e.fields.iter_mut() {
+            if fv.0 != b"r" {
+                continue;
+            }
+            let rec = match StreamRecord::decode(&fv.1) {
+                Ok(rec) => rec,
+                Err(err) => {
+                    store.note_corrupt_record();
+                    log::warn!("XREAD view: undecodable record in entry {}: {err:#}", e.id);
+                    continue;
+                }
+            };
+            if let Some(since) = view.since_step {
+                if rec.step < since {
+                    continue 'entries;
+                }
+            }
+            fv.1 = reduce_record(&rec, view)?;
+        }
+        out.push(e);
+    }
+    Ok(out)
+}
+
+/// Re-stage one decoded record through the `broker::stages` ROI/block-mean
+/// ops and re-encode it as a self-describing EBR2 frame (F32 / no codec) so
+/// transparent decode on the reader works unchanged.
+fn reduce_record(rec: &StreamRecord, view: &ViewOpts) -> Result<Vec<u8>> {
+    let mut shape = rec.shape.clone();
+    let mut data = rec.payload_f32().context("ERR record payload is not f32")?;
+    let mut tags = String::new();
+    if let Some((lo, hi)) = view.roi {
+        let (s2, d2) = stages::crop_last_axis(&shape, &data, lo, hi)
+            .context("ERR ROI out of bounds for stream shape")?;
+        shape = s2;
+        data = d2;
+        tags.push_str(&format!("+view.roi={lo}:{hi}"));
+    }
+    if view.stride > 1 {
+        let (s2, d2) = stages::block_mean_last_axis(&shape, &data, view.stride)
+            .context("ERR STRIDE invalid for stream shape")?;
+        shape = s2;
+        data = d2;
+        tags.push_str(&format!("+view.stride={}", view.stride));
+    }
+    let mut payload = Vec::with_capacity(data.len() * 4);
+    for v in &data {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    let raw_len = payload.len() as u32;
+    let prev = rec.meta.as_ref();
+    let meta = FrameMeta {
+        encoding: Encoding::F32,
+        codec: CodecKind::None,
+        enc_param: 0.0,
+        err_bound: prev.map(|m| m.err_bound).unwrap_or(0.0),
+        raw_len,
+        stats: Some(stages::field_stats(&data)),
+        provenance: format!(
+            "{}{tags}",
+            prev.map(|m| m.provenance.as_str()).unwrap_or("raw")
+        ),
+    };
+    let reduced = StreamRecord::from_staged(
+        &rec.field,
+        rec.rank,
+        rec.step,
+        rec.gen_micros,
+        &shape,
+        payload,
+        meta,
+    );
+    Ok(reduced.encode())
 }
 
 fn encode_entries(entries: &[super::store::Entry]) -> Value {
@@ -863,6 +1021,127 @@ mod tests {
         drop(c);
         drop(srv);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE 6: `XACKPOS key GROUP name id` maintains independent cursors
+    /// per consumer group over the wire.
+    #[test]
+    fn xackpos_group_form_over_the_wire() {
+        let srv = server();
+        let mut c = conn(&srv);
+        let id1 = c.request(&[b"XADD", b"s", b"*", b"r", b"a"]).unwrap();
+        let id2 = c.request(&[b"XADD", b"s", b"*", b"r", b"b"]).unwrap();
+        let (id1, id2) = (id1.as_str_lossy(), id2.as_str_lossy());
+        let a = c
+            .request(&[b"XACKPOS", b"s", b"GROUP", b"dash", id1.as_bytes()])
+            .unwrap();
+        assert_eq!(a.as_str_lossy(), id1);
+        let b = c
+            .request(&[b"XACKPOS", b"s", b"group", b"dmd", id2.as_bytes()])
+            .unwrap();
+        assert_eq!(b.as_str_lossy(), id2);
+        assert_eq!(srv.store().acked_group("s", "dash").to_string(), id1);
+        assert_eq!(srv.store().acked_group("s", "dmd").to_string(), id2);
+        // the bare form still drives the default group
+        let d = c.request(&[b"XACKPOS", b"s", id2.as_bytes()]).unwrap();
+        assert_eq!(d.as_str_lossy(), id2);
+        assert_eq!(srv.store().acked("s").to_string(), id2);
+        // malformed group forms are errors, not disconnects
+        assert!(c
+            .request(&[b"XACKPOS", b"s", b"GRUOP", b"g", id1.as_bytes()])
+            .unwrap()
+            .is_error());
+        assert!(c
+            .request(&[b"XACKPOS", b"s", b"GROUP", b"", id1.as_bytes()])
+            .unwrap()
+            .is_error());
+        c.ping().unwrap();
+    }
+
+    /// ISSUE 6: STRIDE/ROI/SINCESTEP produce a reduced, self-describing
+    /// EBR2 frame whose payload matches the `broker::stages` oracle ops
+    /// bit-exactly after transparent decode.
+    #[test]
+    fn xread_reduced_views_match_stages_oracle() {
+        let srv = server();
+        let mut c = conn(&srv);
+        let data: Vec<f32> = (0..32).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let rec =
+            StreamRecord::from_f32("u", 0, 7, 123, &[2, 16], &data).unwrap();
+        c.request(&[b"XADD", b"u/0", b"*", b"r", &rec.encode()])
+            .unwrap();
+
+        let fetch = |c: &mut RespConn, extra: &[&[u8]]| -> StreamRecord {
+            let mut cmd: Vec<&[u8]> = vec![b"XREAD"];
+            cmd.extend_from_slice(extra);
+            cmd.extend_from_slice(&[b"STREAMS", b"u/0", b"0-0"]);
+            let reply = c.request(&cmd).unwrap();
+            let entries = reply.as_array().unwrap()[0].as_array().unwrap()[1]
+                .as_array()
+                .unwrap();
+            assert_eq!(entries.len(), 1);
+            let fields = entries[0].as_array().unwrap()[1].as_array().unwrap();
+            assert_eq!(fields[0].as_bytes().unwrap(), b"r");
+            StreamRecord::decode(fields[1].as_bytes().unwrap()).unwrap()
+        };
+
+        // STRIDE 4 == block_mean_last_axis oracle, bit-exact
+        let got = fetch(&mut c, &[b"STRIDE", b"4"]);
+        let (oshape, odata) =
+            stages::block_mean_last_axis(&[2, 16], &data, 4).unwrap();
+        assert_eq!(got.shape, oshape);
+        assert_eq!(got.payload_f32().unwrap(), odata);
+        assert_eq!(got.step, 7);
+        assert!(got.meta.as_ref().unwrap().provenance.contains("view.stride=4"));
+
+        // ROI crops before the stride is applied
+        let got = fetch(&mut c, &[b"ROI", b"4:12", b"STRIDE", b"2"]);
+        let (cshape, cdata) = stages::crop_last_axis(&[2, 16], &data, 4, 12).unwrap();
+        let (oshape, odata) = stages::block_mean_last_axis(&cshape, &cdata, 2).unwrap();
+        assert_eq!(got.shape, oshape);
+        assert_eq!(got.payload_f32().unwrap(), odata);
+
+        // SINCESTEP above the record's step filters the entry out
+        let reply = c
+            .request(&[b"XREAD", b"SINCESTEP", b"8", b"STREAMS", b"u/0", b"0-0"])
+            .unwrap();
+        assert_eq!(reply, Value::NullArray);
+        // ...and at/below it the entry survives
+        let got = fetch(&mut c, &[b"SINCESTEP", b"7"]);
+        assert_eq!(got.payload_f32().unwrap(), data);
+
+        // out-of-bounds ROI is a clean error
+        let reply = c
+            .request(&[b"XREAD", b"ROI", b"4:99", b"STREAMS", b"u/0", b"0-0"])
+            .unwrap();
+        assert!(reply.is_error());
+        // STRIDE 0 is rejected at parse time
+        let reply = c
+            .request(&[b"XREAD", b"STRIDE", b"0", b"STREAMS", b"u/0", b"0-0"])
+            .unwrap();
+        assert!(reply.is_error());
+        c.ping().unwrap();
+    }
+
+    /// ISSUE 6 satellite: an undecodable `"r"` payload under a reduced view
+    /// bumps `records_corrupt` (visible in INFO) and passes through raw.
+    #[test]
+    fn reduced_view_counts_corrupt_records() {
+        let srv = server();
+        let mut c = conn(&srv);
+        c.request(&[b"XADD", b"u/0", b"*", b"r", b"not-a-record"])
+            .unwrap();
+        let reply = c
+            .request(&[b"XREAD", b"STRIDE", b"2", b"STREAMS", b"u/0", b"0-0"])
+            .unwrap();
+        let entries = reply.as_array().unwrap()[0].as_array().unwrap()[1]
+            .as_array()
+            .unwrap();
+        let fields = entries[0].as_array().unwrap()[1].as_array().unwrap();
+        assert_eq!(fields[1].as_bytes().unwrap(), b"not-a-record");
+        assert_eq!(srv.store().records_corrupt(), 1);
+        let info = c.request(&[b"INFO"]).unwrap();
+        assert!(info.as_str_lossy().contains("records_corrupt:1"));
     }
 
     #[test]

@@ -37,13 +37,22 @@
 //!   readable: [`Store::range`]/[`Store::read_after`] transparently
 //!   fall back to log reads below the eviction watermark);
 //! * **maxlen** — with [`StoreConfig::retention`], entries above the
-//!   stream's acked cursor ([`Store::xackpos`], `XACKPOS`) are *never*
-//!   trimmed (unread data cannot be silently dropped); without
-//!   retention the pre-durability trim behaviour stands but every
-//!   dropped-unread entry is counted in `trimmed_unread`.
+//!   stream's **ack floor** are *never* trimmed (unread data cannot be
+//!   silently dropped); without retention the pre-durability trim
+//!   behaviour stands but every dropped-unread entry is counted in
+//!   `trimmed_unread`.
 //!
-//! Acks also drive log retention: segments wholly at or below the acked
-//! cursors are deleted ([`super::wal::Wal::collect_garbage`]).
+//! **Consumer groups (ISSUE 6):** each stream carries N independent
+//! named ack cursors ([`Store::xackpos_group`], `XACKPOS key GROUP
+//! name id`); the plain `XACKPOS key id` form acks the
+//! [`DEFAULT_GROUP`].  The retention/GC floor is the *minimum* cursor
+//! across a stream's groups, so a lagging dashboard keeps entries
+//! readable while a fast analysis group's acks cannot trim them away.
+//! Every group cursor is logged and replayed, so a restart preserves
+//! every subscriber's position.
+//!
+//! Acks also drive log retention: segments wholly at or below the ack
+//! floors are deleted ([`super::wal::Wal::collect_garbage`]).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -51,7 +60,10 @@ use std::sync::{Mutex, RwLock};
 
 use anyhow::{bail, Context, Result};
 
-use super::wal::{Wal, WalConfig, WalOp, WalStats};
+use super::wal::{ack_floor, Wal, WalConfig, WalOp, WalStats};
+
+/// The consumer group the group-less `XACKPOS key id` form acks.
+pub const DEFAULT_GROUP: &str = "default";
 
 /// A Redis-style stream entry id: milliseconds + sequence.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
@@ -123,9 +135,12 @@ struct Stream {
     /// stream exactly-once when a writer re-ships an unacked frame
     /// after a connection failure.
     last_step: u64,
-    /// Reader-acknowledged cursor (`XACKPOS`): everything at or below
-    /// is consumed — the retention floor for trimming and log GC.
-    acked: EntryId,
+    /// Per-consumer-group acknowledged cursors (`XACKPOS`): everything
+    /// at or below a group's cursor is consumed *by that group*.  The
+    /// retention floor for trimming and log GC is the minimum across
+    /// groups (`0-0` while any group — or every group — has yet to
+    /// ack).
+    groups: HashMap<String, EntryId>,
     /// Entries evicted from memory under budget pressure (still in the
     /// WAL; reads inside `[evicted_from, evicted_below)` fall back to
     /// log reads).
@@ -148,7 +163,7 @@ impl Default for Stream {
             added: 0,
             writer_epoch: 0,
             last_step: u64::MAX, // sentinel: no fenced write yet
-            acked: EntryId::ZERO,
+            groups: HashMap::new(),
             evicted: 0,
             evicted_from: EntryId::ZERO,
             evicted_below: EntryId::ZERO,
@@ -163,6 +178,12 @@ impl Stream {
         } else {
             Some(self.last_step)
         }
+    }
+
+    /// The retention/trim floor: min acked cursor across groups (`0-0`
+    /// when no group ever acked — keep everything).
+    fn ack_floor(&self) -> EntryId {
+        ack_floor(&self.groups)
     }
 }
 
@@ -263,6 +284,10 @@ pub struct Store {
     trimmed_unread: AtomicU64,
     /// Entries evicted from memory to the log under budget pressure.
     evicted_entries: AtomicU64,
+    /// Records that failed to decode while serving (e.g. a reduced-view
+    /// `XREAD` hitting an undecodable payload) — operator-visible in
+    /// INFO instead of warn-only logs.
+    records_corrupt: AtomicU64,
 }
 
 impl Store {
@@ -291,6 +316,7 @@ impl Store {
             replayed: 0,
             trimmed_unread: AtomicU64::new(0),
             evicted_entries: AtomicU64::new(0),
+            records_corrupt: AtomicU64::new(0),
         };
         if let Some(wal_cfg) = store.cfg.wal.clone() {
             let (wal, replay) = Wal::open(wal_cfg).context("opening endpoint wal")?;
@@ -311,7 +337,7 @@ impl Store {
                     added: 0,
                     writer_epoch: rs.epoch,
                     last_step: rs.step,
-                    acked: rs.acked,
+                    groups: rs.acked,
                     evicted: 0,
                     evicted_from: EntryId::ZERO,
                     evicted_below: EntryId::ZERO,
@@ -499,30 +525,42 @@ impl Store {
         })
     }
 
-    /// Record a reader's consumed cursor (`XACKPOS key id`): everything
-    /// at or below `pos` is acknowledged.  The ack is logged (it is the
-    /// retention floor recovery must know) and log segments wholly
-    /// below the acked cursors are reclaimed.  Returns the stream's
-    /// acked cursor after the call.  Acking an unknown (or concurrently
-    /// deleted) stream is a no-op answering `0-0` — it must not
-    /// resurrect a phantom stream, in memory or in the log.
+    /// Record the [`DEFAULT_GROUP`]'s consumed cursor (`XACKPOS key
+    /// id`).  See [`Store::xackpos_group`].
     pub fn xackpos(&self, key: &str, pos: EntryId) -> Result<EntryId> {
+        self.xackpos_group(key, DEFAULT_GROUP, pos)
+    }
+
+    /// Record a consumer group's consumed cursor (`XACKPOS key GROUP
+    /// name id`): everything at or below `pos` is acknowledged *by that
+    /// group*.  The ack is logged (group cursors are retention state
+    /// recovery must know) and log segments wholly below every group's
+    /// cursor are reclaimed.  Returns the group's cursor after the
+    /// call.  Acking an unknown (or concurrently deleted) stream is a
+    /// no-op answering `0-0` — it must not resurrect a phantom stream,
+    /// in memory or in the log.
+    pub fn xackpos_group(&self, key: &str, group: &str, pos: EntryId) -> Result<EntryId> {
+        anyhow::ensure!(!group.is_empty(), "ERR empty consumer group name");
         let acked = {
             let map = self.shard(key).streams.read().unwrap();
             let Some(stream) = map.get(key) else {
                 return Ok(EntryId::ZERO);
             };
             let mut s = stream.lock().unwrap();
-            if pos > s.acked {
+            let cur = s.groups.get(group).copied().unwrap_or(EntryId::ZERO);
+            if pos > cur {
                 if let Some(w) = &self.wal {
                     w.append(&WalOp::Ack {
                         key: key.to_string(),
+                        group: group.to_string(),
                         pos,
                     })?;
                 }
-                s.acked = pos;
+                s.groups.insert(group.to_string(), pos);
+                pos
+            } else {
+                cur
             }
-            s.acked
         };
         if let Some(w) = &self.wal {
             w.collect_garbage();
@@ -530,11 +568,27 @@ impl Store {
         Ok(acked)
     }
 
-    /// Reader-acked cursor of `key` (`0-0` when absent or never acked).
+    /// The [`DEFAULT_GROUP`]'s acked cursor of `key` (`0-0` when absent
+    /// or never acked).
     pub fn acked(&self, key: &str) -> EntryId {
+        self.acked_group(key, DEFAULT_GROUP)
+    }
+
+    /// A consumer group's acked cursor of `key` (`0-0` when the stream
+    /// is absent or the group never acked).
+    pub fn acked_group(&self, key: &str, group: &str) -> EntryId {
         let map = self.shard(key).streams.read().unwrap();
         map.get(key)
-            .map(|s| s.lock().unwrap().acked)
+            .and_then(|s| s.lock().unwrap().groups.get(group).copied())
+            .unwrap_or(EntryId::ZERO)
+    }
+
+    /// The retention/GC floor of `key`: the minimum acked cursor across
+    /// its consumer groups (`0-0` when absent or no group ever acked).
+    pub fn ack_floor(&self, key: &str) -> EntryId {
+        let map = self.shard(key).streams.read().unwrap();
+        map.get(key)
+            .map(|s| s.lock().unwrap().ack_floor())
             .unwrap_or(EntryId::ZERO)
     }
 
@@ -655,6 +709,10 @@ impl Store {
         if self.cfg.stream_maxlen == 0 {
             return;
         }
+        // Trim floor: the min acked cursor across consumer groups — a
+        // fast group's acks must never drop what a lagging group still
+        // has to read.
+        let floor = s.ack_floor();
         // Oldest first.  The budget-evicted window (log-backed, ids
         // strictly below everything resident) is logically the head of
         // the stream, so maxlen drops it *before* any resident entry —
@@ -669,13 +727,13 @@ impl Store {
                 ms: s.evicted_below.ms,
                 seq: s.evicted_below.seq.saturating_sub(1),
             };
-            if self.cfg.retention && last_evicted > s.acked {
+            if self.cfg.retention && last_evicted > floor {
                 // unread data in the window: retention forbids the trim
                 // (and the resident front is younger still, so nothing
                 // below can trim either)
                 return;
             }
-            if count_unread && s.acked < s.evicted_from {
+            if count_unread && floor < s.evicted_from {
                 // the whole window was dropped unread; a partially-acked
                 // window (acked inside the range) is approximated as
                 // read — the consumer provably reached into it.
@@ -692,12 +750,12 @@ impl Store {
         while s.entries.len() > self.cfg.stream_maxlen {
             {
                 let old = s.entries.front().unwrap();
-                if self.cfg.retention && old.id > s.acked {
+                if self.cfg.retention && old.id > floor {
                     break; // unread data: retention forbids the trim
                 }
             }
             let old = s.entries.pop_front().unwrap();
-            if count_unread && old.id > s.acked {
+            if count_unread && old.id > floor {
                 self.trimmed_unread.fetch_add(1, Ordering::Relaxed);
             }
             let osz = old.byte_size();
@@ -990,6 +1048,7 @@ impl Store {
             "# Server\r\nserver:elasticbroker-endpoint\r\nversion:0.1.0\r\nproto:RESP2\r\n\
              # Memory\r\nused_memory:{}\r\nmaxmemory:{}\r\n\
              # Streams\r\nstreams:{}\r\ntotal_entries_added:{}\r\nstream_maxlen:{}\r\nshards:{}\r\n\
+             records_corrupt:{}\r\n\
              # Persistence\r\nwal_enabled:{}\r\nretention:{}\r\nwal_bytes:{}\r\nwal_segments:{}\r\n\
              wal_fsync:{}\r\nlast_fsync_us:{}\r\nreplayed_entries:{}\r\ntrimmed_unread:{}\r\n\
              evicted_entries:{}\r\ngc_segments:{}\r\n",
@@ -999,6 +1058,7 @@ impl Store {
             self.total_entries.load(Ordering::Relaxed),
             self.cfg.stream_maxlen,
             self.shards.len(),
+            self.records_corrupt.load(Ordering::Relaxed),
             u8::from(self.wal.is_some()),
             u8::from(self.cfg.retention),
             wal.bytes,
@@ -1046,6 +1106,17 @@ impl Store {
     /// Entries evicted from memory to the log under budget pressure.
     pub fn evicted_entries(&self) -> u64 {
         self.evicted_entries.load(Ordering::Relaxed)
+    }
+
+    /// Count a record that failed to decode while serving it.
+    pub fn note_corrupt_record(&self) {
+        self.records_corrupt.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Records that failed to decode while serving (INFO
+    /// `records_corrupt`).
+    pub fn records_corrupt(&self) -> u64 {
+        self.records_corrupt.load(Ordering::Relaxed)
     }
 
     /// Force everything logged so far to disk (any fsync policy); no-op
@@ -1709,6 +1780,117 @@ mod tests {
             after.segments
         );
         assert_eq!(store.acked("s"), last);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE 6 (in-memory): group cursors are independent — one group's
+    /// acks never move another's position, and the floor is their min.
+    #[test]
+    fn group_cursors_are_independent() {
+        let store = Store::new(StoreConfig::default());
+        let mut ids = Vec::new();
+        for i in 0..10u64 {
+            ids.push(
+                store
+                    .xadd("s", Some(EntryId { ms: i + 1, seq: 0 }), fields("x"))
+                    .unwrap(),
+            );
+        }
+        assert_eq!(store.ack_floor("s"), EntryId::ZERO);
+        store.xackpos_group("s", "fast", ids[9]).unwrap();
+        store.xackpos_group("s", "slow", ids[2]).unwrap();
+        assert_eq!(store.acked_group("s", "fast"), ids[9]);
+        assert_eq!(store.acked_group("s", "slow"), ids[2]);
+        assert_eq!(store.acked_group("s", "absent"), EntryId::ZERO);
+        assert_eq!(store.ack_floor("s"), ids[2]);
+        // a stale (regressing) ack is ignored, cursor answered back
+        assert_eq!(
+            store.xackpos_group("s", "fast", ids[1]).unwrap(),
+            ids[9]
+        );
+        // the group-less form is the "default" group, independent too
+        store.xackpos("s", ids[5]).unwrap();
+        assert_eq!(store.acked("s"), ids[5]);
+        assert_eq!(store.acked_group("s", DEFAULT_GROUP), ids[5]);
+        assert_eq!(store.ack_floor("s"), ids[2]);
+        assert!(store.xackpos_group("s", "", ids[1]).is_err());
+    }
+
+    /// ISSUE 6 (WAL-backed): the retention trim floor is the min across
+    /// group cursors — a fast group acking everything must not trim
+    /// entries a lagging group still has to read; the laggard catching
+    /// up unlocks the trim.
+    #[test]
+    fn retention_floor_is_min_across_groups() {
+        let dir = wal_dir("retention-groups");
+        let store = Store::open(StoreConfig {
+            stream_maxlen: 5,
+            retention: true,
+            wal: Some(WalConfig {
+                dir: dir.clone(),
+                fsync: FsyncPolicy::Never,
+                segment_bytes: 1 << 20,
+            }),
+            ..Default::default()
+        })
+        .unwrap();
+        let mut ids = Vec::new();
+        for i in 0..12u64 {
+            ids.push(
+                store
+                    .xadd("s", Some(EntryId { ms: i + 1, seq: 0 }), fields("x"))
+                    .unwrap(),
+            );
+        }
+        // fast group consumed everything; lagging group read 3 entries
+        store.xackpos_group("s", "fast", ids[11]).unwrap();
+        store.xackpos_group("s", "lagging", ids[2]).unwrap();
+        store
+            .xadd("s", Some(EntryId { ms: 100, seq: 0 }), fields("x"))
+            .unwrap();
+        // only the laggard's consumed prefix (ids 1-3) may trim
+        assert_eq!(store.xlen("s"), 10);
+        let first = store.read_after("s", EntryId::ZERO, 1);
+        assert_eq!(first[0].id, ids[3], "laggard's unread entries trimmed");
+        assert_eq!(store.trimmed_unread(), 0);
+        // the laggard reads on from its own cursor, in order
+        let rest = store.read_after("s", store.acked_group("s", "lagging"), 0);
+        assert_eq!(rest.len(), 10);
+        assert_eq!(rest[0].id, ids[3]);
+        // laggard catches up: floor rises, maxlen trim unlocks
+        store.xackpos_group("s", "lagging", ids[11]).unwrap();
+        store
+            .xadd("s", Some(EntryId { ms: 101, seq: 0 }), fields("x"))
+            .unwrap();
+        assert_eq!(store.xlen("s"), 5);
+        assert_eq!(store.trimmed_unread(), 0, "retention never drops unread");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE 6: a restart preserves every group's persisted cursor (the
+    /// WAL logs and replays group acks).
+    #[test]
+    fn restart_restores_group_cursors() {
+        let (cfg, dir) = durable_cfg("group-cursors");
+        let mut ids = Vec::new();
+        {
+            let store = Store::open(cfg.clone()).unwrap();
+            for i in 0..8u64 {
+                ids.push(
+                    store
+                        .xadd("s", Some(EntryId { ms: i + 1, seq: 0 }), fields("x"))
+                        .unwrap(),
+                );
+            }
+            store.xackpos_group("s", "a", ids[7]).unwrap();
+            store.xackpos_group("s", "b", ids[3]).unwrap();
+            store.xackpos("s", ids[1]).unwrap();
+        }
+        let store = Store::open(cfg).unwrap();
+        assert_eq!(store.acked_group("s", "a"), ids[7]);
+        assert_eq!(store.acked_group("s", "b"), ids[3]);
+        assert_eq!(store.acked("s"), ids[1]);
+        assert_eq!(store.ack_floor("s"), ids[1]);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

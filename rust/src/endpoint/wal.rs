@@ -38,12 +38,15 @@
 //! measures); `EveryMs(n)` acks after the buffered write and bounds loss
 //! to `n` ms via a background flusher; `Never` leaves syncing to the OS.
 //!
-//! **Retention.**  Readers acknowledge consumed cursors (`XACKPOS`);
-//! [`Wal::collect_garbage`] deletes closed segments from the front of
-//! the log while every entry they hold is at or below its stream's
-//! acked cursor (or the stream was deleted).  Entries evicted from
-//! memory by the store's budget remain readable through
-//! [`Wal::read_entries`] until they are acked away.
+//! **Retention.**  Reader *groups* acknowledge consumed cursors
+//! (`XACKPOS key [GROUP name] id`); each group's cursor is logged and
+//! replayed independently, so a restart preserves every subscriber's
+//! position.  [`Wal::collect_garbage`] deletes closed segments from the
+//! front of the log while every entry they hold is at or below the
+//! stream's **ack floor** — the minimum cursor across all of its groups
+//! (or the stream was deleted).  Entries evicted from memory by the
+//! store's budget remain readable through [`Wal::read_entries`] until
+//! every group has acked past them.
 
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
@@ -133,8 +136,9 @@ pub struct StreamMeta {
     pub epoch: u64,
     /// Step high-water mark (`u64::MAX` = no fenced write yet).
     pub step: u64,
-    /// Reader-acked cursor (retention floor).
-    pub acked: EntryId,
+    /// Per-group reader-acked cursors, sorted by group name (the
+    /// retention floor is the minimum across them).
+    pub acked: Vec<(String, EntryId)>,
 }
 
 /// One logged state mutation.
@@ -153,8 +157,13 @@ pub enum WalOp {
     },
     /// Fence raised without an entry (`HELLO`).
     Fence { key: String, epoch: u64 },
-    /// Reader acknowledged everything at or below `pos` (`XACKPOS`).
-    Ack { key: String, pos: EntryId },
+    /// Consumer group `group` acknowledged everything at or below `pos`
+    /// (`XACKPOS`).
+    Ack {
+        key: String,
+        group: String,
+        pos: EntryId,
+    },
     /// Streams deleted (`DEL` / `FLUSHALL`).
     Del { keys: Vec<String> },
     /// Segment-head metadata snapshot (written at rotation).
@@ -220,10 +229,11 @@ impl WalOp {
                 out.extend_from_slice(&epoch.to_le_bytes());
                 out
             }
-            WalOp::Ack { key, pos } => {
-                let mut out = Vec::with_capacity(3 + key.len() + 16);
+            WalOp::Ack { key, group, pos } => {
+                let mut out = Vec::with_capacity(5 + key.len() + group.len() + 16);
                 out.push(TAG_ACK);
                 put_str(&mut out, key);
+                put_str(&mut out, group);
                 put_id(&mut out, *pos);
                 out
             }
@@ -245,7 +255,11 @@ impl WalOp {
                     put_id(&mut out, m.last_id);
                     out.extend_from_slice(&m.epoch.to_le_bytes());
                     out.extend_from_slice(&m.step.to_le_bytes());
-                    put_id(&mut out, m.acked);
+                    out.extend_from_slice(&(m.acked.len() as u16).to_le_bytes());
+                    for (group, pos) in &m.acked {
+                        put_str(&mut out, group);
+                        put_id(&mut out, *pos);
+                    }
                 }
                 out
             }
@@ -283,6 +297,7 @@ impl WalOp {
             },
             TAG_ACK => WalOp::Ack {
                 key: r.str()?,
+                group: r.str()?,
                 pos: r.id()?,
             },
             TAG_DEL => {
@@ -297,12 +312,21 @@ impl WalOp {
                 let n = r.u32()? as usize;
                 let mut streams = Vec::with_capacity(n.min(4096));
                 for _ in 0..n {
+                    let key = r.str()?;
+                    let last_id = r.id()?;
+                    let epoch = r.u64()?;
+                    let step = r.u64()?;
+                    let ngroups = r.u16()? as usize;
+                    let mut acked = Vec::with_capacity(ngroups.min(1024));
+                    for _ in 0..ngroups {
+                        acked.push((r.str()?, r.id()?));
+                    }
                     streams.push(StreamMeta {
-                        key: r.str()?,
-                        last_id: r.id()?,
-                        epoch: r.u64()?,
-                        step: r.u64()?,
-                        acked: r.id()?,
+                        key,
+                        last_id,
+                        epoch,
+                        step,
+                        acked,
                     });
                 }
                 WalOp::Snapshot { streams }
@@ -366,7 +390,8 @@ pub struct ReplayedStream {
     pub epoch: u64,
     /// `u64::MAX` = no fenced write yet.
     pub step: u64,
-    pub acked: EntryId,
+    /// Per-group acked cursors (empty = nothing ever acked).
+    pub acked: HashMap<String, EntryId>,
 }
 
 impl Default for ReplayedStream {
@@ -376,9 +401,15 @@ impl Default for ReplayedStream {
             last_id: EntryId::ZERO,
             epoch: 0,
             step: u64::MAX,
-            acked: EntryId::ZERO,
+            acked: HashMap::new(),
         }
     }
+}
+
+/// The retention/GC floor of a set of group cursors: the minimum across
+/// all groups, `0-0` when no group has ever acked (keep everything).
+pub fn ack_floor(groups: &HashMap<String, EntryId>) -> EntryId {
+    groups.values().copied().min().unwrap_or(EntryId::ZERO)
 }
 
 /// Everything [`Wal::open`] reconstructed from disk.
@@ -406,7 +437,8 @@ struct KeyMeta {
     last_id: EntryId,
     epoch: u64,
     step: u64,
-    acked: EntryId,
+    /// Per-group acked cursors (GC floor = min across them).
+    acked: HashMap<String, EntryId>,
 }
 
 struct Segment {
@@ -609,10 +641,11 @@ fn apply_replay(
             let st = replay.streams.entry(key).or_default();
             st.epoch = st.epoch.max(epoch);
         }
-        WalOp::Ack { key, pos } => {
+        WalOp::Ack { key, group, pos } => {
             let st = replay.streams.entry(key).or_default();
-            if pos > st.acked {
-                st.acked = pos;
+            let cur = st.acked.entry(group).or_insert(EntryId::ZERO);
+            if pos > *cur {
+                *cur = pos;
             }
         }
         WalOp::Del { keys } => {
@@ -634,8 +667,11 @@ fn apply_replay(
                         st.step.max(m.step)
                     };
                 }
-                if m.acked > st.acked {
-                    st.acked = m.acked;
+                for (group, pos) in m.acked {
+                    let cur = st.acked.entry(group).or_insert(EntryId::ZERO);
+                    if pos > *cur {
+                        *cur = pos;
+                    }
                 }
             }
         }
@@ -729,7 +765,7 @@ impl Wal {
                         last_id: s.last_id,
                         epoch: s.epoch,
                         step: s.step,
-                        acked: s.acked,
+                        acked: s.acked.clone(),
                     },
                 )
             })
@@ -789,7 +825,16 @@ impl Wal {
                     fields.len()
                 );
             }
-            WalOp::Fence { key, .. } | WalOp::Ack { key, .. } => validate_key(key)?,
+            WalOp::Fence { key, .. } => validate_key(key)?,
+            WalOp::Ack { key, group, .. } => {
+                validate_key(key)?;
+                anyhow::ensure!(
+                    group.len() <= u16::MAX as usize,
+                    "wal: group name too long for the log ({} bytes, max {})",
+                    group.len(),
+                    u16::MAX
+                );
+            }
             WalOp::Del { keys } => {
                 anyhow::ensure!(
                     keys.len() <= u16::MAX as usize,
@@ -817,10 +862,11 @@ impl Wal {
                 let m = meta_entry(meta, key);
                 m.epoch = m.epoch.max(*epoch);
             }
-            WalOp::Ack { key, pos } => {
+            WalOp::Ack { key, group, pos } => {
                 let m = meta_entry(meta, key);
-                if *pos > m.acked {
-                    m.acked = *pos;
+                let cur = m.acked.entry(group.clone()).or_insert(EntryId::ZERO);
+                if *pos > *cur {
+                    *cur = *pos;
                 }
             }
             WalOp::Del { keys } => {
@@ -949,12 +995,20 @@ impl Wal {
             streams: st
                 .meta
                 .iter()
-                .map(|(k, m)| StreamMeta {
-                    key: k.clone(),
-                    last_id: m.last_id,
-                    epoch: m.epoch,
-                    step: m.step,
-                    acked: m.acked,
+                .map(|(k, m)| {
+                    let mut acked: Vec<(String, EntryId)> = m
+                        .acked
+                        .iter()
+                        .map(|(g, p)| (g.clone(), *p))
+                        .collect();
+                    acked.sort();
+                    StreamMeta {
+                        key: k.clone(),
+                        last_id: m.last_id,
+                        epoch: m.epoch,
+                        step: m.step,
+                        acked,
+                    }
                 })
                 .collect(),
         };
@@ -1034,7 +1088,8 @@ impl Wal {
                 None => false,
                 Some(first) => first.max_ids.iter().all(|(k, max)| {
                     match st.meta.get(k) {
-                        Some(m) => m.acked >= *max,
+                        // every group must have acked past the segment
+                        Some(m) => ack_floor(&m.acked) >= *max,
                         None => true, // stream deleted: data is dead
                     }
                 }),
@@ -1096,7 +1151,7 @@ fn meta_entry<'a>(
                 last_id: EntryId::ZERO,
                 epoch: 0,
                 step: u64::MAX,
-                acked: EntryId::ZERO,
+                acked: HashMap::new(),
             },
         );
     }
@@ -1199,6 +1254,7 @@ mod tests {
             },
             WalOp::Ack {
                 key: "u/2".into(),
+                group: "default".into(),
                 pos: EntryId { ms: 9, seq: 3 },
             },
             WalOp::Del {
@@ -1210,7 +1266,10 @@ mod tests {
                     last_id: EntryId { ms: 42, seq: 7 },
                     epoch: 3,
                     step: u64::MAX,
-                    acked: EntryId { ms: 1, seq: 0 },
+                    acked: vec![
+                        ("dash".into(), EntryId { ms: 1, seq: 0 }),
+                        ("default".into(), EntryId { ms: 4, seq: 2 }),
+                    ],
                 }],
             },
         ];
@@ -1238,6 +1297,7 @@ mod tests {
             wal.append_add("u/0", &entry(6, "b"), 2, 1).unwrap();
             wal.append(&WalOp::Ack {
                 key: "u/0".into(),
+                group: "default".into(),
                 pos: EntryId { ms: 5, seq: 0 },
             })
             .unwrap();
@@ -1252,7 +1312,8 @@ mod tests {
         assert_eq!(s0.last_id, EntryId { ms: 6, seq: 0 });
         assert_eq!(s0.epoch, 2);
         assert_eq!(s0.step, 1);
-        assert_eq!(s0.acked, EntryId { ms: 5, seq: 0 });
+        assert_eq!(s0.acked["default"], EntryId { ms: 5, seq: 0 });
+        assert_eq!(ack_floor(&s0.acked), EntryId { ms: 5, seq: 0 });
         let s1 = &replay.streams["u/1"];
         assert_eq!(s1.entries.len(), 1);
         assert_eq!(s1.epoch, 0);
@@ -1309,6 +1370,7 @@ mod tests {
             // ack everything: every closed segment goes
             wal.append(&WalOp::Ack {
                 key: "u/0".into(),
+                group: "default".into(),
                 pos: EntryId { ms: 40, seq: 0 },
             })
             .unwrap();
@@ -1322,7 +1384,42 @@ mod tests {
         assert_eq!(s.epoch, 5);
         assert_eq!(s.step, 39);
         assert_eq!(s.last_id, EntryId { ms: 40, seq: 0 });
-        assert_eq!(s.acked, EntryId { ms: 40, seq: 0 });
+        assert_eq!(ack_floor(&s.acked), EntryId { ms: 40, seq: 0 });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// ISSUE 6: the GC floor is the min across group cursors — a fast
+    /// group acking everything must not reclaim segments a lagging
+    /// group still needs; GC resumes once the laggard catches up.
+    #[test]
+    fn gc_floor_is_min_across_groups() {
+        let dir = tmpdir("gc-groups");
+        let (wal, _) = Wal::open(cfg(&dir, FsyncPolicy::Never, 4096)).unwrap();
+        for i in 0..40u64 {
+            let e = Entry {
+                id: EntryId { ms: i + 1, seq: 0 },
+                fields: vec![(b"r".to_vec(), vec![7u8; 256])],
+            };
+            wal.append_add("u/0", &e, 1, i).unwrap();
+        }
+        let before = wal.stats().segments;
+        assert!(before > 1);
+        let ack = |group: &str, ms: u64| {
+            wal.append(&WalOp::Ack {
+                key: "u/0".into(),
+                group: group.into(),
+                pos: EntryId { ms, seq: 0 },
+            })
+            .unwrap();
+        };
+        // fast group done, lagging group barely started: nothing goes
+        ack("fast", 40);
+        ack("lagging", 1);
+        assert_eq!(wal.collect_garbage(), 0, "laggard's segments reclaimed");
+        // laggard catches up: the floor rises and segments go
+        ack("lagging", 40);
+        assert!(wal.collect_garbage() > 0);
+        drop(wal);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

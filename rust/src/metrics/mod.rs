@@ -38,6 +38,12 @@ pub struct Histogram {
     sum: AtomicU64,
     max: AtomicU64,
     min: AtomicU64,
+    /// Max sample since the last [`windowed_quantile`] drain — the
+    /// clamp that keeps a windowed quantile from reporting a bucket
+    /// upper edge no real sample ever reached (ISSUE 6 bugfix).
+    ///
+    /// [`windowed_quantile`]: Histogram::windowed_quantile
+    win_max: AtomicU64,
 }
 
 const SUB: usize = 16;
@@ -56,6 +62,7 @@ impl Histogram {
             sum: AtomicU64::new(0),
             max: AtomicU64::new(0),
             min: AtomicU64::new(u64::MAX),
+            win_max: AtomicU64::new(0),
         }
     }
 
@@ -71,14 +78,16 @@ impl Histogram {
         (major * SUB + sub).min(64 * SUB - 1)
     }
 
-    /// Representative (upper-edge) value of a bucket index.
+    /// Representative (upper-edge) value of a bucket index.  Saturating:
+    /// the top bucket's nominal upper edge (2^63 + 2^63) would otherwise
+    /// overflow u64.
     fn value(idx: usize) -> u64 {
         let major = idx / SUB;
         let sub = idx % SUB;
         if major < 4 {
             return 1u64 << major;
         }
-        (1u64 << major) + ((sub as u64 + 1) << (major - 4))
+        (1u64 << major).saturating_add((sub as u64 + 1) << (major - 4))
     }
 
     pub fn record(&self, v: u64) {
@@ -87,6 +96,7 @@ impl Histogram {
         self.sum.fetch_add(v, Ordering::Relaxed);
         self.max.fetch_max(v, Ordering::Relaxed);
         self.min.fetch_min(v, Ordering::Relaxed);
+        self.win_max.fetch_max(v, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
@@ -141,6 +151,15 @@ impl Histogram {
     /// quantile never decays, so a brief slow spell would otherwise
     /// look like permanent saturation).  Updates `prev` to the current
     /// bucket counts; returns 0 when no new samples arrived.
+    ///
+    /// The result is clamped to the max sample seen in the window
+    /// (mirroring how the lifetime [`quantile`] clamps with
+    /// [`Histogram::max`]) — without the clamp a single last-bucket
+    /// sample would report the bucket's upper edge (up to 2^63), and
+    /// the rebalancer would shed a healthy endpoint off one borderline
+    /// flush.
+    ///
+    /// [`quantile`]: Histogram::quantile
     pub fn windowed_quantile(&self, prev: &mut Vec<u64>, q: f64) -> u64 {
         let n = self.buckets.len();
         if prev.len() != n {
@@ -158,15 +177,19 @@ impl Histogram {
         if total == 0 {
             return 0;
         }
+        // Drain the windowed max; a racing `record` may have bumped the
+        // bucket but not yet the max, so 0 means "no clamp available".
+        let wmax = self.win_max.swap(0, Ordering::Relaxed);
+        let cap = if wmax == 0 { u64::MAX } else { wmax };
         let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
         let mut seen = 0u64;
         for (i, d) in deltas.iter().enumerate() {
             seen += d;
             if seen >= target {
-                return Self::value(i);
+                return Self::value(i).min(cap);
             }
         }
-        Self::value(n - 1)
+        Self::value(n - 1).min(cap)
     }
 
     /// Compact single-line summary for bench tables.
@@ -280,11 +303,11 @@ impl QosBoard {
 /// into this concurrently; everything is atomics underneath.
 #[derive(Default)]
 pub struct StageMetrics {
-    /// Records entering the pipeline (after the legacy per-field
-    /// `Filter`, before any stage).  Note the boundary: reductions the
-    /// per-field `broker::Filter` makes are upstream of this
-    /// accounting — `bytes_in` measures what enters the *stage*
-    /// pipeline, so `reduction_factor` reports the stages' own work.
+    /// Records entering the pipeline, before any stage.  Per-field
+    /// `broker::Filter` transforms are folded into the filter stage
+    /// (ISSUE 6), so `bytes_in` measures the raw snapshot and
+    /// `reduction_factor` covers *every* reduction — transforms
+    /// included, nothing evades the accounting.
     pub records_in: Counter,
     /// Records the filter stage decided never ship (step decimation /
     /// rank subsetting) — intentional reduction, distinct from the
@@ -414,6 +437,11 @@ pub struct WorkflowMetrics {
     pub handoffs: Arc<Counter>,
     /// Transport reconnect attempts by broker writers (all endpoints).
     pub reconnects: Arc<Counter>,
+    /// Records dropped on the consumer poll path because their payload
+    /// failed to decode (ISSUE 6 bugfix: these were warn-only and
+    /// invisible to operators).  Endpoints keep their own server-side
+    /// twin, surfaced as `records_corrupt` in `INFO`.
+    pub records_corrupt: Arc<Counter>,
     /// Re-registrations where the endpoint's recovered step high-water
     /// mark sat *below* what this writer had already been acked for —
     /// an endpoint restarted from a stale WAL (fsync policy looser than
@@ -447,6 +475,7 @@ impl WorkflowMetrics {
             stale_rejections: Arc::new(Counter::new()),
             handoffs: Arc::new(Counter::new()),
             reconnects: Arc::new(Counter::new()),
+            records_corrupt: Arc::new(Counter::new()),
             replay_gaps: Arc::new(Counter::new()),
         }
     }
@@ -554,6 +583,58 @@ mod tests {
         }
         let w = h.windowed_quantile(&mut win, 0.95);
         assert!(w > 0 && w < 10_000, "windowed p95 {w} should be fast");
+    }
+
+    /// ISSUE 6 bugfix: a windowed quantile must never exceed the max
+    /// sample actually recorded in the window.  Before the clamp a
+    /// single 249ms flush reported the bucket upper edge (253,952µs) —
+    /// over the rebalancer's 250ms default threshold — and a single
+    /// top-bucket sample reported ≈2^63.
+    #[test]
+    fn windowed_quantile_clamps_to_window_max() {
+        let h = Histogram::new();
+        let mut win = Vec::new();
+        h.record(249_000);
+        assert_eq!(h.windowed_quantile(&mut win, 0.95), 249_000);
+        // top-bucket sample: no overflow, no astronomical edge value
+        h.record(u64::MAX);
+        assert_eq!(h.windowed_quantile(&mut win, 0.95), u64::MAX);
+        // windowed max resets between drains: a later fast window is
+        // not clamped against (or inflated by) the old spike
+        h.record(100);
+        assert_eq!(h.windowed_quantile(&mut win, 0.95), 100);
+    }
+
+    /// The shed decision itself: one borderline-but-under-threshold
+    /// flush must not mark an endpoint pressured (the false-shed the
+    /// unclamped windowed p95 caused).
+    #[test]
+    fn single_borderline_flush_does_not_shed() {
+        use crate::broker::rebalancer::{evaluate, EndpointSample, QosThresholds};
+        use crate::broker::{GroupMap, TopologyHandle};
+
+        let groups = GroupMap::new(4, 2, 2).unwrap();
+        let addrs = (0..2)
+            .map(|i| format!("127.0.0.1:{}", 7300 + i).parse().unwrap())
+            .collect();
+        let handle = TopologyHandle::new_static(groups, addrs).unwrap();
+        let thr = QosThresholds::default(); // flush_p95_us = 250_000
+
+        let h = Histogram::new();
+        let mut win = Vec::new();
+        h.record(249_000); // under threshold — endpoint is healthy
+        let samples = vec![
+            EndpointSample {
+                flush_p95_us: h.windowed_quantile(&mut win, 0.95),
+                ..Default::default()
+            },
+            EndpointSample::default(),
+        ];
+        let plan = evaluate(&handle.snapshot(), &samples, &thr);
+        assert!(
+            plan.is_empty(),
+            "healthy endpoint shed off a borderline flush: {plan:?}"
+        );
     }
 
     #[test]

@@ -89,6 +89,12 @@ pub struct ElasticReader {
     /// cursors (`XACKPOS`) after each poll so durable endpoints can
     /// trim their WAL (ISSUE 4 ack-based retention).
     auto_ack: bool,
+    /// Forwarded to every per-endpoint reader: the consumer group acks
+    /// land under (ISSUE 6); `None` = the endpoint's default group.
+    group: Option<String>,
+    /// Forwarded to every per-endpoint reader: corrupt-record drop
+    /// counter (ISSUE 6 bugfix).
+    corrupt: Option<Arc<crate::metrics::Counter>>,
 }
 
 impl ElasticReader {
@@ -126,6 +132,8 @@ impl ElasticReader {
             saved_cursors: HashMap::new(),
             dead: HashSet::new(),
             auto_ack: false,
+            group: None,
+            corrupt: None,
         })
     }
 
@@ -143,6 +151,26 @@ impl ElasticReader {
         }
     }
 
+    /// Ack into a named consumer group on every endpoint (ISSUE 6) —
+    /// independent subscriber fleets keep independent retention
+    /// cursors on the same streams.
+    pub fn set_group(&mut self, name: impl Into<String>) {
+        let name = name.into();
+        for reader in self.readers.values_mut() {
+            reader.set_group(name.clone());
+        }
+        self.group = Some(name);
+    }
+
+    /// Count corrupt-record drops on every endpoint's poll path
+    /// (typically `WorkflowMetrics::records_corrupt`, ISSUE 6 bugfix).
+    pub fn set_corrupt_counter(&mut self, c: Arc<crate::metrics::Counter>) {
+        for reader in self.readers.values_mut() {
+            reader.set_corrupt_counter(c.clone());
+        }
+        self.corrupt = Some(c);
+    }
+
     /// One sweep: poll every endpoint that currently homes a stream,
     /// enqueue the polled segments, then walk each stream's chain and
     /// emit everything that became deliverable, in step order.
@@ -158,6 +186,12 @@ impl ElasticReader {
                         let mut reader =
                             StreamReader::with_conn(conn, Vec::new(), self.batch_limit);
                         reader.set_auto_ack(self.auto_ack);
+                        if let Some(g) = &self.group {
+                            reader.set_group(g.clone());
+                        }
+                        if let Some(c) = &self.corrupt {
+                            reader.set_corrupt_counter(c.clone());
+                        }
                         if let Some(cursors) = self.saved_cursors.remove(&e) {
                             for (key, cursor) in cursors {
                                 reader.subscribe_from(key, cursor);

@@ -28,10 +28,12 @@
 use std::collections::HashMap;
 use std::fmt::Write as _;
 use std::net::SocketAddr;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::endpoint::EntryId;
+use crate::metrics::Counter;
 use crate::record::StreamRecord;
 use crate::transport::{Conn, ConnConfig, Request, RespConn};
 use crate::wire::Value;
@@ -79,6 +81,13 @@ pub struct StreamReader {
     /// Acknowledge consumed cursors after every poll (durable
     /// endpoints use the acks to trim their WAL and memory).
     auto_ack: bool,
+    /// Consumer group acks land under (`XACKPOS key GROUP name id`,
+    /// ISSUE 6); `None` = the endpoint's default group.
+    group: Option<String>,
+    /// Counts records dropped because their payload failed to decode
+    /// (ISSUE 6 bugfix: warn-only drops were invisible to operators) —
+    /// usually [`crate::metrics::WorkflowMetrics::records_corrupt`].
+    corrupt: Option<Arc<Counter>>,
 }
 
 impl StreamReader {
@@ -104,6 +113,8 @@ impl StreamReader {
             batch_limit,
             count_s: batch_limit.to_string(),
             auto_ack: false,
+            group: None,
+            corrupt: None,
         };
         for k in keys {
             reader.subscribe(k);
@@ -115,21 +126,42 @@ impl StreamReader {
         &self.keys
     }
 
-    /// Subscribe to an additional stream (starts from the beginning).
+    /// Subscribe to an additional stream (starts from the beginning;
+    /// no-op when already subscribed).
     pub fn subscribe(&mut self, key: String) {
-        self.subscribe_from(key, EntryId::ZERO);
+        if !self.index.contains_key(&key) {
+            self.subscribe_from(key, EntryId::ZERO);
+        }
     }
 
     /// Subscribe with an explicit starting cursor — a reader rebuilt
     /// after a connection loss resumes exactly where the old one
     /// stopped instead of replaying the whole stream.
+    ///
+    /// If `key` is already subscribed the explicit cursor *wins*: the
+    /// stream's cursor is repositioned to `after` (ISSUE 6 bugfix —
+    /// previously the conflicting cursor was silently ignored, so a
+    /// reader rebuilt after failover could resume from a stale
+    /// position and replay or skip records).
     pub fn subscribe_from(&mut self, key: String, after: EntryId) {
-        if !self.index.contains_key(&key) {
-            self.index.insert(key.clone(), self.keys.len());
-            self.keys.push(key);
-            self.cursors.push(after);
-            self.acked.push(after);
-            self.id_bufs.push(String::new());
+        match self.index.get(&key) {
+            Some(&pos) => {
+                if self.cursors[pos] != after {
+                    log::debug!(
+                        "reader: repositioning {key} cursor {} -> {after}",
+                        self.cursors[pos]
+                    );
+                    self.cursors[pos] = after;
+                    self.acked[pos] = after;
+                }
+            }
+            None => {
+                self.index.insert(key.clone(), self.keys.len());
+                self.keys.push(key);
+                self.cursors.push(after);
+                self.acked.push(after);
+                self.id_bufs.push(String::new());
+            }
         }
     }
 
@@ -141,6 +173,19 @@ impl StreamReader {
         self.auto_ack = on;
     }
 
+    /// Ack into a named consumer group (`XACKPOS key GROUP name id`)
+    /// instead of the endpoint's default cursor — N readers tail the
+    /// same streams with independent retention cursors (ISSUE 6).
+    pub fn set_group(&mut self, name: impl Into<String>) {
+        self.group = Some(name.into());
+    }
+
+    /// Count corrupt-record drops into `c` (typically
+    /// `WorkflowMetrics::records_corrupt`) instead of only warning.
+    pub fn set_corrupt_counter(&mut self, c: Arc<Counter>) {
+        self.corrupt = Some(c);
+    }
+
     /// Send `XACKPOS` for every stream whose cursor advanced past its
     /// last acknowledged position.  Best-effort by design: the ack is a
     /// retention hint, so transport errors are surfaced but a failed
@@ -150,11 +195,11 @@ impl StreamReader {
         let mut idxs: Vec<usize> = Vec::new();
         for (i, (cur, ack)) in self.cursors.iter().zip(&self.acked).enumerate() {
             if cur > ack {
-                reqs.push(
-                    Request::new("XACKPOS")
-                        .arg(self.keys[i].as_bytes())
-                        .arg(cur.to_string()),
-                );
+                let mut req = Request::new("XACKPOS").arg(self.keys[i].as_bytes());
+                if let Some(g) = &self.group {
+                    req = req.arg("GROUP").arg(g.as_bytes());
+                }
+                reqs.push(req.arg(cur.to_string()));
                 idxs.push(i);
             }
         }
@@ -328,6 +373,9 @@ impl StreamReader {
                             Err(err) => {
                                 // corrupt record: skip but advance the
                                 // cursor so we don't spin on it forever
+                                if let Some(c) = &self.corrupt {
+                                    c.inc();
+                                }
                                 log::warn!(
                                     "reader: dropping corrupt record in {key} at {id}: {err:#}"
                                 );
@@ -449,12 +497,71 @@ mod tests {
             ConnConfig::default(),
         )
         .unwrap();
+        // ISSUE 6 satellite: drops are counted, not just warned about
+        let metrics = WorkflowMetrics::new();
+        reader.set_corrupt_counter(metrics.records_corrupt.clone());
         let batches = reader.poll().unwrap();
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].len(), 1);
         assert_eq!(batches[0].records[0].step, 1);
+        assert_eq!(metrics.records_corrupt.get(), 1);
         // cursor advanced past the corrupt entry too
         assert!(reader.poll().unwrap().is_empty());
+        assert_eq!(metrics.records_corrupt.get(), 1);
+    }
+
+    /// ISSUE 6 bugfix regression: `subscribe_from` on an
+    /// already-subscribed key must honor the explicit cursor, not
+    /// silently keep the old one.
+    #[test]
+    fn subscribe_from_repositions_existing_cursor() {
+        let (srv, keys) = setup_with_data(4);
+        let mut reader = StreamReader::connect(
+            srv.addr(),
+            keys.clone(),
+            0,
+            ConnConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(reader.poll().unwrap().len(), 2);
+        assert!(reader.poll().unwrap().is_empty(), "fully consumed");
+        // harvest u/0's live cursor, then rewind to the beginning — a
+        // failover rebuild resuming from an externally saved position
+        let saved = reader.cursor_positions();
+        assert_eq!(saved.len(), 2);
+        reader.subscribe_from("u/0".into(), crate::endpoint::EntryId::ZERO);
+        let batches = reader.poll().unwrap();
+        assert_eq!(batches.len(), 1, "only the rewound stream re-delivers");
+        assert_eq!(batches[0].key, "u/0");
+        assert_eq!(batches[0].len(), 4);
+        // repositioning forward to the saved cursor silences it again
+        let (key, cur) = saved.into_iter().find(|(k, _)| k == "u/0").unwrap();
+        reader.subscribe_from(key, cur);
+        assert!(reader.poll().unwrap().is_empty());
+    }
+
+    /// ISSUE 6: a reader bound to a consumer group acks its own cursor
+    /// without touching the default group or other groups.
+    #[test]
+    fn group_reader_acks_its_own_cursor() {
+        let (srv, keys) = setup_with_data(3);
+        let mut reader =
+            StreamReader::connect(srv.addr(), keys, 0, ConnConfig::default()).unwrap();
+        reader.set_group("dashboard");
+        reader.set_auto_ack(true);
+        assert_eq!(reader.poll().unwrap().len(), 2);
+        for key in ["u/0", "u/1"] {
+            assert_eq!(
+                srv.store().acked_group(key, "dashboard"),
+                srv.store().last_id(key),
+                "{key}: group ack did not land"
+            );
+            assert_eq!(
+                srv.store().acked(key),
+                crate::endpoint::EntryId::ZERO,
+                "{key}: default group must be untouched"
+            );
+        }
     }
 
     /// ISSUE 4: auto-ack pushes consumed cursors back to the endpoint

@@ -107,6 +107,12 @@ impl CloudSide {
             // With retention on, consumed cursors are acked back so the
             // endpoints can trim their WALs.
             elastic.set_auto_ack(cfg.retention);
+            // Named consumer group (ISSUE 6): acks land on this group's
+            // cursor, so side-car consumers keep independent positions.
+            if !cfg.consumer_group.is_empty() {
+                elastic.set_group(cfg.consumer_group.as_str());
+            }
+            elastic.set_corrupt_counter(metrics.records_corrupt.clone());
             readers.push(Box::new(elastic));
             Some(topo)
         } else {
@@ -115,6 +121,10 @@ impl CloudSide {
                 let mut reader =
                     StreamReader::connect(srv.addr(), keys, 0, ConnConfig::default())?;
                 reader.set_auto_ack(cfg.retention);
+                if !cfg.consumer_group.is_empty() {
+                    reader.set_group(cfg.consumer_group.as_str());
+                }
+                reader.set_corrupt_counter(metrics.records_corrupt.clone());
                 readers.push(Box::new(reader));
             }
             None
@@ -157,6 +167,15 @@ impl CloudSide {
             tx,
         );
 
+        // Results stream (ISSUE 6): every fire is published back into
+        // the first endpoint's store as a compact `results/<field>/<rank>`
+        // stream that any number of subscribers tail through the same
+        // reader machinery as the data streams.
+        let results_store = if cfg.results_stream {
+            Some(endpoints[0].store().clone())
+        } else {
+            None
+        };
         let last_result_us = Arc::new(AtomicU64::new(0));
         let collector_last = last_result_us.clone();
         let collector = std::thread::Builder::new()
@@ -165,6 +184,15 @@ impl CloudSide {
                 let mut results = Vec::new();
                 while let Ok((_seq, res)) = rx.recv() {
                     collector_last.store(crate::util::epoch_micros(), Ordering::Relaxed);
+                    if let Some(store) = &results_store {
+                        let rec = res.to_record();
+                        let key = rec.stream_key();
+                        if let Err(e) =
+                            store.xadd(&key, None, vec![(b"r".to_vec(), rec.encode())])
+                        {
+                            log::warn!("results stream: publish to {key} failed: {e:#}");
+                        }
+                    }
                     if let Some(sink) = &csv {
                         let _ = sink.write(&res);
                     }
@@ -563,6 +591,93 @@ mod tests {
                 .filter(|a| a.rank == r)
                 .count();
             assert_eq!(per, 8, "rank {r}");
+        }
+    }
+
+    /// ISSUE 6: with `results_stream` on, every collected fire is also
+    /// published on a `results/<field>/<rank>` stream; a subscriber
+    /// tailing it through the ordinary reader machinery sees the same
+    /// eigenvalues/σ/stability the engine fired (bit-exact here, well
+    /// inside the 1e-9 acceptance bound).
+    #[test]
+    fn results_stream_mirrors_collected_fires() {
+        let mut cfg = tiny_cfg(IoMode::Broker);
+        cfg.results_stream = true;
+        cfg.consumer_group = "fig5-dashboard".into();
+        let field = "velocity";
+        let metrics = WorkflowMetrics::new();
+        let cloud =
+            CloudSide::start(&cfg, field, None, metrics.clone(), None, None).unwrap();
+        let broker = Arc::new(
+            Broker::new(
+                BrokerConfig {
+                    group_size: cfg.group_size,
+                    ..BrokerConfig::new(cloud.endpoint_addrs())
+                },
+                cfg.ranks,
+                metrics.clone(),
+            )
+            .unwrap(),
+        );
+        let sim_cfg = SimConfig {
+            ranks: cfg.ranks,
+            height: cfg.height,
+            width: cfg.width,
+            steps: cfg.steps,
+            write_interval: cfg.write_interval,
+            io_mode: cfg.io_mode,
+            out_dir: cfg.out_dir.clone(),
+            field: field.into(),
+            params: Default::default(),
+            use_pjrt: false,
+            pfs_commit_ms: 0,
+        };
+        SimRunner::run(&sim_cfg, Some(broker), None).unwrap();
+        // Tail the results streams while the cloud is still up.  The
+        // poller keeps triggering after the simulation ends, so all
+        // 8 fires × 4 ranks land without needing finish() first.
+        let keys: Vec<String> = (0..cfg.ranks)
+            .map(|r| {
+                crate::analysis::results_key(&crate::record::stream_key(
+                    field, r as u32,
+                ))
+            })
+            .collect();
+        let mut sub = StreamReader::connect(
+            cloud.endpoints[0].addr(),
+            keys,
+            0,
+            ConnConfig::default(),
+        )
+        .unwrap();
+        let mut seen = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while seen.len() < 8 * 4 && Instant::now() < deadline {
+            for batch in sub.poll().unwrap() {
+                for rec in &batch.records {
+                    seen.push(AnalysisResult::from_record(rec).unwrap());
+                }
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let (results, _) = cloud.finish().unwrap();
+        assert_eq!(results.len(), 8 * 4);
+        assert_eq!(seen.len(), 8 * 4, "subscriber missed fires");
+        for s in &seen {
+            let orig = results
+                .iter()
+                .find(|r| r.key == s.key && r.step == s.step)
+                .unwrap_or_else(|| panic!("no engine fire for {}@{}", s.key, s.step));
+            assert!((orig.stability - s.stability).abs() <= 1e-9);
+            assert_eq!(orig.eigs.len(), s.eigs.len());
+            for (a, b) in orig.eigs.iter().zip(&s.eigs) {
+                assert!((a.re - b.re).abs() <= 1e-9 && (a.im - b.im).abs() <= 1e-9);
+            }
+            assert_eq!(orig.sigma.len(), s.sigma.len());
+            for (a, b) in orig.sigma.iter().zip(&s.sigma) {
+                assert!((a - b).abs() <= 1e-9);
+            }
+            assert_eq!(orig.backend, s.backend);
         }
     }
 
