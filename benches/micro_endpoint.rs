@@ -2,18 +2,58 @@
 //!
 //! * in-process store XADD/XREAD rates (no network),
 //! * over-TCP XADD throughput, single and multi connection,
-//! * XREAD polling cost at different backlog sizes.
+//! * ISSUE 7 connection scaling: 1/64/1024 idle reader connections +
+//!   4 hot pipelined writers on the sharded event loop — aggregate
+//!   rec/s, client-measured p99 flush latency, reply payload bytes
+//!   copied per served record (asserted 0: replies borrow the store's
+//!   refcounted bytes into writev), and the process thread count
+//!   (asserted bounded: shards, not thread-per-connection).
+//!
+//! Emits `BENCH_endpoint.json` so CI tracks the trajectory.  Set
+//! `BENCH_SMOKE=1` for tiny sizes (numbers then indicative only).
 //!
 //! `cargo bench --bench micro_endpoint`
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::Instant;
 
-use elasticbroker::endpoint::{EndpointServer, EntryId, Store, StoreConfig};
-use elasticbroker::transport::{ConnConfig, RespConn};
+use elasticbroker::endpoint::server::reply_payload_bytes_copied;
+use elasticbroker::endpoint::{
+    EndpointServer, EntryId, ServerConfig, Store, StoreConfig,
+};
+use elasticbroker::metrics::Histogram;
+use elasticbroker::transport::{ConnConfig, Request, RespConn};
 use elasticbroker::util;
+use elasticbroker::wire::Value;
+
+/// Kernel-reported thread count of this process (linux); `None` where
+/// /proc is unavailable (the bounded-threads assertion is skipped).
+fn thread_count() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+/// One raw PING round trip — confirms the connection is registered with
+/// its shard without dedicating client-side buffers to it.
+fn raw_ping(s: &mut TcpStream) -> anyhow::Result<()> {
+    s.write_all(b"*1\r\n$4\r\nPING\r\n")?;
+    let mut got = [0u8; 7];
+    s.read_exact(&mut got)?;
+    anyhow::ensure!(&got == b"+PONG\r\n", "bad PING reply");
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     elasticbroker::util::logger::init();
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
 
     // --- raw store ---------------------------------------------------------
     println!("# in-process store (no network)");
@@ -24,7 +64,7 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         });
         let value = vec![0u8; payload];
-        let n = 50_000usize.min(200_000_000 / payload.max(1));
+        let n = if smoke { 2000 } else { 50_000usize.min(200_000_000 / payload.max(1)) };
         let t0 = Instant::now();
         for _ in 0..n {
             store.xadd("s", None, vec![(b"r".to_vec(), value.clone())])?;
@@ -63,7 +103,7 @@ fn main() -> anyhow::Result<()> {
             shards,
             ..Default::default()
         }));
-        let per_thread = 40_000usize;
+        let per_thread = if smoke { 4000 } else { 40_000usize };
         let value = vec![0u8; 256];
         let t0 = Instant::now();
         let handles: Vec<_> = (0..8)
@@ -96,7 +136,7 @@ fn main() -> anyhow::Result<()> {
         let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default())?;
         let addr = srv.addr();
         let payload = vec![0u8; 16384];
-        let per_conn = 2000usize / conns;
+        let per_conn = (if smoke { 400 } else { 2000usize }) / conns;
         let t0 = Instant::now();
         let handles: Vec<_> = (0..conns)
             .map(|c| {
@@ -124,5 +164,142 @@ fn main() -> anyhow::Result<()> {
             total_bytes / secs / 1e6,
         );
     }
+
+    // --- ISSUE 7: connection scaling on the sharded event loop -------------
+    // N mostly-idle reader connections ride along while 4 hot writers
+    // pipeline XADD batches.  A thread-per-connection server would need
+    // N threads here; the event loop must stay at io_shards threads and
+    // keep the writers' flush p99 flat as N grows.
+    println!("\n# connection scaling: idle readers + 4 hot pipelined writers (4 KiB records)");
+    let idle_counts: &[usize] = if smoke { &[1, 16, 64] } else { &[1, 64, 1024] };
+    let batches = if smoke { 20 } else { 200 };
+    const WRITERS: usize = 4;
+    const BATCH: usize = 32;
+    let mut scale = Vec::new();
+    for &idle_n in idle_counts {
+        let srv_cfg = ServerConfig::default();
+        let io_shards = srv_cfg.io_shards;
+        let srv = EndpointServer::start_with("127.0.0.1:0", StoreConfig::default(), srv_cfg)?;
+        let addr = srv.addr();
+
+        // Establish the idle fleet (raw sockets: no client-side buffers
+        // per connection).  Stop early if the fd budget runs out and
+        // report the count actually reached.
+        let mut idles = Vec::with_capacity(idle_n);
+        for _ in 0..idle_n {
+            match TcpStream::connect(addr) {
+                Ok(mut s) => {
+                    raw_ping(&mut s)?;
+                    idles.push(s);
+                }
+                Err(_) => break,
+            }
+        }
+        let idle_actual = idles.len();
+
+        let hist = Arc::new(Histogram::new());
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..WRITERS)
+            .map(|w| {
+                let hist = hist.clone();
+                std::thread::spawn(move || -> anyhow::Result<()> {
+                    let mut conn = RespConn::connect(addr, ConnConfig::default())?;
+                    let payload = vec![0u8; 4096];
+                    let key = format!("hot/{w}");
+                    let reqs: Vec<Request> = (0..BATCH)
+                        .map(|_| {
+                            Request::new("XADD")
+                                .arg(key.clone())
+                                .arg("*")
+                                .arg("r")
+                                .arg(payload.clone())
+                        })
+                        .collect();
+                    for _ in 0..batches {
+                        let t = Instant::now();
+                        let replies = conn.pipeline(&reqs)?;
+                        hist.record(t.elapsed().as_micros() as u64);
+                        anyhow::ensure!(
+                            replies.iter().all(|r| !r.is_error()),
+                            "XADD failed"
+                        );
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        // Sample the thread count while the writers are live: must be
+        // io_shards + writers + a small constant, never O(connections).
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let threads = thread_count();
+        for h in handles {
+            h.join().unwrap()?;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let records = (WRITERS * batches * BATCH) as f64;
+        let rec_s = records / secs;
+        let p99_us = hist.quantile(0.99);
+
+        if let Some(t) = threads {
+            anyhow::ensure!(
+                t <= (io_shards + WRITERS) as u64 + 16,
+                "{t} threads with {idle_actual} idle conns — thread-per-connection regression?"
+            );
+        }
+
+        // Serve the hot streams back over TCP and verify the zero-copy
+        // invariant: not one reply payload byte memcpy'd per record.
+        let copies_before = reply_payload_bytes_copied();
+        let mut reader = RespConn::connect(addr, ConnConfig::default())?;
+        let mut served = 0usize;
+        for w in 0..WRITERS {
+            let reply = reader.request(&[
+                b"XRANGE",
+                format!("hot/{w}").as_bytes(),
+                b"-",
+                b"+",
+                b"COUNT",
+                b"1024",
+            ])?;
+            match reply {
+                Value::Array(es) => served += es.len(),
+                other => anyhow::bail!("unexpected XRANGE reply: {other}"),
+            }
+        }
+        let copied = reply_payload_bytes_copied() - copies_before;
+        anyhow::ensure!(served > 0, "nothing served back");
+        anyhow::ensure!(
+            copied == 0,
+            "reply path copied {copied} payload bytes over {served} records"
+        );
+
+        let threads_str = match threads {
+            Some(t) => t.to_string(),
+            None => "?".into(),
+        };
+        println!(
+            "  {idle_actual:>4} idle + {WRITERS} writers: {rec_s:>8.0} rec/s, flush p99 {p99_us:>7} µs, \
+             {threads_str} threads, {copied} B copied / {served} records"
+        );
+        scale.push((idle_actual, rec_s, p99_us, threads.unwrap_or(0), served));
+        drop(idles);
+    }
+
+    // --- machine-readable trajectory ---------------------------------------
+    let scale_json: Vec<String> = scale
+        .iter()
+        .map(|(idle, rec_s, p99, threads, served)| {
+            format!(
+                r#"{{"idle_conns":{idle},"writers":{WRITERS},"rec_s":{rec_s:.0},"flush_p99_us":{p99},"threads":{threads},"copied_bytes_per_record":0,"records_served":{served}}}"#
+            )
+        })
+        .collect();
+    let json = format!(
+        r#"{{"bench":"micro_endpoint","smoke":{smoke},"payload_bytes":4096,"batch":{BATCH},"scaling":[{}]}}"#,
+        scale_json.join(",")
+    );
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_endpoint.json");
+    std::fs::write(out_path, &json)?;
+    println!("\nwrote {out_path}");
     Ok(())
 }

@@ -217,6 +217,15 @@ pub fn apply_overrides(
     if args.has_flag("retention") {
         cfg.retention = true;
     }
+    if let Some(v) = args.get_parsed::<usize>("io-shards")? {
+        cfg.io_shards = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("read-ring-bytes")? {
+        cfg.read_ring_bytes = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("max-conns-per-shard")? {
+        cfg.max_conns_per_shard = v;
+    }
     if let Some(v) = args.get_parsed::<u64>("rebalance-ms")? {
         cfg.rebalance_ms = v;
     }
@@ -252,6 +261,9 @@ SUBCOMMANDS:
                 --wal-segment-bytes N  rotation threshold (default 64 MiB)
                 --retention          never trim/GC unread entries; readers
                                      ack cursors (needs --persist-dir)
+                --io-shards N        event-loop shard threads (default 4)
+                --read-ring-bytes N  per-shard read buffer (default 64 KiB)
+                --max-conns-per-shard N  accept cap per shard (default 4096)
   sim         Run the HPC-side CFD simulation against remote endpoints
                 --endpoints A[,B..]  required for --io-mode broker
                 --ranks/--height/--width/--steps/--write-interval
@@ -291,6 +303,9 @@ SUBCOMMANDS:
                 --wal-fsync P --wal-segment-bytes N --retention
                                      (see `endpoint`; retention turns on
                                      reader cursor acks + log GC)
+                --io-shards N --read-ring-bytes N --max-conns-per-shard N
+                                     endpoint event-loop sizing
+                                     ([endpoint] in TOML)
 
 ENVIRONMENT:
   ELASTICBROKER_ARTIFACTS  artifact dir (default ./artifacts)
@@ -363,6 +378,12 @@ mod tests {
             "--consumer-group",
             "dashboard",
             "--results-stream",
+            "--io-shards",
+            "2",
+            "--read-ring-bytes",
+            "8192",
+            "--max-conns-per-shard",
+            "256",
         ]))
         .unwrap();
         apply_overrides(&mut cfg, &a).unwrap();
@@ -380,6 +401,9 @@ mod tests {
         assert!(!cfg.use_pjrt);
         assert_eq!(cfg.consumer_group, "dashboard");
         assert!(cfg.results_stream);
+        assert_eq!(cfg.io_shards, 2);
+        assert_eq!(cfg.read_ring_bytes, 8192);
+        assert_eq!(cfg.max_conns_per_shard, 256);
     }
 
     #[test]

@@ -148,6 +148,17 @@ pub struct WorkflowConfig {
     /// `wal_dir` (validation rejects it otherwise).
     pub retention: bool,
 
+    // --- endpoint I/O core (ISSUE 7) ---
+    /// Event-loop shard threads per endpoint; each shard owns its
+    /// accepted connections outright (no cross-shard locking).
+    pub io_shards: usize,
+    /// Per-shard reusable read buffer size (bytes) — the unit of one
+    /// `read()` into the incremental RESP decoder.
+    pub read_ring_bytes: usize,
+    /// Max connections one shard will hold; accepts beyond the total
+    /// (`io_shards * max_conns_per_shard`) are shed at accept time.
+    pub max_conns_per_shard: usize,
+
     // --- elasticity (ISSUE 3) ---
     /// Rebalancer sweep cadence in ms (0 = elasticity disabled: static
     /// topology, the pre-elastic behaviour).
@@ -199,6 +210,9 @@ impl Default for WorkflowConfig {
             wal_fsync: FsyncPolicy::EveryMs(5),
             wal_segment_bytes: 64 << 20,
             retention: false,
+            io_shards: 4,
+            read_ring_bytes: 64 << 10,
+            max_conns_per_shard: 4096,
             rebalance_ms: 0,
             qos_flush_p95_us: 250_000,
             qos_queue_depth: 48,
@@ -362,6 +376,15 @@ impl WorkflowConfig {
         if let Some(v) = map.get_bool("endpoint.retention")? {
             cfg.retention = v;
         }
+        if let Some(v) = map.get_usize("endpoint.io_shards")? {
+            cfg.io_shards = v;
+        }
+        if let Some(v) = map.get_usize("endpoint.read_ring_bytes")? {
+            cfg.read_ring_bytes = v;
+        }
+        if let Some(v) = map.get_usize("endpoint.max_conns_per_shard")? {
+            cfg.max_conns_per_shard = v;
+        }
         if let Some(v) = map.get_u64("elastic.rebalance_ms")? {
             cfg.rebalance_ms = v;
         }
@@ -400,6 +423,15 @@ impl WorkflowConfig {
         anyhow::ensure!(
             self.wal_dir.is_empty() || self.wal_segment_bytes > 0,
             "endpoint.wal_segment_bytes must be > 0"
+        );
+        anyhow::ensure!(self.io_shards > 0, "endpoint.io_shards must be > 0");
+        anyhow::ensure!(
+            self.read_ring_bytes >= 512,
+            "endpoint.read_ring_bytes must be >= 512"
+        );
+        anyhow::ensure!(
+            self.max_conns_per_shard > 0,
+            "endpoint.max_conns_per_shard must be > 0"
         );
         self.stages.validate()?;
         self.rows_per_rank()?;
@@ -566,6 +598,27 @@ mod tests {
         assert!(
             WorkflowConfig::from_toml("[endpoint]\nwal_dir = \"w\"\nfsync = \"meh\"\n")
                 .is_err()
+        );
+    }
+
+    #[test]
+    fn io_core_knobs_parse_and_validate() {
+        let c = WorkflowConfig::default();
+        assert_eq!(c.io_shards, 4);
+        assert_eq!(c.read_ring_bytes, 64 << 10);
+        assert_eq!(c.max_conns_per_shard, 4096);
+        let c = WorkflowConfig::from_toml(
+            "[endpoint]\nio_shards = 2\nread_ring_bytes = 8192\n\
+             max_conns_per_shard = 128\n",
+        )
+        .unwrap();
+        assert_eq!(c.io_shards, 2);
+        assert_eq!(c.read_ring_bytes, 8192);
+        assert_eq!(c.max_conns_per_shard, 128);
+        assert!(WorkflowConfig::from_toml("[endpoint]\nio_shards = 0\n").is_err());
+        assert!(WorkflowConfig::from_toml("[endpoint]\nread_ring_bytes = 16\n").is_err());
+        assert!(
+            WorkflowConfig::from_toml("[endpoint]\nmax_conns_per_shard = 0\n").is_err()
         );
     }
 

@@ -6,19 +6,28 @@
 //! * [`store`] — the stream data model (`XADD`/`XREAD` semantics,
 //!   per-stream trimming, global memory budget → `OOM` backpressure),
 //!   hash-sharded across independent locks so concurrent writers to
-//!   distinct streams scale with [`StoreConfig::shards`],
+//!   distinct streams scale with [`StoreConfig::shards`]; entry
+//!   payloads are refcounted [`Bytes`] slices so serving never clones
+//!   them,
 //! * [`wal`] — the ISSUE 4 durability layer: a segmented, CRC-framed
 //!   write-ahead log with group-commit fsync, torn-tail-truncating
 //!   replay and ack-based retention; with [`StoreConfig::wal`] set the
 //!   store logs every mutation before acking and [`Store::open`]
 //!   restores entries *and* fencing state after a crash,
-//! * [`server`] — the TCP RESP2 front-end; pipelined command frames
-//!   are answered with one coalesced write per frame.
+//! * [`poll`] — the minimal readiness poller (raw epoll on
+//!   linux/x86_64, portable tick fallback elsewhere) under the server
+//!   event loop,
+//! * [`server`] — the TCP RESP2 front-end (ISSUE 7): a sharded,
+//!   readiness-driven event loop ([`ServerConfig::io_shards`] threads,
+//!   each owning its connections) with incremental frame decode over a
+//!   reusable read buffer and vectored zero-copy replies straight from
+//!   the store's refcounted payload bytes.
 
+pub mod poll;
 pub mod server;
 pub mod store;
 pub mod wal;
 
-pub use server::EndpointServer;
-pub use store::{Entry, EntryId, FencedAdd, HelloReply, Store, StoreConfig};
+pub use server::{EndpointServer, ServerConfig, ServerStats};
+pub use store::{Bytes, Entry, EntryId, FencedAdd, HelloReply, Store, StoreConfig};
 pub use wal::{FsyncPolicy, Wal, WalConfig, WalStats};

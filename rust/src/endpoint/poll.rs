@@ -1,0 +1,374 @@
+//! Minimal readiness poller for the sharded endpoint event loop.
+//!
+//! On `linux/x86_64` this is a thin raw-syscall wrapper around
+//! `epoll` (level-triggered) — no external crates, the container's
+//! dependency set is frozen.  Everywhere else a portable fallback
+//! keeps the same API by treating every registered fd as ready on a
+//! short tick: correct (the event loop's handlers tolerate spurious
+//! readiness via `WouldBlock`) but not wakeup-efficient, which is why
+//! [`Poller::accurate`] exists — tests that assert *bounded* wakeups
+//! only do so when the backend reports real readiness.
+//!
+//! The API is deliberately tiny: register/modify/deregister an fd with
+//! a `u64` token plus read/write interest, and `wait` into a reusable
+//! event buffer.  Tokens are opaque to the poller; the server uses
+//! them as connection slot indices.
+
+use std::io;
+use std::os::fd::RawFd;
+
+/// One readiness event: the registered token plus edge-agnostic
+/// readable/writable flags.  Error/hangup conditions are folded into
+/// *both* flags so the owner makes progress (a read observing EOF, a
+/// write observing EPIPE) instead of stalling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// A level-triggered readiness poller (see module docs).
+pub struct Poller {
+    inner: imp::Inner,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller {
+            inner: imp::Inner::new()?,
+        })
+    }
+
+    /// True when `wait` reports *actual* kernel readiness (epoll
+    /// backend); false for the portable tick fallback, where every
+    /// registered interest is reported ready each tick.
+    pub fn accurate() -> bool {
+        imp::ACCURATE
+    }
+
+    /// Start watching `fd` under `token` with the given interest.
+    pub fn register(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+        self.inner.register(fd, token, read, write)
+    }
+
+    /// Change the interest set of an already-registered fd.
+    pub fn modify(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+        self.inner.modify(fd, token, read, write)
+    }
+
+    /// Stop watching `fd`.
+    pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+        self.inner.deregister(fd)
+    }
+
+    /// Block up to `timeout_ms` for readiness; `out` is cleared and
+    /// refilled.  Returns the number of events delivered (0 on
+    /// timeout).  `EINTR` is retried internally.
+    pub fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<usize> {
+        self.inner.wait(out, timeout_ms)
+    }
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+mod imp {
+    use super::Event;
+    use std::io;
+    use std::os::fd::RawFd;
+
+    pub(super) const ACCURATE: bool = true;
+
+    const SYS_CLOSE: usize = 3;
+    const SYS_EPOLL_WAIT: usize = 232;
+    const SYS_EPOLL_CTL: usize = 233;
+    const SYS_EPOLL_CREATE1: usize = 291;
+
+    const EPOLL_CLOEXEC: usize = 0o2000000;
+    const EPOLL_CTL_ADD: usize = 1;
+    const EPOLL_CTL_DEL: usize = 2;
+    const EPOLL_CTL_MOD: usize = 3;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+
+    /// Kernel ABI layout on x86_64: packed, 12 bytes.  Only ever
+    /// accessed by value — taking a reference to a field of a packed
+    /// struct is undefined behaviour.
+    #[repr(C, packed)]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    /// Raw x86_64 syscall (up to 4 args).  `rcx`/`r11` are clobbered
+    /// by the `syscall` instruction itself.
+    unsafe fn syscall4(n: usize, a1: usize, a2: usize, a3: usize, a4: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") n as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            in("r10") a4,
+            out("rcx") _,
+            out("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    fn check(ret: isize) -> io::Result<usize> {
+        if ret < 0 {
+            Err(io::Error::from_raw_os_error(-ret as i32))
+        } else {
+            Ok(ret as usize)
+        }
+    }
+
+    pub(super) struct Inner {
+        epfd: RawFd,
+    }
+
+    // epoll_ctl/epoll_wait on one epfd are safe to call concurrently.
+    unsafe impl Send for Inner {}
+    unsafe impl Sync for Inner {}
+
+    fn mask(read: bool, write: bool) -> u32 {
+        // EPOLLERR/EPOLLHUP are always reported; no need to request.
+        let mut m = 0;
+        if read {
+            m |= EPOLLIN;
+        }
+        if write {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    impl Inner {
+        pub fn new() -> io::Result<Inner> {
+            let fd = check(unsafe { syscall4(SYS_EPOLL_CREATE1, EPOLL_CLOEXEC, 0, 0, 0) })?;
+            Ok(Inner { epfd: fd as RawFd })
+        }
+
+        fn ctl(&self, op: usize, fd: RawFd, ev: *const EpollEvent) -> io::Result<()> {
+            check(unsafe {
+                syscall4(SYS_EPOLL_CTL, self.epfd as usize, op, fd as usize, ev as usize)
+            })
+            .map(|_| ())
+        }
+
+        pub fn register(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+            let ev = EpollEvent {
+                events: mask(read, write),
+                data: token,
+            };
+            self.ctl(EPOLL_CTL_ADD, fd, &ev)
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+            let ev = EpollEvent {
+                events: mask(read, write),
+                data: token,
+            };
+            self.ctl(EPOLL_CTL_MOD, fd, &ev)
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            // Pre-2.6.9 kernels required a non-null event for DEL; any
+            // kernel this runs on ignores it, so null is fine.
+            self.ctl(EPOLL_CTL_DEL, fd, std::ptr::null())
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<usize> {
+            out.clear();
+            let mut buf = [EpollEvent { events: 0, data: 0 }; 128];
+            let n = loop {
+                let ret = unsafe {
+                    syscall4(
+                        SYS_EPOLL_WAIT,
+                        self.epfd as usize,
+                        buf.as_mut_ptr() as usize,
+                        buf.len(),
+                        timeout_ms as usize,
+                    )
+                };
+                match check(ret) {
+                    Ok(n) => break n,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e),
+                }
+            };
+            for ev in buf.iter().take(n) {
+                // By-value copies: never reference a packed field.
+                let bits = ev.events;
+                let token = ev.data;
+                let err = bits & (EPOLLERR | EPOLLHUP) != 0;
+                out.push(Event {
+                    token,
+                    readable: bits & EPOLLIN != 0 || err,
+                    writable: bits & EPOLLOUT != 0 || err,
+                });
+            }
+            Ok(out.len())
+        }
+    }
+
+    impl Drop for Inner {
+        fn drop(&mut self) {
+            unsafe {
+                let _ = syscall4(SYS_CLOSE, self.epfd as usize, 0, 0, 0);
+            }
+        }
+    }
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+mod imp {
+    use super::Event;
+    use std::collections::BTreeMap;
+    use std::io;
+    use std::os::fd::RawFd;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    pub(super) const ACCURATE: bool = false;
+
+    /// Portable fallback: every registered interest is reported ready
+    /// on a short tick.  Handlers must tolerate spurious readiness
+    /// (nonblocking I/O returning `WouldBlock`), which the endpoint
+    /// event loop does by construction.
+    pub(super) struct Inner {
+        fds: Mutex<BTreeMap<RawFd, (u64, bool, bool)>>,
+    }
+
+    impl Inner {
+        pub fn new() -> io::Result<Inner> {
+            Ok(Inner {
+                fds: Mutex::new(BTreeMap::new()),
+            })
+        }
+
+        pub fn register(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+            self.fds.lock().unwrap().insert(fd, (token, read, write));
+            Ok(())
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+            self.fds.lock().unwrap().insert(fd, (token, read, write));
+            Ok(())
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            self.fds.lock().unwrap().remove(&fd);
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<usize> {
+            out.clear();
+            let tick = Duration::from_millis((timeout_ms.max(0) as u64).min(5));
+            std::thread::sleep(tick);
+            for (_, &(token, read, write)) in self.fds.lock().unwrap().iter() {
+                if read || write {
+                    out.push(Event {
+                        token,
+                        readable: read,
+                        writable: write,
+                    });
+                }
+            }
+            Ok(out.len())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    fn wait_for(p: &Poller, pred: impl Fn(&Event) -> bool) -> bool {
+        let mut evs = Vec::new();
+        for _ in 0..400 {
+            p.wait(&mut evs, 25).unwrap();
+            if evs.iter().any(&pred) {
+                return true;
+            }
+        }
+        false
+    }
+
+    #[test]
+    fn data_arrival_is_reported_readable() {
+        let (mut a, b) = pair();
+        b.set_nonblocking(true).unwrap();
+        let p = Poller::new().unwrap();
+        p.register(b.as_raw_fd(), 7, true, false).unwrap();
+        a.write_all(b"x").unwrap();
+        assert!(wait_for(&p, |e| e.token == 7 && e.readable));
+        p.deregister(b.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn idle_socket_is_writable_not_readable() {
+        let (_a, b) = pair();
+        b.set_nonblocking(true).unwrap();
+        let p = Poller::new().unwrap();
+        p.register(b.as_raw_fd(), 3, true, true).unwrap();
+        assert!(wait_for(&p, |e| e.token == 3 && e.writable));
+        if Poller::accurate() {
+            // No data was sent: an accurate backend must not claim
+            // readability.
+            let mut evs = Vec::new();
+            p.wait(&mut evs, 25).unwrap();
+            assert!(
+                !evs.iter().any(|e| e.token == 3 && e.readable),
+                "spurious readable on idle socket"
+            );
+        }
+    }
+
+    #[test]
+    fn modify_and_deregister_change_the_interest_set() {
+        let (mut a, b) = pair();
+        b.set_nonblocking(true).unwrap();
+        let p = Poller::new().unwrap();
+        p.register(b.as_raw_fd(), 1, false, false).unwrap();
+        a.write_all(b"x").unwrap();
+        if Poller::accurate() {
+            // Interest-less registration: pending data is not reported.
+            let mut evs = Vec::new();
+            p.wait(&mut evs, 25).unwrap();
+            assert!(!evs.iter().any(|e| e.token == 1 && e.readable));
+        }
+        p.modify(b.as_raw_fd(), 1, true, false).unwrap();
+        assert!(wait_for(&p, |e| e.token == 1 && e.readable));
+        p.deregister(b.as_raw_fd()).unwrap();
+        let mut evs = Vec::new();
+        p.wait(&mut evs, 25).unwrap();
+        assert!(!evs.iter().any(|e| e.token == 1));
+    }
+
+    #[test]
+    fn peer_close_wakes_the_reader() {
+        let (a, b) = pair();
+        b.set_nonblocking(true).unwrap();
+        let p = Poller::new().unwrap();
+        p.register(b.as_raw_fd(), 9, true, false).unwrap();
+        drop(a);
+        assert!(wait_for(&p, |e| e.token == 9 && e.readable));
+    }
+}

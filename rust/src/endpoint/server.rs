@@ -27,55 +27,185 @@
 //! self-describing `EBR2` frame, so a subscriber's transparent decode
 //! just works on the reduced view.
 //!
-//! One OS thread per connection (the paper sizes one endpoint per 16
-//! writer processes, so connection counts are small); commands are
-//! dispatched against the shared, internally-sharded store.  Pipelined
-//! command frames are handled without per-command flushes: every
-//! complete command in the receive buffer is executed and all replies
-//! go out in one write, so broker-side `RespConn::pipeline` batches
-//! cost one syscall pair per batch on both ends of the connection.
+//! # I/O core (ISSUE 7)
+//!
+//! Connections are served by a small sharded, readiness-driven event
+//! loop instead of one OS thread each: [`ServerConfig::io_shards`]
+//! threads, each owning a [`super::poll::Poller`] (epoll on
+//! linux/x86_64) and the connections it accepted, run-to-completion
+//! with no cross-shard locks on the hot path.  Each shard reuses one
+//! `read_ring_bytes` read buffer across its connections; frames are
+//! decoded incrementally by [`wire::Decoder`] over partial reads, so
+//! a slow sender never costs an allocation or a stalled thread.
+//!
+//! Replies go out through a per-connection vectored queue
+//! ([`ReplyBuf`]): headers and small values are appended to an inline
+//! scratch buffer, while entry payloads are queued as refcounted
+//! [`Bytes`] slices borrowed straight from the store and handed to
+//! `writev` — the server never copies a staged frame payload between
+//! store and socket (debug-asserted via
+//! [`reply_payload_bytes_copied`]).  A connection whose reply backlog
+//! crosses the high-water mark is paused (commands stop executing and
+//! its read interest is dropped) until the backlog drains, so one
+//! stalled reader cannot wedge its shard or balloon memory.  Pipelined
+//! command frames still cost one `writev` per frame on the way out.
 
-use std::io::{Read, Write};
+use std::collections::VecDeque;
+use std::io::{self, IoSlice, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::store::{Entry, EntryId, FencedAdd, Store, StoreConfig};
+use super::poll::{Event, Poller};
+use super::store::{Bytes, Entry, EntryId, FencedAdd, Store, StoreConfig};
 use crate::broker::stages::{self, StagesConfig};
+use crate::metrics::EndpointStats;
 use crate::record::{CodecKind, Encoding, FrameMeta, StreamRecord};
 use crate::wire::{self, Decoder, Value};
+
+/// Payload bytes memcpy'd while rendering replies, process-wide.  The
+/// TCP path never bumps this (payloads ride as shared [`Bytes`]
+/// segments); only the in-process [`execute`] renderer does.  Tests
+/// and `benches/micro_endpoint.rs` read it to assert the zero-copy
+/// invariant.
+static REPLY_PAYLOAD_COPIES: AtomicU64 = AtomicU64::new(0);
+
+/// Total payload bytes copied into reply buffers so far (see
+/// [`REPLY_PAYLOAD_COPIES`]); 0 deltas over TCP workloads are the
+/// ISSUE 7 acceptance signal.
+pub fn reply_payload_bytes_copied() -> u64 {
+    REPLY_PAYLOAD_COPIES.load(Ordering::Relaxed)
+}
+
+/// Live I/O counters for one server, shared by its shards and surfaced
+/// through `INFO`'s `# Server` section (the store holds a handle; see
+/// [`Store::set_server_stats`]).
+#[derive(Default)]
+pub struct ServerStats {
+    connections: AtomicU64,
+    conns_total: AtomicU64,
+    accept_errors: AtomicU64,
+    bytes_read: AtomicU64,
+    bytes_written: AtomicU64,
+    wakeups: AtomicU64,
+}
+
+impl ServerStats {
+    /// Currently-open connections.
+    pub fn connections(&self) -> u64 {
+        self.connections.load(Ordering::Relaxed)
+    }
+    /// Connections accepted over the server's lifetime.
+    pub fn conns_total(&self) -> u64 {
+        self.conns_total.load(Ordering::Relaxed)
+    }
+    /// Connections refused/dropped by the accept path (accept(2)
+    /// errors, per-shard cap sheds, registration failures).
+    pub fn accept_errors(&self) -> u64 {
+        self.accept_errors.load(Ordering::Relaxed)
+    }
+    /// Bytes read off sockets (commands in).
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.load(Ordering::Relaxed)
+    }
+    /// Bytes written to sockets (replies out).
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written.load(Ordering::Relaxed)
+    }
+    /// Event-loop wakeups that delivered at least one readiness event
+    /// (timeout ticks are not counted) — the slowloris tests bound
+    /// this to prove the loop never busy-spins on a partial frame.
+    pub fn wakeups(&self) -> u64 {
+        self.wakeups.load(Ordering::Relaxed)
+    }
+}
+
+/// Endpoint server I/O tuning (the `[endpoint]` config section).
+#[derive(Clone)]
+pub struct ServerConfig {
+    /// Event-loop shard threads; each owns its accepted connections.
+    pub io_shards: usize,
+    /// Per-shard reusable read buffer size in bytes.
+    pub read_ring_bytes: usize,
+    /// Connection cap per shard; accepts beyond it are shed (counted
+    /// in `accept_errors`) rather than left to starve.
+    pub max_conns_per_shard: usize,
+    /// Optional QoS board slot to mirror connection/byte counters into
+    /// (the rebalancer's view of reader pressure).
+    pub metrics: Option<Arc<EndpointStats>>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            io_shards: 4,
+            read_ring_bytes: 64 * 1024,
+            max_conns_per_shard: 4096,
+            metrics: None,
+        }
+    }
+}
 
 /// A running endpoint server (shuts down on drop).
 pub struct EndpointServer {
     addr: SocketAddr,
     store: Arc<Store>,
+    stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    listener: Option<Arc<TcpListener>>,
+    shards: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl EndpointServer {
-    /// Bind and start serving.  Use port 0 to pick a free port (tests,
-    /// in-process workflows).
+    /// Bind and start serving with default I/O tuning.  Use port 0 to
+    /// pick a free port (tests, in-process workflows).
     pub fn start(bind: &str, cfg: StoreConfig) -> Result<EndpointServer> {
+        Self::start_with(bind, cfg, ServerConfig::default())
+    }
+
+    /// Bind and start serving with explicit I/O tuning.
+    pub fn start_with(
+        bind: &str,
+        store_cfg: StoreConfig,
+        srv_cfg: ServerConfig,
+    ) -> Result<EndpointServer> {
         let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+        listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
+        let listener = Arc::new(listener);
         // Store::open replays the WAL when the config carries one.
-        let store = Arc::new(Store::open(cfg)?);
+        let store = Arc::new(Store::open(store_cfg)?);
+        let stats = Arc::new(ServerStats::default());
+        store.set_server_stats(stats.clone());
         let shutdown = Arc::new(AtomicBool::new(false));
-        let accept_store = store.clone();
-        let accept_shutdown = shutdown.clone();
-        let accept_thread = std::thread::Builder::new()
-            .name(format!("endpoint-{}", addr.port()))
-            .spawn(move || accept_loop(listener, accept_store, accept_shutdown))?;
-        log::info!("endpoint: serving RESP on {addr}");
+        let n = srv_cfg.io_shards.max(1);
+        let mut shards = Vec::with_capacity(n);
+        for i in 0..n {
+            let shard = Shard::new(
+                listener.clone(),
+                store.clone(),
+                stats.clone(),
+                shutdown.clone(),
+                &srv_cfg,
+            )?;
+            shards.push(
+                std::thread::Builder::new()
+                    .name(format!("endpoint-{}-io{i}", addr.port()))
+                    .spawn(move || shard.run())?,
+            );
+        }
+        log::info!("endpoint: serving RESP on {addr} ({n} io shards)");
         Ok(EndpointServer {
             addr,
             store,
+            stats,
             shutdown,
-            accept_thread: Some(accept_thread),
+            listener: Some(listener),
+            shards,
         })
     }
 
@@ -88,14 +218,24 @@ impl EndpointServer {
         &self.store
     }
 
-    /// Request shutdown and join the accept thread.
+    /// Live I/O counters (what `INFO`'s `# Server` section reads).
+    pub fn stats(&self) -> &Arc<ServerStats> {
+        &self.stats
+    }
+
+    /// Request shutdown and join the shard threads.  Shards notice the
+    /// flag within one poll tick, so this cannot hang (no dummy
+    /// self-connection races — the old accept-thread design could miss
+    /// its wakeup connection and block forever).
     pub fn stop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        // Unblock accept() with a dummy connection.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept_thread.take() {
+        for h in self.shards.drain(..) {
             let _ = h.join();
         }
+        // Release the listener only after every shard exits: shards
+        // hold clones, and the socket must be closed by the time
+        // stop() returns so post-stop connects are refused.
+        drop(self.listener.take());
     }
 }
 
@@ -105,141 +245,632 @@ impl Drop for EndpointServer {
     }
 }
 
-fn accept_loop(listener: TcpListener, store: Arc<Store>, shutdown: Arc<AtomicBool>) {
-    loop {
-        match listener.accept() {
-            Ok((stream, peer)) => {
-                if shutdown.load(Ordering::SeqCst) {
-                    return;
+/// Poller token reserved for the shared listener (connection slots use
+/// their index, which can never reach it).
+const LISTENER_TOKEN: u64 = u64::MAX;
+/// Pause command execution for a connection whose reply backlog
+/// crosses this...
+const HIGH_WATER: usize = 4 << 20;
+/// ...and resume once it drains below this.
+const LOW_WATER: usize = 1 << 20;
+/// Poll timeout: bounds shutdown latency and accept-backoff re-arm.
+const TICK_MS: i32 = 25;
+
+/// One event-loop shard: a poller plus the connections it accepted,
+/// serviced run-to-completion on one thread.  The only cross-shard
+/// state is the shared listener, the store, and the stats atomics.
+struct Shard {
+    listener: Arc<TcpListener>,
+    store: Arc<Store>,
+    stats: Arc<ServerStats>,
+    metrics: Option<Arc<EndpointStats>>,
+    shutdown: Arc<AtomicBool>,
+    max_conns: usize,
+    poller: Poller,
+    /// Slot-indexed connections; the slot is the poller token.
+    conns: Vec<Option<ConnState>>,
+    free: Vec<usize>,
+    live: usize,
+    /// Shard-owned read buffer, reused across all its connections (no
+    /// per-read or per-connection allocation on the receive path).
+    read_buf: Vec<u8>,
+    backoff_ms: u64,
+    /// While set, the listener is deregistered (accept-error backoff);
+    /// re-armed once the deadline passes.
+    accept_paused_until: Option<Instant>,
+}
+
+struct ConnState {
+    stream: TcpStream,
+    decoder: Decoder,
+    reply: ReplyBuf,
+    /// Interest currently registered with the poller.
+    want_read: bool,
+    want_write: bool,
+    /// Reply backlog above [`HIGH_WATER`]: stop executing commands and
+    /// drop read interest until it drains below [`LOW_WATER`].
+    paused: bool,
+    /// QUIT, protocol error or peer EOF: close once replies drain.
+    closing: bool,
+}
+
+impl Shard {
+    fn new(
+        listener: Arc<TcpListener>,
+        store: Arc<Store>,
+        stats: Arc<ServerStats>,
+        shutdown: Arc<AtomicBool>,
+        cfg: &ServerConfig,
+    ) -> Result<Shard> {
+        let poller = Poller::new()?;
+        poller.register(listener.as_raw_fd(), LISTENER_TOKEN, true, false)?;
+        Ok(Shard {
+            listener,
+            store,
+            stats,
+            metrics: cfg.metrics.clone(),
+            shutdown,
+            max_conns: cfg.max_conns_per_shard.max(1),
+            poller,
+            conns: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            read_buf: vec![0u8; cfg.read_ring_bytes.max(512)],
+            backoff_ms: 0,
+            accept_paused_until: None,
+        })
+    }
+
+    fn run(mut self) {
+        let mut events: Vec<Event> = Vec::with_capacity(128);
+        while !self.shutdown.load(Ordering::Relaxed) {
+            if let Some(t) = self.accept_paused_until {
+                if Instant::now() >= t {
+                    self.accept_paused_until = None;
+                    if let Err(e) = self.poller.register(
+                        self.listener.as_raw_fd(),
+                        LISTENER_TOKEN,
+                        true,
+                        false,
+                    ) {
+                        log::warn!("endpoint: re-arming accept failed: {e}");
+                    }
                 }
-                let store = store.clone();
-                let shutdown = shutdown.clone();
-                let _ = std::thread::Builder::new()
-                    .name(format!("endpoint-conn-{peer}"))
-                    .spawn(move || {
-                        if let Err(e) = serve_connection(stream, &store, &shutdown) {
-                            log::debug!("endpoint: connection {peer} ended: {e:#}");
-                        }
-                    });
             }
-            Err(e) => {
-                if shutdown.load(Ordering::SeqCst) {
+            match self.poller.wait(&mut events, TICK_MS) {
+                Ok(0) => continue,
+                Ok(_) => {
+                    self.stats.wakeups.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    log::warn!("endpoint: poll error: {e}");
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
+                }
+            }
+            // `events` is a local buffer: one event per fd per batch,
+            // so a slot freed mid-batch cannot alias a later event.
+            let batch = std::mem::take(&mut events);
+            for ev in &batch {
+                if ev.token == LISTENER_TOKEN {
+                    self.accept_ready();
+                } else {
+                    self.conn_event(ev.token as usize, ev.readable);
+                }
+            }
+            events = batch;
+        }
+        for slot in 0..self.conns.len() {
+            self.close_conn(slot);
+        }
+    }
+
+    /// Accept every pending connection (level-triggered, shared
+    /// listener: whichever shard gets here first wins; the rest see
+    /// `WouldBlock`).
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if self.live >= self.max_conns {
+                        // Shed at the cap: dropping the socket fails
+                        // the client fast instead of starving it.
+                        self.count_accept_error();
+                        continue;
+                    }
+                    self.backoff_ms = 0;
+                    if let Err(e) = self.add_conn(stream) {
+                        self.count_accept_error();
+                        log::debug!("endpoint: could not admit connection: {e}");
+                    }
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // Bounded backoff: park the listener and re-arm
+                    // after a deadline instead of spinning on a
+                    // persistent error (EMFILE and friends).
+                    self.count_accept_error();
+                    self.backoff_ms = (self.backoff_ms.max(5) * 2).min(500);
+                    let _ = self.poller.deregister(self.listener.as_raw_fd());
+                    self.accept_paused_until =
+                        Some(Instant::now() + Duration::from_millis(self.backoff_ms));
+                    log::warn!(
+                        "endpoint: accept error: {e} (backing off {}ms)",
+                        self.backoff_ms
+                    );
                     return;
                 }
-                log::warn!("endpoint: accept error: {e}");
-                std::thread::sleep(Duration::from_millis(10));
             }
         }
     }
-}
 
-fn serve_connection(
-    mut stream: TcpStream,
-    store: &Store,
-    shutdown: &AtomicBool,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    stream
-        .set_read_timeout(Some(Duration::from_millis(250)))
-        .ok();
-    // Accumulated replies are flushed once per pipelined frame — but
-    // also whenever the buffer grows past this bound, so a frame of
-    // many large-reply commands (XREADs over megabyte snapshots) can
-    // never balloon the reply buffer without limit.
-    const FLUSH_THRESHOLD: usize = 1 << 20; // 1 MiB
+    fn count_accept_error(&self) {
+        self.stats.accept_errors.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = &self.metrics {
+            m.accept_errors.inc();
+        }
+    }
 
-    let mut decoder = Decoder::new();
-    let mut read_buf = [0u8; 64 * 1024];
-    let mut out = Vec::with_capacity(16 * 1024);
-    loop {
-        // Drain ALL complete commands already buffered, accumulating
-        // their replies, and flush once per frame: a client that
-        // pipelines N commands costs one write syscall here, not N
-        // (the server half of the batched write path).
-        let mut quit = false;
-        loop {
-            match decoder.next() {
-                Ok(Some(cmd)) => {
-                    if dispatch(store, &cmd, &mut out) {
-                        quit = true;
+    fn add_conn(&mut self, stream: TcpStream) -> io::Result<()> {
+        stream.set_nonblocking(true)?;
+        stream.set_nodelay(true).ok();
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.conns.push(None);
+                self.conns.len() - 1
+            }
+        };
+        debug_assert!(self.conns[slot].is_none());
+        if let Err(e) = self.poller.register(stream.as_raw_fd(), slot as u64, true, false) {
+            self.free.push(slot);
+            return Err(e);
+        }
+        self.conns[slot] = Some(ConnState {
+            stream,
+            decoder: Decoder::new(),
+            reply: ReplyBuf::default(),
+            want_read: true,
+            want_write: false,
+            paused: false,
+            closing: false,
+        });
+        self.live += 1;
+        self.stats.conns_total.fetch_add(1, Ordering::Relaxed);
+        let n = self.stats.connections.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(m) = &self.metrics {
+            m.connections.set(n);
+        }
+        Ok(())
+    }
+
+    /// Service one connection's readiness: read everything available,
+    /// execute every complete command, flush, and re-arm interest.
+    /// Writability is not taken as a parameter — a flush is attempted
+    /// whenever there is anything to write (level-triggered poller, so
+    /// a blocked socket just re-reports later).
+    fn conn_event(&mut self, slot: usize, readable: bool) {
+        let mut close = false;
+        {
+            let conn = match self.conns.get_mut(slot) {
+                Some(Some(c)) => c,
+                _ => return,
+            };
+            if readable && !conn.paused && !conn.closing {
+                loop {
+                    match conn.stream.read(&mut self.read_buf) {
+                        Ok(0) => {
+                            conn.closing = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            self.stats.bytes_read.fetch_add(n as u64, Ordering::Relaxed);
+                            if let Some(m) = &self.metrics {
+                                m.bytes_read.add(n as u64);
+                            }
+                            conn.decoder.feed(&self.read_buf[..n]);
+                            if n < self.read_buf.len() {
+                                break; // drained the socket
+                            }
+                        }
+                        Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                        Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            close = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            while !close {
+                if !conn.paused && !conn.closing {
+                    drain_commands(conn, &self.store);
+                }
+                match conn.reply.flush(&mut conn.stream) {
+                    Ok(n) => {
+                        if n > 0 {
+                            self.stats.bytes_written.fetch_add(n as u64, Ordering::Relaxed);
+                            if let Some(m) = &self.metrics {
+                                m.bytes_written.add(n as u64);
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        close = true;
                         break;
                     }
-                    if out.len() >= FLUSH_THRESHOLD {
-                        stream.write_all(&out)?;
-                        out.clear();
+                }
+                // Backlog drained below the low-water mark: resume the
+                // decoder in-place (no socket event will re-deliver
+                // commands that are already buffered).
+                if conn.paused && conn.reply.pending() <= LOW_WATER {
+                    conn.paused = false;
+                    continue;
+                }
+                break;
+            }
+            if !close && conn.closing && conn.reply.is_empty() {
+                close = true;
+            }
+            if !close {
+                let want_read = !conn.paused && !conn.closing;
+                let want_write = !conn.reply.is_empty();
+                if (want_read, want_write) != (conn.want_read, conn.want_write) {
+                    if self
+                        .poller
+                        .modify(conn.stream.as_raw_fd(), slot as u64, want_read, want_write)
+                        .is_err()
+                    {
+                        close = true;
+                    } else {
+                        conn.want_read = want_read;
+                        conn.want_write = want_write;
                     }
                 }
-                Ok(None) => break,
-                Err(e) => {
-                    wire::encode(&Value::Error(format!("ERR protocol error: {e}")), &mut out);
-                    stream.write_all(&out)?;
-                    return Ok(());
-                }
             }
         }
-        if !out.is_empty() {
-            stream.write_all(&out)?;
-            out.clear();
+        if close {
+            self.close_conn(slot);
         }
-        if quit {
-            return Ok(());
-        }
-        match stream.read(&mut read_buf) {
-            Ok(0) => return Ok(()),
-            Ok(n) => decoder.feed(&read_buf[..n]),
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                if shutdown.load(Ordering::SeqCst) {
-                    return Ok(());
-                }
+    }
+
+    fn close_conn(&mut self, slot: usize) {
+        if let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.take()) {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            self.live -= 1;
+            let n = self.stats.connections.fetch_sub(1, Ordering::Relaxed) - 1;
+            if let Some(m) = &self.metrics {
+                m.connections.set(n);
             }
-            Err(e) => return Err(e.into()),
+            self.free.push(slot);
         }
     }
 }
 
-/// Execute one command; returns true if the connection should close.
-fn dispatch(store: &Store, cmd: &Value, out: &mut Vec<u8>) -> bool {
-    let (reply, quit) = execute(store, cmd);
-    if quit {
-        wire::encode(&Value::Simple("OK".into()), out);
-        return true;
+/// Execute every complete command buffered in the connection's
+/// decoder, stopping early at the reply high-water mark
+/// (backpressure) or on QUIT / protocol error.
+fn drain_commands(conn: &mut ConnState, store: &Store) {
+    while !conn.closing && conn.reply.pending() <= HIGH_WATER {
+        match conn.decoder.next() {
+            Ok(Some(cmd)) => {
+                if dispatch_into(store, &cmd, &mut conn.reply) {
+                    conn.closing = true;
+                }
+            }
+            Ok(None) => break,
+            Err(e) => {
+                conn.reply
+                    .push_value(&Value::Error(format!("ERR protocol error: {e}")));
+                conn.closing = true;
+            }
+        }
     }
-    wire::encode(&reply, out);
-    false
+    if conn.reply.pending() > HIGH_WATER {
+        conn.paused = true;
+    }
+}
+
+/// Segments handed to `writev` in order; up to this many per call.
+const IOV_BATCH: usize = 64;
+/// Compact the inline scratch once it outgrows this while replies are
+/// still pending (a saturated long-lived connection would otherwise
+/// grow it without bound, since segments only reference ranges).
+const SCRATCH_COMPACT: usize = 8 << 20;
+
+/// The per-connection vectored reply queue (ISSUE 7): an ordered run
+/// of segments, either ranges into an append-only inline scratch
+/// buffer (headers, ids, field names, plain replies) or refcounted
+/// [`Bytes`] payload slices borrowed from the store.  `flush` walks
+/// the queue with `write_vectored`, tracking partial writes per
+/// segment — payload bytes are never copied into a reply buffer.
+#[derive(Default)]
+struct ReplyBuf {
+    scratch: Vec<u8>,
+    segs: VecDeque<Seg>,
+    pending: usize,
+}
+
+enum Seg {
+    Inline { start: usize, len: usize },
+    Shared { bytes: Bytes, off: usize },
+}
+
+impl ReplyBuf {
+    fn pending(&self) -> usize {
+        self.pending
+    }
+
+    fn is_empty(&self) -> bool {
+        self.pending == 0
+    }
+
+    /// Append inline bytes via `f`; contiguous inline segments merge.
+    fn push_inline(&mut self, f: impl FnOnce(&mut Vec<u8>)) {
+        self.maybe_compact();
+        let start = self.scratch.len();
+        f(&mut self.scratch);
+        let len = self.scratch.len() - start;
+        if len == 0 {
+            return;
+        }
+        self.pending += len;
+        if let Some(Seg::Inline { start: s, len: l }) = self.segs.back_mut() {
+            if *s + *l == start {
+                *l += len;
+                return;
+            }
+        }
+        self.segs.push_back(Seg::Inline { start, len });
+    }
+
+    /// Queue a refcounted payload slice — the zero-copy path.
+    fn push_shared(&mut self, bytes: Bytes) {
+        if bytes.is_empty() {
+            return;
+        }
+        self.pending += bytes.len();
+        self.segs.push_back(Seg::Shared { bytes, off: 0 });
+    }
+
+    fn push_value(&mut self, v: &Value) {
+        self.push_inline(|out| wire::encode(v, out));
+    }
+
+    fn maybe_compact(&mut self) {
+        if self.scratch.len() < SCRATCH_COMPACT {
+            return;
+        }
+        let mut fresh = Vec::with_capacity(self.pending.min(SCRATCH_COMPACT));
+        for seg in self.segs.iter_mut() {
+            if let Seg::Inline { start, len } = seg {
+                let at = fresh.len();
+                fresh.extend_from_slice(&self.scratch[*start..*start + *len]);
+                *start = at;
+            }
+        }
+        self.scratch = fresh;
+    }
+
+    /// Write as much as the sink accepts (vectored, hand-rolled
+    /// partial-write advance — `write_all_vectored` is nightly-only).
+    /// Returns bytes written; stops without error on `WouldBlock`.
+    fn flush<W: Write>(&mut self, stream: &mut W) -> io::Result<usize> {
+        let mut total = 0usize;
+        while self.pending > 0 {
+            let wrote = {
+                let mut iov: Vec<IoSlice<'_>> =
+                    Vec::with_capacity(self.segs.len().min(IOV_BATCH));
+                for seg in self.segs.iter().take(IOV_BATCH) {
+                    iov.push(IoSlice::new(match seg {
+                        Seg::Inline { start, len } => &self.scratch[*start..*start + *len],
+                        Seg::Shared { bytes, off } => &bytes[*off..],
+                    }));
+                }
+                stream.write_vectored(&iov)
+            };
+            match wrote {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => {
+                    total += n;
+                    self.advance(n);
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if self.pending == 0 {
+            self.segs.clear();
+            self.scratch.clear();
+        }
+        Ok(total)
+    }
+
+    fn advance(&mut self, mut n: usize) {
+        debug_assert!(n <= self.pending);
+        self.pending -= n;
+        while n > 0 {
+            let seg = self.segs.front_mut().expect("advance past queued bytes");
+            let left = match seg {
+                Seg::Inline { len, .. } => *len,
+                Seg::Shared { bytes, off } => bytes.len() - *off,
+            };
+            if n >= left {
+                n -= left;
+                self.segs.pop_front();
+            } else {
+                match seg {
+                    Seg::Inline { start, len } => {
+                        *start += n;
+                        *len -= n;
+                    }
+                    Seg::Shared { off, .. } => *off += n,
+                }
+                n = 0;
+            }
+        }
+    }
+}
+
+fn push_uint(out: &mut Vec<u8>, mut n: u64) {
+    let mut buf = [0u8; 20];
+    let mut i = buf.len();
+    loop {
+        i -= 1;
+        buf[i] = b'0' + (n % 10) as u8;
+        n /= 10;
+        if n == 0 {
+            break;
+        }
+    }
+    out.extend_from_slice(&buf[i..]);
+}
+
+/// Serialize `entries` as a RESP array straight into the reply queue;
+/// field *values* ride as shared [`Bytes`] segments — the zero-copy
+/// twin of [`encode_entries`], byte-identical on the wire.
+fn queue_entries(rb: &mut ReplyBuf, entries: &[Entry]) {
+    rb.push_inline(|out| {
+        out.push(b'*');
+        push_uint(out, entries.len() as u64);
+        out.extend_from_slice(b"\r\n");
+    });
+    for e in entries {
+        let id = e.id.to_string();
+        rb.push_inline(|out| {
+            out.extend_from_slice(b"*2\r\n$");
+            push_uint(out, id.len() as u64);
+            out.extend_from_slice(b"\r\n");
+            out.extend_from_slice(id.as_bytes());
+            out.extend_from_slice(b"\r\n*");
+            push_uint(out, (e.fields.len() * 2) as u64);
+            out.extend_from_slice(b"\r\n");
+        });
+        for (name, value) in &e.fields {
+            rb.push_inline(|out| {
+                out.push(b'$');
+                push_uint(out, name.len() as u64);
+                out.extend_from_slice(b"\r\n");
+                out.extend_from_slice(name);
+                out.extend_from_slice(b"\r\n$");
+                push_uint(out, value.len() as u64);
+                out.extend_from_slice(b"\r\n");
+            });
+            rb.push_shared(value.clone());
+            rb.push_inline(|out| out.extend_from_slice(b"\r\n"));
+        }
+    }
+}
+
+/// XREAD reply: `[[key, entries], ...]`, entries zero-copy.
+fn queue_streams(rb: &mut ReplyBuf, streams: &[(String, Vec<Entry>)]) {
+    rb.push_inline(|out| {
+        out.push(b'*');
+        push_uint(out, streams.len() as u64);
+        out.extend_from_slice(b"\r\n");
+    });
+    for (key, entries) in streams {
+        rb.push_inline(|out| {
+            out.extend_from_slice(b"*2\r\n$");
+            push_uint(out, key.len() as u64);
+            out.extend_from_slice(b"\r\n");
+            out.extend_from_slice(key.as_bytes());
+            out.extend_from_slice(b"\r\n");
+        });
+        queue_entries(rb, entries);
+    }
+}
+
+/// Execute one command, rendering the reply straight into the
+/// connection's vectored reply queue; returns true on QUIT.
+fn dispatch_into(store: &Store, cmd: &Value, rb: &mut ReplyBuf) -> bool {
+    match run_command(store, cmd) {
+        Ok(CommandResult::Reply(v)) => {
+            rb.push_value(&v);
+            false
+        }
+        Ok(CommandResult::Entries(entries)) => {
+            queue_entries(rb, &entries);
+            false
+        }
+        Ok(CommandResult::Streams(streams)) => {
+            if streams.is_empty() {
+                rb.push_value(&Value::NullArray);
+            } else {
+                queue_streams(rb, &streams);
+            }
+            false
+        }
+        Ok(CommandResult::Quit) => {
+            rb.push_value(&Value::Simple("OK".into()));
+            true
+        }
+        Err(e) => {
+            rb.push_value(&error_value(e));
+            false
+        }
+    }
 }
 
 /// Execute one decoded command against a store, mapping errors to
 /// RESP error replies exactly like the TCP front-end does.  Public so
 /// the in-process sim transport ([`crate::transport::sim::SimConn`])
 /// exercises the *same* dispatcher as real connections — fault
-/// injection tests and production share one command semantics.
+/// injection tests and production share one command semantics.  This
+/// renderer materializes entry payloads into [`Value`]s (and bumps the
+/// copy counter accordingly); TCP connections render through the
+/// zero-copy [`ReplyBuf`] path instead.
 ///
-/// Returns `(reply, quit)`; on `quit` the reply is unset (`OK` is what
-/// the wire sends) and the connection should close.
+/// Returns `(reply, quit)`; on `quit` the reply is `OK` (what the wire
+/// sends) and the connection should close.
 pub fn execute(store: &Store, cmd: &Value) -> (Value, bool) {
     match run_command(store, cmd) {
         Ok(CommandResult::Reply(v)) => (v, false),
-        Ok(CommandResult::Quit) => (Value::Simple("OK".into()), true),
-        Err(e) => {
-            let msg = e.to_string();
-            let msg = if msg.starts_with("ERR")
-                || msg.starts_with("OOM")
-                || msg.starts_with("STALE")
-            {
-                msg
+        Ok(CommandResult::Entries(entries)) => (encode_entries(&entries), false),
+        Ok(CommandResult::Streams(streams)) => {
+            if streams.is_empty() {
+                (Value::NullArray, false)
             } else {
-                format!("ERR {msg}")
-            };
-            (Value::Error(msg), false)
+                (
+                    Value::Array(
+                        streams
+                            .into_iter()
+                            .map(|(key, entries)| {
+                                Value::Array(vec![
+                                    Value::Bulk(key.into_bytes()),
+                                    encode_entries(&entries),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                    false,
+                )
+            }
         }
+        Ok(CommandResult::Quit) => (Value::Simple("OK".into()), true),
+        Err(e) => (error_value(e), false),
     }
+}
+
+fn error_value(e: anyhow::Error) -> Value {
+    let msg = e.to_string();
+    let msg = if msg.starts_with("ERR") || msg.starts_with("OOM") || msg.starts_with("STALE") {
+        msg
+    } else {
+        format!("ERR {msg}")
+    };
+    Value::Error(msg)
 }
 
 enum CommandResult {
     Reply(Value),
+    /// XRANGE entries, rendered by the transport-appropriate encoder
+    /// (zero-copy over TCP, materialized for the in-process sim).
+    Entries(Vec<Entry>),
+    /// XREAD per-stream entry lists (empty = NullArray).
+    Streams(Vec<(String, Vec<Entry>)>),
     Quit,
 }
 
@@ -454,8 +1085,7 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
                 );
                 count = s(&args[4])?.parse().context("ERR value is not an integer")?;
             }
-            let entries = store.range(&key, start, end, count);
-            Ok(Reply(encode_entries(&entries)))
+            Ok(CommandResult::Entries(store.range(&key, start, end, count)))
         }
         b"XREAD" => {
             // XREAD [COUNT n] [STRIDE k] [ROI lo:hi] [SINCESTEP s]
@@ -524,17 +1154,10 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
                 let entries = store.read_after(&key, after, count);
                 let entries = reduce_entries(store, entries, &view)?;
                 if !entries.is_empty() {
-                    replies.push(Value::Array(vec![
-                        Value::Bulk(key.into_bytes()),
-                        encode_entries(&entries),
-                    ]));
+                    replies.push((key, entries));
                 }
             }
-            if replies.is_empty() {
-                Ok(Reply(Value::NullArray))
-            } else {
-                Ok(Reply(Value::Array(replies)))
-            }
+            Ok(CommandResult::Streams(replies))
         }
         other => anyhow::bail!(
             "ERR unknown command '{}'",
@@ -589,7 +1212,7 @@ fn reduce_entries(store: &Store, entries: Vec<Entry>, view: &ViewOpts) -> Result
                     continue 'entries;
                 }
             }
-            fv.1 = reduce_record(&rec, view)?;
+            fv.1 = reduce_record(&rec, view)?.into();
         }
         out.push(e);
     }
@@ -647,15 +1270,20 @@ fn reduce_record(rec: &StreamRecord, view: &ViewOpts) -> Result<Vec<u8>> {
     Ok(reduced.encode())
 }
 
-fn encode_entries(entries: &[super::store::Entry]) -> Value {
+/// Materialize entries as a RESP [`Value`] — the in-process renderer
+/// behind [`execute`] (sim transport, tests).  This path *does* copy
+/// payload bytes out of the store, and says so on the copy counter;
+/// real connections render through [`queue_entries`] instead.
+fn encode_entries(entries: &[Entry]) -> Value {
     Value::Array(
         entries
             .iter()
             .map(|e| {
                 let mut fv = Vec::with_capacity(e.fields.len() * 2);
                 for (f, v) in &e.fields {
+                    REPLY_PAYLOAD_COPIES.fetch_add(v.len() as u64, Ordering::Relaxed);
                     fv.push(Value::Bulk(f.clone()));
-                    fv.push(Value::Bulk(v.clone()));
+                    fv.push(Value::Bulk(v.to_vec()));
                 }
                 Value::Array(vec![
                     Value::Bulk(e.id.to_string().into_bytes()),
@@ -688,6 +1316,66 @@ mod tests {
         assert_eq!(echo, Value::Bulk(b"hello".to_vec()));
         let info = c.request(&[b"INFO"]).unwrap();
         assert!(info.as_str_lossy().contains("elasticbroker-endpoint"));
+    }
+
+    /// ISSUE 7 satellite: the `# Server` section carries live
+    /// connection and byte counters from [`ServerStats`].
+    #[test]
+    fn info_reports_connection_stats() {
+        let srv = server();
+        let mut c = conn(&srv);
+        c.ping().unwrap();
+        let info = c.request(&[b"INFO"]).unwrap();
+        let text = info.as_str_lossy();
+        assert!(text.contains("connected_clients:1"), "{text}");
+        assert!(text.contains("total_connections_received:1"), "{text}");
+        assert!(text.contains("accept_errors:0"), "{text}");
+        assert!(text.contains("total_net_input_bytes:"), "{text}");
+        assert!(text.contains("total_net_output_bytes:"), "{text}");
+        assert!(srv.stats().bytes_read() > 0);
+        assert!(srv.stats().bytes_written() > 0);
+        assert_eq!(srv.stats().connections(), 1);
+    }
+
+    /// The zero-copy renderer must be byte-identical to the
+    /// materializing one, including across partial vectored writes.
+    #[test]
+    fn zero_copy_renderer_matches_value_renderer() {
+        let entries = vec![
+            Entry::new(
+                EntryId { ms: 1, seq: 0 },
+                vec![
+                    (b"r".to_vec(), vec![7u8; 1000]),
+                    (b"meta".to_vec(), b"x".to_vec()),
+                ],
+            ),
+            Entry::new(EntryId { ms: 2, seq: 3 }, vec![(b"r".to_vec(), Vec::new())]),
+            Entry::new(EntryId { ms: 9, seq: 1 }, vec![(b"h".to_vec(), b"t".to_vec())]),
+        ];
+        let mut rb = ReplyBuf::default();
+        queue_entries(&mut rb, &entries);
+
+        /// Accepts at most 3 bytes per write: every segment boundary
+        /// and mid-segment offset gets exercised by `advance`.
+        struct Trickle(Vec<u8>);
+        impl Write for Trickle {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                let n = buf.len().min(3);
+                self.0.extend_from_slice(&buf[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut sink = Trickle(Vec::new());
+        let n = rb.flush(&mut sink).unwrap();
+        assert!(rb.is_empty());
+
+        let mut want = Vec::new();
+        wire::encode(&encode_entries(&entries), &mut want);
+        assert_eq!(sink.0, want);
+        assert_eq!(n, want.len());
     }
 
     #[test]
@@ -1153,7 +1841,7 @@ mod tests {
         std::thread::sleep(Duration::from_millis(50));
         let res = TcpStream::connect(addr);
         if let Ok(mut s) = res {
-            // accept loop is gone; the socket should be closed quickly
+            // event loop is gone; the socket should be closed quickly
             let mut buf = [0u8; 8];
             s.set_read_timeout(Some(Duration::from_millis(200))).ok();
             let _ = s.write_all(b"*1\r\n$4\r\nPING\r\n");

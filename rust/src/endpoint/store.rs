@@ -98,14 +98,100 @@ impl std::fmt::Display for EntryId {
     }
 }
 
-/// One entry in a stream.
+/// A cheaply clonable, immutable byte payload: a thin newtype over
+/// `Arc<[u8]>`.
+///
+/// Stream entry *values* are stored as `Bytes` so every consumer of a
+/// snapshot — N fan-out readers, the reply serializer, WAL appends —
+/// shares one refcounted allocation instead of memcpy'ing megabyte
+/// frames around.  This is the store half of the zero-copy reply path
+/// (ISSUE 7): the server borrows these slices straight into `writev`
+/// without ever cloning payload bytes into a reply buffer.
+///
+/// Field *names* stay `Vec<u8>`: they are tiny (`"r"`, `"h"`) and kept
+/// mutable-friendly for protocol code.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bytes(std::sync::Arc<[u8]>);
+
+impl Bytes {
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+impl std::ops::Deref for Bytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+impl AsRef<[u8]> for Bytes {
+    fn as_ref(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Bytes {
+        Bytes(v.into())
+    }
+}
+
+impl From<&[u8]> for Bytes {
+    fn from(v: &[u8]) -> Bytes {
+        Bytes(v.into())
+    }
+}
+
+// Mixed-type comparisons keep test assertions and protocol checks
+// reading naturally (`entry.fields[0].1 == frame`).
+impl PartialEq<Vec<u8>> for Bytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.0[..] == other[..]
+    }
+}
+
+impl PartialEq<&[u8]> for Bytes {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.0[..] == **other
+    }
+}
+
+impl<const N: usize> PartialEq<[u8; N]> for Bytes {
+    fn eq(&self, other: &[u8; N]) -> bool {
+        self.0[..] == other[..]
+    }
+}
+
+impl<const N: usize> PartialEq<&[u8; N]> for Bytes {
+    fn eq(&self, other: &&[u8; N]) -> bool {
+        self.0[..] == other[..]
+    }
+}
+
+/// One entry in a stream.  Values are refcounted ([`Bytes`]) so reads
+/// and replies share the stored allocation.
 #[derive(Clone, Debug)]
 pub struct Entry {
     pub id: EntryId,
-    pub fields: Vec<(Vec<u8>, Vec<u8>)>,
+    pub fields: Vec<(Vec<u8>, Bytes)>,
 }
 
 impl Entry {
+    /// Build an entry from owned field pairs (values become shared
+    /// [`Bytes`] — the one place a payload allocation is adopted).
+    pub fn new(id: EntryId, fields: Vec<(Vec<u8>, Vec<u8>)>) -> Entry {
+        Entry {
+            id,
+            fields: fields.into_iter().map(|(k, v)| (k, Bytes::from(v))).collect(),
+        }
+    }
+
     fn byte_size(&self) -> usize {
         16 + self
             .fields
@@ -288,6 +374,10 @@ pub struct Store {
     /// `XREAD` hitting an undecodable payload) — operator-visible in
     /// INFO instead of warn-only logs.
     records_corrupt: AtomicU64,
+    /// Connection-level counters published by the serving front-end
+    /// (set once when an [`super::server::EndpointServer`] attaches);
+    /// surfaced in INFO's `# Server` section.
+    srv_stats: std::sync::OnceLock<std::sync::Arc<super::server::ServerStats>>,
 }
 
 impl Store {
@@ -317,6 +407,7 @@ impl Store {
             trimmed_unread: AtomicU64::new(0),
             evicted_entries: AtomicU64::new(0),
             records_corrupt: AtomicU64::new(0),
+            srv_stats: std::sync::OnceLock::new(),
         };
         if let Some(wal_cfg) = store.cfg.wal.clone() {
             let (wal, replay) = Wal::open(wal_cfg).context("opening endpoint wal")?;
@@ -815,7 +906,7 @@ impl Store {
                 }
             }
         };
-        let entry = Entry { id, fields };
+        let entry = Entry::new(id, fields);
         let mut sync_err: Option<anyhow::Error> = None;
         if let Some(w) = &self.wal {
             let log_step = step.unwrap_or(s.last_step);
@@ -1044,14 +1135,26 @@ impl Store {
     /// plus the ISSUE 4 `# Persistence` section).
     pub fn info(&self) -> String {
         let wal = self.wal_stats().unwrap_or_default();
+        let srv = self.srv_stats.get();
+        let stat = |f: fn(&super::server::ServerStats) -> u64| match srv {
+            Some(s) => f(s),
+            None => 0,
+        };
         format!(
             "# Server\r\nserver:elasticbroker-endpoint\r\nversion:0.1.0\r\nproto:RESP2\r\n\
+             connected_clients:{}\r\ntotal_connections_received:{}\r\naccept_errors:{}\r\n\
+             total_net_input_bytes:{}\r\ntotal_net_output_bytes:{}\r\n\
              # Memory\r\nused_memory:{}\r\nmaxmemory:{}\r\n\
              # Streams\r\nstreams:{}\r\ntotal_entries_added:{}\r\nstream_maxlen:{}\r\nshards:{}\r\n\
              records_corrupt:{}\r\n\
              # Persistence\r\nwal_enabled:{}\r\nretention:{}\r\nwal_bytes:{}\r\nwal_segments:{}\r\n\
              wal_fsync:{}\r\nlast_fsync_us:{}\r\nreplayed_entries:{}\r\ntrimmed_unread:{}\r\n\
              evicted_entries:{}\r\ngc_segments:{}\r\n",
+            stat(|s| s.connections()),
+            stat(|s| s.conns_total()),
+            stat(|s| s.accept_errors()),
+            stat(|s| s.bytes_read()),
+            stat(|s| s.bytes_written()),
             self.total_bytes.load(Ordering::Relaxed),
             self.cfg.max_memory,
             self.stream_count(),
@@ -1106,6 +1209,13 @@ impl Store {
     /// Entries evicted from memory to the log under budget pressure.
     pub fn evicted_entries(&self) -> u64 {
         self.evicted_entries.load(Ordering::Relaxed)
+    }
+
+    /// Attach the serving front-end's connection counters so INFO can
+    /// report them (first attach wins; later calls are no-ops — a
+    /// store has at most one server in front of it).
+    pub fn set_server_stats(&self, stats: std::sync::Arc<super::server::ServerStats>) {
+        let _ = self.srv_stats.set(stats);
     }
 
     /// Count a record that failed to decode while serving it.

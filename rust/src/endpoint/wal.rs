@@ -187,15 +187,20 @@ fn put_id(out: &mut Vec<u8>, id: EntryId) {
 }
 
 /// Encode an `Add` op straight from borrowed parts (the hot path: no
-/// intermediate [`WalOp`], no field clones).
-pub(crate) fn encode_add(
+/// intermediate [`WalOp`], no field clones).  Generic over the value
+/// type so both owned `Vec<u8>` fields (decoded ops) and the store's
+/// shared [`super::store::Bytes`] values encode without conversion.
+pub(crate) fn encode_add<V: AsRef<[u8]>>(
     key: &str,
     id: EntryId,
     epoch: u64,
     step: u64,
-    fields: &[(Vec<u8>, Vec<u8>)],
+    fields: &[(Vec<u8>, V)],
 ) -> Vec<u8> {
-    let payload: usize = fields.iter().map(|(k, v)| 8 + k.len() + v.len()).sum();
+    let payload: usize = fields
+        .iter()
+        .map(|(k, v)| 8 + k.len() + v.as_ref().len())
+        .sum();
     let mut out = Vec::with_capacity(1 + 2 + key.len() + 16 + 16 + 2 + payload);
     out.push(TAG_ADD);
     put_str(&mut out, key);
@@ -206,8 +211,8 @@ pub(crate) fn encode_add(
     for (k, v) in fields {
         out.extend_from_slice(&(k.len() as u32).to_le_bytes());
         out.extend_from_slice(k);
-        out.extend_from_slice(&(v.len() as u32).to_le_bytes());
-        out.extend_from_slice(v);
+        out.extend_from_slice(&(v.as_ref().len() as u32).to_le_bytes());
+        out.extend_from_slice(v.as_ref());
     }
     out
 }
@@ -620,7 +625,7 @@ fn apply_replay(
             // the identical entry).  Keep the first copy: replay stays
             // exactly-once and the sorted-entries invariant holds.
             if id > st.last_id {
-                st.entries.push(Entry { id, fields });
+                st.entries.push(Entry::new(id, fields));
                 st.last_id = id;
                 replay.entries += 1;
             } else {
@@ -1061,7 +1066,7 @@ impl Wal {
             let res = scan_segment(path, |op| {
                 if let WalOp::Add { key: k, id, fields, .. } = op {
                     if k == key && id >= from && id < below {
-                        out.push(Entry { id, fields });
+                        out.push(Entry::new(id, fields));
                     }
                 }
             });
@@ -1211,10 +1216,10 @@ mod tests {
     }
 
     fn entry(ms: u64, val: &str) -> Entry {
-        Entry {
-            id: EntryId { ms, seq: 0 },
-            fields: vec![(b"r".to_vec(), val.as_bytes().to_vec())],
-        }
+        Entry::new(
+            EntryId { ms, seq: 0 },
+            vec![(b"r".to_vec(), val.as_bytes().to_vec())],
+        )
     }
 
     #[test]
@@ -1329,10 +1334,10 @@ mod tests {
             let (wal, _) = Wal::open(cfg(&dir, FsyncPolicy::Never, 4096)).unwrap();
             for i in 0..n {
                 // ~300 B per frame → several segments at the 4 KiB floor
-                let e = Entry {
-                    id: EntryId { ms: i + 1, seq: 0 },
-                    fields: vec![(b"r".to_vec(), vec![7u8; 256])],
-                };
+                let e = Entry::new(
+                    EntryId { ms: i + 1, seq: 0 },
+                    vec![(b"r".to_vec(), vec![7u8; 256])],
+                );
                 wal.append_add("u/0", &e, 1, i).unwrap();
             }
             assert!(wal.stats().segments > 1, "no rotation happened");
@@ -1357,10 +1362,10 @@ mod tests {
         {
             let (wal, _) = Wal::open(cfg(&dir, FsyncPolicy::Never, 4096)).unwrap();
             for i in 0..40u64 {
-                let e = Entry {
-                    id: EntryId { ms: i + 1, seq: 0 },
-                    fields: vec![(b"r".to_vec(), vec![7u8; 256])],
-                };
+                let e = Entry::new(
+                    EntryId { ms: i + 1, seq: 0 },
+                    vec![(b"r".to_vec(), vec![7u8; 256])],
+                );
                 wal.append_add("u/0", &e, 5, i).unwrap();
             }
             let before = wal.stats().segments;
@@ -1396,10 +1401,10 @@ mod tests {
         let dir = tmpdir("gc-groups");
         let (wal, _) = Wal::open(cfg(&dir, FsyncPolicy::Never, 4096)).unwrap();
         for i in 0..40u64 {
-            let e = Entry {
-                id: EntryId { ms: i + 1, seq: 0 },
-                fields: vec![(b"r".to_vec(), vec![7u8; 256])],
-            };
+            let e = Entry::new(
+                EntryId { ms: i + 1, seq: 0 },
+                vec![(b"r".to_vec(), vec![7u8; 256])],
+            );
             wal.append_add("u/0", &e, 1, i).unwrap();
         }
         let before = wal.stats().segments;
@@ -1557,13 +1562,13 @@ mod tests {
                     let wal = wal.clone();
                     std::thread::spawn(move || {
                         for i in 0..per {
-                            let e = Entry {
-                                id: EntryId {
+                            let e = Entry::new(
+                                EntryId {
                                     ms: t * 1000 + i + 1,
                                     seq: 0,
                                 },
-                                fields: vec![(b"r".to_vec(), vec![t as u8; 32])],
-                            };
+                                vec![(b"r".to_vec(), vec![t as u8; 32])],
+                            );
                             wal.append_add(&format!("u/{t}"), &e, 1, i).unwrap();
                         }
                     })

@@ -9,7 +9,7 @@ use elasticbroker::analysis::{CsvSink, DmdConfig, DmdEngine};
 use elasticbroker::broker::{Broker, BrokerConfig};
 use elasticbroker::cli::{self, Args};
 use elasticbroker::config::{IoMode, WorkflowConfig};
-use elasticbroker::endpoint::{EndpointServer, StoreConfig};
+use elasticbroker::endpoint::{EndpointServer, ServerConfig, StoreConfig};
 use elasticbroker::metrics::WorkflowMetrics;
 use elasticbroker::runtime::ArtifactSet;
 use elasticbroker::sim::{SimConfig, SimRunner};
@@ -108,7 +108,23 @@ fn cmd_endpoint(args: &Args) -> Result<()> {
         wal,
         retention: args.has_flag("retention"),
     };
-    let srv = EndpointServer::start(bind, cfg)?;
+    let io_defaults = ServerConfig::default();
+    let srv_cfg = ServerConfig {
+        io_shards: args
+            .get_parsed::<usize>("io-shards")?
+            .unwrap_or(io_defaults.io_shards)
+            .max(1),
+        read_ring_bytes: args
+            .get_parsed::<usize>("read-ring-bytes")?
+            .unwrap_or(io_defaults.read_ring_bytes)
+            .max(512),
+        max_conns_per_shard: args
+            .get_parsed::<usize>("max-conns-per-shard")?
+            .unwrap_or(io_defaults.max_conns_per_shard)
+            .max(1),
+        ..io_defaults
+    };
+    let srv = EndpointServer::start_with(bind, cfg, srv_cfg)?;
     println!("endpoint listening on {}", srv.addr());
     // Serve until killed.
     loop {

@@ -252,6 +252,17 @@ pub struct EndpointStats {
     /// set by whoever provisions the endpoint; the rebalancer prefers
     /// durable endpoints as migration targets, ties being equal.
     pub durable: Gauge,
+    /// Live connections on the endpoint server (ISSUE 7) — the
+    /// rebalancer's view of *reader* pressure, which flush latency
+    /// alone (a writer-side signal) cannot see.
+    pub connections: Gauge,
+    /// Bytes read off endpoint server sockets (commands in).
+    pub bytes_read: Counter,
+    /// Bytes written to endpoint server sockets (replies out).
+    pub bytes_written: Counter,
+    /// Connections refused/dropped by the accept path (accept(2)
+    /// errors, per-shard connection cap sheds, registration failures).
+    pub accept_errors: Counter,
 }
 
 impl EndpointStats {

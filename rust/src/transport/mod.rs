@@ -9,9 +9,12 @@
 //!
 //! [`RespConn::request`] is the classic one-command round trip (one
 //! write, one reply, one RTT).  [`RespConn::pipeline`] is the batched
-//! hot path the broker writers use: N [`Request`]s are encoded into one
-//! buffered write, then all N replies are drained — one RTT and one
-//! syscall pair per *batch* instead of per command, which is what lets
+//! hot path the broker writers use: N [`Request`]s are staged into one
+//! **vectored** write — RESP headers and small arguments land in a
+//! reusable scratch buffer, large payload arguments are borrowed
+//! directly from the request as extra `IoSlice`s (never copied) — then
+//! all N replies are drained: one RTT and one `writev` burst per
+//! *batch* instead of per command, which is what lets
 //! a single writer saturate the link at small record sizes.  The
 //! throttle is charged once per batch (on the batch's total encoded
 //! bytes) **and only on successful flushes**: a frame that dies
@@ -37,7 +40,7 @@
 
 pub mod sim;
 
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::{Duration, Instant};
 
@@ -206,6 +209,57 @@ fn decimal_len(mut v: usize) -> usize {
     n
 }
 
+/// Arguments at least this large are shipped as borrowed [`IoSlice`]s
+/// instead of being memcpy'd into the connection scratch buffer.  Below
+/// this size the copy is cheaper than growing the iovec (and keeps the
+/// scratch runs long, so the kernel sees few, large segments).
+const VEC_BORROW_MIN: usize = 1024;
+
+/// Max `IoSlice`s handed to one `write_vectored` call (mirrors the
+/// server's reply path; comfortably under every platform's IOV_MAX).
+const IOV_BATCH: usize = 64;
+
+/// One slice of a staged pipelined frame: either a run of the
+/// connection's scratch buffer (headers + small args, identified by
+/// range so no borrow of the buffer is held while staging) or a payload
+/// argument borrowed straight from the caller's [`Request`].
+enum FrameSeg<'a> {
+    Inline { start: usize, len: usize },
+    Borrowed(&'a [u8]),
+}
+
+impl FrameSeg<'_> {
+    fn len(&self) -> usize {
+        match self {
+            FrameSeg::Inline { len, .. } => *len,
+            FrameSeg::Borrowed(b) => b.len(),
+        }
+    }
+}
+
+/// Record `len` scratch bytes starting at `start`, merging with the
+/// previous segment when contiguous so interleaved header pushes cost
+/// one iovec entry, not five.
+fn note_inline(segs: &mut Vec<FrameSeg<'_>>, start: usize, len: usize) {
+    if len == 0 {
+        return;
+    }
+    if let Some(FrameSeg::Inline { start: s, len: l }) = segs.last_mut() {
+        if *s + *l == start {
+            *l += len;
+            return;
+        }
+    }
+    segs.push(FrameSeg::Inline { start, len });
+}
+
+/// Append `bytes` to the scratch buffer and note the run in `segs`.
+fn push_inline<'a>(buf: &mut Vec<u8>, segs: &mut Vec<FrameSeg<'a>>, bytes: &[u8]) {
+    let start = buf.len();
+    buf.extend_from_slice(bytes);
+    note_inline(segs, start, bytes.len());
+}
+
 /// Connection settings.
 #[derive(Clone, Debug)]
 pub struct ConnConfig {
@@ -351,11 +405,13 @@ impl RespConn {
         Ok(reply)
     }
 
-    /// Send a batch of commands as one pipelined write and drain all
-    /// replies (`replies[i]` answers `reqs[i]`).
+    /// Send a batch of commands as one pipelined vectored write and
+    /// drain all replies (`replies[i]` answers `reqs[i]`).
     ///
-    /// One buffered write + one reply-drain per batch: the per-command
-    /// RTT of [`request`](Self::request) is paid once per *batch*.  The
+    /// One `writev` burst + one reply-drain per batch: the per-command
+    /// RTT of [`request`](Self::request) is paid once per *batch*, and
+    /// arguments >= 1 KiB are borrowed into the iovec rather than
+    /// copied into the send buffer.  The
     /// throttle, when configured, is charged once on the batch's total
     /// encoded size.  On connection failure the **whole batch** is
     /// retried on a fresh connection, so delivery is at-least-once —
@@ -384,12 +440,85 @@ impl RespConn {
         self.ensure_connected()?;
         self.buf.clear();
         let total: usize = reqs.iter().map(Request::wire_len).sum();
-        self.buf.reserve(total);
+
+        // Stage the frame: headers and small arguments are copied into
+        // the reusable scratch buffer (contiguous runs merge into one
+        // segment); arguments >= VEC_BORROW_MIN are *borrowed* from the
+        // request so megabyte payloads are handed to writev in place,
+        // never memcpy'd client-side.
+        let mut segs: Vec<FrameSeg<'_>> = Vec::new();
         for r in reqs {
-            r.encode_into(&mut self.buf);
+            if r.parts.iter().all(|p| p.len() < VEC_BORROW_MIN) {
+                // All-small fast path: one flat append, one segment.
+                let start = self.buf.len();
+                r.encode_into(&mut self.buf);
+                let len = self.buf.len() - start;
+                note_inline(&mut segs, start, len);
+                continue;
+            }
+            push_inline(&mut self.buf, &mut segs, b"*");
+            push_inline(&mut self.buf, &mut segs, r.parts.len().to_string().as_bytes());
+            push_inline(&mut self.buf, &mut segs, b"\r\n");
+            for p in &r.parts {
+                push_inline(&mut self.buf, &mut segs, b"$");
+                push_inline(&mut self.buf, &mut segs, p.len().to_string().as_bytes());
+                push_inline(&mut self.buf, &mut segs, b"\r\n");
+                if p.len() >= VEC_BORROW_MIN {
+                    segs.push(FrameSeg::Borrowed(p));
+                } else {
+                    push_inline(&mut self.buf, &mut segs, p);
+                }
+                push_inline(&mut self.buf, &mut segs, b"\r\n");
+            }
         }
+        debug_assert_eq!(
+            segs.iter().map(FrameSeg::len).sum::<usize>(),
+            total,
+            "staged frame must cover the exact wire length"
+        );
+
+        // Hand-rolled write-all-vectored (`Write::write_all_vectored`
+        // is unstable): re-slice the head segment past what the kernel
+        // took and keep issuing writev until the frame is fully sent.
         let stream = self.stream.as_mut().unwrap();
-        stream.write_all(&self.buf).context("write")?;
+        let mut seg_idx = 0usize;
+        let mut seg_off = 0usize;
+        while seg_idx < segs.len() {
+            let n = {
+                let mut iov: Vec<IoSlice<'_>> =
+                    Vec::with_capacity((segs.len() - seg_idx).min(IOV_BATCH));
+                for (k, s) in segs[seg_idx..].iter().take(IOV_BATCH).enumerate() {
+                    let mut bytes: &[u8] = match s {
+                        FrameSeg::Inline { start, len } => &self.buf[*start..*start + *len],
+                        FrameSeg::Borrowed(b) => b,
+                    };
+                    if k == 0 {
+                        bytes = &bytes[seg_off..];
+                    }
+                    iov.push(IoSlice::new(bytes));
+                }
+                match stream.write_vectored(&iov) {
+                    Ok(0) => bail!("connection closed by peer during pipelined write"),
+                    Ok(n) => n,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e).context("write"),
+                }
+            };
+            let mut rem = n;
+            while rem > 0 {
+                let left = segs[seg_idx].len() - seg_off;
+                if rem >= left {
+                    rem -= left;
+                    seg_idx += 1;
+                    seg_off = 0;
+                } else {
+                    seg_off += rem;
+                    rem = 0;
+                }
+            }
+        }
+        drop(segs);
+
         let mut replies = Vec::with_capacity(reqs.len());
         while replies.len() < reqs.len() {
             if let Some(v) = self.decoder.next()? {
@@ -408,9 +537,11 @@ impl RespConn {
         }
         // Charged per batch, not per command — and only on success, so
         // a flaky link's reconnect retries don't double-pay the WAN
-        // budget for bytes that never produced a reply.
+        // budget for bytes that never produced a reply.  `total` (the
+        // exact wire length), not `buf.len()`: borrowed payload
+        // segments never pass through the scratch buffer.
         if let Some(t) = self.throttle.as_mut() {
-            t.consume(self.buf.len());
+            t.consume(total);
         }
         Ok(replies)
     }
@@ -611,6 +742,89 @@ mod tests {
             assert!(b > a, "{} !> {}", w[1], w[0]);
         }
         assert_eq!(srv.store().xlen("s"), 64);
+    }
+
+    /// ISSUE 7: arguments >= `VEC_BORROW_MIN` travel as borrowed
+    /// `IoSlice`s; interleaving them with all-small requests exercises
+    /// segment merging, the fast path, and the partial-write re-slice
+    /// logic — the replies must still come back exact and in order.
+    #[test]
+    fn pipeline_mixes_borrowed_and_inline_segments() {
+        let srv = crate::endpoint::EndpointServer::start(
+            "127.0.0.1:0",
+            crate::endpoint::StoreConfig::default(),
+        )
+        .unwrap();
+        let mut conn = RespConn::connect(srv.addr(), ConnConfig::default()).unwrap();
+        let big: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        let mut reqs = Vec::new();
+        for i in 0..8 {
+            if i % 2 == 0 {
+                reqs.push(Request::new("ECHO").arg(big.clone()));
+            } else {
+                reqs.push(Request::new("ECHO").arg(format!("small-{i}")));
+            }
+        }
+        let replies = conn.pipeline(&reqs).unwrap();
+        assert_eq!(replies.len(), 8);
+        for (i, r) in replies.iter().enumerate() {
+            if i % 2 == 0 {
+                assert_eq!(r, &Value::Bulk(big.clone()), "reply {i}");
+            } else {
+                assert_eq!(r, &Value::Bulk(format!("small-{i}").into_bytes()));
+            }
+        }
+    }
+
+    /// The staged segment list must re-serialize to exactly the flat
+    /// encoding (also enforced by a `debug_assert` on the wire-length
+    /// sum inside `try_pipeline` on every batch).
+    #[test]
+    fn frame_segments_cover_exact_wire_length() {
+        let reqs = [
+            Request::new("PING"),
+            Request::new("XADD").arg("s").arg("*").arg("r").arg(vec![7u8; 4096]),
+            Request::new("ECHO").arg(Vec::<u8>::new()),
+        ];
+        let mut buf = Vec::new();
+        let mut segs: Vec<FrameSeg<'_>> = Vec::new();
+        for r in &reqs {
+            push_inline(&mut buf, &mut segs, b"*");
+            push_inline(&mut buf, &mut segs, r.parts.len().to_string().as_bytes());
+            push_inline(&mut buf, &mut segs, b"\r\n");
+            for p in &r.parts {
+                push_inline(&mut buf, &mut segs, b"$");
+                push_inline(&mut buf, &mut segs, p.len().to_string().as_bytes());
+                push_inline(&mut buf, &mut segs, b"\r\n");
+                if p.len() >= VEC_BORROW_MIN {
+                    segs.push(FrameSeg::Borrowed(p));
+                } else {
+                    push_inline(&mut buf, &mut segs, p);
+                }
+                push_inline(&mut buf, &mut segs, b"\r\n");
+            }
+        }
+        let mut flat = Vec::new();
+        for s in &segs {
+            match s {
+                FrameSeg::Inline { start, len } => flat.extend_from_slice(&buf[*start..*start + *len]),
+                FrameSeg::Borrowed(b) => flat.extend_from_slice(b),
+            }
+        }
+        let mut expect = Vec::new();
+        for r in &reqs {
+            r.encode_into(&mut expect);
+        }
+        assert_eq!(flat, expect);
+        let total: usize = reqs.iter().map(Request::wire_len).sum();
+        assert_eq!(flat.len(), total);
+        // Contiguous header runs merged: the all-small PING collapses
+        // into the same inline segment as the XADD headers before it.
+        assert!(
+            segs.len() < 3 * 6,
+            "inline runs failed to merge: {} segments",
+            segs.len()
+        );
     }
 
     #[test]

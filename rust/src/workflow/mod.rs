@@ -21,7 +21,7 @@ use anyhow::Result;
 use crate::analysis::{AnalysisResult, CsvSink, DmdConfig, DmdEngine};
 use crate::broker::{Broker, BrokerConfig, QosThresholds, Rebalancer, TopologyHandle};
 use crate::config::{IoMode, WorkflowConfig};
-use crate::endpoint::{EndpointServer, StoreConfig};
+use crate::endpoint::{EndpointServer, ServerConfig, StoreConfig};
 use crate::metrics::WorkflowMetrics;
 use crate::runtime::ArtifactSet;
 use crate::sim::{SimConfig, SimRunner};
@@ -69,13 +69,22 @@ impl CloudSide {
                     segment_bytes: cfg.wal_segment_bytes,
                 })
             };
-            endpoints.push(EndpointServer::start(
+            // ISSUE 7: size the endpoint's event loop from the config
+            // and mirror its connection/byte stats into the QoS board
+            // slot the rebalancer already watches.
+            endpoints.push(EndpointServer::start_with(
                 "127.0.0.1:0",
                 StoreConfig {
                     shards: cfg.store_shards,
                     wal,
                     retention: cfg.retention,
                     ..StoreConfig::default()
+                },
+                ServerConfig {
+                    io_shards: cfg.io_shards,
+                    read_ring_bytes: cfg.read_ring_bytes,
+                    max_conns_per_shard: cfg.max_conns_per_shard,
+                    metrics: Some(metrics.qos.slot(i)),
                 },
             )?);
             if !cfg.wal_dir.is_empty() {
