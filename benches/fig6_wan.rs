@@ -1,0 +1,338 @@
+//! Fig 6-style WAN experiment (ISSUE 8): end-to-end latency and
+//! achieved accuracy across throttled-bandwidth × reduction-policy
+//! cells.
+//!
+//! Each cell ships paced snapshots from one broker context through a
+//! bandwidth-throttled link into a real endpoint, tails the stream and
+//! measures per-frame end-to-end latency (`arrival − gen_micros`) plus
+//! the *actual* decode error against the original field:
+//!
+//! * `static`   — the configured lossless pipeline, pinned (pre-ISSUE-8
+//!   behaviour),
+//! * `adaptive` — the same base config with the closed-loop controller
+//!   walking the reduction ladder under pressure.
+//!
+//! `cargo bench --bench fig6_wan`  (BENCH_SMOKE=1 for the CI sizing)
+//!
+//! Emits `BENCH_wan.json`.  Self-enforced gates, on the tight cell:
+//! the adaptive policy must meet the steady-state p95 latency budget
+//! that the static lossless config misses, while no adaptive frame's
+//! measured error ever exceeds `stages.max_err`; on the roomy cell the
+//! controller must never leave level 0 (no fidelity paid when the
+//! bandwidth is there).
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use elasticbroker::broker::{AdaptConfig, AdaptController, Broker, BrokerConfig, StagesConfig};
+use elasticbroker::endpoint::{EndpointServer, StoreConfig};
+use elasticbroker::metrics::WorkflowMetrics;
+use elasticbroker::streamproc::StreamReader;
+use elasticbroker::transport::ConnConfig;
+
+const DIM: usize = 8 * 1024; // 32 KiB/frame at f32
+const PACE: Duration = Duration::from_millis(50); // 20 frames/s offered
+const MAX_ERR: f32 = 0.25;
+const BUDGET_US: u64 = 1_000_000; // steady-state p95 budget
+
+/// Deterministic smooth field for (step) — decaying oscillation, the
+/// same family as the integration suites.
+fn original(step: u64) -> Vec<f32> {
+    let decay = 0.95f64.powi(step as i32);
+    (0..DIM)
+        .map(|i| (decay * (0.4 * step as f64 + 0.13 * i as f64).cos()) as f32)
+        .collect()
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Policy {
+    Static,
+    Adaptive,
+}
+
+impl Policy {
+    fn name(self) -> &'static str {
+        match self {
+            Policy::Static => "static",
+            Policy::Adaptive => "adaptive",
+        }
+    }
+}
+
+struct Cell {
+    policy: Policy,
+    throttle_bps: f64,
+    frames: u64,
+    /// p95 latency over all delivered frames (µs).
+    p95_us: u64,
+    /// p95 over the last quarter — past the controller's descent.
+    steady_p95_us: u64,
+    /// Worst measured |original − decoded| across all frames.
+    worst_err: f32,
+    /// Worst stated `err_bound` across all frames.
+    worst_bound: f32,
+    /// Distinct `lvl:` provenance tags seen on the wire.
+    levels: Vec<String>,
+    steps_down: u64,
+    steps_up: u64,
+}
+
+fn p95(lat: &mut [u64]) -> u64 {
+    if lat.is_empty() {
+        return 0;
+    }
+    lat.sort_unstable();
+    lat[((lat.len() as f64 * 0.95).ceil() as usize).saturating_sub(1)]
+}
+
+fn run_cell(policy: Policy, throttle_bps: f64, frames: u64) -> anyhow::Result<Cell> {
+    let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default())?;
+    let metrics = WorkflowMetrics::new();
+    let adapt_cfg = AdaptConfig {
+        sweep_ms: if policy == Policy::Adaptive { 15 } else { 0 },
+        target_p95_us: 250_000,
+        queue_hi: 3,
+        hysteresis: 3,
+    };
+    let broker = Arc::new(Broker::new(
+        BrokerConfig {
+            group_size: 1,
+            queue_cap: 12,
+            batch_max_records: 2,
+            stages: StagesConfig { max_err: MAX_ERR, ..StagesConfig::default() },
+            adapt: adapt_cfg.clone(),
+            conn: ConnConfig {
+                throttle_bytes_per_sec: Some(throttle_bps),
+                ..ConnConfig::default()
+            },
+            ..BrokerConfig::new(vec![srv.addr()])
+        },
+        1,
+        metrics.clone(),
+    )?);
+    let controller = if policy == Policy::Adaptive {
+        Some(AdaptController::start(
+            broker.adapt_registry(),
+            broker.topology().clone(),
+            metrics.clone(),
+            adapt_cfg,
+        ))
+    } else {
+        None
+    };
+
+    // Tail the stream, measuring latency + true error per frame.
+    let addr = srv.addr();
+    type ReaderOut = (Vec<(u64, u64)>, f32, f32, BTreeSet<String>);
+    let reader = std::thread::spawn(move || -> anyhow::Result<ReaderOut> {
+        let mut r = StreamReader::connect(
+            addr,
+            vec!["wan/0".to_string()],
+            0,
+            ConnConfig::default(),
+        )?;
+        let mut lat: Vec<(u64, u64)> = Vec::new(); // (step, µs)
+        let mut worst_err = 0.0f32;
+        let mut worst_bound = 0.0f32;
+        let mut levels = BTreeSet::new();
+        let deadline = Instant::now() + Duration::from_secs(180);
+        while lat.len() < frames as usize && Instant::now() < deadline {
+            let mut idle = true;
+            for batch in r.poll()? {
+                for rec in &batch.records {
+                    idle = false;
+                    let now = elasticbroker::util::epoch_micros();
+                    lat.push((rec.step, now.saturating_sub(rec.gen_micros)));
+                    let got = rec.payload_f32()?;
+                    anyhow::ensure!(
+                        !got.is_empty() && DIM % got.len() == 0,
+                        "frame dim {} does not divide the field",
+                        got.len()
+                    );
+                    let factor = DIM / got.len();
+                    let orig = original(rec.step);
+                    let mut err = 0.0f32;
+                    for (i, b) in orig.iter().enumerate() {
+                        err = err.max((got[i / factor] - b).abs());
+                    }
+                    let bound = rec.meta.as_ref().map(|m| m.err_bound).unwrap_or(0.0);
+                    anyhow::ensure!(
+                        err <= bound + 1e-6,
+                        "step {}: error {err} over stated bound {bound}",
+                        rec.step
+                    );
+                    worst_err = worst_err.max(err);
+                    worst_bound = worst_bound.max(bound);
+                    if let Some(m) = &rec.meta {
+                        if let Some(tag) =
+                            m.provenance.split('|').find(|p| p.starts_with("lvl:"))
+                        {
+                            // keep the level, drop the per-stream epoch
+                            let lvl =
+                                tag.split('@').next().unwrap_or(tag).to_string();
+                            levels.insert(lvl);
+                        }
+                    }
+                }
+            }
+            if idle {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        anyhow::ensure!(
+            lat.len() == frames as usize,
+            "delivered {}/{frames} frames before the deadline",
+            lat.len()
+        );
+        Ok((lat, worst_err, worst_bound, levels))
+    });
+
+    // Paced writer: offers ~20 frames/s; blocks on the queue when the
+    // link cannot keep up (the paper's asynchronous-write property).
+    let ctx = broker.init("wan", 0)?;
+    for step in 0..frames {
+        ctx.write(step, &[DIM as u32], &original(step))?;
+        std::thread::sleep(PACE);
+    }
+    ctx.finalize()?;
+    let (lat, worst_err, worst_bound, levels) =
+        reader.join().map_err(|_| anyhow::anyhow!("reader panicked"))??;
+    if let Some(c) = controller {
+        c.stop();
+    }
+
+    let mut all: Vec<u64> = lat.iter().map(|&(_, us)| us).collect();
+    // steady state: the last quarter of the offered steps, past the
+    // controller's descent transient
+    let mut steady: Vec<u64> = lat
+        .iter()
+        .filter(|&&(step, _)| step >= frames - frames / 4)
+        .map(|&(_, us)| us)
+        .collect();
+    Ok(Cell {
+        policy,
+        throttle_bps,
+        frames,
+        p95_us: p95(&mut all),
+        steady_p95_us: p95(&mut steady),
+        worst_err,
+        worst_bound,
+        levels: levels.into_iter().collect(),
+        steps_down: metrics.adapt.steps_down.get(),
+        steps_up: metrics.adapt.steps_up.get(),
+    })
+}
+
+fn json_cell(c: &Cell) -> String {
+    format!(
+        r#"{{"policy":"{}","throttle_bps":{},"frames":{},"p95_us":{},"steady_p95_us":{},"worst_err":{:.6},"worst_bound":{:.6},"levels":[{}],"steps_down":{},"steps_up":{}}}"#,
+        c.policy.name(),
+        c.throttle_bps,
+        c.frames,
+        c.p95_us,
+        c.steady_p95_us,
+        c.worst_err,
+        c.worst_bound,
+        c.levels
+            .iter()
+            .map(|l| format!("\"{l}\""))
+            .collect::<Vec<_>>()
+            .join(","),
+        c.steps_down,
+        c.steps_up,
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    elasticbroker::util::logger::init();
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let frames: u64 = if smoke { 40 } else { 120 };
+    const TIGHT: f64 = 200_000.0; // the offered f32 rate is ~3× this
+    const ROOMY: f64 = 1_000_000.0; // comfortably above the offered rate
+    let bandwidths: &[f64] = if smoke { &[TIGHT] } else { &[ROOMY, TIGHT] };
+
+    println!(
+        "# fig6_wan: {frames} frames × {} B (f32), paced {:?}, budget p95 ≤ {} ms, max_err {MAX_ERR}",
+        DIM * 4,
+        PACE,
+        BUDGET_US / 1000
+    );
+    let mut cells = Vec::new();
+    for &bw in bandwidths {
+        for policy in [Policy::Static, Policy::Adaptive] {
+            let c = run_cell(policy, bw, frames)?;
+            println!(
+                "  {:>9} @ {:>7.0} B/s: p95 {:>8} µs (steady {:>8} µs)  worst err {:.5} (bound {:.5})  levels {:?}  down/up {}/{}",
+                c.policy.name(),
+                c.throttle_bps,
+                c.p95_us,
+                c.steady_p95_us,
+                c.worst_err,
+                c.worst_bound,
+                c.levels,
+                c.steps_down,
+                c.steps_up,
+            );
+            cells.push(c);
+        }
+    }
+
+    // --- the acceptance gates this PR ships under ---------------------
+    let find = |policy: Policy, bw: f64| {
+        cells
+            .iter()
+            .find(|c| c.policy == policy && c.throttle_bps == bw)
+            .expect("cell ran")
+    };
+    let st = find(Policy::Static, TIGHT);
+    let ad = find(Policy::Adaptive, TIGHT);
+    anyhow::ensure!(
+        st.steady_p95_us > BUDGET_US,
+        "static lossless unexpectedly met the budget ({} µs) — the WAN \
+         cell is not tight enough to demonstrate adaptation",
+        st.steady_p95_us
+    );
+    anyhow::ensure!(
+        ad.steady_p95_us <= BUDGET_US,
+        "adaptive policy missed the latency budget: {} µs > {BUDGET_US} µs",
+        ad.steady_p95_us
+    );
+    anyhow::ensure!(
+        ad.worst_err <= MAX_ERR + 1e-6,
+        "adaptive policy violated the accuracy target: {} > {MAX_ERR}",
+        ad.worst_err
+    );
+    anyhow::ensure!(
+        ad.steps_down >= 1 && ad.levels.len() >= 2,
+        "controller never adapted under the tight link"
+    );
+    anyhow::ensure!(
+        st.worst_err == 0.0,
+        "static lossless must decode bit-exactly (err {})",
+        st.worst_err
+    );
+    if !smoke {
+        let calm = find(Policy::Adaptive, ROOMY);
+        anyhow::ensure!(
+            calm.steps_down == 0 && calm.worst_err == 0.0,
+            "controller paid fidelity ({} downs, err {}) with bandwidth to spare",
+            calm.steps_down,
+            calm.worst_err
+        );
+    }
+    println!(
+        "\ngates: static steady p95 {} µs > {BUDGET_US} µs < adaptive {} µs; \
+         adaptive worst err {:.5} ≤ {MAX_ERR}",
+        st.steady_p95_us, ad.steady_p95_us, ad.worst_err
+    );
+
+    let json = format!(
+        r#"{{"bench":"fig6_wan","smoke":{smoke},"dim":{DIM},"budget_us":{BUDGET_US},"max_err":{MAX_ERR},"cells":[{}]}}"#,
+        cells.iter().map(json_cell).collect::<Vec<_>>().join(",")
+    );
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_wan.json");
+    std::fs::write(out_path, &json)?;
+    println!("wrote {out_path}");
+    Ok(())
+}

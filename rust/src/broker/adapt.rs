@@ -1,0 +1,777 @@
+//! Closed-loop adaptive reduction under WAN budgets (ISSUE 8
+//! tentpole) — ElasticBroker's elasticity philosophy applied to
+//! *fidelity*.
+//!
+//! The stage pipeline (ISSUE 5) has the lossy dial and the QoS board
+//! (ISSUE 3/6) has the measurements; this module connects them.  A
+//! mis-sized static `[stages]` config either wastes fidelity or blows
+//! the latency budget — the [`AdaptController`] instead samples the
+//! existing QoS signals each sweep (windowed flush p95, peak endpoint
+//! queue depth, the stream's own writer backlog — the throttled-WAN
+//! pressure proxy) and walks each stream's **reduction ladder**:
+//!
+//! ```text
+//!   level 0          1          2            3            4      5
+//!   base (f32) →   f16   →  qdelta(q)  → qdelta(4q) →  agg×2 → agg×4
+//!   ──────────────── lossier / fewer wire bytes ───────────────────→
+//! ```
+//!
+//! *down* (lossier) under bandwidth pressure and back *up* once the
+//! link has been calm for `hysteresis` consecutive sweeps.  An empty
+//! flush window is a **stall**, not "fast" — the controller holds
+//! rather than walking fidelity back up while the link is wedged
+//! (ISSUE 8 bugfix; see [`crate::metrics::Histogram::windowed_quantile`]).
+//!
+//! **Accuracy is a constraint, not a hope.**  Every stream carries an
+//! accuracy target (`stages.max_err`), enforced against the frame's
+//! *measured* error bound — never a static config:
+//!
+//! * rungs whose a-priori bound already violates the target (qdelta
+//!   step/2) are pruned at ladder build time;
+//! * data-dependent rungs (f16, block-mean aggregation) are admitted
+//!   optimistically and checked on the **write path**: a frame whose
+//!   measured `err_bound` exceeds the target is never shipped — the
+//!   level is permanently disqualified for that stream and the frame
+//!   re-encodes at the nearest safer rung (level 0 always admits).
+//!
+//! **Replay safety.**  Level changes are safe across migration,
+//! crash-restart WAL replay and server-side reduced views because the
+//! `EBR2` frame meta is the contract: every adaptively-shipped frame —
+//! including level 0 — is a staged frame that fully describes its own
+//! encoding and carries a `lvl:N@E` provenance tag (ladder level `N`,
+//! monotone per-stream change epoch `E`).  Readers never need
+//! controller state to decode; a replayed WAL reproduces exactly the
+//! fidelity history that was acked.
+//!
+//! Wiring: [`crate::broker::Broker`] builds one [`Ladder`] per stage
+//! config, registers each context's [`StreamAdapt`] in the shared
+//! [`AdaptRegistry`], and the workflow starts one [`AdaptController`]
+//! next to the [`super::Rebalancer`] — both sample the QoS board
+//! through the shared non-destructive [`crate::metrics::QosBoard::sweep`].
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use super::queue::BoundedQueue;
+use super::stages::{StagePipeline, StagesConfig};
+use super::topology::TopologyHandle;
+use crate::metrics::{AdaptMetrics, StageMetrics, WorkflowMetrics};
+use crate::record::{Encoding, StreamRecord};
+
+/// Controller knobs (config `[adapt]`, CLI `--adapt-*`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdaptConfig {
+    /// Controller sweep period (ms); 0 disables the controller and the
+    /// whole adaptive path (contexts then use the static stage config).
+    pub sweep_ms: u64,
+    /// Latency budget: a windowed flush p95 above this (µs) is
+    /// bandwidth pressure.
+    pub target_p95_us: u64,
+    /// Queue pressure: an endpoint peak queue depth or per-stream
+    /// writer backlog at/above this many records is pressure.
+    pub queue_hi: u64,
+    /// Consecutive calm sweeps required before walking one level back
+    /// up (the down direction reacts immediately; recovery is damped).
+    pub hysteresis: u32,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        AdaptConfig {
+            sweep_ms: 0,
+            target_p95_us: 50_000,
+            queue_hi: 16,
+            hysteresis: 3,
+        }
+    }
+}
+
+impl AdaptConfig {
+    pub fn enabled(&self) -> bool {
+        self.sweep_ms > 0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        ensure!(self.target_p95_us > 0, "adapt.target_p95_us must be > 0");
+        ensure!(self.queue_hi > 0, "adapt.queue_hi must be > 0");
+        ensure!(self.hysteresis >= 1, "adapt.hysteresis must be >= 1");
+        Ok(())
+    }
+}
+
+/// The level-0-first rung configs derived from `base`:
+/// `base → f16 → qdelta(q) → qdelta(4q) → agg×2 → agg×4` (aggregate
+/// rungs stack on the coarsest admitted convert rung).  Rungs that
+/// duplicate an earlier one, fail validation, or whose *a-priori*
+/// error bound (qdelta step/2) already violates `base.max_err` are
+/// skipped; data-dependent rungs (f16, aggregation) are admitted here
+/// and policed at runtime by [`StreamAdapt::encode`].
+pub fn ladder_configs(base: &StagesConfig) -> Vec<StagesConfig> {
+    fn push(out: &mut Vec<StagesConfig>, cfg: StagesConfig, max_err: f32) {
+        if max_err > 0.0
+            && cfg.convert == Encoding::QDelta
+            && cfg.qdelta_step * 0.5 > max_err
+        {
+            return;
+        }
+        if cfg.validate().is_err() || out.contains(&cfg) {
+            return;
+        }
+        out.push(cfg);
+    }
+
+    let max_err = base.max_err;
+    let mut out = vec![base.clone()];
+    if base.convert == Encoding::F32 {
+        push(
+            &mut out,
+            StagesConfig { convert: Encoding::F16, ..base.clone() },
+            max_err,
+        );
+    }
+    // A base already quantizing at step s coarsens from 4s; otherwise
+    // the configured step is the first quantized rung.
+    let q0 = if base.convert == Encoding::QDelta {
+        base.qdelta_step * 4.0
+    } else {
+        base.qdelta_step
+    };
+    for step in [q0, q0 * 4.0] {
+        push(
+            &mut out,
+            StagesConfig {
+                convert: Encoding::QDelta,
+                qdelta_step: step,
+                ..base.clone()
+            },
+            max_err,
+        );
+    }
+    let tail = out.last().cloned().unwrap_or_else(|| base.clone());
+    for factor in [2usize, 4] {
+        push(
+            &mut out,
+            StagesConfig {
+                aggregate: base.aggregate.max(1) * factor,
+                ..tail.clone()
+            },
+            max_err,
+        );
+    }
+    out
+}
+
+/// A prebuilt, validated reduction ladder — one per stage config, its
+/// pipelines shared by every stream using that config (pipelines are
+/// stateless per record; per-stream position lives in [`StreamAdapt`]).
+pub struct Ladder {
+    pipelines: Vec<Arc<StagePipeline>>,
+    max_err: f32,
+}
+
+impl Ladder {
+    pub fn build(base: &StagesConfig, metrics: Arc<StageMetrics>) -> Result<Arc<Ladder>> {
+        let configs = ladder_configs(base);
+        ensure!(
+            configs.len() <= 64,
+            "adapt: ladder of {} levels exceeds the 64-level admission mask",
+            configs.len()
+        );
+        let mut pipelines = Vec::with_capacity(configs.len());
+        for cfg in configs {
+            pipelines.push(Arc::new(StagePipeline::new(cfg, metrics.clone())?));
+        }
+        Ok(Arc::new(Ladder { pipelines, max_err: base.max_err }))
+    }
+
+    pub fn len(&self) -> usize {
+        self.pipelines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pipelines.is_empty()
+    }
+
+    /// Per-stream accuracy target (0 = unconstrained).
+    pub fn max_err(&self) -> f32 {
+        self.max_err
+    }
+
+    pub fn level(&self, i: usize) -> &Arc<StagePipeline> {
+        &self.pipelines[i.min(self.pipelines.len() - 1)]
+    }
+}
+
+/// One stream's runtime-swappable position on the ladder, shared
+/// between its write path and the controller.  All state is atomic:
+/// the write path never blocks on the controller.
+pub struct StreamAdapt {
+    key: String,
+    group: usize,
+    ladder: Arc<Ladder>,
+    queue: Arc<BoundedQueue<StreamRecord>>,
+    /// Current ladder level (0 = most faithful).
+    level: AtomicUsize,
+    /// Monotone change epoch: bumped on every level transition, stamped
+    /// into each frame's `lvl:N@E` provenance tag.
+    epoch: AtomicU64,
+    /// Consecutive calm sweeps seen by the controller (hysteresis).
+    calm: AtomicU32,
+    /// Max measured `err_bound` shipped since the controller last
+    /// drained it (f32 bits; non-negative floats order like their bits).
+    worst_err_bits: AtomicU32,
+    /// Bitmask of levels disqualified by the write-path admission check
+    /// (measured error over target, or encode failure).  Sticky for the
+    /// stream's lifetime; level 0 is never disqualified.
+    inadmissible: AtomicU64,
+}
+
+impl StreamAdapt {
+    pub fn new(
+        key: String,
+        group: usize,
+        ladder: Arc<Ladder>,
+        queue: Arc<BoundedQueue<StreamRecord>>,
+    ) -> Arc<StreamAdapt> {
+        Arc::new(StreamAdapt {
+            key,
+            group,
+            ladder,
+            queue,
+            level: AtomicUsize::new(0),
+            epoch: AtomicU64::new(0),
+            calm: AtomicU32::new(0),
+            worst_err_bits: AtomicU32::new(0),
+            inadmissible: AtomicU64::new(0),
+        })
+    }
+
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    pub fn ladder(&self) -> &Arc<Ladder> {
+        &self.ladder
+    }
+
+    pub fn level(&self) -> usize {
+        self.level.load(Ordering::Relaxed)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Records waiting in this stream's writer queue — the throttled-
+    /// WAN backlog proxy the controller reads.
+    pub fn backlog(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Whether `lvl` may be encoded at (level 0 always admits).
+    pub fn admissible(&self, lvl: usize) -> bool {
+        lvl == 0 || self.inadmissible.load(Ordering::Relaxed) & (1u64 << lvl) == 0
+    }
+
+    fn mark_inadmissible(&self, lvl: usize) {
+        if lvl > 0 && lvl < 64 {
+            self.inadmissible.fetch_or(1u64 << lvl, Ordering::Relaxed);
+        }
+    }
+
+    fn note_err(&self, err: f32) {
+        self.worst_err_bits
+            .fetch_max(err.max(0.0).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Max measured error bound shipped since the last drain.
+    pub fn take_worst_err(&self) -> f32 {
+        f32::from_bits(self.worst_err_bits.swap(0, Ordering::Relaxed))
+    }
+
+    /// CAS `from → to`, bumping the epoch on success.  Loses gracefully
+    /// to a concurrent transition (the caller re-reads).
+    fn transition(&self, from: usize, to: usize) -> Option<usize> {
+        if self
+            .level
+            .compare_exchange(from, to, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            self.epoch.fetch_add(1, Ordering::Relaxed);
+            Some(to)
+        } else {
+            None
+        }
+    }
+
+    /// Walk one rung lossier (skipping disqualified rungs); `None` when
+    /// already at the bottom or a concurrent transition won.
+    pub fn step_down(&self) -> Option<usize> {
+        let cur = self.level();
+        let mut next = cur + 1;
+        while next < self.ladder.len() {
+            if self.admissible(next) {
+                return self.transition(cur, next);
+            }
+            next += 1;
+        }
+        None
+    }
+
+    /// Walk one rung more faithful; `None` at the top (level 0) or on a
+    /// lost race.
+    pub fn step_up(&self) -> Option<usize> {
+        let cur = self.level();
+        let mut next = cur.checked_sub(1)?;
+        while next > 0 && !self.admissible(next) {
+            next -= 1;
+        }
+        self.transition(cur, next)
+    }
+
+    /// Encode one snapshot at the stream's current level, enforcing the
+    /// accuracy target per frame: a frame whose measured `err_bound`
+    /// exceeds `max_err` (or whose lossy encode fails outright) is
+    /// never shipped — the offending level is disqualified and the
+    /// frame re-encodes at the nearest safer admissible rung.  Level 0
+    /// is the unconditioned fallback: whatever the operator statically
+    /// configured as the base ships as-is.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode(
+        &self,
+        field: &str,
+        rank: u32,
+        step: u64,
+        seq: u64,
+        gen_micros: u64,
+        shape: &[u32],
+        data: &[f32],
+        metrics: &AdaptMetrics,
+    ) -> Result<Option<StreamRecord>> {
+        loop {
+            let lvl = self.level();
+            let tag = format!("lvl:{lvl}@{}", self.epoch());
+            let rec = match self.ladder.level(lvl).apply_tagged(
+                field,
+                rank,
+                step,
+                seq,
+                gen_micros,
+                shape,
+                data,
+                Some(&tag),
+            ) {
+                Ok(rec) => rec,
+                Err(e) if lvl > 0 => {
+                    // A lossy rung this data cannot encode (non-finite
+                    // after quantization, overflow, …) is as
+                    // disqualified as an inaccurate one.
+                    log::warn!(
+                        "adapt[{}]: level {lvl} encode failed ({e:#}); disqualifying",
+                        self.key
+                    );
+                    self.reject_level(lvl, metrics);
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            if let Some(r) = &rec {
+                if let Some(m) = &r.meta {
+                    let max_err = self.ladder.max_err;
+                    if lvl > 0 && max_err > 0.0 && m.err_bound > max_err {
+                        log::info!(
+                            "adapt[{}]: level {lvl} measured err {} over target {max_err}; disqualifying",
+                            self.key,
+                            m.err_bound
+                        );
+                        self.reject_level(lvl, metrics);
+                        continue;
+                    }
+                    self.note_err(m.err_bound);
+                }
+            }
+            return Ok(rec);
+        }
+    }
+
+    fn reject_level(&self, lvl: usize, metrics: &AdaptMetrics) {
+        metrics.err_rejections.inc();
+        self.mark_inadmissible(lvl);
+        // Move off the dead rung; on a lost race the encode loop
+        // re-reads whatever level the controller chose instead.
+        let mut next = lvl.saturating_sub(1);
+        while next > 0 && !self.admissible(next) {
+            next -= 1;
+        }
+        let _ = self.transition(lvl, next);
+    }
+}
+
+/// Shared directory of every stream's [`StreamAdapt`] — the broker
+/// registers contexts as they init; the controller sweeps it.
+#[derive(Clone, Default)]
+pub struct AdaptRegistry {
+    streams: Arc<RwLock<Vec<Arc<StreamAdapt>>>>,
+}
+
+impl AdaptRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&self, s: Arc<StreamAdapt>) {
+        self.streams.write().unwrap().push(s);
+    }
+
+    pub fn streams(&self) -> Vec<Arc<StreamAdapt>> {
+        self.streams.read().unwrap().clone()
+    }
+
+    /// Lookup by stream key (tests / diagnostics).
+    pub fn stream(&self, key: &str) -> Option<Arc<StreamAdapt>> {
+        self.streams
+            .read()
+            .unwrap()
+            .iter()
+            .find(|s| s.key == key)
+            .cloned()
+    }
+}
+
+/// Per-stream signals for one controller sweep.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamSignals {
+    /// Windowed flush p95 of the stream's endpoint (µs); `None` = no
+    /// flushes this window (stall or idle — *not* fast).
+    pub flush_p95_us: Option<u64>,
+    /// Peak writer-queue depth recorded against the endpoint.
+    pub queue_depth: u64,
+    /// This stream's own writer backlog (records).
+    pub backlog: u64,
+}
+
+/// One sweep's verdict for one stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Bandwidth pressure: walk one rung lossier now.
+    Down,
+    /// No pressure, but either a stalled window (never walk up blind)
+    /// or calm not yet sustained past the hysteresis.
+    Hold,
+    /// Calm sustained: walk one rung more faithful.
+    Up,
+}
+
+/// The pure per-stream policy (separated from the sampling thread so
+/// it unit-tests without clocks): pressure → [`Decision::Down`]
+/// immediately; recovery requires `hysteresis` consecutive calm sweeps
+/// *with flush evidence* — an empty window holds (ISSUE 8 bugfix).
+pub fn decide(sig: &StreamSignals, cfg: &AdaptConfig, calm_sweeps: u32) -> Decision {
+    let pressured = sig.flush_p95_us.is_some_and(|p| p > cfg.target_p95_us)
+        || sig.queue_depth >= cfg.queue_hi
+        || sig.backlog >= cfg.queue_hi;
+    if pressured {
+        return Decision::Down;
+    }
+    if sig.flush_p95_us.is_none() {
+        return Decision::Hold;
+    }
+    if calm_sweeps + 1 >= cfg.hysteresis {
+        Decision::Up
+    } else {
+        Decision::Hold
+    }
+}
+
+/// The sampling thread: shared QoS sweep → [`decide`] per stream →
+/// [`StreamAdapt`] transitions, every `cfg.sweep_ms`.  Runs alongside
+/// the [`super::Rebalancer`] (both observe the same sweep windows) and
+/// works with static topologies too — fidelity adaptation does not
+/// require elasticity.
+pub struct AdaptController {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl AdaptController {
+    pub fn start(
+        registry: AdaptRegistry,
+        topology: TopologyHandle,
+        metrics: WorkflowMetrics,
+        cfg: AdaptConfig,
+    ) -> AdaptController {
+        let interval = Duration::from_millis(cfg.sweep_ms.max(1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let t_stop = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("adapt-controller".into())
+            .spawn(move || {
+                while !t_stop.load(Ordering::SeqCst) {
+                    let sweep = metrics.qos.sweep(interval / 2);
+                    let topo = topology.snapshot();
+                    for s in registry.streams() {
+                        let qs = topo
+                            .assignment
+                            .get(s.group())
+                            .and_then(|&e| sweep.samples.get(e))
+                            .copied()
+                            .unwrap_or_default();
+                        let sig = StreamSignals {
+                            flush_p95_us: qs.flush_p95_us,
+                            queue_depth: qs.queue_depth,
+                            backlog: s.backlog() as u64,
+                        };
+                        let worst = s.take_worst_err();
+                        match decide(&sig, &cfg, s.calm.load(Ordering::Relaxed)) {
+                            Decision::Down => {
+                                s.calm.store(0, Ordering::Relaxed);
+                                if let Some(lvl) = s.step_down() {
+                                    metrics.adapt.steps_down.inc();
+                                    log::info!(
+                                        "adapt[{}]: pressure ({sig:?}) → level {lvl} (epoch {})",
+                                        s.key(),
+                                        s.epoch()
+                                    );
+                                } else {
+                                    metrics.adapt.holds.inc();
+                                }
+                            }
+                            Decision::Up => {
+                                s.calm.store(0, Ordering::Relaxed);
+                                if let Some(lvl) = s.step_up() {
+                                    metrics.adapt.steps_up.inc();
+                                    log::info!(
+                                        "adapt[{}]: calm → level {lvl} (epoch {}, worst err {worst})",
+                                        s.key(),
+                                        s.epoch()
+                                    );
+                                } else {
+                                    metrics.adapt.holds.inc();
+                                }
+                            }
+                            Decision::Hold => {
+                                // Calm only accumulates with flush
+                                // evidence; a stalled window freezes
+                                // the counter instead of resetting a
+                                // legitimately-idle stream's progress.
+                                if sig.flush_p95_us.is_some() {
+                                    s.calm.fetch_add(1, Ordering::Relaxed);
+                                }
+                                metrics.adapt.holds.inc();
+                            }
+                        }
+                        metrics.adapt.dwell(s.level()).inc();
+                    }
+                    // Sleep in small slices so stop() returns promptly.
+                    let mut left = interval;
+                    while !left.is_zero() && !t_stop.load(Ordering::SeqCst) {
+                        let nap = left.min(Duration::from_millis(20));
+                        std::thread::sleep(nap);
+                        left -= nap;
+                    }
+                }
+            })
+            .expect("spawn adapt-controller");
+        AdaptController { stop, thread: Some(thread) }
+    }
+
+    /// Stop the sweep loop and join the thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for AdaptController {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::QueuePolicy;
+    use crate::record::CodecKind;
+
+    fn test_stream(base: StagesConfig) -> Arc<StreamAdapt> {
+        let ladder =
+            Ladder::build(&base, Arc::new(StageMetrics::new())).unwrap();
+        let queue = Arc::new(BoundedQueue::new(8, QueuePolicy::Block));
+        StreamAdapt::new("u/0".into(), 0, ladder, queue)
+    }
+
+    #[test]
+    fn ladder_walks_f32_f16_qdelta_aggregate() {
+        let cfgs = ladder_configs(&StagesConfig::default());
+        assert_eq!(cfgs.len(), 6);
+        assert_eq!(cfgs[0], StagesConfig::default());
+        assert_eq!(cfgs[1].convert, Encoding::F16);
+        assert_eq!(cfgs[2].convert, Encoding::QDelta);
+        assert_eq!(cfgs[3].qdelta_step, cfgs[2].qdelta_step * 4.0);
+        assert_eq!(cfgs[4].aggregate, 2);
+        assert_eq!(cfgs[4].convert, Encoding::QDelta);
+        assert_eq!(cfgs[5].aggregate, 4);
+        // every rung is a valid config
+        for c in &cfgs {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn ladder_prunes_rungs_violating_the_accuracy_target() {
+        // max_err 1e-4: qdelta rungs at step 1e-3 (bound 5e-4) and
+        // 4e-3 are a-priori inadmissible; f16 and aggregation stay
+        // (data-dependent, policed at runtime).
+        let base = StagesConfig { max_err: 1e-4, ..Default::default() };
+        let cfgs = ladder_configs(&base);
+        assert!(cfgs.iter().all(|c| c.convert != Encoding::QDelta), "{cfgs:?}");
+        assert_eq!(cfgs[0], base);
+        assert_eq!(cfgs[1].convert, Encoding::F16);
+        assert!(cfgs.iter().any(|c| c.aggregate == 4));
+        // a lossy base keeps its own rung 0 even over the target
+        let lossy = StagesConfig {
+            convert: Encoding::QDelta,
+            qdelta_step: 1.0,
+            max_err: 1e-4,
+            ..Default::default()
+        };
+        assert_eq!(ladder_configs(&lossy)[0], lossy);
+    }
+
+    #[test]
+    fn decide_matrix() {
+        let cfg = AdaptConfig {
+            sweep_ms: 10,
+            target_p95_us: 1000,
+            queue_hi: 8,
+            hysteresis: 3,
+        };
+        let calm = StreamSignals {
+            flush_p95_us: Some(100),
+            queue_depth: 0,
+            backlog: 0,
+        };
+        // pressure on any signal → Down, regardless of calm credit
+        for sig in [
+            StreamSignals { flush_p95_us: Some(5000), ..calm },
+            StreamSignals { queue_depth: 8, ..calm },
+            StreamSignals { backlog: 9, ..calm },
+            StreamSignals { flush_p95_us: None, queue_depth: 20, backlog: 0 },
+        ] {
+            assert_eq!(decide(&sig, &cfg, 99), Decision::Down, "{sig:?}");
+        }
+        // stalled window without queue pressure: hold, never up
+        let stall = StreamSignals { flush_p95_us: None, queue_depth: 0, backlog: 0 };
+        assert_eq!(decide(&stall, &cfg, 99), Decision::Hold);
+        // calm under hysteresis holds; at hysteresis walks up
+        assert_eq!(decide(&calm, &cfg, 0), Decision::Hold);
+        assert_eq!(decide(&calm, &cfg, 1), Decision::Hold);
+        assert_eq!(decide(&calm, &cfg, 2), Decision::Up);
+    }
+
+    #[test]
+    fn steps_bump_epoch_and_skip_disqualified_rungs() {
+        let s = test_stream(StagesConfig::default());
+        assert_eq!((s.level(), s.epoch()), (0, 0));
+        assert_eq!(s.step_down(), Some(1));
+        assert_eq!(s.step_down(), Some(2));
+        assert_eq!(s.epoch(), 2);
+        s.mark_inadmissible(1);
+        assert_eq!(s.step_up(), Some(0), "skips the disqualified rung");
+        assert_eq!(s.epoch(), 3);
+        s.mark_inadmissible(1);
+        s.mark_inadmissible(2);
+        assert_eq!(s.step_down(), Some(3), "down also skips them");
+        // bottom of the ladder: no further down
+        while s.step_down().is_some() {}
+        assert_eq!(s.step_down(), None);
+    }
+
+    #[test]
+    fn encode_rejects_levels_over_the_accuracy_target() {
+        // Blocky data: block-mean aggregation error ≈ 1.0, far over the
+        // target; qdelta rungs are pruned a priori (step/2 = 5e-4 >
+        // 1e-4), so the ladder is [f32, f16, agg×2, agg×4] and both
+        // aggregate rungs must be rejected by the write path, never
+        // shipped.
+        let base = StagesConfig {
+            max_err: 1e-4,
+            codec: CodecKind::ShuffleLz,
+            ..Default::default()
+        };
+        let s = test_stream(base);
+        assert_eq!(s.ladder().len(), 4);
+        let metrics = AdaptMetrics::new();
+        let data: Vec<f32> =
+            (0..64).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        // force the stream to the lossiest rung, as the controller would
+        while s.step_down().is_some() {}
+        assert_eq!(s.level(), 3);
+        let rec = s
+            .encode("u", 0, 0, 0, 0, &[64], &data, &metrics)
+            .unwrap()
+            .unwrap();
+        let meta = rec.meta.as_ref().unwrap();
+        assert!(
+            meta.err_bound <= 1e-4,
+            "shipped frame err {} over target",
+            meta.err_bound
+        );
+        assert_eq!(metrics.err_rejections.get(), 2, "both agg rungs rejected");
+        assert!(!s.admissible(2) && !s.admissible(3));
+        assert!(s.level() < 2, "stream walked back to a safe rung");
+        // provenance carries the level/epoch tag of the rung that shipped
+        let prov = &meta.provenance;
+        assert!(prov.contains(&format!("lvl:{}@", s.level())), "{prov}");
+    }
+
+    #[test]
+    fn encode_tags_every_frame_even_at_level_zero() {
+        let s = test_stream(StagesConfig::default());
+        let metrics = AdaptMetrics::new();
+        let data = vec![1.0f32; 16];
+        let rec = s
+            .encode("u", 0, 5, 0, 0, &[16], &data, &metrics)
+            .unwrap()
+            .unwrap();
+        let meta = rec.meta.expect("adaptive frames are EBR2 even at level 0");
+        assert_eq!(meta.provenance, "lvl:0@0");
+        assert_eq!(meta.err_bound, 0.0);
+        let back = StreamRecord::decode(&rec.encode()).unwrap();
+        assert_eq!(back.payload_f32().unwrap(), data);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(AdaptConfig::default().validate().is_ok(), "off is ok");
+        assert!(AdaptConfig { sweep_ms: 10, ..Default::default() }
+            .validate()
+            .is_ok());
+        assert!(AdaptConfig { sweep_ms: 10, hysteresis: 0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(AdaptConfig { sweep_ms: 10, queue_hi: 0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(AdaptConfig { sweep_ms: 10, target_p95_us: 0, ..Default::default() }
+            .validate()
+            .is_err());
+    }
+}

@@ -52,6 +52,7 @@
 //!   moves groups off dead or saturated endpoints at runtime.  See
 //!   ROADMAP.md §"Elasticity model".
 
+pub mod adapt;
 pub mod filter;
 pub mod groups;
 mod queue;
@@ -60,6 +61,7 @@ pub mod shipper;
 pub mod stages;
 pub mod topology;
 
+pub use adapt::{AdaptConfig, AdaptController, AdaptRegistry, Ladder, StreamAdapt};
 pub use filter::{Filter, FilterStage};
 pub use groups::GroupMap;
 pub use queue::{BoundedQueue, QueuePolicy};
@@ -99,6 +101,12 @@ pub struct BrokerConfig {
     /// ISSUE 5); the default is a passthrough that ships classic raw
     /// `EBR1` frames.
     pub stages: StagesConfig,
+    /// Closed-loop adaptive reduction (ISSUE 8): when enabled
+    /// (`adapt.sweep_ms > 0`), each context walks a reduction ladder
+    /// built from `stages` under QoS pressure instead of using the
+    /// static config directly.  The [`AdaptController`] must be
+    /// started (e.g. by the workflow) for levels to actually move.
+    pub adapt: AdaptConfig,
     /// Max records coalesced into one pipelined `XADD` batch.
     pub batch_max_records: usize,
     /// Max payload bytes per batch (0 = unbounded; the first record of
@@ -120,6 +128,7 @@ impl BrokerConfig {
             conn: ConnConfig::default(),
             filter: Filter::passthrough(),
             stages: StagesConfig::default(),
+            adapt: AdaptConfig::default(),
             batch_max_records: 64,
             batch_max_bytes: 4 << 20, // 4 MiB
             linger_ms: 0,
@@ -142,6 +151,10 @@ pub struct Broker {
     metrics: WorkflowMetrics,
     /// Shared data-reduction pipeline every context writes through.
     stages: Arc<StagePipeline>,
+    /// Prebuilt reduction ladder + stream directory when adaptive
+    /// reduction is enabled (ISSUE 8).
+    ladder: Option<Arc<adapt::Ladder>>,
+    registry: AdaptRegistry,
 }
 
 impl Broker {
@@ -157,12 +170,15 @@ impl Broker {
             cfg.stages.clone(),
             metrics.stages.clone(),
         )?);
+        let ladder = Self::build_ladder(&cfg, &metrics)?;
         Ok(Broker {
             cfg,
             topology,
             dialer,
             metrics,
             stages,
+            ladder,
+            registry: AdaptRegistry::new(),
         })
     }
 
@@ -181,13 +197,30 @@ impl Broker {
             cfg.stages.clone(),
             metrics.stages.clone(),
         )?);
+        let ladder = Self::build_ladder(&cfg, &metrics)?;
         Ok(Broker {
             cfg,
             topology,
             dialer,
             metrics,
             stages,
+            ladder,
+            registry: AdaptRegistry::new(),
         })
+    }
+
+    fn build_ladder(
+        cfg: &BrokerConfig,
+        metrics: &WorkflowMetrics,
+    ) -> Result<Option<Arc<adapt::Ladder>>> {
+        if !cfg.adapt.enabled() {
+            return Ok(None);
+        }
+        cfg.adapt.validate()?;
+        Ok(Some(adapt::Ladder::build(
+            &cfg.stages,
+            metrics.stages.clone(),
+        )?))
     }
 
     /// The rank→group partition (a small copy; the assignment half of
@@ -199,6 +232,17 @@ impl Broker {
     /// The shared versioned topology this broker ships by.
     pub fn topology(&self) -> &TopologyHandle {
         &self.topology
+    }
+
+    /// The shared stream directory the [`AdaptController`] sweeps
+    /// (empty and inert unless `cfg.adapt` is enabled).
+    pub fn adapt_registry(&self) -> AdaptRegistry {
+        self.registry.clone()
+    }
+
+    /// Whether contexts from this broker take the adaptive write path.
+    pub fn adapt_enabled(&self) -> bool {
+        self.ladder.is_some()
     }
 
     /// `broker_init`: register `field` for `rank`, connect to the
@@ -222,17 +266,42 @@ impl Broker {
         // Per-context transforms prepend to the broker-wide stage
         // config; the pipeline shares the broker's StageMetrics so all
         // reduction accounting lands in one place.
-        let stages = if filter.is_passthrough() {
-            self.stages.clone()
+        let ctx_cfg = if filter.is_passthrough() {
+            None
         } else {
             let mut scfg = self.cfg.stages.clone();
             let mut transforms = filter.into_stages();
             transforms.extend(scfg.transforms);
             scfg.transforms = transforms;
-            Arc::new(StagePipeline::new(scfg, self.metrics.stages.clone())?)
+            Some(scfg)
+        };
+        let stages = match &ctx_cfg {
+            None => self.stages.clone(),
+            Some(scfg) => Arc::new(StagePipeline::new(
+                scfg.clone(),
+                self.metrics.stages.clone(),
+            )?),
         };
         let queue = Arc::new(BoundedQueue::new(self.cfg.queue_cap, self.cfg.policy));
         let key = crate::record::stream_key(field, rank);
+        // Adaptive path (ISSUE 8): contexts with their own transforms
+        // get their own ladder (transforms fold into every rung);
+        // plain contexts share the broker's.
+        let adapt_state = match &self.ladder {
+            None => None,
+            Some(ladder) => {
+                let ladder = match &ctx_cfg {
+                    None => ladder.clone(),
+                    Some(scfg) => {
+                        adapt::Ladder::build(scfg, self.metrics.stages.clone())?
+                    }
+                };
+                let state =
+                    StreamAdapt::new(key.clone(), group, ladder, queue.clone());
+                self.registry.register(state.clone());
+                Some(state)
+            }
+        };
         let batching = BatchTuning {
             max_records: self.cfg.batch_max_records.max(1),
             max_bytes: self.cfg.batch_max_bytes,
@@ -265,6 +334,7 @@ impl Broker {
             queue,
             writer: Some(writer),
             stages,
+            adapt: adapt_state,
             write_seq: AtomicU64::new(0),
             metrics: self.metrics.clone(),
         })
@@ -281,6 +351,10 @@ pub struct BrokerCtx {
     /// per-field transforms ([`Broker::init_filtered`]) hold their own
     /// pipeline sharing the broker's metrics (ISSUE 6).
     stages: Arc<StagePipeline>,
+    /// Adaptive-reduction state when the broker runs with
+    /// `adapt.sweep_ms > 0` (ISSUE 8): writes then encode at the
+    /// stream's current ladder level instead of through `stages`.
+    adapt: Option<Arc<StreamAdapt>>,
     /// Writes issued through this context — the sequence the decimation
     /// filter counts (independent of the simulation step numbering).
     write_seq: AtomicU64,
@@ -301,15 +375,30 @@ impl BrokerCtx {
     pub fn write(&self, step: u64, shape: &[u32], data: &[f32]) -> Result<()> {
         let t0 = Instant::now();
         let seq = self.write_seq.fetch_add(1, Ordering::Relaxed);
-        let record = match self.stages.apply(
-            &self.field,
-            self.rank,
-            step,
-            seq,
-            util::epoch_micros(),
-            shape,
-            data,
-        )? {
+        let staged = match &self.adapt {
+            // Adaptive path (ISSUE 8): encode at the stream's current
+            // ladder level, per-frame accuracy admission included.
+            Some(ad) => ad.encode(
+                &self.field,
+                self.rank,
+                step,
+                seq,
+                util::epoch_micros(),
+                shape,
+                data,
+                &self.metrics.adapt,
+            )?,
+            None => self.stages.apply(
+                &self.field,
+                self.rank,
+                step,
+                seq,
+                util::epoch_micros(),
+                shape,
+                data,
+            )?,
+        };
+        let record = match staged {
             Some(rec) => rec,
             None => {
                 self.metrics
@@ -857,7 +946,13 @@ mod tests {
             .read_after("u/0", crate::endpoint::EntryId::ZERO, 0);
         let rec = StreamRecord::decode(&entries[0].fields[0].1).unwrap();
         let meta = rec.meta.as_ref().expect("staged frame header");
-        assert_eq!(meta.err_bound, 0.0, "aggregate+lz is lossless end to end");
+        // ISSUE 8 bugfix: aggregation is lossy at element granularity
+        // even though the block means themselves ship bit-exactly —
+        // the header must carry the measured block-mean residual.
+        assert!(
+            meta.err_bound > 0.0,
+            "aggregate=2 on a varying field must report its residual"
+        );
         assert!(meta.stats.is_some());
         assert_eq!(rec.shape, vec![128]);
         let (oracle_shape, oracle) =

@@ -194,29 +194,36 @@ impl Rebalancer {
             .name("rebalancer".into())
             .spawn(move || {
                 let mut last_reconnects: Vec<u64> = Vec::new();
-                // Per-endpoint histogram snapshots: every QoS signal is
-                // windowed to the sweep (deltas / take), so a slow or
-                // flaky *spell* decays instead of branding an endpoint
-                // saturated for the rest of the run.
-                let mut flush_windows: Vec<Vec<u64>> = Vec::new();
                 while !t_stop.load(Ordering::SeqCst) {
                     let topo = topology.snapshot();
                     let n = topo.endpoints.len();
                     last_reconnects.resize(n, 0);
-                    flush_windows.resize_with(n, Vec::new);
+                    // Shared sweep-windowed drain (ISSUE 8 bugfix): the
+                    // board performs the destructive reads at most once
+                    // per window, so the adapt controller sampling
+                    // concurrently observes the *same* sweep instead of
+                    // the zeros a second `take()` used to read.  Every
+                    // QoS signal stays windowed to the sweep, so a slow
+                    // or flaky *spell* decays instead of branding an
+                    // endpoint saturated for the rest of the run.
+                    let sweep = metrics.qos.sweep(interval / 2);
                     let mut samples = Vec::with_capacity(n);
                     for e in 0..n {
-                        let slot = metrics.qos.slot(e);
-                        let total = slot.reconnects.get();
-                        let delta = total.saturating_sub(last_reconnects[e]);
-                        last_reconnects[e] = total;
+                        // Touch the slot so the board covers every
+                        // endpoint the topology knows about.
+                        let _ = metrics.qos.slot(e);
+                        let s = sweep.samples.get(e).copied().unwrap_or_default();
+                        let delta =
+                            s.reconnects_total.saturating_sub(last_reconnects[e]);
+                        last_reconnects[e] = s.reconnects_total;
                         samples.push(EndpointSample {
-                            flush_p95_us: slot
-                                .flush_us
-                                .windowed_quantile(&mut flush_windows[e], 0.95),
-                            queue_depth: slot.queue_depth.take(),
+                            // No flushes this window reads as quiet for
+                            // the *shed* decision (an idle endpoint is
+                            // not pressured).
+                            flush_p95_us: s.flush_p95_us.unwrap_or(0),
+                            queue_depth: s.queue_depth,
                             reconnect_delta: delta,
-                            durable: slot.durable.get() > 0,
+                            durable: s.durable,
                         });
                     }
                     let plan = evaluate(&topo, &samples, &thresholds);

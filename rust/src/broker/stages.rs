@@ -86,6 +86,11 @@ pub struct StagesConfig {
     pub qdelta_step: f32,
     /// Lossless payload codec.
     pub codec: CodecKind,
+    /// Per-stream accuracy target (max tolerated `err_bound`, absolute;
+    /// 0 = unconstrained).  The adapt controller (`broker::adapt`,
+    /// ISSUE 8) never walks a stream onto a ladder level whose measured
+    /// error bound exceeds this.
+    pub max_err: f32,
 }
 
 impl Default for StagesConfig {
@@ -100,6 +105,7 @@ impl Default for StagesConfig {
             convert: Encoding::F32,
             qdelta_step: 1e-3,
             codec: CodecKind::None,
+            max_err: 0.0,
         }
     }
 }
@@ -155,6 +161,10 @@ impl StagesConfig {
                 "stages.qdelta_step must be a positive finite number"
             );
         }
+        ensure!(
+            self.max_err >= 0.0 && self.max_err.is_finite(),
+            "stages.max_err must be a non-negative finite number"
+        );
         Ok(())
     }
 
@@ -248,7 +258,28 @@ impl StagePipeline {
         shape: &[u32],
         data: &[f32],
     ) -> Result<Option<StreamRecord>> {
-        if self.is_passthrough() {
+        self.apply_tagged(field, rank, step, seq, gen_micros, shape, data, None)
+    }
+
+    /// [`apply`](StagePipeline::apply) with an optional provenance tag
+    /// appended to the frame header — the adapt controller stamps each
+    /// frame with its ladder level + epoch (`lvl:N@E`) so readers, the
+    /// WAL and replay stay self-describing across mid-run level
+    /// changes.  A tagged frame is always a staged `EBR2` frame, even
+    /// for a passthrough config: the tag must survive the wire.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_tagged(
+        &self,
+        field: &str,
+        rank: u32,
+        step: u64,
+        seq: u64,
+        gen_micros: u64,
+        shape: &[u32],
+        data: &[f32],
+        tag: Option<&str>,
+    ) -> Result<Option<StreamRecord>> {
+        if self.is_passthrough() && tag.is_none() {
             return Ok(Some(StreamRecord::from_f32(
                 field, rank, step, gen_micros, shape, data,
             )?));
@@ -287,10 +318,18 @@ impl StagePipeline {
 
         // --- 2. aggregate ---------------------------------------------
         let t = Instant::now();
+        // Measured max-abs block-mean residual: what a consumer that
+        // expands the aggregated frame back to element granularity is
+        // actually off by.  Folded into `err_bound` below (ISSUE 8
+        // bugfix: it used to be silently excluded, so an
+        // `aggregate=4, convert=f32` frame shipped `err_bound=0.0`).
+        let mut agg_err = 0.0f32;
         if self.cfg.aggregate > 1 {
-            let (s, d) = block_mean_last_axis(&shape, &data, self.cfg.aggregate)?;
+            let (s, d, e) =
+                block_mean_last_axis_with_residual(&shape, &data, self.cfg.aggregate)?;
             shape = Cow::Owned(s);
             data = Cow::Owned(d);
+            agg_err = e;
         }
         let stats = if self.cfg.aggregate > 1 || self.cfg.stats {
             Some(field_stats(&data))
@@ -301,7 +340,7 @@ impl StagePipeline {
 
         // --- 3. convert -----------------------------------------------
         let t = Instant::now();
-        let (encoded, err_bound, enc_param) = match self.cfg.convert {
+        let (encoded, convert_err, enc_param) = match self.cfg.convert {
             Encoding::F32 => {
                 let mut b = Vec::with_capacity(data.len() * 4);
                 for v in data.iter() {
@@ -338,6 +377,23 @@ impl StagePipeline {
         self.metrics.compress_us.record(t.elapsed().as_micros() as u64);
         self.metrics.bytes_out.add(payload.len() as u64);
 
+        // Honest end-to-end bound vs the data that *entered* the
+        // aggregate stage (filter stages subset, they do not
+        // approximate): |decoded − original| ≤ agg residual + convert
+        // error, since the convert error is measured against the
+        // post-aggregate values (triangle inequality).
+        let err_bound = agg_err + convert_err;
+        let provenance = match tag {
+            None => self.cfg.provenance(applied_codec),
+            Some(tag) => {
+                let base = self.cfg.provenance(applied_codec);
+                if base.is_empty() {
+                    tag.to_string()
+                } else {
+                    format!("{base}|{tag}")
+                }
+            }
+        };
         let meta = FrameMeta {
             encoding: self.cfg.convert,
             codec: applied_codec,
@@ -345,7 +401,7 @@ impl StagePipeline {
             err_bound,
             raw_len,
             stats,
-            provenance: self.cfg.provenance(applied_codec),
+            provenance,
         };
         Ok(Some(StreamRecord::from_staged(
             field, rank, step, gen_micros, &shape, payload, meta,
@@ -385,6 +441,20 @@ pub fn block_mean_last_axis(
     data: &[f32],
     k: usize,
 ) -> Result<(Vec<u32>, Vec<f32>)> {
+    let (shape, data, _) = block_mean_last_axis_with_residual(shape, data, k)?;
+    Ok((shape, data))
+}
+
+/// [`block_mean_last_axis`], also returning the measured max-abs
+/// residual `max |v − mean(block of v)|` over every element — the true
+/// error a consumer reading the block mean in place of the original
+/// values pays.  Exact: the residual is measured against the f32 block
+/// mean the decoder will actually see, not the f64 accumulator.
+pub fn block_mean_last_axis_with_residual(
+    shape: &[u32],
+    data: &[f32],
+    k: usize,
+) -> Result<(Vec<u32>, Vec<f32>, f32)> {
     ensure!(k >= 1, "aggregate factor must be >= 1");
     let Some(&w) = shape.last() else {
         bail!("aggregate: record has no shape");
@@ -394,6 +464,7 @@ pub fn block_mean_last_axis(
     let out_w = w.div_ceil(k);
     let rows = data.len() / w;
     let mut out = Vec::with_capacity(rows * out_w);
+    let mut residual = 0.0f32;
     for r in 0..rows {
         let row = &data[r * w..(r + 1) * w];
         for b in 0..out_w {
@@ -403,12 +474,19 @@ pub fn block_mean_last_axis(
             for &v in &row[start..end] {
                 sum += v as f64;
             }
-            out.push((sum / (end - start) as f64) as f32);
+            let mean = (sum / (end - start) as f64) as f32;
+            for &v in &row[start..end] {
+                let e = (v - mean).abs();
+                if e > residual {
+                    residual = e;
+                }
+            }
+            out.push(mean);
         }
     }
     let mut new_shape = shape.to_vec();
     *new_shape.last_mut().unwrap() = out_w as u32;
-    Ok((new_shape, out))
+    Ok((new_shape, out, residual))
 }
 
 /// Min / max / mean of a field (the sidecar stats).
@@ -515,6 +593,83 @@ mod tests {
         assert_eq!(stats.min, 2.0);
         assert_eq!(stats.max, 7.0);
         assert!((stats.mean - 4.5).abs() < 1e-6);
+    }
+
+    /// ISSUE 8 bugfix regression: an aggregated frame is *lossy* at
+    /// element granularity even with `convert=f32`, and its header must
+    /// say so — `err_bound > 0`, and the actual per-element error of
+    /// the decoded (block-mean) values vs the original field stays
+    /// within the stated bound.
+    #[test]
+    fn aggregate_residual_is_folded_into_err_bound() {
+        for convert in [Encoding::F32, Encoding::F16, Encoding::QDelta] {
+            let p = pipeline(StagesConfig {
+                aggregate: 4,
+                convert,
+                qdelta_step: 1e-3,
+                ..Default::default()
+            });
+            let data = smooth(256);
+            let rec = p.apply("u", 0, 0, 0, 0, &[256], &data).unwrap().unwrap();
+            let bound = rec.meta.as_ref().unwrap().err_bound;
+            assert!(
+                bound > 0.0,
+                "{convert:?}: aggregate=4 frame shipped err_bound=0 (the bug)"
+            );
+            // decoded block means, expanded back to element granularity
+            let back = StreamRecord::decode(&rec.encode()).unwrap();
+            let means = back.payload_f32().unwrap();
+            for (i, &v) in data.iter().enumerate() {
+                let m = means[i / 4];
+                assert!(
+                    (v - m).abs() <= bound + 1e-6,
+                    "{convert:?}: element {i}: |{v} - {m}| over bound {bound}"
+                );
+            }
+        }
+    }
+
+    /// A constant field block-means losslessly: the measured residual —
+    /// and so the bound — must stay 0 instead of some worst-case guess.
+    #[test]
+    fn aggregate_of_constant_field_keeps_zero_bound() {
+        let p = pipeline(StagesConfig { aggregate: 4, ..Default::default() });
+        let data = vec![2.5f32; 64];
+        let rec = p.apply("u", 0, 0, 0, 0, &[64], &data).unwrap().unwrap();
+        assert_eq!(rec.meta.unwrap().err_bound, 0.0);
+    }
+
+    /// ISSUE 8: the adapt controller's level/epoch tag rides the frame
+    /// provenance — appended after the config provenance, and forcing a
+    /// staged `EBR2` frame even for passthrough configs so the tag
+    /// survives the wire, the WAL and replay.
+    #[test]
+    fn provenance_tag_is_appended_and_survives_decode() {
+        let p = pipeline(StagesConfig { convert: Encoding::F16, ..Default::default() });
+        let data = smooth(32);
+        let rec = p
+            .apply_tagged("u", 0, 0, 0, 0, &[32], &data, Some("lvl:1@3"))
+            .unwrap()
+            .unwrap();
+        let prov = StreamRecord::decode(&rec.encode())
+            .unwrap()
+            .meta
+            .unwrap()
+            .provenance;
+        assert_eq!(prov, "f16|lvl:1@3");
+
+        // passthrough + tag: still an EBR2 frame, provenance = tag alone
+        let p = StagePipeline::passthrough();
+        let rec = p
+            .apply_tagged("u", 0, 0, 0, 0, &[32], &data, Some("lvl:0@0"))
+            .unwrap()
+            .unwrap();
+        let back = StreamRecord::decode(&rec.encode()).unwrap();
+        assert_eq!(back.meta.unwrap().provenance, "lvl:0@0");
+        assert_eq!(back.payload_f32().unwrap(), data, "payload bit-exact");
+        // untagged passthrough keeps shipping classic EBR1
+        let rec = p.apply("u", 0, 0, 0, 0, &[32], &data).unwrap().unwrap();
+        assert!(rec.meta.is_none());
     }
 
     #[test]

@@ -169,6 +169,9 @@ pub fn apply_overrides(
     if let Some(v) = args.get("stage-codec") {
         cfg.stages.codec = crate::record::CodecKind::parse(v)?;
     }
+    if let Some(v) = args.get_parsed::<f32>("stage-max-err")? {
+        cfg.stages.max_err = v;
+    }
     if let Some(v) = args.get_parsed::<usize>("store-shards")? {
         cfg.store_shards = v;
     }
@@ -238,6 +241,18 @@ pub fn apply_overrides(
     if let Some(v) = args.get_parsed::<u64>("qos-reconnects")? {
         cfg.qos_reconnects = v;
     }
+    if let Some(v) = args.get_parsed::<u64>("adapt-sweep-ms")? {
+        cfg.adapt_sweep_ms = v;
+    }
+    if let Some(v) = args.get_parsed::<u64>("adapt-target-p95-us")? {
+        cfg.adapt_target_p95_us = v;
+    }
+    if let Some(v) = args.get_parsed::<u64>("adapt-queue-hi")? {
+        cfg.adapt_queue_hi = v;
+    }
+    if let Some(v) = args.get_parsed::<u32>("adapt-hysteresis")? {
+        cfg.adapt_hysteresis = v;
+    }
     Ok(())
 }
 
@@ -278,6 +293,8 @@ SUBCOMMANDS:
                 --stage-convert E    f32|f16|qdelta (default f32)
                 --stage-qdelta-step S  qdelta quantization step
                 --stage-codec C      none|shuffle-lz (default none)
+                --stage-max-err E    per-stream accuracy target: measured
+                                     frame err_bound stays <= E (0 = off)
   analysis    Run the Cloud-side streaming + DMD service
                 --endpoints A[,B..]  --ranks N  --field NAME
                 --trigger-ms MS --executors N --dmd-window M --dmd-rank R
@@ -306,6 +323,13 @@ SUBCOMMANDS:
                 --io-shards N --read-ring-bytes N --max-conns-per-shard N
                                      endpoint event-loop sizing
                                      ([endpoint] in TOML)
+                --adapt-sweep-ms MS  adaptive-reduction controller sweep
+                                     cadence (0 = static stages, default)
+                --adapt-target-p95-us N  flush-p95 latency budget (µs)
+                --adapt-queue-hi N   queue/backlog pressure threshold
+                --adapt-hysteresis N calm sweeps before stepping back up
+                                     ([adapt] in TOML; --stage-max-err
+                                     bounds the ladder's fidelity loss)
 
 ENVIRONMENT:
   ELASTICBROKER_ARTIFACTS  artifact dir (default ./artifacts)
@@ -437,6 +461,32 @@ mod tests {
         let bad = Args::parse(&argv(&["--stage-roi", "60"])).unwrap();
         let mut cfg = crate::config::WorkflowConfig::default();
         assert!(apply_overrides(&mut cfg, &bad).is_err());
+    }
+
+    #[test]
+    fn adapt_flags_apply() {
+        let mut cfg = crate::config::WorkflowConfig::default();
+        let a = Args::parse(&argv(&[
+            "--adapt-sweep-ms",
+            "100",
+            "--adapt-target-p95-us",
+            "20000",
+            "--adapt-queue-hi",
+            "8",
+            "--adapt-hysteresis",
+            "2",
+            "--stage-max-err",
+            "0.001",
+        ]))
+        .unwrap();
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert_eq!(cfg.adapt_sweep_ms, 100);
+        assert_eq!(cfg.adapt_target_p95_us, 20_000);
+        assert_eq!(cfg.adapt_queue_hi, 8);
+        assert_eq!(cfg.adapt_hysteresis, 2);
+        assert!((cfg.stages.max_err - 1e-3).abs() < 1e-9);
+        assert!(cfg.adapt().enabled());
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -172,6 +172,21 @@ pub struct WorkflowConfig {
     /// QoS threshold: reconnect attempts per sweep at/above which an
     /// endpoint is presumed dead and drained (0 = signal disabled).
     pub qos_reconnects: u64,
+
+    // --- adaptive reduction (ISSUE 8) ---
+    /// Adaptation controller sweep cadence in ms (0 = controller
+    /// disabled: every stream stays pinned to the configured `[stages]`
+    /// pipeline, the pre-adaptive behaviour).
+    pub adapt_sweep_ms: u64,
+    /// Per-endpoint flush p95 (µs) the controller tries to stay under;
+    /// a sweep above this walks streams down the reduction ladder.
+    pub adapt_target_p95_us: u64,
+    /// Writer-queue depth (peak per sweep) or per-stream backlog at/
+    /// above which a stream is considered under WAN pressure.
+    pub adapt_queue_hi: u64,
+    /// Consecutive calm sweeps required before the controller walks a
+    /// stream back up one rung (step-up hysteresis).
+    pub adapt_hysteresis: u32,
 }
 
 impl Default for WorkflowConfig {
@@ -217,6 +232,10 @@ impl Default for WorkflowConfig {
             qos_flush_p95_us: 250_000,
             qos_queue_depth: 48,
             qos_reconnects: 3,
+            adapt_sweep_ms: 0,
+            adapt_target_p95_us: 50_000,
+            adapt_queue_hi: 16,
+            adapt_hysteresis: 3,
         }
     }
 }
@@ -325,6 +344,9 @@ impl WorkflowConfig {
         if let Some(v) = map.get_str("stages.codec")? {
             cfg.stages.codec = CodecKind::parse(&v)?;
         }
+        if let Some(v) = map.get_f64("stages.max_err")? {
+            cfg.stages.max_err = v as f32;
+        }
         if let Some(v) = map.get_usize("cloud.endpoints")? {
             cfg.endpoints = Some(v);
         }
@@ -397,6 +419,18 @@ impl WorkflowConfig {
         if let Some(v) = map.get_u64("elastic.qos_reconnects")? {
             cfg.qos_reconnects = v;
         }
+        if let Some(v) = map.get_u64("adapt.sweep_ms")? {
+            cfg.adapt_sweep_ms = v;
+        }
+        if let Some(v) = map.get_u64("adapt.target_p95_us")? {
+            cfg.adapt_target_p95_us = v;
+        }
+        if let Some(v) = map.get_u64("adapt.queue_hi")? {
+            cfg.adapt_queue_hi = v;
+        }
+        if let Some(v) = map.get_u64("adapt.hysteresis")? {
+            cfg.adapt_hysteresis = v as u32;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -434,8 +468,19 @@ impl WorkflowConfig {
             "endpoint.max_conns_per_shard must be > 0"
         );
         self.stages.validate()?;
+        self.adapt().validate()?;
         self.rows_per_rank()?;
         Ok(())
+    }
+
+    /// The broker-side adaptation knobs as a typed [`AdaptConfig`].
+    pub fn adapt(&self) -> crate::broker::AdaptConfig {
+        crate::broker::AdaptConfig {
+            sweep_ms: self.adapt_sweep_ms,
+            target_p95_us: self.adapt_target_p95_us,
+            queue_hi: self.adapt_queue_hi,
+            hysteresis: self.adapt_hysteresis,
+        }
     }
 }
 
@@ -568,6 +613,38 @@ mod tests {
         assert_eq!(c.qos_flush_p95_us, 50_000);
         assert_eq!(c.qos_queue_depth, 16);
         assert_eq!(c.qos_reconnects, 5);
+    }
+
+    #[test]
+    fn adapt_knobs_parse_with_defaults() {
+        let c = WorkflowConfig::default();
+        assert_eq!(c.adapt_sweep_ms, 0, "adaptation off by default");
+        assert_eq!(c.adapt_target_p95_us, 50_000);
+        assert_eq!(c.adapt_queue_hi, 16);
+        assert_eq!(c.adapt_hysteresis, 3);
+        assert!(!c.adapt().enabled());
+        let c = WorkflowConfig::from_toml(
+            "[adapt]\nsweep_ms = 100\ntarget_p95_us = 20000\n\
+             queue_hi = 8\nhysteresis = 2\n\n[stages]\nmax_err = 0.001\n",
+        )
+        .unwrap();
+        assert_eq!(c.adapt_sweep_ms, 100);
+        assert_eq!(c.adapt_target_p95_us, 20_000);
+        assert_eq!(c.adapt_queue_hi, 8);
+        assert_eq!(c.adapt_hysteresis, 2);
+        assert!(c.adapt().enabled());
+        assert!((c.stages.max_err - 1e-3).abs() < 1e-9);
+        // an enabled controller needs a latency target and hysteresis
+        assert!(WorkflowConfig::from_toml(
+            "[adapt]\nsweep_ms = 100\ntarget_p95_us = 0\n"
+        )
+        .is_err());
+        assert!(WorkflowConfig::from_toml(
+            "[adapt]\nsweep_ms = 100\nhysteresis = 0\n"
+        )
+        .is_err());
+        // a negative accuracy floor is rejected via stage validation
+        assert!(WorkflowConfig::from_toml("[stages]\nmax_err = -0.5\n").is_err());
     }
 
     #[test]

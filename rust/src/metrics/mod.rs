@@ -5,7 +5,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Monotonic event counter.
 #[derive(Default, Debug)]
@@ -150,7 +150,14 @@ impl Histogram {
     /// captured — the windowed view control loops need (a lifetime
     /// quantile never decays, so a brief slow spell would otherwise
     /// look like permanent saturation).  Updates `prev` to the current
-    /// bucket counts; returns 0 when no new samples arrived.
+    /// bucket counts.
+    ///
+    /// Returns `None` when no new samples arrived in the window.  An
+    /// empty window is a *stall*, not "fast" (ISSUE 8 bugfix: the old
+    /// `0` return was indistinguishable from a healthy sub-µs flush, so
+    /// a controller watching it would happily walk fidelity back up
+    /// while the link was wedged).  Callers decide what silence means:
+    /// the rebalancer treats it as quiet, the adapt controller holds.
     ///
     /// The result is clamped to the max sample seen in the window
     /// (mirroring how the lifetime [`quantile`] clamps with
@@ -160,7 +167,7 @@ impl Histogram {
     /// flush.
     ///
     /// [`quantile`]: Histogram::quantile
-    pub fn windowed_quantile(&self, prev: &mut Vec<u64>, q: f64) -> u64 {
+    pub fn windowed_quantile(&self, prev: &mut Vec<u64>, q: f64) -> Option<u64> {
         let n = self.buckets.len();
         if prev.len() != n {
             prev.clear();
@@ -175,7 +182,7 @@ impl Histogram {
             prev[i] = cur;
         }
         if total == 0 {
-            return 0;
+            return None;
         }
         // Drain the windowed max; a racing `record` may have bumped the
         // bucket but not yet the max, so 0 means "no clamp available".
@@ -186,10 +193,10 @@ impl Histogram {
         for (i, d) in deltas.iter().enumerate() {
             seen += d;
             if seen >= target {
-                return Self::value(i).min(cap);
+                return Some(Self::value(i).min(cap));
             }
         }
-        Self::value(n - 1).min(cap)
+        Some(Self::value(n - 1).min(cap))
     }
 
     /// Compact single-line summary for bench tables.
@@ -271,12 +278,56 @@ impl EndpointStats {
     }
 }
 
+/// One endpoint's QoS over one sweep window — the shared snapshot every
+/// sampler (rebalancer, adapt controller) reads.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QosSample {
+    /// Windowed flush p95 (µs); `None` when no flushes landed in the
+    /// window — a stall, not "fast" (see
+    /// [`Histogram::windowed_quantile`]).
+    pub flush_p95_us: Option<u64>,
+    /// Peak writer-queue depth observed during the window.
+    pub queue_depth: u64,
+    /// *Cumulative* reconnect count — consumers that want a per-sweep
+    /// delta keep their own last-seen value (deltas are consumer-local
+    /// because consumers sweep at different cadences).
+    pub reconnects_total: u64,
+    /// Endpoint persists to a WAL.
+    pub durable: bool,
+}
+
+/// A whole board's worth of [`QosSample`]s from one destructive drain.
+#[derive(Clone, Debug, Default)]
+pub struct QosSweep {
+    /// Monotone drain sequence number — two readers holding sweeps with
+    /// the same `seq` observed the *same* window.
+    pub seq: u64,
+    pub samples: Vec<QosSample>,
+}
+
+/// Board-owned state behind the shared sweep: the per-endpoint
+/// windowed-quantile cursors and the cached last snapshot.
+#[derive(Default)]
+struct SweepState {
+    seq: u64,
+    last_drain: Option<Instant>,
+    flush_windows: Vec<Vec<u64>>,
+    cached: QosSweep,
+}
+
 /// Growable slot board of per-endpoint stats, indexed by topology
 /// endpoint slot.  Slots are created on first touch and never removed
 /// (endpoint indices are stable for a topology's lifetime).
+///
+/// QoS *sampling* goes through [`QosBoard::sweep`], never through raw
+/// `Gauge::take` / `windowed_quantile` on the slots (ISSUE 8 bugfix:
+/// those drains are destructively single-reader — with the rebalancer
+/// and the adapt controller both sampling, whoever drained second read
+/// zeros and never saw pressure).
 #[derive(Default)]
 pub struct QosBoard {
     slots: std::sync::RwLock<Vec<Arc<EndpointStats>>>,
+    sweep: std::sync::Mutex<SweepState>,
 }
 
 impl QosBoard {
@@ -306,6 +357,45 @@ impl QosBoard {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Sweep-windowed, shareable QoS snapshot.
+    ///
+    /// The destructive per-slot drains (peak-gauge take, windowed flush
+    /// quantile) run at most once per `min_interval`; callers arriving
+    /// inside that window get the cached snapshot of the *same* sweep.
+    /// This is what lets the rebalancer and the adapt controller sample
+    /// concurrently and agree on what they saw.  Pass
+    /// `Duration::ZERO` to force a fresh drain (single-sampler tests).
+    pub fn sweep(&self, min_interval: Duration) -> QosSweep {
+        let slots: Vec<Arc<EndpointStats>> =
+            self.slots.read().unwrap().clone();
+        let mut st = self.sweep.lock().unwrap();
+        let fresh = match st.last_drain {
+            None => true,
+            Some(t) => t.elapsed() >= min_interval,
+        };
+        if fresh || st.cached.samples.len() < slots.len() {
+            st.seq += 1;
+            st.last_drain = Some(Instant::now());
+            if st.flush_windows.len() < slots.len() {
+                st.flush_windows.resize_with(slots.len(), Vec::new);
+            }
+            let seq = st.seq;
+            let mut samples = Vec::with_capacity(slots.len());
+            for (i, slot) in slots.iter().enumerate() {
+                let p95 =
+                    slot.flush_us.windowed_quantile(&mut st.flush_windows[i], 0.95);
+                samples.push(QosSample {
+                    flush_p95_us: p95,
+                    queue_depth: slot.queue_depth.take(),
+                    reconnects_total: slot.reconnects.get(),
+                    durable: slot.durable.get() != 0,
+                });
+            }
+            st.cached = QosSweep { seq, samples };
+        }
+        st.cached.clone()
     }
 }
 
@@ -352,6 +442,56 @@ impl StageMetrics {
             return 1.0;
         }
         self.bytes_in.get() as f64 / out as f64
+    }
+}
+
+/// Decision accounting for the closed-loop reduction controller
+/// (`crate::broker::adapt`, ISSUE 8).  One bundle per workflow; the
+/// per-level dwell board is indexed by ladder level and grows on first
+/// touch like [`QosBoard`].
+#[derive(Default)]
+pub struct AdaptMetrics {
+    /// Controller sweeps that walked a stream *down* the ladder
+    /// (lossier) under bandwidth pressure.
+    pub steps_down: Counter,
+    /// Controller sweeps that walked a stream back *up* (more faithful)
+    /// after sustained calm.
+    pub steps_up: Counter,
+    /// Sweeps that held the current level (calm-but-under-hysteresis,
+    /// stalled window, or nowhere left to go).
+    pub holds: Counter,
+    /// Frames whose measured error bound exceeded the stream's accuracy
+    /// target — each one permanently disqualified a ladder level and
+    /// was re-encoded at a safer one (the write-path admission check).
+    pub err_rejections: Counter,
+    /// Controller sweeps spent at each ladder level, across streams —
+    /// the dwell distribution (`dwell[0]` high = mostly faithful).
+    dwell: std::sync::RwLock<Vec<Arc<Counter>>>,
+}
+
+impl AdaptMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Dwell counter for ladder `level`, growing the board as needed.
+    pub fn dwell(&self, level: usize) -> Arc<Counter> {
+        {
+            let d = self.dwell.read().unwrap();
+            if let Some(c) = d.get(level) {
+                return c.clone();
+            }
+        }
+        let mut d = self.dwell.write().unwrap();
+        while d.len() <= level {
+            d.push(Arc::new(Counter::new()));
+        }
+        d[level].clone()
+    }
+
+    /// Dwell counts per level touched so far.
+    pub fn dwell_counts(&self) -> Vec<u64> {
+        self.dwell.read().unwrap().iter().map(|c| c.get()).collect()
     }
 }
 
@@ -435,8 +575,12 @@ pub struct WorkflowMetrics {
     /// full O(d·m²) Gram recomputes (window fill, refresh cadence, or
     /// non-finite fallback).
     pub gram_full: Arc<Counter>,
-    /// Per-endpoint QoS board the rebalancer samples.
+    /// Per-endpoint QoS board the rebalancer and adapt controller
+    /// sample (via [`QosBoard::sweep`]).
     pub qos: Arc<QosBoard>,
+    /// Closed-loop reduction controller decisions + per-level dwell
+    /// (ISSUE 8).
+    pub adapt: Arc<AdaptMetrics>,
     /// Stream migrations completed by broker writers (epoch-fenced
     /// endpoint switches, including rebalancer-driven ones).
     pub migrations: Arc<Counter>,
@@ -482,6 +626,7 @@ impl WorkflowMetrics {
             gram_incremental: Arc::new(Counter::new()),
             gram_full: Arc::new(Counter::new()),
             qos: Arc::new(QosBoard::new()),
+            adapt: Arc::new(AdaptMetrics::new()),
             migrations: Arc::new(Counter::new()),
             stale_rejections: Arc::new(Counter::new()),
             handoffs: Arc::new(Counter::new()),
@@ -584,16 +729,36 @@ mod tests {
         for _ in 0..100 {
             h.record(1_000_000);
         }
-        assert!(h.windowed_quantile(&mut win, 0.95) >= 500_000);
-        // no new samples → quiet, even though lifetime p95 stays high
-        assert_eq!(h.windowed_quantile(&mut win, 0.95), 0);
+        assert!(h.windowed_quantile(&mut win, 0.95).unwrap() >= 500_000);
+        // no new samples → None, even though lifetime p95 stays high
+        assert_eq!(h.windowed_quantile(&mut win, 0.95), None);
         assert!(h.quantile(0.95) >= 500_000, "lifetime view unchanged");
         // fast spell: the window reflects it immediately
         for _ in 0..100 {
             h.record(100);
         }
-        let w = h.windowed_quantile(&mut win, 0.95);
-        assert!(w > 0 && w < 10_000, "windowed p95 {w} should be fast");
+        let w = h.windowed_quantile(&mut win, 0.95).unwrap();
+        assert!(w < 10_000, "windowed p95 {w} should be fast");
+    }
+
+    /// ISSUE 8 bugfix: an empty window (no flushes this sweep — a
+    /// stall) must be distinguishable from a fast one.  The old `0`
+    /// return read as "sub-µs flush latency" and would walk the adapt
+    /// controller's fidelity back up mid-stall.
+    #[test]
+    fn windowed_quantile_empty_window_is_none_not_fast() {
+        let h = Histogram::new();
+        let mut win = Vec::new();
+        // never-recorded histogram: None, not 0
+        assert_eq!(h.windowed_quantile(&mut win, 0.95), None);
+        h.record(500);
+        assert_eq!(h.windowed_quantile(&mut win, 0.95), Some(500));
+        // stall: two consecutive empty windows both report None
+        assert_eq!(h.windowed_quantile(&mut win, 0.95), None);
+        assert_eq!(h.windowed_quantile(&mut win, 0.95), None);
+        // recovery is visible again
+        h.record(700);
+        assert_eq!(h.windowed_quantile(&mut win, 0.95), Some(700));
     }
 
     /// ISSUE 6 bugfix: a windowed quantile must never exceed the max
@@ -606,14 +771,14 @@ mod tests {
         let h = Histogram::new();
         let mut win = Vec::new();
         h.record(249_000);
-        assert_eq!(h.windowed_quantile(&mut win, 0.95), 249_000);
+        assert_eq!(h.windowed_quantile(&mut win, 0.95), Some(249_000));
         // top-bucket sample: no overflow, no astronomical edge value
         h.record(u64::MAX);
-        assert_eq!(h.windowed_quantile(&mut win, 0.95), u64::MAX);
+        assert_eq!(h.windowed_quantile(&mut win, 0.95), Some(u64::MAX));
         // windowed max resets between drains: a later fast window is
         // not clamped against (or inflated by) the old spike
         h.record(100);
-        assert_eq!(h.windowed_quantile(&mut win, 0.95), 100);
+        assert_eq!(h.windowed_quantile(&mut win, 0.95), Some(100));
     }
 
     /// The shed decision itself: one borderline-but-under-threshold
@@ -636,7 +801,7 @@ mod tests {
         h.record(249_000); // under threshold — endpoint is healthy
         let samples = vec![
             EndpointSample {
-                flush_p95_us: h.windowed_quantile(&mut win, 0.95),
+                flush_p95_us: h.windowed_quantile(&mut win, 0.95).unwrap_or(0),
                 ..Default::default()
             },
             EndpointSample::default(),
@@ -659,6 +824,55 @@ mod tests {
         assert_eq!(g.get(), 0);
         g.set(4);
         assert_eq!(g.get(), 4);
+    }
+
+    /// ISSUE 8 bugfix: two concurrent samplers (rebalancer + adapt
+    /// controller) must observe the *same* sweep.  Before the shared
+    /// sweep, whoever called `queue_depth.take()` second read 0 and
+    /// never saw pressure.
+    #[test]
+    fn qos_sweep_is_shared_across_concurrent_samplers() {
+        let b = QosBoard::new();
+        let slot = b.slot(0);
+        slot.queue_depth.set_max(42);
+        slot.flush_us.record(300_000);
+        slot.reconnects.inc();
+        slot.durable.set(1);
+
+        // two samplers inside the same min_interval: same sweep
+        let a = b.sweep(Duration::from_secs(3600));
+        let c = b.sweep(Duration::from_secs(3600));
+        assert_eq!(a.seq, c.seq, "second sampler must join the sweep");
+        for s in [&a, &c] {
+            assert_eq!(s.samples[0].queue_depth, 42, "peak visible to both");
+            assert_eq!(s.samples[0].flush_p95_us, Some(300_000));
+            assert_eq!(s.samples[0].reconnects_total, 1);
+            assert!(s.samples[0].durable);
+        }
+
+        // a forced fresh drain starts a new window: peak cleared,
+        // no flushes → None (not "fast"), reconnects stay cumulative
+        let d = b.sweep(Duration::ZERO);
+        assert!(d.seq > a.seq);
+        assert_eq!(d.samples[0].queue_depth, 0);
+        assert_eq!(d.samples[0].flush_p95_us, None);
+        assert_eq!(d.samples[0].reconnects_total, 1);
+
+        // slots added after a sweep show up on the next one even
+        // within min_interval (scale-out must not be invisible)
+        b.slot(2).queue_depth.set_max(7);
+        let e = b.sweep(Duration::from_secs(3600));
+        assert_eq!(e.samples.len(), 3);
+        assert_eq!(e.samples[2].queue_depth, 7);
+    }
+
+    #[test]
+    fn adapt_dwell_board_grows_and_counts() {
+        let m = AdaptMetrics::new();
+        m.dwell(2).inc();
+        m.dwell(0).inc();
+        m.dwell(2).inc();
+        assert_eq!(m.dwell_counts(), vec![1, 0, 2]);
     }
 
     #[test]

@@ -19,7 +19,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::analysis::{AnalysisResult, CsvSink, DmdConfig, DmdEngine};
-use crate::broker::{Broker, BrokerConfig, QosThresholds, Rebalancer, TopologyHandle};
+use crate::broker::{
+    AdaptController, Broker, BrokerConfig, QosThresholds, Rebalancer, TopologyHandle,
+};
 use crate::config::{IoMode, WorkflowConfig};
 use crate::endpoint::{EndpointServer, ServerConfig, StoreConfig};
 use crate::metrics::WorkflowMetrics;
@@ -320,6 +322,7 @@ pub fn run_cfd_workflow(
         batch_max_bytes: cfg.batch_max_bytes,
         linger_ms: cfg.linger_ms,
         stages: cfg.stages.clone(),
+        adapt: cfg.adapt(),
         ..BrokerConfig::new(cloud.endpoint_addrs())
     };
     // Elastic runs share the Cloud side's versioned topology with the
@@ -355,11 +358,27 @@ pub fn run_cfd_workflow(
             None,
         ),
     };
+    // ISSUE 8: fidelity adaptation runs with *any* topology — static
+    // runs adapt too; elasticity is orthogonal.  The controller sweeps
+    // the same QoS windows as the rebalancer (shared, non-destructive).
+    let adapt_controller = if broker.adapt_enabled() {
+        Some(AdaptController::start(
+            broker.adapt_registry(),
+            broker.topology().clone(),
+            metrics.clone(),
+            cfg.adapt(),
+        ))
+    } else {
+        None
+    };
 
     let t0 = Instant::now();
     let start_us = crate::util::epoch_micros();
     let rep = SimRunner::run(&sim_cfg, Some(broker), artifacts)?;
     let sim_elapsed = rep.elapsed;
+    if let Some(ac) = adapt_controller {
+        ac.stop(); // freeze fidelity while the tail drains
+    }
     if let Some(reb) = rebalancer {
         reb.stop(); // no topology churn while the tail drains
     }
@@ -687,6 +706,35 @@ mod tests {
                 assert!((a - b).abs() <= 1e-9);
             }
             assert_eq!(orig.backend, s.backend);
+        }
+    }
+
+    /// ISSUE 8: with the adaptation controller on but the QoS calm
+    /// (loopback, generous budgets), every stream stays pinned at
+    /// level 0 and the run reproduces the static coverage exactly —
+    /// the adaptive write path must be a no-op when nothing hurts.
+    #[test]
+    fn adaptive_workflow_stays_at_level_zero_when_calm() {
+        let mut cfg = tiny_cfg(IoMode::Broker);
+        cfg.adapt_sweep_ms = 25;
+        cfg.adapt_target_p95_us = 60_000_000; // loopback never crosses
+        cfg.adapt_queue_hi = 1 << 32;
+        let rep = run_cfd_workflow(&cfg, None).unwrap();
+        assert_eq!(rep.analysis_results.len(), 8 * 4);
+        assert_eq!(rep.metrics.dropped.get(), 0);
+        assert_eq!(
+            rep.metrics.adapt.steps_down.get(),
+            0,
+            "calm QoS must not degrade fidelity"
+        );
+        assert_eq!(rep.metrics.adapt.steps_up.get(), 0, "nowhere up from level 0");
+        for r in 0..4u32 {
+            let per = rep
+                .analysis_results
+                .iter()
+                .filter(|a| a.rank == r)
+                .count();
+            assert_eq!(per, 8, "rank {r}");
         }
     }
 

@@ -188,9 +188,10 @@ fn assert_streamed_matches_offline(
     }
 }
 
-/// Lossless stages: aggregate-by-2 + shuffle-lz.  Streamed DMD ≡
-/// offline oracle, decoded payloads ≡ block-mean of the source
-/// bit-exactly, wire bytes shrink.
+/// Losslessly-*coded* stages: aggregate-by-2 + shuffle-lz.  Streamed
+/// DMD ≡ offline oracle, decoded payloads ≡ block-mean of the source
+/// bit-exactly, wire bytes shrink — and (ISSUE 8) the frame owns up to
+/// the block-mean residual in `err_bound` instead of claiming 0.
 #[test]
 fn staged_lossless_dmd_matches_offline_oracle() {
     let cfg = StagesConfig {
@@ -210,15 +211,31 @@ fn staged_lossless_dmd_matches_offline_oracle() {
         for e in &entries {
             let rec = StreamRecord::decode(&e.fields[0].1).unwrap();
             let meta = rec.meta.as_ref().expect("staged frame");
-            assert_eq!(meta.err_bound, 0.0, "lossless path must report 0 bound");
+            // Aggregation of a varying field is lossy vs the original:
+            // the bound must cover the measured block-mean residual
+            // (the pre-ISSUE-8 pipeline shipped err_bound = 0 here).
+            assert!(
+                meta.err_bound > 0.0,
+                "aggregate=2 on a varying field must report its residual"
+            );
             assert!(meta.stats.is_some(), "aggregate carries sidecar stats");
+            let original = snapshot(rank, rec.step);
             let (_, oracle) =
-                stages::block_mean_last_axis(&[DIM as u32], &snapshot(rank, rec.step), 2)
-                    .unwrap();
+                stages::block_mean_last_axis(&[DIM as u32], &original, 2).unwrap();
             let got = rec.payload_f32().unwrap();
             assert_eq!(got.len(), oracle.len());
             for (a, b) in got.iter().zip(&oracle) {
                 assert_eq!(a.to_bits(), b.to_bits(), "{key} step {}", rec.step);
+            }
+            // ...and the bound really covers |original − shipped mean|
+            for (i, b) in original.iter().enumerate() {
+                let a = got[i / 2];
+                assert!(
+                    (a - b).abs() <= meta.err_bound + 1e-6,
+                    "{key} step {}: {b} → {a} over bound {}",
+                    rec.step,
+                    meta.err_bound
+                );
             }
         }
     }
