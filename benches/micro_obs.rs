@@ -1,0 +1,143 @@
+//! Microbenchmark: flight-recorder overhead (ISSUE 9).
+//!
+//! The observability invariant is that tracing is *sampled*: the
+//! unsampled hot path pays one counter compare and nothing else.  This
+//! bench enforces that as a gate rather than trusting the code review:
+//!
+//! * **broker-path overhead**: records/s through a real broker →
+//!   endpoint pipeline with tracing disabled (the baseline), at the
+//!   default 1-in-64 sampling, and at the pathological 1-in-1.  The
+//!   disabled baseline is measured twice so the run calibrates its own
+//!   noise floor, and the gate requires the 1-in-64 overhead to stay
+//!   under 2% plus that measured noise.
+//! * **exposition cost**: µs to render the full workflow registry as
+//!   Prometheus text and as one JSONL snapshot line (the scrape /
+//!   snapshot-writer cost, off the hot path by construction),
+//! * **event journal cost**: ns per `emit` into the bounded ring.
+//!
+//! `cargo bench --bench micro_obs`
+//!
+//! Emits `BENCH_obs.json` so CI tracks the trajectory.  Set
+//! `BENCH_SMOKE=1` for tiny iteration counts (the gate still runs —
+//! the noise term grows to match).
+
+use std::time::Instant;
+
+use elasticbroker::broker::{Broker, BrokerConfig};
+use elasticbroker::endpoint::{EndpointServer, StoreConfig};
+use elasticbroker::metrics::{EventJournal, WorkflowMetrics};
+
+/// One full broker → TCP endpoint run; returns records/s and the
+/// metrics handle for sanity checks.
+fn broker_run(
+    dim: usize,
+    n: u64,
+    trace_sample: u64,
+) -> anyhow::Result<(f64, WorkflowMetrics)> {
+    let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default())?;
+    let metrics = WorkflowMetrics::new();
+    let broker = Broker::new(
+        BrokerConfig {
+            group_size: 1,
+            queue_cap: 64,
+            trace_sample,
+            ..BrokerConfig::new(vec![srv.addr()])
+        },
+        1,
+        metrics.clone(),
+    )?;
+    let ctx = broker.init("u", 0)?;
+    let data = vec![0.5f32; dim];
+    let t0 = Instant::now();
+    for step in 0..n {
+        ctx.write(step, &[dim as u32], &data)?;
+    }
+    ctx.finalize()?;
+    Ok((n as f64 / t0.elapsed().as_secs_f64(), metrics))
+}
+
+fn main() -> anyhow::Result<()> {
+    elasticbroker::util::logger::init();
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let dim = 4096usize; // 16 KiB records
+    let n: u64 = if smoke { 200 } else { 2000 };
+    let rounds = if smoke { 3 } else { 5 };
+
+    // --- broker-path overhead -----------------------------------------
+    // Interleaved rounds, best-of (min wall time == max rps) per
+    // config, so scheduler noise hits every config equally.
+    println!("# broker write path, {dim}x f32 records, n={n}, {rounds} rounds");
+    let mut best = [0f64; 4]; // base_a, base_b, 1-in-64, 1-in-1
+    let mut sampled64 = 0u64;
+    for _ in 0..rounds {
+        for (i, ts) in [0u64, 0, 64, 1].iter().enumerate() {
+            let (rps, m) = broker_run(dim, n, *ts)?;
+            if rps > best[i] {
+                best[i] = rps;
+            }
+            if *ts == 64 {
+                sampled64 = m.trace.sampled.get();
+            }
+        }
+    }
+    let [base_a, base_b, s64, s1] = best;
+    anyhow::ensure!(
+        sampled64 >= n / 64,
+        "1-in-64 sampling stamped {sampled64} of {n} writes"
+    );
+    // Noise floor: the disabled config measured against itself.
+    let noise_pct = 100.0 * (base_a - base_b).abs() / base_a.max(base_b);
+    let baseline = base_a.max(base_b);
+    let overhead64_pct = 100.0 * (baseline - s64) / baseline;
+    let overhead1_pct = 100.0 * (baseline - s1) / baseline;
+    println!(
+        "  baseline {baseline:>9.0} rec/s (noise ±{noise_pct:.2}%)  \
+         1-in-64 {s64:>9.0} rec/s ({overhead64_pct:+.2}%)  \
+         1-in-1 {s1:>9.0} rec/s ({overhead1_pct:+.2}%)"
+    );
+    // The gate: sampled tracing must be invisible on the broker path.
+    anyhow::ensure!(
+        overhead64_pct <= 2.0 + noise_pct,
+        "1-in-64 tracing costs {overhead64_pct:.2}% > 2% + {noise_pct:.2}% noise"
+    );
+
+    // --- exposition cost ----------------------------------------------
+    let wf = WorkflowMetrics::new();
+    wf.e2e_latency_us.record(1500);
+    wf.trace.staleness_us.record(2500);
+    let iters = if smoke { 200u32 } else { 2000 };
+    let mut buf = String::new();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        buf.clear();
+        wf.registry.render_prometheus(&mut buf);
+    }
+    let prom_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        buf.clear();
+        wf.registry.snapshot_json(0, &mut buf);
+    }
+    let snap_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    println!("# exposition: prometheus {prom_us:.1} µs/render, snapshot {snap_us:.1} µs/line");
+
+    // --- event journal cost -------------------------------------------
+    let journal = EventJournal::new(1024);
+    let emits = if smoke { 10_000u64 } else { 100_000 };
+    let t0 = Instant::now();
+    for i in 0..emits {
+        journal.emit("bench.tick", format!("{{\"i\":{i}}}"));
+    }
+    let emit_ns = t0.elapsed().as_secs_f64() * 1e9 / emits as f64;
+    anyhow::ensure!(journal.total() == emits);
+    println!("# event journal: {emit_ns:.0} ns/emit (ring 1024, no sink)");
+
+    // --- machine-readable trajectory ----------------------------------
+    let json = format!(
+        r#"{{"bench":"micro_obs","smoke":{smoke},"broker_path":{{"dim":{dim},"n":{n},"rounds":{rounds},"baseline_rps":{baseline:.0},"noise_pct":{noise_pct:.2},"sampled64_rps":{s64:.0},"overhead64_pct":{overhead64_pct:.2},"sampled1_rps":{s1:.0},"overhead1_pct":{overhead1_pct:.2}}},"exposition":{{"prometheus_us":{prom_us:.2},"snapshot_us":{snap_us:.2}}},"events":{{"emit_ns":{emit_ns:.0}}}}}"#,
+    );
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_obs.json");
+    std::fs::write(out_path, &json)?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

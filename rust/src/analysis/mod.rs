@@ -482,9 +482,19 @@ impl DmdEngine {
         let eigs = dmd::dmd_eigenvalues(&atilde)?;
         let stability = dmd::stability_metric(&eigs);
         self.metrics.analysis_us.record(t0.elapsed().as_micros() as u64);
-        let latency_us = util::epoch_micros().saturating_sub(gen_us);
+        let now_us = util::epoch_micros();
+        let latency_us = now_us.saturating_sub(gen_us);
         self.metrics.e2e_latency_us.record(latency_us);
         self.metrics.analyzed.record((d * 4) as u64);
+        // Sampled flight-recorder hop: the fire is triggered by the
+        // newest record (`rec`), so its trace — when the 1-in-N sampler
+        // stamped one — closes the chain: origin → insight.
+        if let Some(t) = rec.meta.as_ref().and_then(|m| m.trace) {
+            self.metrics.trace.staleness_us.record(now_us.saturating_sub(t.origin_us));
+            if t.deliver_us > 0 {
+                self.metrics.trace.hop_analysis_us.record(now_us.saturating_sub(t.deliver_us));
+            }
+        }
         let (_, rank) = crate::record::parse_stream_key(key).unwrap_or((key, u32::MAX));
         Ok(Some(AnalysisResult {
             key: key.to_string(),

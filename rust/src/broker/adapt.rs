@@ -537,6 +537,23 @@ impl AdaptController {
                                 s.calm.store(0, Ordering::Relaxed);
                                 if let Some(lvl) = s.step_down() {
                                     metrics.adapt.steps_down.inc();
+                                    // The decision and its QoS evidence go
+                                    // to the journal (ISSUE 9) so a trace
+                                    // reader can correlate fidelity drops
+                                    // with the pressure that caused them.
+                                    metrics.events.emit(
+                                        "adapt.down",
+                                        format!(
+                                            "{{\"stream\":\"{}\",\"level\":{lvl},\
+                                             \"epoch\":{},\"flush_p95_us\":{},\
+                                             \"queue_depth\":{},\"backlog\":{}}}",
+                                            crate::metrics::obs::json_escape(s.key()),
+                                            s.epoch(),
+                                            sig.flush_p95_us.map_or(-1, |p| p as i64),
+                                            sig.queue_depth,
+                                            sig.backlog
+                                        ),
+                                    );
                                     log::info!(
                                         "adapt[{}]: pressure ({sig:?}) → level {lvl} (epoch {})",
                                         s.key(),
@@ -550,6 +567,15 @@ impl AdaptController {
                                 s.calm.store(0, Ordering::Relaxed);
                                 if let Some(lvl) = s.step_up() {
                                     metrics.adapt.steps_up.inc();
+                                    metrics.events.emit(
+                                        "adapt.up",
+                                        format!(
+                                            "{{\"stream\":\"{}\",\"level\":{lvl},\
+                                             \"epoch\":{},\"worst_err\":{worst:e}}}",
+                                            crate::metrics::obs::json_escape(s.key()),
+                                            s.epoch()
+                                        ),
+                                    );
                                     log::info!(
                                         "adapt[{}]: calm → level {lvl} (epoch {}, worst err {worst})",
                                         s.key(),

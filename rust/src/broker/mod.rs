@@ -78,7 +78,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::metrics::WorkflowMetrics;
-use crate::record::StreamRecord;
+use crate::record::{CodecKind, Encoding, FrameMeta, StreamRecord, Trace};
 use crate::transport::{ConnConfig, Dialer, TcpDialer};
 use crate::util;
 
@@ -116,6 +116,11 @@ pub struct BrokerConfig {
     /// least one record (ms; 0 = ship immediately).  Non-zero values
     /// trade up to that much added latency for fuller batches.
     pub linger_ms: u64,
+    /// Staleness-trace sampling (ISSUE 9): stamp every Nth write per
+    /// context with a [`Trace`] carried in the frame header; 0 (the
+    /// default) disables tracing entirely — the unsampled hot path
+    /// does no extra work and frames do not grow.
+    pub trace_sample: u64,
 }
 
 impl BrokerConfig {
@@ -132,6 +137,7 @@ impl BrokerConfig {
             batch_max_records: 64,
             batch_max_bytes: 4 << 20, // 4 MiB
             linger_ms: 0,
+            trace_sample: 0,
         }
     }
 }
@@ -336,6 +342,7 @@ impl Broker {
             stages,
             adapt: adapt_state,
             write_seq: AtomicU64::new(0),
+            trace_sample: self.cfg.trace_sample,
             metrics: self.metrics.clone(),
         })
     }
@@ -358,6 +365,8 @@ pub struct BrokerCtx {
     /// Writes issued through this context — the sequence the decimation
     /// filter counts (independent of the simulation step numbering).
     write_seq: AtomicU64,
+    /// Stamp a staleness [`Trace`] on every Nth write (0 = off).
+    trace_sample: u64,
     metrics: WorkflowMetrics,
 }
 
@@ -398,7 +407,7 @@ impl BrokerCtx {
                 data,
             )?,
         };
-        let record = match staged {
+        let mut record = match staged {
             Some(rec) => rec,
             None => {
                 self.metrics
@@ -407,6 +416,41 @@ impl BrokerCtx {
                 return Ok(());
             }
         };
+        // Staleness tracing (ISSUE 9): stamp the 1-in-N sample with its
+        // origin (the gen timestamp the stage pipeline recorded at call
+        // entry) and the enqueue time.  The shipper and the reader fill
+        // in the later hops.
+        if self.trace_sample != 0 && seq % self.trace_sample == 0 {
+            let enqueue_us = util::epoch_micros();
+            let trace = Trace {
+                origin_us: record.gen_micros,
+                enqueue_us,
+                flush_us: 0,
+                deliver_us: 0,
+            };
+            match &mut record.meta {
+                Some(m) => m.trace = Some(trace),
+                // Raw passthrough frames get promoted to a minimal
+                // lossless EBR2 header so the stamp can ride the wire.
+                None => {
+                    record.meta = Some(FrameMeta {
+                        encoding: Encoding::F32,
+                        codec: CodecKind::None,
+                        enc_param: 0.0,
+                        err_bound: 0.0,
+                        raw_len: record.payload.len() as u32,
+                        stats: None,
+                        trace: Some(trace),
+                        provenance: String::new(),
+                    });
+                }
+            }
+            self.metrics.trace.sampled.inc();
+            self.metrics
+                .trace
+                .hop_enqueue_us
+                .record(enqueue_us.saturating_sub(record.gen_micros));
+        }
         let dropped = self.queue.push(record);
         if dropped > 0 {
             self.metrics.dropped.add(dropped as u64);
@@ -993,6 +1037,51 @@ mod tests {
             .map(|e| StreamRecord::decode(&e.fields[0].1).unwrap().step)
             .collect();
         assert_eq!(steps, vec![0, 3, 6]);
+    }
+
+    /// ISSUE 9: a 1-in-N trace sample rides the wire with origin and
+    /// enqueue stamped by the write path and flush stamped by the
+    /// shipper; the unsampled majority stays raw `EBR1` and untraced.
+    #[test]
+    fn trace_sampling_stamps_every_nth_write() {
+        let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+        let cfg = BrokerConfig {
+            group_size: 1,
+            trace_sample: 2,
+            ..BrokerConfig::new(vec![srv.addr()])
+        };
+        let metrics = WorkflowMetrics::new();
+        let broker = Broker::new(cfg, 1, metrics.clone()).unwrap();
+        let ctx = broker.init("u", 0).unwrap();
+        let data = vec![1.0f32; 16];
+        for step in 0..4 {
+            ctx.write(step, &[16], &data).unwrap();
+        }
+        ctx.finalize().unwrap();
+        let entries = srv
+            .store()
+            .read_after("u/0", crate::endpoint::EntryId::ZERO, 0);
+        assert_eq!(entries.len(), 4);
+        let mut traced = 0;
+        for (i, e) in entries.iter().enumerate() {
+            let rec = StreamRecord::decode(&e.fields[0].1).unwrap();
+            let trace = rec.meta.as_ref().and_then(|m| m.trace);
+            if i % 2 == 0 {
+                let t = trace.expect("even writes are sampled");
+                assert!(t.origin_us > 0);
+                assert!(t.enqueue_us >= t.origin_us, "enqueue after origin");
+                assert!(t.flush_us >= t.enqueue_us, "shipper stamps flush");
+                assert_eq!(t.deliver_us, 0, "producers never stamp deliver");
+                traced += 1;
+            } else {
+                assert!(trace.is_none(), "odd writes stay untraced");
+            }
+        }
+        assert_eq!(traced, 2);
+        assert_eq!(metrics.trace.sampled.get(), 2);
+        assert_eq!(metrics.trace.hop_enqueue_us.count(), 2);
+        assert_eq!(metrics.trace.hop_queue_us.count(), 2);
+        assert_eq!(metrics.trace.hop_ack_us.count(), 2);
     }
 
     #[test]

@@ -234,8 +234,47 @@ impl Rebalancer {
                             plan.moves,
                             topo.epoch
                         );
-                        if let Err(e) = apply(&plan, &topology) {
-                            log::warn!("rebalancer: apply failed: {e:#}");
+                        // Journal each decision with the QoS evidence
+                        // that triggered it (ISSUE 9): post-hoc analysis
+                        // can then correlate migrations with pressure
+                        // without replaying the board.
+                        for &e in &plan.drain {
+                            let s = samples.get(e).copied().unwrap_or_default();
+                            metrics.events.emit(
+                                "rebalance.drain",
+                                format!(
+                                    "{{\"endpoint\":{e},\"reconnect_delta\":{},\
+                                     \"epoch\":{}}}",
+                                    s.reconnect_delta, topo.epoch
+                                ),
+                            );
+                        }
+                        for &(g, t) in &plan.moves {
+                            let from =
+                                topo.assignment.get(g).copied().unwrap_or(usize::MAX);
+                            let s = samples.get(from).copied().unwrap_or_default();
+                            metrics.events.emit(
+                                "rebalance.shed",
+                                format!(
+                                    "{{\"group\":{g},\"from\":{from},\"to\":{t},\
+                                     \"flush_p95_us\":{},\"queue_depth\":{},\
+                                     \"epoch\":{}}}",
+                                    s.flush_p95_us, s.queue_depth, topo.epoch
+                                ),
+                            );
+                        }
+                        match apply(&plan, &topology) {
+                            Ok(Some(epoch)) => metrics.events.emit(
+                                "topology.epoch",
+                                format!(
+                                    "{{\"epoch\":{epoch},\"drained\":{},\
+                                     \"moved\":{}}}",
+                                    plan.drain.len(),
+                                    plan.moves.len()
+                                ),
+                            ),
+                            Ok(None) => {}
+                            Err(e) => log::warn!("rebalancer: apply failed: {e:#}"),
                         }
                     }
                     // Sleep in small slices so stop() returns promptly.
@@ -408,6 +447,7 @@ mod tests {
                 flush_p95_us: u64::MAX,
                 queue_depth: u64::MAX,
                 reconnect_delta: u64::MAX,
+                durable: false,
             },
             EndpointSample::default(),
         ];

@@ -52,9 +52,11 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use super::topology::TopologyHandle;
+use crate::metrics::obs::json_escape;
 use crate::metrics::{EndpointStats, WorkflowMetrics};
-use crate::record::StreamRecord;
+use crate::record::{StreamRecord, Trace};
 use crate::transport::{Conn, Dialer, Request};
+use crate::util;
 use crate::wire::Value;
 
 /// One stream's epoch-fenced connection to the elastic topology.
@@ -169,6 +171,14 @@ impl Shipper {
             self.conn = Some(self.dialer.dial(ep)?);
             if self.registered && moving {
                 self.metrics.migrations.inc();
+                self.metrics.events.emit(
+                    "broker.migrate",
+                    format!(
+                        "{{\"stream\":\"{}\",\"from\":{},\"to\":{ep},\"epoch\":{epoch}}}",
+                        json_escape(&self.key),
+                        self.endpoint
+                    ),
+                );
                 log::debug!(
                     "shipper {}: migrated endpoint {} -> {ep} (epoch {epoch})",
                     self.key,
@@ -206,6 +216,16 @@ impl Shipper {
             let msg = reply.as_str_lossy();
             if msg.starts_with("STALE") {
                 self.metrics.stale_rejections.inc();
+                self.metrics.events.emit(
+                    "fence.stale",
+                    format!(
+                        "{{\"stream\":\"{}\",\"epoch\":{},\"at\":\"hello\",\
+                         \"endpoint\":{}}}",
+                        json_escape(&self.key),
+                        self.epoch,
+                        self.endpoint
+                    ),
+                );
             }
             bail!("HELLO {} epoch {} rejected: {msg}", self.key, self.epoch);
         }
@@ -237,7 +257,7 @@ impl Shipper {
     /// sleeps itself (TCP reconnects back off inside the transport).
     fn recover(&mut self) -> Result<()> {
         let mut last: Option<anyhow::Error> = None;
-        for _ in 0..self.max_recover.max(1) {
+        for attempt in 0..self.max_recover.max(1) {
             self.metrics.reconnects.inc();
             // Charge reconnect pressure to the endpoint this attempt
             // actually targets (the current route), not a stale slot.
@@ -247,6 +267,14 @@ impl Shipper {
                 Err(_) => 0,
             };
             self.metrics.qos.slot(target).reconnects.inc();
+            self.metrics.events.emit(
+                "conn.reconnect",
+                format!(
+                    "{{\"stream\":\"{}\",\"endpoint\":{target},\"attempt\":{}}}",
+                    json_escape(&self.key),
+                    attempt + 1
+                ),
+            );
             match self.ensure_registered(true) {
                 Ok(()) => return Ok(()),
                 Err(e) => last = Some(e),
@@ -287,8 +315,30 @@ impl Shipper {
         let mut lens: Vec<usize> = Vec::with_capacity(records.len());
         let mut steps: Vec<u64> = Vec::with_capacity(records.len());
         let mut forced: Vec<bool> = vec![false; records.len()];
+        // Trace stamps of sampled records, parallel to `reqs` (ISSUE 9);
+        // `None` for the unsampled majority.
+        let mut traces: Vec<Option<Trace>> = Vec::with_capacity(records.len());
         for r in records {
-            let payload = r.encode();
+            // Sampled records get their flush hop stamped at encode time
+            // — the stamp must ride the frame, so re-encode a (cheap,
+            // payload-shared) clone with the updated trace.
+            let trace = r.meta.as_ref().and_then(|m| m.trace).map(|mut t| {
+                t.flush_us = util::epoch_micros();
+                self.metrics
+                    .trace
+                    .hop_queue_us
+                    .record(t.flush_us.saturating_sub(t.enqueue_us));
+                t
+            });
+            let payload = match trace {
+                None => r.encode(),
+                Some(t) => {
+                    let mut rec = r.clone();
+                    rec.meta.as_mut().unwrap().trace = Some(t);
+                    rec.encode()
+                }
+            };
+            traces.push(trace);
             lens.push(payload.len());
             steps.push(r.step);
             reqs.push(
@@ -325,6 +375,7 @@ impl Shipper {
             let mut failed = vec![false; send];
             let mut oomed = vec![false; send];
             let mut n_oom = 0usize;
+            let mut n_dup = 0usize;
             let mut stale = false;
             let mut last_ok: Option<usize> = None;
             for (i, reply) in replies.iter().enumerate() {
@@ -341,8 +392,16 @@ impl Shipper {
                     Value::Error(msg) => bail!("endpoint rejected XADDF: {msg}"),
                     // Bulk id (stored) or +DUP (landed in an earlier
                     // unacked frame) — either way the record is durable.
-                    _ => {
+                    reply => {
+                        if matches!(reply, Value::Simple(s) if s == "DUP") {
+                            n_dup += 1;
+                        }
                         self.metrics.shipped.record(lens[i] as u64);
+                        if let Some(t) = traces[i] {
+                            self.metrics.trace.hop_ack_us.record(
+                                util::epoch_micros().saturating_sub(t.flush_us),
+                            );
+                        }
                         self.acked_step = Some(
                             self.acked_step
                                 .map_or(steps[i], |a| a.max(steps[i])),
@@ -350,6 +409,18 @@ impl Shipper {
                         last_ok = Some(i);
                     }
                 }
+            }
+            if n_dup > 0 {
+                // A re-shipped frame hit the server-side step dedupe —
+                // exactly-once held; the journal keeps the evidence.
+                self.metrics.events.emit(
+                    "fence.dup",
+                    format!(
+                        "{{\"stream\":\"{}\",\"endpoint\":{},\"deduped\":{n_dup}}}",
+                        json_escape(&self.key),
+                        self.endpoint
+                    ),
+                );
             }
             // OOM inversion: a later record of this frame landed while
             // an earlier one was explicitly rejected, so the stream's
@@ -378,6 +449,16 @@ impl Shipper {
             if stale {
                 // Fenced out: a successor registered at a higher epoch.
                 self.metrics.stale_rejections.inc();
+                self.metrics.events.emit(
+                    "fence.stale",
+                    format!(
+                        "{{\"stream\":\"{}\",\"epoch\":{},\"at\":\"xaddf\",\
+                         \"endpoint\":{}}}",
+                        json_escape(&self.key),
+                        self.epoch,
+                        self.endpoint
+                    ),
+                );
                 if self.topology.epoch() > self.epoch {
                     // A migration we hadn't noticed: follow it and
                     // re-ship the rejected records at the new epoch.
@@ -434,6 +515,12 @@ impl Shipper {
             });
             let mut i = 0;
             forced.retain(|_| {
+                let keep = i >= send || failed[i];
+                i += 1;
+                keep
+            });
+            let mut i = 0;
+            traces.retain(|_| {
                 let keep = i >= send || failed[i];
                 i += 1;
                 keep

@@ -401,6 +401,7 @@ impl StagePipeline {
             err_bound,
             raw_len,
             stats,
+            trace: None,
             provenance,
         };
         Ok(Some(StreamRecord::from_staged(

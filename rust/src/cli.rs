@@ -253,6 +253,18 @@ pub fn apply_overrides(
     if let Some(v) = args.get_parsed::<u32>("adapt-hysteresis")? {
         cfg.adapt_hysteresis = v;
     }
+    if let Some(v) = args.get_parsed::<u64>("obs-trace-sample")? {
+        cfg.obs_trace_sample = v;
+    }
+    if let Some(v) = args.get_parsed::<u64>("obs-snapshot-ms")? {
+        cfg.obs_snapshot_ms = v;
+    }
+    if let Some(v) = args.get("obs-dir") {
+        cfg.obs_dir = v.to_string();
+    }
+    if let Some(v) = args.get_parsed::<usize>("obs-events-ring")? {
+        cfg.obs_events_ring = v;
+    }
     Ok(())
 }
 
@@ -330,6 +342,15 @@ SUBCOMMANDS:
                 --adapt-hysteresis N calm sweeps before stepping back up
                                      ([adapt] in TOML; --stage-max-err
                                      bounds the ladder's fidelity loss)
+                --obs-trace-sample N flight-recorder tracing: stamp every
+                                     Nth record per writer with hop
+                                     timestamps (0 = off, the default)
+                --obs-snapshot-ms MS metrics-registry JSONL snapshot
+                                     cadence (needs --obs-dir)
+                --obs-dir DIR        observability output: metrics.jsonl
+                                     + events.jsonl land here
+                --obs-events-ring N  control-plane event ring capacity
+                                     (default 1024; [obs] in TOML)
 
 ENVIRONMENT:
   ELASTICBROKER_ARTIFACTS  artifact dir (default ./artifacts)
@@ -486,6 +507,28 @@ mod tests {
         assert_eq!(cfg.adapt_hysteresis, 2);
         assert!((cfg.stages.max_err - 1e-3).abs() < 1e-9);
         assert!(cfg.adapt().enabled());
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn obs_flags_apply() {
+        let mut cfg = crate::config::WorkflowConfig::default();
+        let a = Args::parse(&argv(&[
+            "--obs-trace-sample",
+            "64",
+            "--obs-snapshot-ms",
+            "500",
+            "--obs-dir",
+            "/tmp/eb-obs",
+            "--obs-events-ring",
+            "512",
+        ]))
+        .unwrap();
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert_eq!(cfg.obs_trace_sample, 64);
+        assert_eq!(cfg.obs_snapshot_ms, 500);
+        assert_eq!(cfg.obs_dir, "/tmp/eb-obs");
+        assert_eq!(cfg.obs_events_ring, 512);
         cfg.validate().unwrap();
     }
 

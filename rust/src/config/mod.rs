@@ -187,6 +187,23 @@ pub struct WorkflowConfig {
     /// Consecutive calm sweeps required before the controller walks a
     /// stream back up one rung (step-up hysteresis).
     pub adapt_hysteresis: u32,
+
+    // --- observability (ISSUE 9) ---
+    /// Stamp a flight-recorder trace into every Nth record per writer
+    /// context (0 = tracing disabled; the unsampled hot path pays
+    /// nothing beyond one counter compare).
+    pub obs_trace_sample: u64,
+    /// Metrics-snapshot cadence in ms: append a JSONL snapshot of the
+    /// whole registry to `<obs_dir>/metrics.jsonl` every N ms
+    /// (0 = no snapshot writer).
+    pub obs_snapshot_ms: u64,
+    /// Directory for observability output (metrics.jsonl + events.jsonl;
+    /// "" = journal stays in-memory-only, no snapshot files).
+    pub obs_dir: String,
+    /// Control-plane event journal ring capacity (events kept in memory
+    /// for INFO-style inspection; the JSONL sink, when `obs_dir` is set,
+    /// is unbounded).
+    pub obs_events_ring: usize,
 }
 
 impl Default for WorkflowConfig {
@@ -236,6 +253,10 @@ impl Default for WorkflowConfig {
             adapt_target_p95_us: 50_000,
             adapt_queue_hi: 16,
             adapt_hysteresis: 3,
+            obs_trace_sample: 0,
+            obs_snapshot_ms: 0,
+            obs_dir: String::new(),
+            obs_events_ring: 1024,
         }
     }
 }
@@ -431,6 +452,18 @@ impl WorkflowConfig {
         if let Some(v) = map.get_u64("adapt.hysteresis")? {
             cfg.adapt_hysteresis = v as u32;
         }
+        if let Some(v) = map.get_u64("obs.trace_sample")? {
+            cfg.obs_trace_sample = v;
+        }
+        if let Some(v) = map.get_u64("obs.snapshot_ms")? {
+            cfg.obs_snapshot_ms = v;
+        }
+        if let Some(v) = map.get_str("obs.dir")? {
+            cfg.obs_dir = v;
+        }
+        if let Some(v) = map.get_usize("obs.events_ring")? {
+            cfg.obs_events_ring = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -466,6 +499,15 @@ impl WorkflowConfig {
         anyhow::ensure!(
             self.max_conns_per_shard > 0,
             "endpoint.max_conns_per_shard must be > 0"
+        );
+        anyhow::ensure!(
+            self.obs_events_ring > 0,
+            "obs.events_ring must be > 0"
+        );
+        anyhow::ensure!(
+            self.obs_snapshot_ms == 0 || !self.obs_dir.is_empty(),
+            "obs.snapshot_ms requires obs.dir (--obs-dir): snapshots need \
+             somewhere to land"
         );
         self.stages.validate()?;
         self.adapt().validate()?;
@@ -710,6 +752,27 @@ mod tests {
         .unwrap();
         assert_eq!(c.consumer_group, "dashboard");
         assert!(c.results_stream);
+    }
+
+    #[test]
+    fn obs_knobs_parse_with_defaults() {
+        let c = WorkflowConfig::default();
+        assert_eq!(c.obs_trace_sample, 0, "tracing off by default");
+        assert_eq!(c.obs_snapshot_ms, 0, "snapshot writer off by default");
+        assert!(c.obs_dir.is_empty());
+        assert_eq!(c.obs_events_ring, 1024);
+        let c = WorkflowConfig::from_toml(
+            "[obs]\ntrace_sample = 64\nsnapshot_ms = 500\n\
+             dir = \"/tmp/eb-obs\"\nevents_ring = 256\n",
+        )
+        .unwrap();
+        assert_eq!(c.obs_trace_sample, 64);
+        assert_eq!(c.obs_snapshot_ms, 500);
+        assert_eq!(c.obs_dir, "/tmp/eb-obs");
+        assert_eq!(c.obs_events_ring, 256);
+        // snapshots need a directory; an empty ring is meaningless
+        assert!(WorkflowConfig::from_toml("[obs]\nsnapshot_ms = 100\n").is_err());
+        assert!(WorkflowConfig::from_toml("[obs]\nevents_ring = 0\n").is_err());
     }
 
     #[test]

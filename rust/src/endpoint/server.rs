@@ -92,6 +92,13 @@ pub struct ServerStats {
     bytes_read: AtomicU64,
     bytes_written: AtomicU64,
     wakeups: AtomicU64,
+    /// Backpressure pauses: connections whose reply backlog crossed
+    /// [`HIGH_WATER`] and had command execution suspended (ISSUE 9).
+    conn_paused_total: AtomicU64,
+    /// Pauses that drained below [`LOW_WATER`] and resumed.
+    conn_resumed_total: AtomicU64,
+    /// How long each resumed pause lasted (µs).
+    paused_us: crate::metrics::Histogram,
 }
 
 impl ServerStats {
@@ -122,6 +129,19 @@ impl ServerStats {
     pub fn wakeups(&self) -> u64 {
         self.wakeups.load(Ordering::Relaxed)
     }
+    /// Connections paused at the reply high-water mark (backpressure).
+    pub fn conn_paused_total(&self) -> u64 {
+        self.conn_paused_total.load(Ordering::Relaxed)
+    }
+    /// Paused connections that drained below the low-water mark and
+    /// resumed.
+    pub fn conn_resumed_total(&self) -> u64 {
+        self.conn_resumed_total.load(Ordering::Relaxed)
+    }
+    /// Duration distribution of resumed pauses (µs).
+    pub fn paused_us(&self) -> &crate::metrics::Histogram {
+        &self.paused_us
+    }
 }
 
 /// Endpoint server I/O tuning (the `[endpoint]` config section).
@@ -137,6 +157,10 @@ pub struct ServerConfig {
     /// Optional QoS board slot to mirror connection/byte counters into
     /// (the rebalancer's view of reader pressure).
     pub metrics: Option<Arc<EndpointStats>>,
+    /// Optional control-plane journal (ISSUE 9): backpressure
+    /// pause/resume transitions are recorded as `conn.pause` /
+    /// `conn.resume` events.
+    pub events: Option<Arc<crate::metrics::EventJournal>>,
 }
 
 impl Default for ServerConfig {
@@ -146,6 +170,7 @@ impl Default for ServerConfig {
             read_ring_bytes: 64 * 1024,
             max_conns_per_shard: 4096,
             metrics: None,
+            events: None,
         }
     }
 }
@@ -264,6 +289,7 @@ struct Shard {
     store: Arc<Store>,
     stats: Arc<ServerStats>,
     metrics: Option<Arc<EndpointStats>>,
+    events: Option<Arc<crate::metrics::EventJournal>>,
     shutdown: Arc<AtomicBool>,
     max_conns: usize,
     poller: Poller,
@@ -290,6 +316,8 @@ struct ConnState {
     /// Reply backlog above [`HIGH_WATER`]: stop executing commands and
     /// drop read interest until it drains below [`LOW_WATER`].
     paused: bool,
+    /// When the current pause began (duration histogram at resume).
+    paused_at: Option<Instant>,
     /// QUIT, protocol error or peer EOF: close once replies drain.
     closing: bool,
 }
@@ -309,6 +337,7 @@ impl Shard {
             store,
             stats,
             metrics: cfg.metrics.clone(),
+            events: cfg.events.clone(),
             shutdown,
             max_conns: cfg.max_conns_per_shard.max(1),
             poller,
@@ -434,6 +463,7 @@ impl Shard {
             want_read: true,
             want_write: false,
             paused: false,
+            paused_at: None,
             closing: false,
         });
         self.live += 1;
@@ -486,6 +516,23 @@ impl Shard {
             while !close {
                 if !conn.paused && !conn.closing {
                     drain_commands(conn, &self.store);
+                    if conn.paused {
+                        // Pause transition (backpressure engaged):
+                        // count it and journal the evidence.
+                        conn.paused_at = Some(Instant::now());
+                        self.stats
+                            .conn_paused_total
+                            .fetch_add(1, Ordering::Relaxed);
+                        if let Some(ev) = &self.events {
+                            ev.emit(
+                                "conn.pause",
+                                format!(
+                                    "{{\"slot\":{slot},\"pending\":{}}}",
+                                    conn.reply.pending()
+                                ),
+                            );
+                        }
+                    }
                 }
                 match conn.reply.flush(&mut conn.stream) {
                     Ok(n) => {
@@ -506,6 +553,19 @@ impl Shard {
                 // commands that are already buffered).
                 if conn.paused && conn.reply.pending() <= LOW_WATER {
                     conn.paused = false;
+                    self.stats
+                        .conn_resumed_total
+                        .fetch_add(1, Ordering::Relaxed);
+                    if let Some(at) = conn.paused_at.take() {
+                        let us = at.elapsed().as_micros() as u64;
+                        self.stats.paused_us.record(us);
+                        if let Some(ev) = &self.events {
+                            ev.emit(
+                                "conn.resume",
+                                format!("{{\"slot\":{slot},\"paused_us\":{us}}}"),
+                            );
+                        }
+                    }
                     continue;
                 }
                 break;
@@ -900,6 +960,10 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
         }
         b"QUIT" => Ok(CommandResult::Quit),
         b"INFO" => Ok(Reply(Value::Bulk(store.info().into_bytes()))),
+        // Prometheus text exposition (ISSUE 9): the store's figures,
+        // the serving front-end's counters, and — when a workflow
+        // attached its registry — every broker/stage/trace metric.
+        b"METRICS" => Ok(Reply(Value::Bulk(store.metrics_text().into_bytes()))),
         b"FLUSHALL" => {
             store.flush_all();
             Ok(Reply(Value::Simple("OK".into())))
@@ -1253,6 +1317,8 @@ fn reduce_record(rec: &StreamRecord, view: &ViewOpts) -> Result<Vec<u8>> {
         err_bound: prev.map(|m| m.err_bound).unwrap_or(0.0),
         raw_len,
         stats: Some(stages::field_stats(&data)),
+        // the staleness trace survives server-side reduction (ISSUE 9)
+        trace: prev.and_then(|m| m.trace),
         provenance: format!(
             "{}{tags}",
             prev.map(|m| m.provenance.as_str()).unwrap_or("raw")

@@ -378,6 +378,14 @@ pub struct Store {
     /// (set once when an [`super::server::EndpointServer`] attaches);
     /// surfaced in INFO's `# Server` section.
     srv_stats: std::sync::OnceLock<std::sync::Arc<super::server::ServerStats>>,
+    /// Ingest hop of the sampled staleness trace (ISSUE 9): batch
+    /// flush → store append, stamped endpoint-side via a header-only
+    /// peek at the frame (unsampled frames exit after a magic check).
+    hop_store_us: crate::metrics::Histogram,
+    /// Extra metric registry rendered after the store's own figures by
+    /// [`Store::metrics_text`] (set once when an in-process workflow
+    /// attaches; standalone endpoints serve store+server figures only).
+    registry: std::sync::OnceLock<std::sync::Arc<crate::metrics::Registry>>,
 }
 
 impl Store {
@@ -408,6 +416,8 @@ impl Store {
             evicted_entries: AtomicU64::new(0),
             records_corrupt: AtomicU64::new(0),
             srv_stats: std::sync::OnceLock::new(),
+            hop_store_us: crate::metrics::Histogram::new(),
+            registry: std::sync::OnceLock::new(),
         };
         if let Some(wal_cfg) = store.cfg.wal.clone() {
             let (wal, replay) = Wal::open(wal_cfg).context("opening endpoint wal")?;
@@ -565,7 +575,13 @@ impl Store {
         if self.over_budget() {
             self.evict_global();
         }
-        self.with_stream(key, |shard, s| {
+        // Header-only trace peek before the fields move into the
+        // append: untraced frames (the vast majority) bail after a
+        // 4-byte magic check, so this costs nothing on the hot path.
+        let traced = fields
+            .first()
+            .and_then(|(_, v)| crate::record::StreamRecord::peek_trace(v));
+        let res = self.with_stream(key, |shard, s| {
             if epoch < s.writer_epoch {
                 bail!(
                     "STALE epoch {epoch} behind stream epoch {}",
@@ -588,7 +604,14 @@ impl Store {
             };
             let id = self.append_with_step(shard, key, s, None, fields, Some(new_step))?;
             Ok(FencedAdd::Added(id))
-        })
+        })?;
+        if let (FencedAdd::Added(_), Some(t)) = (&res, traced) {
+            if t.flush_us > 0 {
+                self.hop_store_us
+                    .record(crate::util::epoch_micros().saturating_sub(t.flush_us));
+            }
+        }
+        Ok(res)
     }
 
     /// Append a handoff tombstone (`XHANDOFF key epoch [dest]`): marks
@@ -1144,6 +1167,7 @@ impl Store {
             "# Server\r\nserver:elasticbroker-endpoint\r\nversion:0.1.0\r\nproto:RESP2\r\n\
              connected_clients:{}\r\ntotal_connections_received:{}\r\naccept_errors:{}\r\n\
              total_net_input_bytes:{}\r\ntotal_net_output_bytes:{}\r\n\
+             conn_paused_total:{}\r\nconn_resumed_total:{}\r\n\
              # Memory\r\nused_memory:{}\r\nmaxmemory:{}\r\n\
              # Streams\r\nstreams:{}\r\ntotal_entries_added:{}\r\nstream_maxlen:{}\r\nshards:{}\r\n\
              records_corrupt:{}\r\n\
@@ -1155,6 +1179,8 @@ impl Store {
             stat(|s| s.accept_errors()),
             stat(|s| s.bytes_read()),
             stat(|s| s.bytes_written()),
+            stat(|s| s.conn_paused_total()),
+            stat(|s| s.conn_resumed_total()),
             self.total_bytes.load(Ordering::Relaxed),
             self.cfg.max_memory,
             self.stream_count(),
@@ -1216,6 +1242,84 @@ impl Store {
     /// store has at most one server in front of it).
     pub fn set_server_stats(&self, stats: std::sync::Arc<super::server::ServerStats>) {
         let _ = self.srv_stats.set(stats);
+    }
+
+    /// Attach a workflow metric registry: [`Store::metrics_text`]
+    /// renders it after the store's own figures, so an in-process
+    /// endpoint exposes broker/stage/trace metrics over the same
+    /// `METRICS` wire command (first attach wins).
+    pub fn set_registry(&self, registry: std::sync::Arc<crate::metrics::Registry>) {
+        let _ = self.registry.set(registry);
+    }
+
+    /// Attach a control-plane event journal to the WAL so segment
+    /// rotation and GC land in the flight recorder.  No-op for
+    /// in-memory stores.
+    pub fn set_events(&self, events: std::sync::Arc<crate::metrics::EventJournal>) {
+        if let Some(w) = &self.wal {
+            w.set_events(events);
+        }
+    }
+
+    /// Samples recorded on the ingest trace hop (tests/diagnostics).
+    pub fn hop_store_samples(&self) -> u64 {
+        self.hop_store_us.count()
+    }
+
+    /// Prometheus text exposition (the `METRICS` wire command): the
+    /// store's own gauges, the WAL figures, the serving front-end's
+    /// connection counters, the ingest trace hop, and — when a
+    /// workflow attached one — the full metric registry.
+    pub fn metrics_text(&self) -> String {
+        use crate::metrics::{Counter, Gauge, Histogram, Metric, Registry};
+        use std::sync::Arc;
+        let gauge = |v: u64| {
+            let g = Gauge::new();
+            g.set(v);
+            Metric::Gauge(Arc::new(g))
+        };
+        let counter = |v: u64| {
+            let c = Counter::new();
+            c.add(v);
+            Metric::Counter(Arc::new(c))
+        };
+        let hist = |h: &Histogram| {
+            let s = Histogram::new();
+            s.copy_from(h);
+            Metric::Histogram(Arc::new(s))
+        };
+        let r = Registry::new();
+        r.register("store.used_bytes", gauge(self.used_bytes()));
+        r.register("store.streams", gauge(self.stream_count() as u64));
+        r.register("store.entries_added", counter(self.total_entries_added()));
+        r.register("store.records_corrupt", counter(self.records_corrupt()));
+        r.register("store.trimmed_unread", counter(self.trimmed_unread()));
+        r.register("store.evicted_entries", counter(self.evicted_entries()));
+        if let Some(wal) = self.wal_stats() {
+            r.register("wal.bytes", gauge(wal.bytes));
+            r.register("wal.segments", gauge(wal.segments as u64));
+            r.register("wal.gc_segments", counter(wal.gc_segments));
+        }
+        r.register("endpoint.hop_store_us", hist(&self.hop_store_us));
+        if let Some(s) = self.srv_stats.get() {
+            r.register("server.connections", gauge(s.connections()));
+            r.register("server.conns_total", counter(s.conns_total()));
+            r.register("server.accept_errors", counter(s.accept_errors()));
+            r.register("server.bytes_read", counter(s.bytes_read()));
+            r.register("server.bytes_written", counter(s.bytes_written()));
+            r.register("server.conn_paused_total", counter(s.conn_paused_total()));
+            r.register(
+                "server.conn_resumed_total",
+                counter(s.conn_resumed_total()),
+            );
+            r.register("server.paused_us", hist(s.paused_us()));
+        }
+        let mut out = String::with_capacity(4096);
+        r.render_prometheus(&mut out);
+        if let Some(reg) = self.registry.get() {
+            reg.render_prometheus(&mut out);
+        }
+        out
     }
 
     /// Count a record that failed to decode while serving it.

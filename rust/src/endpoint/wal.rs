@@ -530,6 +530,9 @@ pub struct Wal {
     stop: Arc<AtomicBool>,
     flusher: Mutex<Option<std::thread::JoinHandle<()>>>,
     gc_segments: AtomicU64,
+    /// Control-plane journal (ISSUE 9): rotation and GC land here when
+    /// a workflow attaches one (first attach wins).
+    events: std::sync::OnceLock<Arc<crate::metrics::EventJournal>>,
 }
 
 fn segment_path(dir: &Path, seq: u64) -> PathBuf {
@@ -814,6 +817,7 @@ impl Wal {
                 stop,
                 flusher: Mutex::new(flusher),
                 gc_segments: AtomicU64::new(0),
+                events: std::sync::OnceLock::new(),
             },
             replay,
         ))
@@ -1018,11 +1022,27 @@ impl Wal {
                 .collect(),
         };
         write_frame(st, &snap.encode())?;
+        if let Some(ev) = self.events.get() {
+            ev.emit(
+                "wal.rotate",
+                format!(
+                    "{{\"segment\":{seq},\"closed\":{},\"bytes\":{}}}",
+                    st.closed.len(),
+                    st.closed.iter().map(|c| c.bytes).sum::<u64>()
+                ),
+            );
+        }
         log::debug!(
             "wal: rotated to segment {seq} ({} closed)",
             st.closed.len()
         );
         Ok(())
+    }
+
+    /// Attach a control-plane journal so rotation/GC decisions are
+    /// observable (first attach wins; later calls are no-ops).
+    pub fn set_events(&self, events: Arc<crate::metrics::EventJournal>) {
+        let _ = self.events.set(events);
     }
 
     /// Force everything appended so far to disk (any policy).
@@ -1110,6 +1130,15 @@ impl Wal {
         }
         if removed > 0 {
             self.gc_segments.fetch_add(removed as u64, Ordering::Relaxed);
+            if let Some(ev) = self.events.get() {
+                ev.emit(
+                    "wal.gc",
+                    format!(
+                        "{{\"reclaimed\":{removed},\"segments\":{}}}",
+                        st.closed.len() + 1
+                    ),
+                );
+            }
             log::debug!("wal: reclaimed {removed} segment(s)");
         }
         removed

@@ -335,7 +335,7 @@ fn cmd_workflow(args: &Args) -> Result<()> {
         println!(
             "  shipped: {} ({}/s)",
             util::fmt_bytes(rep.metrics.shipped.bytes()),
-            util::fmt_bytes(rep.metrics.shipped.bytes_per_sec() as u64)
+            util::fmt_bytes(rep.metrics.shipped.lifetime_bytes_per_sec() as u64)
         );
         // Fig 5 style summary: mean stability per rank/region.
         let mut per_rank: std::collections::BTreeMap<u32, (f64, usize)> = Default::default();

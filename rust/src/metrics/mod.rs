@@ -2,9 +2,18 @@
 //! throughput meters.  Everything is lock-free on the hot path (atomics)
 //! because the broker writer threads and endpoint connection threads
 //! record into these concurrently.
+//!
+//! The flight-recorder layer (ISSUE 9) lives in [`obs`]: a
+//! hierarchical [`Registry`] every metric here is registered into, the
+//! per-hop staleness [`TraceMetrics`], and the control-plane
+//! [`EventJournal`].
+
+pub mod obs;
+
+pub use obs::{Event, EventJournal, Metric, Registry, TraceMetrics};
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Monotonic event counter.
@@ -101,6 +110,25 @@ impl Histogram {
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded values (the Prometheus `_sum` series).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Copy another histogram's state into this one (bucket counts,
+    /// count/sum/min/max) — the registry's value-snapshot of composite
+    /// bundle fields.  Not atomic across buckets; renders are
+    /// best-effort reads of live counters anyway.
+    pub fn copy_from(&self, other: &Histogram) {
+        for (dst, src) in self.buckets.iter().zip(&other.buckets) {
+            dst.store(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.store(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.store(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.store(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min.store(other.min.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
     pub fn mean(&self) -> f64 {
@@ -495,11 +523,32 @@ impl AdaptMetrics {
     }
 }
 
-/// Bytes/records-per-second meter over a wall-clock window.
+/// Bytes/records meter with since-start averages *and* sweep-windowed
+/// rates.
+///
+/// ISSUE 9 satellite: [`lifetime_bytes_per_sec`] is an average over
+/// the whole process lifetime — during a run it lags reality by
+/// however long the process has idled, so it must never be labelled a
+/// "rate".  Live consumers (the report, the exposition) read
+/// [`windowed_rates`], which measures over the interval since the last
+/// drain using the same cached-snapshot cadence as [`QosBoard::sweep`].
+///
+/// [`lifetime_bytes_per_sec`]: Throughput::lifetime_bytes_per_sec
+/// [`windowed_rates`]: Throughput::windowed_rates
 pub struct Throughput {
     start: Instant,
     bytes: Counter,
     records: Counter,
+    win: Mutex<RateWindow>,
+}
+
+/// Cursor + cached result behind [`Throughput::windowed_rates`].
+#[derive(Default)]
+struct RateWindow {
+    at: Option<Instant>,
+    bytes: u64,
+    records: u64,
+    rates: (f64, f64),
 }
 
 impl Default for Throughput {
@@ -514,6 +563,7 @@ impl Throughput {
             start: Instant::now(),
             bytes: Counter::new(),
             records: Counter::new(),
+            win: Mutex::new(RateWindow::default()),
         }
     }
 
@@ -534,12 +584,51 @@ impl Throughput {
         self.start.elapsed().as_secs_f64()
     }
 
-    pub fn bytes_per_sec(&self) -> f64 {
+    /// Since-meter-creation average bytes/s — a *lifetime average*, not
+    /// a rate (see struct docs).
+    pub fn lifetime_bytes_per_sec(&self) -> f64 {
         self.bytes.get() as f64 / self.elapsed_secs().max(1e-9)
     }
 
-    pub fn records_per_sec(&self) -> f64 {
+    /// Since-meter-creation average records/s (lifetime average).
+    pub fn lifetime_records_per_sec(&self) -> f64 {
         self.records.get() as f64 / self.elapsed_secs().max(1e-9)
+    }
+
+    /// `(bytes/s, records/s)` over the window since the last drain.
+    ///
+    /// The drain runs at most once per `min_interval`; callers inside
+    /// that window get the cached result of the same window (the
+    /// [`QosBoard::sweep`] cadence pattern), so concurrent consumers
+    /// do not fragment each other's windows.  The first call returns
+    /// the since-start average (there is no window yet).
+    pub fn windowed_rates(&self, min_interval: Duration) -> (f64, f64) {
+        let now_b = self.bytes.get();
+        let now_r = self.records.get();
+        let mut w = self.win.lock().unwrap();
+        match w.at {
+            None => {
+                let el = self.start.elapsed().as_secs_f64().max(1e-9);
+                w.rates = (now_b as f64 / el, now_r as f64 / el);
+                w.at = Some(Instant::now());
+                w.bytes = now_b;
+                w.records = now_r;
+            }
+            Some(t) => {
+                let el = t.elapsed();
+                if el >= min_interval {
+                    let secs = el.as_secs_f64().max(1e-9);
+                    w.rates = (
+                        now_b.saturating_sub(w.bytes) as f64 / secs,
+                        now_r.saturating_sub(w.records) as f64 / secs,
+                    );
+                    w.at = Some(Instant::now());
+                    w.bytes = now_b;
+                    w.records = now_r;
+                }
+            }
+        }
+        w.rates
     }
 }
 
@@ -603,6 +692,17 @@ pub struct WorkflowMetrics {
     /// `always`) lost acked records it can never get back.  Should stay
     /// 0 under `fsync=always`.
     pub replay_gaps: Arc<Counter>,
+    /// Hierarchical registry every metric above is registered into
+    /// (ISSUE 9) — what the `METRICS` exposition and the JSONL
+    /// snapshot writer render.
+    pub registry: Arc<Registry>,
+    /// Per-hop staleness-trace histograms (ISSUE 9); fed only by
+    /// records carrying a sampled [`crate::record::Trace`] stamp.
+    pub trace: Arc<TraceMetrics>,
+    /// Control-plane event journal (ISSUE 9): ring + optional JSONL
+    /// sink of epoch bumps, rebalancer/adapt decisions, fencing, WAL
+    /// rotation/GC, reconnects, backpressure pause/resume.
+    pub events: Arc<EventJournal>,
 }
 
 impl Default for WorkflowMetrics {
@@ -613,7 +713,7 @@ impl Default for WorkflowMetrics {
 
 impl WorkflowMetrics {
     pub fn new() -> Self {
-        WorkflowMetrics {
+        let m = WorkflowMetrics {
             write_call_us: Arc::new(Histogram::new()),
             e2e_latency_us: Arc::new(Histogram::new()),
             shipped: Arc::new(Throughput::new()),
@@ -633,7 +733,44 @@ impl WorkflowMetrics {
             reconnects: Arc::new(Counter::new()),
             records_corrupt: Arc::new(Counter::new()),
             replay_gaps: Arc::new(Counter::new()),
-        }
+            registry: Arc::new(Registry::new()),
+            trace: Arc::new(TraceMetrics::new()),
+            events: Arc::new(EventJournal::default()),
+        };
+        // Register everything under a stable hierarchical namespace —
+        // this is the contract the JSONL snapshots and the `METRICS`
+        // exposition serve (ISSUE 9).
+        let r = &m.registry;
+        r.register("broker.write_call_us", Metric::Histogram(m.write_call_us.clone()));
+        r.register("broker.batch_records", Metric::Histogram(m.batch_records.clone()));
+        r.register("broker.flush_us", Metric::Histogram(m.flush_us.clone()));
+        r.register("broker.shipped", Metric::Throughput(m.shipped.clone()));
+        r.register("broker.dropped", Metric::Counter(m.dropped.clone()));
+        r.register("broker.migrations", Metric::Counter(m.migrations.clone()));
+        r.register("broker.stale_rejections", Metric::Counter(m.stale_rejections.clone()));
+        r.register("broker.handoffs", Metric::Counter(m.handoffs.clone()));
+        r.register("broker.reconnects", Metric::Counter(m.reconnects.clone()));
+        r.register("broker.replay_gaps", Metric::Counter(m.replay_gaps.clone()));
+        r.register("stages", Metric::Stages(m.stages.clone()));
+        r.register("adapt", Metric::Adapt(m.adapt.clone()));
+        r.register("analysis.analyzed", Metric::Throughput(m.analyzed.clone()));
+        r.register("analysis.analysis_us", Metric::Histogram(m.analysis_us.clone()));
+        r.register("analysis.e2e_latency_us", Metric::Histogram(m.e2e_latency_us.clone()));
+        r.register("analysis.gram_incremental", Metric::Counter(m.gram_incremental.clone()));
+        r.register("analysis.gram_full", Metric::Counter(m.gram_full.clone()));
+        r.register("reader.records_corrupt", Metric::Counter(m.records_corrupt.clone()));
+        m.trace.register(r, "trace");
+        r.register("events.dropped", Metric::Counter(m.events.dropped.clone()));
+        m
+    }
+
+    /// Register endpoint `idx`'s QoS slot under `endpoint<idx>.` so
+    /// the exposition and snapshots cover the server side too.
+    pub fn register_endpoint(&self, idx: usize) {
+        self.registry.register(
+            &format!("endpoint{idx}"),
+            Metric::Endpoint(self.qos.slot(idx)),
+        );
     }
 }
 
@@ -895,6 +1032,57 @@ mod tests {
         t.record(500);
         assert_eq!(t.bytes(), 1500);
         assert_eq!(t.records(), 2);
-        assert!(t.bytes_per_sec() > 0.0);
+        assert!(t.lifetime_bytes_per_sec() > 0.0);
+    }
+
+    /// ISSUE 9 satellite: windowed rates measure the *last window*, not
+    /// the lifetime average — a meter that went quiet must read ~0,
+    /// and two consumers inside one cadence window see the same rates.
+    #[test]
+    fn throughput_windowed_rates_see_the_window_not_the_lifetime() {
+        let t = Throughput::new();
+        t.record(1_000_000);
+        // first call: no window yet → since-start average, cursor set
+        let (b0, r0) = t.windowed_rates(Duration::ZERO);
+        assert!(b0 > 0.0 && r0 > 0.0);
+        // a second consumer inside the cadence window shares the result
+        let shared = t.windowed_rates(Duration::from_secs(3600));
+        assert_eq!(shared, (b0, r0));
+        // quiet spell: a fresh drain must read ~0 even though the
+        // lifetime average stays high
+        std::thread::sleep(Duration::from_millis(5));
+        let (b1, _) = t.windowed_rates(Duration::ZERO);
+        assert_eq!(b1, 0.0, "no bytes moved in the window");
+        assert!(t.lifetime_bytes_per_sec() > 0.0, "lifetime view unchanged");
+        // traffic resumes: visible on the next drain
+        t.record(4096);
+        std::thread::sleep(Duration::from_millis(2));
+        let (b2, r2) = t.windowed_rates(Duration::ZERO);
+        assert!(b2 > 0.0 && r2 > 0.0);
+    }
+
+    /// ISSUE 9: the workflow bundle self-registers; a render covers
+    /// broker, stages, adapt, analysis, trace and events namespaces.
+    #[test]
+    fn workflow_metrics_self_register() {
+        let m = WorkflowMetrics::new();
+        m.dropped.inc();
+        m.flush_us.record(123);
+        m.trace.staleness_us.record(5_000);
+        m.register_endpoint(0);
+        let mut prom = String::new();
+        m.registry.render_prometheus(&mut prom);
+        for needle in [
+            "eb_broker_dropped 1",
+            "eb_broker_flush_us_count 1",
+            "eb_stages_records_in 0",
+            "eb_adapt_steps_down 0",
+            "eb_analysis_e2e_latency_us_count 0",
+            "eb_trace_staleness_us_count 1",
+            "eb_events_dropped 0",
+            "eb_endpoint0_flush_us_count 0",
+        ] {
+            assert!(prom.contains(needle), "missing {needle} in:\n{prom}");
+        }
     }
 }

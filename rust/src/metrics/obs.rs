@@ -1,0 +1,605 @@
+//! The flight recorder (ISSUE 9): a hierarchical metric [`Registry`]
+//! with Prometheus-text and JSONL renderers, per-hop staleness
+//! [`TraceMetrics`], and the bounded control-plane [`EventJournal`].
+//!
+//! The registry holds handles (`Arc`s) to the same atomics the hot
+//! paths already record into — registration happens once at wiring
+//! time and rendering is pull-only, so nothing here adds work to the
+//! write/ship/poll paths.  Composite bundles ([`StageMetrics`],
+//! [`AdaptMetrics`], [`EndpointStats`]) register as one entry and
+//! expand into their sub-metrics at render time.
+
+use std::collections::VecDeque;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use super::{AdaptMetrics, Counter, EndpointStats, Gauge, Histogram, StageMetrics, Throughput};
+
+/// Escape `s` for inclusion inside a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A registered metric handle.  Composite variants expand into dotted
+/// sub-names when rendered.
+#[derive(Clone)]
+pub enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+    Throughput(Arc<Throughput>),
+    Stages(Arc<StageMetrics>),
+    Adapt(Arc<AdaptMetrics>),
+    Endpoint(Arc<EndpointStats>),
+}
+
+/// Windowed-rate cadence used when rendering [`Metric::Throughput`]
+/// entries (mirrors the `QosBoard::sweep` snapshot cadence).
+const RATE_WINDOW: std::time::Duration = std::time::Duration::from_millis(250);
+
+/// Hierarchical metric registry: insertion-ordered `(dotted name,
+/// handle)` pairs.  Registration replaces an existing name (idempotent
+/// re-wiring); rendering walks the list and reads the live atomics.
+#[derive(Default)]
+pub struct Registry {
+    entries: RwLock<Vec<(String, Metric)>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `metric` under `name` (dotted hierarchy, e.g.
+    /// `"broker.flush_us"`).  Last registration of a name wins.
+    pub fn register(&self, name: &str, metric: Metric) {
+        let mut entries = self.entries.write().unwrap();
+        if let Some(e) = entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 = metric;
+        } else {
+            entries.push((name.to_string(), metric));
+        }
+    }
+
+    /// Number of registered entries (composites count once).
+    pub fn len(&self) -> usize {
+        self.entries.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand composites into flat `(name, Metric)` leaves, where every
+    /// leaf is a Counter/Gauge/Histogram/Throughput.
+    fn leaves(&self) -> Vec<(String, Metric)> {
+        let entries = self.entries.read().unwrap().clone();
+        let mut out = Vec::with_capacity(entries.len() * 2);
+        for (name, m) in entries {
+            match m {
+                Metric::Stages(s) => {
+                    // composite fields are not individually Arc'd, so
+                    // the expansion snapshots them by value
+                    for (k, c) in [
+                        ("records_in", &s.records_in),
+                        ("records_filtered", &s.records_filtered),
+                        ("bytes_in", &s.bytes_in),
+                        ("bytes_out", &s.bytes_out),
+                    ] {
+                        out.push((format!("{name}.{k}"), Metric::Counter(snapshot_counter(c))));
+                    }
+                    for (k, h) in [
+                        ("filter_us", &s.filter_us),
+                        ("aggregate_us", &s.aggregate_us),
+                        ("convert_us", &s.convert_us),
+                        ("compress_us", &s.compress_us),
+                    ] {
+                        out.push((format!("{name}.{k}"), Metric::Histogram(snapshot_hist(h))));
+                    }
+                }
+                Metric::Adapt(a) => {
+                    for (k, c) in [
+                        ("steps_down", &a.steps_down),
+                        ("steps_up", &a.steps_up),
+                        ("holds", &a.holds),
+                        ("err_rejections", &a.err_rejections),
+                    ] {
+                        out.push((format!("{name}.{k}"), Metric::Counter(snapshot_counter(c))));
+                    }
+                    for (lvl, n) in a.dwell_counts().into_iter().enumerate() {
+                        let c = Arc::new(Counter::new());
+                        c.add(n);
+                        out.push((format!("{name}.dwell.{lvl}"), Metric::Counter(c)));
+                    }
+                }
+                Metric::Endpoint(e) => {
+                    out.push((
+                        format!("{name}.flush_us"),
+                        Metric::Histogram(snapshot_hist(&e.flush_us)),
+                    ));
+                    for (k, c) in [
+                        ("reconnects", &e.reconnects),
+                        ("bytes_read", &e.bytes_read),
+                        ("bytes_written", &e.bytes_written),
+                        ("accept_errors", &e.accept_errors),
+                    ] {
+                        out.push((format!("{name}.{k}"), Metric::Counter(snapshot_counter(c))));
+                    }
+                    for (k, g) in [
+                        ("queue_depth", &e.queue_depth),
+                        ("durable", &e.durable),
+                        ("connections", &e.connections),
+                    ] {
+                        let live = Arc::new(Gauge::new());
+                        live.set(g.get());
+                        out.push((format!("{name}.{k}"), Metric::Gauge(live)));
+                    }
+                }
+                leaf => out.push((name, leaf)),
+            }
+        }
+        out
+    }
+
+    /// Render the Prometheus text exposition format (what the endpoint
+    /// `METRICS` wire command serves).  Dotted names become
+    /// `eb_`-prefixed underscore names; histograms render as summaries.
+    pub fn render_prometheus(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        for (name, m) in self.leaves() {
+            let pname = prom_name(&name);
+            match m {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "# TYPE {pname} counter");
+                    let _ = writeln!(out, "{pname} {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "# TYPE {pname} gauge");
+                    let _ = writeln!(out, "{pname} {}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let _ = writeln!(out, "# TYPE {pname} summary");
+                    for (q, qs) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+                        let _ = writeln!(
+                            out,
+                            "{pname}{{quantile=\"{qs}\"}} {}",
+                            h.quantile(q)
+                        );
+                    }
+                    let _ = writeln!(out, "{pname}_count {}", h.count());
+                    let _ = writeln!(out, "{pname}_sum {}", h.sum());
+                    let _ = writeln!(out, "{pname}_max {}", h.max());
+                }
+                Metric::Throughput(t) => {
+                    let (bps, rps) = t.windowed_rates(RATE_WINDOW);
+                    let _ = writeln!(out, "# TYPE {pname}_bytes_total counter");
+                    let _ = writeln!(out, "{pname}_bytes_total {}", t.bytes());
+                    let _ = writeln!(out, "# TYPE {pname}_records_total counter");
+                    let _ = writeln!(out, "{pname}_records_total {}", t.records());
+                    let _ = writeln!(out, "# TYPE {pname}_bytes_per_sec gauge");
+                    let _ = writeln!(out, "{pname}_bytes_per_sec {bps:.1}");
+                    let _ = writeln!(out, "# TYPE {pname}_records_per_sec gauge");
+                    let _ = writeln!(out, "{pname}_records_per_sec {rps:.1}");
+                }
+                _ => unreachable!("leaves() expands composites"),
+            }
+        }
+    }
+
+    /// Render one JSONL snapshot line (no trailing newline):
+    /// `{"ts_us":…,"metrics":{"broker.flush_us":{…},…}}`.
+    pub fn snapshot_json(&self, ts_us: u64, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = write!(out, "{{\"ts_us\":{ts_us},\"metrics\":{{");
+        for (i, (name, m)) in self.leaves().into_iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "\"{}\":", json_escape(&name));
+            match m {
+                Metric::Counter(c) => {
+                    let _ = write!(out, "{}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = write!(out, "{}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let _ = write!(
+                        out,
+                        "{{\"count\":{},\"mean\":{:.1},\"p50\":{},\"p95\":{},\
+                         \"p99\":{},\"max\":{}}}",
+                        h.count(),
+                        h.mean(),
+                        h.quantile(0.5),
+                        h.quantile(0.95),
+                        h.quantile(0.99),
+                        h.max()
+                    );
+                }
+                Metric::Throughput(t) => {
+                    let (bps, rps) = t.windowed_rates(RATE_WINDOW);
+                    let _ = write!(
+                        out,
+                        "{{\"bytes\":{},\"records\":{},\"bytes_per_sec\":{bps:.1},\
+                         \"records_per_sec\":{rps:.1}}}",
+                        t.bytes(),
+                        t.records()
+                    );
+                }
+                _ => unreachable!("leaves() expands composites"),
+            }
+        }
+        out.push_str("}}");
+    }
+}
+
+fn snapshot_counter(c: &Counter) -> Arc<Counter> {
+    let live = Arc::new(Counter::new());
+    live.add(c.get());
+    live
+}
+
+/// Value-snapshot of a histogram that is a *field* of a composite
+/// bundle (not individually `Arc`'d): bucket counts and count/sum/
+/// min/max are copied once into a fresh histogram the renderer owns.
+fn snapshot_hist(h: &Histogram) -> Arc<Histogram> {
+    let s = Histogram::new();
+    s.copy_from(h);
+    Arc::new(s)
+}
+
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 3);
+    out.push_str("eb_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// Per-hop latency histograms for the sampled end-to-end staleness
+/// trace (ISSUE 9).  All values are µs.  Every histogram is fed only
+/// by records whose frame carries a [`crate::record::Trace`] stamp —
+/// the unsampled hot path records nothing here.
+#[derive(Default)]
+pub struct TraceMetrics {
+    /// Records stamped with a trace (the 1-in-N sample).
+    pub sampled: Arc<Counter>,
+    /// origin → broker enqueue (stage pipeline + queue admission).
+    pub hop_enqueue_us: Arc<Histogram>,
+    /// enqueue → batch flush encode (broker queue wait).
+    pub hop_queue_us: Arc<Histogram>,
+    /// flush → endpoint append ack at the shipper (wire RTT + store).
+    pub hop_ack_us: Arc<Histogram>,
+    /// flush → store ingest, stamped endpoint-side (one-way wire +
+    /// store append; cross-host clock skew applies).
+    pub hop_store_us: Arc<Histogram>,
+    /// flush → reader decode (store residency + poll + wire out).
+    pub hop_deliver_us: Arc<Histogram>,
+    /// reader decode → DMD fire (window assembly + trigger wait).
+    pub hop_analysis_us: Arc<Histogram>,
+    /// origin → DMD fire: the end-to-end staleness of an insight —
+    /// the paper's Fig 6 metric, continuously observable.
+    pub staleness_us: Arc<Histogram>,
+}
+
+impl TraceMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register every hop histogram under `prefix` (e.g. `"trace"`).
+    pub fn register(&self, registry: &Registry, prefix: &str) {
+        registry.register(
+            &format!("{prefix}.sampled"),
+            Metric::Counter(self.sampled.clone()),
+        );
+        for (k, h) in [
+            ("hop_enqueue_us", &self.hop_enqueue_us),
+            ("hop_queue_us", &self.hop_queue_us),
+            ("hop_ack_us", &self.hop_ack_us),
+            ("hop_store_us", &self.hop_store_us),
+            ("hop_deliver_us", &self.hop_deliver_us),
+            ("hop_analysis_us", &self.hop_analysis_us),
+            ("staleness_us", &self.staleness_us),
+        ] {
+            registry.register(&format!("{prefix}.{k}"), Metric::Histogram(h.clone()));
+        }
+    }
+}
+
+/// One structured control-plane event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Monotone sequence number (gap-free; `dropped` counts ring
+    /// evictions, not lost sequence numbers).
+    pub seq: u64,
+    /// µs-since-epoch when the event was emitted.
+    pub ts_us: u64,
+    /// Dotted kind, e.g. `"adapt.down"`, `"fence.stale"`,
+    /// `"wal.rotate"`, `"conn.pause"`.
+    pub kind: &'static str,
+    /// Pre-rendered JSON *object* with the event's fields (may be
+    /// empty).  Stored verbatim; [`Event::to_json`] splices it.
+    pub detail: String,
+}
+
+impl Event {
+    /// The event as one JSON object line (no trailing newline).
+    pub fn to_json(&self) -> String {
+        let head = format!(
+            "{{\"seq\":{},\"ts_us\":{},\"kind\":\"{}\"",
+            self.seq, self.ts_us, self.kind
+        );
+        let d = self.detail.trim();
+        if let Some(body) = d.strip_prefix('{').and_then(|b| b.strip_suffix('}')) {
+            let body = body.trim();
+            if body.is_empty() {
+                format!("{head}}}")
+            } else {
+                format!("{head},{body}}}")
+            }
+        } else if d.is_empty() {
+            format!("{head}}}")
+        } else {
+            format!("{head},\"detail\":\"{}\"}}", json_escape(d))
+        }
+    }
+}
+
+/// Bounded in-memory ring + optional JSONL sink of control-plane
+/// events (ISSUE 9): topology epoch bumps, rebalancer decisions with
+/// their QoS evidence, adapt transitions, writer fencing, WAL
+/// rotation/GC, reconnects, backpressure pause/resume.  Emission is a
+/// short mutex hold plus an optional buffered file write — all call
+/// sites are control-plane (per-decision, not per-record).
+pub struct EventJournal {
+    seq: AtomicU64,
+    cap: AtomicUsize,
+    ring: Mutex<VecDeque<Event>>,
+    /// Events evicted from the ring (still in the sink, if any).
+    pub dropped: Arc<Counter>,
+    sink: Mutex<Option<std::io::BufWriter<std::fs::File>>>,
+}
+
+impl Default for EventJournal {
+    fn default() -> Self {
+        Self::new(1024)
+    }
+}
+
+impl EventJournal {
+    pub fn new(cap: usize) -> Self {
+        EventJournal {
+            seq: AtomicU64::new(0),
+            cap: AtomicUsize::new(cap.max(1)),
+            ring: Mutex::new(VecDeque::new()),
+            dropped: Arc::new(Counter::new()),
+            sink: Mutex::new(None),
+        }
+    }
+
+    /// Resize the ring (config wiring happens after construction).
+    pub fn set_capacity(&self, cap: usize) {
+        self.cap.store(cap.max(1), Ordering::Relaxed);
+    }
+
+    /// Attach a JSONL sink file (append mode); every subsequent emit
+    /// also writes one line there.
+    pub fn set_sink(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        *self.sink.lock().unwrap() = Some(std::io::BufWriter::new(f));
+        Ok(())
+    }
+
+    /// Emit one event.  `detail` must be a JSON object (`"{…}"`) or
+    /// empty; use [`json_escape`] for embedded strings.
+    pub fn emit(&self, kind: &'static str, detail: String) {
+        let ev = Event {
+            seq: self.seq.fetch_add(1, Ordering::Relaxed),
+            ts_us: crate::util::epoch_micros(),
+            kind,
+            detail,
+        };
+        if let Some(w) = self.sink.lock().unwrap().as_mut() {
+            let _ = writeln!(w, "{}", ev.to_json());
+        }
+        let cap = self.cap.load(Ordering::Relaxed);
+        let mut ring = self.ring.lock().unwrap();
+        while ring.len() >= cap {
+            ring.pop_front();
+            self.dropped.inc();
+        }
+        ring.push_back(ev);
+    }
+
+    /// Total events emitted so far.
+    pub fn total(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// The most recent `n` events, oldest first (`n = 0` → all
+    /// retained).
+    pub fn recent(&self, n: usize) -> Vec<Event> {
+        let ring = self.ring.lock().unwrap();
+        let skip = if n == 0 { 0 } else { ring.len().saturating_sub(n) };
+        ring.iter().skip(skip).cloned().collect()
+    }
+
+    /// Flush the JSONL sink (end-of-run, snapshot cadence).
+    pub fn flush(&self) {
+        if let Some(w) = self.sink.lock().unwrap().as_mut() {
+            let _ = w.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_renders_all_leaf_kinds() {
+        let r = Registry::new();
+        let c = Arc::new(Counter::new());
+        c.add(7);
+        r.register("broker.dropped", Metric::Counter(c));
+        let g = Arc::new(Gauge::new());
+        g.set(3);
+        r.register("queue.depth", Metric::Gauge(g));
+        let h = Arc::new(Histogram::new());
+        h.record(100);
+        h.record(200);
+        r.register("broker.flush_us", Metric::Histogram(h));
+        let t = Arc::new(Throughput::new());
+        t.record(4096);
+        r.register("broker.shipped", Metric::Throughput(t));
+
+        let mut prom = String::new();
+        r.render_prometheus(&mut prom);
+        assert!(prom.contains("eb_broker_dropped 7"), "{prom}");
+        assert!(prom.contains("eb_queue_depth 3"), "{prom}");
+        assert!(prom.contains("eb_broker_flush_us{quantile=\"0.95\"}"), "{prom}");
+        assert!(prom.contains("eb_broker_flush_us_count 2"), "{prom}");
+        assert!(prom.contains("eb_broker_flush_us_sum 300"), "{prom}");
+        assert!(prom.contains("eb_broker_shipped_bytes_total 4096"), "{prom}");
+        assert!(prom.contains("eb_broker_shipped_records_total 1"), "{prom}");
+
+        let mut json = String::new();
+        r.snapshot_json(123, &mut json);
+        assert!(json.starts_with("{\"ts_us\":123,"), "{json}");
+        assert!(json.contains("\"broker.dropped\":7"), "{json}");
+        assert!(json.contains("\"broker.flush_us\":{\"count\":2"), "{json}");
+        assert!(json.ends_with("}}"), "{json}");
+    }
+
+    #[test]
+    fn registry_expands_composites() {
+        let r = Registry::new();
+        let s = Arc::new(StageMetrics::new());
+        s.records_in.add(5);
+        s.compress_us.record(42);
+        r.register("stages", Metric::Stages(s));
+        let a = Arc::new(AdaptMetrics::new());
+        a.steps_down.inc();
+        a.dwell(1).inc();
+        r.register("adapt", Metric::Adapt(a));
+        let e = Arc::new(EndpointStats::new());
+        e.flush_us.record(1000);
+        e.connections.set(2);
+        r.register("endpoint0", Metric::Endpoint(e));
+
+        let mut prom = String::new();
+        r.render_prometheus(&mut prom);
+        assert!(prom.contains("eb_stages_records_in 5"), "{prom}");
+        assert!(prom.contains("eb_stages_compress_us_count 1"), "{prom}");
+        assert!(prom.contains("eb_adapt_steps_down 1"), "{prom}");
+        assert!(prom.contains("eb_adapt_dwell_1 1"), "{prom}");
+        assert!(prom.contains("eb_endpoint0_flush_us_count 1"), "{prom}");
+        assert!(prom.contains("eb_endpoint0_connections 2"), "{prom}");
+    }
+
+    #[test]
+    fn registry_reregistration_replaces() {
+        let r = Registry::new();
+        let a = Arc::new(Counter::new());
+        a.add(1);
+        r.register("x", Metric::Counter(a));
+        let b = Arc::new(Counter::new());
+        b.add(9);
+        r.register("x", Metric::Counter(b));
+        assert_eq!(r.len(), 1);
+        let mut prom = String::new();
+        r.render_prometheus(&mut prom);
+        assert!(prom.contains("eb_x 9"), "{prom}");
+    }
+
+    #[test]
+    fn event_journal_ring_bounds_and_sink() {
+        let j = EventJournal::new(3);
+        for i in 0..5u64 {
+            j.emit("test.tick", format!("{{\"i\":{i}}}"));
+        }
+        assert_eq!(j.total(), 5);
+        assert_eq!(j.dropped.get(), 2);
+        let recent = j.recent(0);
+        assert_eq!(recent.len(), 3);
+        assert_eq!(recent[0].detail, "{\"i\":2}");
+        assert_eq!(recent[2].seq, 4);
+        // seq stays monotone and to_json splices the detail object
+        let line = recent[2].to_json();
+        assert!(line.starts_with("{\"seq\":4,"), "{line}");
+        assert!(line.contains("\"kind\":\"test.tick\""), "{line}");
+        assert!(line.ends_with(",\"i\":4}"), "{line}");
+
+        // JSONL sink gets every emit, ring evictions included
+        let dir = std::env::temp_dir().join(format!("eb-obs-{}", std::process::id()));
+        let path = dir.join("events.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let j2 = EventJournal::new(2);
+        j2.set_sink(&path).unwrap();
+        for i in 0..4u64 {
+            j2.emit("test.tick", format!("{{\"i\":{i}}}"));
+        }
+        j2.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 4, "{text}");
+        assert!(text.lines().next().unwrap().contains("\"i\":0"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn event_to_json_escapes_plain_detail() {
+        let ev = Event {
+            seq: 0,
+            ts_us: 1,
+            kind: "x",
+            detail: "said \"hi\"".into(),
+        };
+        assert_eq!(
+            ev.to_json(),
+            "{\"seq\":0,\"ts_us\":1,\"kind\":\"x\",\"detail\":\"said \\\"hi\\\"\"}"
+        );
+    }
+
+    #[test]
+    fn json_escape_handles_controls() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn trace_metrics_register_under_prefix() {
+        let r = Registry::new();
+        let t = TraceMetrics::new();
+        t.staleness_us.record(5000);
+        t.register(&r, "trace");
+        let mut prom = String::new();
+        r.render_prometheus(&mut prom);
+        assert!(prom.contains("eb_trace_staleness_us_count 1"), "{prom}");
+        assert!(prom.contains("eb_trace_hop_queue_us_count 0"), "{prom}");
+        assert!(prom.contains("eb_trace_sampled 0"), "{prom}");
+    }
+}

@@ -38,8 +38,9 @@
 //! enc_param   f32  encoding parameter (qdelta quantization step)
 //! err_bound   f32  measured max abs error of the encoding (0 lossless)
 //! raw_len  u32   encoded-but-uncompressed payload bytes (codec input)
-//! flags    u8    bit 0: sidecar stats present
+//! flags    u8    bit 0: sidecar stats present; bit 1: trace present
 //! stats    f32 × 3   min, max, mean (iff flag bit 0)
+//! trace    u64 × 4   origin, enqueue, flush, deliver µs (iff flag bit 1)
 //! prov_len u16,  provenance bytes (e.g. "agg:2|f16|shuffle-lz")
 //! payload_len u32, payload bytes (codec output)
 //! crc32    u32   over everything above
@@ -100,6 +101,26 @@ pub struct FieldStats {
     pub mean: f32,
 }
 
+/// Per-record hop timestamps for the sampled end-to-end staleness
+/// trace (ISSUE 9).  Carried in [`FrameMeta`] (flags bit 1,
+/// CRC-covered) on a 1-in-N subset of records; a 0 stamp means "hop
+/// not reached yet".  `deliver_us` is stamped by the *reader* on its
+/// decoded in-memory copy — producers serialize it as 0, so stored and
+/// migrated bytes stay stable.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Trace {
+    /// µs-since-epoch when the simulation handed the field to the
+    /// broker (same clock as `gen_micros`).
+    pub origin_us: u64,
+    /// µs-since-epoch when the staged record entered the broker queue.
+    pub enqueue_us: u64,
+    /// µs-since-epoch when the shipper encoded it into a flush batch.
+    pub flush_us: u64,
+    /// µs-since-epoch when a reader decoded it (never serialized
+    /// non-zero by producers; see struct docs).
+    pub deliver_us: u64,
+}
+
 /// Self-describing header of a staged (`"EBR2"`) frame: how the
 /// payload was encoded and compressed, with enough information to
 /// reverse both, plus stage provenance and sidecar stats.
@@ -120,6 +141,9 @@ pub struct FrameMeta {
     pub raw_len: u32,
     /// Sidecar min/max/mean of the (post-aggregate) field data.
     pub stats: Option<FieldStats>,
+    /// Sampled staleness-trace hop stamps (ISSUE 9); `None` on the
+    /// unsampled hot path, so untraced frames never grow.
+    pub trace: Option<Trace>,
     /// Human-readable stage provenance, e.g. `"roi:8:120|agg:2|f16|shuffle-lz"`.
     pub provenance: String,
 }
@@ -237,7 +261,7 @@ impl StreamRecord {
         match &self.meta {
             None => base,
             // enc + codec + enc_param + err_bound + raw_len + flags
-            // + optional stats + prov_len + provenance
+            // + optional stats + optional trace + prov_len + provenance
             Some(m) => {
                 base + 1
                     + 1
@@ -246,6 +270,7 @@ impl StreamRecord {
                     + 4
                     + 1
                     + if m.stats.is_some() { 12 } else { 0 }
+                    + if m.trace.is_some() { 32 } else { 0 }
                     + 2
                     + m.provenance.len()
             }
@@ -274,11 +299,19 @@ impl StreamRecord {
             out.extend_from_slice(&m.enc_param.to_le_bytes());
             out.extend_from_slice(&m.err_bound.to_le_bytes());
             out.extend_from_slice(&m.raw_len.to_le_bytes());
-            out.push(u8::from(m.stats.is_some()));
+            let flags =
+                u8::from(m.stats.is_some()) | (u8::from(m.trace.is_some()) << 1);
+            out.push(flags);
             if let Some(s) = &m.stats {
                 out.extend_from_slice(&s.min.to_le_bytes());
                 out.extend_from_slice(&s.max.to_le_bytes());
                 out.extend_from_slice(&s.mean.to_le_bytes());
+            }
+            if let Some(t) = &m.trace {
+                out.extend_from_slice(&t.origin_us.to_le_bytes());
+                out.extend_from_slice(&t.enqueue_us.to_le_bytes());
+                out.extend_from_slice(&t.flush_us.to_le_bytes());
+                out.extend_from_slice(&t.deliver_us.to_le_bytes());
             }
             out.extend_from_slice(&(m.provenance.len() as u16).to_le_bytes());
             out.extend_from_slice(m.provenance.as_bytes());
@@ -331,6 +364,16 @@ impl StreamRecord {
             } else {
                 None
             };
+            let trace = if flags & 2 != 0 {
+                Some(Trace {
+                    origin_us: r.u64()?,
+                    enqueue_us: r.u64()?,
+                    flush_us: r.u64()?,
+                    deliver_us: r.u64()?,
+                })
+            } else {
+                None
+            };
             let prov_len = r.u16()? as usize;
             let provenance = String::from_utf8(r.bytes(prov_len)?.to_vec())
                 .context("provenance not UTF-8")?;
@@ -341,6 +384,7 @@ impl StreamRecord {
                 err_bound,
                 raw_len,
                 stats,
+                trace,
                 provenance,
             })
         } else {
@@ -420,6 +464,7 @@ impl StreamRecord {
                     err_bound: m.err_bound,
                     raw_len: raw.len() as u32,
                     stats: m.stats,
+                    trace: m.trace,
                     provenance: m.provenance,
                 };
                 (raw, Some(decoded_meta))
@@ -434,6 +479,40 @@ impl StreamRecord {
             shape,
             payload: Arc::new(payload),
             meta,
+        })
+    }
+
+    /// Cheap header-only peek at an encoded frame's [`Trace`] stamps:
+    /// no payload decode, no CRC, no allocation.  Returns `None` for
+    /// `EBR1` frames, untraced `EBR2` frames, and anything malformed —
+    /// the endpoint ingest path calls this on every append, so the
+    /// common untraced case must exit after a handful of byte reads.
+    pub fn peek_trace(buf: &[u8]) -> Option<Trace> {
+        let mut r = Reader { buf, pos: 0 };
+        let magic = r.u32().ok()?;
+        if magic != MAGIC2 {
+            return None;
+        }
+        // step + gen_us + rank + dtype
+        r.bytes(8 + 8 + 4 + 1).ok()?;
+        let ndim = r.u8().ok()? as usize;
+        r.bytes(4 * ndim).ok()?;
+        let name_len = r.u16().ok()? as usize;
+        r.bytes(name_len).ok()?;
+        // enc + codec + enc_param + err_bound + raw_len
+        r.bytes(1 + 1 + 4 + 4 + 4).ok()?;
+        let flags = r.u8().ok()?;
+        if flags & 2 == 0 {
+            return None;
+        }
+        if flags & 1 != 0 {
+            r.bytes(12).ok()?;
+        }
+        Some(Trace {
+            origin_us: r.u64().ok()?,
+            enqueue_us: r.u64().ok()?,
+            flush_us: r.u64().ok()?,
+            deliver_us: r.u64().ok()?,
         })
     }
 }
@@ -605,6 +684,7 @@ mod tests {
                 err_bound: err,
                 raw_len,
                 stats: Some(FieldStats { min: -4.0, max: 3.875, mean: -0.0625 }),
+                trace: None,
                 provenance: "f16|shuffle-lz".into(),
             },
         );
@@ -682,6 +762,70 @@ mod tests {
         assert_eq!(&buf[0..4], &0x4542_5231u32.to_le_bytes());
         let (staged, _) = staged_sample();
         assert_eq!(&staged.encode()[0..4], &0x4542_5232u32.to_le_bytes());
+    }
+
+    /// ISSUE 9: a traced sample — flags bit 1, all four hop stamps.
+    fn traced_sample() -> StreamRecord {
+        let (mut rec, _) = staged_sample();
+        let m = rec.meta.as_mut().unwrap();
+        m.trace = Some(Trace {
+            origin_us: 1_700_000_000_000_100,
+            enqueue_us: 1_700_000_000_000_250,
+            flush_us: 1_700_000_000_001_000,
+            deliver_us: 0,
+        });
+        rec
+    }
+
+    /// ISSUE 9: the trace rides the frame CRC-covered, survives decode
+    /// (including the decoded-header rewrite), and untraced frames stay
+    /// byte-identical to the pre-trace encoder.
+    #[test]
+    fn trace_roundtrips_and_untraced_frames_unchanged() {
+        let rec = traced_sample();
+        let buf = rec.encode();
+        assert_eq!(buf.len(), rec.encoded_len());
+        let got = StreamRecord::decode(&buf).unwrap();
+        let t = got.meta.as_ref().unwrap().trace.expect("trace survives decode");
+        assert_eq!(t.origin_us, 1_700_000_000_000_100);
+        assert_eq!(t.enqueue_us, 1_700_000_000_000_250);
+        assert_eq!(t.flush_us, 1_700_000_000_001_000);
+        assert_eq!(t.deliver_us, 0);
+        // decode∘encode stability holds for traced frames too
+        let again = StreamRecord::decode(&got.encode()).unwrap();
+        assert_eq!(again, got);
+        // an identical record without the trace encodes 32 bytes shorter
+        let (untraced, _) = staged_sample();
+        assert_eq!(untraced.encoded_len() + 32, rec.encoded_len());
+    }
+
+    /// ISSUE 9: every byte flip of a traced frame is rejected — the
+    /// trace stamps are inside the CRC envelope.
+    #[test]
+    fn traced_every_byte_flip_rejected() {
+        let buf = traced_sample().encode();
+        for i in 0..buf.len() {
+            let mut fuzzed = buf.clone();
+            fuzzed[i] ^= 0xFF;
+            assert!(
+                StreamRecord::decode(&fuzzed).is_err(),
+                "flip of traced byte {i} (of {}) went undetected",
+                buf.len()
+            );
+        }
+    }
+
+    /// ISSUE 9: `peek_trace` reads the stamps without decoding and
+    /// early-exits on raw and untraced frames.
+    #[test]
+    fn peek_trace_reads_header_only() {
+        let rec = traced_sample();
+        let t = StreamRecord::peek_trace(&rec.encode()).expect("peek finds trace");
+        assert_eq!(t, rec.meta.as_ref().unwrap().trace.unwrap());
+        assert!(StreamRecord::peek_trace(&sample().encode()).is_none());
+        let (untraced, _) = staged_sample();
+        assert!(StreamRecord::peek_trace(&untraced.encode()).is_none());
+        assert!(StreamRecord::peek_trace(b"garbage").is_none());
     }
 
     /// Property: single-bit flips anywhere are detected (CRC or schema).

@@ -95,6 +95,9 @@ pub struct ElasticReader {
     /// Forwarded to every per-endpoint reader: corrupt-record drop
     /// counter (ISSUE 6 bugfix).
     corrupt: Option<Arc<crate::metrics::Counter>>,
+    /// Forwarded to every per-endpoint reader: per-hop staleness
+    /// histograms for trace-stamped records (ISSUE 9).
+    trace: Option<Arc<crate::metrics::TraceMetrics>>,
 }
 
 impl ElasticReader {
@@ -134,6 +137,7 @@ impl ElasticReader {
             auto_ack: false,
             group: None,
             corrupt: None,
+            trace: None,
         })
     }
 
@@ -171,6 +175,16 @@ impl ElasticReader {
         self.corrupt = Some(c);
     }
 
+    /// Feed delivery-hop latencies of trace-stamped records on every
+    /// endpoint's poll path (typically `WorkflowMetrics::trace`,
+    /// ISSUE 9).
+    pub fn set_trace(&mut self, t: Arc<crate::metrics::TraceMetrics>) {
+        for reader in self.readers.values_mut() {
+            reader.set_trace(t.clone());
+        }
+        self.trace = Some(t);
+    }
+
     /// One sweep: poll every endpoint that currently homes a stream,
     /// enqueue the polled segments, then walk each stream's chain and
     /// emit everything that became deliverable, in step order.
@@ -191,6 +205,9 @@ impl ElasticReader {
                         }
                         if let Some(c) = &self.corrupt {
                             reader.set_corrupt_counter(c.clone());
+                        }
+                        if let Some(t) = &self.trace {
+                            reader.set_trace(t.clone());
                         }
                         if let Some(cursors) = self.saved_cursors.remove(&e) {
                             for (key, cursor) in cursors {

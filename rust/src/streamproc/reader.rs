@@ -33,7 +33,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::endpoint::EntryId;
-use crate::metrics::Counter;
+use crate::metrics::{Counter, TraceMetrics};
 use crate::record::StreamRecord;
 use crate::transport::{Conn, ConnConfig, Request, RespConn};
 use crate::wire::Value;
@@ -88,6 +88,11 @@ pub struct StreamReader {
     /// (ISSUE 6 bugfix: warn-only drops were invisible to operators) —
     /// usually [`crate::metrics::WorkflowMetrics::records_corrupt`].
     corrupt: Option<Arc<Counter>>,
+    /// Per-hop staleness histograms (ISSUE 9): when attached, decoded
+    /// records carrying a [`crate::record::Trace`] stamp feed
+    /// `hop_deliver_us` at delivery.  The in-memory `deliver_us` stamp
+    /// is set regardless so downstream analysis can compute staleness.
+    trace: Option<Arc<TraceMetrics>>,
 }
 
 impl StreamReader {
@@ -115,6 +120,7 @@ impl StreamReader {
             auto_ack: false,
             group: None,
             corrupt: None,
+            trace: None,
         };
         for k in keys {
             reader.subscribe(k);
@@ -184,6 +190,12 @@ impl StreamReader {
     /// `WorkflowMetrics::records_corrupt`) instead of only warning.
     pub fn set_corrupt_counter(&mut self, c: Arc<Counter>) {
         self.corrupt = Some(c);
+    }
+
+    /// Feed delivery-hop latencies of trace-stamped records into `t`
+    /// (typically `WorkflowMetrics::trace`, ISSUE 9).
+    pub fn set_trace(&mut self, t: Arc<TraceMetrics>) {
+        self.trace = Some(t);
     }
 
     /// Send `XACKPOS` for every stream whose cursor advanced past its
@@ -369,7 +381,22 @@ impl StreamReader {
                 } else {
                     match payload {
                         Some(p) => match StreamRecord::decode(p) {
-                            Ok(rec) => current.records.push(rec),
+                            Ok(mut rec) => {
+                                // Delivery hop of the sampled staleness
+                                // trace: stamp the in-memory copy only
+                                // (stored/WAL bytes stay byte-stable).
+                                if let Some(t) =
+                                    rec.meta.as_mut().and_then(|m| m.trace.as_mut())
+                                {
+                                    t.deliver_us = crate::util::epoch_micros();
+                                    if let Some(tm) = &self.trace {
+                                        tm.hop_deliver_us.record(
+                                            t.deliver_us.saturating_sub(t.flush_us),
+                                        );
+                                    }
+                                }
+                                current.records.push(rec)
+                            }
                             Err(err) => {
                                 // corrupt record: skip but advance the
                                 // cursor so we don't spin on it forever

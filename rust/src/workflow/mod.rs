@@ -11,7 +11,7 @@
 //! * [`run_synth_workflow`] — Fig 7 (latency + aggregated throughput at
 //!   scale, ranks : endpoints : executors = 16 : 1 : 16).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -43,6 +43,8 @@ pub struct CloudSide {
     /// (`cfg.rebalance_ms > 0`); `None` for static runs.
     pub topology: Option<TopologyHandle>,
     last_result_us: Arc<AtomicU64>,
+    obs_stop: Arc<AtomicBool>,
+    obs_writer: Option<std::thread::JoinHandle<()>>,
 }
 
 impl CloudSide {
@@ -57,6 +59,67 @@ impl CloudSide {
         warm_dim: Option<usize>,
     ) -> Result<CloudSide> {
         let n_endpoints = cfg.endpoint_count();
+
+        // Flight recorder (ISSUE 9): size the control-plane event ring
+        // and, when an obs dir is configured, attach the JSONL event
+        // sink and start the periodic registry snapshot writer.
+        metrics.events.set_capacity(cfg.obs_events_ring);
+        let obs_stop = Arc::new(AtomicBool::new(false));
+        let mut obs_writer = None;
+        if !cfg.obs_dir.is_empty() {
+            std::fs::create_dir_all(&cfg.obs_dir)?;
+            let dir = std::path::PathBuf::from(&cfg.obs_dir);
+            metrics.events.set_sink(&dir.join("events.jsonl"))?;
+            if cfg.obs_snapshot_ms > 0 {
+                let registry = metrics.registry.clone();
+                let stop = obs_stop.clone();
+                let period = Duration::from_millis(cfg.obs_snapshot_ms);
+                let path = dir.join("metrics.jsonl");
+                obs_writer = Some(
+                    std::thread::Builder::new()
+                        .name("obs-snapshot".into())
+                        .spawn(move || {
+                            use std::io::Write;
+                            let mut file = match std::fs::OpenOptions::new()
+                                .create(true)
+                                .append(true)
+                                .open(&path)
+                            {
+                                Ok(f) => f,
+                                Err(e) => {
+                                    log::warn!("obs: open {}: {e}", path.display());
+                                    return;
+                                }
+                            };
+                            let mut buf = String::new();
+                            'sweeps: loop {
+                                let deadline = Instant::now() + period;
+                                while Instant::now() < deadline {
+                                    if stop.load(Ordering::Relaxed) {
+                                        break 'sweeps;
+                                    }
+                                    std::thread::sleep(Duration::from_millis(5));
+                                }
+                                buf.clear();
+                                registry
+                                    .snapshot_json(crate::util::epoch_micros(), &mut buf);
+                                buf.push('\n');
+                                if let Err(e) = file.write_all(buf.as_bytes()) {
+                                    log::warn!("obs: snapshot write: {e}");
+                                    return;
+                                }
+                            }
+                            // Final snapshot at shutdown so runs shorter
+                            // than one period still land a data point.
+                            buf.clear();
+                            registry.snapshot_json(crate::util::epoch_micros(), &mut buf);
+                            buf.push('\n');
+                            let _ = file.write_all(buf.as_bytes());
+                        })?,
+                );
+            }
+        }
+
         let mut endpoints = Vec::with_capacity(n_endpoints);
         for i in 0..n_endpoints {
             // Durable endpoints (ISSUE 4): one WAL per endpoint under
@@ -74,7 +137,7 @@ impl CloudSide {
             // ISSUE 7: size the endpoint's event loop from the config
             // and mirror its connection/byte stats into the QoS board
             // slot the rebalancer already watches.
-            endpoints.push(EndpointServer::start_with(
+            let srv = EndpointServer::start_with(
                 "127.0.0.1:0",
                 StoreConfig {
                     shards: cfg.store_shards,
@@ -87,8 +150,15 @@ impl CloudSide {
                     read_ring_bytes: cfg.read_ring_bytes,
                     max_conns_per_shard: cfg.max_conns_per_shard,
                     metrics: Some(metrics.qos.slot(i)),
+                    events: Some(metrics.events.clone()),
                 },
-            )?);
+            )?;
+            // METRICS exposition on the endpoint covers the workflow
+            // registry too, and WAL lifecycle events land in the shared
+            // journal.
+            srv.store().set_registry(metrics.registry.clone());
+            srv.store().set_events(metrics.events.clone());
+            endpoints.push(srv);
             if !cfg.wal_dir.is_empty() {
                 // Advertise durability on the QoS board: the rebalancer
                 // prefers durable endpoints as migration targets.
@@ -124,6 +194,7 @@ impl CloudSide {
                 elastic.set_group(cfg.consumer_group.as_str());
             }
             elastic.set_corrupt_counter(metrics.records_corrupt.clone());
+            elastic.set_trace(metrics.trace.clone());
             readers.push(Box::new(elastic));
             Some(topo)
         } else {
@@ -136,6 +207,7 @@ impl CloudSide {
                     reader.set_group(cfg.consumer_group.as_str());
                 }
                 reader.set_corrupt_counter(metrics.records_corrupt.clone());
+                reader.set_trace(metrics.trace.clone());
                 readers.push(Box::new(reader));
             }
             None
@@ -222,6 +294,8 @@ impl CloudSide {
             metrics,
             topology,
             last_result_us,
+            obs_stop,
+            obs_writer,
         })
     }
 
@@ -241,6 +315,11 @@ impl CloudSide {
             .unwrap()
             .join()
             .map_err(|_| anyhow::anyhow!("collector panicked"))?;
+        self.obs_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.obs_writer.take() {
+            let _ = h.join();
+        }
+        self.metrics.events.flush();
         let last_us = self.last_result_us.load(Ordering::Relaxed);
         Ok((results, last_us))
     }
@@ -323,6 +402,7 @@ pub fn run_cfd_workflow(
         linger_ms: cfg.linger_ms,
         stages: cfg.stages.clone(),
         adapt: cfg.adapt(),
+        trace_sample: cfg.obs_trace_sample,
         ..BrokerConfig::new(cloud.endpoint_addrs())
     };
     // Elastic runs share the Cloud side's versioned topology with the
@@ -736,6 +816,48 @@ mod tests {
                 .count();
             assert_eq!(per, 8, "rank {r}");
         }
+    }
+
+    /// ISSUE 9: a traced run (1-in-1 sampling so it's deterministic)
+    /// closes the whole hop chain — every fire records a staleness
+    /// sample — without changing analysis coverage, and the obs dir
+    /// receives both JSONL sinks.
+    #[test]
+    fn traced_workflow_records_staleness_and_writes_sinks() {
+        let obs_root = std::env::temp_dir().join(format!(
+            "eb-wf-obs-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&obs_root);
+        let mut cfg = tiny_cfg(IoMode::Broker);
+        cfg.obs_trace_sample = 1;
+        cfg.obs_snapshot_ms = 50;
+        cfg.obs_dir = obs_root.to_string_lossy().into_owned();
+        let rep = run_cfd_workflow(&cfg, None).unwrap();
+        assert_eq!(
+            rep.analysis_results.len(),
+            8 * 4,
+            "tracing must not change coverage"
+        );
+        assert_eq!(rep.metrics.dropped.get(), 0);
+        let tr = &rep.metrics.trace;
+        assert_eq!(tr.sampled.get(), 12 * 4, "every write stamped at 1-in-1");
+        assert!(tr.hop_enqueue_us.count() > 0, "enqueue hop ticked");
+        assert!(tr.hop_queue_us.count() > 0, "flush hop ticked");
+        assert!(tr.hop_deliver_us.count() > 0, "deliver hop ticked");
+        assert_eq!(
+            tr.staleness_us.count(),
+            8 * 4,
+            "every fire closes the chain"
+        );
+        // JSONL sinks landed: at least the shutdown registry snapshot,
+        // with the staleness series present by its hierarchical name.
+        let snaps =
+            std::fs::read_to_string(obs_root.join("metrics.jsonl")).unwrap();
+        assert!(snaps.lines().count() >= 1);
+        assert!(snaps.contains("\"trace.staleness_us\""));
+        assert!(obs_root.join("events.jsonl").exists());
+        let _ = std::fs::remove_dir_all(&obs_root);
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! ISSUE 9 integration: the flight recorder.
+//!
+//! Asserted end to end, over real TCP endpoints and real WALs:
+//!
+//! * a trace-stamped staged frame round-trips **byte-identically**
+//!   through fenced ingest → endpoint crash → WAL replay → `XHANDOFF`
+//!   migration to a second endpoint — the stamp is CRC-covered wire
+//!   state, not an in-memory annotation;
+//! * a server-side `XREAD STRIDE` reduced view re-encodes the frame
+//!   but carries the stamp across, and a reader tailing the stream
+//!   closes the chain with a monotone hop sequence
+//!   (origin ≤ enqueue ≤ flush ≤ deliver);
+//! * the `METRICS` wire command serves Prometheus text covering the
+//!   store, WAL, server, ingest-hop and — when a workflow attached its
+//!   registry — every broker/stage/trace series;
+//! * WAL segment rotation lands as `wal.rotate` events in an attached
+//!   control-plane journal.
+
+use std::sync::Arc;
+
+use elasticbroker::broker::{StagePipeline, StagesConfig};
+use elasticbroker::endpoint::{
+    EndpointServer, EntryId, FsyncPolicy, StoreConfig, WalConfig,
+};
+use elasticbroker::metrics::{EventJournal, WorkflowMetrics};
+use elasticbroker::record::{CodecKind, StreamRecord, Trace};
+use elasticbroker::streamproc::StreamReader;
+use elasticbroker::transport::{ConnConfig, RespConn};
+
+const KEY: &str = "u/0";
+
+/// A real staged frame (stats sidecar + shuffle-lz wire codec) with a
+/// hop stamp applied exactly like the broker's 1-in-N sampler does.
+fn traced_record(step: u64, d: usize) -> (StreamRecord, Trace) {
+    let cfg = StagesConfig {
+        stats: true,
+        codec: CodecKind::ShuffleLz,
+        ..Default::default()
+    };
+    let pipe = StagePipeline::new(cfg, WorkflowMetrics::new().stages.clone()).unwrap();
+    let data: Vec<f32> = (0..d)
+        .map(|i| ((0.3 * i as f64 + step as f64).sin()) as f32)
+        .collect();
+    let origin = elasticbroker::util::epoch_micros();
+    let mut rec = pipe
+        .apply("u", 0, step, 0, origin, &[d as u32], &data)
+        .unwrap()
+        .expect("stats+codec stages never drop");
+    let t = Trace {
+        origin_us: origin,
+        enqueue_us: origin + 10,
+        flush_us: origin + 25,
+        deliver_us: 0, // the reader's hop; never serialized non-zero
+    };
+    rec.meta.as_mut().expect("staged frames carry meta").trace = Some(t);
+    (rec, t)
+}
+
+/// Fetch all of `key` through one XREAD with extra view options.
+fn xread_records(c: &mut RespConn, extra: &[&[u8]], key: &str) -> Vec<StreamRecord> {
+    let mut cmd: Vec<&[u8]> = vec![b"XREAD"];
+    cmd.extend_from_slice(extra);
+    let key_b = key.as_bytes();
+    cmd.extend_from_slice(&[b"STREAMS", key_b, b"0-0"]);
+    let reply = c.request(&cmd).unwrap();
+    let streams = reply.as_array().expect("XREAD reply not an array");
+    let stream = streams[0].as_array().unwrap();
+    stream[1]
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|e| {
+            let e = e.as_array().unwrap();
+            let fields = e[1].as_array().unwrap();
+            StreamRecord::decode(fields[1].as_bytes().unwrap()).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn trace_survives_wal_replay_migration_and_reduced_view() {
+    let wal_root = std::env::temp_dir().join(format!(
+        "eb-obs-trace-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&wal_root);
+    let cfg = || StoreConfig {
+        wal: Some(WalConfig {
+            dir: wal_root.join("ep0"),
+            fsync: FsyncPolicy::Always, // the crash below is loss-free
+            segment_bytes: 1 << 20,
+        }),
+        ..Default::default()
+    };
+
+    let d = 64;
+    let (rec, t) = traced_record(7, d);
+    let bytes0 = rec.encode();
+    // The stamp is CRC-covered wire state: decode round-trips it.
+    let dec = StreamRecord::decode(&bytes0).unwrap();
+    assert_eq!(dec.meta.as_ref().unwrap().trace, Some(t));
+
+    // --- fenced ingest: the store-side hop histogram ticks once.
+    let srv = EndpointServer::start("127.0.0.1:0", cfg()).unwrap();
+    srv.store().hello(KEY, 1).unwrap();
+    srv.store()
+        .xadd_fenced(KEY, 1, 7, false, vec![(b"r".to_vec(), bytes0.clone())])
+        .unwrap();
+    assert_eq!(srv.store().hop_store_samples(), 1, "ingest hop must tick");
+
+    // --- crash + WAL replay: the stored bytes are identical.
+    drop(srv);
+    let srv = EndpointServer::start("127.0.0.1:0", cfg()).unwrap();
+    let entries = srv.store().read_after(KEY, EntryId::ZERO, 0);
+    assert_eq!(entries.len(), 1);
+    assert_eq!(
+        &entries[0].fields[0].1[..],
+        &bytes0[..],
+        "WAL replay must reproduce the traced frame byte-for-byte"
+    );
+
+    // --- migration: tombstone the old segment, re-ship to a second
+    // endpoint under the next epoch; the old epoch is fenced.
+    let srv1 = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+    srv.store().xhandoff(KEY, 2, Some(1)).unwrap();
+    assert!(
+        srv.store().hello(KEY, 1).is_err(),
+        "old epoch must be STALE after handoff"
+    );
+    srv1.store().hello(KEY, 2).unwrap();
+    srv1.store()
+        .xadd_fenced(KEY, 2, 7, false, vec![(b"r".to_vec(), bytes0.clone())])
+        .unwrap();
+    let entries = srv1.store().read_after(KEY, EntryId::ZERO, 0);
+    assert_eq!(
+        &entries[0].fields[0].1[..],
+        &bytes0[..],
+        "migrated bytes must be identical"
+    );
+
+    // --- server-side reduced view: re-encoded frame, same stamp.
+    let mut c = RespConn::connect(srv1.addr(), ConnConfig::default()).unwrap();
+    let got = xread_records(&mut c, &[b"STRIDE", b"2"], KEY);
+    assert_eq!(got.len(), 1);
+    let m = got[0].meta.as_ref().expect("reduced views are staged frames");
+    assert_eq!(m.trace, Some(t), "trace must survive server-side reduction");
+    assert!(m.provenance.contains("view.stride=2"), "{}", m.provenance);
+
+    // --- reader delivery closes the chain; the hop sequence is
+    // monotone and the deliver hop histogram ticked.
+    let metrics = WorkflowMetrics::new();
+    let mut reader = StreamReader::connect(
+        srv1.addr(),
+        vec![KEY.to_string()],
+        0,
+        ConnConfig::default(),
+    )
+    .unwrap();
+    reader.set_trace(metrics.trace.clone());
+    let mut delivered = Vec::new();
+    for _ in 0..8 {
+        for b in reader.poll().unwrap() {
+            delivered.extend(b.records);
+        }
+        if !delivered.is_empty() {
+            break;
+        }
+    }
+    assert_eq!(delivered.len(), 1);
+    let tr = delivered[0]
+        .meta
+        .as_ref()
+        .unwrap()
+        .trace
+        .expect("delivered frame keeps its stamp");
+    assert!(
+        tr.origin_us <= tr.enqueue_us
+            && tr.enqueue_us <= tr.flush_us
+            && tr.flush_us <= tr.deliver_us
+            && tr.deliver_us > 0,
+        "hop chain must be monotone: {tr:?}"
+    );
+    assert_eq!(metrics.trace.hop_deliver_us.count(), 1);
+
+    let _ = std::fs::remove_dir_all(&wal_root);
+}
+
+#[test]
+fn metrics_command_serves_prometheus_text_including_attached_registry() {
+    let srv = EndpointServer::start("127.0.0.1:0", StoreConfig::default()).unwrap();
+    let wf = WorkflowMetrics::new();
+    wf.trace.staleness_us.record(1234);
+    srv.store().set_registry(wf.registry.clone());
+    let (rec, _) = traced_record(3, 32);
+    srv.store()
+        .xadd(KEY, None, vec![(b"r".to_vec(), rec.encode())])
+        .unwrap();
+
+    let mut c = RespConn::connect(srv.addr(), ConnConfig::default()).unwrap();
+    let reply = c.request(&[b"METRICS"]).unwrap();
+    let text = String::from_utf8(reply.as_bytes().unwrap().to_vec()).unwrap();
+    // store figures
+    assert!(text.contains("# TYPE eb_store_used_bytes gauge"), "{text}");
+    assert!(text.contains("eb_store_entries_added 1"), "{text}");
+    // serving front-end counters (the connection running this scrape)
+    assert!(text.contains("eb_server_connections"), "{text}");
+    assert!(text.contains("eb_server_conn_paused_total"), "{text}");
+    // ingest hop histogram is always exposed
+    assert!(text.contains("eb_endpoint_hop_store_us"), "{text}");
+    // the attached workflow registry rides the same exposition
+    assert!(text.contains("eb_trace_staleness_us"), "{text}");
+}
+
+#[test]
+fn wal_rotation_lands_in_the_event_journal() {
+    let wal_root = std::env::temp_dir().join(format!(
+        "eb-obs-rotate-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&wal_root);
+    let srv = EndpointServer::start(
+        "127.0.0.1:0",
+        StoreConfig {
+            wal: Some(WalConfig {
+                dir: wal_root.clone(),
+                fsync: FsyncPolicy::Never,
+                segment_bytes: 4096, // rotate every few records
+            }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let events = Arc::new(EventJournal::new(64));
+    srv.store().set_events(events.clone());
+
+    for step in 0..32u64 {
+        let data: Vec<f32> = (0..256).map(|i| (i as f32) + step as f32).collect();
+        let r = StreamRecord::from_f32("u", 0, step, 0, &[256], &data).unwrap();
+        srv.store()
+            .xadd(KEY, None, vec![(b"r".to_vec(), r.encode())])
+            .unwrap();
+    }
+    let rotations = events
+        .recent(0)
+        .iter()
+        .filter(|e| e.kind == "wal.rotate")
+        .count();
+    assert!(
+        rotations >= 2,
+        "32 KiB through 4 KiB segments must rotate (saw {rotations})"
+    );
+    let _ = std::fs::remove_dir_all(&wal_root);
+}
