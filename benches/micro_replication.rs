@@ -1,0 +1,225 @@
+//! Microbenchmark: chain replication (ISSUE 10).
+//!
+//! * **replication write tax**: the same 4-rank write workload shipped
+//!   through chains of factor 1 (no replication), 2 and 3 under
+//!   tail-ack.  Reports records/s and the broker flush p95 — the
+//!   latency a simulation pays per extra synchronous chain hop — and
+//!   asserts every chain member holds every record (the durability the
+//!   tax buys).
+//! * **failover to first delivered record**: a reader tails a factor-2
+//!   chain; the head machine is killed (WAL destroyed), the successor
+//!   is promoted via the topology epoch bump, and the clock runs from
+//!   the kill until the reader delivers the first post-failover record
+//!   through the promoted head.
+//!
+//! `cargo bench --bench micro_replication`
+//!
+//! Emits `BENCH_replication.json` so CI tracks the trajectory.  Set
+//! `BENCH_SMOKE=1` for tiny sizes (numbers then indicative only).
+//! Everything runs on the in-process sim transport, so the numbers
+//! isolate the chain-forwarding cost from kernel networking noise.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use elasticbroker::broker::{
+    Broker, BrokerConfig, BrokerCtx, GroupMap, QueuePolicy, TopologyHandle,
+};
+use elasticbroker::endpoint::{EntryId, ReplAck, StoreConfig};
+use elasticbroker::metrics::WorkflowMetrics;
+use elasticbroker::streamproc::ElasticReader;
+use elasticbroker::transport::sim::{SimDialer, SimNet};
+use elasticbroker::transport::Dialer;
+
+const RANKS: u32 = 4;
+const DIM: usize = 256; // 1 KiB f32 snapshots
+
+fn dummy_addr() -> std::net::SocketAddr {
+    "127.0.0.1:1".parse().unwrap()
+}
+
+fn snapshot(rank: u32, step: u64) -> Vec<f32> {
+    (0..DIM)
+        .map(|i| (step as f32 * 0.7 + i as f32 * 0.013 + rank as f32).sin())
+        .collect()
+}
+
+/// Ship `steps` × 4 ranks through one group replicated at `factor`;
+/// returns (records/s, flush p95 µs).
+fn write_tax(factor: usize, steps: u64) -> anyhow::Result<(f64, u64)> {
+    let net = SimNet::new();
+    for _ in 0..3 {
+        net.add_endpoint(StoreConfig::default());
+    }
+    let metrics = WorkflowMetrics::new();
+    let groups = GroupMap::new(RANKS as usize, RANKS as usize, 3)?;
+    let topology = TopologyHandle::new_replicated(
+        groups,
+        vec![dummy_addr(); 3],
+        &[],
+        factor,
+    )?;
+    let keys: Vec<String> = (0..RANKS).map(|r| format!("u/{r}")).collect();
+    net.apply_replication(&topology.snapshot(), &keys, ReplAck::Tail)?;
+    let dialer: Arc<dyn Dialer> = Arc::new(SimDialer::new(net.clone()));
+    let broker = Arc::new(Broker::with_topology(
+        BrokerConfig {
+            group_size: RANKS as usize,
+            queue_cap: 64,
+            policy: QueuePolicy::Block,
+            batch_max_records: 8,
+            ..BrokerConfig::new(vec![dummy_addr()])
+        },
+        topology.clone(),
+        dialer,
+        metrics.clone(),
+    )?);
+    let ctxs: Vec<BrokerCtx> =
+        (0..RANKS).map(|r| broker.init("u", r)).collect::<anyhow::Result<_>>()?;
+
+    let t0 = Instant::now();
+    for step in 0..steps {
+        for (r, ctx) in ctxs.iter().enumerate() {
+            ctx.write(step, &[DIM as u32], &snapshot(r as u32, step))?;
+        }
+    }
+    for c in ctxs {
+        c.finalize()?;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+
+    // Durability check: every member of the (single) chain holds every
+    // record of every rank — the whole point of paying the tax.
+    let chain: Vec<usize> = topology.snapshot().replica_chain(0)?.to_vec();
+    anyhow::ensure!(chain.len() == factor, "chain length {} != {factor}", chain.len());
+    for &e in &chain {
+        for key in &keys {
+            let n = net.store(e).xlen(key);
+            anyhow::ensure!(
+                n == steps as usize,
+                "endpoint {e}: {key} holds {n} of {steps} records"
+            );
+        }
+    }
+    let rec_s = (steps * RANKS as u64) as f64 / secs;
+    Ok((rec_s, metrics.flush_us.quantile(0.95)))
+}
+
+/// Kill the head of a factor-2 chain under a live reader; returns the
+/// µs from the kill to the first post-failover record delivered
+/// through the promoted successor.
+fn failover_latency(warm_steps: u64) -> anyhow::Result<u64> {
+    let net = SimNet::new();
+    net.add_endpoint(StoreConfig::default());
+    net.add_endpoint(StoreConfig::default());
+    let metrics = WorkflowMetrics::new();
+    let groups = GroupMap::new(1, 1, 2)?;
+    let topology =
+        TopologyHandle::new_replicated(groups, vec![dummy_addr(); 2], &[], 2)?;
+    let keys = vec!["u/0".to_string()];
+    net.apply_replication(&topology.snapshot(), &keys, ReplAck::Tail)?;
+    let dialer: Arc<dyn Dialer> = Arc::new(SimDialer::new(net.clone()));
+    let broker = Arc::new(Broker::with_topology(
+        BrokerConfig {
+            group_size: 1,
+            queue_cap: 64,
+            policy: QueuePolicy::Block,
+            batch_max_records: 8,
+            ..BrokerConfig::new(vec![dummy_addr()])
+        },
+        topology.clone(),
+        dialer.clone(),
+        metrics.clone(),
+    )?);
+    let ctx = broker.init("u", 0)?;
+    let mut reader =
+        ElasticReader::new(topology.clone(), dialer, keys.clone(), 0)?;
+
+    // Warm phase: the reader follows the head until fully caught up.
+    for step in 0..warm_steps {
+        ctx.write(step, &[DIM as u32], &snapshot(0, step))?;
+    }
+    let mut delivered = 0u64;
+    let warm_deadline = Instant::now() + Duration::from_secs(20);
+    while delivered < warm_steps {
+        for b in reader.poll()? {
+            delivered += b.records.len() as u64;
+        }
+        anyhow::ensure!(Instant::now() < warm_deadline, "warm-up stalled");
+    }
+
+    // The head's machine dies; the control plane fails over.
+    let t0 = Instant::now();
+    net.kill_machine(0);
+    topology.drain_endpoint(0)?;
+    topology.repair_chains()?;
+    net.apply_replication(&topology.snapshot(), &keys, ReplAck::Tail)?;
+    ctx.write(warm_steps, &[DIM as u32], &snapshot(0, warm_steps))?;
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let mut got = false;
+        for b in reader.poll()? {
+            got |= b.records.iter().any(|r| r.step == warm_steps);
+        }
+        if got {
+            break;
+        }
+        anyhow::ensure!(Instant::now() < deadline, "failover record never arrived");
+    }
+    let us = t0.elapsed().as_micros() as u64;
+    ctx.finalize()?;
+    anyhow::ensure!(
+        net.store(1).read_after("u/0", EntryId::ZERO, 0).len() > warm_steps as usize,
+        "promoted head must hold the post-failover record"
+    );
+    Ok(us)
+}
+
+fn main() -> anyhow::Result<()> {
+    elasticbroker::util::logger::init();
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+
+    // --- replication write tax --------------------------------------
+    let steps = if smoke { 200u64 } else { 2000u64 };
+    println!(
+        "# write tax: {steps} steps × {RANKS} ranks (1 KiB f32), chain factor 1/2/3, tail-ack"
+    );
+    let mut tax = Vec::new();
+    for factor in [1usize, 2, 3] {
+        let (rec_s, p95) = write_tax(factor, steps)?;
+        println!("  factor {factor}: {rec_s:>9.0} rec/s, flush p95 {p95:>6} µs");
+        tax.push((factor, rec_s, p95));
+    }
+
+    // --- failover to first delivered record -------------------------
+    let iters = if smoke { 2usize } else { 5 };
+    let warm = if smoke { 32u64 } else { 256 };
+    let mut lats = Vec::new();
+    for _ in 0..iters {
+        lats.push(failover_latency(warm)?);
+    }
+    let mean = lats.iter().sum::<u64>() / lats.len() as u64;
+    let min = *lats.iter().min().unwrap();
+    println!(
+        "\n# failover: head machine killed under a live reader ({iters} runs, {warm} warm steps)"
+    );
+    println!("  kill → first record through promoted head: min {min} µs, mean {mean} µs");
+
+    // --- machine-readable trajectory --------------------------------
+    let tax_json: Vec<String> = tax
+        .iter()
+        .map(|(f, rec_s, p95)| {
+            format!(r#"{{"factor":{f},"rec_s":{rec_s:.0},"flush_p95_us":{p95}}}"#)
+        })
+        .collect();
+    let lat_json: Vec<String> = lats.iter().map(|l| l.to_string()).collect();
+    let json = format!(
+        r#"{{"bench":"micro_replication","smoke":{smoke},"write_tax":{{"steps":{steps},"ranks":{RANKS},"payload_bytes":1024,"chains":[{}]}},"failover":{{"warm_steps":{warm},"latency_us":[{}],"mean_us":{mean},"min_us":{min}}}}}"#,
+        tax_json.join(","),
+        lat_json.join(",")
+    );
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_replication.json");
+    std::fs::write(out_path, &json)?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

@@ -123,21 +123,47 @@ pub fn evaluate(
         if my_groups.is_empty() {
             continue;
         }
+        let g = my_groups[0];
         // Least-loaded calm endpoint strictly below our load; between
         // equally-loaded candidates a durable (WAL-backed) endpoint
-        // wins, then the lowest slot index.
+        // wins, then the lowest slot index.  Under replication (ISSUE
+        // 10) the target must also be chain-safe for the shed group:
+        // either already a member of its replica chain, or in a
+        // failure domain distinct from every current member —
+        // re-heading onto a co-located endpoint would silently drop a
+        // chain position.
         let target = healthy
             .iter()
             .copied()
-            .filter(|&t| t != e && !pressured(t))
+            .filter(|&t| t != e && !pressured(t) && chain_safe(topo, g, t))
             .min_by_key(|&t| (topo.groups_of_endpoint(t).len(), !sample(t).durable, t));
         if let Some(t) = target {
             if topo.groups_of_endpoint(t).len() < my_groups.len() {
-                plan.moves.push((my_groups[0], t));
+                plan.moves.push((g, t));
             }
         }
     }
     plan
+}
+
+/// Whether re-heading group `g` onto endpoint `t` preserves its replica
+/// chain (ISSUE 10).  True when replication is off, when `t` already
+/// serves in the chain (an in-chain promotion keeps every copy), or
+/// when `t`'s failure domain is distinct from every current member's —
+/// the re-heading drops co-located followers, so a domain clash would
+/// either shorten the chain or evict the old head's full copy.
+fn chain_safe(topo: &Topology, g: usize, t: usize) -> bool {
+    if topo.replication_factor <= 1 {
+        return true;
+    }
+    let Ok(chain) = topo.replica_chain(g) else {
+        return true;
+    };
+    if chain.contains(&t) {
+        return true;
+    }
+    let td = &topo.endpoints[t].domain;
+    chain.iter().all(|&m| topo.endpoints[m].domain != *td)
 }
 
 /// Apply a plan to the live topology.  Returns the new epoch if
@@ -170,6 +196,14 @@ pub fn apply(plan: &MigrationPlan, handle: &TopologyHandle) -> Result<Option<u64
         .collect();
     if !moves.is_empty() {
         epoch = Some(handle.assign(&moves)?);
+    }
+    // Drains and re-headings can shorten replica chains; top them back
+    // up immediately so the reduced-redundancy window stays as narrow
+    // as one sweep (ISSUE 10).
+    if topo.replication_factor > 1 {
+        if let Some(ep) = handle.repair_chains()? {
+            epoch = Some(ep);
+        }
     }
     Ok(epoch)
 }
@@ -452,6 +486,73 @@ mod tests {
             EndpointSample::default(),
         ];
         assert!(evaluate(&h.snapshot(), &samples, &thr).is_empty());
+    }
+
+    fn rtopo(
+        ranks: usize,
+        gsize: usize,
+        n_eps: usize,
+        domains: &[&str],
+        factor: usize,
+    ) -> TopologyHandle {
+        let groups = GroupMap::new(ranks, gsize, n_eps).unwrap();
+        let addrs = (0..n_eps)
+            .map(|i| format!("127.0.0.1:{}", 7300 + i).parse().unwrap())
+            .collect();
+        let domains: Vec<String> = domains.iter().map(|s| s.to_string()).collect();
+        TopologyHandle::new_replicated(groups, addrs, &domains, factor).unwrap()
+    }
+
+    /// ISSUE 10: a shed never re-heads a group onto an endpoint that
+    /// shares a failure domain with its replica chain, even when that
+    /// endpoint is the least loaded.
+    #[test]
+    fn shed_skips_domain_colocated_targets() {
+        // 5 endpoints over domains a,b,a,b,c; factor 2.  Group 0's
+        // chain is [0, 1] (domains a, b).
+        let h = rtopo(80, 16, 5, &["a", "b", "a", "b", "c"], 2);
+        h.assign(&[(1, 0), (2, 0)]).unwrap(); // skew: e0 heads 3 groups
+        let pressured = EndpointSample {
+            queue_depth: 64,
+            ..Default::default()
+        };
+        // e0 sheds; e1 (the in-chain follower) is pressured too, so the
+        // calm candidates are e2 (load 0, domain a — co-located with
+        // head 0), e3 (load 1, domain b — co-located with follower 1)
+        // and e4 (load 1, domain c — safe).
+        let samples = vec![pressured, pressured];
+        let plan = evaluate(&h.snapshot(), &samples, &QosThresholds::default());
+        assert_eq!(
+            plan.moves,
+            vec![(0, 4)],
+            "only the domain-distinct endpoint is chain-safe"
+        );
+        apply(&plan, &h).unwrap().unwrap();
+        let t = h.snapshot();
+        assert_eq!(t.replica_chain(0).unwrap(), &[4, 0]);
+        t.validate().unwrap();
+    }
+
+    /// ISSUE 10: applying a drain tops shortened chains back up to the
+    /// replication factor in the same sweep.
+    #[test]
+    fn apply_repairs_short_chains_after_a_drain() {
+        let h = rtopo(48, 16, 3, &["a", "b", "c"], 2);
+        let samples = vec![EndpointSample {
+            reconnect_delta: 5,
+            ..Default::default()
+        }];
+        let plan = evaluate(&h.snapshot(), &samples, &QosThresholds::default());
+        assert_eq!(plan.drain, vec![0]);
+        apply(&plan, &h).unwrap().unwrap();
+        let t = h.snapshot();
+        assert!(!t.endpoints[0].live);
+        for g in 0..t.replicas.len() {
+            let chain = t.replica_chain(g).unwrap();
+            assert_eq!(chain.len(), 2, "group {g} left short after repair");
+            assert!(!chain.contains(&0), "group {g} still references the drained slot");
+        }
+        t.validate().unwrap();
     }
 
     #[test]

@@ -33,6 +33,13 @@
 //!   behaviour: only the rejected records are retried, in order, with
 //!   a single-record probe while backing off, so a wedged endpoint
 //!   costs one record per tick, not the whole batch.
+//! * **Replication stalls (ISSUE 10).**  A `REPL` reply means the
+//!   chain head stored the record but could not reach its successor
+//!   under tail-ack — the record is *not yet durable chain-wide*, so
+//!   the shipper retries the rejected records on a short tick (the
+//!   head answers `DUP` and re-forwards) and follows any topology
+//!   epoch bump, which is how a failover promotion reroutes it to the
+//!   surviving replica.
 //! * **Restarted endpoints (ISSUE 4).**  Reconnecting to an endpoint
 //!   that crashed and recovered from its WAL is just the recovery path:
 //!   `HELLO` reports the replayed high-water mark and the re-shipped
@@ -297,6 +304,8 @@ impl Shipper {
     pub fn ship(&mut self, records: &[StreamRecord]) -> Result<()> {
         const OOM_RETRY_EVERY: Duration = Duration::from_millis(25);
         const OOM_RETRY_LIMIT: u32 = 1200; // 30 s of patience
+        const REPL_RETRY_EVERY: Duration = Duration::from_millis(5);
+        const REPL_RETRY_LIMIT: u32 = 2000; // 10 s for the chain to heal
 
         if records.is_empty() {
             return Ok(());
@@ -351,6 +360,7 @@ impl Shipper {
             );
         }
         let mut oom_attempts = 0u32;
+        let mut repl_attempts = 0u32;
         while !reqs.is_empty() {
             if built_epoch != self.epoch {
                 for req in reqs.iter_mut() {
@@ -376,6 +386,7 @@ impl Shipper {
             let mut oomed = vec![false; send];
             let mut n_oom = 0usize;
             let mut n_dup = 0usize;
+            let mut n_repl = 0usize;
             let mut stale = false;
             let mut last_ok: Option<usize> = None;
             for (i, reply) in replies.iter().enumerate() {
@@ -388,6 +399,15 @@ impl Shipper {
                     Value::Error(msg) if msg.starts_with("STALE") => {
                         failed[i] = true;
                         stale = true;
+                    }
+                    // Chain head stored the record but could not reach
+                    // its successor under tail-ack (ISSUE 10): not yet
+                    // durable chain-wide, so retry — the head dedupes
+                    // (DUP) and re-forwards until the chain heals or a
+                    // failover epoch bump reroutes us.
+                    Value::Error(msg) if msg.starts_with("REPL") => {
+                        failed[i] = true;
+                        n_repl += 1;
                     }
                     Value::Error(msg) => bail!("endpoint rejected XADDF: {msg}"),
                     // Bulk id (stored) or +DUP (landed in an earlier
@@ -473,6 +493,44 @@ impl Shipper {
                         self.epoch
                     );
                 }
+            }
+            if n_repl > 0 {
+                repl_attempts += 1;
+                anyhow::ensure!(
+                    repl_attempts <= REPL_RETRY_LIMIT,
+                    "endpoint {} cannot replicate {} to its chain successor for \
+                     more than {:?}",
+                    self.endpoint,
+                    self.key,
+                    REPL_RETRY_EVERY * REPL_RETRY_LIMIT
+                );
+                self.metrics.repl_blocked.inc();
+                if repl_attempts == 1 {
+                    self.metrics.events.emit(
+                        "repl.blocked",
+                        format!(
+                            "{{\"stream\":\"{}\",\"endpoint\":{},\"records\":{n_repl}}}",
+                            json_escape(&self.key),
+                            self.endpoint
+                        ),
+                    );
+                    log::warn!(
+                        "shipper {}: endpoint {} cannot reach its chain successor \
+                         on {n_repl}/{send} records; retrying",
+                        self.key,
+                        self.endpoint
+                    );
+                }
+                // A failover may already have rerouted the chain: pick
+                // up the new head instead of hammering the broken one.
+                if self.topology.epoch() != self.epoch
+                    && self.ensure_registered(false).is_err()
+                {
+                    self.recover()?;
+                }
+                std::thread::sleep(REPL_RETRY_EVERY);
+            } else {
+                repl_attempts = 0;
             }
             if n_oom > 0 {
                 oom_attempts += 1;

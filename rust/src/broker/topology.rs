@@ -18,6 +18,17 @@
 //! [`TopologyHandle`] is the shared, cheaply-pollable view: writers
 //! check `epoch()` (one atomic load) at every batch boundary and only
 //! take the read lock when it moved.
+//!
+//! **Replication (ISSUE 10).**  On top of the head assignment, every
+//! group carries a *replica chain* (`replicas[g]`, head first): the
+//! ordered endpoint slots its streams are chain-replicated across.
+//! Slots carry a failure-domain label, and the chain invariant — kept
+//! by [`Topology::validate`] like every other invariant here — is that
+//! a chain never visits the same endpoint or the same failure domain
+//! twice.  Failover is nothing new: [`TopologyHandle::drain_endpoint`]
+//! of a chain head promotes its successor (which, thanks to tail-acks,
+//! holds every acknowledged record) and bumps the epoch, so the
+//! existing fencing machinery turns the old head into a zombie.
 
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -34,6 +45,10 @@ use super::groups::GroupMap;
 pub struct EndpointSlot {
     pub addr: SocketAddr,
     pub live: bool,
+    /// Failure-domain label (rack, AZ, machine).  Replica chains never
+    /// place two members in the same domain, so one domain loss costs
+    /// at most one chain position per group.
+    pub domain: String,
 }
 
 /// An epoch-numbered group→endpoint assignment.
@@ -48,23 +63,80 @@ pub struct Topology {
     pub assignment: Vec<usize>,
     /// Endpoint slots (stable indices; `live` toggles).
     pub endpoints: Vec<EndpointSlot>,
+    /// `replicas[g]` = the chain of endpoint slots group `g`'s streams
+    /// are replicated across, head first (`replicas[g][0] ==
+    /// assignment[g]`).  A single-element chain is an unreplicated
+    /// group (the pre-ISSUE-10 behaviour).
+    pub replicas: Vec<Vec<usize>>,
+    /// Target chain length for placement and repair (1 = replication
+    /// off).
+    pub replication_factor: usize,
 }
 
 impl Topology {
     /// The static topology every pre-elastic run used: group `g` on
     /// endpoint `g % n`, all endpoints live, epoch 1.
     pub fn new_static(groups: GroupMap, addrs: Vec<SocketAddr>) -> Result<Topology> {
+        Topology::new_replicated(groups, addrs, &[], 1)
+    }
+
+    /// A replicated static topology: group `g`'s chain starts at
+    /// endpoint `g % n` and extends to the next `factor - 1` endpoints
+    /// in distinct failure domains.  `domains` labels the endpoints
+    /// (cycled when shorter than the endpoint list; empty = every
+    /// endpoint is its own domain `d<i>`).
+    pub fn new_replicated(
+        groups: GroupMap,
+        addrs: Vec<SocketAddr>,
+        domains: &[String],
+        factor: usize,
+    ) -> Result<Topology> {
         ensure!(!addrs.is_empty(), "need at least one endpoint");
+        ensure!(
+            (1..=3).contains(&factor),
+            "replication factor {factor} out of range 1..=3"
+        );
         let n = addrs.len();
-        let assignment = (0..groups.n_groups()).map(|g| g % n).collect();
+        let endpoints: Vec<EndpointSlot> = addrs
+            .into_iter()
+            .enumerate()
+            .map(|(i, addr)| EndpointSlot {
+                addr,
+                live: true,
+                domain: if domains.is_empty() {
+                    format!("d{i}")
+                } else {
+                    domains[i % domains.len()].clone()
+                },
+            })
+            .collect();
+        let assignment: Vec<usize> = (0..groups.n_groups()).map(|g| g % n).collect();
+        let replicas: Vec<Vec<usize>> = assignment
+            .iter()
+            .map(|&head| {
+                let mut chain = vec![head];
+                // walk the ring from the head; only distinct failure
+                // domains extend the chain
+                for off in 1..n {
+                    if chain.len() >= factor {
+                        break;
+                    }
+                    let e = (head + off) % n;
+                    if chain.iter().any(|&c| endpoints[c].domain == endpoints[e].domain) {
+                        continue;
+                    }
+                    chain.push(e);
+                }
+                chain
+            })
+            .collect();
         let topo = Topology {
             epoch: 1,
             groups,
             assignment,
-            endpoints: addrs
-                .into_iter()
-                .map(|addr| EndpointSlot { addr, live: true })
-                .collect(),
+            endpoints,
+            replicas,
+            replication_factor: factor,
         };
         topo.validate()?;
         Ok(topo)
@@ -107,8 +179,28 @@ impl Topology {
             .collect()
     }
 
+    /// The replica chain of a group, head first.
+    pub fn replica_chain(&self, group: usize) -> Result<&[usize]> {
+        ensure!(
+            group < self.replicas.len(),
+            "group {group} out of range 0..{}",
+            self.replicas.len()
+        );
+        Ok(&self.replicas[group])
+    }
+
+    /// The chain successor of endpoint `e` for `group` (`None` when `e`
+    /// is the tail or not in the chain).
+    pub fn successor_in_chain(&self, group: usize, e: usize) -> Option<usize> {
+        let chain = self.replicas.get(group)?;
+        let pos = chain.iter().position(|&m| m == e)?;
+        chain.get(pos + 1).copied()
+    }
+
     /// The core invariant: every group is assigned to exactly one
-    /// endpoint slot that exists and is live.
+    /// endpoint slot that exists and is live, and its replica chain is
+    /// headed by that slot, visits only live endpoints, and never
+    /// repeats an endpoint or a failure domain.
     pub fn validate(&self) -> Result<()> {
         ensure!(
             self.assignment.len() == self.groups.n_groups(),
@@ -125,6 +217,43 @@ impl Topology {
                 self.endpoints[e].live,
                 "group {g} assigned to dead endpoint {e}"
             );
+        }
+        ensure!(
+            self.replicas.len() == self.assignment.len(),
+            "replica chains cover {} groups, topology has {}",
+            self.replicas.len(),
+            self.assignment.len()
+        );
+        for (g, chain) in self.replicas.iter().enumerate() {
+            ensure!(!chain.is_empty(), "group {g} has an empty replica chain");
+            ensure!(
+                chain[0] == self.assignment[g],
+                "group {g}: chain head {} != assigned endpoint {}",
+                chain[0],
+                self.assignment[g]
+            );
+            ensure!(
+                chain.len() <= 3,
+                "group {g}: replica chain longer than 3"
+            );
+            for (i, &e) in chain.iter().enumerate() {
+                ensure!(
+                    e < self.endpoints.len(),
+                    "group {g}: missing endpoint {e} in chain"
+                );
+                ensure!(
+                    self.endpoints[e].live,
+                    "group {g}: dead endpoint {e} in chain"
+                );
+                for &f in &chain[..i] {
+                    ensure!(f != e, "group {g}: endpoint {e} twice in chain");
+                    ensure!(
+                        self.endpoints[f].domain != self.endpoints[e].domain,
+                        "group {g}: chain co-located in failure domain '{}'",
+                        self.endpoints[e].domain
+                    );
+                }
+            }
         }
         ensure!(
             !self.live_endpoints().is_empty(),
@@ -180,6 +309,19 @@ impl TopologyHandle {
         Ok(TopologyHandle::new(Topology::new_static(groups, addrs)?))
     }
 
+    /// Convenience: a chain-replicated topology (see
+    /// [`Topology::new_replicated`]).
+    pub fn new_replicated(
+        groups: GroupMap,
+        addrs: Vec<SocketAddr>,
+        domains: &[String],
+        factor: usize,
+    ) -> Result<TopologyHandle> {
+        Ok(TopologyHandle::new(Topology::new_replicated(
+            groups, addrs, domains, factor,
+        )?))
+    }
+
     /// Current epoch (one atomic load; no lock).
     pub fn epoch(&self) -> u64 {
         self.epoch.load(Ordering::Acquire)
@@ -190,10 +332,18 @@ impl TopologyHandle {
         self.inner.read().unwrap().clone()
     }
 
-    /// Where a group writes right now: `(endpoint slot, epoch)`.
+    /// Where a group writes right now: `(endpoint slot, epoch)`.  With
+    /// replication this is the chain head — the only member a writer
+    /// ever talks to.
     pub fn route(&self, group: usize) -> Result<(usize, u64)> {
         let t = self.inner.read().unwrap();
         Ok((t.endpoint_of_group(group)?, t.epoch))
+    }
+
+    /// A group's replica chain right now: `(chain, epoch)`.
+    pub fn chain(&self, group: usize) -> Result<(Vec<usize>, u64)> {
+        let t = self.inner.read().unwrap();
+        Ok((t.replica_chain(group)?.to_vec(), t.epoch))
     }
 
     /// Address of an endpoint slot (the TCP dialer's resolver).
@@ -221,9 +371,26 @@ impl TopologyHandle {
 
     /// Add an endpoint slot without moving any group onto it yet.
     /// Bumps the epoch (the slot becomes routable for future moves).
+    /// The slot gets its own fresh failure domain `d<index>`; use
+    /// [`TopologyHandle::add_endpoint_in_domain`] to co-locate.
     pub fn add_endpoint(&self, addr: SocketAddr) -> Result<usize> {
         self.mutate(|t| {
-            t.endpoints.push(EndpointSlot { addr, live: true });
+            let domain = format!("d{}", t.endpoints.len());
+            t.endpoints.push(EndpointSlot { addr, live: true, domain });
+            Ok(t.endpoints.len() - 1)
+        })
+    }
+
+    /// [`TopologyHandle::add_endpoint`] with an explicit failure-domain
+    /// label (chains will refuse to visit the domain twice).
+    pub fn add_endpoint_in_domain(
+        &self,
+        addr: SocketAddr,
+        domain: impl Into<String>,
+    ) -> Result<usize> {
+        let domain = domain.into();
+        self.mutate(|t| {
+            t.endpoints.push(EndpointSlot { addr, live: true, domain });
             Ok(t.endpoints.len() - 1)
         })
     }
@@ -234,7 +401,7 @@ impl TopologyHandle {
         self.mutate(|t| {
             for &(g, e) in moves {
                 ensure!(g < t.assignment.len(), "no group {g}");
-                t.assignment[g] = e;
+                set_head_in_place(t, g, e);
             }
             Ok(())
         })?;
@@ -246,7 +413,8 @@ impl TopologyHandle {
     /// Returns `(new slot index, new epoch)`.
     pub fn scale_out(&self, addr: SocketAddr) -> Result<(usize, u64)> {
         let slot = self.mutate(|t| {
-            t.endpoints.push(EndpointSlot { addr, live: true });
+            let domain = format!("d{}", t.endpoints.len());
+            t.endpoints.push(EndpointSlot { addr, live: true, domain });
             let slot = t.endpoints.len() - 1;
             rebalance_in_place(t);
             Ok(slot)
@@ -254,26 +422,91 @@ impl TopologyHandle {
         Ok((slot, self.epoch()))
     }
 
-    /// Scale-in / failure: mark a slot not-live and move its groups to
-    /// the least-loaded surviving endpoints.  The slot keeps its index;
-    /// its server (if still up) stays drainable by readers.  Returns
-    /// the new epoch.
+    /// Scale-in / failure: mark a slot not-live, strip it from every
+    /// replica chain, and re-route its groups.  A group whose chain
+    /// survives the loss is **promoted onto its successor** — thanks to
+    /// tail-acks the successor holds every acknowledged record, so this
+    /// epoch bump *is* chain-replication failover.  A group whose chain
+    /// is wiped out falls back to the least-loaded survivor (the
+    /// pre-replication drain behaviour).  The slot keeps its index; its
+    /// server (if still up) stays drainable by readers.  Returns the
+    /// new epoch.
     pub fn drain_endpoint(&self, e: usize) -> Result<u64> {
         self.mutate(|t| {
             ensure!(e < t.endpoints.len(), "no endpoint slot {e}");
             ensure!(t.endpoints[e].live, "endpoint {e} already drained");
             t.endpoints[e].live = false;
             for g in 0..t.assignment.len() {
+                t.replicas[g].retain(|&m| m != e);
                 if t.assignment[g] == e {
-                    let target = t
-                        .least_loaded_live(None)
-                        .ok_or_else(|| anyhow::anyhow!("no live endpoint to drain {e} into"))?;
-                    t.assignment[g] = target;
+                    match t.replicas[g].first().copied() {
+                        Some(successor) => t.assignment[g] = successor,
+                        None => {
+                            let target = t.least_loaded_live(None).ok_or_else(|| {
+                                anyhow::anyhow!("no live endpoint to drain {e} into")
+                            })?;
+                            t.assignment[g] = target;
+                            t.replicas[g] = vec![target];
+                        }
+                    }
                 }
             }
             Ok(())
         })?;
         Ok(self.epoch())
+    }
+
+    /// Top every short replica chain back up to the topology's
+    /// replication factor with live endpoints from unused failure
+    /// domains (least loaded first, lowest index on ties).  Returns the
+    /// new epoch if anything changed; a no-op (chains full, or no
+    /// compatible endpoint) leaves the epoch untouched.
+    pub fn repair_chains(&self) -> Result<Option<u64>> {
+        let mut t = self.inner.write().unwrap();
+        let before = t.clone();
+        let factor = t.replication_factor.max(1);
+        let mut changed = false;
+        for g in 0..t.replicas.len() {
+            while t.replicas[g].len() < factor {
+                let mut best: Option<(usize, usize)> = None; // (load, idx)
+                for e in 0..t.endpoints.len() {
+                    if !t.endpoints[e].live || t.replicas[g].contains(&e) {
+                        continue;
+                    }
+                    if t.replicas[g]
+                        .iter()
+                        .any(|&c| t.endpoints[c].domain == t.endpoints[e].domain)
+                    {
+                        continue;
+                    }
+                    let load = t.groups_of_endpoint(e).len();
+                    let better = match best {
+                        None => true,
+                        Some((bl, bi)) => load < bl || (load == bl && e < bi),
+                    };
+                    if better {
+                        best = Some((load, e));
+                    }
+                }
+                match best {
+                    Some((_, e)) => {
+                        t.replicas[g].push(e);
+                        changed = true;
+                    }
+                    None => break, // no compatible endpoint: stay short
+                }
+            }
+        }
+        if !changed {
+            return Ok(None);
+        }
+        if let Err(e) = t.validate() {
+            *t = before;
+            return Err(e);
+        }
+        t.epoch += 1;
+        self.epoch.store(t.epoch, Ordering::Release);
+        Ok(Some(t.epoch))
     }
 
     /// Even out group load across live endpoints (at most one group of
@@ -316,9 +549,40 @@ fn rebalance_in_place(t: &mut Topology) -> bool {
         }
         // move the lowest-numbered group off the most-loaded endpoint
         let g = t.groups_of_endpoint(max_e)[0];
-        t.assignment[g] = min_e;
+        set_head_in_place(t, g, min_e);
         moved = true;
     }
+}
+
+/// Re-head group `g`'s chain at endpoint `e`: the chain becomes `[e]`
+/// followed by as many previous members as stay live, distinct and
+/// domain-compatible, capped at the replication factor.  The previous
+/// head is eligible to stay on as a follower — it already holds the
+/// group's data, which is exactly what a replica is for.  Chains
+/// shortened by a domain conflict are topped back up by
+/// [`TopologyHandle::repair_chains`].
+fn set_head_in_place(t: &mut Topology, g: usize, e: usize) {
+    let old = std::mem::take(&mut t.replicas[g]);
+    let cap = t.replication_factor.max(1);
+    let mut chain = vec![e];
+    for &m in &old {
+        if chain.len() >= cap {
+            break;
+        }
+        if m == e || !t.endpoints.get(m).map(|s| s.live).unwrap_or(false) {
+            continue;
+        }
+        if e < t.endpoints.len()
+            && chain
+                .iter()
+                .any(|&c| t.endpoints[c].domain == t.endpoints[m].domain)
+        {
+            continue;
+        }
+        chain.push(m);
+    }
+    t.replicas[g] = chain;
+    t.assignment[g] = e;
 }
 
 #[cfg(test)]
@@ -403,6 +667,78 @@ mod tests {
         let e = h.assign(&[(1, 0)]).unwrap();
         assert_eq!(h.route(1).unwrap(), (0, e));
         assert!(h.route(5).is_err());
+    }
+
+    fn rtopo(ranks: usize, gsize: usize, n_eps: usize, factor: usize) -> TopologyHandle {
+        let groups = GroupMap::new(ranks, gsize, n_eps).unwrap();
+        let addrs = (0..n_eps).map(|i| addr(7200 + i as u16)).collect();
+        TopologyHandle::new_replicated(groups, addrs, &[], factor).unwrap()
+    }
+
+    #[test]
+    fn replicated_chains_are_headed_distinct_and_domain_spread() {
+        let h = rtopo(64, 16, 3, 2); // 4 groups, 3 endpoints, factor 2
+        let t = h.snapshot();
+        t.validate().unwrap();
+        for g in 0..4 {
+            let chain = t.replica_chain(g).unwrap();
+            assert_eq!(chain.len(), 2, "group {g}");
+            assert_eq!(chain[0], t.assignment[g]);
+            assert_eq!(chain[1], (chain[0] + 1) % 3);
+            assert_eq!(t.successor_in_chain(g, chain[0]), Some(chain[1]));
+            assert_eq!(t.successor_in_chain(g, chain[1]), None);
+        }
+    }
+
+    #[test]
+    fn colocated_domains_shorten_chains_instead_of_violating() {
+        // two endpoints share domain "a": a factor-3 chain can only
+        // ever reach length 2
+        let groups = GroupMap::new(16, 16, 3).unwrap();
+        let addrs = (0..3).map(|i| addr(7300 + i as u16)).collect();
+        let domains = vec!["a".to_string(), "a".to_string(), "b".to_string()];
+        let h = TopologyHandle::new_replicated(groups, addrs, &domains, 3).unwrap();
+        let t = h.snapshot();
+        assert_eq!(t.replica_chain(0).unwrap(), &[0, 2], "e1 shares e0's domain");
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn drain_of_chain_head_promotes_the_successor() {
+        let h = rtopo(32, 16, 3, 2); // group 0 chain [0,1], group 1 chain [1,2]
+        let epoch = h.drain_endpoint(0).unwrap();
+        assert_eq!(epoch, 2);
+        let t = h.snapshot();
+        // group 0: head 0 died → successor 1 promoted, chain shrank
+        assert_eq!(t.assignment[0], 1);
+        assert_eq!(t.replica_chain(0).unwrap(), &[1]);
+        // group 1: 0 was not in its chain → untouched
+        assert_eq!(t.replica_chain(1).unwrap(), &[1, 2]);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn repair_tops_chains_back_up_in_fresh_domains() {
+        let h = rtopo(32, 16, 3, 2);
+        h.drain_endpoint(0).unwrap();
+        let epoch = h.repair_chains().unwrap().unwrap();
+        assert_eq!(epoch, 3);
+        let t = h.snapshot();
+        assert_eq!(t.replica_chain(0).unwrap(), &[1, 2]);
+        t.validate().unwrap();
+        // idempotent: full chains → no-op, epoch untouched
+        assert!(h.repair_chains().unwrap().is_none());
+        assert_eq!(h.epoch(), 3);
+    }
+
+    #[test]
+    fn migrating_a_head_keeps_the_old_head_as_follower() {
+        let h = rtopo(16, 16, 2, 2); // one group, chain [0,1]
+        h.assign(&[(0, 1)]).unwrap();
+        let t = h.snapshot();
+        // the old head already holds the data — it stays as replica
+        assert_eq!(t.replica_chain(0).unwrap(), &[1, 0]);
+        t.validate().unwrap();
     }
 
     #[test]

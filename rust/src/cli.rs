@@ -241,6 +241,19 @@ pub fn apply_overrides(
     if let Some(v) = args.get_parsed::<u64>("qos-reconnects")? {
         cfg.qos_reconnects = v;
     }
+    if let Some(v) = args.get_parsed::<usize>("replication-factor")? {
+        cfg.replication_factor = v;
+    }
+    if let Some(v) = args.get("replication-domains") {
+        cfg.replication_domains = v
+            .split(',')
+            .map(|p| p.trim().to_string())
+            .filter(|p| !p.is_empty())
+            .collect();
+    }
+    if let Some(v) = args.get("replication-ack") {
+        cfg.replication_ack = crate::endpoint::ReplAck::parse(v)?;
+    }
     if let Some(v) = args.get_parsed::<u64>("adapt-sweep-ms")? {
         cfg.adapt_sweep_ms = v;
     }
@@ -327,6 +340,13 @@ SUBCOMMANDS:
                                      (0 = static topology, the default)
                 --qos-flush-p95-us N --qos-queue-depth N
                 --qos-reconnects N   saturation / death thresholds
+                --replication-factor N  chain-replicate every stream
+                                     through N endpoints (1 = off, max 3;
+                                     needs --rebalance-ms for failover)
+                --replication-domains A,B,..  failure-domain labels cycled
+                                     over endpoint slots ([replication])
+                --replication-ack M  tail (chain-durable acks, default)
+                                     or head (best-effort forwarding)
                 --persist-dir DIR    durable endpoints: per-endpoint WALs
                                      under DIR/ep<i> ([endpoint] wal_dir)
                 --wal-fsync P --wal-segment-bytes N --retention
@@ -449,6 +469,28 @@ mod tests {
         assert_eq!(cfg.io_shards, 2);
         assert_eq!(cfg.read_ring_bytes, 8192);
         assert_eq!(cfg.max_conns_per_shard, 256);
+    }
+
+    #[test]
+    fn replication_flags_apply() {
+        let mut cfg = crate::config::WorkflowConfig::default();
+        let a = Args::parse(&argv(&[
+            "--replication-factor",
+            "2",
+            "--replication-domains",
+            "rack1, rack2,rack3",
+            "--replication-ack",
+            "head",
+        ]))
+        .unwrap();
+        apply_overrides(&mut cfg, &a).unwrap();
+        assert_eq!(cfg.replication_factor, 2);
+        assert_eq!(cfg.replication_domains, vec!["rack1", "rack2", "rack3"]);
+        assert_eq!(cfg.replication_ack, crate::endpoint::ReplAck::Head);
+        // unknown ack mode surfaces as an error
+        let bad = Args::parse(&argv(&["--replication-ack", "quorum"])).unwrap();
+        let mut cfg = crate::config::WorkflowConfig::default();
+        assert!(apply_overrides(&mut cfg, &bad).is_err());
     }
 
     #[test]

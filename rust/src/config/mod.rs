@@ -12,7 +12,7 @@ pub use toml::{parse, ConfigMap, TomlValue};
 use anyhow::{Context, Result};
 
 use crate::broker::StagesConfig;
-use crate::endpoint::FsyncPolicy;
+use crate::endpoint::{FsyncPolicy, ReplAck};
 use crate::record::{CodecKind, Encoding};
 
 /// How the simulation emits its per-interval output (paper §4.2 modes).
@@ -173,6 +173,21 @@ pub struct WorkflowConfig {
     /// endpoint is presumed dead and drained (0 = signal disabled).
     pub qos_reconnects: u64,
 
+    // --- chain replication (ISSUE 10) ---
+    /// Replica-chain length per group (1 = replication off, the
+    /// pre-ISSUE-10 behaviour; max 3).  Every stream is chain-written
+    /// through this many endpoints in distinct failure domains; losing
+    /// a whole machine loses no acked record.
+    pub replication_factor: usize,
+    /// Failure-domain labels cycled over the endpoint slots (empty =
+    /// every endpoint is its own domain).  Chains never visit the same
+    /// domain twice.
+    pub replication_domains: Vec<String>,
+    /// Ack durability: `tail` bounces a write (REPL error, writer
+    /// retries) until the whole chain stored it; `head` acks after the
+    /// local store and forwards best-effort.
+    pub replication_ack: ReplAck,
+
     // --- adaptive reduction (ISSUE 8) ---
     /// Adaptation controller sweep cadence in ms (0 = controller
     /// disabled: every stream stays pinned to the configured `[stages]`
@@ -249,6 +264,9 @@ impl Default for WorkflowConfig {
             qos_flush_p95_us: 250_000,
             qos_queue_depth: 48,
             qos_reconnects: 3,
+            replication_factor: 1,
+            replication_domains: Vec::new(),
+            replication_ack: ReplAck::Tail,
             adapt_sweep_ms: 0,
             adapt_target_p95_us: 50_000,
             adapt_queue_hi: 16,
@@ -440,6 +458,15 @@ impl WorkflowConfig {
         if let Some(v) = map.get_u64("elastic.qos_reconnects")? {
             cfg.qos_reconnects = v;
         }
+        if let Some(v) = map.get_usize("replication.factor")? {
+            cfg.replication_factor = v;
+        }
+        if let Some(v) = map.get_str_list("replication.domains")? {
+            cfg.replication_domains = v;
+        }
+        if let Some(v) = map.get_str("replication.ack")? {
+            cfg.replication_ack = ReplAck::parse(&v)?;
+        }
         if let Some(v) = map.get_u64("adapt.sweep_ms")? {
             cfg.adapt_sweep_ms = v;
         }
@@ -508,6 +535,24 @@ impl WorkflowConfig {
             self.obs_snapshot_ms == 0 || !self.obs_dir.is_empty(),
             "obs.snapshot_ms requires obs.dir (--obs-dir): snapshots need \
              somewhere to land"
+        );
+        anyhow::ensure!(
+            (1..=3).contains(&self.replication_factor),
+            "replication.factor {} out of range 1..=3",
+            self.replication_factor
+        );
+        anyhow::ensure!(
+            self.replication_factor <= self.endpoint_count(),
+            "replication.factor {} exceeds the endpoint count {}: a chain \
+             cannot visit the same endpoint twice",
+            self.replication_factor,
+            self.endpoint_count()
+        );
+        anyhow::ensure!(
+            self.replication_factor == 1 || self.rebalance_ms > 0,
+            "replication.factor > 1 requires elastic.rebalance_ms > 0: \
+             failover is the rebalancer draining the dead head and \
+             promoting its chain successor"
         );
         self.stages.validate()?;
         self.adapt().validate()?;
@@ -773,6 +818,51 @@ mod tests {
         // snapshots need a directory; an empty ring is meaningless
         assert!(WorkflowConfig::from_toml("[obs]\nsnapshot_ms = 100\n").is_err());
         assert!(WorkflowConfig::from_toml("[obs]\nevents_ring = 0\n").is_err());
+    }
+
+    #[test]
+    fn replication_knobs_parse_and_validate() {
+        let c = WorkflowConfig::default();
+        assert_eq!(c.replication_factor, 1, "replication off by default");
+        assert!(c.replication_domains.is_empty());
+        assert_eq!(c.replication_ack, ReplAck::Tail);
+        let c = WorkflowConfig::from_toml(
+            "[sim]\nranks = 64\n[broker]\ngroup_size = 16\n\
+             [elastic]\nrebalance_ms = 100\n\
+             [replication]\nfactor = 2\ndomains = [\"a\", \"b\", \"c\"]\n\
+             ack = \"head\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.replication_factor, 2);
+        assert_eq!(c.replication_domains, vec!["a", "b", "c"]);
+        assert_eq!(c.replication_ack, ReplAck::Head);
+        // comma-separated string spelling (what the CLI forwards)
+        let c = WorkflowConfig::from_toml(
+            "[sim]\nranks = 32\n[elastic]\nrebalance_ms = 100\n\
+             [replication]\nfactor = 2\ndomains = \"rack1, rack2\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.replication_domains, vec!["rack1", "rack2"]);
+        // factor must fit 1..=3
+        assert!(WorkflowConfig::from_toml("[replication]\nfactor = 0\n").is_err());
+        assert!(WorkflowConfig::from_toml("[replication]\nfactor = 4\n").is_err());
+        // a chain cannot be longer than the endpoint list (16 ranks →
+        // one endpoint by default)
+        assert!(WorkflowConfig::from_toml(
+            "[elastic]\nrebalance_ms = 100\n[replication]\nfactor = 2\n"
+        )
+        .is_err());
+        // replication without the rebalancer has no failover path
+        assert!(WorkflowConfig::from_toml(
+            "[sim]\nranks = 32\n[replication]\nfactor = 2\n"
+        )
+        .is_err());
+        // unknown ack mode is rejected
+        assert!(WorkflowConfig::from_toml(
+            "[sim]\nranks = 32\n[elastic]\nrebalance_ms = 100\n\
+             [replication]\nfactor = 2\nack = \"quorum\"\n"
+        )
+        .is_err());
     }
 
     #[test]

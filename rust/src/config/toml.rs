@@ -78,6 +78,33 @@ impl ConfigMap {
             Some(other) => bail!("{key}: expected bool, got {other:?}"),
         }
     }
+
+    /// String list: either a TOML array of strings or one
+    /// comma-separated string (`"a,b,c"` — the CLI-friendly spelling).
+    pub fn get_str_list(&self, key: &str) -> Result<Option<Vec<String>>> {
+        match self.entries.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Str(s)) => Ok(Some(
+                s.split(',')
+                    .map(|p| p.trim().to_string())
+                    .filter(|p| !p.is_empty())
+                    .collect(),
+            )),
+            Some(TomlValue::Array(items)) => {
+                let mut out = Vec::with_capacity(items.len());
+                for it in items {
+                    match it {
+                        TomlValue::Str(s) => out.push(s.clone()),
+                        other => {
+                            bail!("{key}: expected string elements, got {other:?}")
+                        }
+                    }
+                }
+                Ok(Some(out))
+            }
+            Some(other) => bail!("{key}: expected string list, got {other:?}"),
+        }
+    }
 }
 
 /// Parse TOML-subset text into a flat map.

@@ -17,6 +17,10 @@
 //! * [`poll`] — the minimal readiness poller (raw epoll on
 //!   linux/x86_64, portable tick fallback elsewhere) under the server
 //!   event loop,
+//! * [`replication`] — chain-replication forwarding (ISSUE 10):
+//!   per-stream successor links that relay fenced writes down a
+//!   replica chain, tail-acked so machine loss never drops an acked
+//!   record,
 //! * [`server`] — the TCP RESP2 front-end (ISSUE 7): a sharded,
 //!   readiness-driven event loop ([`ServerConfig::io_shards`] threads,
 //!   each owning its connections) with incremental frame decode over a
@@ -24,10 +28,12 @@
 //!   the store's refcounted payload bytes.
 
 pub mod poll;
+pub mod replication;
 pub mod server;
 pub mod store;
 pub mod wal;
 
+pub use replication::{DialReplicaLink, ReplAck, ReplicaLink, ReplicationMap};
 pub use server::{EndpointServer, ServerConfig, ServerStats};
 pub use store::{Bytes, Entry, EntryId, FencedAdd, HelloReply, Store, StoreConfig};
 pub use wal::{FsyncPolicy, Wal, WalConfig, WalStats};

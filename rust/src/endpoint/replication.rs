@@ -1,0 +1,253 @@
+//! Chain-replication forwarding (ISSUE 10).
+//!
+//! Each stream is chain-replicated across 2–3 endpoints: the
+//! [`crate::broker::Shipper`] writes to the chain *head*, and every
+//! replica forwards fenced mutations to its successor before (or
+//! after, see [`ReplAck`]) acknowledging them.  This module is the
+//! plumbing the [`store`](super::store)/[`server`](super::server) pair
+//! uses to reach "the next endpoint in my chain":
+//!
+//! * [`ReplicaLink`] — one persistent, lazily-dialed connection to a
+//!   successor endpoint.  Implemented over the [`Dialer`]/[`Conn`]
+//!   transport abstraction, so the exact same code drives real TCP
+//!   links in the workflow and in-process [`crate::transport::sim`]
+//!   endpoints in the failover tests.
+//! * [`ReplicationMap`] — the per-endpoint routing table: stream key →
+//!   successor link.  An endpoint can head one chain and sit mid-chain
+//!   in another, so the map is keyed per stream, not per store.
+//!
+//! The forwarded "wire" is the decoded RESP command [`Value`] itself —
+//! the successor's [`server::execute`](super::server) dispatches it
+//! exactly as if a client had sent it, which is what makes chains of
+//! length 3 recurse with no extra protocol: the mid-chain replica's own
+//! `ReplicationMap` forwards onward to the tail.
+//!
+//! Failure semantics: a link failure surfaces as a RESP
+//! `Error("REPL ...")` value.  Under [`ReplAck::Tail`] the head turns
+//! that into a `REPL` error back to the writer, which retries the frame
+//! (the step-watermark dedupe makes the retry exactly-once); under
+//! [`ReplAck::Head`] the head acks after its local store and the
+//! forward is best-effort (the chain is repaired by the rebalancer's
+//! next sweep).
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::transport::{Conn, Dialer, Request};
+use crate::wire::Value;
+
+/// When does a replicated write ack back to the writer?
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ReplAck {
+    /// Ack only after the chain tail has stored the record (zero data
+    /// loss on machine failure: anything acked lives on every replica).
+    #[default]
+    Tail,
+    /// Ack after the head's local store; forwarding is asynchronous
+    /// best-effort (faster, but records acked in the forwarding window
+    /// can be lost with the head's machine).
+    Head,
+}
+
+impl ReplAck {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "tail" => Ok(ReplAck::Tail),
+            "head" => Ok(ReplAck::Head),
+            other => bail!("replication.ack must be 'tail' or 'head', got '{other}'"),
+        }
+    }
+}
+
+impl fmt::Display for ReplAck {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReplAck::Tail => write!(f, "tail"),
+            ReplAck::Head => write!(f, "head"),
+        }
+    }
+}
+
+/// One connection to a successor endpoint in a replica chain.
+///
+/// `forward` never returns `Err`: transport failures are folded into a
+/// RESP `Error("REPL ...")` value so the caller can treat "successor
+/// rejected the write" and "successor unreachable" uniformly (both
+/// mean the chain is broken past this endpoint).
+pub trait ReplicaLink: Send + Sync {
+    /// Ship one decoded command to the successor and return its reply.
+    fn forward(&self, cmd: &Value) -> Value;
+
+    /// Topology endpoint slot this link points at (for logs/tests).
+    fn target(&self) -> usize;
+}
+
+/// Decoded command array → owned [`Request`] (the transport's unit).
+fn value_to_request(cmd: &Value) -> Result<Request> {
+    let Value::Array(parts) = cmd else {
+        bail!("replication: command must be a RESP array, got {cmd}");
+    };
+    let mut it = parts.iter();
+    let Some(Value::Bulk(name)) = it.next() else {
+        bail!("replication: empty or non-bulk command array");
+    };
+    let mut req = Request::new(name.clone());
+    for p in it {
+        match p {
+            Value::Bulk(b) => req = req.arg(b.clone()),
+            other => bail!("replication: non-bulk command argument {other}"),
+        }
+    }
+    Ok(req)
+}
+
+/// [`ReplicaLink`] over the transport [`Dialer`]: dials lazily on first
+/// forward, keeps the connection cached, and retries exactly once on a
+/// fresh dial when an exchange fails (the successor may have restarted;
+/// the fenced protocol dedupes the re-sent command).
+pub struct DialReplicaLink {
+    dialer: Arc<dyn Dialer>,
+    endpoint: usize,
+    conn: Mutex<Option<Box<dyn Conn>>>,
+}
+
+impl DialReplicaLink {
+    pub fn new(dialer: Arc<dyn Dialer>, endpoint: usize) -> Self {
+        DialReplicaLink {
+            dialer,
+            endpoint,
+            conn: Mutex::new(None),
+        }
+    }
+
+    fn try_forward(&self, req: &Request) -> Result<Value> {
+        let mut guard = self.conn.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(self.dialer.dial(self.endpoint)?);
+        }
+        let conn = guard.as_mut().unwrap();
+        match conn.exchange(std::slice::from_ref(req)) {
+            Ok(mut replies) if replies.len() == 1 => Ok(replies.pop().unwrap()),
+            Ok(replies) => {
+                *guard = None;
+                bail!("replica returned {} replies to 1 command", replies.len())
+            }
+            Err(e) => {
+                // Drop the broken connection; the retry dials afresh.
+                *guard = None;
+                Err(e)
+            }
+        }
+    }
+}
+
+impl ReplicaLink for DialReplicaLink {
+    fn forward(&self, cmd: &Value) -> Value {
+        let req = match value_to_request(cmd) {
+            Ok(r) => r,
+            Err(e) => return Value::Error(format!("REPL bad forward command: {e:#}")),
+        };
+        match self.try_forward(&req).or_else(|_| self.try_forward(&req)) {
+            Ok(v) => v,
+            Err(e) => Value::Error(format!(
+                "REPL successor endpoint {} unreachable: {e:#}",
+                self.endpoint
+            )),
+        }
+    }
+
+    fn target(&self) -> usize {
+        self.endpoint
+    }
+}
+
+/// Per-endpoint replication routing: stream key → link to the chain
+/// successor.  Streams this endpoint *tails* (or that are unreplicated)
+/// simply have no entry.  Swapped wholesale on every topology epoch
+/// bump via [`super::Store::set_replication`] — links for unchanged
+/// successors can be reused across maps by the wiring layer.
+pub struct ReplicationMap {
+    ack: ReplAck,
+    links: HashMap<String, Arc<dyn ReplicaLink>>,
+}
+
+impl ReplicationMap {
+    pub fn new(ack: ReplAck) -> Self {
+        ReplicationMap {
+            ack,
+            links: HashMap::new(),
+        }
+    }
+
+    pub fn ack(&self) -> ReplAck {
+        self.ack
+    }
+
+    /// Route `key`'s forwards to `link`.
+    pub fn insert(&mut self, key: impl Into<String>, link: Arc<dyn ReplicaLink>) {
+        self.links.insert(key.into(), link);
+    }
+
+    /// The successor link for `key`, if this endpoint is not the tail.
+    pub fn link_for(&self, key: &str) -> Option<&Arc<dyn ReplicaLink>> {
+        self.links.get(key)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.links.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ack_parses_both_modes() {
+        assert_eq!(ReplAck::parse("tail").unwrap(), ReplAck::Tail);
+        assert_eq!(ReplAck::parse("HEAD").unwrap(), ReplAck::Head);
+        assert!(ReplAck::parse("quorum").is_err());
+        assert_eq!(ReplAck::Tail.to_string(), "tail");
+    }
+
+    #[test]
+    fn value_round_trips_to_request() {
+        let cmd = Value::Array(vec![
+            Value::Bulk(b"XADDF".to_vec()),
+            Value::Bulk(b"k".to_vec()),
+            Value::Bulk(b"3".to_vec()),
+        ]);
+        let req = value_to_request(&cmd).unwrap();
+        assert_eq!(req.len(), 3);
+        assert_eq!(req.part(0), Some(&b"XADDF"[..]));
+        assert_eq!(req.to_value(), cmd);
+        assert!(value_to_request(&Value::Int(1)).is_err());
+    }
+
+    #[test]
+    fn map_routes_per_stream() {
+        struct Fake(usize);
+        impl ReplicaLink for Fake {
+            fn forward(&self, _cmd: &Value) -> Value {
+                Value::Int(self.0 as i64)
+            }
+            fn target(&self) -> usize {
+                self.0
+            }
+        }
+        let mut map = ReplicationMap::new(ReplAck::Tail);
+        map.insert("u/0", Arc::new(Fake(1)));
+        map.insert("u/1", Arc::new(Fake(2)));
+        assert_eq!(map.link_for("u/0").unwrap().target(), 1);
+        assert_eq!(map.link_for("u/1").unwrap().target(), 2);
+        assert!(map.link_for("u/2").is_none());
+        assert_eq!(map.len(), 2);
+    }
+}

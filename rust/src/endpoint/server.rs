@@ -916,7 +916,14 @@ pub fn execute(store: &Store, cmd: &Value) -> (Value, bool) {
 
 fn error_value(e: anyhow::Error) -> Value {
     let msg = e.to_string();
-    let msg = if msg.starts_with("ERR") || msg.starts_with("OOM") || msg.starts_with("STALE") {
+    // Typed error classes the shipping protocol dispatches on: OOM
+    // (backpressure), STALE (fenced-out writer), REPL (chain successor
+    // unreachable under tail-ack, ISSUE 10) pass through unprefixed.
+    let msg = if msg.starts_with("ERR")
+        || msg.starts_with("OOM")
+        || msg.starts_with("STALE")
+        || msg.starts_with("REPL")
+    {
         msg
     } else {
         format!("ERR {msg}")
@@ -1019,6 +1026,10 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
                 .parse()
                 .context("ERR value is not an integer")?;
             let h = store.hello(&key, epoch)?;
+            // Chain replication (ISSUE 10): the fence raise must reach
+            // every replica, or a promoted successor would accept the
+            // old epoch after failover.
+            store.forward_to_successor(&key, cmd, true)?;
             Ok(Reply(Value::Array(vec![
                 Value::Bulk(h.last_id.to_string().into_bytes()),
                 match h.last_step {
@@ -1029,7 +1040,12 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
             ])))
         }
         b"XADDF" => {
-            // XADDF key epoch step [FORCE] field value [field value ...]
+            // XADDF key epoch step [FORCE] [ID ms-seq] field value ...
+            //
+            // `ID` is the chain-replication form (ISSUE 10): a replica
+            // stores the exact id its predecessor assigned, keeping
+            // every copy of the record byte-identical down the chain.
+            // Writers never send it; only forwarding replicas do.
             anyhow::ensure!(
                 args.len() >= 5,
                 "ERR wrong number of arguments for 'xaddf'"
@@ -1053,6 +1069,18 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
                     rest = &rest[1..];
                 }
             }
+            let mut explicit_id: Option<EntryId> = None;
+            if rest
+                .first()
+                .and_then(|v| v.as_bytes())
+                .map(|b| b.eq_ignore_ascii_case(b"ID"))
+                .unwrap_or(false)
+            {
+                anyhow::ensure!(rest.len() >= 2, "ERR XADDF ID needs a stream ID");
+                explicit_id =
+                    Some(EntryId::parse(&s(&rest[1])?).context("ERR invalid stream ID")?);
+                rest = &rest[2..];
+            }
             anyhow::ensure!(
                 !rest.is_empty() && rest.len() % 2 == 0,
                 "ERR wrong number of arguments for 'xaddf'"
@@ -1064,11 +1092,31 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
                     pair[1].as_bytes().context("ERR field value")?.to_vec(),
                 ));
             }
-            match store.xadd_fenced(&key, epoch, step, force, fields)? {
+            match store.xadd_fenced_at(&key, epoch, step, force, explicit_id, fields)? {
                 FencedAdd::Added(id) => {
+                    // Relay down the chain before replying: under
+                    // tail-ack the reply IS the durability promise.
+                    // The head stamps its assigned id into the relayed
+                    // command; mid-chain replicas (which already got an
+                    // `ID` token) forward verbatim.
+                    if explicit_id.is_some() {
+                        store.forward_to_successor(&key, cmd, true)?;
+                    } else {
+                        let mut fwd = cmd.as_array().unwrap().to_vec();
+                        let at = if force { 5 } else { 4 };
+                        fwd.insert(at, Value::Bulk(id.to_string().into_bytes()));
+                        fwd.insert(at, Value::Bulk(b"ID".to_vec()));
+                        store.forward_to_successor(&key, &Value::Array(fwd), true)?;
+                    }
                     Ok(Reply(Value::Bulk(id.to_string().into_bytes())))
                 }
-                FencedAdd::Duplicate => Ok(Reply(Value::Simple("DUP".into()))),
+                FencedAdd::Duplicate => {
+                    // Still relayed: after a failed forward the writer
+                    // retries the whole frame — the head dedupes, but
+                    // the successor may be the one that missed it.
+                    store.forward_to_successor(&key, cmd, true)?;
+                    Ok(Reply(Value::Simple("DUP".into())))
+                }
             }
         }
         b"XHANDOFF" => {
@@ -1086,6 +1134,9 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
                 None => None,
             };
             let id = store.xhandoff(&key, epoch, dest)?;
+            // Replicate the tombstone: a promoted successor must show
+            // the same closed segment a reader saw on the head.
+            store.forward_to_successor(&key, cmd, true)?;
             Ok(Reply(Value::Bulk(id.to_string().into_bytes())))
         }
         b"XLASTSTEP" => {
@@ -1121,6 +1172,10 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
                     EntryId::parse(&s(&args[1])?).context("ERR invalid stream ID")?;
                 store.xackpos(&key, pos)?
             };
+            // Gossip the cursor down the chain (best-effort): replica
+            // ids are byte-identical, so a promoted successor resumes
+            // consumer groups from the same positions.
+            store.forward_to_successor(&key, cmd, false)?;
             Ok(Reply(Value::Bulk(acked.to_string().into_bytes())))
         }
         b"XRANGE" => {

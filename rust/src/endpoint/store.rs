@@ -386,6 +386,15 @@ pub struct Store {
     /// [`Store::metrics_text`] (set once when an in-process workflow
     /// attaches; standalone endpoints serve store+server figures only).
     registry: std::sync::OnceLock<std::sync::Arc<crate::metrics::Registry>>,
+    /// Chain-replication routing (ISSUE 10): stream key → successor
+    /// link.  `None`/empty = unreplicated (or this endpoint tails every
+    /// chain it serves).  Swapped wholesale on topology epoch bumps.
+    replication: RwLock<Option<std::sync::Arc<super::replication::ReplicationMap>>>,
+    /// Fenced mutations successfully relayed to a chain successor.
+    repl_forwarded: AtomicU64,
+    /// Forwards that failed (successor down or rejecting) — under
+    /// tail-ack these bounce the write back to the shipper as `REPL`.
+    repl_forward_errors: AtomicU64,
 }
 
 impl Store {
@@ -418,6 +427,9 @@ impl Store {
             srv_stats: std::sync::OnceLock::new(),
             hop_store_us: crate::metrics::Histogram::new(),
             registry: std::sync::OnceLock::new(),
+            replication: RwLock::new(None),
+            repl_forwarded: AtomicU64::new(0),
+            repl_forward_errors: AtomicU64::new(0),
         };
         if let Some(wal_cfg) = store.cfg.wal.clone() {
             let (wal, replay) = Wal::open(wal_cfg).context("opening endpoint wal")?;
@@ -572,6 +584,27 @@ impl Store {
         force: bool,
         fields: Vec<(Vec<u8>, Vec<u8>)>,
     ) -> Result<FencedAdd> {
+        self.xadd_fenced_at(key, epoch, step, force, None, fields)
+    }
+
+    /// [`Store::xadd_fenced`] with an optional *explicit* entry id —
+    /// the chain-replication form (ISSUE 10).  A replica stores the
+    /// exact id its predecessor assigned, so every copy of a record is
+    /// byte-identical across the chain and consumer-group cursors
+    /// remain valid verbatim after a failover.  An explicit id at or
+    /// below the stream's top is answered [`FencedAdd::Duplicate`]
+    /// (ids are chain-assigned monotonically, so at-or-below means
+    /// this replica already holds the record — re-forwards after a
+    /// link retry dedupe instead of erroring).
+    pub fn xadd_fenced_at(
+        &self,
+        key: &str,
+        epoch: u64,
+        step: u64,
+        force: bool,
+        id: Option<EntryId>,
+        fields: Vec<(Vec<u8>, Vec<u8>)>,
+    ) -> Result<FencedAdd> {
         if self.over_budget() {
             self.evict_global();
         }
@@ -589,6 +622,11 @@ impl Store {
                 );
             }
             s.writer_epoch = epoch;
+            if let Some(eid) = id {
+                if eid <= s.last_id {
+                    return Ok(FencedAdd::Duplicate);
+                }
+            }
             if !force && s.last_step != u64::MAX && step <= s.last_step {
                 return Ok(FencedAdd::Duplicate);
             }
@@ -602,7 +640,7 @@ impl Store {
             } else {
                 s.last_step
             };
-            let id = self.append_with_step(shard, key, s, None, fields, Some(new_step))?;
+            let id = self.append_with_step(shard, key, s, id, fields, Some(new_step))?;
             Ok(FencedAdd::Added(id))
         })?;
         if let (FencedAdd::Added(_), Some(t)) = (&res, traced) {
@@ -1173,7 +1211,8 @@ impl Store {
              records_corrupt:{}\r\n\
              # Persistence\r\nwal_enabled:{}\r\nretention:{}\r\nwal_bytes:{}\r\nwal_segments:{}\r\n\
              wal_fsync:{}\r\nlast_fsync_us:{}\r\nreplayed_entries:{}\r\ntrimmed_unread:{}\r\n\
-             evicted_entries:{}\r\ngc_segments:{}\r\n",
+             evicted_entries:{}\r\ngc_segments:{}\r\n\
+             # Replication\r\nrepl_streams:{}\r\nrepl_forwarded:{}\r\nrepl_forward_errors:{}\r\n",
             stat(|s| s.connections()),
             stat(|s| s.conns_total()),
             stat(|s| s.accept_errors()),
@@ -1201,6 +1240,9 @@ impl Store {
             self.trimmed_unread.load(Ordering::Relaxed),
             self.evicted_entries.load(Ordering::Relaxed),
             wal.gc_segments,
+            self.replication_map().map_or(0, |m| m.len()),
+            self.repl_forwarded.load(Ordering::Relaxed),
+            self.repl_forward_errors.load(Ordering::Relaxed),
         )
     }
 
@@ -1266,6 +1308,75 @@ impl Store {
         self.hop_store_us.count()
     }
 
+    /// Install (or clear) this endpoint's chain-replication routing.
+    /// Called by the wiring layer on every topology epoch bump; the
+    /// whole map is swapped atomically so a forward never sees a
+    /// half-updated chain.
+    pub fn set_replication(
+        &self,
+        map: Option<std::sync::Arc<super::replication::ReplicationMap>>,
+    ) {
+        *self.replication.write().unwrap() = map;
+    }
+
+    /// The current replication routing (tests/wiring).
+    pub fn replication_map(&self) -> Option<std::sync::Arc<super::replication::ReplicationMap>> {
+        self.replication.read().unwrap().clone()
+    }
+
+    /// Relay a fenced mutation on `key` down the chain, if this
+    /// endpoint has a successor for the stream.  `critical` mutations
+    /// (XADDF/HELLO/XHANDOFF under tail-ack) propagate failure back to
+    /// the caller as a `REPL` error so the writer retries the frame;
+    /// non-critical ones (XACKPOS cursor gossip) are best-effort.
+    ///
+    /// A `STALE` rejection from the successor is re-raised verbatim:
+    /// it means a newer epoch already runs the chain past this point,
+    /// so this endpoint is the zombie, ack mode notwithstanding.
+    pub fn forward_to_successor(
+        &self,
+        key: &str,
+        cmd: &crate::wire::Value,
+        critical: bool,
+    ) -> Result<()> {
+        let Some(map) = self.replication_map() else {
+            return Ok(());
+        };
+        let Some(link) = map.link_for(key).cloned() else {
+            return Ok(());
+        };
+        match link.forward(cmd) {
+            crate::wire::Value::Error(msg) => {
+                self.repl_forward_errors.fetch_add(1, Ordering::Relaxed);
+                if msg.starts_with("STALE") {
+                    bail!("{msg}");
+                }
+                if critical && map.ack() == super::replication::ReplAck::Tail {
+                    bail!("REPL forward to endpoint {} failed: {msg}", link.target());
+                }
+                log::warn!(
+                    "endpoint store: best-effort forward of {key} to endpoint {} failed: {msg}",
+                    link.target()
+                );
+                Ok(())
+            }
+            _ => {
+                self.repl_forwarded.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+        }
+    }
+
+    /// Fenced mutations successfully relayed to a chain successor.
+    pub fn repl_forwarded(&self) -> u64 {
+        self.repl_forwarded.load(Ordering::Relaxed)
+    }
+
+    /// Chain forwards that failed (successor down or rejecting).
+    pub fn repl_forward_errors(&self) -> u64 {
+        self.repl_forward_errors.load(Ordering::Relaxed)
+    }
+
     /// Prometheus text exposition (the `METRICS` wire command): the
     /// store's own gauges, the WAL figures, the serving front-end's
     /// connection counters, the ingest trace hop, and — when a
@@ -1301,6 +1412,11 @@ impl Store {
             r.register("wal.gc_segments", counter(wal.gc_segments));
         }
         r.register("endpoint.hop_store_us", hist(&self.hop_store_us));
+        r.register("store.repl_forwarded", counter(self.repl_forwarded()));
+        r.register(
+            "store.repl_forward_errors",
+            counter(self.repl_forward_errors()),
+        );
         if let Some(s) = self.srv_stats.get() {
             r.register("server.connections", gauge(s.connections()));
             r.register("server.conns_total", counter(s.conns_total()));

@@ -681,6 +681,10 @@ pub struct WorkflowMetrics {
     pub handoffs: Arc<Counter>,
     /// Transport reconnect attempts by broker writers (all endpoints).
     pub reconnects: Arc<Counter>,
+    /// Frames bounced with `REPL` — the chain head stored the write
+    /// but could not reach its successor under tail-ack (ISSUE 10);
+    /// each is a writer-side retry while the chain heals.
+    pub repl_blocked: Arc<Counter>,
     /// Records dropped on the consumer poll path because their payload
     /// failed to decode (ISSUE 6 bugfix: these were warn-only and
     /// invisible to operators).  Endpoints keep their own server-side
@@ -731,6 +735,7 @@ impl WorkflowMetrics {
             stale_rejections: Arc::new(Counter::new()),
             handoffs: Arc::new(Counter::new()),
             reconnects: Arc::new(Counter::new()),
+            repl_blocked: Arc::new(Counter::new()),
             records_corrupt: Arc::new(Counter::new()),
             replay_gaps: Arc::new(Counter::new()),
             registry: Arc::new(Registry::new()),
@@ -750,6 +755,7 @@ impl WorkflowMetrics {
         r.register("broker.stale_rejections", Metric::Counter(m.stale_rejections.clone()));
         r.register("broker.handoffs", Metric::Counter(m.handoffs.clone()));
         r.register("broker.reconnects", Metric::Counter(m.reconnects.clone()));
+        r.register("broker.repl_blocked", Metric::Counter(m.repl_blocked.clone()));
         r.register("broker.replay_gaps", Metric::Counter(m.replay_gaps.clone()));
         r.register("stages", Metric::Stages(m.stages.clone()));
         r.register("adapt", Metric::Adapt(m.adapt.clone()));

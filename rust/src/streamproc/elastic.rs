@@ -26,7 +26,11 @@
 //!    (it is by construction the newest chain position we know of);
 //! 4. if the home endpoint is dead (unreachable and not live in the
 //!    topology) its tombstone is never coming: once its queue is
-//!    drained the reader follows the topology instead.
+//!    drained the reader follows the topology instead.  When the new
+//!    home was a chain *replica* of the dead one (ISSUE 10), its copy
+//!    of the stream carries byte-identical entry ids, so the dead
+//!    reader's harvested cursor resumes there verbatim — no replay of
+//!    the delivered prefix, consumer-group positions intact.
 //!
 //! Delivered records are additionally deduplicated by simulation step
 //! (re-shipped frames collapse), so every record reaches the analysis
@@ -65,6 +69,13 @@ struct StreamState {
     delivered: Option<u64>,
     /// Queued segments per endpoint.
     segs: HashMap<usize, SegQueue>,
+    /// Replica chain as of the *previous* poll (ISSUE 10).  Refreshed
+    /// only at the end of each sweep, so the dead-home fallback sees
+    /// the chain the dead endpoint actually headed — pre-promotion —
+    /// and can tell "failover to a replica" (entry ids byte-identical,
+    /// cursors transfer verbatim) from "migration to a stranger"
+    /// (fresh segment, cursors must not transfer).
+    chain: Vec<usize>,
 }
 
 /// Polls a set of streams across every endpoint the topology knows,
@@ -116,6 +127,7 @@ impl ElasticReader {
                 .with_context(|| format!("bad stream key '{key}'"))?;
             let group = topo.groups.group_of_rank(rank as usize)?;
             let home = topo.endpoint_of_group(group)?;
+            let chain = topo.replica_chain(group)?.to_vec();
             streams.insert(
                 key,
                 StreamState {
@@ -123,6 +135,7 @@ impl ElasticReader {
                     home,
                     delivered: None,
                     segs: HashMap::new(),
+                    chain,
                 },
             );
         }
@@ -304,6 +317,35 @@ impl ElasticReader {
                              following the topology to endpoint {target}",
                             st.home
                         );
+                        // Replica-aware resume (ISSUE 10): when the new
+                        // home was a chain replica of the dead one, its
+                        // copy of the stream carries byte-identical
+                        // entry ids, so the cursor harvested from the
+                        // dead reader is valid there verbatim — resume
+                        // without replaying the delivered prefix.  A
+                        // non-replica target starts a fresh segment
+                        // with fresh ids; the step watermark alone
+                        // guards that path, as before.
+                        if st.chain.contains(&target) {
+                            let harvested = self
+                                .saved_cursors
+                                .get(&st.home)
+                                .and_then(|v| v.iter().find(|(k, _)| k == &key))
+                                .map(|(_, c)| *c);
+                            if let Some(pos) = harvested {
+                                if let Some(reader) = self.readers.get_mut(&target) {
+                                    if !reader.is_subscribed(&key) {
+                                        reader.subscribe_from(key.clone(), pos);
+                                    }
+                                } else {
+                                    let dst =
+                                        self.saved_cursors.entry(target).or_default();
+                                    if !dst.iter().any(|(k, _)| k == &key) {
+                                        dst.push((key.clone(), pos));
+                                    }
+                                }
+                            }
+                        }
                         st.home = target;
                         continue;
                     }
@@ -322,6 +364,17 @@ impl ElasticReader {
             }
             st.delivered = Some(records.last().unwrap().step);
             out.push(MicroBatch { key, records });
+        }
+        // Refresh each stream's replica chain only now, at the end of
+        // the sweep: a failover promotion rewrites the topology's
+        // chain, and the dead-home fallback above must keep judging
+        // "was the new home a replica?" against the chain the dead
+        // endpoint was actually head of.
+        let topo = self.topology.snapshot();
+        for st in self.streams.values_mut() {
+            if let Ok(chain) = topo.replica_chain(st.group) {
+                st.chain = chain.to_vec();
+            }
         }
         Ok(out)
     }

@@ -271,6 +271,12 @@ pub struct ConnConfig {
     pub nodelay: bool,
     /// Optional outbound bandwidth cap (bytes/sec).
     pub throttle_bytes_per_sec: Option<f64>,
+    /// Optional socket read timeout.  `None` (the default) blocks
+    /// forever, which is right for writers and readers; replica
+    /// forwarding links (ISSUE 10) set one so a wedged successor
+    /// surfaces as a retryable REPL failure instead of parking an
+    /// endpoint I/O shard indefinitely.
+    pub read_timeout: Option<Duration>,
 }
 
 impl Default for ConnConfig {
@@ -280,6 +286,7 @@ impl Default for ConnConfig {
             backoff: Duration::from_millis(20),
             nodelay: true,
             throttle_bytes_per_sec: None,
+            read_timeout: None,
         }
     }
 }
@@ -331,6 +338,9 @@ impl RespConn {
                 Ok(s) => {
                     if self.cfg.nodelay {
                         let _ = s.set_nodelay(true);
+                    }
+                    if self.cfg.read_timeout.is_some() {
+                        let _ = s.set_read_timeout(self.cfg.read_timeout);
                     }
                     self.stream = Some(s);
                     self.decoder = Decoder::new();

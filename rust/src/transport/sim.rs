@@ -30,9 +30,21 @@
 //!   (and is logged), then the endpoint crashes and is immediately
 //!   restarted from disk, so the caller's reconnect exercises the real
 //!   recovery path.
+//! * **whole-machine loss (ISSUE 10)** — [`SimNet::kill_machine`] is
+//!   the failure `crash_on_drop` is *not*: the endpoint dies **and its
+//!   WAL directory is destroyed**, so no restart can ever replay it.
+//!   The only copy of its data left is whatever chain replication
+//!   forwarded to a successor.  [`FaultSchedule::kill_machine_on_drop`]
+//!   scripts it at an exact frame boundary, mid-batch.
+//! * **chain wiring** — [`SimNet::apply_replication`] installs the
+//!   per-endpoint successor routing a
+//!   [`crate::broker::Topology`]'s replica chains imply, over sim
+//!   links that run the same [`DialReplicaLink`] code as TCP.
 //!
 //! Everything is deterministic; [`FaultSchedule::seeded`] derives a
 //! schedule from a `u64` seed for property tests.
+//!
+//! [`DialReplicaLink`]: crate::endpoint::DialReplicaLink
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -61,6 +73,12 @@ pub struct FaultSchedule {
     /// replay for durable endpoints, empty for in-memory ones) before
     /// the caller sees the broken connection.
     pub crash_on_drop: bool,
+    /// When the scripted drop fires, the whole *machine* is lost
+    /// (ISSUE 10): the endpoint goes down AND its WAL directory is
+    /// destroyed, so nothing can ever be replayed — the fate chain
+    /// replication exists to survive.  Takes precedence over
+    /// [`crash_on_drop`](FaultSchedule::crash_on_drop).
+    pub kill_machine_on_drop: bool,
     /// Virtual per-frame latency (accumulated on the conn, never slept).
     pub delay_us_per_frame: u64,
     /// Runs exactly when the scripted drop fires (after the partial
@@ -98,6 +116,10 @@ struct SimEndpoint {
     faults: Mutex<FaultSchedule>,
     /// Pipelined frames served (diagnostics).
     frames: AtomicU64,
+    /// Chain-replication routing last applied to this endpoint —
+    /// re-installed on every restart, the way an orchestrator re-wires
+    /// a replacement process (ISSUE 10).
+    repl: Mutex<Option<Arc<crate::endpoint::ReplicationMap>>>,
 }
 
 impl SimEndpoint {
@@ -111,7 +133,19 @@ impl SimEndpoint {
     fn restart_store(&self) {
         let fresh =
             Arc::new(Store::open(self.cfg.clone()).expect("sim endpoint restart"));
+        fresh.set_replication(self.repl.lock().unwrap().clone());
         *self.store.write().unwrap() = fresh;
+    }
+
+    /// The machine is gone: mark the endpoint down and destroy its WAL
+    /// directory, then leave a fresh empty incarnation in place (what a
+    /// replacement process on a new machine would see — nothing).
+    fn kill_machine(&self) {
+        self.up.store(false, Ordering::SeqCst);
+        if let Some(wal) = &self.cfg.wal {
+            let _ = std::fs::remove_dir_all(&wal.dir);
+        }
+        self.restart_store();
     }
 }
 
@@ -138,6 +172,7 @@ impl SimNet {
             up: AtomicBool::new(true),
             faults: Mutex::new(FaultSchedule::default()),
             frames: AtomicU64::new(0),
+            repl: Mutex::new(None),
         }));
         eps.len() - 1
     }
@@ -198,6 +233,51 @@ impl SimNet {
         ep.up.store(true, Ordering::SeqCst);
     }
 
+    /// Whole-machine loss (ISSUE 10): the endpoint goes down and its
+    /// WAL directory is destroyed — [`SimNet::restart`] after this
+    /// brings up an *empty* replacement, never a replay.  The only
+    /// surviving copy of its data is whatever chain replication pushed
+    /// to a successor.
+    pub fn kill_machine(&self, idx: usize) {
+        self.endpoint(idx).expect("sim endpoint").kill_machine();
+    }
+
+    /// Install the successor routing a topology's replica chains imply
+    /// (ISSUE 10): for every stream in `keys`, each non-tail chain
+    /// member gets a [`crate::endpoint::DialReplicaLink`] to the next
+    /// member, over this net's own dialer; every other endpoint's map
+    /// entry for that stream is cleared.  Call after every topology
+    /// epoch bump (promotion, repair, scale) to re-wire the chains.
+    pub fn apply_replication(
+        self: &Arc<Self>,
+        topo: &crate::broker::Topology,
+        keys: &[String],
+        ack: crate::endpoint::ReplAck,
+    ) -> Result<()> {
+        use crate::endpoint::{DialReplicaLink, ReplicationMap};
+        let n = self.len();
+        let mut maps: Vec<ReplicationMap> =
+            (0..n).map(|_| ReplicationMap::new(ack)).collect();
+        for key in keys {
+            let Some((_, rank)) = crate::record::parse_stream_key(key) else {
+                bail!("sim: '{key}' is not a <field>/<rank> stream key");
+            };
+            let g = topo.groups.group_of_rank(rank as usize)?;
+            let chain = topo.replica_chain(g)?;
+            for w in chain.windows(2) {
+                let dialer: Arc<dyn Dialer> = Arc::new(SimDialer::new(self.clone()));
+                maps[w[0]].insert(key.clone(), Arc::new(DialReplicaLink::new(dialer, w[1])));
+            }
+        }
+        for (idx, map) in maps.into_iter().enumerate() {
+            let ep = self.endpoint(idx)?;
+            let map = if map.is_empty() { None } else { Some(Arc::new(map)) };
+            *ep.repl.lock().unwrap() = map.clone();
+            ep.current_store().set_replication(map);
+        }
+        Ok(())
+    }
+
     /// Frames served by endpoint `idx` so far.
     pub fn frames(&self, idx: usize) -> u64 {
         self.endpoint(idx)
@@ -235,6 +315,7 @@ impl Conn for SimConn {
         // Consult (and advance) the fault schedule.
         let mut breaking = false;
         let mut crash = false;
+        let mut machine_lost = false;
         let mut applied = reqs.len();
         let (pre, hook) = {
             let mut f = self.ep.faults.lock().unwrap();
@@ -245,6 +326,7 @@ impl Conn for SimConn {
                 if n == 0 {
                     breaking = true;
                     crash = f.crash_on_drop;
+                    machine_lost = f.kill_machine_on_drop;
                     applied = f.partial_commands.min(reqs.len());
                     f.drop_after_frames = None;
                     hook = f.on_drop.take();
@@ -268,7 +350,12 @@ impl Conn for SimConn {
         }
         if breaking {
             self.broken = true;
-            if crash {
+            if machine_lost {
+                // The whole machine dies mid-batch: endpoint down, WAL
+                // directory destroyed — only chain replicas still hold
+                // its data (ISSUE 10).
+                self.ep.kill_machine();
+            } else if crash {
                 // The endpoint process dies with the partial prefix
                 // applied (and logged) and is restarted from disk; the
                 // caller's reconnect lands on the recovered incarnation.
@@ -281,7 +368,13 @@ impl Conn for SimConn {
                 "sim: connection to endpoint {} {} mid-frame \
                  ({applied}/{} commands applied, no replies delivered)",
                 self.idx,
-                if crash { "crashed" } else { "dropped" },
+                if machine_lost {
+                    "lost its machine"
+                } else if crash {
+                    "crashed"
+                } else {
+                    "dropped"
+                },
                 reqs.len()
             );
         }
@@ -528,6 +621,114 @@ mod tests {
         conn.exchange(&[Request::new("PING")]).unwrap();
         assert_eq!(net.store(e).xlen("s"), 0, "in-memory data should be gone");
         assert_eq!(net.store(e).stream_epoch("s"), 0, "fence gone too");
+    }
+
+    /// ISSUE 10: machine loss is crash_on_drop's evil twin — the WAL
+    /// dir dies with the process, so the "recovered" incarnation is
+    /// empty even though the endpoint was durable.
+    #[test]
+    fn kill_machine_destroys_the_wal_dir() {
+        let dir = std::env::temp_dir().join(format!(
+            "eb-sim-machine-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let net = SimNet::new();
+        let e = net.add_endpoint(StoreConfig {
+            wal: Some(crate::endpoint::WalConfig {
+                dir: dir.clone(),
+                fsync: crate::endpoint::FsyncPolicy::Always,
+                segment_bytes: 1 << 20,
+            }),
+            ..Default::default()
+        });
+        let mut conn = SimDialer::new(net.clone()).dial(e).unwrap();
+        conn.exchange(&[xaddf("s", 1, 0, "a"), xaddf("s", 1, 1, "b")])
+            .unwrap();
+        assert_eq!(net.store(e).xlen("s"), 2);
+        net.kill_machine(e);
+        assert!(conn.exchange(&[Request::new("PING")]).is_err());
+        assert!(SimDialer::new(net.clone()).dial(e).is_err());
+        net.restart(e);
+        conn.reconnect().unwrap();
+        assert_eq!(net.store(e).xlen("s"), 0, "wal-backed data must be GONE");
+        assert_eq!(net.store(e).replayed_entries(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The scripted form: the machine dies mid-batch at an exact frame
+    /// boundary, with a partial prefix applied first.
+    #[test]
+    fn kill_machine_on_drop_fires_mid_frame() {
+        let net = SimNet::new();
+        let e = net.add_endpoint(StoreConfig::default());
+        net.inject(
+            e,
+            FaultSchedule {
+                drop_after_frames: Some(0),
+                partial_commands: 1,
+                kill_machine_on_drop: true,
+                ..Default::default()
+            },
+        );
+        let mut conn = SimDialer::new(net.clone()).dial(e).unwrap();
+        let err = conn
+            .exchange(&[xaddf("s", 1, 0, "a"), xaddf("s", 1, 1, "b")])
+            .unwrap_err();
+        assert!(err.to_string().contains("lost its machine"), "{err}");
+        assert!(conn.reconnect().is_err(), "machine stays down");
+        net.restart(e);
+        assert_eq!(net.store(e).xlen("s"), 0);
+    }
+
+    /// ISSUE 10: `apply_replication` wires real `DialReplicaLink`s —
+    /// a fenced write to the chain head lands on the successor with a
+    /// byte-identical entry id, and the tail holds no onward route.
+    #[test]
+    fn apply_replication_forwards_head_writes_to_successor() {
+        use crate::broker::{GroupMap, TopologyHandle};
+        let net = SimNet::new();
+        let e0 = net.add_endpoint(StoreConfig::default());
+        let e1 = net.add_endpoint(StoreConfig::default());
+        let dummy: std::net::SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let topo = TopologyHandle::new_replicated(
+            GroupMap::new(1, 1, 2).unwrap(),
+            vec![dummy, dummy],
+            &[],
+            2,
+        )
+        .unwrap();
+        net.apply_replication(
+            &topo.snapshot(),
+            &["u/0".to_string()],
+            crate::endpoint::ReplAck::Tail,
+        )
+        .unwrap();
+        let mut conn = SimDialer::new(net.clone()).dial(e0).unwrap();
+        let replies = conn
+            .exchange(&[xaddf("u/0", 1, 0, "a"), xaddf("u/0", 1, 1, "b")])
+            .unwrap();
+        assert!(replies.iter().all(|r| !r.is_error()), "{replies:?}");
+        assert_eq!(net.store(e0).xlen("u/0"), 2);
+        assert_eq!(net.store(e1).xlen("u/0"), 2, "chain must mirror the head");
+        // byte-identical ids on every replica
+        let a = net.store(e0).range("u/0", crate::endpoint::EntryId::ZERO, max_id(), 0);
+        let b = net.store(e1).range("u/0", crate::endpoint::EntryId::ZERO, max_id(), 0);
+        let ids_a: Vec<_> = a.iter().map(|e| e.id).collect();
+        let ids_b: Vec<_> = b.iter().map(|e| e.id).collect();
+        assert_eq!(ids_a, ids_b);
+        assert_eq!(net.store(e0).repl_forwarded(), 2);
+        assert!(net.store(e1).replication_map().is_none(), "tail has no route");
+        // the successor also mirrors the step watermark, so a promoted
+        // head resumes dedupe exactly where the dead head stopped
+        assert_eq!(net.store(e1).fenced_last_step("u/0"), Some(1));
+    }
+
+    fn max_id() -> crate::endpoint::EntryId {
+        crate::endpoint::EntryId {
+            ms: u64::MAX,
+            seq: u64::MAX,
+        }
     }
 
     #[test]

@@ -23,7 +23,10 @@ use crate::broker::{
     AdaptController, Broker, BrokerConfig, QosThresholds, Rebalancer, TopologyHandle,
 };
 use crate::config::{IoMode, WorkflowConfig};
-use crate::endpoint::{EndpointServer, ServerConfig, StoreConfig};
+use crate::endpoint::{
+    DialReplicaLink, EndpointServer, ReplAck, ReplicaLink, ReplicationMap,
+    ServerConfig, Store, StoreConfig,
+};
 use crate::metrics::WorkflowMetrics;
 use crate::runtime::ArtifactSet;
 use crate::sim::{SimConfig, SimRunner};
@@ -45,6 +48,52 @@ pub struct CloudSide {
     last_result_us: Arc<AtomicU64>,
     obs_stop: Arc<AtomicBool>,
     obs_writer: Option<std::thread::JoinHandle<()>>,
+    repl_stop: Arc<AtomicBool>,
+    repl_watcher: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Compute each endpoint's per-stream successor links from the current
+/// replica chains (ISSUE 10): every non-tail chain member gets a
+/// [`DialReplicaLink`] to its successor for every stream of the group;
+/// tails and unreplicated groups get none (`None` map = forwarding off).
+fn replication_maps(
+    topo: &crate::broker::Topology,
+    field: &str,
+    ack: ReplAck,
+    dialer: &Arc<dyn Dialer>,
+    n_endpoints: usize,
+) -> Result<Vec<Option<Arc<ReplicationMap>>>> {
+    let mut maps: Vec<ReplicationMap> =
+        (0..n_endpoints).map(|_| ReplicationMap::new(ack)).collect();
+    for r in 0..topo.groups.total_ranks() {
+        let key = crate::record::stream_key(field, r as u32);
+        let g = topo.groups.group_of_rank(r)?;
+        let chain = topo.replica_chain(g)?;
+        for w in chain.windows(2) {
+            let link: Arc<dyn ReplicaLink> =
+                Arc::new(DialReplicaLink::new(dialer.clone(), w[1]));
+            maps[w[0]].insert(key.clone(), link);
+        }
+    }
+    Ok(maps
+        .into_iter()
+        .map(|m| if m.is_empty() { None } else { Some(Arc::new(m)) })
+        .collect())
+}
+
+/// Install the maps from [`replication_maps`] onto the endpoint stores.
+fn install_replication(
+    topo: &crate::broker::Topology,
+    stores: &[Arc<Store>],
+    field: &str,
+    ack: ReplAck,
+    dialer: &Arc<dyn Dialer>,
+) -> Result<()> {
+    let maps = replication_maps(topo, field, ack, dialer, stores.len())?;
+    for (store, map) in stores.iter().zip(maps) {
+        store.set_replication(map);
+    }
+    Ok(())
 }
 
 impl CloudSide {
@@ -175,7 +224,18 @@ impl CloudSide {
             endpoints.iter().map(|e| e.addr()).collect();
         let mut readers: Vec<Box<dyn Poller>> = Vec::with_capacity(n_endpoints);
         let topology = if cfg.rebalance_ms > 0 {
-            let topo = TopologyHandle::new_static(groups.clone(), addrs)?;
+            // Chain replication (ISSUE 10) hangs off the same versioned
+            // topology; factor 1 keeps the plain static layout.
+            let topo = if cfg.replication_factor > 1 {
+                TopologyHandle::new_replicated(
+                    groups.clone(),
+                    addrs,
+                    &cfg.replication_domains,
+                    cfg.replication_factor,
+                )?
+            } else {
+                TopologyHandle::new_static(groups.clone(), addrs)?
+            };
             let resolver = topo.clone();
             let dialer: Arc<dyn Dialer> = Arc::new(TcpDialer::new(
                 move |e| resolver.endpoint_addr(e),
@@ -212,6 +272,61 @@ impl CloudSide {
             }
             None
         };
+
+        // ISSUE 10: wire each store's per-stream successor link from the
+        // replica chains, and keep re-wiring as the topology epoch bumps
+        // (failover promotions and chain repairs move the links around).
+        let repl_stop = Arc::new(AtomicBool::new(false));
+        let mut repl_watcher = None;
+        if cfg.replication_factor > 1 {
+            if let Some(topo) = &topology {
+                let resolver = topo.clone();
+                // Bounded reads on the forwarding links: a wedged
+                // successor must bounce the write (REPL, retried by the
+                // shipper) rather than park the head's I/O shard.
+                let dialer: Arc<dyn Dialer> = Arc::new(TcpDialer::new(
+                    move |e| resolver.endpoint_addr(e),
+                    ConnConfig {
+                        max_retries: 1,
+                        read_timeout: Some(Duration::from_secs(2)),
+                        ..ConnConfig::default()
+                    },
+                ));
+                let stores: Vec<Arc<Store>> =
+                    endpoints.iter().map(|s| s.store().clone()).collect();
+                let ack = cfg.replication_ack;
+                let wfield = field.to_string();
+                install_replication(&topo.snapshot(), &stores, &wfield, ack, &dialer)?;
+                let wtopo = topo.clone();
+                let stop = repl_stop.clone();
+                let nap = Duration::from_millis((cfg.rebalance_ms / 2).clamp(5, 100));
+                repl_watcher = Some(
+                    std::thread::Builder::new()
+                        .name("repl-wire".into())
+                        .spawn(move || {
+                            let mut last = wtopo.epoch();
+                            while !stop.load(Ordering::Relaxed) {
+                                let now = wtopo.epoch();
+                                if now != last {
+                                    last = now;
+                                    if let Err(e) = install_replication(
+                                        &wtopo.snapshot(),
+                                        &stores,
+                                        &wfield,
+                                        ack,
+                                        &dialer,
+                                    ) {
+                                        log::warn!(
+                                            "replication: re-wire at epoch {now}: {e:#}"
+                                        );
+                                    }
+                                }
+                                std::thread::sleep(nap);
+                            }
+                        })?,
+                );
+            }
+        }
 
         let engine = Arc::new(DmdEngine::new(
             DmdConfig {
@@ -296,6 +411,8 @@ impl CloudSide {
             last_result_us,
             obs_stop,
             obs_writer,
+            repl_stop,
+            repl_watcher,
         })
     }
 
@@ -317,6 +434,10 @@ impl CloudSide {
             .map_err(|_| anyhow::anyhow!("collector panicked"))?;
         self.obs_stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.obs_writer.take() {
+            let _ = h.join();
+        }
+        self.repl_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.repl_watcher.take() {
             let _ = h.join();
         }
         self.metrics.events.flush();
@@ -640,6 +761,89 @@ mod tests {
                 .count();
             assert_eq!(per, 8, "rank {r}");
         }
+    }
+
+    /// ISSUE 10: a factor-2 replicated run with calm QoS keeps the
+    /// static coverage, and — because acks are tail-acks — every
+    /// stream's follower copy is byte-identical to the head's.
+    #[test]
+    fn replicated_workflow_mirrors_streams_on_chain_tails() {
+        let mut cfg = tiny_cfg(IoMode::Broker);
+        cfg.endpoints = Some(2);
+        cfg.group_size = 2; // 4 ranks → 2 groups over 2 endpoints
+        cfg.rebalance_ms = 25;
+        cfg.qos_flush_p95_us = 60_000_000;
+        cfg.qos_queue_depth = 1 << 32;
+        cfg.qos_reconnects = 1 << 32;
+        cfg.replication_factor = 2;
+        cfg.validate().unwrap();
+        let field = "velocity";
+        let metrics = WorkflowMetrics::new();
+        let cloud =
+            CloudSide::start(&cfg, field, None, metrics.clone(), None, None).unwrap();
+        let topo = cloud.topology.clone().expect("elastic topology");
+        let resolver = topo.clone();
+        let dialer: Arc<dyn Dialer> = Arc::new(TcpDialer::new(
+            move |e| resolver.endpoint_addr(e),
+            ConnConfig::default(),
+        ));
+        let broker = Arc::new(
+            Broker::with_topology(
+                BrokerConfig {
+                    group_size: cfg.group_size,
+                    ..BrokerConfig::new(cloud.endpoint_addrs())
+                },
+                topo.clone(),
+                dialer,
+                metrics.clone(),
+            )
+            .unwrap(),
+        );
+        let sim_cfg = SimConfig {
+            ranks: cfg.ranks,
+            height: cfg.height,
+            width: cfg.width,
+            steps: cfg.steps,
+            write_interval: cfg.write_interval,
+            io_mode: cfg.io_mode,
+            out_dir: cfg.out_dir.clone(),
+            field: field.into(),
+            params: Default::default(),
+            use_pjrt: false,
+            pfs_commit_ms: 0,
+        };
+        let stores: Vec<Arc<Store>> =
+            cloud.endpoints.iter().map(|s| s.store().clone()).collect();
+        let snap = topo.snapshot();
+        SimRunner::run(&sim_cfg, Some(broker), None).unwrap();
+        let (results, _) = cloud.finish().unwrap();
+        assert_eq!(results.len(), 8 * 4);
+        assert_eq!(metrics.dropped.get(), 0);
+        assert_eq!(metrics.migrations.get(), 0, "calm QoS: no failover");
+        let max = crate::endpoint::EntryId {
+            ms: u64::MAX,
+            seq: u64::MAX,
+        };
+        let mut forwarded = 0;
+        for r in 0..cfg.ranks {
+            let key = crate::record::stream_key(field, r as u32);
+            let g = snap.groups.group_of_rank(r).unwrap();
+            let chain = snap.replica_chain(g).unwrap();
+            assert_eq!(chain.len(), 2, "{key}: chain not at factor");
+            let head = stores[chain[0]].range(&key, crate::endpoint::EntryId::ZERO, max, 0);
+            let tail = stores[chain[1]].range(&key, crate::endpoint::EntryId::ZERO, max, 0);
+            assert_eq!(head.len(), 12, "{key}: 12 snapshots on the head");
+            assert_eq!(head.len(), tail.len(), "{key}: tail copy short");
+            for (x, y) in head.iter().zip(&tail) {
+                assert_eq!(x.id, y.id, "{key}: divergent entry ids");
+                assert_eq!(x.fields, y.fields, "{key}: divergent payloads");
+            }
+        }
+        for s in &stores {
+            forwarded += s.repl_forwarded();
+        }
+        // 12 writes × 4 streams, plus one HELLO per stream registration.
+        assert!(forwarded >= 12 * 4, "head writes not forwarded: {forwarded}");
     }
 
     /// ISSUE 4: the same workflow with durable endpoints + retention

@@ -1,0 +1,942 @@
+//! ISSUE 10 acceptance: chain-replicated endpoint streams survive
+//! whole-machine loss.
+//!
+//! The tentpole test runs the full 4-rank pipeline (broker → chain of
+//! sim endpoints → elastic reader → windowed DMD) with replication
+//! factor 2, machine-kills the head of one chain **mid-batch with its
+//! WAL directory destroyed**, promotes the chain successor via a
+//! topology epoch bump, and then proves the failover was invisible:
+//! the union of surviving segments is gap-free exactly-once, the
+//! promoted head alone serves the entire history, and the streamed DMD
+//! matches the offline `linalg::dmd` oracle to 1e-6 — i.e. losing a
+//! machine is indistinguishable from never having lost one.
+//!
+//! Satellites covered here:
+//! * `prop_replicated_exactly_once` — 64 seeded event scripts (kills
+//!   of heads / mid-chain members / tails, concurrent rebalancer
+//!   sweeps, adapt-style payload-shape changes, transient frame
+//!   faults) asserting per-segment exactly-once, in-step-order
+//!   delivery, and that no acked record is ever lost;
+//! * fencing-edge regressions — a zombie old head is `STALE`-fenced
+//!   *through the chain*, re-shipped unacked frames dedupe as `DUP`
+//!   chain-wide, and a WAL-backed replica rejoins at the right
+//!   watermark after a restart;
+//! * failover transparency of the observability plane — traced hop
+//!   stamps and consumer-group cursors survive promotion
+//!   byte-identically, and the staleness histograms attribute the
+//!   failover stall to the delivery hop.
+
+use std::collections::BTreeSet;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use elasticbroker::analysis::{AnalysisResult, DmdConfig, DmdEngine};
+use elasticbroker::broker::{
+    rebalancer, Broker, BrokerConfig, BrokerCtx, EndpointSample, GroupMap,
+    QosThresholds, QueuePolicy, Shipper, TopologyHandle,
+};
+use elasticbroker::endpoint::{
+    EntryId, FsyncPolicy, ReplAck, Store, StoreConfig, WalConfig,
+};
+use elasticbroker::linalg::{dmd, Mat};
+use elasticbroker::metrics::WorkflowMetrics;
+use elasticbroker::record::{
+    CodecKind, Encoding, FrameMeta, StreamRecord, Trace,
+};
+use elasticbroker::streamproc::{ElasticReader, StreamingConfig, StreamingContext};
+use elasticbroker::transport::sim::{FaultSchedule, SimDialer, SimNet};
+use elasticbroker::transport::{Conn, Dialer, Request};
+use elasticbroker::util::prop::{self, U64Range};
+use elasticbroker::util::rng::Rng;
+use elasticbroker::wire::Value;
+
+const RANKS: u32 = 4;
+const DIM: usize = 32;
+const STEPS: u64 = 20;
+const WINDOW: usize = 6; // m; the engine windows m+1 = 7 snapshots
+const DMD_RANK: usize = 4;
+const FIELD: &str = "synth";
+
+fn dummy_addr() -> std::net::SocketAddr {
+    "127.0.0.1:1".parse().unwrap()
+}
+
+/// Deterministic decaying-oscillation snapshot for (rank, step) — the
+/// same pure function `tests/elastic.rs` uses, so the offline oracle
+/// below reconstructs the exact window the streamed engine analysed.
+fn snapshot(rank: u32, step: u64) -> Vec<f32> {
+    let decay = 0.95f64.powi(step as i32);
+    (0..DIM)
+        .map(|i| {
+            let phase = 0.17 * i as f64 + 0.29 * rank as f64;
+            (decay * (0.4 * step as f64 + phase).cos()) as f32
+        })
+        .collect()
+}
+
+/// Write one phase of steps on every rank, then wait for the writers'
+/// queues to drain so the scripted machine loss lands between phases.
+fn write_phase(ctxs: &[BrokerCtx], lo: u64, hi: u64) {
+    for step in lo..hi {
+        for (r, ctx) in ctxs.iter().enumerate() {
+            ctx.write(step, &[DIM as u32], &snapshot(r as u32, step)).unwrap();
+        }
+    }
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while ctxs.iter().any(|c| c.backlog() > 0) && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(
+        ctxs.iter().all(|c| c.backlog() == 0),
+        "writer backlog did not drain"
+    );
+}
+
+/// All record steps of `key` in `store`, tombstones excluded; asserts
+/// the segment is strictly step-increasing (per-segment exactly-once).
+fn segment_steps(store: &Store, key: &str) -> Vec<u64> {
+    let mut steps = Vec::new();
+    for e in store.read_after(key, EntryId::ZERO, 0) {
+        if e.fields[0].0 == b"h" {
+            continue;
+        }
+        let rec = StreamRecord::decode(&e.fields[0].1).unwrap();
+        if let Some(&prev) = steps.last() {
+            assert!(rec.step > prev, "{key}: segment not strictly increasing");
+        }
+        steps.push(rec.step);
+    }
+    steps
+}
+
+/// Record entries of `key` as (id, stored bytes), tombstones excluded —
+/// the byte-identity unit of the chain invariant.
+fn record_bytes(store: &Store, key: &str) -> Vec<(EntryId, Vec<u8>)> {
+    store
+        .read_after(key, EntryId::ZERO, 0)
+        .into_iter()
+        .filter(|e| e.fields[0].0 != b"h")
+        .map(|e| (e.id, e.fields[0].1.to_vec()))
+        .collect()
+}
+
+fn hello(key: &str, epoch: u64) -> Request {
+    Request::new("HELLO").arg(key).arg(epoch.to_string())
+}
+
+fn xaddf(key: &str, epoch: u64, step: u64, payload: impl Into<Vec<u8>>) -> Request {
+    Request::new("XADDF")
+        .arg(key)
+        .arg(epoch.to_string())
+        .arg(step.to_string())
+        .arg("r")
+        .arg(payload.into())
+}
+
+fn err_text(v: &Value) -> String {
+    match v {
+        Value::Error(m) => m.clone(),
+        other => panic!("expected an error reply, got {other:?}"),
+    }
+}
+
+/// The ISSUE 10 acceptance run.  Three WAL-backed endpoints, two
+/// groups, chains `g0: [0,1]`, `g1: [1,2]`.  Endpoint 0 — the head of
+/// g0's chain — loses its whole machine mid-batch (WAL directory
+/// destroyed); the scripted `on_drop` hook performs the failover the
+/// control plane would (drain → chain repair → successor re-wire) at
+/// the exact break point.
+#[test]
+fn machine_loss_failover_is_exactly_once_and_matches_offline_dmd() {
+    let dirs: Vec<std::path::PathBuf> = (0..3)
+        .map(|i| {
+            std::env::temp_dir()
+                .join(format!("eb-repl-accept-{}-{i}", std::process::id()))
+        })
+        .collect();
+    for d in &dirs {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    let net = SimNet::new();
+    for d in &dirs {
+        net.add_endpoint(StoreConfig {
+            wal: Some(WalConfig {
+                dir: d.clone(),
+                fsync: FsyncPolicy::Always,
+                segment_bytes: 1 << 20,
+            }),
+            ..Default::default()
+        });
+    }
+    let metrics = WorkflowMetrics::new();
+
+    // group_size 2 → two groups over three endpoints, factor 2.
+    let groups = GroupMap::new(RANKS as usize, 2, 3).unwrap();
+    let topology = TopologyHandle::new_replicated(
+        groups.clone(),
+        vec![dummy_addr(); 3],
+        &[],
+        2,
+    )
+    .unwrap();
+    let keys: Vec<String> = (0..RANKS).map(|r| format!("{FIELD}/{r}")).collect();
+    {
+        let t = topology.snapshot();
+        assert_eq!(t.replica_chain(0).unwrap(), &[0, 1]);
+        assert_eq!(t.replica_chain(1).unwrap(), &[1, 2]);
+    }
+    net.apply_replication(&topology.snapshot(), &keys, ReplAck::Tail).unwrap();
+
+    let dialer: Arc<dyn Dialer> = Arc::new(SimDialer::new(net.clone()));
+    let broker = Arc::new(
+        Broker::with_topology(
+            BrokerConfig {
+                group_size: 2,
+                queue_cap: 32,
+                policy: QueuePolicy::Block,
+                batch_max_records: 4,
+                trace_sample: 4, // every 4th write carries hop stamps
+                ..BrokerConfig::new(vec![dummy_addr()])
+            },
+            topology.clone(),
+            dialer.clone(),
+            metrics.clone(),
+        )
+        .unwrap(),
+    );
+
+    let engine = Arc::new(
+        DmdEngine::new(
+            DmdConfig {
+                window: WINDOW,
+                rank: DMD_RANK,
+                hop: 1,
+                backend: elasticbroker::analysis::DmdBackend::Rust,
+                ..Default::default()
+            },
+            None,
+            metrics.clone(),
+        )
+        .unwrap(),
+    );
+    let mut reader =
+        ElasticReader::new(topology.clone(), dialer.clone(), keys.clone(), 0).unwrap();
+    reader.set_trace(metrics.trace.clone());
+    reader.set_auto_ack(true); // consumer cursors gossip down the chain
+    let (tx, rx) = channel();
+    let eng = engine.clone();
+    let ctx = StreamingContext::start(
+        StreamingConfig {
+            trigger_interval: Duration::from_millis(25),
+            executors: 4,
+            batch_limit: 0,
+        },
+        vec![reader],
+        move |b| eng.process(b),
+        tx,
+    );
+
+    let ctxs: Vec<BrokerCtx> =
+        (0..RANKS).map(|r| broker.init(FIELD, r).unwrap()).collect();
+    write_phase(&ctxs, 0, 7);
+
+    // Script the machine loss: the second frame endpoint 0 serves after
+    // this point breaks with one command applied, the machine dies (WAL
+    // destroyed), and — at the exact break — the failover runs: drain
+    // the dead head (epoch bump promotes its chain successor), repair
+    // the now-short chain, re-wire the successor links.
+    let (ft, fnet, fkeys) = (topology.clone(), net.clone(), keys.clone());
+    net.inject(
+        0,
+        FaultSchedule {
+            drop_after_frames: Some(1),
+            partial_commands: 1,
+            kill_machine_on_drop: true,
+            on_drop: Some(Box::new(move || {
+                ft.drain_endpoint(0).unwrap();
+                ft.repair_chains().unwrap();
+                fnet.apply_replication(&ft.snapshot(), &fkeys, ReplAck::Tail)
+                    .unwrap();
+            })),
+            ..Default::default()
+        },
+    );
+
+    write_phase(&ctxs, 7, 14);
+    write_phase(&ctxs, 14, STEPS);
+    for c in ctxs {
+        c.finalize().unwrap();
+    }
+
+    // --- Failover happened: epoch bumped twice (drain + repair), the
+    // chain successor is the new head, and the repaired chain excludes
+    // the dead machine.
+    let t = topology.snapshot();
+    t.validate().unwrap();
+    assert_eq!(t.epoch, 3, "drain (2) + chain repair (3)");
+    assert!(!t.endpoints[0].live, "dead machine must be drained");
+    assert_eq!(t.endpoint_of_group(0).unwrap(), 1, "successor promoted");
+    assert_eq!(t.replica_chain(0).unwrap(), &[1, 2], "chain repaired");
+    assert_eq!(t.replica_chain(1).unwrap(), &[1, 2]);
+
+    // --- Exactly-once across the machine loss.  `shipped` may exceed
+    // the write count: re-shipped frames that dedupe as DUP still ack.
+    assert_eq!(metrics.dropped.get(), 0);
+    assert!(metrics.shipped.records() >= (RANKS as u64) * STEPS);
+    assert!(
+        net.store(0).read_after(&keys[0], EntryId::ZERO, 0).is_empty(),
+        "the killed machine's WAL is destroyed — nothing survives there"
+    );
+    for r in 0..RANKS {
+        let key = &keys[r as usize];
+        let s1 = segment_steps(&net.store(1), key);
+        let s2 = segment_steps(&net.store(2), key);
+        let mut union: Vec<u64> = s1.iter().chain(s2.iter()).copied().collect();
+        union.sort_unstable();
+        union.dedup();
+        assert_eq!(
+            union,
+            (0..STEPS).collect::<Vec<_>>(),
+            "{key}: union of surviving segments must be gap-free \
+             (e1: {s1:?}, e2: {s2:?})"
+        );
+        // The failover guarantee: the promoted head *alone* serves the
+        // entire history — pre-kill records arrived by forwarding,
+        // post-kill records landed directly.
+        let head = t.endpoint_of_group(t.groups.group_of_rank(r as usize).unwrap())
+            .unwrap();
+        assert_eq!(
+            segment_steps(&net.store(head), key),
+            (0..STEPS).collect::<Vec<_>>(),
+            "{key}: promoted head must hold every step"
+        );
+    }
+
+    // --- Chain byte-identity.  g1's chain [1,2] was never disturbed:
+    // every record (trace stamps included — they ride the stored
+    // payload) must be byte-identical on head and tail.  g0's tail
+    // joined at repair time, so its records are a byte-identical
+    // subset of the head's.
+    for r in 0..RANKS {
+        let key = &keys[r as usize];
+        let on_head = record_bytes(&net.store(1), key);
+        let on_tail = record_bytes(&net.store(2), key);
+        let g = t.groups.group_of_rank(r as usize).unwrap();
+        if g == 1 {
+            assert_eq!(on_head, on_tail, "{key}: undisturbed chain must mirror");
+        } else {
+            let head_set: BTreeSet<_> = on_head.iter().collect();
+            assert!(!on_tail.is_empty(), "{key}: repaired tail got new writes");
+            for entry in &on_tail {
+                assert!(
+                    head_set.contains(entry),
+                    "{key}: tail entry {:?} diverges from the head",
+                    entry.0
+                );
+            }
+        }
+    }
+
+    // --- The analysis saw every window fire, no gaps, no dupes.
+    let per_rank = STEPS as usize - WINDOW;
+    let expect = per_rank * RANKS as usize;
+    let mut results: Vec<AnalysisResult> = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(25);
+    while results.len() < expect && Instant::now() < deadline {
+        if let Ok((_seq, res)) = rx.recv_timeout(Duration::from_millis(100)) {
+            results.push(res);
+        }
+    }
+    ctx.stop().unwrap();
+    results.extend(rx.try_iter().map(|(_, r)| r));
+    assert_eq!(results.len(), expect, "analysis count");
+    for r in 0..RANKS {
+        let key = &keys[r as usize];
+        let mut steps: Vec<u64> = results
+            .iter()
+            .filter(|a| &a.key == key)
+            .map(|a| a.step)
+            .collect();
+        steps.sort_unstable();
+        assert_eq!(
+            steps,
+            (WINDOW as u64..STEPS).collect::<Vec<_>>(),
+            "{key}: fire steps have gaps — records were lost or reordered"
+        );
+    }
+
+    // --- Consumer cursors survived the failover byte-identically: the
+    // reader acked the promoted head, which gossiped every cursor to
+    // its chain tail.
+    for key in &keys {
+        let on_head = net.store(1).acked(key);
+        assert!(on_head > EntryId::ZERO, "{key}: reader acked the new head");
+        assert_eq!(
+            on_head,
+            net.store(2).acked(key),
+            "{key}: cursor must be byte-identical down the chain"
+        );
+    }
+
+    // --- Staleness trace: the sampled records crossed every hop, so
+    // the per-hop histograms can attribute the failover stall (records
+    // written just before the kill were only *delivered* after the
+    // reader followed the promotion — that wait lands in the delivery
+    // hop, not in queue/ack time).
+    assert!(metrics.trace.sampled.get() >= 16, "1-in-4 of 80 writes");
+    assert!(metrics.trace.hop_queue_us.count() > 0);
+    assert!(metrics.trace.hop_ack_us.count() > 0);
+    assert!(metrics.trace.hop_deliver_us.count() > 0);
+    assert!(metrics.trace.hop_analysis_us.count() > 0);
+    assert!(metrics.trace.staleness_us.count() > 0);
+
+    // --- Oracle: the final window's DMD must match the offline
+    // reference to 1e-6 — the machine loss is analytically invisible.
+    for rank in 0..RANKS {
+        let key = &keys[rank as usize];
+        let streamed = results
+            .iter()
+            .filter(|a| &a.key == key)
+            .max_by_key(|a| a.step)
+            .unwrap();
+        assert_eq!(streamed.step, STEPS - 1);
+        assert_eq!(streamed.backend, "rust");
+
+        let m1 = WINDOW + 1;
+        let mut x = vec![0.0f64; DIM * m1];
+        for (j, step) in (STEPS - m1 as u64..STEPS).enumerate() {
+            let snap = snapshot(rank, step);
+            for i in 0..DIM {
+                x[i * m1 + j] = snap[i] as f64;
+            }
+        }
+        let xm = Mat::from_slice(DIM, m1, &x).unwrap();
+        let (eigs, sigma, stability) = dmd::analyze_window(&xm, DMD_RANK).unwrap();
+
+        assert!(
+            (streamed.stability - stability).abs() <= 1e-6,
+            "{key}: stability {} vs offline {}",
+            streamed.stability,
+            stability
+        );
+        assert_eq!(streamed.eigs.len(), eigs.len());
+        for (a, b) in streamed.eigs.iter().zip(&eigs) {
+            assert!(
+                (a.re - b.re).abs() <= 1e-6 && (a.im - b.im).abs() <= 1e-6,
+                "{key}: eig {a:?} vs offline {b:?}"
+            );
+        }
+        for (a, b) in streamed.sigma.iter().zip(&sigma) {
+            assert!((a - b).abs() <= 1e-6, "{key}: sigma {a} vs offline {b}");
+        }
+    }
+    for d in &dirs {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+/// ISSUE 10 satellite: 64 seeded event scripts over replicated
+/// topologies — machine kills of chain heads, mid-chain members and
+/// tails, concurrent rebalancer sweeps, adapt-style payload-shape
+/// changes, scale-outs and transient mid-frame faults.  Invariants:
+///
+/// 1. the topology stays valid and its epoch monotonic after every
+///    event;
+/// 2. every per-endpoint segment is strictly step-increasing
+///    (exactly-once, in step order, per segment);
+/// 3. no acked record is ever lost: the union of all surviving
+///    segments is exactly the written step set, even though every
+///    kill destroys a store outright.
+///
+/// Kills are restricted to endpoints whose every chain still has a
+/// *full-history* survivor — a member present in that chain
+/// continuously since the first write.  (Chain repair does not
+/// backfill history; a member added mid-run only holds the suffix, so
+/// killing the last continuous member would lose the prefix by
+/// design.  The tracked `holders` sets encode exactly that rule.)
+#[test]
+fn prop_replicated_exactly_once() {
+    prop::forall(0x10C4A1, 64, &U64Range(0, u64::MAX - 1), |seed| {
+        run_replicated_case(*seed).map_err(|e| format!("{e:#}"))
+    });
+}
+
+fn run_replicated_case(seed: u64) -> Result<()> {
+    let mut rng = Rng::new(seed);
+    let ranks = 1 + rng.next_below(5) as usize;
+    let gsize = 1 + rng.next_below(2) as usize;
+    let n_eps = 2 + rng.next_below(3) as usize; // 2..=4
+    let factor = (2 + rng.next_below(2) as usize).min(n_eps); // 2..=3
+    let n_groups = ranks.div_ceil(gsize);
+
+    let net = SimNet::new();
+    for _ in 0..n_eps {
+        net.add_endpoint(StoreConfig::default());
+    }
+    let groups = GroupMap::new(ranks, gsize, n_eps)?;
+    let topology = TopologyHandle::new_replicated(
+        groups.clone(),
+        vec![dummy_addr(); n_eps],
+        &[],
+        factor,
+    )?;
+    let keys: Vec<String> =
+        (0..ranks).map(|r| elasticbroker::record::stream_key("u", r as u32)).collect();
+    net.apply_replication(&topology.snapshot(), &keys, ReplAck::Tail)?;
+
+    let dialer: Arc<dyn Dialer> = Arc::new(SimDialer::new(net.clone()));
+    let metrics = WorkflowMetrics::new();
+    let mut shippers: Vec<Shipper> = Vec::with_capacity(ranks);
+    for r in 0..ranks {
+        shippers.push(Shipper::register(
+            keys[r].clone(),
+            groups.group_of_rank(r)?,
+            topology.clone(),
+            dialer.clone(),
+            metrics.clone(),
+            8,
+        )?);
+    }
+
+    // holders[g]: members of g's chain continuously since step 0 — the
+    // only endpoints guaranteed to hold g's *entire* history (chain
+    // repair forwards new writes but never backfills old ones).
+    let mut holders: Vec<BTreeSet<usize>> = Vec::with_capacity(n_groups);
+    let mut ever: Vec<BTreeSet<usize>> = Vec::with_capacity(n_groups);
+    {
+        let topo = topology.snapshot();
+        for g in 0..n_groups {
+            let chain: BTreeSet<usize> =
+                topo.replica_chain(g)?.iter().copied().collect();
+            holders.push(chain.clone());
+            ever.push(chain);
+        }
+    }
+    // Intersect holders with the current chains after every topology
+    // mutation; `ever` accumulates everything that was ever a member.
+    let refresh = |topology: &TopologyHandle,
+                   holders: &mut [BTreeSet<usize>],
+                   ever: &mut [BTreeSet<usize>]|
+     -> Result<()> {
+        let topo = topology.snapshot();
+        for g in 0..holders.len() {
+            let chain: BTreeSet<usize> =
+                topo.replica_chain(g)?.iter().copied().collect();
+            holders[g].retain(|m| chain.contains(m));
+            ever[g].extend(chain);
+        }
+        Ok(())
+    };
+
+    let mut next_step = vec![0u64; ranks];
+    // Adapt-style payload levels: the ladder shrinks the payload shape
+    // mid-stream; replication must be shape-agnostic.
+    let mut levels = vec![0usize; ranks];
+    let mut last_epoch = topology.epoch();
+
+    let n_events = 6 + rng.next_below(12);
+    for _ in 0..n_events {
+        match rng.next_below(10) {
+            // write bursts dominate
+            0..=4 => {
+                for r in 0..ranks {
+                    let k = 1 + rng.next_below(4);
+                    let len = 4 >> levels[r].min(2); // 4, 2 or 1 floats
+                    let records: Vec<StreamRecord> = (next_step[r]
+                        ..next_step[r] + k)
+                        .map(|s| {
+                            StreamRecord::from_f32(
+                                "u",
+                                r as u32,
+                                s,
+                                0,
+                                &[len as u32],
+                                &vec![s as f32; len],
+                            )
+                        })
+                        .collect::<Result<_>>()?;
+                    shippers[r].ship(&records)?;
+                    next_step[r] += k;
+                }
+            }
+            // adapt level change on a random stream
+            5 => {
+                let r = rng.next_below(ranks as u64) as usize;
+                levels[r] = rng.next_below(3) as usize;
+            }
+            // whole-machine loss + failover (drain → repair → re-wire)
+            6 => {
+                let topo = topology.snapshot();
+                let live = topo.live_endpoints();
+                if live.len() < 2 {
+                    continue;
+                }
+                let v = live[rng.next_below(live.len() as u64) as usize];
+                let safe = (0..n_groups).all(|g| {
+                    !ever[g].contains(&v)
+                        || holders[g].iter().any(|&m| m != v)
+                });
+                if !safe {
+                    continue;
+                }
+                net.kill_machine(v);
+                topology.drain_endpoint(v)?;
+                topology.repair_chains()?;
+                net.apply_replication(&topology.snapshot(), &keys, ReplAck::Tail)?;
+                refresh(&topology, &mut holders, &mut ever)?;
+            }
+            // scale-out + chain repair onto the new machine
+            7 => {
+                if net.len() < 5 {
+                    let idx = net.add_endpoint(StoreConfig::default());
+                    let (slot, _) = topology.scale_out(dummy_addr())?;
+                    anyhow::ensure!(slot == idx, "net/topology slot skew");
+                    topology.repair_chains()?;
+                    net.apply_replication(&topology.snapshot(), &keys, ReplAck::Tail)?;
+                    refresh(&topology, &mut holders, &mut ever)?;
+                }
+            }
+            // transient mid-frame fault (drops also hit forward links,
+            // exercising the REPL retry + chain-wide DUP dedupe path)
+            8 => {
+                let e = rng.next_below(net.len() as u64) as usize;
+                net.inject(
+                    e,
+                    FaultSchedule {
+                        drop_after_frames: Some(rng.next_below(2)),
+                        partial_commands: rng.next_below(3) as usize,
+                        refuse_connects: rng.next_below(2) as u32,
+                        ..Default::default()
+                    },
+                );
+            }
+            // rebalancer sweep with a synthetically pressured endpoint:
+            // sheds must stay chain-safe, apply() repairs short chains
+            _ => {
+                let topo = topology.snapshot();
+                let slow = rng.next_below(topo.endpoints.len() as u64) as usize;
+                let mut samples =
+                    vec![EndpointSample::default(); topo.endpoints.len()];
+                samples[slow].flush_p95_us = u64::MAX / 2;
+                let plan =
+                    rebalancer::evaluate(&topo, &samples, &QosThresholds::default());
+                rebalancer::apply(&plan, &topology)?;
+                net.apply_replication(&topology.snapshot(), &keys, ReplAck::Tail)?;
+                refresh(&topology, &mut holders, &mut ever)?;
+            }
+        }
+        // Invariant 1: valid replicated assignment, monotonic epoch.
+        let topo = topology.snapshot();
+        topo.validate()?;
+        anyhow::ensure!(topo.epoch >= last_epoch, "epoch went backwards");
+        last_epoch = topo.epoch;
+    }
+
+    // Invariants 2 + 3: replay every stream across all endpoints.
+    for r in 0..ranks {
+        let key = &keys[r];
+        let mut union: BTreeSet<u64> = BTreeSet::new();
+        for e in 0..net.len() {
+            let mut prev: Option<u64> = None;
+            for entry in net.store(e).read_after(key, EntryId::ZERO, 0) {
+                if entry.fields[0].0 == b"h" {
+                    continue;
+                }
+                let rec = StreamRecord::decode(&entry.fields[0].1)?;
+                if let Some(p) = prev {
+                    anyhow::ensure!(
+                        rec.step > p,
+                        "{key}: endpoint {e} segment not strictly increasing \
+                         ({} after {p})",
+                        rec.step
+                    );
+                }
+                prev = Some(rec.step);
+                union.insert(rec.step);
+            }
+        }
+        let want: BTreeSet<u64> = (0..next_step[r]).collect();
+        anyhow::ensure!(
+            union == want,
+            "{key}: acked records lost across machine kills — \
+             {} of {} steps recovered",
+            union.len(),
+            want.len()
+        );
+    }
+    Ok(())
+}
+
+/// Fencing edge: after a failover, the *old* head is a zombie — its
+/// local fence still accepts the stale epoch, but its chain forward
+/// hits the promoted successor's raised fence and the `STALE` bounces
+/// back through the chain to the writer.  Without the forwarded fence
+/// the zombie would keep acking writes nobody will ever read.
+#[test]
+fn zombie_old_head_is_fenced_stale_through_the_chain() {
+    let net = SimNet::new();
+    net.add_endpoint(StoreConfig::default());
+    net.add_endpoint(StoreConfig::default());
+    let topology = TopologyHandle::new_replicated(
+        GroupMap::new(1, 1, 2).unwrap(),
+        vec![dummy_addr(); 2],
+        &[],
+        2,
+    )
+    .unwrap();
+    let keys = vec!["u/0".to_string()];
+    net.apply_replication(&topology.snapshot(), &keys, ReplAck::Tail).unwrap();
+
+    let dialer = SimDialer::new(net.clone());
+    let mut old_head = dialer.dial(0).unwrap();
+    let replies = old_head
+        .exchange(&[hello("u/0", 1), xaddf("u/0", 1, 0, "a"), xaddf("u/0", 1, 1, "b")])
+        .unwrap();
+    assert!(replies.iter().all(|r| !r.is_error()), "{replies:?}");
+    assert_eq!(net.store(1).fenced_last_step("u/0"), Some(1), "chain mirrored");
+
+    // Failover: the successor is promoted and a new writer registers
+    // there at epoch 2 (what the shipper does after the topology bump).
+    let mut new_head = dialer.dial(1).unwrap();
+    let replies = new_head.exchange(&[hello("u/0", 2)]).unwrap();
+    assert!(!replies[0].is_error(), "{:?}", replies[0]);
+    assert_eq!(net.store(1).stream_epoch("u/0"), 2);
+
+    // The zombie writes on: its own fence still says epoch 1, so the
+    // record lands locally — but the forward is rejected STALE by the
+    // promoted successor and the error propagates back verbatim.
+    let replies = old_head.exchange(&[xaddf("u/0", 1, 2, "c")]).unwrap();
+    let msg = err_text(&replies[0]);
+    assert!(msg.starts_with("STALE"), "zombie write must bounce: {msg}");
+    assert_eq!(
+        net.store(1).fenced_last_step("u/0"),
+        Some(1),
+        "the zombie's unreplicated orphan never reaches the new chain"
+    );
+
+    // Even re-registration at the stale epoch is refused through the
+    // chain — the zombie cannot rejoin without a topology refresh.
+    let replies = old_head.exchange(&[hello("u/0", 1)]).unwrap();
+    let msg = err_text(&replies[0]);
+    assert!(msg.starts_with("STALE"), "stale re-HELLO must bounce: {msg}");
+}
+
+/// Fencing edge: a frame that broke after the head applied (and
+/// forwarded) a prefix is re-shipped whole; the head answers `DUP` for
+/// the landed prefix and the forward keeps the chain converged — no
+/// record is double-stored anywhere, and every chain copy keeps the
+/// byte-identical id the head assigned on first landing.
+#[test]
+fn reshipped_unacked_frame_dedupes_chain_wide() {
+    let net = SimNet::new();
+    net.add_endpoint(StoreConfig::default());
+    net.add_endpoint(StoreConfig::default());
+    let topology = TopologyHandle::new_replicated(
+        GroupMap::new(1, 1, 2).unwrap(),
+        vec![dummy_addr(); 2],
+        &[],
+        2,
+    )
+    .unwrap();
+    let keys = vec!["u/0".to_string()];
+    net.apply_replication(&topology.snapshot(), &keys, ReplAck::Tail).unwrap();
+
+    let dialer = SimDialer::new(net.clone());
+    let mut conn = dialer.dial(0).unwrap();
+    let replies = conn
+        .exchange(&[hello("u/0", 1), xaddf("u/0", 1, 0, "a")])
+        .unwrap();
+    assert!(replies.iter().all(|r| !r.is_error()), "{replies:?}");
+
+    // The next frame breaks after its first command fully executed —
+    // stored on the head AND forwarded down the chain — but the writer
+    // saw no reply for any of it.
+    net.inject(
+        0,
+        FaultSchedule {
+            drop_after_frames: Some(0),
+            partial_commands: 1,
+            ..Default::default()
+        },
+    );
+    let err = conn
+        .exchange(&[xaddf("u/0", 1, 1, "b"), xaddf("u/0", 1, 2, "c")])
+        .unwrap_err();
+    assert!(err.to_string().contains("dropped"), "{err}");
+    assert_eq!(net.store(0).fenced_last_step("u/0"), Some(1));
+    assert_eq!(net.store(1).fenced_last_step("u/0"), Some(1), "prefix forwarded");
+
+    // Re-ship the whole frame: DUP for the landed record, fresh land
+    // for the rest — on every chain member.
+    conn.reconnect().unwrap();
+    let replies = conn
+        .exchange(&[xaddf("u/0", 1, 1, "b"), xaddf("u/0", 1, 2, "c")])
+        .unwrap();
+    assert_eq!(replies[0], Value::Simple("DUP".into()));
+    assert!(!replies[1].is_error(), "{:?}", replies[1]);
+
+    let head = record_bytes(&net.store(0), "u/0");
+    let tail = record_bytes(&net.store(1), "u/0");
+    assert_eq!(head.len(), 3, "no double-store on the head");
+    assert_eq!(head, tail, "chain copies must stay byte-identical");
+    assert_eq!(segment_steps(&net.store(0), "u/0"), vec![0, 1, 2]);
+}
+
+/// Fencing edge: a WAL-backed replica that crashes and restarts
+/// replays its log and rejoins the chain at the exact watermark it had
+/// acknowledged — the head's REPL-bounced retry then heals the gap the
+/// outage left, and the chain converges again.
+#[test]
+fn replica_wal_restart_rejoins_at_the_right_watermark() {
+    let dir = std::env::temp_dir()
+        .join(format!("eb-repl-replica-wal-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let net = SimNet::new();
+    net.add_endpoint(StoreConfig::default()); // head: in-memory
+    net.add_endpoint(StoreConfig {
+        wal: Some(WalConfig {
+            dir: dir.clone(),
+            fsync: FsyncPolicy::Always,
+            segment_bytes: 1 << 20,
+        }),
+        ..Default::default()
+    });
+    let topology = TopologyHandle::new_replicated(
+        GroupMap::new(1, 1, 2).unwrap(),
+        vec![dummy_addr(); 2],
+        &[],
+        2,
+    )
+    .unwrap();
+    let keys = vec!["u/0".to_string()];
+    net.apply_replication(&topology.snapshot(), &keys, ReplAck::Tail).unwrap();
+
+    let dialer = SimDialer::new(net.clone());
+    let mut conn = dialer.dial(0).unwrap();
+    let replies = conn
+        .exchange(&[
+            hello("u/0", 1),
+            xaddf("u/0", 1, 0, "a"),
+            xaddf("u/0", 1, 1, "b"),
+            xaddf("u/0", 1, 2, "c"),
+        ])
+        .unwrap();
+    assert!(replies.iter().all(|r| !r.is_error()), "{replies:?}");
+
+    // The replica's process dies.  Under tail-ack the head must now
+    // bounce writes with REPL — stored locally, not yet durable
+    // chain-wide — instead of acking into a one-copy window.
+    net.kill(1);
+    let replies = conn.exchange(&[xaddf("u/0", 1, 3, "d")]).unwrap();
+    let msg = err_text(&replies[0]);
+    assert!(msg.starts_with("REPL"), "unreachable successor: {msg}");
+
+    // Restart: the WAL replays entries, the epoch fence and the step
+    // high-water mark — the replica rejoins exactly where it acked.
+    net.restart(1);
+    let replica = net.store(1);
+    assert_eq!(replica.fenced_last_step("u/0"), Some(2), "watermark replayed");
+    assert_eq!(replica.stream_epoch("u/0"), 1, "fence replayed");
+    assert!(replica.replayed_entries() >= 3);
+
+    // The writer's retry heals the chain: the head dedupes (DUP) and
+    // re-forwards, the recovered replica accepts the record it missed.
+    let replies = conn.exchange(&[xaddf("u/0", 1, 3, "d")]).unwrap();
+    assert_eq!(replies[0], Value::Simple("DUP".into()), "head already has it");
+    assert_eq!(segment_steps(&net.store(1), "u/0"), vec![0, 1, 2, 3]);
+    assert_eq!(net.store(1).fenced_last_step("u/0"), Some(3));
+
+    // Steady state resumes with byte-identical ids chain-wide.
+    let replies = conn.exchange(&[xaddf("u/0", 1, 4, "e")]).unwrap();
+    assert!(!replies[0].is_error(), "{:?}", replies[0]);
+    let head = record_bytes(&net.store(0), "u/0");
+    let tail = record_bytes(&net.store(1), "u/0");
+    assert_eq!(head.last(), tail.last(), "post-heal ids identical again");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// ISSUE 10 satellite: the observability plane survives failover.  A
+/// record carrying sampled staleness-trace hop stamps and the
+/// consumer-group cursors acked against the head must both be
+/// byte-identical on the promoted successor after the head's machine
+/// is lost — dashboards and subscriber fleets resume exactly where
+/// they were.
+#[test]
+fn cursors_and_trace_stamps_survive_failover_byte_identically() {
+    let net = SimNet::new();
+    net.add_endpoint(StoreConfig::default());
+    net.add_endpoint(StoreConfig::default());
+    let topology = TopologyHandle::new_replicated(
+        GroupMap::new(1, 1, 2).unwrap(),
+        vec![dummy_addr(); 2],
+        &[],
+        2,
+    )
+    .unwrap();
+    let keys = vec!["u/0".to_string()];
+    net.apply_replication(&topology.snapshot(), &keys, ReplAck::Tail).unwrap();
+
+    // A traced record, built the way the broker's 1-in-N sampler does:
+    // a minimal lossless EBR2 header carrying the hop stamps
+    // (deliver_us stays 0 in stored bytes — readers stamp in memory).
+    let mut rec = StreamRecord::from_f32("u", 0, 0, 100, &[4], &[1.0, 2.0, 3.0, 4.0])
+        .unwrap();
+    let stamps = Trace {
+        origin_us: 100,
+        enqueue_us: 250,
+        flush_us: 1_000,
+        deliver_us: 0,
+    };
+    rec.meta = Some(FrameMeta {
+        encoding: Encoding::F32,
+        codec: CodecKind::None,
+        enc_param: 0.0,
+        err_bound: 0.0,
+        raw_len: rec.payload.len() as u32,
+        stats: None,
+        trace: Some(stamps),
+        provenance: String::new(),
+    });
+
+    let dialer = SimDialer::new(net.clone());
+    let mut conn = dialer.dial(0).unwrap();
+    let replies = conn
+        .exchange(&[hello("u/0", 1), xaddf("u/0", 1, 0, rec.encode())])
+        .unwrap();
+    assert!(replies.iter().all(|r| !r.is_error()), "{replies:?}");
+    let before = record_bytes(&net.store(0), "u/0");
+    assert_eq!(before.len(), 1);
+
+    // Two subscriber fleets ack their cursors against the head; the
+    // cursor gossip rides the chain.
+    let id = before[0].0;
+    let replies = conn
+        .exchange(&[
+            Request::new("XACKPOS").arg("u/0").arg(id.to_string()),
+            Request::new("XACKPOS")
+                .arg("u/0")
+                .arg("GROUP")
+                .arg("dashboard")
+                .arg(id.to_string()),
+        ])
+        .unwrap();
+    assert!(replies.iter().all(|r| !r.is_error()), "{replies:?}");
+
+    // The head's machine dies, WAL and all.  Everything the promoted
+    // successor serves must be byte-for-byte what the head served.
+    net.kill_machine(0);
+    let after = record_bytes(&net.store(1), "u/0");
+    assert_eq!(before, after, "stored record bytes survive promotion");
+    let survived = StreamRecord::peek_trace(&after[0].1)
+        .expect("trace stamps survive failover");
+    assert_eq!(survived, stamps, "hop stamps byte-identical on the successor");
+    assert_eq!(net.store(1).acked("u/0"), id, "default-group cursor survives");
+    assert_eq!(
+        net.store(1).acked_group("u/0", "dashboard"),
+        id,
+        "named consumer-group cursor survives"
+    );
+    assert_eq!(net.store(0).acked("u/0"), EntryId::ZERO, "old machine is gone");
+}
