@@ -26,10 +26,16 @@
 //! by [`Topology::validate`] like every other invariant here — is that
 //! a chain never visits the same endpoint or the same failure domain
 //! twice.  Failover is nothing new: [`TopologyHandle::drain_endpoint`]
-//! of a chain head promotes its successor (which, thanks to tail-acks,
-//! holds every acknowledged record) and bumps the epoch, so the
-//! existing fencing machinery turns the old head into a zombie.
+//! of a chain head promotes a surviving member (preferring one that,
+//! thanks to tail-acks, holds every acknowledged record — repair
+//! recruits are tracked as *catching up* and only promoted as a last
+//! resort) and bumps the epoch, so the existing fencing machinery
+//! turns the old head into a zombie.  Control planes that must react
+//! to an epoch bump in the same call stack (e.g. rewiring replication
+//! maps onto a just-promoted head) install a
+//! [`TopologyHandle::set_on_change`] observer instead of polling.
 
+use std::collections::BTreeSet;
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
@@ -71,6 +77,16 @@ pub struct Topology {
     /// Target chain length for placement and repair (1 = replication
     /// off).
     pub replication_factor: usize,
+    /// `catching_up[g]` = chain members of group `g` added by
+    /// [`TopologyHandle::repair_chains`] after writes began.  Until a
+    /// backfill mechanism exists they hold only the suffix of the
+    /// group's history since they joined, so failover promotion must
+    /// never *prefer* them over a fully-replicated member — promoting
+    /// one would serve a truncated history and lose acked records.
+    /// Cleared by [`TopologyHandle::mark_replica_synced`] (the future
+    /// backfill completion hook), by promotion-of-last-resort, or when
+    /// the member leaves the chain.
+    pub catching_up: Vec<BTreeSet<usize>>,
 }
 
 impl Topology {
@@ -130,6 +146,7 @@ impl Topology {
                 chain
             })
             .collect();
+        let n_groups = replicas.len();
         let topo = Topology {
             epoch: 1,
             groups,
@@ -137,6 +154,7 @@ impl Topology {
             endpoints,
             replicas,
             replication_factor: factor,
+            catching_up: vec![BTreeSet::new(); n_groups],
         };
         topo.validate()?;
         Ok(topo)
@@ -195,6 +213,16 @@ impl Topology {
         let chain = self.replicas.get(group)?;
         let pos = chain.iter().position(|&m| m == e)?;
         chain.get(pos + 1).copied()
+    }
+
+    /// Whether chain member `e` of `group` joined via repair and has
+    /// not been backfilled — i.e. it holds only the suffix of the
+    /// group's history and must not be preferred for promotion.
+    pub fn is_catching_up(&self, group: usize, e: usize) -> bool {
+        self.catching_up
+            .get(group)
+            .map(|s| s.contains(&e))
+            .unwrap_or(false)
     }
 
     /// The core invariant: every group is assigned to exactly one
@@ -256,6 +284,21 @@ impl Topology {
             }
         }
         ensure!(
+            self.catching_up.len() == self.replicas.len(),
+            "catching-up marks cover {} groups, topology has {}",
+            self.catching_up.len(),
+            self.replicas.len()
+        );
+        for (g, marks) in self.catching_up.iter().enumerate() {
+            for &e in marks {
+                ensure!(
+                    self.replicas[g][1..].contains(&e),
+                    "group {g}: catching-up mark on {e}, which is not a \
+                     follower in its chain"
+                );
+            }
+        }
+        ensure!(
             !self.live_endpoints().is_empty(),
             "no live endpoints left"
         );
@@ -283,6 +326,10 @@ impl Topology {
     }
 }
 
+/// Observer invoked (outside the topology lock) after every successful
+/// epoch bump, with a consistent snapshot of the new state.
+type ChangeCallback = Arc<dyn Fn(&Topology) + Send + Sync>;
+
 /// Shared, versioned view of the topology.
 ///
 /// Cloning the handle shares the topology.  `epoch()` is one atomic
@@ -293,6 +340,7 @@ impl Topology {
 pub struct TopologyHandle {
     inner: Arc<RwLock<Topology>>,
     epoch: Arc<AtomicU64>,
+    on_change: Arc<RwLock<Option<ChangeCallback>>>,
 }
 
 impl TopologyHandle {
@@ -301,6 +349,44 @@ impl TopologyHandle {
         TopologyHandle {
             inner: Arc::new(RwLock::new(topology)),
             epoch,
+            on_change: Arc::new(RwLock::new(None)),
+        }
+    }
+
+    /// Install the change observer.  It runs synchronously on the
+    /// mutating thread, *after* the topology lock is released, so a
+    /// failover promotion and the rewiring it requires (replication
+    /// maps on the new head) land in the same call stack — no polling
+    /// window in which tail-acks run against a stale map.  The callback
+    /// must not mutate the topology (that would recurse).  Replaces any
+    /// previous observer.
+    pub fn set_on_change(&self, cb: impl Fn(&Topology) + Send + Sync + 'static) {
+        *self.on_change.write().unwrap() = Some(Arc::new(cb));
+    }
+
+    /// Drop the change observer (releases whatever the closure owns).
+    pub fn clear_on_change(&self) {
+        *self.on_change.write().unwrap() = None;
+    }
+
+    /// Snapshot for the observer, taken while the topology lock is
+    /// still held — but only when an observer is installed.
+    fn change_snapshot(&self, t: &Topology) -> Option<Topology> {
+        if self.on_change.read().unwrap().is_some() {
+            Some(t.clone())
+        } else {
+            None
+        }
+    }
+
+    /// Deliver a post-mutation snapshot; call with the topology lock
+    /// released.
+    fn notify_change(&self, snap: Option<Topology>) {
+        if let Some(t) = snap {
+            let cb = self.on_change.read().unwrap().clone();
+            if let Some(cb) = cb {
+                cb(&t);
+            }
         }
     }
 
@@ -354,19 +440,23 @@ impl TopologyHandle {
     }
 
     fn mutate<R>(&self, f: impl FnOnce(&mut Topology) -> Result<R>) -> Result<R> {
-        let mut t = self.inner.write().unwrap();
-        let before = t.clone();
-        match f(&mut t).and_then(|r| t.validate().map(|_| r)) {
-            Ok(r) => {
-                t.epoch += 1;
-                self.epoch.store(t.epoch, Ordering::Release);
-                Ok(r)
+        let (r, snap) = {
+            let mut t = self.inner.write().unwrap();
+            let before = t.clone();
+            match f(&mut t).and_then(|r| t.validate().map(|_| r)) {
+                Ok(r) => {
+                    t.epoch += 1;
+                    self.epoch.store(t.epoch, Ordering::Release);
+                    (r, self.change_snapshot(&t))
+                }
+                Err(e) => {
+                    *t = before; // roll back a rejected mutation wholesale
+                    return Err(e);
+                }
             }
-            Err(e) => {
-                *t = before; // roll back a rejected mutation wholesale
-                Err(e)
-            }
-        }
+        };
+        self.notify_change(snap);
+        Ok(r)
     }
 
     /// Add an endpoint slot without moving any group onto it yet.
@@ -424,13 +514,18 @@ impl TopologyHandle {
 
     /// Scale-in / failure: mark a slot not-live, strip it from every
     /// replica chain, and re-route its groups.  A group whose chain
-    /// survives the loss is **promoted onto its successor** — thanks to
-    /// tail-acks the successor holds every acknowledged record, so this
-    /// epoch bump *is* chain-replication failover.  A group whose chain
-    /// is wiped out falls back to the least-loaded survivor (the
-    /// pre-replication drain behaviour).  The slot keeps its index; its
-    /// server (if still up) stays drainable by readers.  Returns the
-    /// new epoch.
+    /// survives the loss is **promoted onto a fully-replicated
+    /// successor** — thanks to tail-acks such a member holds every
+    /// acknowledged record, so this epoch bump *is* chain-replication
+    /// failover.  Members still catching up after a chain repair (no
+    /// backfill yet — they only hold the suffix since they joined) are
+    /// passed over, and promoted only as a last resort when no
+    /// full-history member survives: a truncated suffix still beats
+    /// the empty store a fresh reassignment would serve.  A group
+    /// whose chain is wiped out falls back to the least-loaded
+    /// survivor (the pre-replication drain behaviour).  The slot keeps
+    /// its index; its server (if still up) stays drainable by readers.
+    /// Returns the new epoch.
     pub fn drain_endpoint(&self, e: usize) -> Result<u64> {
         self.mutate(|t| {
             ensure!(e < t.endpoints.len(), "no endpoint slot {e}");
@@ -438,15 +533,33 @@ impl TopologyHandle {
             t.endpoints[e].live = false;
             for g in 0..t.assignment.len() {
                 t.replicas[g].retain(|&m| m != e);
+                t.catching_up[g].remove(&e);
                 if t.assignment[g] == e {
-                    match t.replicas[g].first().copied() {
-                        Some(successor) => t.assignment[g] = successor,
+                    let full = t.replicas[g]
+                        .iter()
+                        .copied()
+                        .find(|m| !t.catching_up[g].contains(m));
+                    match full.or_else(|| t.replicas[g].first().copied()) {
+                        Some(successor) => {
+                            if t.catching_up[g].remove(&successor) {
+                                log::warn!(
+                                    "topology: group {g} promotes catching-up \
+                                     endpoint {successor} — no fully-replicated \
+                                     member left; history before its join is \
+                                     unrecoverable"
+                                );
+                            }
+                            t.replicas[g].retain(|&m| m != successor);
+                            t.replicas[g].insert(0, successor);
+                            t.assignment[g] = successor;
+                        }
                         None => {
                             let target = t.least_loaded_live(None).ok_or_else(|| {
                                 anyhow::anyhow!("no live endpoint to drain {e} into")
                             })?;
                             t.assignment[g] = target;
                             t.replicas[g] = vec![target];
+                            t.catching_up[g].clear();
                         }
                     }
                 }
@@ -458,9 +571,13 @@ impl TopologyHandle {
 
     /// Top every short replica chain back up to the topology's
     /// replication factor with live endpoints from unused failure
-    /// domains (least loaded first, lowest index on ties).  Returns the
-    /// new epoch if anything changed; a no-op (chains full, or no
-    /// compatible endpoint) leaves the epoch untouched.
+    /// domains (least loaded first, lowest index on ties).  Recruits
+    /// are marked catching-up — they hold none of the group's history
+    /// and [`TopologyHandle::drain_endpoint`] must not prefer them for
+    /// promotion until [`TopologyHandle::mark_replica_synced`] clears
+    /// the mark.  Returns the new epoch if anything changed; a no-op
+    /// (chains full, or no compatible endpoint) leaves the epoch
+    /// untouched.
     pub fn repair_chains(&self) -> Result<Option<u64>> {
         let mut t = self.inner.write().unwrap();
         let before = t.clone();
@@ -491,6 +608,10 @@ impl TopologyHandle {
                 match best {
                     Some((_, e)) => {
                         t.replicas[g].push(e);
+                        // No backfill yet: the recruit holds none of the
+                        // group's history, so failover must not prefer it
+                        // (see [`Topology::catching_up`]).
+                        t.catching_up[g].insert(e);
                         changed = true;
                     }
                     None => break, // no compatible endpoint: stay short
@@ -506,7 +627,24 @@ impl TopologyHandle {
         }
         t.epoch += 1;
         self.epoch.store(t.epoch, Ordering::Release);
-        Ok(Some(t.epoch))
+        let epoch = t.epoch;
+        let snap = self.change_snapshot(&t);
+        drop(t);
+        self.notify_change(snap);
+        Ok(Some(epoch))
+    }
+
+    /// Declare that a catching-up chain member now holds the group's
+    /// full history (a backfill finished, or an operator verified the
+    /// copies match) and may be preferred for failover promotion again.
+    /// No-op if the member carries no mark.  Returns the new epoch.
+    pub fn mark_replica_synced(&self, group: usize, e: usize) -> Result<u64> {
+        self.mutate(|t| {
+            ensure!(group < t.replicas.len(), "no group {group}");
+            t.catching_up[group].remove(&e);
+            Ok(())
+        })?;
+        Ok(self.epoch())
     }
 
     /// Even out group load across live endpoints (at most one group of
@@ -524,7 +662,11 @@ impl TopologyHandle {
         }
         t.epoch += 1;
         self.epoch.store(t.epoch, Ordering::Release);
-        Ok(Some(t.epoch))
+        let epoch = t.epoch;
+        let snap = self.change_snapshot(&t);
+        drop(t);
+        self.notify_change(snap);
+        Ok(Some(epoch))
     }
 }
 
@@ -583,6 +725,11 @@ fn set_head_in_place(t: &mut Topology, g: usize, e: usize) {
     }
     t.replicas[g] = chain;
     t.assignment[g] = e;
+    // Members dropped from the chain shed their catching-up mark, and a
+    // catching-up member re-headed by an explicit migration is trusted
+    // by construction (readers follow the handoff, writers start fresh)
+    // — marks only ever apply to followers.
+    t.catching_up[g].retain(|&m| t.replicas[g][1..].contains(&m));
 }
 
 #[cfg(test)]
@@ -729,6 +876,105 @@ mod tests {
         // idempotent: full chains → no-op, epoch untouched
         assert!(h.repair_chains().unwrap().is_none());
         assert_eq!(h.epoch(), 3);
+    }
+
+    #[test]
+    fn repair_marks_recruits_catching_up() {
+        let h = rtopo(32, 16, 3, 2); // group 0 chain [0,1], group 1 chain [1,2]
+        h.drain_endpoint(0).unwrap();
+        h.repair_chains().unwrap().unwrap();
+        let t = h.snapshot();
+        assert_eq!(t.replica_chain(0).unwrap(), &[1, 2]);
+        // the recruit holds none of group 0's history…
+        assert!(t.is_catching_up(0, 2));
+        // …but it has always been a full member of group 1's chain
+        assert!(!t.is_catching_up(1, 2));
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn failover_prefers_full_history_member_over_recruit() {
+        let h = rtopo(16, 16, 4, 3); // one group, chain [0,1,2]
+        h.drain_endpoint(2).unwrap();
+        h.repair_chains().unwrap().unwrap(); // chain [0,1,3], 3 catching up
+        assert!(h.snapshot().is_catching_up(0, 3));
+        h.drain_endpoint(0).unwrap();
+        let t = h.snapshot();
+        // 1 held every tail-acked record; 3 only holds the suffix
+        assert_eq!(t.assignment[0], 1);
+        assert_eq!(t.replica_chain(0).unwrap(), &[1, 3]);
+        assert!(t.is_catching_up(0, 3));
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn last_resort_promotion_clears_catching_up_mark() {
+        let h = rtopo(32, 16, 3, 2); // group 0 chain [0,1], group 1 chain [1,2]
+        h.drain_endpoint(0).unwrap();
+        h.repair_chains().unwrap().unwrap(); // group 0 chain [1,2], 2 catching up
+        h.drain_endpoint(1).unwrap();
+        let t = h.snapshot();
+        // no full-history member left: the truncated recruit is still
+        // better than an empty reassignment, and it is head now
+        assert_eq!(t.assignment[0], 2);
+        assert_eq!(t.replica_chain(0).unwrap(), &[2]);
+        assert!(!t.is_catching_up(0, 2));
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn mark_replica_synced_restores_promotion_preference() {
+        let h = rtopo(32, 16, 3, 2);
+        h.drain_endpoint(0).unwrap();
+        h.repair_chains().unwrap().unwrap(); // group 0 chain [1,2], 2 catching up
+        h.mark_replica_synced(0, 2).unwrap();
+        assert!(!h.snapshot().is_catching_up(0, 2));
+        // synced → promotion is the normal preferred path again
+        h.drain_endpoint(1).unwrap();
+        let t = h.snapshot();
+        assert_eq!(t.assignment[0], 2);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn migrating_onto_a_recruit_clears_its_mark() {
+        let h = rtopo(32, 16, 3, 2);
+        h.drain_endpoint(0).unwrap();
+        h.repair_chains().unwrap().unwrap(); // group 0 chain [1,2], 2 catching up
+        // an explicit migration re-heads at 2: readers follow the
+        // handoff and writers start fresh there, so the mark is moot
+        h.assign(&[(0, 2)]).unwrap();
+        let t = h.snapshot();
+        assert_eq!(t.replica_chain(0).unwrap(), &[2, 1]);
+        assert!(!t.is_catching_up(0, 2));
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn on_change_fires_after_bumps_with_lock_released() {
+        use std::sync::Mutex;
+        let h = rtopo(32, 16, 3, 2);
+        let seen: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let h2 = h.clone();
+        let log = seen.clone();
+        h.set_on_change(move |t| {
+            // re-entering the handle proves the write lock is released
+            assert_eq!(h2.epoch(), t.epoch);
+            h2.snapshot();
+            log.lock().unwrap().push(t.epoch);
+        });
+        h.drain_endpoint(0).unwrap();
+        assert_eq!(*seen.lock().unwrap(), vec![2]);
+        h.repair_chains().unwrap().unwrap();
+        assert_eq!(*seen.lock().unwrap(), vec![2, 3]);
+        // a no-op keeps the epoch — and stays silent
+        assert!(h.repair_chains().unwrap().is_none());
+        // a rejected mutation rolls back — and stays silent
+        assert!(h.assign(&[(99, 0)]).is_err());
+        assert_eq!(*seen.lock().unwrap(), vec![2, 3]);
+        h.clear_on_change();
+        h.assign(&[(0, 1)]).unwrap();
+        assert_eq!(*seen.lock().unwrap(), vec![2, 3]);
     }
 
     #[test]

@@ -1110,11 +1110,37 @@ fn run_command(store: &Store, cmd: &Value) -> Result<CommandResult> {
                     }
                     Ok(Reply(Value::Bulk(id.to_string().into_bytes())))
                 }
-                FencedAdd::Duplicate => {
+                FencedAdd::Duplicate(stored) => {
                     // Still relayed: after a failed forward the writer
                     // retries the whole frame — the head dedupes, but
-                    // the successor may be the one that missed it.
-                    store.forward_to_successor(&key, cmd, true)?;
+                    // the successor may be the one that missed it.  A
+                    // head (no `ID` token yet) must stamp the id it
+                    // originally stored the record under, exactly like
+                    // the Added path: forwarding unstamped would let a
+                    // successor that missed the record self-assign a
+                    // wall-clock id, diverging the chain copies and
+                    // silently dropping every later explicit-id forward
+                    // behind its inflated `last_id`.
+                    if explicit_id.is_some() {
+                        store.forward_to_successor(&key, cmd, true)?;
+                    } else if let Some(id) = stored {
+                        let mut fwd = cmd.as_array().unwrap().to_vec();
+                        let at = if force { 5 } else { 4 };
+                        fwd.insert(at, Value::Bulk(id.to_string().into_bytes()));
+                        fwd.insert(at, Value::Bulk(b"ID".to_vec()));
+                        store.forward_to_successor(&key, &Value::Array(fwd), true)?;
+                    } else {
+                        // No stored id: the step never landed here (a
+                        // skipped, un-forced step under the watermark)
+                        // or fell off the replay ring.  There is no
+                        // record to replicate; forwarding the command
+                        // unstamped is the one thing that must never
+                        // happen.
+                        log::warn!(
+                            "endpoint server: DUP for '{key}' step {step} has no \
+                             stored id; skipping chain re-forward"
+                        );
+                    }
                     Ok(Reply(Value::Simple("DUP".into())))
                 }
             }

@@ -221,6 +221,14 @@ struct Stream {
     /// stream exactly-once when a writer re-ships an unacked frame
     /// after a connection failure.
     last_step: u64,
+    /// Recent fenced `(step, entry id)` pairs, oldest first (ISSUE 10).
+    /// A chain head answering `DUP` for a writer-retried step must
+    /// re-forward the record under the id it originally assigned —
+    /// otherwise a successor that missed the record would self-assign a
+    /// divergent wall-clock id and the chain copies would never match.
+    /// Bounded ring: retried steps are always inside the writer's
+    /// unacked window, which is far smaller than the cap.
+    step_ids: VecDeque<(u64, EntryId)>,
     /// Per-consumer-group acknowledged cursors (`XACKPOS`): everything
     /// at or below a group's cursor is consumed *by that group*.  The
     /// retention floor for trimming and log GC is the minimum across
@@ -249,6 +257,7 @@ impl Default for Stream {
             added: 0,
             writer_epoch: 0,
             last_step: u64::MAX, // sentinel: no fenced write yet
+            step_ids: VecDeque::new(),
             groups: HashMap::new(),
             evicted: 0,
             evicted_from: EntryId::ZERO,
@@ -257,6 +266,11 @@ impl Default for Stream {
     }
 }
 
+/// Cap of the per-stream fenced `(step, id)` replay ring.  Writer
+/// retries only ever cover the unacked in-flight window (a handful of
+/// frames); the cap just bounds memory on pathological streams.
+const STEP_ID_RING: usize = 1024;
+
 impl Stream {
     fn last_step(&self) -> Option<u64> {
         if self.last_step == u64::MAX {
@@ -264,6 +278,24 @@ impl Stream {
         } else {
             Some(self.last_step)
         }
+    }
+
+    /// Remember the id a fenced step was stored under (bounded ring).
+    fn note_step_id(&mut self, step: u64, id: EntryId) {
+        if self.step_ids.len() >= STEP_ID_RING {
+            self.step_ids.pop_front();
+        }
+        self.step_ids.push_back((step, id));
+    }
+
+    /// The id a fenced step was stored under, if still in the ring
+    /// (newest match wins — a forced late re-append supersedes).
+    fn step_id(&self, step: u64) -> Option<EntryId> {
+        self.step_ids
+            .iter()
+            .rev()
+            .find(|&&(s, _)| s == step)
+            .map(|&(_, id)| id)
     }
 
     /// The retention/trim floor: min acked cursor across groups (`0-0`
@@ -291,8 +323,12 @@ pub enum FencedAdd {
     /// Stored under this id.
     Added(EntryId),
     /// Step at or below the stream's high-water mark: already stored
-    /// by an earlier (possibly unacked) frame; nothing written.
-    Duplicate,
+    /// by an earlier (possibly unacked) frame; nothing written.  The
+    /// payload is the id this replica stored the record under, when
+    /// still known (ISSUE 10) — a chain head stamps it into the `DUP`
+    /// re-forward so a successor that missed the record stores the
+    /// byte-identical copy instead of self-assigning a divergent id.
+    Duplicate(Option<EntryId>),
 }
 
 /// Store configuration.
@@ -443,6 +479,10 @@ impl Store {
             for (key, rs) in replay.streams {
                 let shard = &store.shards[store.shard_of(&key)];
                 shard.clock_ms.fetch_max(rs.last_id.ms, Ordering::AcqRel);
+                let mut step_ids: VecDeque<(u64, EntryId)> = rs.step_ids.into();
+                while step_ids.len() > STEP_ID_RING {
+                    step_ids.pop_front();
+                }
                 let mut stream = Stream {
                     entries: rs.entries.into(),
                     last_id: rs.last_id,
@@ -450,6 +490,7 @@ impl Store {
                     added: 0,
                     writer_epoch: rs.epoch,
                     last_step: rs.step,
+                    step_ids,
                     groups: rs.acked,
                     evicted: 0,
                     evicted_from: EntryId::ZERO,
@@ -624,11 +665,13 @@ impl Store {
             s.writer_epoch = epoch;
             if let Some(eid) = id {
                 if eid <= s.last_id {
-                    return Ok(FencedAdd::Duplicate);
+                    // Chain-assigned ids are monotone: at-or-below the
+                    // top means this exact record is already here.
+                    return Ok(FencedAdd::Duplicate(Some(eid)));
                 }
             }
             if !force && s.last_step != u64::MAX && step <= s.last_step {
-                return Ok(FencedAdd::Duplicate);
+                return Ok(FencedAdd::Duplicate(s.step_id(step)));
             }
             self.ensure_budget(s)?;
             // The post-append high-water mark travels with the entry
@@ -640,7 +683,8 @@ impl Store {
             } else {
                 s.last_step
             };
-            let id = self.append_with_step(shard, key, s, id, fields, Some(new_step))?;
+            let id =
+                self.append_with_step(shard, key, s, id, fields, Some((step, new_step)))?;
             Ok(FencedAdd::Added(id))
         })?;
         if let (FencedAdd::Added(_), Some(t)) = (&res, traced) {
@@ -927,8 +971,11 @@ impl Store {
         self.append_with_step(shard, key, s, id, fields, None)
     }
 
-    /// The one true append.  `step` of `Some(n)` raises the stream's
-    /// fenced high-water mark to `n` together with the entry.
+    /// The one true append.  `fenced` of `Some((record step, new
+    /// watermark))` raises the stream's fenced high-water mark to the
+    /// watermark together with the entry and remembers the record's own
+    /// step → id pairing for `DUP` re-forwards (the two differ only for
+    /// forced late appends, whose step sits below the watermark).
     ///
     /// Log-before-ack: the entry (with the stream's post-append fencing
     /// state) is framed into the WAL before anything is mutated.  Two
@@ -947,7 +994,7 @@ impl Store {
         s: &mut Stream,
         id: Option<EntryId>,
         fields: Vec<(Vec<u8>, Vec<u8>)>,
-        step: Option<u64>,
+        fenced: Option<(u64, u64)>,
     ) -> Result<EntryId> {
         let id = match id {
             Some(explicit) => {
@@ -970,7 +1017,7 @@ impl Store {
         let entry = Entry::new(id, fields);
         let mut sync_err: Option<anyhow::Error> = None;
         if let Some(w) = &self.wal {
-            let log_step = step.unwrap_or(s.last_step);
+            let log_step = fenced.map(|(_, w)| w).unwrap_or(s.last_step);
             let seq = w.append_add_unsynced(key, &entry, s.writer_epoch, log_step)?;
             if let Err(e) = w.sync_appended(seq) {
                 sync_err = Some(e);
@@ -979,8 +1026,12 @@ impl Store {
         let sz = entry.byte_size();
         s.entries.push_back(entry);
         s.last_id = id;
-        if let Some(n) = step {
-            s.last_step = n;
+        if let Some((rec_step, watermark)) = fenced {
+            s.last_step = watermark;
+            // Applied even when the fsync below failed: the entry IS in
+            // memory (and framed), so the client's retry will DUP and
+            // must still find the id to re-forward down the chain.
+            s.note_step_id(rec_step, id);
         }
         s.bytes += sz;
         s.added += 1;
@@ -1763,17 +1814,20 @@ mod tests {
         let hello = store.hello("u/0", 1).unwrap();
         assert_eq!(hello.last_step, None);
         assert_eq!(hello.last_id, EntryId::ZERO);
+        let mut ids = Vec::new();
         for step in 0..4u64 {
-            assert!(matches!(
-                store.xadd_fenced("u/0", 1, step, false, fields("x")).unwrap(),
-                FencedAdd::Added(_)
-            ));
+            match store.xadd_fenced("u/0", 1, step, false, fields("x")).unwrap() {
+                FencedAdd::Added(id) => ids.push(id),
+                other => panic!("step {step}: expected Added, got {other:?}"),
+            }
         }
-        // the whole frame re-shipped: every record is a dup, none stored
+        // the whole frame re-shipped: every record is a dup, none
+        // stored — and each dup reports the id the record originally
+        // landed under, so a chain head can re-forward it verbatim.
         for step in 0..4u64 {
             assert_eq!(
                 store.xadd_fenced("u/0", 1, step, false, fields("x")).unwrap(),
-                FencedAdd::Duplicate
+                FencedAdd::Duplicate(Some(ids[step as usize]))
             );
         }
         assert_eq!(store.xlen("u/0"), 4);
@@ -1794,10 +1848,11 @@ mod tests {
         let store = Store::new(StoreConfig::default());
         store.hello("u/0", 1).unwrap();
         store.xadd_fenced("u/0", 1, 5, false, fields("a")).unwrap();
-        // un-forced: swallowed as a duplicate
+        // un-forced: swallowed as a duplicate (step 3 never actually
+        // landed, so there is no stored id to report)
         assert_eq!(
             store.xadd_fenced("u/0", 1, 3, false, fields("late")).unwrap(),
-            FencedAdd::Duplicate
+            FencedAdd::Duplicate(None)
         );
         // forced: stored (late, out of step order), watermark untouched
         assert!(matches!(
@@ -1954,10 +2009,13 @@ mod tests {
             .xadd_fenced("u/0", 2, 9, false, fields("z"))
             .unwrap_err();
         assert!(err.to_string().starts_with("STALE"), "{err}");
-        // DUP dedupe still holds across the restart
+        // DUP dedupe still holds across the restart — and the replayed
+        // step→id ring still maps the retried step to the id it was
+        // stored under, so chain re-forwards stay byte-identical even
+        // when the retry crosses a head restart.
         assert_eq!(
             store.xadd_fenced("u/0", 3, 4, false, fields("re")).unwrap(),
-            FencedAdd::Duplicate
+            FencedAdd::Duplicate(Some(last_id))
         );
         // the id clock resumed past the replayed ids
         let id = store.xadd("u/0", None, fields("new")).unwrap();

@@ -397,6 +397,10 @@ pub struct ReplayedStream {
     pub step: u64,
     /// Per-group acked cursors (empty = nothing ever acked).
     pub acked: HashMap<String, EntryId>,
+    /// Fenced `(step, id)` pairs in append order — rebuilt from the
+    /// watermark-raising `Add` ops so a restarted replica can still
+    /// stamp stored ids onto `DUP` re-forwards (ISSUE 10).
+    pub step_ids: Vec<(u64, EntryId)>,
 }
 
 impl Default for ReplayedStream {
@@ -407,6 +411,7 @@ impl Default for ReplayedStream {
             epoch: 0,
             step: u64::MAX,
             acked: HashMap::new(),
+            step_ids: Vec::new(),
         }
     }
 }
@@ -631,6 +636,13 @@ fn apply_replay(
                 st.entries.push(Entry::new(id, fields));
                 st.last_id = id;
                 replay.entries += 1;
+                // A watermark-raising op's logged step IS the record's
+                // own step (only forced late appends log an unchanged
+                // watermark, and their step→id pairing is ambiguous by
+                // construction) — keep it for DUP re-forward stamping.
+                if step != u64::MAX && (st.step == u64::MAX || step > st.step) {
+                    st.step_ids.push((step, id));
+                }
             } else {
                 log::warn!(
                     "wal: replay skipping duplicate entry {id} of '{key}' \

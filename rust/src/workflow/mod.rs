@@ -11,9 +11,10 @@
 //! * [`run_synth_workflow`] — Fig 7 (latency + aggregated throughput at
 //!   scale, ranks : endpoints : executors = 16 : 1 : 16).
 
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -48,33 +49,52 @@ pub struct CloudSide {
     last_result_us: Arc<AtomicU64>,
     obs_stop: Arc<AtomicBool>,
     obs_writer: Option<std::thread::JoinHandle<()>>,
-    repl_stop: Arc<AtomicBool>,
-    repl_watcher: Option<std::thread::JoinHandle<()>>,
 }
 
+/// One [`DialReplicaLink`] (one lazily-dialed connection) per
+/// `(endpoint, successor)` chain edge, shared by every stream routed
+/// over that edge and reused across rewires while the edge survives —
+/// an epoch bump must not redial connections that didn't move.
+type LinkCache = Mutex<HashMap<(usize, usize), Arc<dyn ReplicaLink>>>;
+
 /// Compute each endpoint's per-stream successor links from the current
-/// replica chains (ISSUE 10): every non-tail chain member gets a
-/// [`DialReplicaLink`] to its successor for every stream of the group;
-/// tails and unreplicated groups get none (`None` map = forwarding off).
+/// replica chains (ISSUE 10): every non-tail chain member gets a link
+/// to its successor for every stream of the group; tails and
+/// unreplicated groups get none (`None` map = forwarding off).  Links
+/// come from `links`, so the N streams of a group share one connection
+/// and unchanged edges keep theirs across epoch bumps; edges no longer
+/// in any chain are dropped from the cache (closing the connection once
+/// the last old map holding it is swapped out).
 fn replication_maps(
     topo: &crate::broker::Topology,
     field: &str,
     ack: ReplAck,
     dialer: &Arc<dyn Dialer>,
+    links: &LinkCache,
     n_endpoints: usize,
 ) -> Result<Vec<Option<Arc<ReplicationMap>>>> {
     let mut maps: Vec<ReplicationMap> =
         (0..n_endpoints).map(|_| ReplicationMap::new(ack)).collect();
+    let mut links = links.lock().unwrap();
+    let mut used: HashSet<(usize, usize)> = HashSet::new();
     for r in 0..topo.groups.total_ranks() {
         let key = crate::record::stream_key(field, r as u32);
         let g = topo.groups.group_of_rank(r)?;
         let chain = topo.replica_chain(g)?;
         for w in chain.windows(2) {
-            let link: Arc<dyn ReplicaLink> =
-                Arc::new(DialReplicaLink::new(dialer.clone(), w[1]));
+            let edge = (w[0], w[1]);
+            used.insert(edge);
+            let link = links
+                .entry(edge)
+                .or_insert_with(|| {
+                    Arc::new(DialReplicaLink::new(dialer.clone(), w[1]))
+                        as Arc<dyn ReplicaLink>
+                })
+                .clone();
             maps[w[0]].insert(key.clone(), link);
         }
     }
+    links.retain(|edge, _| used.contains(edge));
     Ok(maps
         .into_iter()
         .map(|m| if m.is_empty() { None } else { Some(Arc::new(m)) })
@@ -88,8 +108,9 @@ fn install_replication(
     field: &str,
     ack: ReplAck,
     dialer: &Arc<dyn Dialer>,
+    links: &LinkCache,
 ) -> Result<()> {
-    let maps = replication_maps(topo, field, ack, dialer, stores.len())?;
+    let maps = replication_maps(topo, field, ack, dialer, links, stores.len())?;
     for (store, map) in stores.iter().zip(maps) {
         store.set_replication(map);
     }
@@ -274,10 +295,11 @@ impl CloudSide {
         };
 
         // ISSUE 10: wire each store's per-stream successor link from the
-        // replica chains, and keep re-wiring as the topology epoch bumps
-        // (failover promotions and chain repairs move the links around).
-        let repl_stop = Arc::new(AtomicBool::new(false));
-        let mut repl_watcher = None;
+        // replica chains, and re-wire *synchronously inside every epoch
+        // bump* via the topology change observer — a failover promotion
+        // must install the new head's map in the same call stack, or
+        // tail-acked writes in the window before a polling sweep would
+        // be acked without ever reaching a successor.
         if cfg.replication_factor > 1 {
             if let Some(topo) = &topology {
                 let resolver = topo.clone();
@@ -296,35 +318,20 @@ impl CloudSide {
                     endpoints.iter().map(|s| s.store().clone()).collect();
                 let ack = cfg.replication_ack;
                 let wfield = field.to_string();
-                install_replication(&topo.snapshot(), &stores, &wfield, ack, &dialer)?;
-                let wtopo = topo.clone();
-                let stop = repl_stop.clone();
-                let nap = Duration::from_millis((cfg.rebalance_ms / 2).clamp(5, 100));
-                repl_watcher = Some(
-                    std::thread::Builder::new()
-                        .name("repl-wire".into())
-                        .spawn(move || {
-                            let mut last = wtopo.epoch();
-                            while !stop.load(Ordering::Relaxed) {
-                                let now = wtopo.epoch();
-                                if now != last {
-                                    last = now;
-                                    if let Err(e) = install_replication(
-                                        &wtopo.snapshot(),
-                                        &stores,
-                                        &wfield,
-                                        ack,
-                                        &dialer,
-                                    ) {
-                                        log::warn!(
-                                            "replication: re-wire at epoch {now}: {e:#}"
-                                        );
-                                    }
-                                }
-                                std::thread::sleep(nap);
-                            }
-                        })?,
-                );
+                let links: Arc<LinkCache> = Arc::new(Mutex::new(HashMap::new()));
+                install_replication(
+                    &topo.snapshot(), &stores, &wfield, ack, &dialer, &links,
+                )?;
+                topo.set_on_change(move |t| {
+                    if let Err(e) = install_replication(
+                        t, &stores, &wfield, ack, &dialer, &links,
+                    ) {
+                        log::warn!(
+                            "replication: re-wire at epoch {}: {e:#}",
+                            t.epoch
+                        );
+                    }
+                });
             }
         }
 
@@ -411,8 +418,6 @@ impl CloudSide {
             last_result_us,
             obs_stop,
             obs_writer,
-            repl_stop,
-            repl_watcher,
         })
     }
 
@@ -436,9 +441,11 @@ impl CloudSide {
         if let Some(h) = self.obs_writer.take() {
             let _ = h.join();
         }
-        self.repl_stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.repl_watcher.take() {
-            let _ = h.join();
+        // Drop the replication rewire observer: it owns clones of the
+        // endpoint stores and the link cache, which must not outlive
+        // the cloud side.
+        if let Some(topo) = &self.topology {
+            topo.clear_on_change();
         }
         self.metrics.events.flush();
         let last_us = self.last_result_us.load(Ordering::Relaxed);

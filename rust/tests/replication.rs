@@ -848,12 +848,17 @@ fn replica_wal_restart_rejoins_at_the_right_watermark() {
     assert_eq!(segment_steps(&net.store(1), "u/0"), vec![0, 1, 2, 3]);
     assert_eq!(net.store(1).fenced_last_step("u/0"), Some(3));
 
-    // Steady state resumes with byte-identical ids chain-wide.
+    // Steady state resumes — and the *whole* history is byte-identical
+    // chain-wide: the head's DUP re-forward stamped the id it assigned
+    // the healed record, so the recovered replica never invented its
+    // own (a divergent id would also poison every later explicit-ID
+    // forward via the duplicate check).
     let replies = conn.exchange(&[xaddf("u/0", 1, 4, "e")]).unwrap();
     assert!(!replies[0].is_error(), "{:?}", replies[0]);
     let head = record_bytes(&net.store(0), "u/0");
     let tail = record_bytes(&net.store(1), "u/0");
-    assert_eq!(head.last(), tail.last(), "post-heal ids identical again");
+    assert_eq!(head.len(), 5);
+    assert_eq!(head, tail, "post-heal copies byte-identical");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
